@@ -1,0 +1,76 @@
+//! End-to-end coordinator benchmarks against the REAL artifacts: per-call
+//! verification latency across (k, w) shapes (the measured counterpart of
+//! Fig. 1), prefill latency per bucket, KV-commit cost, and the paper's
+//! Table-1 cells in miniature.
+//!
+//!     cargo bench --bench coordinator_bench
+//!
+//! Requires `make artifacts` to have run.
+
+use ngrammys::bench::BenchCtx;
+use ngrammys::config::{default_artifacts_dir, Manifest};
+use ngrammys::kvcache::SharedKvCache;
+use ngrammys::scheduler::StrategyName;
+use ngrammys::util::bench::{black_box, Bencher};
+
+fn main() {
+    let manifest = match Manifest::load(&default_artifacts_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP coordinator_bench: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let ctx = BenchCtx::load(manifest, "base").expect("loading model");
+    let dims = ctx.runtime.artifacts().dims.clone();
+
+    let mut cache = SharedKvCache::new(dims.n_layers, dims.max_len, dims.n_heads, dims.head_dim);
+    cache.len = 100;
+
+    println!("== verification-call latency by (k, w), ctx_len=100, model 'base' ==");
+    let mut b = Bencher::quick();
+    for (k, w) in [(1, 0), (1, 4), (5, 4), (10, 10), (25, 14)] {
+        ctx.runtime.warm_step(k, w).unwrap();
+        let tokens = vec![1u32; k * (w + 1)];
+        b.bench(&format!("spec_step k={k:<2} w={w:<2}"), || {
+            black_box(ctx.runtime.spec_step(k, w, &tokens, &cache).unwrap());
+        });
+    }
+
+    println!("\n== prefill latency by bucket ==");
+    for bucket in [64usize, 128, 256] {
+        ctx.runtime.warm_prefill(bucket).unwrap();
+        let prompt = vec![1u32; bucket - 4];
+        b.bench(&format!("prefill p={bucket}"), || {
+            let mut c = SharedKvCache::new(
+                dims.n_layers, dims.max_len, dims.n_heads, dims.head_dim);
+            black_box(ctx.runtime.prefill(&prompt, &mut c).unwrap());
+        });
+    }
+
+    println!("\n== KV commit (host memcpy) ==");
+    let (k, w1) = (10usize, 11usize);
+    let n = dims.n_layers * k * w1 * dims.n_heads * dims.head_dim;
+    let k_tail = vec![0.5f32; n];
+    let v_tail = vec![0.25f32; n];
+    b.bench("kvcache commit_tail (k=10, w=10, 11 positions)", || {
+        let mut c = cache.clone();
+        c.commit_tail(black_box(&k_tail), &v_tail, k, w1, 3, w1).unwrap();
+        black_box(c.len);
+    });
+
+    println!("\n== end-to-end generation (one Table-1 cell in miniature) ==");
+    let prompts = ctx.prompts("code", 2, 96).unwrap();
+    let mut slow = Bencher::quick();
+    slow.target = std::time::Duration::from_millis(1500);
+    for (label, strat, k, w) in [
+        ("greedy (1,0)", StrategyName::None, 1, 0),
+        ("mixed (10,10)", StrategyName::Mixed, 10, 10),
+    ] {
+        slow.bench(&format!("generate 24 tok, {label}"), || {
+            let c = ngrammys::bench::run_cell(
+                &ctx, strat, &prompts[..1], k, w, 1, 24).unwrap();
+            black_box(c.total_tokens);
+        });
+    }
+}

@@ -1,0 +1,112 @@
+//! Micro-benchmarks for the negligible-cost claim (paper §4): drafting must
+//! be orders of magnitude cheaper than a model call. Uses the in-repo
+//! bench harness (criterion is unavailable offline).
+//!
+//!     cargo bench --bench draft_bench
+
+use std::sync::Arc;
+
+use ngrammys::draft::tables::Table;
+use ngrammys::draft::{
+    ContextNgram, DraftBatch, DraftStrategy, ExtendedBigram, JacobiDraft, MixedStrategy,
+    NgramTables,
+};
+use ngrammys::engine::acceptance;
+use ngrammys::util::bench::{black_box, Bencher};
+use ngrammys::util::prop;
+use ngrammys::util::rng::Rng;
+
+fn synthetic_tables(vocab: usize, topk: usize, depth: usize) -> Arc<NgramTables> {
+    let bigram = Table::from_data(
+        vocab, topk, 1,
+        (0..vocab as u32)
+            .flat_map(|x| (1..=topk as u32).map(move |j| (x + j) % vocab as u32))
+            .collect(),
+    );
+    let unigram = Table::from_data(1, topk, 1, (0..topk as u32).collect());
+    let ext = Table::from_data(
+        vocab, topk, depth,
+        (0..vocab as u32)
+            .flat_map(|x| {
+                (1..=topk as u32).flat_map(move |j| {
+                    (0..depth as u32).map(move |d| (x + j + d) % vocab as u32)
+                })
+            })
+            .collect(),
+    );
+    Arc::new(NgramTables { bigram, unigram, ext_bigram: ext })
+}
+
+fn main() {
+    let mut rng = Rng::new(7);
+    // a realistic decode-time sequence: 400 tokens with heavy repetition
+    let mut seq = prop::vec_u32(&mut rng, 120, 0..512);
+    while seq.len() < 400 {
+        let start = rng.below(seq.len() - 20);
+        let n = rng.range(4, 16);
+        let repeat: Vec<u32> = seq[start..start + n].to_vec();
+        seq.extend(repeat);
+    }
+    let tables = synthetic_tables(512, 32, 16);
+
+    println!("== draft-strategy micro-benches (paper: draft cost must be ~0) ==");
+    println!("   reference: one verification call on this host is ~10-100 ms\n");
+    let mut b = Bencher::default();
+
+    let mut ctx = ContextNgram::new(1);
+    b.bench("context-ngram propose (q=1, len=400, k=10, w=10)", || {
+        let mut batch = DraftBatch::new(10);
+        ctx.propose(black_box(&seq), 10, &mut batch);
+        black_box(batch.k());
+    });
+
+    let mut ctx2 = ContextNgram::new(2);
+    b.bench("context-ngram propose (q=2)", || {
+        let mut batch = DraftBatch::new(10);
+        ctx2.propose(black_box(&seq), 10, &mut batch);
+        black_box(batch.k());
+    });
+
+    let mut big = ExtendedBigram::new(tables.clone());
+    b.bench("ext-bigram propose (k=10, w=10)", || {
+        let mut batch = DraftBatch::new(10);
+        big.propose(black_box(&seq), 10, &mut batch);
+        black_box(batch.k());
+    });
+
+    let mut mixed = MixedStrategy::paper(tables.clone(), 1);
+    b.bench("mixed propose (k=10, w=10)", || {
+        let mut batch = DraftBatch::new(10);
+        mixed.propose(black_box(&seq), 10, &mut batch);
+        black_box(batch.k());
+    });
+
+    let mut mixed25 = MixedStrategy::paper(tables.clone(), 1);
+    b.bench("mixed propose (k=25, w=14)", || {
+        let mut batch = DraftBatch::new(14);
+        mixed25.propose(black_box(&seq), 25, &mut batch);
+        black_box(batch.k());
+    });
+
+    let mut jac = JacobiDraft::new(0);
+    jac.observe(&[1, 2], &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11]);
+    b.bench("jacobi propose (k=1, w=10)", || {
+        let mut batch = DraftBatch::new(10);
+        jac.propose(black_box(&seq), 1, &mut batch);
+        black_box(batch.k());
+    });
+
+    // acceptance judging
+    let mut batch = DraftBatch::new(10);
+    mixed.propose(&seq, 10, &mut batch);
+    while batch.rows.len() < 10 {
+        batch.push(vec![0; 10], ngrammys::draft::StrategyKind::Empty, 0);
+    }
+    let out: Vec<u32> = prop::vec_u32(&mut rng, 10 * 11, 0..512);
+    b.bench("acceptance judge (k=10, w=10)", || {
+        black_box(acceptance::judge(black_box(&batch), black_box(&out), 11));
+    });
+
+    println!("\nAll drafting costs should be in the ns-µs range — negligible");
+    println!("against a model call, which is the paper's core premise (P1-P3).");
+}

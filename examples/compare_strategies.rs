@@ -1,0 +1,53 @@
+//! Compare every draft strategy head-to-head on the three task families:
+//! tokens/call, simulated paper-scale speedup, and CPU throughput.
+//! This is the "which negligible-cost draft should I use?" decision table
+//! a downstream user actually wants.
+//!
+//!     cargo run --release --example compare_strategies -- [n_prompts] [max_new]
+
+use anyhow::Result;
+
+use ngrammys::bench::{run_cell, BenchCtx};
+use ngrammys::config::{default_artifacts_dir, Manifest};
+use ngrammys::scheduler::StrategyName;
+use ngrammys::workload::{task_analog, TASKS};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_prompts: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(8);
+    let max_new: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(48);
+
+    let manifest = Manifest::load(&default_artifacts_dir())?;
+    let ctx = BenchCtx::load(manifest, "base")?;
+
+    let strategies = [
+        (StrategyName::Mixed, 10, 10),
+        (StrategyName::Context, 10, 10),
+        (StrategyName::ExtBigram, 10, 10),
+        (StrategyName::Bigram, 10, 1),
+        (StrategyName::Unigram, 10, 1),
+        (StrategyName::Jacobi, 1, 10),
+        (StrategyName::Session, 10, 10),
+        (StrategyName::None, 1, 0),
+    ];
+
+    println!("== strategy comparison, model 'base' ({} prompts/task, {} tokens) ==\n",
+             n_prompts, max_new);
+    println!("{:<22} {:>24} {:>24} {:>24}",
+             "strategy (k,w)", task_analog("chat"), task_analog("code"),
+             task_analog("math"));
+    println!("{:<22} {:>14} {:>9} {:>14} {:>9} {:>14} {:>9}",
+             "", "tok/call", "sim-spd", "tok/call", "sim-spd", "tok/call", "sim-spd");
+    for (s, k, w) in strategies {
+        let mut line = format!("{:<22}", format!("{} ({k},{w})", s.label()));
+        for task in TASKS {
+            let prompts = ctx.prompts(task, n_prompts, 128)?;
+            let c = run_cell(&ctx, s, &prompts, k, w, 1, max_new)?;
+            line.push_str(&format!(" {:>14.2} {:>9.2}", c.tokens_per_call, c.sim_speedup));
+        }
+        println!("{line}");
+    }
+    println!("\nsim-spd = wall-time speedup at Mistral-7B/A100 scale from the");
+    println!("cost model driven by this run's real acceptance trace; greedy = 1.0");
+    Ok(())
+}

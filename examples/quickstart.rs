@@ -1,0 +1,50 @@
+//! Quickstart: load a trained nano model through the public API and run
+//! speculative generation with the paper's mixed strategy, verifying the
+//! core invariant (speculative output == greedy output) along the way.
+//!
+//!     cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use ngrammys::config::{default_artifacts_dir, EngineConfig, Manifest};
+use ngrammys::draft::{MixedStrategy, NgramTables};
+use ngrammys::engine::{greedy_config, NoDraft, SpecDecoder};
+use ngrammys::runtime::ModelRuntime;
+use ngrammys::tokenizer::BpeTokenizer;
+
+fn main() -> Result<()> {
+    // 1. load artifacts (built once by `make artifacts`)
+    let manifest = Manifest::load(&default_artifacts_dir())?;
+    let art = manifest.model("base")?;
+    let runtime = ModelRuntime::load(art)?;
+    let tokenizer = BpeTokenizer::load(&manifest.tokenizer_path)?;
+    let tables = Arc::new(NgramTables::load(art)?);
+
+    // 2. a prompt in the model's training distribution
+    let prompt_text = "Question: Mia has 24 coins. Mia buys 13 more. ";
+    let prompt = tokenizer.encode(prompt_text);
+    println!("prompt: {prompt_text:?}\n");
+
+    // 3. speculative decoding with the paper's mixed strategy, (k,w)=(10,10)
+    let strategy = Box::new(MixedStrategy::paper(tables, 1));
+    let cfg = EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: 48 };
+    let mut dec = SpecDecoder::new(&runtime, strategy, cfg);
+    let spec = dec.generate(&prompt)?;
+    println!("speculative ({} calls, {:.2} tokens/call):", spec.calls,
+             spec.tokens_per_call());
+    println!("  {}\n", tokenizer.decode(&spec.tokens).replace('\n', "\n  "));
+
+    // 4. greedy baseline — MUST produce the identical stream
+    let mut greedy = SpecDecoder::new(&runtime, Box::new(NoDraft), greedy_config(48));
+    let base = greedy.generate(&prompt)?;
+    assert_eq!(base.tokens, spec.tokens, "speculation changed the output!");
+    println!(
+        "greedy needed {} calls for the same {} tokens -> {:.1}% fewer model calls",
+        base.calls,
+        base.tokens.len(),
+        100.0 * (1.0 - spec.calls as f64 / base.calls as f64)
+    );
+    Ok(())
+}

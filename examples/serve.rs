@@ -1,0 +1,107 @@
+//! END-TO-END serving driver (the repo's headline validation run — see
+//! EXPERIMENTS.md §E2E): starts the full serving stack (scheduler + HTTP
+//! server) on a real trained nano model, replays a Poisson request trace
+//! from the eval corpora through actual HTTP round-trips, and reports
+//! latency percentiles, throughput and the aggregate tokens/call.
+//!
+//!     cargo run --release --example serve -- [n_requests] [rate_per_s]
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use ngrammys::config::{default_artifacts_dir, EngineConfig, Manifest, ServeConfig};
+use ngrammys::scheduler::Scheduler;
+use ngrammys::server::{client, Server};
+use ngrammys::tokenizer::BpeTokenizer;
+use ngrammys::util::json::Json;
+use ngrammys::util::stats;
+use ngrammys::workload::{self, RequestTrace};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(24);
+    let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4.0);
+    let max_tokens = 48usize;
+
+    // --- bring up the full stack on an ephemeral port
+    let manifest = Manifest::load(&default_artifacts_dir())?;
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 128,
+        default_engine: EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: max_tokens },
+    };
+    let scheduler = Arc::new(Scheduler::start(&manifest, "base", &cfg)?);
+    let tokenizer = Arc::new(BpeTokenizer::load(&manifest.tokenizer_path)?);
+    let metrics = scheduler.metrics.clone();
+    let (addr, _h) = Server { scheduler, tokenizer: tokenizer.clone(), cfg }.spawn()?;
+    let addr = addr.to_string();
+    eprintln!("serving on {addr}; warming up...");
+
+    // --- prompts from all three eval tasks
+    let mut prompts = Vec::new();
+    for task in workload::TASKS {
+        let ex = workload::load_examples(&manifest, task, 8)?;
+        for p in workload::build_prompts(&tokenizer, &ex, 0.4, 96) {
+            prompts.push(p);
+        }
+    }
+    // one warmup request compiles the executables before timing starts
+    let (code, _) = client::post(
+        &addr, "/generate",
+        &format!("{{\"prompt\": {:?}, \"max_tokens\": 8}}", prompts[0].text),
+    )?;
+    assert_eq!(code, 200);
+
+    // --- replay a Poisson trace over real HTTP
+    let trace = RequestTrace::poisson(42, n_requests, rate, prompts.len());
+    eprintln!("replaying {n_requests} requests at ~{rate}/s (Poisson)...");
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for (at, pidx) in trace.arrivals {
+        let addr = addr.clone();
+        let body = format!(
+            "{{\"prompt\": {:?}, \"max_tokens\": {max_tokens}}}",
+            prompts[pidx].text
+        );
+        handles.push(std::thread::spawn(move || -> Result<(f64, f64, f64)> {
+            let now = Instant::now() - t0;
+            if at > now.as_secs_f64() {
+                std::thread::sleep(Duration::from_secs_f64(at - now.as_secs_f64()));
+            }
+            let sent = Instant::now();
+            let (code, body) = client::post(&addr, "/generate", &body)?;
+            anyhow::ensure!(code == 200, "status {code}: {body}");
+            let j = Json::parse(&body).map_err(|e| anyhow::anyhow!("{e}"))?;
+            Ok((
+                sent.elapsed().as_secs_f64() * 1e3,
+                j.req("tokens")?.as_f64().unwrap_or(0.0),
+                j.req("tokens_per_call")?.as_f64().unwrap_or(0.0),
+            ))
+        }));
+    }
+    let mut lat = Vec::new();
+    let mut tokens = 0.0;
+    let mut tpcs = Vec::new();
+    for h in handles {
+        let (l, t, tpc) = h.join().unwrap()?;
+        lat.push(l);
+        tokens += t;
+        tpcs.push(tpc);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n== end-to-end serving results (model 'base', mixed (10,10)) ==");
+    println!("requests:        {n_requests} ({rate}/s Poisson offered)");
+    println!("wall time:       {wall:.1} s");
+    println!("throughput:      {:.2} req/s, {:.1} tok/s", n_requests as f64 / wall,
+             tokens / wall);
+    println!("latency ms:      mean {:.0}  p50 {:.0}  p90 {:.0}  p99 {:.0}",
+             stats::mean(&lat), stats::percentile(&lat, 50.0),
+             stats::percentile(&lat, 90.0), stats::percentile(&lat, 99.0));
+    println!("tokens/call:     {:.2} (mean over requests)", stats::mean(&tpcs));
+    println!("\nserver metrics:\n{}", metrics.render());
+    Ok(())
+}

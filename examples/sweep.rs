@@ -1,0 +1,45 @@
+//! (k, w) sweep for one model/task: prints the tokens/call and simulated
+//! speedup surface — a CLI-sized slice of the paper's Figure 3 — and flags
+//! the optimal (k*, w*) cell.
+//!
+//!     cargo run --release --example sweep -- [model] [task]
+
+use anyhow::Result;
+
+use ngrammys::bench::{render_grid, run_cell, BenchCtx};
+use ngrammys::config::{default_artifacts_dir, Manifest};
+use ngrammys::scheduler::StrategyName;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let model = args.first().map(|s| s.as_str()).unwrap_or("base");
+    let task = args.get(1).map(|s| s.as_str()).unwrap_or("code");
+
+    let manifest = Manifest::load(&default_artifacts_dir())?;
+    let ctx = BenchCtx::load(manifest, model)?;
+    let prompts = ctx.prompts(task, 8, 128)?;
+
+    let ks = [1usize, 5, 10, 20, 25];
+    let ws = [2usize, 6, 10, 14];
+    let mut cells = Vec::new();
+    let mut best = ((0, 0), f64::MIN);
+    for &k in &ks {
+        for &w in &ws {
+            let c = run_cell(&ctx, StrategyName::Mixed, &prompts, k, w, 1, 48)?;
+            if c.sim_speedup > best.1 {
+                best = ((k, w), c.sim_speedup);
+            }
+            cells.push(((k, w), c));
+        }
+    }
+    let get = |k: usize, w: usize| -> &ngrammys::bench::CellStats {
+        &cells.iter().find(|((ck, cw), _)| *ck == k && *cw == w).unwrap().1
+    };
+    println!("{}", render_grid(
+        &format!("tokens/call — model '{model}', task '{task}'"),
+        &ks, &ws, |k, w| get(k, w).tokens_per_call));
+    println!("{}", render_grid(
+        "simulated speedup (A100 scale)", &ks, &ws, |k, w| get(k, w).sim_speedup));
+    println!("optimal (k*, w*) = {:?} with {:.2}x simulated speedup", best.0, best.1);
+    Ok(())
+}

@@ -1,0 +1,306 @@
+"""AOT build orchestrator: the ONLY python that runs, and it runs once.
+
+    python -m compile.aot --out-dir ../artifacts
+
+Pipeline (everything cached by a build-stamp; re-runs are no-ops):
+  1. generate the synthetic corpora  (data.py)           -> data/*.txt
+  2. train the byte-BPE tokenizer    (tokenizer.py)      -> tokenizer.json
+  3. train the three nano models     (train.py)          -> models/*/train_log.json
+  4. extract N-gram tables           (ngram_tables.py)   -> models/*/{bigram,unigram,ext_bigram}.bin
+  5. dump flat f32 weights                               -> models/*/params.bin
+  6. lower prefill + the (k, w) verify-step grid to HLO TEXT (not
+     .serialize(): the rust side's xla_extension 0.5.1 rejects jax>=0.5
+     64-bit-id protos; the text parser reassigns ids)    -> models/*/*.hlo.txt
+  7. write manifest.json — the rust runtime's single entry point.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import model as M
+from . import ngram_tables as NG
+from . import train as T
+from .configs import (BIGRAM_TOPK, EXT_BIGRAM_W, MODELS, PREFILL_BUCKETS,
+                      UNIGRAM_TOPK, manifest_model_entry, step_shapes)
+from .tokenizer import BpeTokenizer, train_bpe
+
+VOCAB_SIZE = 512
+
+
+def to_hlo_text(lowered) -> str:
+    """HLO text via stablehlo -> XlaComputation (see /opt/xla-example)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _hash_files(names) -> str:
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for name in names:
+        with open(os.path.join(root, name), "rb") as fh:
+            h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+# Two-stage caching: training artifacts (params, tables, corpora) and
+# lowered HLO have independent stamps, so editing only the lowering path
+# (e.g. a perf-pass change in aot.py) re-lowers WITHOUT retraining.
+TRAIN_SOURCES = ["configs.py", "data.py", "tokenizer.py", "train.py",
+                 "model.py", "kernels/attention.py", "kernels/ref.py",
+                 "ngram_tables.py"]
+LOWER_SOURCES = ["configs.py", "model.py", "kernels/attention.py", "aot.py"]
+
+
+def train_stamp(steps: int) -> str:
+    return _hash_files(TRAIN_SOURCES) + f"-steps{steps}"
+
+
+def lower_stamp() -> str:
+    return _hash_files(LOWER_SOURCES) + "-attn" + os.environ.get("NGRAM_AOT_ATTN", "auto")
+
+
+def build_stamp() -> str:
+    """Hash of every compile-path source file — the artifact cache key."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            # fixtures.py only emits test fixtures; it never affects the
+            # trained artifacts, so it must not invalidate the cache.
+            if f.endswith(".py") and f != "fixtures.py":
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()[:16]
+
+
+def load_params_bin(path, cfg):
+    """Inverse of write_params_bin: flat f32 LE -> param list."""
+    data = np.fromfile(path, np.float32)
+    params, off = [], 0
+    for _, shape in M.param_spec(cfg):
+        n = int(np.prod(shape))
+        params.append(jnp.asarray(data[off:off + n].reshape(shape)))
+        off += n
+    assert off == data.size, (off, data.size)
+    return params
+
+
+# Shape-dependent attention dispatch (perf pass, EXPERIMENTS.md §Perf-L2):
+# the interpret-mode Pallas kernel lowers to a tile loop whose fixed
+# overhead dominates small blocks on CPU (k·w1 rows <= ~150), while its
+# VMEM-tiled schedule wins for large blocks where dense jnp materializes
+# (k·w1, max_len) score tensors. Measured crossover on this host: (10,10)
+# 8.8 -> 8.1 ms in favor of jnp, (25,14) 20.0 -> 27.0 ms in favor of
+# Pallas. Override with NGRAM_AOT_ATTN={pallas,jnp,auto}.
+PALLAS_MIN_ROWS = 200
+
+
+def step_uses_pallas(k, w):
+    mode = os.environ.get("NGRAM_AOT_ATTN", "auto")
+    if mode == "pallas":
+        return True
+    if mode == "jnp":
+        return False
+    return k * (w + 1) >= PALLAS_MIN_ROWS
+
+
+def lower_step(cfg, params, k, w):
+    w1 = w + 1
+    shapes = (
+        jax.ShapeDtypeStruct((k, w1), jnp.int32),
+        jax.ShapeDtypeStruct((cfg.n_layers, cfg.max_len, cfg.n_heads,
+                              cfg.head_dim), jnp.float32),
+        jax.ShapeDtypeStruct((cfg.n_layers, cfg.max_len, cfg.n_heads,
+                              cfg.head_dim), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    pshapes = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+    fn = functools.partial(M.forward_spec_step, cfg,
+                           use_pallas=step_uses_pallas(k, w))
+    return jax.jit(fn).lower(pshapes, *shapes)
+
+
+def lower_commit(cfg, k, w):
+    """Device-side KV commit for one (k, w) shape (perf path)."""
+    w1 = w + 1
+    cache = jax.ShapeDtypeStruct(
+        (cfg.n_layers, cfg.max_len, cfg.n_heads, cfg.head_dim), jnp.float32)
+    tail = jax.ShapeDtypeStruct(
+        (cfg.n_layers, k, w1, cfg.n_heads, cfg.head_dim), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = functools.partial(M.kv_commit, cfg)
+    return jax.jit(fn).lower(cache, cache, tail, tail, scalar, scalar)
+
+
+def lower_prefill(cfg, params, p_bucket):
+    shapes = (
+        jax.ShapeDtypeStruct((1, p_bucket), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    pshapes = [jax.ShapeDtypeStruct(p.shape, p.dtype) for p in params]
+    fn = functools.partial(M.forward_prefill, cfg)
+    return jax.jit(fn).lower(pshapes, *shapes)
+
+
+def write_params_bin(path, cfg, params):
+    """Flat little-endian f32 blob in param_spec order."""
+    with open(path, "wb") as fh:
+        for arr in params:
+            fh.write(np.ascontiguousarray(np.asarray(arr), np.float32).tobytes())
+
+
+def build_model(name, cfg, token_ids, out_dir, steps, force):
+    mdir = os.path.join(out_dir, "models", name)
+    os.makedirs(mdir, exist_ok=True)
+    t0 = time.time()
+
+    # --- stage 1: train + tables (skipped when train sources unchanged)
+    tstamp_path = os.path.join(mdir, "train_stamp.txt")
+    tstamp = train_stamp(steps)
+    params_path = os.path.join(mdir, "params.bin")
+    log_path = os.path.join(mdir, "train_log.json")
+    if (not force and os.path.exists(params_path) and os.path.exists(tstamp_path)
+            and open(tstamp_path).read() == tstamp):
+        print(f"[aot] {name}: training cached (stamp match)", flush=True)
+        params = load_params_bin(params_path, cfg)
+        log = json.load(open(log_path))
+    else:
+        print(f"[aot] training {name} ({cfg.n_params():,} params, "
+              f"{steps} steps)...", flush=True)
+        params, log = T.train(cfg, token_ids, steps=steps, seed=42,
+                              log_path=log_path)
+        print(f"[aot] {name}: n-gram tables", flush=True)
+        bigram = NG.bigram_topk(cfg, params, BIGRAM_TOPK)
+        NG.write_table(os.path.join(mdir, "bigram.bin"), bigram)
+        NG.write_table(os.path.join(mdir, "unigram.bin"),
+                       NG.unigram_topk(cfg, params, UNIGRAM_TOPK)[None, :])
+        NG.write_table(os.path.join(mdir, "ext_bigram.bin"),
+                       NG.extended_bigram(bigram, BIGRAM_TOPK, EXT_BIGRAM_W))
+        write_params_bin(params_path, cfg, params)
+        with open(tstamp_path, "w") as fh:
+            fh.write(tstamp)
+
+    # --- stage 2: lowering (skipped when lowering sources unchanged)
+    lstamp_path = os.path.join(mdir, "lower_stamp.txt")
+    lstamp = lower_stamp()
+    step_files = {f"{k},{w}": f"step_k{k}_w{w}.hlo.txt" for (k, w) in step_shapes()}
+    prefill_files = {str(p): f"prefill_p{p}.hlo.txt" for p in PREFILL_BUCKETS}
+    commit_files = {f"{k},{w}": f"commit_k{k}_w{w}.hlo.txt" for (k, w) in step_shapes()}
+    all_files = list(step_files.values()) + list(prefill_files.values()) \
+        + list(commit_files.values())
+    cached = (not force and os.path.exists(lstamp_path)
+              and open(lstamp_path).read() == lstamp
+              and all(os.path.exists(os.path.join(mdir, f)) for f in all_files))
+    if cached:
+        print(f"[aot] {name}: lowering cached (stamp match)", flush=True)
+    else:
+        for (k, w) in step_shapes():
+            with open(os.path.join(mdir, step_files[f"{k},{w}"]), "w") as fh:
+                fh.write(to_hlo_text(lower_step(cfg, params, k, w)))
+            with open(os.path.join(mdir, commit_files[f"{k},{w}"]), "w") as fh:
+                fh.write(to_hlo_text(lower_commit(cfg, k, w)))
+        print(f"[aot] {name}: {len(step_files)} step + commit HLOs lowered "
+              f"({time.time() - t0:.0f}s)", flush=True)
+        for p in PREFILL_BUCKETS:
+            with open(os.path.join(mdir, prefill_files[str(p)]), "w") as fh:
+                fh.write(to_hlo_text(lower_prefill(cfg, params, p)))
+        with open(lstamp_path, "w") as fh:
+            fh.write(lstamp)
+
+    entry = manifest_model_entry(cfg)
+    entry.update({
+        "dir": f"models/{name}",
+        "params_bin": "params.bin",
+        "param_spec": [{"name": n, "shape": list(s)}
+                       for n, s in M.param_spec(cfg)],
+        "steps": step_files,
+        "prefills": prefill_files,
+        "commits": commit_files,
+        "tables": {"bigram": "bigram.bin", "unigram": "unigram.bin",
+                   "ext_bigram": "ext_bigram.bin"},
+        "train_final_loss": log["final_loss"],
+    })
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "..", "artifacts"))
+    ap.add_argument("--steps", type=int,
+                    default=int(os.environ.get("NGRAM_TRAIN_STEPS", "240")))
+    ap.add_argument("--models", default="small,base,large")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    stamp = build_stamp() + f"-steps{args.steps}-{args.models}"
+    stamp_path = os.path.join(out_dir, "build_stamp.txt")
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    if (not args.force and os.path.exists(stamp_path)
+            and os.path.exists(manifest_path)
+            and open(stamp_path).read() == stamp):
+        print("[aot] artifacts up to date (stamp match); nothing to do")
+        return
+
+    t0 = time.time()
+    print("[aot] generating corpora", flush=True)
+    data_dir = os.path.join(out_dir, "data")
+    paths = D.build_corpora(data_dir, seed=7)
+
+    print("[aot] training tokenizer", flush=True)
+    train_text = "".join(open(p[0]).read() for p in paths.values())
+    tok = train_bpe(train_text, VOCAB_SIZE)
+    with open(os.path.join(out_dir, "tokenizer.json"), "w") as fh:
+        fh.write(tok.to_json())
+    print(f"[aot] tokenizer vocab={tok.vocab_size}", flush=True)
+
+    token_ids = np.asarray(tok.encode(train_text), np.int32)
+    print(f"[aot] corpus: {len(train_text):,} chars -> "
+          f"{len(token_ids):,} tokens", flush=True)
+
+    manifest = {
+        "version": 1,
+        "stamp": stamp,
+        "vocab_size": tok.vocab_size,
+        "tokenizer": "tokenizer.json",
+        "data": {t: {"train": os.path.relpath(p[0], out_dir),
+                     "eval": os.path.relpath(p[1], out_dir)}
+                 for t, p in paths.items()},
+        "step_grid": [[k, w] for (k, w) in step_shapes()],
+        "prefill_buckets": PREFILL_BUCKETS,
+        "table_topk": {"bigram": BIGRAM_TOPK, "unigram": UNIGRAM_TOPK,
+                       "ext_bigram_w": EXT_BIGRAM_W},
+        "models": {},
+    }
+    for name in args.models.split(","):
+        cfg = MODELS[name]
+        # model vocab may exceed the tokenizer's (BPE can stop early);
+        # unused logit rows are simply never produced by greedy argmax.
+        assert cfg.vocab_size >= tok.vocab_size, \
+            f"config vocab {cfg.vocab_size} < tokenizer {tok.vocab_size}"
+        manifest["models"][name] = build_model(
+            name, cfg, token_ids, out_dir, args.steps, args.force)
+
+    with open(manifest_path, "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    with open(stamp_path, "w") as fh:
+        fh.write(stamp)
+    print(f"[aot] DONE in {time.time() - t0:.0f}s -> {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Model + artifact-grid configuration shared by the whole compile path.
+
+Three "nano" decoder-only transformers stand in for the paper's
+Phi-3 (3B) / Mistral-7B / Vicuna-13B — see DESIGN.md §Substitutions.
+All sizes are chosen so the full artifact build (train + lower) completes
+on a single CPU core in a few minutes.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int = 512
+    d_model: int = 128
+    n_layers: int = 3
+    n_heads: int = 4
+    head_dim: int = 32
+    mlp_ratio: float = 8.0 / 3.0  # SwiGLU hidden = ratio * d_model (rounded to 8)
+    max_len: int = 512
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    # The paper analog this config stands in for (documentation only).
+    analog: str = ""
+
+    @property
+    def mlp_hidden(self) -> int:
+        h = int(self.d_model * self.mlp_ratio)
+        return ((h + 7) // 8) * 8
+
+    def n_params(self) -> int:
+        d, v, hd, nh = self.d_model, self.vocab_size, self.head_dim, self.n_heads
+        per_layer = (
+            3 * d * (nh * hd)  # wq, wk, wv
+            + (nh * hd) * d    # wo
+            + 3 * d * self.mlp_hidden  # w_gate, w_up (d->h) and w_down (h->d)
+            + 2 * d            # two rmsnorm scales
+        )
+        return v * d + self.n_layers * per_layer + d + d * v  # emb + layers + final norm + lm head
+
+
+# Paper-analog model zoo. `small`≈Phi-3 row, `base`≈Mistral-7B row,
+# `large`≈Vicuna-13B row of Table 1.
+MODELS = {
+    "small": ModelConfig(name="small", d_model=96, n_layers=2, n_heads=3,
+                         head_dim=32, analog="Phi-3-mini (3B)"),
+    "base": ModelConfig(name="base", d_model=128, n_layers=3, n_heads=4,
+                        head_dim=32, analog="Mistral-7B-Instruct"),
+    "large": ModelConfig(name="large", d_model=192, n_layers=4, n_heads=6,
+                         head_dim=32, analog="Vicuna-13B"),
+}
+
+# ---------------------------------------------------------------------------
+# AOT shape grid. Each (k, w) pair gets its own HLO executable; rust picks
+# the right one from the manifest. Union of everything the benches need:
+#   - (1, 0): plain greedy decoding baseline
+#   - Fig. 2: k sweep at w in {1, 2, 3}
+#   - Table 1 / Figs 3, 5-9 grid: k in {1,5,10,20,25} x w in {2,4,...,14}
+#   - serving default (10, 10)
+FIG2_KS = [1, 2, 5, 10, 15, 20, 25]
+FIG2_WS = [1, 2, 3]
+GRID_KS = [1, 5, 10, 20, 25]
+GRID_WS = [2, 4, 6, 8, 10, 12, 14]
+PREFILL_BUCKETS = [64, 128, 256]
+
+
+def step_shapes():
+    """All (k, w) verify-step shapes to lower, deduplicated and sorted."""
+    shapes = {(1, 0)}
+    for k in FIG2_KS:
+        for w in FIG2_WS:
+            shapes.add((k, w))
+    for k in GRID_KS:
+        for w in GRID_WS:
+            shapes.add((k, w))
+    return sorted(shapes)
+
+
+# N-gram table sizes (see ngram_tables.py).
+BIGRAM_TOPK = 32
+UNIGRAM_TOPK = 64
+EXT_BIGRAM_W = 16  # greedy bigram-chain depth stored per (token, rank)
+
+
+def manifest_model_entry(cfg: ModelConfig) -> dict:
+    d = asdict(cfg)
+    d["mlp_hidden"] = cfg.mlp_hidden
+    d["n_params"] = cfg.n_params()
+    return d

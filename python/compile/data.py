@@ -1,0 +1,172 @@
+"""Synthetic task corpora standing in for the paper's benchmarks.
+
+Three generators with the *statistical* roles of the paper's datasets
+(DESIGN.md §Substitutions):
+
+  chat  ~ MT-Bench   : multi-turn QA, many unique tokens (generated entity
+                       names), lower n-gram repetition.
+  code  ~ HumanEval  : python-like functions, heavy idiom repetition, long
+                       literally-repeated spans -> long context-n-gram drafts.
+  math  ~ GSM8K      : templated word problems whose solutions restate
+                       numbers from the problem; arithmetic spans of varied
+                       width -> wide acceptance-length distribution.
+
+The generated files under ``artifacts/data/`` are the ground truth consumed
+by BOTH the python training loop and the rust bench harness.
+"""
+
+import random
+
+
+# --------------------------------------------------------------------------
+# small deterministic vocabulary pools
+SUBJECTS = ["Tom", "Mia", "Sam", "Ana", "Leo", "Zoe", "Max", "Ivy", "Ben", "Eva"]
+OBJECTS = ["apples", "books", "coins", "cards", "pens", "stamps", "shells", "marbles"]
+VERBS = ["buys", "finds", "sells", "loses", "gives away", "wins"]
+TOPICS = ["rivers", "planets", "metals", "birds", "engines", "glaciers",
+          "violins", "mushrooms", "comets", "harbors", "bridges", "orchards"]
+ADJS = ["large", "small", "ancient", "modern", "bright", "quiet", "rapid", "dense"]
+FUNC_NAMES = ["scale", "shift", "clamp", "mix", "fold", "rank", "merge_vals", "norm"]
+VAR_NAMES = ["x", "y", "z", "a", "b", "n", "m", "v"]
+
+
+def _entity(rng: random.Random) -> str:
+    # synthetic proper nouns -> many unique tokens, like MT-Bench
+    syll = ["ka", "lo", "mi", "ra", "ven", "tor", "bel", "nis", "qua", "zem",
+            "fi", "dor", "ul", "pra", "sky"]
+    return "".join(rng.choice(syll) for _ in range(rng.randint(2, 3))).capitalize()
+
+
+def gen_chat(rng: random.Random, n_examples: int) -> list:
+    """Multi-turn QA with unique entities. Answer restates the question."""
+    examples = []
+    for _ in range(n_examples):
+        turns = []
+        for _t in range(rng.randint(1, 3)):
+            kind = rng.randrange(4)
+            if kind == 0:
+                place, city = _entity(rng), _entity(rng)
+                q = f"What is the capital of {place}?"
+                a = f"The capital of {place} is {city}."
+            elif kind == 1:
+                topic = rng.choice(TOPICS)
+                adj = rng.choice(ADJS)
+                q = f"Tell me about {adj} {topic}."
+                a = (f"Most {adj} {topic} are studied for their structure. "
+                     f"A notable property of {adj} {topics_sg(topic)} systems is stability.")
+            elif kind == 2:
+                name = _entity(rng)
+                topic = rng.choice(TOPICS)
+                q = f"Who first described the {topic} of {name}?"
+                a = f"The {topic} of {name} were first described by {_entity(rng)} of {_entity(rng)}."
+            else:
+                a1, a2 = rng.choice(ADJS), rng.choice(ADJS)
+                t1 = rng.choice(TOPICS)
+                q = f"Compare {a1} and {a2} {t1}."
+                a = (f"Compared to {a2} {t1}, {a1} {t1} tend to change more slowly, "
+                     f"although both kinds of {t1} share a common origin.")
+            turns.append(f"User: {q}\nAssistant: {a}")
+        examples.append("\n".join(turns) + "\n\n")
+    return examples
+
+
+def topics_sg(t: str) -> str:
+    return t[:-1] if t.endswith("s") else t
+
+
+def gen_code(rng: random.Random, n_examples: int) -> list:
+    """Python-like functions built from a small set of idioms."""
+    examples = []
+    for _ in range(n_examples):
+        f = rng.choice(FUNC_NAMES)
+        v1, v2 = rng.sample(VAR_NAMES, 2)
+        kind = rng.randrange(5)
+        if kind == 0:
+            c = rng.randint(2, 9)
+            body = (f"def {f}({v1}, {v2}):\n"
+                    f"    result = []\n"
+                    f"    for i in range(len({v1})):\n"
+                    f"        result.append({v1}[i] * {c} + {v2}[i])\n"
+                    f"    return result\n")
+        elif kind == 1:
+            body = (f"def {f}({v1}):\n"
+                    f"    if {v1} is None:\n"
+                    f"        return None\n"
+                    f"    total = 0\n"
+                    f"    for item in {v1}:\n"
+                    f"        total = total + item\n"
+                    f"    return total\n")
+        elif kind == 2:
+            c = rng.randint(2, 9)
+            body = (f"def {f}({v1}, {v2}={c}):\n"
+                    f"    out = {{}}\n"
+                    f"    for key in {v1}:\n"
+                    f"        out[key] = {v1}[key] + {v2}\n"
+                    f"    return out\n")
+        elif kind == 3:
+            body = (f"def {f}({v1}):\n"
+                    f"    low = 0\n"
+                    f"    high = len({v1}) - 1\n"
+                    f"    while low < high:\n"
+                    f"        mid = (low + high) // 2\n"
+                    f"        if {v1}[mid] < 0:\n"
+                    f"            low = mid + 1\n"
+                    f"        else:\n"
+                    f"            high = mid\n"
+                    f"    return low\n")
+        else:
+            c = rng.randint(2, 9)
+            body = (f"def {f}({v1}, {v2}):\n"
+                    f"    assert len({v1}) == len({v2})\n"
+                    f"    return [pair[0] - pair[1] for pair in zip({v1}, {v2})]\n"
+                    f"\n"
+                    f"def {f}_{c}({v1}):\n"
+                    f"    return {f}({v1}, {v1}[:{c}])\n")
+        examples.append(body + "\n")
+    return examples
+
+
+def gen_math(rng: random.Random, n_examples: int) -> list:
+    """GSM8K-style word problems; solutions restate problem numbers."""
+    examples = []
+    for _ in range(n_examples):
+        s = rng.choice(SUBJECTS)
+        o = rng.choice(OBJECTS)
+        kind = rng.randrange(3)
+        if kind == 0:
+            a, b = rng.randint(3, 80), rng.randint(2, 60)
+            q = f"{s} has {a} {o}. {s} {rng.choice(VERBS[:2])} {b} more. How many {o} does {s} have now?"
+            sol = f"{s} starts with {a} {o}. After getting {b} more, {s} has {a} + {b} = {a + b} {o}. The answer is {a + b}."
+        elif kind == 1:
+            a, b = rng.randint(20, 99), rng.randint(2, 19)
+            q = f"{s} has {a} {o} and gives {b} to a friend. How many {o} are left?"
+            sol = f"{s} gives away {b} of the {a} {o}, leaving {a} - {b} = {a - b} {o}. The answer is {a - b}."
+        else:
+            a, b = rng.randint(2, 12), rng.randint(3, 12)
+            q = f"Each box holds {a} {o}. {s} has {b} boxes. How many {o} in total?"
+            sol = f"There are {b} boxes with {a} {o} each, so {b} * {a} = {a * b} {o}. The answer is {a * b}."
+        examples.append(f"Question: {q}\nAnswer: {sol}\n\n")
+    return examples
+
+
+GENERATORS = {"chat": gen_chat, "code": gen_code, "math": gen_math}
+
+
+def build_corpora(out_dir: str, seed: int = 7, n_train: int = 1200, n_eval: int = 64):
+    """Write {task}_{train,eval}.txt under out_dir. Returns dict of paths."""
+    import os
+
+    os.makedirs(out_dir, exist_ok=True)
+    paths = {}
+    for task, gen in GENERATORS.items():
+        rng = random.Random(seed * 1000 + hash(task) % 1000)
+        train = gen(rng, n_train)
+        evale = gen(rng, n_eval)
+        ptrain = os.path.join(out_dir, f"{task}_train.txt")
+        peval = os.path.join(out_dir, f"{task}_eval.txt")
+        with open(ptrain, "w") as fh:
+            fh.write("".join(train))
+        with open(peval, "w") as fh:
+            fh.write("".join(evale))
+        paths[task] = (ptrain, peval)
+    return paths

@@ -1,0 +1,43 @@
+"""Emit cross-language tokenizer fixtures: python encodings of a diverse
+string set, consumed by rust/tests/tokenizer_parity.rs. Cheap — runs on
+every `make artifacts` without invalidating the training stamp."""
+
+import json
+import os
+import sys
+
+from .tokenizer import BpeTokenizer
+
+CASES = [
+    "hello world",
+    "Question: Tom has 12 apples. He buys 7 more.",
+    "def scale(x, y):\n    return x + y\n",
+    "User: What is the capital of Kalorane?\nAssistant: The capital is Venmi.",
+    "   leading and trailing   ",
+    "tabs\tnewlines\n\nmixed  runs",
+    "numbers 12345 and 67 * 89 = ?",
+    "unicode: héllo ☃ 你好",
+    "",
+    " ",
+    "a",
+    "The answer is 19.",
+]
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "..", "artifacts")
+    tok_path = os.path.join(out_dir, "tokenizer.json")
+    tok = BpeTokenizer.from_json(open(tok_path).read())
+    cases = []
+    for text in CASES:
+        ids = tok.encode(text)
+        assert tok.decode(ids) == text, f"python round-trip failed: {text!r}"
+        cases.append({"text": text, "ids": ids})
+    with open(os.path.join(out_dir, "tokenizer_fixtures.json"), "w") as fh:
+        json.dump({"cases": cases}, fh)
+    print(f"[fixtures] wrote {len(cases)} tokenizer fixtures")
+
+
+if __name__ == "__main__":
+    main()

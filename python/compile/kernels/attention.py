@@ -1,0 +1,160 @@
+"""L1 Pallas kernels: batched speculative-verification attention.
+
+The paper's verification hot-spot is one forward call on a (k, w+1) block
+whose rows all share the same context. The naive implementation (paper §4.1)
+`repeat`s the context KV k times; here the context partition is computed
+*once* against a single shared cache — the "bifurcated attention" the paper
+cites as the fix for its batching overhead (Athiwaratkun et al. 2024) —
+and only the tiny (w+1)-wide speculative tail is per-row.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the context KV streams
+HBM→VMEM in `BLOCK_L`-sized tiles via BlockSpec; all k·(w+1) query rows live
+in VMEM and are reused against every tile (flash-style online softmax, MXU
+matmul shapes (R, D) x (D, BLOCK_L)). Always `interpret=True`: the CPU PJRT
+client cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Context tile length. 128 keeps the (R, BLOCK_L) score tile MXU-shaped on
+# a real TPU and the VMEM footprint small; see EXPERIMENTS.md §Perf-L1.
+BLOCK_L = 128
+
+NEG_INF = -1e30
+
+
+def _ctx_attn_kernel(q_ref, k_ref, v_ref, len_ref,
+                     out_ref, m_ref, l_ref,
+                     acc_ref, mm_ref, ll_ref, *, block_l, scale):
+    """Grid (H, L // block_l): one head x one context tile per step.
+
+    q_ref:  (R, D)        queries of this head (all k·(w+1) rows)
+    k_ref:  (block_l, D)  context key tile of this head
+    v_ref:  (block_l, D)  context value tile
+    len_ref: (1, 1)       valid context length (SMEM scalar)
+    out/m/l: unnormalized flash partials of the context partition
+    acc/mm/ll: VMEM scratch accumulators carried across the tile loop
+    """
+    t = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(t == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        mm_ref[...] = jnp.full_like(mm_ref, NEG_INF)
+        ll_ref[...] = jnp.zeros_like(ll_ref)
+
+    ctx_len = len_ref[0, 0]
+    q = q_ref[...].astype(jnp.float32)          # (R, D)
+    k = k_ref[...].astype(jnp.float32)          # (block_l, D)
+    v = v_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (R, block_l)
+    pos = t * block_l + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < ctx_len, s, NEG_INF)
+
+    m_prev = mm_ref[...]                        # (R, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # clamp: fully-masked-so-far rows keep exp() finite
+    p = jnp.exp(s - jnp.maximum(m_new, NEG_INF / 2))
+    p = jnp.where(pos < ctx_len, p, 0.0)
+    alpha = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+    ll_ref[...] = ll_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    mm_ref[...] = m_new
+
+    @pl.when(t == nt - 1)
+    def _fin():
+        out_ref[...] = acc_ref[...]
+        m_fin = mm_ref[...]
+        m_ref[...] = jnp.where(m_fin <= NEG_INF / 2, 0.0, m_fin)
+        l_ref[...] = ll_ref[...]
+
+
+def ctx_attention(q, k_ctx, v_ctx, ctx_len, *, block_l=BLOCK_L, interpret=True):
+    """Flash attention of (R, H, D) queries against the shared (L, H, D) cache.
+
+    Returns unnormalized partials (out (R, H, D) f32, m (R, H) f32,
+    l (R, H) f32) matching `ref.ctx_attention_ref`.
+    """
+    R, H, D = q.shape
+    L = k_ctx.shape[0]
+    assert L % block_l == 0, (L, block_l)
+    scale = 1.0 / (D ** 0.5)
+    # head-major layouts so BlockSpec tiles are contiguous per head
+    qh = jnp.transpose(q, (1, 0, 2))            # (H, R, D)
+    kh = jnp.transpose(k_ctx, (1, 0, 2))        # (H, L, D)
+    vh = jnp.transpose(v_ctx, (1, 0, 2))
+    len_arr = jnp.reshape(ctx_len.astype(jnp.int32), (1, 1))
+
+    grid = (H, L // block_l)
+    out, m, l = pl.pallas_call(
+        functools.partial(_ctx_attn_kernel, block_l=block_l, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, R, D), lambda h, t: (h, 0, 0)),
+            pl.BlockSpec((None, block_l, D), lambda h, t: (h, t, 0)),
+            pl.BlockSpec((None, block_l, D), lambda h, t: (h, t, 0)),
+            pl.BlockSpec((1, 1), lambda h, t: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, R, D), lambda h, t: (h, 0, 0)),
+            pl.BlockSpec((None, R, 1), lambda h, t: (h, 0, 0)),
+            pl.BlockSpec((None, R, 1), lambda h, t: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((H, R, D), jnp.float32),
+            jax.ShapeDtypeStruct((H, R, 1), jnp.float32),
+            jax.ShapeDtypeStruct((H, R, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((R, D), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+            pltpu.VMEM((R, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qh, kh, vh, len_arr)
+    return (jnp.transpose(out, (1, 0, 2)),
+            jnp.transpose(m[..., 0]),
+            jnp.transpose(l[..., 0]))
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x / jnp.sqrt(ms + eps) * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+def rmsnorm(x, scale, eps=1e-5, *, interpret=True):
+    """Pallas RMSNorm over the last axis; x (..., D), scale (D,)."""
+    orig_shape = x.shape
+    D = orig_shape[-1]
+    x2 = x.reshape(-1, D)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        out_shape=jax.ShapeDtypeStruct(x2.shape, x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    return out.reshape(orig_shape)
+
+
+def merge_partitions(out_ctx, m_ctx, l_ctx, out_tail, m_tail, l_tail):
+    """Merge two flash partitions (unnormalized acc, max, normalizer).
+
+    All inputs broadcast over leading dims; m/l have a trailing singleton
+    against out's feature axis handled by the caller.
+    """
+    m = jnp.maximum(m_ctx, m_tail)
+    a_ctx = jnp.exp(m_ctx - m)
+    a_tail = jnp.exp(m_tail - m)
+    l = l_ctx * a_ctx + l_tail * a_tail
+    out = out_ctx * a_ctx[..., None] + out_tail * a_tail[..., None]
+    return out / jnp.maximum(l, 1e-30)[..., None]

@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels (correctness ground truth).
+
+Every kernel in this package has a dense, obviously-correct counterpart
+here; pytest + hypothesis assert allclose across shapes/dtypes.
+"""
+
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, scale, eps=1e-5):
+    """RMSNorm over the last axis (float32 accumulation)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf / jnp.sqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def ctx_attention_ref(q, k_ctx, v_ctx, ctx_len):
+    """Dense attention of queries against the shared context cache.
+
+    q:      (R, H, D)   flattened query rows (R = k * (w+1))
+    k_ctx:  (L, H, D)   shared context keys (max_len L, valid first ctx_len)
+    v_ctx:  (L, H, D)
+    ctx_len: scalar int — number of valid cache positions.
+
+    Returns (out (R, H, D), m (R, H), l (R, H)): the *unnormalized* flash
+    partials of the context partition — out = sum_j exp(s_j - m) v_j,
+    m = row max score, l = softmax normalizer. These merge with the
+    speculative-tail partition in the model (bifurcated attention).
+    """
+    R, H, D = q.shape
+    L = k_ctx.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.array(D, jnp.float32))
+    qf = q.astype(jnp.float32)
+    scores = jnp.einsum("rhd,lhd->hrl", qf, k_ctx.astype(jnp.float32)) * scale
+    mask = jnp.arange(L)[None, None, :] < ctx_len
+    scores = jnp.where(mask, scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1)                      # (H, R)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)       # guard ctx_len == 0
+    p = jnp.where(mask, jnp.exp(scores - m_safe[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)                           # (H, R)
+    out = jnp.einsum("hrl,lhd->rhd", p, v_ctx.astype(jnp.float32))
+    return out, jnp.transpose(m_safe), jnp.transpose(l)
+
+
+def spec_attention_ref(q, k_ctx, v_ctx, ctx_len, k_tail, v_tail):
+    """Full speculative-verification attention (the end-to-end oracle).
+
+    q:       (B, W1, H, D)  queries for B speculation rows, W1 = w+1 tokens
+    k_ctx:   (L, H, D)      shared context keys (valid first ctx_len)
+    v_ctx:   (L, H, D)
+    k_tail:  (B, W1, H, D)  per-row keys of the speculative tokens
+    v_tail:  (B, W1, H, D)
+
+    Row b, position i attends to: context[:ctx_len] ++ tail[b, :i+1] (causal).
+    Returns (B, W1, H, D).
+    """
+    B, W1, H, D = q.shape
+    L = k_ctx.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.array(D, jnp.float32))
+    qf = q.astype(jnp.float32)
+    sc_ctx = jnp.einsum("bwhd,lhd->bhwl", qf, k_ctx.astype(jnp.float32)) * scale
+    ctx_mask = jnp.arange(L)[None, None, None, :] < ctx_len
+    sc_ctx = jnp.where(ctx_mask, sc_ctx, -jnp.inf)
+    sc_tail = jnp.einsum("bwhd,bxhd->bhwx", qf, k_tail.astype(jnp.float32)) * scale
+    causal = jnp.arange(W1)[:, None] >= jnp.arange(W1)[None, :]
+    sc_tail = jnp.where(causal[None, None, :, :], sc_tail, -jnp.inf)
+    scores = jnp.concatenate([sc_ctx, sc_tail], axis=-1)  # (B,H,W1,L+W1)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out_ctx = jnp.einsum("bhwl,lhd->bwhd", p[..., :L], v_ctx.astype(jnp.float32))
+    out_tail = jnp.einsum("bhwx,bxhd->bwhd", p[..., L:], v_tail.astype(jnp.float32))
+    return (out_ctx + out_tail).astype(q.dtype)

@@ -1,0 +1,284 @@
+"""L2: decoder-only transformer in JAX (RMSNorm + SwiGLU + RoPE).
+
+Three entry points, all pure functions over an explicit parameter list:
+
+  forward_train   (B, T) tokens -> (B, T, V) logits       [training / tables]
+  forward_prefill (1, P) padded prompt -> KV cache + next-token id
+  forward_spec_step  the paper's verification call: (k, w+1) speculative
+                     block vs a *shared* context KV cache -> greedy
+                     next-token ids + the block's KV tail.
+
+The speculative step uses the L1 Pallas kernels (kernels/attention.py) for
+RMSNorm and the shared-context attention partition; the (w+1)-wide causal
+tail partition is dense jnp and merged via flash-partition statistics
+(bifurcated attention — see DESIGN.md §Hardware-Adaptation).
+
+Parameters travel as a flat *list* of arrays whose names/shapes are
+recorded in the artifact manifest; the rust runtime uploads them once as
+PJRT device buffers in the same order.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from .kernels import attention as K
+
+
+# ---------------------------------------------------------------------------
+# parameters
+
+def param_spec(cfg: ModelConfig):
+    """[(name, shape)] in flat order — the single source of truth shared
+    with the manifest and the rust runtime."""
+    d, v, hh = cfg.d_model, cfg.vocab_size, cfg.n_heads * cfg.head_dim
+    spec = [("tok_emb", (v, d))]
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        spec += [
+            (p + "attn_norm", (d,)),
+            (p + "wq", (d, hh)),
+            (p + "wk", (d, hh)),
+            (p + "wv", (d, hh)),
+            (p + "wo", (hh, d)),
+            (p + "mlp_norm", (d,)),
+            (p + "w_gate", (d, cfg.mlp_hidden)),
+            (p + "w_up", (d, cfg.mlp_hidden)),
+            (p + "w_down", (cfg.mlp_hidden, d)),
+        ]
+    spec += [("final_norm", (d,)), ("lm_head", (d, v))]
+    return spec
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """He-style init for matrices; norms start at 1; embeddings N(0, 0.02)."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for name, shape in param_spec(cfg):
+        if name.endswith("norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name == "tok_emb":
+            params.append(jnp.asarray(rng.normal(0.0, 0.02, size=shape), jnp.float32))
+        else:
+            std = (2.0 / shape[0]) ** 0.5
+            params.append(jnp.asarray(rng.normal(0.0, std, size=shape), jnp.float32))
+    return params
+
+
+def _unpack(cfg: ModelConfig, params):
+    spec = param_spec(cfg)
+    assert len(params) == len(spec), (len(params), len(spec))
+    d = dict(zip([n for n, _ in spec], params))
+    layers = []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        layers.append({k: d[p + k] for k in
+                       ["attn_norm", "wq", "wk", "wv", "wo",
+                        "mlp_norm", "w_gate", "w_up", "w_down"]})
+    return d["tok_emb"], layers, d["final_norm"], d["lm_head"]
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+
+def rope_cossin(cfg: ModelConfig, positions):
+    """positions (...,) -> (cos, sin) each (..., head_dim/2)."""
+    hd = cfg.head_dim
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., H, D); cos/sin (..., D/2) broadcast across heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def _rmsnorm_jnp(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf / jnp.sqrt(ms + eps) * scale).astype(x.dtype)
+
+
+def _swiglu(lyr, x):
+    h = jax.nn.silu(x @ lyr["w_gate"]) * (x @ lyr["w_up"])
+    return h @ lyr["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# training / dense forward (plain jnp; used for training + bigram tables)
+
+def forward_train(cfg: ModelConfig, params, tokens):
+    """tokens (B, T) int32 -> logits (B, T, V). Full causal attention."""
+    tok_emb, layers, final_norm, lm_head = _unpack(cfg, params)
+    B, T = tokens.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    x = tok_emb[tokens]                                   # (B, T, d)
+    pos = jnp.arange(T)
+    cos, sin = rope_cossin(cfg, pos)                      # (T, hd/2)
+    causal = jnp.tril(jnp.ones((T, T), jnp.bool_))
+    scale = 1.0 / jnp.sqrt(jnp.array(hd, jnp.float32))
+    for lyr in layers:
+        h = _rmsnorm_jnp(x, lyr["attn_norm"], cfg.norm_eps)
+        q = apply_rope((h @ lyr["wq"]).reshape(B, T, H, hd), cos, sin)
+        k = apply_rope((h @ lyr["wk"]).reshape(B, T, H, hd), cos, sin)
+        v = (h @ lyr["wv"]).reshape(B, T, H, hd)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q, k) * scale
+        sc = jnp.where(causal[None, None], sc, -jnp.inf)
+        p = jax.nn.softmax(sc, axis=-1)
+        att = jnp.einsum("bhqk,bkhd->bqhd", p, v).reshape(B, T, H * hd)
+        x = x + att @ lyr["wo"]
+        h = _rmsnorm_jnp(x, lyr["mlp_norm"], cfg.norm_eps)
+        x = x + _swiglu(lyr, h)
+    x = _rmsnorm_jnp(x, final_norm, cfg.norm_eps)
+    return x @ lm_head
+
+
+# ---------------------------------------------------------------------------
+# prefill: fill the shared KV cache for one prompt
+
+def forward_prefill(cfg: ModelConfig, params, tokens, length):
+    """tokens (1, P) int32 padded prompt, length scalar int32 (<= P).
+
+    Returns (next_id () i32, k_cache (layers, max_len, H, hd) f32,
+             v_cache (layers, max_len, H, hd) f32).
+    Cache positions >= length hold garbage from pad tokens; they are always
+    masked by cache_len in subsequent speculative steps.
+    """
+    tok_emb, layers, final_norm, lm_head = _unpack(cfg, params)
+    P = tokens.shape[1]
+    H, hd = cfg.n_heads, cfg.head_dim
+    x = tok_emb[tokens[0]]                                # (P, d)
+    pos = jnp.arange(P)
+    cos, sin = rope_cossin(cfg, pos)
+    valid = pos < length
+    causal = (pos[:, None] >= pos[None, :]) & valid[None, :]
+    scale = 1.0 / jnp.sqrt(jnp.array(hd, jnp.float32))
+    kc, vc = [], []
+    pad = cfg.max_len - P
+    for lyr in layers:
+        h = _rmsnorm_jnp(x, lyr["attn_norm"], cfg.norm_eps)
+        q = apply_rope((h @ lyr["wq"]).reshape(P, H, hd), cos, sin)
+        k = apply_rope((h @ lyr["wk"]).reshape(P, H, hd), cos, sin)
+        v = (h @ lyr["wv"]).reshape(P, H, hd)
+        sc = jnp.einsum("qhd,khd->hqk", q, k) * scale
+        sc = jnp.where(causal[None], sc, -jnp.inf)
+        p = jax.nn.softmax(sc, axis=-1)
+        att = jnp.einsum("hqk,khd->qhd", p, v).reshape(P, H * hd)
+        x = x + att @ lyr["wo"]
+        h = _rmsnorm_jnp(x, lyr["mlp_norm"], cfg.norm_eps)
+        x = x + _swiglu(lyr, h)
+        kc.append(jnp.pad(k, ((0, pad), (0, 0), (0, 0))))
+        vc.append(jnp.pad(v, ((0, pad), (0, 0), (0, 0))))
+    x = _rmsnorm_jnp(x, final_norm, cfg.norm_eps)
+    logits = x @ lm_head                                  # (P, V)
+    next_id = jnp.argmax(logits[length - 1], axis=-1).astype(jnp.int32)
+    return next_id, jnp.stack(kc), jnp.stack(vc)
+
+
+# ---------------------------------------------------------------------------
+# the verification step (the paper's hot path)
+
+def forward_spec_step(cfg: ModelConfig, params, tokens, k_cache, v_cache,
+                      cache_len, *, interpret=True, use_pallas=True):
+    """Verify a (k, w+1) speculative block against the shared context cache.
+
+    tokens:   (k, w1) int32 — column 0 is the last accepted token (repeated
+              across rows), columns 1..w are the drafts.
+    k_cache:  (layers, max_len, H, hd) f32 — shared context keys.
+    v_cache:  (layers, max_len, H, hd) f32.
+    cache_len: scalar int32 — number of valid cache positions (the block's
+              first token sits at absolute position cache_len).
+
+    Returns:
+      next_ids (k, w1) int32 — greedy argmax after each block position,
+      k_tail   (layers, k, w1, H, hd) f32 — keys of the block tokens,
+      v_tail   (layers, k, w1, H, hd) f32.
+    """
+    tok_emb, layers, final_norm, lm_head = _unpack(cfg, params)
+    kk, w1 = tokens.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    x = tok_emb[tokens]                                   # (k, w1, d)
+    pos = cache_len + jnp.arange(w1)                      # (w1,)
+    cos, sin = rope_cossin(cfg, pos)                      # (w1, hd/2)
+    scale = 1.0 / jnp.sqrt(jnp.array(hd, jnp.float32))
+    causal = jnp.arange(w1)[:, None] >= jnp.arange(w1)[None, :]
+    k_tails, v_tails = [], []
+    for li, lyr in enumerate(layers):
+        if use_pallas:
+            h = K.rmsnorm(x, lyr["attn_norm"], cfg.norm_eps, interpret=interpret)
+        else:
+            h = _rmsnorm_jnp(x, lyr["attn_norm"], cfg.norm_eps)
+        q = apply_rope((h @ lyr["wq"]).reshape(kk, w1, H, hd), cos, sin)
+        kt = apply_rope((h @ lyr["wk"]).reshape(kk, w1, H, hd), cos, sin)
+        vt = (h @ lyr["wv"]).reshape(kk, w1, H, hd)
+        k_tails.append(kt)
+        v_tails.append(vt)
+
+        # --- context partition: ONE shared-cache attention for all k rows
+        qf = q.reshape(kk * w1, H, hd)
+        if use_pallas:
+            o_ctx, m_ctx, l_ctx = K.ctx_attention(
+                qf, k_cache[li], v_cache[li], cache_len, interpret=interpret)
+        else:
+            from .kernels.ref import ctx_attention_ref
+            o_ctx, m_ctx, l_ctx = ctx_attention_ref(
+                qf, k_cache[li], v_cache[li], cache_len)
+        o_ctx = o_ctx.reshape(kk, w1, H, hd)
+        m_ctx = m_ctx.reshape(kk, w1, H)
+        l_ctx = l_ctx.reshape(kk, w1, H)
+
+        # --- tail partition: tiny (w1 x w1) causal attention per row
+        sc = jnp.einsum("bqhd,bkhd->bqhk", q, kt) * scale   # (k, w1, H, w1)
+        sc = jnp.where(causal[None, :, None, :], sc, -jnp.inf)
+        m_tail = jnp.max(sc, axis=-1)                       # (k, w1, H)
+        p = jnp.exp(sc - m_tail[..., None])
+        p = jnp.where(causal[None, :, None, :], p, 0.0)
+        l_tail = jnp.sum(p, axis=-1)
+        o_tail = jnp.einsum("bqhk,bkhd->bqhd", p, vt)
+
+        att = K.merge_partitions(o_ctx, m_ctx, l_ctx, o_tail, m_tail, l_tail)
+        x = x + att.reshape(kk, w1, H * hd).astype(x.dtype) @ lyr["wo"]
+        if use_pallas:
+            h = K.rmsnorm(x, lyr["mlp_norm"], cfg.norm_eps, interpret=interpret)
+        else:
+            h = _rmsnorm_jnp(x, lyr["mlp_norm"], cfg.norm_eps)
+        x = x + _swiglu(lyr, h)
+
+    x = _rmsnorm_jnp(x, final_norm, cfg.norm_eps)
+    logits = x @ lm_head                                  # (k, w1, V)
+    next_ids = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return next_ids, jnp.stack(k_tails), jnp.stack(v_tails)
+
+
+def kv_commit(cfg: ModelConfig, k_cache, v_cache, k_tail, v_tail, row, length):
+    """Device-side cache commit (perf path — see EXPERIMENTS.md §Perf-L3).
+
+    Writes `k_tail[:, row]` / `v_tail[:, row]` (the accepted speculation
+    row's KV, all w+1 positions) into the shared cache starting at
+    `length`. Positions beyond the accepted count hold stale values but are
+    always masked by cache_len in subsequent steps, so writing the full
+    w+1 window unconditionally is safe and keeps the op static-shaped.
+
+    k_cache/v_cache: (layers, max_len, H, hd); k_tail/v_tail:
+    (layers, k, w1, H, hd); row, length: scalars.
+    """
+    kt = jax.lax.dynamic_index_in_dim(k_tail, row, axis=1, keepdims=False)
+    vt = jax.lax.dynamic_index_in_dim(v_tail, row, axis=1, keepdims=False)
+    zero = jnp.zeros((), jnp.int32)
+    kc = jax.lax.dynamic_update_slice(k_cache, kt, (zero, length, zero, zero))
+    vc = jax.lax.dynamic_update_slice(v_cache, vt, (zero, length, zero, zero))
+    return kc, vc
+
+
+def loss_fn(cfg: ModelConfig, params, tokens):
+    """Next-token cross entropy; tokens (B, T)."""
+    logits = forward_train(cfg, params, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)

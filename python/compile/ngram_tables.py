@@ -1,0 +1,94 @@
+"""Model-derived N-gram tables (paper §4.1, Appendix B.1).
+
+Three learning-free artifacts extracted from the trained model:
+
+  unigram   top-k token list from the embedding geometry: d(x) = distance of
+            the output embedding u_x from the mean, under the inner product
+            induced by the input-embedding covariance (App. B.1).
+  bigram    top-k next tokens of p_M(. | x) for every x — one batched
+            forward pass over the whole vocabulary ("<= 1 minute for
+            Mistral-7B on an A100"; milliseconds here).
+  extended bigram  greedy bigram chains: entry (x, j) holds the w-step
+            future obtained by starting at the j-th top-k continuation of x
+            and following the bigram's top-1 repeatedly (§4.1 Extensions).
+
+Binary format (consumed by rust/src/draft/tables.rs): little-endian u32,
+header [magic, rows, cols, depth] then row-major data.
+"""
+
+import struct
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .configs import ModelConfig
+
+MAGIC = 0x4E47524D  # "NGRM"
+
+
+def write_table(path: str, arr: np.ndarray):
+    """arr: u32 array of rank 2 (rows, cols) or 3 (rows, cols, depth)."""
+    a = np.ascontiguousarray(arr.astype(np.uint32))
+    rows, cols = a.shape[0], a.shape[1]
+    depth = a.shape[2] if a.ndim == 3 else 1
+    with open(path, "wb") as fh:
+        fh.write(struct.pack("<4I", MAGIC, rows, cols, depth))
+        fh.write(a.tobytes())
+
+
+def read_table(path: str) -> np.ndarray:
+    with open(path, "rb") as fh:
+        magic, rows, cols, depth = struct.unpack("<4I", fh.read(16))
+        assert magic == MAGIC
+        data = np.frombuffer(fh.read(), dtype=np.uint32)
+    a = data.reshape(rows, cols, depth)
+    return a[..., 0] if depth == 1 else a
+
+
+def unigram_topk(cfg: ModelConfig, params, k: int) -> np.ndarray:
+    """Paper App. B.1: rank tokens by distance of their output embedding
+    from the mean, under the input-embedding covariance inner product."""
+    spec = [n for n, _ in M.param_spec(cfg)]
+    wenc = np.asarray(params[spec.index("tok_emb")])          # (V, d)
+    wdec = np.asarray(params[spec.index("lm_head")]).T        # (V, d)
+    cov = wenc.T @ wenc / wenc.shape[0]                       # (d, d)
+    mu = wdec.mean(axis=0, keepdims=True)                     # (1, d)
+    diff = wdec - mu
+    # squared distance ||u_x - mu||_V^2 = (u_x - mu) cov (u_x - mu)^T
+    d2 = np.einsum("vd,de,ve->v", diff, cov, diff)
+    order = np.argsort(d2)                                    # closest first
+    return order[:k].astype(np.uint32)
+
+
+def bigram_topk(cfg: ModelConfig, params, k: int, chunk: int = 128) -> np.ndarray:
+    """(V, k) top-k of p_M(. | x) for every token x: one fwd pass per chunk."""
+    V = cfg.vocab_size
+    outs = []
+    for s in range(0, V, chunk):
+        toks = jnp.arange(s, min(s + chunk, V), dtype=jnp.int32)[:, None]
+        logits = M.forward_train(cfg, params, toks)[:, 0, :]  # (chunk, V)
+        _, idx = top_k_np(np.asarray(logits), k)
+        outs.append(idx)
+    return np.concatenate(outs).astype(np.uint32)
+
+
+def top_k_np(logits: np.ndarray, k: int):
+    idx = np.argpartition(-logits, k, axis=-1)[..., :k]
+    vals = np.take_along_axis(logits, idx, axis=-1)
+    order = np.argsort(-vals, axis=-1)
+    return vals, np.take_along_axis(idx, order, axis=-1)
+
+
+def extended_bigram(bigram: np.ndarray, k: int, w: int) -> np.ndarray:
+    """(V, k, w): start at bigram[x][j], then follow bigram top-1 chains."""
+    V = bigram.shape[0]
+    top1 = bigram[:, 0].astype(np.uint32)                     # (V,)
+    out = np.zeros((V, k, w), dtype=np.uint32)
+    cur = bigram[:, :k].astype(np.uint32)                     # (V, k)
+    out[:, :, 0] = cur
+    for step in range(1, w):
+        cur = top1[cur]
+        out[:, :, step] = cur
+    return out
+

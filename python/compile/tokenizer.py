@@ -1,0 +1,148 @@
+"""Byte-level BPE tokenizer: trained once at artifact-build time.
+
+The trained merge list is serialized to ``artifacts/tokenizer.json`` and
+re-implemented in rust (``rust/src/tokenizer``); both sides are round-trip
+tested against each other through the shared JSON artifact.
+
+Vocabulary layout:
+    0..255    raw bytes
+    256..V-1  merge products, in merge order (id = 256 + merge_index)
+
+Text is first split into *pieces* (GPT-2 style: a word keeps its single
+leading space; whitespace runs are their own pieces); merges never cross
+piece boundaries. The identical splitting rule is implemented in
+``rust/src/tokenizer/mod.rs`` — keep the two in sync.
+"""
+
+import json
+from collections import Counter
+
+
+def split_pieces(data: bytes):
+    """Split into pieces: ``(optional single leading space) + non-ws run``,
+    with leftover whitespace runs as their own pieces."""
+    pieces = []
+    n = len(data)
+    i = 0
+    while i < n:
+        c = data[i]
+        if c == 0x20 and i + 1 < n and not _is_ws(data[i + 1]):
+            # single space glued onto the following word
+            j = i + 1
+            while j < n and not _is_ws(data[j]):
+                j += 1
+            pieces.append(data[i:j])
+            i = j
+        elif _is_ws(c):
+            j = i
+            while j < n and _is_ws(data[j]):
+                j += 1
+            # if the run ends in a single space followed by a word, leave
+            # that space for the word piece
+            if j < n and data[j - 1] == 0x20:
+                if j - 1 > i:
+                    pieces.append(data[i:j - 1])
+                i = j - 1
+            else:
+                pieces.append(data[i:j])
+                i = j
+        else:
+            j = i
+            while j < n and not _is_ws(data[j]):
+                j += 1
+            pieces.append(data[i:j])
+            i = j
+    return pieces
+
+
+def _is_ws(b: int) -> bool:
+    return b in (0x20, 0x09, 0x0A, 0x0D)
+
+
+class BpeTokenizer:
+    def __init__(self, merges):
+        # merges: list of (left_id, right_id) in training order.
+        self.merges = [tuple(m) for m in merges]
+        self.vocab_size = 256 + len(self.merges)
+        self.ranks = {m: i for i, m in enumerate(self.merges)}
+        # id -> bytes expansion for decoding
+        self.expansions = [bytes([i]) for i in range(256)]
+        for (a, b) in self.merges:
+            self.expansions.append(self.expansions[a] + self.expansions[b])
+        self._piece_cache = {}
+
+    # -- encoding ----------------------------------------------------------
+    def _encode_piece(self, piece: bytes):
+        cached = self._piece_cache.get(piece)
+        if cached is not None:
+            return cached
+        ids = list(piece)
+        while len(ids) >= 2:
+            best_rank, best_i = None, None
+            for i in range(len(ids) - 1):
+                r = self.ranks.get((ids[i], ids[i + 1]))
+                if r is not None and (best_rank is None or r < best_rank):
+                    best_rank, best_i = r, i
+            if best_rank is None:
+                break
+            ids[best_i:best_i + 2] = [256 + best_rank]
+        self._piece_cache[piece] = ids
+        return ids
+
+    def encode(self, text: str):
+        out = []
+        for piece in split_pieces(text.encode("utf-8")):
+            out.extend(self._encode_piece(piece))
+        return out
+
+    def decode(self, ids) -> str:
+        return b"".join(self.expansions[i] for i in ids).decode("utf-8", errors="replace")
+
+    # -- persistence -------------------------------------------------------
+    def to_json(self) -> str:
+        return json.dumps(
+            {
+                "type": "byte_bpe",
+                "vocab_size": self.vocab_size,
+                "merges": [list(m) for m in self.merges],
+            }
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "BpeTokenizer":
+        obj = json.loads(text)
+        assert obj["type"] == "byte_bpe"
+        return cls(obj["merges"])
+
+
+def train_bpe(corpus: str, vocab_size: int) -> BpeTokenizer:
+    """Greedy BPE: merge the globally most frequent adjacent pair per round.
+
+    Works on the multiset of distinct pieces, so cost is O(rounds x
+    distinct-piece bytes) rather than O(rounds x corpus bytes).
+    """
+    assert vocab_size > 256
+    piece_counts = Counter(split_pieces(corpus.encode("utf-8")))
+    pieces = [(list(p), c) for p, c in piece_counts.items()]
+    merges = []
+    while len(merges) < vocab_size - 256:
+        counts = Counter()
+        for ids, c in pieces:
+            for pair in zip(ids, ids[1:]):
+                counts[pair] += c
+        if not counts:
+            break
+        # deterministic: break frequency ties by smaller pair ids
+        (a, b), n = min(counts.items(), key=lambda kv: (-kv[1], kv[0]))
+        if n < 2:
+            break
+        new_id = 256 + len(merges)
+        merges.append((a, b))
+        for ids, _ in pieces:
+            i = 0
+            while i < len(ids) - 1:
+                if ids[i] == a and ids[i + 1] == b:
+                    ids[i:i + 2] = [new_id]
+                else:
+                    i += 1
+    return BpeTokenizer(merges)

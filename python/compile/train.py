@@ -1,0 +1,83 @@
+"""Build-time nano-training: AdamW + cosine schedule, hand-rolled (no optax).
+
+Trains each paper-analog model on the mixed synthetic corpus so that greedy
+decoding is in-distribution and the N-gram speculation statistics are
+meaningful. Runs once inside `make artifacts`; the loss curve is written to
+``artifacts/models/<name>/train_log.json`` and summarized in EXPERIMENTS.md.
+"""
+
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .configs import ModelConfig
+
+
+def adamw_init(params):
+    return ([jnp.zeros_like(p) for p in params],
+            [jnp.zeros_like(p) for p in params])
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1, 2, 3))
+def _train_step(cfg: ModelConfig, params, mu, nu, tokens, step, lr_base,
+                total_steps):
+    loss, grads = jax.value_and_grad(
+        lambda p: M.loss_fn(cfg, p, tokens))(params)
+    b1, b2, eps, wd = 0.9, 0.95, 1e-8, 0.01
+    warmup = 20.0
+    t = step.astype(jnp.float32) + 1.0
+    lr = lr_base * jnp.minimum(t / warmup, 1.0) * \
+        0.5 * (1.0 + jnp.cos(jnp.pi * jnp.minimum(t / total_steps, 1.0)))
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+    new_params, new_mu, new_nu = [], [], []
+    for p, g, m, v in zip(params, grads, mu, nu):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + wd * p
+        new_params.append(p - lr * upd)
+        new_mu.append(m)
+        new_nu.append(v)
+    return new_params, new_mu, new_nu, loss
+
+
+def make_batches(token_ids: np.ndarray, batch: int, seq: int, steps: int,
+                 seed: int = 0):
+    """Random contiguous windows from the tokenized corpus."""
+    rng = np.random.default_rng(seed)
+    n = len(token_ids) - seq - 1
+    assert n > 0, "corpus too small for sequence length"
+    for _ in range(steps):
+        starts = rng.integers(0, n, size=batch)
+        yield np.stack([token_ids[s:s + seq + 1] for s in starts])
+
+
+def train(cfg: ModelConfig, token_ids: np.ndarray, *, steps: int,
+          batch: int = 8, seq: int = 128, lr: float = 3e-3, seed: int = 0,
+          log_every: int = 20, log_path: str = None):
+    params = M.init_params(cfg, seed=seed)
+    mu, nu = adamw_init(params)
+    log = {"model": cfg.name, "steps": steps, "batch": batch, "seq": seq,
+           "lr": lr, "n_params": cfg.n_params(), "losses": []}
+    t0 = time.time()
+    for i, b in enumerate(make_batches(token_ids, batch, seq, steps, seed)):
+        tokens = jnp.asarray(b, jnp.int32)
+        params, mu, nu, loss = _train_step(
+            cfg, params, mu, nu, tokens, jnp.int32(i), lr, float(steps))
+        if i % log_every == 0 or i == steps - 1:
+            lv = float(loss)
+            log["losses"].append({"step": i, "loss": round(lv, 4),
+                                  "elapsed_s": round(time.time() - t0, 1)})
+            print(f"  [{cfg.name}] step {i:4d}  loss {lv:.4f}  "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+    log["final_loss"] = log["losses"][-1]["loss"]
+    log["wall_s"] = round(time.time() - t0, 1)
+    if log_path:
+        with open(log_path, "w") as fh:
+            json.dump(log, fh, indent=1)
+    return params, log

@@ -1,0 +1,131 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles, swept over
+shapes/dtypes with hypothesis. This is the CORE kernel signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as A
+from compile.kernels import ref as R
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, shape, dtype):
+    x = rng.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.integers(1, 40),
+    heads=st.integers(1, 4),
+    hd=st.sampled_from([8, 16, 32]),
+    ntiles=st.integers(1, 4),
+    block=st.sampled_from([32, 64, 128]),
+    frac=st.floats(0.0, 1.0),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    seed=st.integers(0, 2**16),
+)
+def test_ctx_attention_matches_ref(rows, heads, hd, ntiles, block, frac, dtype, seed):
+    L = ntiles * block
+    ctx_len = int(round(frac * L))
+    rng = np.random.default_rng(seed)
+    dt = jnp.float32 if dtype == "float32" else jnp.bfloat16
+    q = rand(rng, (rows, heads, hd), dt)
+    kc = rand(rng, (L, heads, hd), dt)
+    vc = rand(rng, (L, heads, hd), dt)
+    out, m, l = A.ctx_attention(q, kc, vc, jnp.int32(ctx_len), block_l=block)
+    out_r, m_r, l_r = R.ctx_attention_ref(q, kc, vc, ctx_len)
+    tol = 2e-4 if dtype == "float32" else 3e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_r), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(m_r), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(l), np.asarray(l_r), rtol=tol, atol=tol)
+
+
+def test_ctx_attention_empty_cache_is_zero():
+    rng = np.random.default_rng(0)
+    q = rand(rng, (4, 2, 16), jnp.float32)
+    kc = rand(rng, (128, 2, 16), jnp.float32)
+    vc = rand(rng, (128, 2, 16), jnp.float32)
+    out, m, l = A.ctx_attention(q, kc, vc, jnp.int32(0))
+    assert np.all(np.asarray(l) == 0.0)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    lead=st.integers(1, 6),
+    rows=st.integers(1, 8),
+    d=st.sampled_from([8, 32, 96, 128]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    seed=st.integers(0, 2**16),
+)
+def test_rmsnorm_matches_ref(lead, rows, d, dtype, seed):
+    rng = np.random.default_rng(seed)
+    dt = jnp.float32 if dtype == "float32" else jnp.bfloat16
+    x = rand(rng, (lead, rows, d), dt)
+    s = rand(rng, (d,), dt)
+    got = A.rmsnorm(x, s)
+    want = R.rmsnorm_ref(x, s)
+    tol = 1e-5 if dtype == "float32" else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    w1=st.integers(1, 6),
+    heads=st.integers(1, 3),
+    hd=st.sampled_from([8, 16]),
+    ctx_len=st.integers(0, 128),
+    seed=st.integers(0, 2**16),
+)
+def test_partition_merge_equals_full_attention(b, w1, heads, hd, ctx_len, seed):
+    """ctx kernel + jnp tail + merge == dense oracle over the full window —
+    the bifurcated-attention identity used by the model."""
+    L = 128
+    rng = np.random.default_rng(seed)
+    q = rand(rng, (b, w1, heads, hd), jnp.float32)
+    kc = rand(rng, (L, heads, hd), jnp.float32)
+    vc = rand(rng, (L, heads, hd), jnp.float32)
+    kt = rand(rng, (b, w1, heads, hd), jnp.float32)
+    vt = rand(rng, (b, w1, heads, hd), jnp.float32)
+
+    want = R.spec_attention_ref(q, kc, vc, ctx_len, kt, vt)
+
+    o_ctx, m_ctx, l_ctx = A.ctx_attention(
+        q.reshape(b * w1, heads, hd), kc, vc, jnp.int32(ctx_len))
+    o_ctx = o_ctx.reshape(b, w1, heads, hd)
+    m_ctx = m_ctx.reshape(b, w1, heads)
+    l_ctx = l_ctx.reshape(b, w1, heads)
+    scale = 1.0 / np.sqrt(hd)
+    causal = jnp.arange(w1)[:, None] >= jnp.arange(w1)[None, :]
+    sc = jnp.einsum("bqhd,bkhd->bqhk", q, kt) * scale
+    sc = jnp.where(causal[None, :, None, :], sc, -jnp.inf)
+    m_tail = jnp.max(sc, axis=-1)
+    p = jnp.where(causal[None, :, None, :], jnp.exp(sc - m_tail[..., None]), 0.0)
+    l_tail = jnp.sum(p, axis=-1)
+    o_tail = jnp.einsum("bqhk,bkhd->bqhd", p, vt)
+    got = A.merge_partitions(o_ctx, m_ctx, l_ctx, o_tail, m_tail, l_tail)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-4, atol=3e-4)
+
+
+def test_block_size_invariance():
+    """Same numerics for any context tile size (pure scheduling knob)."""
+    rng = np.random.default_rng(3)
+    q = rand(rng, (8, 2, 16), jnp.float32)
+    kc = rand(rng, (256, 2, 16), jnp.float32)
+    vc = rand(rng, (256, 2, 16), jnp.float32)
+    ref_out = None
+    for block in [32, 64, 128, 256]:
+        out, m, l = A.ctx_attention(q, kc, vc, jnp.int32(200), block_l=block)
+        if ref_out is None:
+            ref_out = (out, m, l)
+        else:
+            np.testing.assert_allclose(out, ref_out[0], rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(m, ref_out[1], rtol=1e-6, atol=1e-6)
+            np.testing.assert_allclose(l, ref_out[2], rtol=1e-5, atol=1e-5)

@@ -1,0 +1,130 @@
+"""L2 correctness: the speculative verify step must agree exactly (argmax
+level) with the dense training-time forward — the invariant the whole
+guess-and-verify scheme rests on — plus shape/prefill coverage."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.configs import MODELS, ModelConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = MODELS["small"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=11)
+
+
+def dense_next_tokens(params, seq):
+    logits = M.forward_train(CFG, params, seq[None, :])
+    return np.asarray(jnp.argmax(logits, -1)[0])
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    plen=st.integers(4, 40),
+    k=st.integers(1, 4),
+    w=st.integers(0, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_spec_step_matches_dense_forward(params, plen, k, w, seed):
+    rng = np.random.default_rng(seed)
+    total = plen + w + 1
+    seq = jnp.asarray(rng.integers(0, CFG.vocab_size, size=total), jnp.int32)
+    dense_next = dense_next_tokens(params, seq)
+
+    P = 64
+    toks = jnp.concatenate([seq[:plen], jnp.zeros(P - plen, jnp.int32)])[None, :]
+    nid, kc, vc = M.forward_prefill(CFG, params, toks, jnp.int32(plen))
+    assert int(nid) == int(dense_next[plen - 1])
+
+    # verify the true continuation in row 0 (k rows, others random drafts)
+    block_rows = [seq[plen:plen + w + 1]]
+    for _ in range(k - 1):
+        block_rows.append(jnp.asarray(
+            rng.integers(0, CFG.vocab_size, size=w + 1), jnp.int32))
+    block = jnp.stack(block_rows)
+    block = block.at[:, 0].set(seq[plen])  # anchor column
+    ni, ktail, vtail = M.forward_spec_step(CFG, params, block, kc, vc, jnp.int32(plen))
+    # row 0 fed the true continuation, so outputs must equal dense argmax
+    np.testing.assert_array_equal(
+        np.asarray(ni[0]), dense_next[plen:plen + w + 1])
+    assert ktail.shape == (CFG.n_layers, k, w + 1, CFG.n_heads, CFG.head_dim)
+    assert vtail.shape == ktail.shape
+
+
+def test_pallas_and_jnp_paths_agree(params):
+    rng = np.random.default_rng(5)
+    seq = jnp.asarray(rng.integers(0, CFG.vocab_size, size=30), jnp.int32)
+    P = 64
+    toks = jnp.concatenate([seq[:20], jnp.zeros(P - 20, jnp.int32)])[None, :]
+    _, kc, vc = M.forward_prefill(CFG, params, toks, jnp.int32(20))
+    block = jnp.stack([seq[20:26]] * 3)
+    a = M.forward_spec_step(CFG, params, block, kc, vc, jnp.int32(20), use_pallas=True)
+    b = M.forward_spec_step(CFG, params, block, kc, vc, jnp.int32(20), use_pallas=False)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+    np.testing.assert_allclose(np.asarray(a[1]), np.asarray(b[1]), rtol=2e-4, atol=2e-4)
+
+
+def test_kv_cache_commit_then_continue(params):
+    """Simulate the rust engine's commit: write the tail into the cache and
+    keep decoding — must keep matching the dense forward."""
+    rng = np.random.default_rng(9)
+    seq = jnp.asarray(rng.integers(0, CFG.vocab_size, size=40), jnp.int32)
+    dense_next = dense_next_tokens(params, seq)
+    plen, w1 = 10, 4
+    P = 64
+    toks = jnp.concatenate([seq[:plen], jnp.zeros(P - plen, jnp.int32)])[None, :]
+    _, kc, vc = M.forward_prefill(CFG, params, toks, jnp.int32(plen))
+    kc, vc = np.array(kc), np.array(vc)  # writable copies
+    pos = plen
+    for _ in range(4):
+        block = seq[pos:pos + w1][None, :]
+        ni, ktail, vtail = M.forward_spec_step(
+            CFG, params, block, jnp.asarray(kc), jnp.asarray(vc), jnp.int32(pos))
+        np.testing.assert_array_equal(np.asarray(ni[0]), dense_next[pos:pos + w1])
+        kc[:, pos:pos + w1] = np.asarray(ktail)[:, 0]
+        vc[:, pos:pos + w1] = np.asarray(vtail)[:, 0]
+        pos += w1
+
+
+@pytest.mark.parametrize("name", list(MODELS))
+def test_param_spec_matches_init(name):
+    cfg = MODELS[name]
+    params = M.init_params(cfg)
+    spec = M.param_spec(cfg)
+    assert len(params) == len(spec)
+    for p, (n, shape) in zip(params, spec):
+        assert tuple(p.shape) == shape, n
+    total = sum(int(np.prod(s)) for _, s in spec)
+    assert total == cfg.n_params()
+
+
+def test_prefill_length_masking(params):
+    """Padding tokens beyond `length` must not affect the next-token id."""
+    rng = np.random.default_rng(2)
+    seq = jnp.asarray(rng.integers(0, CFG.vocab_size, size=12), jnp.int32)
+    P = 64
+    a = jnp.concatenate([seq, jnp.zeros(P - 12, jnp.int32)])[None, :]
+    b = jnp.concatenate([seq, jnp.asarray(
+        rng.integers(0, CFG.vocab_size, size=P - 12), jnp.int32)])[None, :]
+    na, _, _ = M.forward_prefill(CFG, params, a, jnp.int32(12))
+    nb, _, _ = M.forward_prefill(CFG, params, b, jnp.int32(12))
+    assert int(na) == int(nb)
+
+
+def test_rope_positions_differ():
+    """Sanity: the same token at different positions attends differently."""
+    cfg = ModelConfig(name="t", vocab_size=64, d_model=32, n_layers=1,
+                      n_heads=2, head_dim=16, max_len=64)
+    params = M.init_params(cfg, seed=0)
+    seq = jnp.asarray([5] * 10, jnp.int32)
+    logits = M.forward_train(cfg, params, seq[None, :])
+    # position 0 and position 9 logits must differ (RoPE + causal window)
+    assert not np.allclose(np.asarray(logits[0, 0]), np.asarray(logits[0, 9]))

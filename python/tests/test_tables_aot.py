@@ -1,0 +1,109 @@
+"""N-gram table extraction + AOT lowering tests (build-path integration)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M, ngram_tables as NG
+from compile.configs import MODELS, step_shapes
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = MODELS["small"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=3)
+
+
+def test_bigram_topk_is_true_argmax(params):
+    table = NG.bigram_topk(CFG, params, 8)
+    assert table.shape == (CFG.vocab_size, 8)
+    # spot-check a few rows against a direct forward pass
+    for x in [0, 17, 255, CFG.vocab_size - 1]:
+        logits = np.asarray(
+            M.forward_train(CFG, params, jnp.asarray([[x]], jnp.int32))[0, 0])
+        want = np.argsort(-logits)[:8]
+        np.testing.assert_array_equal(table[x], want)
+
+
+def test_unigram_is_permutation_prefix(params):
+    u = NG.unigram_topk(CFG, params, 64)
+    assert len(np.unique(u)) == 64
+    assert u.max() < CFG.vocab_size
+
+
+def test_extended_bigram_follows_top1_chains(params):
+    bigram = NG.bigram_topk(CFG, params, 4)
+    ext = NG.extended_bigram(bigram, 4, 5)
+    assert ext.shape == (CFG.vocab_size, 4, 5)
+    for x in [1, 100]:
+        for j in range(4):
+            assert ext[x, j, 0] == bigram[x, j]
+            for d in range(1, 5):
+                assert ext[x, j, d] == bigram[ext[x, j, d - 1], 0]
+
+
+def test_table_binary_roundtrip(tmp_path, params):
+    t = NG.bigram_topk(CFG, params, 4)
+    p = str(tmp_path / "t.bin")
+    NG.write_table(p, t)
+    back = NG.read_table(p)
+    np.testing.assert_array_equal(t, back)
+    # 3d
+    ext = NG.extended_bigram(t, 4, 3)
+    NG.write_table(p, ext)
+    np.testing.assert_array_equal(ext, NG.read_table(p))
+
+
+def test_step_shapes_cover_paper_grid():
+    shapes = set(step_shapes())
+    assert (1, 0) in shapes  # greedy baseline
+    assert (10, 10) in shapes  # the paper's default
+    for k in [1, 5, 10, 20, 25]:
+        for w in [2, 4, 6, 8, 10, 12, 14]:
+            assert (k, w) in shapes, (k, w)
+
+
+def test_lowered_step_hlo_has_expected_parameters(params):
+    lowered = aot.lower_step(CFG, params, 2, 3)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    # params + tokens + kcache + vcache + len
+    n_params = len(M.param_spec(CFG))
+    for i in range(n_params + 4):
+        assert f"parameter({i})" in text, f"missing parameter({i})"
+    assert f"parameter({n_params + 4})" not in text
+    # output tuple: (next_ids i32, k_tail f32, v_tail f32)
+    assert "s32[2,4]" in text
+    assert f"f32[{CFG.n_layers},2,4,{CFG.n_heads},{CFG.head_dim}]" in text
+
+
+def test_lowered_prefill_hlo_shapes(params):
+    lowered = aot.lower_prefill(CFG, params, 64)
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert f"f32[{CFG.n_layers},{CFG.max_len},{CFG.n_heads},{CFG.head_dim}]" in text
+
+
+def test_params_bin_is_flat_f32(tmp_path, params):
+    p = str(tmp_path / "params.bin")
+    aot.write_params_bin(p, CFG, params)
+    data = np.fromfile(p, np.float32)
+    assert data.size == CFG.n_params()
+    # first tensor is tok_emb, row-major
+    np.testing.assert_allclose(
+        data[: CFG.vocab_size * CFG.d_model].reshape(CFG.vocab_size, CFG.d_model),
+        np.asarray(params[0]),
+    )
+
+
+def test_build_stamp_changes_with_sources(monkeypatch):
+    s1 = aot.build_stamp()
+    assert len(s1) == 16
+    # stamp is stable across calls
+    assert aot.build_stamp() == s1

@@ -1,0 +1,133 @@
+"""Tokenizer (BPE) and corpus-generator tests, including hypothesis
+round-trip sweeps — the python half of the cross-language parity contract
+(rust/tests/tokenizer_parity.rs is the other half)."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import data as D
+from compile.tokenizer import BpeTokenizer, split_pieces, train_bpe
+
+
+@st.composite
+def texts(draw):
+    alphabet = st.sampled_from(list("ab cd\n\te.12:()é"))
+    return "".join(draw(st.lists(alphabet, max_size=120)))
+
+
+@settings(max_examples=150, deadline=None)
+@given(texts())
+def test_pieces_reassemble_exactly(text):
+    data = text.encode("utf-8")
+    assert b"".join(split_pieces(data)) == data
+
+
+@settings(max_examples=80, deadline=None)
+@given(texts())
+def test_trained_tokenizer_roundtrip(text):
+    tok = _tok()
+    ids = tok.encode(text)
+    assert tok.decode(ids) == text
+    assert all(0 <= i < tok.vocab_size for i in ids)
+
+
+_CACHED = {}
+
+
+def _tok():
+    if "t" not in _CACHED:
+        corpus = "the cat sat on the mat. " * 50 + "def f(x):\n    return x\n" * 30
+        _CACHED["t"] = train_bpe(corpus, 300)
+    return _CACHED["t"]
+
+
+def test_training_compresses_training_text():
+    tok = _tok()
+    text = "the cat sat on the mat."
+    ids = tok.encode(text)
+    assert len(ids) < len(text) / 2
+    assert tok.decode(ids) == text
+
+
+def test_json_roundtrip_preserves_encoding():
+    tok = _tok()
+    tok2 = BpeTokenizer.from_json(tok.to_json())
+    for t in ["the mat", "def f(x):", "unseen zzz"]:
+        assert tok.encode(t) == tok2.encode(t)
+
+
+def test_merges_never_cross_piece_boundaries():
+    tok = _tok()
+    # encode("a b") must equal encode("a") + encode(" b")
+    assert tok.encode("the cat") == tok.encode("the") + tok.encode(" cat")
+
+
+def test_empty_and_whitespace():
+    tok = _tok()
+    assert tok.encode("") == []
+    for s in [" ", "  ", "\n", " \n "]:
+        assert tok.decode(tok.encode(s)) == s
+
+
+# ---------------------------------------------------------------------------
+# corpus generators
+
+def test_generators_are_deterministic():
+    a = D.gen_math(random.Random(5), 10)
+    b = D.gen_math(random.Random(5), 10)
+    assert a == b
+
+
+def test_math_answers_are_arithmetically_correct():
+    for ex in D.gen_math(random.Random(1), 200):
+        # "a OP b = c" spans must be correct arithmetic
+        for line in ex.splitlines():
+            for frag in line.split(". "):
+                if " = " in frag and any(op in frag for op in [" + ", " - ", " * "]):
+                    expr = frag.split(" = ")
+                    lhs, rhs = expr[0], expr[1]
+                    rhs_num = int("".join(ch for ch in rhs.split()[0] if ch.isdigit()))
+                    for op, f in [(" + ", lambda x, y: x + y),
+                                  (" - ", lambda x, y: x - y),
+                                  (" * ", lambda x, y: x * y)]:
+                        if op in lhs:
+                            x, y = lhs.rsplit(op, 1)
+                            x = int(x.split()[-1])
+                            y = int(y.split()[0])
+                            assert f(x, y) == rhs_num, frag
+
+
+def test_code_examples_parse_as_python():
+    import ast
+    for ex in D.gen_code(random.Random(3), 100):
+        ast.parse(ex)
+
+
+def test_chat_examples_have_dialogue_structure():
+    for ex in D.gen_chat(random.Random(4), 50):
+        assert "User: " in ex and "Assistant: " in ex
+
+
+def test_task_statistics_differ_as_designed():
+    """code must be more n-gram-repetitive than chat (drives the paper's
+    per-dataset contrast)."""
+    rng = random.Random(0)
+    code = "".join(D.gen_code(rng, 150))
+    chat = "".join(D.gen_chat(rng, 150))
+
+    def trigram_repeat_rate(text):
+        words = text.split()
+        tris = list(zip(words, words[1:], words[2:]))
+        return 1.0 - len(set(tris)) / max(len(tris), 1)
+
+    assert trigram_repeat_rate(code) > trigram_repeat_rate(chat) + 0.02
+
+
+def test_build_corpora_writes_files(tmp_path):
+    paths = D.build_corpora(str(tmp_path), seed=1, n_train=5, n_eval=2)
+    assert set(paths) == {"chat", "code", "math"}
+    for train, evalp in paths.values():
+        assert len(open(train).read()) > 50
+        assert len(open(evalp).read()) > 20

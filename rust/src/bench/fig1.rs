@@ -1,0 +1,103 @@
+//! Figure 1: memory-bound -> compute-bound phase transition heatmaps.
+//!
+//! Paper: slowdown of a (k, w) model call relative to (1, 0) for Mistral-7B
+//! on an A100-40GB, at context lengths l in {25, 100, 500}, k in 1..32,
+//! w in 0..15. Reproduced with the analytical cost model (the mechanism —
+//! OTB threshold + wave quantization — is deterministic); a measured-CPU
+//! series for the nano model is printed alongside to show the contrast
+//! (CPU is compute-bound from the start, so its "transition" is immediate).
+
+use anyhow::Result;
+
+use crate::costmodel::{CostModel, Hardware, TxDims};
+use crate::util::json::Json;
+
+pub const CTX_LENS: [usize; 3] = [25, 100, 500];
+
+pub fn run(measured: Option<&super::BenchCtx>) -> Result<()> {
+    let cm = CostModel::new(Hardware::a100_40gb(), TxDims::mistral_7b());
+    let ks: Vec<usize> = (0..=5).map(|i| 1usize << i).collect(); // 1..32
+    let ws: Vec<usize> = vec![0, 1, 2, 3, 4, 6, 8, 10, 12, 15];
+
+    println!("== Figure 1: slowdown of a (k, w) call vs (1, 0) — {} / {} ==",
+             cm.hw.name, cm.dims.name);
+    println!("(paper: transition stays ~1.0 while memory-bound, then wave-");
+    println!(" quantized jumps; larger l moves the boundary to smaller k*w)\n");
+
+    let mut series = Vec::new();
+    for &l in &CTX_LENS {
+        let grid = super::render_grid(
+            &format!("-- context length l = {l} --"),
+            &ks,
+            &ws,
+            |k, w| cm.slowdown(k, w, l),
+        );
+        println!("{grid}");
+        let mut rows = Vec::new();
+        for &k in &ks {
+            let r: Vec<Json> = ws.iter().map(|&w| Json::Num(cm.slowdown(k, w, l))).collect();
+            rows.push(Json::Arr(r));
+        }
+        series.push(Json::obj(vec![
+            ("ctx_len", Json::Num(l as f64)),
+            ("ks", Json::Arr(ks.iter().map(|&k| Json::Num(k as f64)).collect())),
+            ("ws", Json::Arr(ws.iter().map(|&w| Json::Num(w as f64)).collect())),
+            ("slowdown", Json::Arr(rows)),
+        ]));
+    }
+
+    // contrast series: measured CPU slowdowns for the nano model
+    let mut measured_json = Json::Null;
+    if let Some(ctx) = measured {
+        println!("-- measured CPU PJRT (nano '{}' model), l = 100 --", ctx.model);
+        println!("   (CPU has no memory-bound regime: slowdown grows immediately)");
+        let shapes = ctx.runtime.artifacts().step_shapes();
+        let mut cache = crate::kvcache::SharedKvCache::new(
+            ctx.runtime.artifacts().dims.n_layers,
+            ctx.runtime.artifacts().dims.max_len,
+            ctx.runtime.artifacts().dims.n_heads,
+            ctx.runtime.artifacts().dims.head_dim,
+        );
+        cache.len = 100;
+        let mut rows = Vec::new();
+        let t_base = time_step(ctx, 1, 0, &cache)?;
+        for &(k, w) in shapes.iter().filter(|&&(k, w)| k <= 25 && w <= 14) {
+            let t = time_step(ctx, k, w, &cache)?;
+            let slow = t / t_base;
+            println!("   (k={k:>2}, w={w:>2})  {:>8.2} ms   slowdown {slow:>5.2}x",
+                     t * 1e3);
+            rows.push(Json::obj(vec![
+                ("k", Json::Num(k as f64)),
+                ("w", Json::Num(w as f64)),
+                ("ms", Json::Num(t * 1e3)),
+                ("slowdown", Json::Num(slow)),
+            ]));
+        }
+        measured_json = Json::Arr(rows);
+    }
+
+    super::write_json(
+        "fig1",
+        &Json::obj(vec![
+            ("figure", Json::Str("fig1-phase-transition".into())),
+            ("hardware", Json::Str(cm.hw.name.into())),
+            ("model", Json::Str(cm.dims.name.into())),
+            ("series", Json::Arr(series)),
+            ("measured_cpu", measured_json),
+        ]),
+    )
+}
+
+/// Median-of-3 wall time of one verification call at shape (k, w).
+fn time_step(ctx: &super::BenchCtx, k: usize, w: usize,
+             cache: &crate::kvcache::SharedKvCache) -> Result<f64> {
+    let tokens = vec![1u32; k * (w + 1)];
+    ctx.runtime.warm_step(k, w)?;
+    let mut ts = Vec::new();
+    for _ in 0..3 {
+        let out = ctx.runtime.spec_step(k, w, &tokens, cache)?;
+        ts.push(out.exec_time.as_secs_f64());
+    }
+    ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(ts[1])
+}

@@ -1,0 +1,57 @@
+//! Figure 2: tokens per call as a function of top-k, for the model-derived
+//! unigram and bigram (w=1) and the extended bigram at w in {2, 3}.
+//! Paper setup: first 50 examples of MT-Bench and HumanEval, 7B model.
+//! Here: chat + code tasks, `base` nano model (Mistral-7B analog).
+
+use anyhow::Result;
+
+use crate::scheduler::StrategyName;
+use crate::util::json::Json;
+
+pub fn run(ctx: &super::BenchCtx, n_prompts: usize, max_new: usize) -> Result<()> {
+    let ks = [1usize, 2, 5, 10, 15, 20, 25];
+    println!("== Figure 2: tokens/call vs top-k (model '{}') ==\n", ctx.model);
+
+    let mut out_tasks = Vec::new();
+    for task in ["chat", "code"] {
+        let prompts = ctx.prompts(task, n_prompts, 128)?;
+        println!("-- {task} ({} prompts) --", prompts.len());
+        println!("{:<18} {}", "strategy", ks.map(|k| format!("k={k:<5}")).join(""));
+
+        let mut series = Vec::new();
+        for (label, strategy, w) in [
+            ("unigram (w=1)", StrategyName::Unigram, 1),
+            ("bigram (w=1)", StrategyName::Bigram, 1),
+            ("ext-bigram (w=2)", StrategyName::ExtBigram, 2),
+            ("ext-bigram (w=3)", StrategyName::ExtBigram, 3),
+        ] {
+            let mut row = format!("{label:<18} ");
+            let mut vals = Vec::new();
+            for &k in &ks {
+                let cell = super::run_cell(ctx, strategy, &prompts, k, w, 1, max_new)?;
+                row.push_str(&format!("{:<7.2}", cell.tokens_per_call));
+                vals.push(Json::Num(cell.tokens_per_call));
+            }
+            println!("{row}");
+            series.push(Json::obj(vec![
+                ("label", Json::Str(label.into())),
+                ("w", Json::Num(w as f64)),
+                ("tokens_per_call", Json::Arr(vals)),
+            ]));
+        }
+        println!();
+        out_tasks.push(Json::obj(vec![
+            ("task", Json::Str(task.into())),
+            ("ks", Json::Arr(ks.iter().map(|&k| Json::Num(k as f64)).collect())),
+            ("series", Json::Arr(series)),
+        ]));
+    }
+    super::write_json(
+        "fig2",
+        &Json::obj(vec![
+            ("figure", Json::Str("fig2-topk-tokens-per-call".into())),
+            ("model", Json::Str(ctx.model.clone())),
+            ("tasks", Json::Arr(out_tasks)),
+        ]),
+    )
+}

@@ -1,0 +1,94 @@
+//! Figure 4 ablations (paper §5.2): for the mixed strategy at (10, 10) on
+//! the 7B-analog model, across the three tasks —
+//!   top:    distribution of acceptance length per call
+//!   middle: distribution of the winning row's rank within its strategy
+//!   bottom: per-call allocation of batch rows to each strategy
+
+use anyhow::Result;
+
+use crate::draft::StrategyKind;
+use crate::scheduler::StrategyName;
+use crate::util::json::Json;
+use crate::util::stats::Histogram;
+use crate::workload::TASKS;
+
+pub fn run(ctx: &super::BenchCtx, n_prompts: usize, max_new: usize) -> Result<()> {
+    let (k, w) = (10usize, 10usize);
+    println!("== Figure 4 ablations: mixed strategy at (k, w) = ({k}, {w}), model '{}' ==\n",
+             ctx.model);
+
+    let mut out_tasks = Vec::new();
+    for task in TASKS {
+        let prompts = ctx.prompts(task, n_prompts, 128)?;
+        let cell = super::run_cell(ctx, StrategyName::Mixed, &prompts, k, w, 1, max_new)?;
+
+        let mut accept_ctx = Histogram::new(w + 1);
+        let mut accept_big = Histogram::new(w + 1);
+        let mut rank_ctx = Histogram::new(k);
+        let mut rank_big = Histogram::new(k);
+        let mut alloc_ctx = Histogram::new(k + 1);
+        let mut alloc_big = Histogram::new(k + 1);
+        for r in &cell.results {
+            for t in &r.traces {
+                match t.kind {
+                    StrategyKind::ContextNgram => {
+                        accept_ctx.record(t.accepted);
+                        rank_ctx.record(t.rank);
+                    }
+                    StrategyKind::ExtendedBigram | StrategyKind::ModelBigram => {
+                        accept_big.record(t.accepted);
+                        rank_big.record(t.rank);
+                    }
+                    _ => {}
+                }
+                alloc_ctx.record(t.alloc_context);
+                alloc_big.record(t.alloc_bigram);
+            }
+        }
+
+        println!("-- {task} (tok/call {:.2}) --", cell.tokens_per_call);
+        print_hist("accept-len | context-ngram", &accept_ctx);
+        print_hist("accept-len | ext-bigram   ", &accept_big);
+        print_hist("win-rank   | context-ngram", &rank_ctx);
+        print_hist("win-rank   | ext-bigram   ", &rank_big);
+        print_hist("rows/call  | context-ngram", &alloc_ctx);
+        print_hist("rows/call  | ext-bigram   ", &alloc_big);
+        println!();
+
+        let h2j = |h: &Histogram| {
+            Json::Arr(h.pmf().into_iter().map(Json::Num).collect())
+        };
+        out_tasks.push(Json::obj(vec![
+            ("task", Json::Str(task.into())),
+            ("tokens_per_call", Json::Num(cell.tokens_per_call)),
+            ("accept_len_context", h2j(&accept_ctx)),
+            ("accept_len_bigram", h2j(&accept_big)),
+            ("win_rank_context", h2j(&rank_ctx)),
+            ("win_rank_bigram", h2j(&rank_big)),
+            ("alloc_context", h2j(&alloc_ctx)),
+            ("alloc_bigram", h2j(&alloc_big)),
+        ]));
+    }
+    super::write_json(
+        "fig4",
+        &Json::obj(vec![
+            ("figure", Json::Str("fig4-ablations".into())),
+            ("model", Json::Str(ctx.model.clone())),
+            ("k", Json::Num(10.0)),
+            ("w", Json::Num(10.0)),
+            ("tasks", Json::Arr(out_tasks)),
+        ]),
+    )
+}
+
+fn print_hist(label: &str, h: &Histogram) {
+    let pmf = h.pmf();
+    let bars: String = pmf
+        .iter()
+        .map(|&p| {
+            let lvl = (p * 8.0).round() as usize;
+            char::from_u32(0x2581 + lvl.clamp(0, 7) as u32).unwrap()
+        })
+        .collect();
+    println!("  {label}  n={:<5} mean={:<5.2} {bars}", h.count, h.mean());
+}

@@ -1,0 +1,74 @@
+//! Figures 3, 5 (base/7B-analog), 6, 7 (small/3B-analog), 8, 9
+//! (large/13B-analog): wall-time-speedup and tokens-per-call grids over
+//! the full mixed-strategy sweep k in {1,5,10,20,25} x w in {2,4,...,14}.
+
+use anyhow::Result;
+
+use crate::scheduler::StrategyName;
+use crate::util::json::Json;
+use crate::workload::TASKS;
+
+pub const GRID_KS: [usize; 5] = [1, 5, 10, 20, 25];
+pub const GRID_WS: [usize; 7] = [2, 4, 6, 8, 10, 12, 14];
+
+pub struct GridResult {
+    /// per task: map (k, w) -> (tokens_per_call, sim_speedup)
+    pub cells: Vec<(String, Vec<((usize, usize), (f64, f64))>)>,
+}
+
+pub fn run(ctx: &super::BenchCtx, n_prompts: usize, max_new: usize,
+           ks: &[usize], ws: &[usize]) -> Result<GridResult> {
+    println!(
+        "== Speedup & tokens/call grids (model '{}' ~ {}) ==\n",
+        ctx.model,
+        ctx.runtime.artifacts().dims.analog
+    );
+    let mut all = Vec::new();
+    let mut out_tasks = Vec::new();
+    for task in TASKS {
+        let prompts = ctx.prompts(task, n_prompts, 128)?;
+        let mut cells = Vec::new();
+        for &k in ks {
+            for &w in ws {
+                let c = super::run_cell(ctx, StrategyName::Mixed, &prompts, k, w, 1, max_new)?;
+                cells.push(((k, w), (c.tokens_per_call, c.sim_speedup)));
+            }
+        }
+        let lookup = |k: usize, w: usize, idx: usize| -> f64 {
+            cells
+                .iter()
+                .find(|((ck, cw), _)| *ck == k && *cw == w)
+                .map(|(_, v)| if idx == 0 { v.0 } else { v.1 })
+                .unwrap_or(f64::NAN)
+        };
+        println!("{}", super::render_grid(
+            &format!("-- {task}: simulated wall-time speedup (A100 cost model) --"),
+            ks, ws, |k, w| lookup(k, w, 1)));
+        println!("{}", super::render_grid(
+            &format!("-- {task}: tokens per call --"),
+            ks, ws, |k, w| lookup(k, w, 0)));
+
+        let rows = |idx: usize| -> Json {
+            Json::Arr(ks.iter().map(|&k| {
+                Json::Arr(ws.iter().map(|&w| Json::Num(lookup(k, w, idx))).collect())
+            }).collect())
+        };
+        out_tasks.push(Json::obj(vec![
+            ("task", Json::Str(task.into())),
+            ("ks", Json::Arr(ks.iter().map(|&k| Json::Num(k as f64)).collect())),
+            ("ws", Json::Arr(ws.iter().map(|&w| Json::Num(w as f64)).collect())),
+            ("tokens_per_call", rows(0)),
+            ("sim_speedup", rows(1)),
+        ]));
+        all.push((task.to_string(), cells));
+    }
+    super::write_json(
+        &format!("grid_{}", ctx.model),
+        &Json::obj(vec![
+            ("figure", Json::Str(format!("speedup+tok-call grids ({})", ctx.model))),
+            ("model", Json::Str(ctx.model.clone())),
+            ("tasks", Json::Arr(out_tasks)),
+        ]),
+    )?;
+    Ok(GridResult { cells: all })
+}

@@ -1,0 +1,159 @@
+//! Bench harness: one target per table/figure of the paper's evaluation
+//! (see DESIGN.md §Per-experiment-index). Invoked via `ngrammys bench
+//! <target>`; every target prints the same rows/series the paper reports
+//! and writes machine-readable JSON under `bench_out/`.
+//!
+//! Metrics:
+//! - tokens/call — REAL measurement on the trained nano models.
+//! - speedup(sim) — the paper's wall-time column, reproduced by combining
+//!   each run's real call trace with the A100 cost model at the paper's
+//!   model scale (CPU PJRT cannot show the §3 phase transition).
+//! - speedup(cpu) — honest measured wall-time ratio on this host's CPU.
+
+pub mod fig1;
+pub mod fig2;
+pub mod fig4;
+pub mod grid;
+pub mod qsweep;
+pub mod table1;
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::config::{EngineConfig, Manifest};
+use crate::costmodel::{CostModel, Hardware, TxDims};
+use crate::draft::NgramTables;
+use crate::engine::{GenResult, SpecDecoder};
+use crate::runtime::ModelRuntime;
+use crate::scheduler::{make_strategy, StrategyName};
+use crate::tokenizer::BpeTokenizer;
+use crate::util::stats;
+use crate::workload::{build_prompts, load_examples, Prompt};
+
+/// Everything a bench target needs for one model.
+pub struct BenchCtx {
+    pub manifest: Manifest,
+    pub model: String,
+    pub runtime: ModelRuntime,
+    pub tables: Arc<NgramTables>,
+    pub tokenizer: Arc<BpeTokenizer>,
+}
+
+impl BenchCtx {
+    pub fn load(manifest: Manifest, model: &str) -> Result<BenchCtx> {
+        let art = manifest.model(model)?.clone();
+        let runtime = ModelRuntime::load(&art)?;
+        let tables = Arc::new(NgramTables::load(&art)?);
+        let tokenizer = Arc::new(BpeTokenizer::load(&manifest.tokenizer_path)?);
+        Ok(BenchCtx { manifest, model: model.to_string(), runtime, tables, tokenizer })
+    }
+
+    pub fn prompts(&self, task: &str, n: usize, max_prompt: usize) -> Result<Vec<Prompt>> {
+        let examples = load_examples(&self.manifest, task, n)?;
+        Ok(build_prompts(&self.tokenizer, &examples, 0.4, max_prompt))
+    }
+
+    /// Cost model at the paper's scale for this nano model's analog.
+    pub fn cost_model(&self) -> CostModel {
+        let dims = TxDims::for_analog(&self.model).unwrap_or_else(TxDims::mistral_7b);
+        CostModel::new(Hardware::a100_40gb(), dims)
+    }
+}
+
+/// Aggregated measurements for one (strategy, k, w) cell over a prompt set.
+#[derive(Debug, Clone)]
+pub struct CellStats {
+    pub tokens_per_call: f64,
+    /// total generated tokens / total decode wall-time (CPU)
+    pub cpu_tokens_per_s: f64,
+    /// cost-model speedup vs greedy at paper scale (mean over prompts)
+    pub sim_speedup: f64,
+    pub sim_speedup_std: f64,
+    pub total_tokens: usize,
+    pub total_calls: usize,
+    pub results: Vec<GenResult>,
+}
+
+/// Run one strategy/(k, w) over a prompt set, with traces for simulation.
+pub fn run_cell(
+    ctx: &BenchCtx,
+    strategy: StrategyName,
+    prompts: &[Prompt],
+    k: usize,
+    w: usize,
+    q: usize,
+    max_new: usize,
+) -> Result<CellStats> {
+    let cm = ctx.cost_model();
+    let mut total_tokens = 0usize;
+    let mut total_calls = 0usize;
+    let mut decode_s = 0.0f64;
+    let mut sims = Vec::new();
+    let mut results = Vec::new();
+    for p in prompts {
+        let strat = make_strategy(strategy, &ctx.tables, q);
+        let mut dec = SpecDecoder::new(
+            &ctx.runtime,
+            strat,
+            EngineConfig { k, w, q, max_new_tokens: max_new },
+        );
+        dec.collect_traces = true;
+        let r = dec.generate(&p.tokens)?;
+        total_tokens += r.tokens.len();
+        total_calls += r.calls;
+        decode_s += r.decode_time.as_secs_f64();
+        let calls: Vec<(usize, usize, usize)> =
+            r.traces.iter().map(|t| (t.k, t.w, t.ctx_len)).collect();
+        if !calls.is_empty() {
+            // first token came from prefill on both sides of the ratio
+            sims.push(cm.simulate_speedup(&calls, r.tokens.len().saturating_sub(1)));
+        }
+        results.push(r);
+    }
+    let decode_tokens = total_tokens.saturating_sub(prompts.len()); // minus prefill-emitted
+    Ok(CellStats {
+        tokens_per_call: if total_calls == 0 { 0.0 } else {
+            decode_tokens as f64 / total_calls as f64
+        },
+        cpu_tokens_per_s: if decode_s == 0.0 { 0.0 } else {
+            total_tokens as f64 / decode_s
+        },
+        sim_speedup: stats::mean(&sims),
+        sim_speedup_std: stats::std_dev(&sims),
+        total_tokens,
+        total_calls,
+        results,
+    })
+}
+
+/// Write a bench artifact under bench_out/.
+pub fn write_json(name: &str, json: &crate::util::json::Json) -> Result<()> {
+    std::fs::create_dir_all("bench_out")?;
+    let path = format!("bench_out/{name}.json");
+    std::fs::write(&path, json.to_string_pretty())?;
+    eprintln!("  -> wrote {path}");
+    Ok(())
+}
+
+/// Render an ASCII heat-grid (rows = k values, cols = w values).
+pub fn render_grid(
+    title: &str,
+    ks: &[usize],
+    ws: &[usize],
+    cell: impl Fn(usize, usize) -> f64,
+) -> String {
+    let mut s = format!("{title}\n      ");
+    for w in ws {
+        s.push_str(&format!("w={w:<5}"));
+    }
+    s.push('\n');
+    for &k in ks {
+        s.push_str(&format!("k={k:<4}"));
+        for &w in ws {
+            s.push_str(&format!("{:<7.2}", cell(k, w)));
+        }
+        s.push('\n');
+    }
+    s
+}

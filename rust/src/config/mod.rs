@@ -1,0 +1,280 @@
+//! Typed configuration: artifact manifest, model dims, engine and serving
+//! settings. The manifest (written by `python -m compile.aot`) is the single
+//! handoff point between the build path and the runtime.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Dimensions of one nano model (mirrors python/compile/configs.py).
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub name: String,
+    pub analog: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub mlp_hidden: usize,
+    pub max_len: usize,
+    pub n_params: usize,
+}
+
+/// One weight tensor's name + shape, in flat params.bin order.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Everything the runtime needs to know about one model's artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelArtifacts {
+    pub dims: ModelDims,
+    pub dir: PathBuf,
+    pub params_bin: PathBuf,
+    pub param_spec: Vec<ParamSpec>,
+    /// (k, w) -> HLO text path for the verification step.
+    pub steps: HashMap<(usize, usize), PathBuf>,
+    /// prefill bucket P -> HLO text path.
+    pub prefills: HashMap<usize, PathBuf>,
+    /// (k, w) -> HLO text path for the device-side KV commit (perf path;
+    /// may be empty for artifacts built before the commit stage existed).
+    pub commits: HashMap<(usize, usize), PathBuf>,
+    pub bigram_table: PathBuf,
+    pub unigram_table: PathBuf,
+    pub ext_bigram_table: PathBuf,
+    pub train_final_loss: f64,
+}
+
+impl ModelArtifacts {
+    /// Smallest prefill bucket that fits `len` prompt tokens.
+    pub fn prefill_bucket(&self, len: usize) -> Option<usize> {
+        self.prefills.keys().copied().filter(|&p| p >= len).min()
+    }
+
+    /// All available (k, w) step shapes, sorted.
+    pub fn step_shapes(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<_> = self.steps.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+/// The parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub vocab_size: usize,
+    pub tokenizer_path: PathBuf,
+    /// task name -> (train corpus path, eval corpus path)
+    pub data: HashMap<String, (PathBuf, PathBuf)>,
+    pub models: HashMap<String, ModelArtifacts>,
+    pub bigram_topk: usize,
+    pub unigram_topk: usize,
+    pub ext_bigram_w: usize,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+
+        let root = artifacts_dir.to_path_buf();
+        let vocab_size = j.req("vocab_size")?.as_usize().unwrap_or(0);
+
+        let mut data = HashMap::new();
+        if let Some(d) = j.get("data").and_then(|d| d.as_obj()) {
+            for (task, v) in d {
+                let train = root.join(v.req("train")?.as_str().unwrap_or_default());
+                let eval = root.join(v.req("eval")?.as_str().unwrap_or_default());
+                data.insert(task.clone(), (train, eval));
+            }
+        }
+
+        let topk = j.req("table_topk")?;
+        let bigram_topk = topk.req("bigram")?.as_usize().unwrap_or(0);
+        let unigram_topk = topk.req("unigram")?.as_usize().unwrap_or(0);
+        let ext_bigram_w = topk.req("ext_bigram_w")?.as_usize().unwrap_or(0);
+
+        let mut models = HashMap::new();
+        for (name, m) in j.req("models")?.as_obj().unwrap_or(&[]) {
+            models.insert(name.clone(), parse_model(&root, name, m)?);
+        }
+
+        Ok(Manifest {
+            tokenizer_path: root.join(
+                j.req("tokenizer")?.as_str().unwrap_or("tokenizer.json")),
+            root,
+            vocab_size,
+            data,
+            models,
+            bigram_topk,
+            unigram_topk,
+            ext_bigram_w,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest (have: {:?})",
+                                   self.models.keys().collect::<Vec<_>>()))
+    }
+}
+
+fn parse_model(root: &Path, name: &str, m: &Json) -> Result<ModelArtifacts> {
+    let dir = root.join(m.req("dir")?.as_str().unwrap_or_default());
+    let u = |key: &str| -> Result<usize> {
+        m.req(key)?
+            .as_usize()
+            .ok_or_else(|| anyhow!("model {name}: bad '{key}'"))
+    };
+    let dims = ModelDims {
+        name: name.to_string(),
+        analog: m.get("analog").and_then(|a| a.as_str()).unwrap_or("").to_string(),
+        vocab_size: u("vocab_size")?,
+        d_model: u("d_model")?,
+        n_layers: u("n_layers")?,
+        n_heads: u("n_heads")?,
+        head_dim: u("head_dim")?,
+        mlp_hidden: u("mlp_hidden")?,
+        max_len: u("max_len")?,
+        n_params: u("n_params")?,
+    };
+
+    let mut param_spec = Vec::new();
+    for p in m.req("param_spec")?.as_arr().unwrap_or(&[]) {
+        param_spec.push(ParamSpec {
+            name: p.req("name")?.as_str().unwrap_or_default().to_string(),
+            shape: p
+                .req("shape")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|s| s.as_usize().unwrap_or(0))
+                .collect(),
+        });
+    }
+
+    let mut steps = HashMap::new();
+    for (kw, f) in m.req("steps")?.as_obj().unwrap_or(&[]) {
+        let (k, w) = kw
+            .split_once(',')
+            .ok_or_else(|| anyhow!("bad step key {kw}"))?;
+        steps.insert(
+            (k.parse()?, w.parse()?),
+            dir.join(f.as_str().unwrap_or_default()),
+        );
+    }
+
+    let mut prefills = HashMap::new();
+    for (p, f) in m.req("prefills")?.as_obj().unwrap_or(&[]) {
+        prefills.insert(p.parse()?, dir.join(f.as_str().unwrap_or_default()));
+    }
+
+    let mut commits = HashMap::new();
+    if let Some(c) = m.get("commits").and_then(|c| c.as_obj()) {
+        for (kw, f) in c {
+            if let Some((k, w)) = kw.split_once(',') {
+                commits.insert(
+                    (k.parse()?, w.parse()?),
+                    dir.join(f.as_str().unwrap_or_default()),
+                );
+            }
+        }
+    }
+
+    let tables = m.req("tables")?;
+    Ok(ModelArtifacts {
+        params_bin: dir.join(m.req("params_bin")?.as_str().unwrap_or_default()),
+        bigram_table: dir.join(tables.req("bigram")?.as_str().unwrap_or_default()),
+        unigram_table: dir.join(tables.req("unigram")?.as_str().unwrap_or_default()),
+        ext_bigram_table: dir.join(tables.req("ext_bigram")?.as_str().unwrap_or_default()),
+        train_final_loss: m
+            .get("train_final_loss")
+            .and_then(|v| v.as_f64())
+            .unwrap_or(f64::NAN),
+        dims,
+        dir,
+        param_spec,
+        steps,
+        prefills,
+        commits,
+    })
+}
+
+/// Engine-level settings for one generation run.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// number of batched speculation rows (paper's k)
+    pub k: usize,
+    /// speculation length (paper's w)
+    pub w: usize,
+    /// context-n-gram query length (paper's q; q=1 everywhere in §5)
+    pub q: usize,
+    pub max_new_tokens: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        // the paper's representative default (k, w) = (10, 10), q = 1
+        EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: 128 }
+    }
+}
+
+/// Serving-layer settings.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub addr: String,
+    pub workers: usize,
+    pub queue_cap: usize,
+    pub default_engine: EngineConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:8077".to_string(),
+            workers: 1,
+            queue_cap: 256,
+            default_engine: EngineConfig::default(),
+        }
+    }
+}
+
+/// Default artifacts directory: $NGRAMMYS_ARTIFACTS or ./artifacts.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("NGRAMMYS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_default_matches_paper() {
+        let e = EngineConfig::default();
+        assert_eq!((e.k, e.w, e.q), (10, 10, 1));
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        let err = Manifest::load(Path::new("/nonexistent-dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

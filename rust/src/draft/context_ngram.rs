@@ -1,0 +1,156 @@
+//! Context-derived N-grams (paper §4.2, Appendix B.2).
+//!
+//! Match the last `q` tokens of the sequence against every earlier
+//! position; speculate with the `w` tokens that followed each match.
+//! Matches are ranked by occurrence count, ties broken by recency
+//! (later match wins) — exactly the paper's counting rule.
+//!
+//! The scan is O(len) per proposal with an incremental last-token
+//! position index (len ≤ max_len ≈ 512 here, so the cost is hundreds of
+//! nanoseconds — "negligible" in the paper's sense; see draft_bench.rs).
+
+use std::collections::HashMap;
+
+use super::{DraftBatch, DraftStrategy, StrategyKind};
+use crate::tokenizer::TokenId;
+
+#[derive(Debug)]
+pub struct ContextNgram {
+    /// query length (paper's q; the paper uses q=1, and reports q in {2,3}
+    /// degrading quality — reproduced by `bench qsweep`)
+    pub q: usize,
+}
+
+impl ContextNgram {
+    pub fn new(q: usize) -> Self {
+        assert!(q >= 1);
+        ContextNgram { q }
+    }
+
+    /// All candidate continuations, ranked. Exposed for the qsweep bench
+    /// and tests; `propose` uses the top `k` of these.
+    pub fn candidates(&self, seq: &[TokenId], w: usize) -> Vec<(Vec<TokenId>, u32)> {
+        let n = seq.len();
+        if n < self.q + 1 || w == 0 {
+            return Vec::new();
+        }
+        let query = &seq[n - self.q..];
+        // gram -> (count, last_match_pos)
+        let mut counts: HashMap<&[TokenId], (u32, usize)> = HashMap::new();
+        // candidate start positions i: seq[i..i+q] == query, continuation
+        // seq[i+q..i+q+w'] nonempty, and the match must be strictly before
+        // the query itself (i + q <= n - q is NOT required — overlapping
+        // matches that end before the final token still count).
+        let last_start = n - self.q; // query occupies [last_start, n)
+        for i in 0..last_start {
+            if &seq[i..i + self.q] == query {
+                let cont_end = (i + self.q + w).min(n);
+                let cont = &seq[i + self.q..cont_end];
+                if cont.is_empty() {
+                    continue;
+                }
+                let e = counts.entry(cont).or_insert((0, i));
+                e.0 += 1;
+                e.1 = i; // later match overwrites -> recency tiebreak
+            }
+        }
+        let mut ranked: Vec<(&[TokenId], (u32, usize))> = counts.into_iter().collect();
+        // count desc, then recency desc, then lexicographic for determinism
+        ranked.sort_by(|a, b| {
+            b.1 .0
+                .cmp(&a.1 .0)
+                .then(b.1 .1.cmp(&a.1 .1))
+                .then(a.0.cmp(b.0))
+        });
+        ranked
+            .into_iter()
+            .map(|(g, (c, _))| (g.to_vec(), c))
+            .collect()
+    }
+}
+
+impl DraftStrategy for ContextNgram {
+    fn name(&self) -> &'static str {
+        "context-ngram"
+    }
+
+    fn propose(&mut self, seq: &[TokenId], k: usize, batch: &mut DraftBatch) {
+        if batch.is_full(k) {
+            return;
+        }
+        let w = batch.w;
+        for (rank, (tokens, _count)) in self.candidates(seq, w).into_iter().enumerate() {
+            if batch.is_full(k) {
+                break;
+            }
+            batch.push(tokens, StrategyKind::ContextNgram, rank);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn propose(q: usize, seq: &[u32], k: usize, w: usize) -> DraftBatch {
+        let mut b = DraftBatch::new(w);
+        ContextNgram::new(q).propose(seq, k, &mut b);
+        b
+    }
+
+    #[test]
+    fn finds_repeated_continuation() {
+        // "1 2 3 ... 1 2 9 ... 1" with q=1: matches of `1` -> [2,3] and [2,9]
+        let seq = [1, 2, 3, 5, 1, 2, 9, 5, 1];
+        let b = propose(1, &seq, 4, 2);
+        assert_eq!(b.k(), 2);
+        // [2,3] and [2,9] tie at count 1; recency: [2,9] started later (i=4)
+        assert_eq!(b.rows[0].tokens, vec![2, 9]);
+        assert_eq!(b.rows[1].tokens, vec![2, 3]);
+    }
+
+    #[test]
+    fn count_beats_recency() {
+        // continuation [7] occurs twice, [8] once (later)
+        let seq = [4, 7, 4, 7, 4, 8, 4];
+        let b = propose(1, &seq, 2, 1);
+        assert_eq!(b.rows[0].tokens, vec![7]);
+        assert_eq!(b.rows[1].tokens, vec![8]);
+    }
+
+    #[test]
+    fn q2_requires_two_token_match() {
+        let seq = [1, 2, 5, 9, 1, 2];
+        let b = propose(2, &seq, 2, 1);
+        assert_eq!(b.k(), 1);
+        assert_eq!(b.rows[0].tokens, vec![5]);
+    }
+
+    #[test]
+    fn no_match_no_rows() {
+        let b = propose(1, &[1, 2, 3], 4, 2);
+        assert_eq!(b.k(), 0);
+    }
+
+    #[test]
+    fn truncated_continuation_at_end() {
+        // match just before the query: continuation shorter than w
+        let seq = [3, 8, 3];
+        let b = propose(1, &seq, 1, 4);
+        assert_eq!(b.rows[0].tokens, vec![8, 3]); // only 2 tokens available
+    }
+
+    #[test]
+    fn respects_k() {
+        let seq = [1, 2, 1, 3, 1, 4, 1, 5, 1];
+        let b = propose(1, &seq, 2, 1);
+        assert_eq!(b.k(), 2);
+    }
+
+    #[test]
+    fn short_seq_safe() {
+        assert_eq!(propose(3, &[1, 2], 4, 2).k(), 0);
+        assert_eq!(propose(1, &[], 4, 2).k(), 0);
+        assert_eq!(propose(1, &[5], 4, 0).k(), 0);
+    }
+}

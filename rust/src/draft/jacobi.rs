@@ -1,0 +1,93 @@
+//! Jacobi decoding draft (Santilli et al. 2023) — the learning-free
+//! baseline the paper builds on. The speculation for step t+1 is the
+//! model's own (shifted) output from step t; the initial guess is a fixed
+//! token. Implemented as a stateful strategy so it drops into the same
+//! engine as the N-gram strategies.
+
+use super::{DraftBatch, DraftStrategy, StrategyKind};
+use crate::tokenizer::TokenId;
+
+#[derive(Debug)]
+pub struct JacobiDraft {
+    /// model outputs for the chosen row from the previous verification call
+    prev_out: Vec<TokenId>,
+    /// how many of prev_out were consumed as accepted tokens
+    consumed: usize,
+    init_token: TokenId,
+}
+
+impl JacobiDraft {
+    pub fn new(init_token: TokenId) -> Self {
+        JacobiDraft { prev_out: Vec::new(), consumed: 0, init_token }
+    }
+}
+
+impl DraftStrategy for JacobiDraft {
+    fn name(&self) -> &'static str {
+        "jacobi"
+    }
+
+    fn propose(&mut self, _seq: &[TokenId], k: usize, batch: &mut DraftBatch) {
+        if batch.is_full(k) {
+            return;
+        }
+        let w = batch.w;
+        // unconsumed leftover model predictions from last step; they were
+        // produced past the accepted prefix so they are a (stale but often
+        // good) guess at the upcoming tokens — the Jacobi fixed point.
+        let mut row: Vec<TokenId> = self
+            .prev_out
+            .iter()
+            .skip(self.consumed)
+            .copied()
+            .take(w)
+            .collect();
+        while row.len() < w {
+            row.push(self.init_token);
+        }
+        batch.push(row, StrategyKind::Jacobi, 0);
+    }
+
+    fn observe(&mut self, accepted: &[TokenId], model_out: &[TokenId]) {
+        self.prev_out = model_out.to_vec();
+        self.consumed = accepted.len();
+    }
+
+    fn reset(&mut self) {
+        self.prev_out.clear();
+        self.consumed = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_uses_init_token() {
+        let mut j = JacobiDraft::new(7);
+        let mut b = DraftBatch::new(3);
+        j.propose(&[1], 1, &mut b);
+        assert_eq!(b.rows[0].tokens, vec![7, 7, 7]);
+    }
+
+    #[test]
+    fn reuses_unconsumed_model_output() {
+        let mut j = JacobiDraft::new(0);
+        // model emitted [5,6,7,8] for the chosen row; 2 tokens accepted
+        j.observe(&[5, 6], &[5, 6, 7, 8]);
+        let mut b = DraftBatch::new(3);
+        j.propose(&[1], 1, &mut b);
+        assert_eq!(b.rows[0].tokens, vec![7, 8, 0]);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut j = JacobiDraft::new(1);
+        j.observe(&[2], &[2, 3]);
+        j.reset();
+        let mut b = DraftBatch::new(2);
+        j.propose(&[9], 1, &mut b);
+        assert_eq!(b.rows[0].tokens, vec![1, 1]);
+    }
+}

@@ -1,0 +1,192 @@
+//! Mixed strategy (paper §4.3): fill the k rows with as many context-n-gram
+//! drafts as the context yields, then fill the remainder with the extended
+//! model bigram. The per-step allocation is therefore variable — exactly
+//! what the paper ablates in §5.2 (our Fig. 4 bench records it via row
+//! provenance).
+//!
+//! `AllocationPolicy` generalizes the paper's ordering for the ablation
+//! benches (`bench ablation-alloc`).
+
+use std::sync::Arc;
+
+use super::{
+    ContextNgram, DraftBatch, DraftStrategy, ExtendedBigram, NgramTables, StrategyKind,
+};
+use crate::tokenizer::TokenId;
+
+/// How the k rows are split between the two sources.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AllocationPolicy {
+    /// paper §4.3: context matches first, bigram fills the rest
+    ContextFirst,
+    /// inverse ordering (ablation)
+    BigramFirst,
+    /// fixed split: at most `ctx` rows from the context (ablation)
+    FixedSplit { ctx: usize },
+}
+
+pub struct MixedStrategy {
+    pub context: ContextNgram,
+    pub bigram: ExtendedBigram,
+    pub policy: AllocationPolicy,
+}
+
+impl MixedStrategy {
+    /// The paper's §4.3 configuration: q=1 context n-gram + extended bigram.
+    pub fn paper(tables: Arc<NgramTables>, q: usize) -> Self {
+        MixedStrategy {
+            context: ContextNgram::new(q),
+            bigram: ExtendedBigram::new(tables),
+            policy: AllocationPolicy::ContextFirst,
+        }
+    }
+
+    pub fn with_policy(tables: Arc<NgramTables>, q: usize, policy: AllocationPolicy) -> Self {
+        MixedStrategy {
+            context: ContextNgram::new(q),
+            bigram: ExtendedBigram::new(tables),
+            policy,
+        }
+    }
+}
+
+impl DraftStrategy for MixedStrategy {
+    fn name(&self) -> &'static str {
+        "mixed(context+ext-bigram)"
+    }
+
+    fn propose(&mut self, seq: &[TokenId], k: usize, batch: &mut DraftBatch) {
+        // Gather both sources' ranked candidates, then fill the batch with
+        // DISTINCT rows in policy order (duplicates waste verification rows).
+        let w = batch.w;
+        let ctx_rows: Vec<Vec<TokenId>> = self
+            .context
+            .candidates(seq, w)
+            .into_iter()
+            .map(|(g, _)| g)
+            .collect();
+        let tables = self.bigram_tables();
+        let mut big_rows: Vec<Vec<TokenId>> = Vec::new();
+        if let Some(&cur) = seq.last() {
+            let mut chain = Vec::new();
+            for j in 0..tables.ext_bigram.cols {
+                tables.ext_chain(cur, j, w, &mut chain);
+                big_rows.push(chain.clone());
+            }
+        }
+
+        let push = |batch: &mut DraftBatch, rows: &[Vec<TokenId>],
+                    kind: StrategyKind, quota: usize| {
+            for (rank, row) in rows.iter().enumerate() {
+                if batch.is_full(quota) {
+                    break;
+                }
+                let exists = batch.rows.iter().any(|r| {
+                    r.tokens.len() == row.len().min(w) && r.tokens == row[..row.len().min(w)]
+                });
+                if !exists {
+                    batch.push(row.clone(), kind, rank);
+                }
+            }
+        };
+
+        match self.policy {
+            AllocationPolicy::ContextFirst => {
+                push(batch, &ctx_rows, StrategyKind::ContextNgram, k);
+                push(batch, &big_rows, StrategyKind::ExtendedBigram, k);
+            }
+            AllocationPolicy::BigramFirst => {
+                push(batch, &big_rows, StrategyKind::ExtendedBigram, k);
+                push(batch, &ctx_rows, StrategyKind::ContextNgram, k);
+            }
+            AllocationPolicy::FixedSplit { ctx } => {
+                push(batch, &ctx_rows, StrategyKind::ContextNgram, ctx.min(k));
+                push(batch, &big_rows, StrategyKind::ExtendedBigram, k);
+                push(batch, &ctx_rows, StrategyKind::ContextNgram, k);
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        self.context.reset();
+        self.bigram.reset();
+    }
+}
+
+impl MixedStrategy {
+    fn bigram_tables(&self) -> &NgramTables {
+        self.bigram.tables()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::draft::tables::Table;
+    use crate::draft::StrategyKind;
+
+    fn tables() -> Arc<NgramTables> {
+        let bigram = Table::from_data(
+            8, 4, 1,
+            (0..8u32).flat_map(|x| (1..5).map(move |j| (x + j) % 8)).collect(),
+        );
+        let unigram = Table::from_data(1, 4, 1, vec![0, 1, 2, 3]);
+        let ext = Table::from_data(
+            8, 4, 2,
+            (0..8u32)
+                .flat_map(|x| (1..5u32).flat_map(move |j| vec![(x + j) % 8, (x + j + 1) % 8]))
+                .collect(),
+        );
+        Arc::new(NgramTables { bigram, unigram, ext_bigram: ext })
+    }
+
+    #[test]
+    fn context_rows_come_first_then_bigram_fills() {
+        let mut m = MixedStrategy::paper(tables(), 1);
+        // context has one match for token 5 -> continuation [6]
+        let seq = [5, 6, 1, 5];
+        let mut b = DraftBatch::new(1);
+        m.propose(&seq, 4, &mut b);
+        assert_eq!(b.k(), 4);
+        assert_eq!(b.rows[0].kind, StrategyKind::ContextNgram);
+        assert_eq!(b.rows[0].tokens, vec![6]);
+        assert!(b.rows[1..].iter().all(|r| r.kind == StrategyKind::ExtendedBigram));
+    }
+
+    #[test]
+    fn dedup_removes_identical_rows() {
+        let mut m = MixedStrategy::paper(tables(), 1);
+        // context match for 2 yields [3] == ext-bigram rank 0 chain start;
+        // with w=1 both propose [3] -> dedup keeps one, bigram refills
+        let seq = [2, 3, 2];
+        let mut b = DraftBatch::new(1);
+        m.propose(&seq, 3, &mut b);
+        let toks: Vec<_> = b.rows.iter().map(|r| r.tokens[0]).collect();
+        let mut uniq = toks.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), toks.len(), "rows must be distinct: {toks:?}");
+        assert_eq!(b.k(), 3);
+    }
+
+    #[test]
+    fn bigram_first_policy_orders_rows() {
+        let mut m = MixedStrategy::with_policy(tables(), 1, AllocationPolicy::BigramFirst);
+        let seq = [5, 6, 1, 5];
+        let mut b = DraftBatch::new(1);
+        m.propose(&seq, 2, &mut b);
+        assert_eq!(b.rows[0].kind, StrategyKind::ExtendedBigram);
+    }
+
+    #[test]
+    fn fixed_split_caps_context() {
+        let mut m = MixedStrategy::with_policy(tables(), 1, AllocationPolicy::FixedSplit { ctx: 1 });
+        // context would match twice for token 1: continuations [2] and [4]
+        let seq = [1, 2, 0, 1, 4, 0, 1];
+        let mut b = DraftBatch::new(1);
+        m.propose(&seq, 4, &mut b);
+        let n_ctx = b.rows.iter().filter(|r| r.kind == StrategyKind::ContextNgram).count();
+        assert!(n_ctx <= 2); // 1 from quota (+1 possible from final refill)
+        assert_eq!(b.k(), 4);
+    }
+}

@@ -1,0 +1,117 @@
+//! Learning-free draft strategies (paper §4) — the system's contribution.
+//!
+//! A strategy fills rows of a `DraftBatch` with `w` speculative tokens each;
+//! the engine verifies all rows in one model call. Strategies are
+//! negligible-cost by construction: table lookups (model-derived N-grams)
+//! or context scans (context-derived N-grams), never a model call.
+
+pub mod context_ngram;
+pub mod jacobi;
+pub mod mixed;
+pub mod model_ngram;
+pub mod session_cache;
+pub mod tables;
+
+pub use context_ngram::ContextNgram;
+pub use jacobi::JacobiDraft;
+pub use mixed::MixedStrategy;
+pub use model_ngram::{ExtendedBigram, ModelBigram, ModelUnigram};
+pub use session_cache::SessionNgramCache;
+pub use tables::NgramTables;
+
+use crate::tokenizer::TokenId;
+
+/// Which strategy produced a draft row (for the paper's Fig. 4 ablations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StrategyKind {
+    ContextNgram,
+    ModelBigram,
+    ModelUnigram,
+    ExtendedBigram,
+    Jacobi,
+    /// row k=0 baseline: greedy continuation column only (no draft)
+    Empty,
+}
+
+impl StrategyKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            StrategyKind::ContextNgram => "context-ngram",
+            StrategyKind::ModelBigram => "model-bigram",
+            StrategyKind::ModelUnigram => "model-unigram",
+            StrategyKind::ExtendedBigram => "ext-bigram",
+            StrategyKind::Jacobi => "jacobi",
+            StrategyKind::Empty => "empty",
+        }
+    }
+}
+
+/// One proposed row: `w` draft tokens plus provenance.
+#[derive(Debug, Clone)]
+pub struct DraftRow {
+    pub tokens: Vec<TokenId>,
+    pub kind: StrategyKind,
+    /// rank of this row within its strategy's own ordering (0 = top)
+    pub rank: usize,
+}
+
+/// The (k, w) speculation batch handed to the verifier.
+#[derive(Debug, Clone, Default)]
+pub struct DraftBatch {
+    pub rows: Vec<DraftRow>,
+    pub w: usize,
+}
+
+impl DraftBatch {
+    pub fn new(w: usize) -> Self {
+        DraftBatch { rows: Vec::new(), w }
+    }
+
+    pub fn push(&mut self, mut tokens: Vec<TokenId>, kind: StrategyKind, rank: usize) {
+        debug_assert!(tokens.len() <= self.w);
+        tokens.truncate(self.w);
+        self.rows.push(DraftRow { tokens, kind, rank });
+    }
+
+    pub fn k(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_full(&self, k: usize) -> bool {
+        self.rows.len() >= k
+    }
+}
+
+/// A draft proposal source. `seq` is the whole token history *including*
+/// the current last accepted token (`seq.last()` is the token whose KV is
+/// not yet cached — the anchor of the speculation block).
+pub trait DraftStrategy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Append up to `k - batch.k()` rows of `batch.w` tokens each.
+    /// Rows may be shorter than `w` (the engine pads by chaining or
+    /// repeats); rows beyond `k` are ignored.
+    fn propose(&mut self, seq: &[TokenId], k: usize, batch: &mut DraftBatch);
+
+    /// Observe the verification outcome so stateful strategies (Jacobi)
+    /// can update. `accepted` are the tokens emitted this step (including
+    /// the bonus token); `model_out` is the verifier's full output for the
+    /// chosen row.
+    fn observe(&mut self, _accepted: &[TokenId], _model_out: &[TokenId]) {}
+
+    /// Reset per-sequence state (called between requests).
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_truncates_to_w() {
+        let mut b = DraftBatch::new(3);
+        b.push(vec![1, 2, 3, 4, 5], StrategyKind::ModelBigram, 0);
+        assert_eq!(b.rows[0].tokens, vec![1, 2, 3]);
+        assert_eq!(b.k(), 1);
+    }
+}

@@ -1,0 +1,199 @@
+//! Model-derived N-gram strategies (paper §4.1).
+//!
+//! All three consume the tables extracted at build time from the trained
+//! model weights (draft/tables.rs) — zero model calls at decode time.
+
+use std::sync::Arc;
+
+use super::{DraftBatch, DraftStrategy, NgramTables, StrategyKind};
+use crate::tokenizer::TokenId;
+
+/// Top-k of p_M(. | last token), one row per rank; rows extended past the
+/// first token with greedy bigram chains ("extended bigram", §4.1).
+#[derive(Clone)]
+pub struct ExtendedBigram {
+    tables: Arc<NgramTables>,
+    scratch: Vec<TokenId>,
+}
+
+impl ExtendedBigram {
+    pub fn new(tables: Arc<NgramTables>) -> Self {
+        ExtendedBigram { tables, scratch: Vec::new() }
+    }
+
+    pub fn tables(&self) -> &NgramTables {
+        &self.tables
+    }
+}
+
+impl DraftStrategy for ExtendedBigram {
+    fn name(&self) -> &'static str {
+        "ext-bigram"
+    }
+
+    fn propose(&mut self, seq: &[TokenId], k: usize, batch: &mut DraftBatch) {
+        let Some(&cur) = seq.last() else { return };
+        let w = batch.w;
+        let mut rank = 0;
+        while !batch.is_full(k) && rank < self.tables.ext_bigram.cols {
+            self.tables.ext_chain(cur, rank, w, &mut self.scratch);
+            batch.push(self.scratch.clone(), StrategyKind::ExtendedBigram, rank);
+            rank += 1;
+        }
+    }
+}
+
+/// Pure bigram: top-k single-token speculations (w effectively 1); rows are
+/// padded to `w` with the bigram top-1 chain so they stay verifiable, but
+/// rank/kind reflect the plain-bigram strategy for the Fig. 2 sweeps.
+#[derive(Clone)]
+pub struct ModelBigram {
+    tables: Arc<NgramTables>,
+    scratch: Vec<TokenId>,
+}
+
+impl ModelBigram {
+    pub fn new(tables: Arc<NgramTables>) -> Self {
+        ModelBigram { tables, scratch: Vec::new() }
+    }
+}
+
+impl DraftStrategy for ModelBigram {
+    fn name(&self) -> &'static str {
+        "model-bigram"
+    }
+
+    fn propose(&mut self, seq: &[TokenId], k: usize, batch: &mut DraftBatch) {
+        let Some(&cur) = seq.last() else { return };
+        let row = (cur as usize).min(self.tables.bigram.rows - 1);
+        let w = batch.w;
+        let mut rank = 0;
+        while !batch.is_full(k) && rank < self.tables.bigram.cols {
+            let first = self.tables.bigram.at(row, rank);
+            self.scratch.clear();
+            self.scratch.push(first);
+            while self.scratch.len() < w {
+                let last = *self.scratch.last().unwrap() as usize;
+                self.scratch
+                    .push(self.tables.bigram.at(last.min(self.tables.bigram.rows - 1), 0));
+            }
+            batch.push(self.scratch.clone(), StrategyKind::ModelBigram, rank);
+            rank += 1;
+        }
+    }
+}
+
+/// Unigram from the embedding geometry (paper App. B.1): a static top-k
+/// token list, independent of context. Each rank becomes a row; the row is
+/// extended with bigram top-1 chains for w > 1.
+#[derive(Clone)]
+pub struct ModelUnigram {
+    tables: Arc<NgramTables>,
+    scratch: Vec<TokenId>,
+}
+
+impl ModelUnigram {
+    pub fn new(tables: Arc<NgramTables>) -> Self {
+        ModelUnigram { tables, scratch: Vec::new() }
+    }
+}
+
+impl DraftStrategy for ModelUnigram {
+    fn name(&self) -> &'static str {
+        "model-unigram"
+    }
+
+    fn propose(&mut self, _seq: &[TokenId], k: usize, batch: &mut DraftBatch) {
+        let w = batch.w;
+        let mut rank = 0;
+        while !batch.is_full(k) && rank < self.tables.unigram.cols {
+            let first = self.tables.unigram.at(0, rank);
+            self.scratch.clear();
+            self.scratch.push(first);
+            while self.scratch.len() < w {
+                let last = *self.scratch.last().unwrap() as usize;
+                self.scratch
+                    .push(self.tables.bigram.at(last.min(self.tables.bigram.rows - 1), 0));
+            }
+            batch.push(self.scratch.clone(), StrategyKind::ModelUnigram, rank);
+            rank += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::draft::tables::Table;
+
+    fn tables() -> Arc<NgramTables> {
+        // vocab 4; bigram top-2 of x: [(x+1)%4, (x+2)%4]
+        let bigram = Table::from_data(
+            4, 2, 1,
+            (0..4u32).flat_map(|x| vec![(x + 1) % 4, (x + 2) % 4]).collect(),
+        );
+        let unigram = Table::from_data(1, 3, 1, vec![2, 0, 1]);
+        // ext chains depth 3: rank j of x -> [x+1+j, x+2+j, x+3+j] mod 4
+        let ext = Table::from_data(
+            4, 2, 3,
+            (0..4u32)
+                .flat_map(|x| (0..2u32).flat_map(move |j| {
+                    vec![(x + 1 + j) % 4, (x + 2 + j) % 4, (x + 3 + j) % 4]
+                }))
+                .collect(),
+        );
+        Arc::new(NgramTables { bigram, unigram, ext_bigram: ext })
+    }
+
+    #[test]
+    fn ext_bigram_rows_by_rank() {
+        let mut s = ExtendedBigram::new(tables());
+        let mut b = DraftBatch::new(3);
+        s.propose(&[0, 1], 2, &mut b);
+        assert_eq!(b.k(), 2);
+        assert_eq!(b.rows[0].tokens, vec![2, 3, 0]); // rank 0 chain of token 1
+        assert_eq!(b.rows[1].tokens, vec![3, 0, 1]); // rank 1 chain
+        assert_eq!(b.rows[0].kind, StrategyKind::ExtendedBigram);
+    }
+
+    #[test]
+    fn bigram_pads_with_top1_chain() {
+        let mut s = ModelBigram::new(tables());
+        let mut b = DraftBatch::new(3);
+        s.propose(&[1], 1, &mut b);
+        // first = bigram(1, rank0) = 2; chain: top1(2)=3, top1(3)=0
+        assert_eq!(b.rows[0].tokens, vec![2, 3, 0]);
+    }
+
+    #[test]
+    fn unigram_is_context_free() {
+        let mut s = ModelUnigram::new(tables());
+        let mut b1 = DraftBatch::new(1);
+        let mut b2 = DraftBatch::new(1);
+        s.propose(&[0], 3, &mut b1);
+        s.propose(&[3, 2, 1], 3, &mut b2);
+        let t1: Vec<_> = b1.rows.iter().map(|r| r.tokens.clone()).collect();
+        let t2: Vec<_> = b2.rows.iter().map(|r| r.tokens.clone()).collect();
+        assert_eq!(t1, t2);
+        assert_eq!(b1.rows[0].tokens, vec![2]); // unigram top-1
+    }
+
+    #[test]
+    fn respects_existing_rows() {
+        let mut s = ExtendedBigram::new(tables());
+        let mut b = DraftBatch::new(2);
+        b.push(vec![9, 9], StrategyKind::ContextNgram, 0);
+        s.propose(&[1], 2, &mut b);
+        assert_eq!(b.k(), 2);
+        assert_eq!(b.rows[0].kind, StrategyKind::ContextNgram);
+        assert_eq!(b.rows[1].kind, StrategyKind::ExtendedBigram);
+    }
+
+    #[test]
+    fn empty_seq_no_rows() {
+        let mut s = ModelBigram::new(tables());
+        let mut b = DraftBatch::new(2);
+        s.propose(&[], 2, &mut b);
+        assert_eq!(b.k(), 0);
+    }
+}

@@ -1,0 +1,167 @@
+//! Extension beyond the paper (§6 future work / Lookahead-style): an
+//! **online session n-gram cache**. Every verification call produces w+1
+//! model-output tokens per row — most discarded by acceptance. Lookahead
+//! decoding's insight is that those outputs are free training data for an
+//! n-gram cache. This strategy accumulates (query -> continuation)
+//! statistics from *all* accepted text across the session (not just the
+//! current context window like `ContextNgram`), so acceptance keeps
+//! improving over a serving session on repetitive workloads.
+//!
+//! Learning-free in the paper's sense: no gradient updates, no external
+//! data — only counting what the base model already emitted (P1, P2, P3).
+
+use std::collections::HashMap;
+
+use super::{DraftBatch, DraftStrategy, StrategyKind};
+use crate::tokenizer::TokenId;
+
+/// (query token, continuation) statistics with LRU-ish bounding.
+#[derive(Debug)]
+pub struct SessionNgramCache {
+    /// query token -> ranked continuations (token chain, count)
+    table: HashMap<TokenId, Vec<(Vec<TokenId>, u32)>>,
+    /// max continuations kept per query
+    per_query: usize,
+    /// max chain length stored
+    max_chain: usize,
+    /// total stored chains (for the size bound)
+    stored: usize,
+    cap: usize,
+    /// rolling tail of the accepted stream awaiting ingestion
+    tail: Vec<TokenId>,
+}
+
+impl SessionNgramCache {
+    pub fn new(per_query: usize, max_chain: usize, cap: usize) -> Self {
+        SessionNgramCache {
+            table: HashMap::new(),
+            per_query,
+            max_chain,
+            stored: 0,
+            cap,
+            tail: Vec::new(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.stored
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stored == 0
+    }
+
+    /// Ingest a span of accepted text: for each position, record the
+    /// following `max_chain` tokens under the query token.
+    pub fn ingest(&mut self, span: &[TokenId]) {
+        for i in 0..span.len().saturating_sub(1) {
+            let q = span[i];
+            let chain: Vec<TokenId> = span[i + 1..].iter().copied()
+                .take(self.max_chain).collect();
+            if chain.is_empty() {
+                continue;
+            }
+            let entry = self.table.entry(q).or_default();
+            if let Some(e) = entry.iter_mut().find(|(c, _)| {
+                c.starts_with(&chain) || chain.starts_with(c)
+            }) {
+                // extend to the longer chain, bump the count
+                if chain.len() > e.0.len() {
+                    e.0 = chain;
+                }
+                e.1 += 1;
+            } else if entry.len() < self.per_query && self.stored < self.cap {
+                entry.push((chain, 1));
+                self.stored += 1;
+            }
+            entry.sort_by(|a, b| b.1.cmp(&a.1));
+        }
+    }
+}
+
+impl DraftStrategy for SessionNgramCache {
+    fn name(&self) -> &'static str {
+        "session-ngram-cache"
+    }
+
+    fn propose(&mut self, seq: &[TokenId], k: usize, batch: &mut DraftBatch) {
+        let Some(&cur) = seq.last() else { return };
+        let w = batch.w;
+        if let Some(conts) = self.table.get(&cur) {
+            for (rank, (chain, _)) in conts.iter().enumerate() {
+                if batch.is_full(k) {
+                    break;
+                }
+                batch.push(chain.iter().copied().take(w).collect(),
+                           StrategyKind::ContextNgram, rank);
+            }
+        }
+    }
+
+    fn observe(&mut self, accepted: &[TokenId], _model_out: &[TokenId]) {
+        // ingest with one token of overlap so cross-step bigrams are seen
+        self.tail.extend_from_slice(accepted);
+        if self.tail.len() > self.max_chain + 1 {
+            let span: Vec<TokenId> = self.tail.clone();
+            self.ingest(&span);
+            let keep = self.max_chain.min(self.tail.len());
+            self.tail.drain(..self.tail.len() - keep);
+        }
+    }
+
+    fn reset(&mut self) {
+        // deliberately KEEP the table across sequences — that is the point
+        // of a session cache; only the rolling tail is per-sequence.
+        self.tail.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn learns_and_proposes_continuations() {
+        let mut c = SessionNgramCache::new(4, 4, 1000);
+        c.ingest(&[1, 2, 3, 4, 1, 2, 3, 9]);
+        let mut b = DraftBatch::new(3);
+        c.propose(&[7, 1], 2, &mut b);
+        assert!(b.k() >= 1);
+        assert_eq!(&b.rows[0].tokens[..2], &[2, 3]);
+    }
+
+    #[test]
+    fn counts_rank_frequent_continuations_first() {
+        let mut c = SessionNgramCache::new(4, 2, 1000);
+        c.ingest(&[5, 7, 0, 5, 7, 0, 5, 8]);
+        let mut b = DraftBatch::new(2);
+        c.propose(&[5], 2, &mut b);
+        assert_eq!(b.rows[0].tokens[0], 7); // seen twice
+    }
+
+    #[test]
+    fn survives_reset_but_clears_tail() {
+        let mut c = SessionNgramCache::new(4, 2, 1000);
+        c.observe(&[1, 2, 3, 4, 5], &[]);
+        let before = c.len();
+        assert!(before > 0);
+        c.reset();
+        assert_eq!(c.len(), before, "table must persist across sequences");
+    }
+
+    #[test]
+    fn respects_capacity() {
+        let mut c = SessionNgramCache::new(64, 2, 10);
+        let span: Vec<u32> = (0..200).collect();
+        c.ingest(&span);
+        assert!(c.len() <= 10);
+    }
+
+    #[test]
+    fn empty_cache_proposes_nothing() {
+        let mut c = SessionNgramCache::new(4, 4, 100);
+        let mut b = DraftBatch::new(3);
+        c.propose(&[1, 2], 4, &mut b);
+        assert_eq!(b.k(), 0);
+    }
+}

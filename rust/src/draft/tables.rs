@@ -1,0 +1,185 @@
+//! Binary N-gram table loader (written by python/compile/ngram_tables.py).
+//!
+//! Format: little-endian u32 header [magic "NGRM", rows, cols, depth]
+//! followed by row-major u32 data.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::ModelArtifacts;
+use crate::tokenizer::TokenId;
+
+pub const MAGIC: u32 = 0x4E47524D;
+
+/// A dense u32 lookup table of rank 2 (rows, cols) or 3 (rows, cols, depth).
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub rows: usize,
+    pub cols: usize,
+    pub depth: usize,
+    data: Vec<u32>,
+}
+
+impl Table {
+    pub fn load(path: &Path) -> Result<Table> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading table {path:?}"))?;
+        Table::from_bytes(&bytes).with_context(|| format!("parsing table {path:?}"))
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Table> {
+        if bytes.len() < 16 {
+            return Err(anyhow!("table too short"));
+        }
+        let rd = |i: usize| u32::from_le_bytes(bytes[i * 4..i * 4 + 4].try_into().unwrap());
+        if rd(0) != MAGIC {
+            return Err(anyhow!("bad magic {:#x}", rd(0)));
+        }
+        let (rows, cols, depth) = (rd(1) as usize, rd(2) as usize, rd(3) as usize);
+        let n = rows * cols * depth;
+        if bytes.len() != 16 + n * 4 {
+            return Err(anyhow!(
+                "table size mismatch: {} bytes for {rows}x{cols}x{depth}",
+                bytes.len()
+            ));
+        }
+        let data = bytes[16..]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(Table { rows, cols, depth, data })
+    }
+
+    /// 2-D access (depth must be 1).
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> u32 {
+        debug_assert_eq!(self.depth, 1);
+        self.data[r * self.cols + c]
+    }
+
+    /// 3-D access: chain element `d` of entry (r, c).
+    #[inline]
+    pub fn at3(&self, r: usize, c: usize, d: usize) -> u32 {
+        self.data[(r * self.cols + c) * self.depth + d]
+    }
+
+    /// Row slice for depth-1 tables.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u32] {
+        &self.data[r * self.cols * self.depth..(r + 1) * self.cols * self.depth]
+    }
+
+    /// Build a table from raw data (tests, benches, synthetic strategies).
+    pub fn from_data(rows: usize, cols: usize, depth: usize, data: Vec<u32>) -> Table {
+        assert_eq!(data.len(), rows * cols * depth);
+        Table { rows, cols, depth, data }
+    }
+}
+
+/// The three model-derived tables for one model.
+#[derive(Debug, Clone)]
+pub struct NgramTables {
+    /// (V, topk): top-k of p_M(. | x)
+    pub bigram: Table,
+    /// (1, topk): static unigram ranking from the embedding geometry
+    pub unigram: Table,
+    /// (V, topk, w): greedy bigram chains per (token, rank)
+    pub ext_bigram: Table,
+}
+
+impl NgramTables {
+    pub fn load(art: &ModelArtifacts) -> Result<NgramTables> {
+        let t = NgramTables {
+            bigram: Table::load(&art.bigram_table)?,
+            unigram: Table::load(&art.unigram_table)?,
+            ext_bigram: Table::load(&art.ext_bigram_table)?,
+        };
+        if t.bigram.rows != art.dims.vocab_size {
+            return Err(anyhow!(
+                "bigram rows {} != vocab {}",
+                t.bigram.rows,
+                art.dims.vocab_size
+            ));
+        }
+        if t.ext_bigram.rows != t.bigram.rows || t.ext_bigram.cols > t.bigram.cols {
+            return Err(anyhow!("ext_bigram shape inconsistent with bigram"));
+        }
+        Ok(t)
+    }
+
+    /// j-th ranked continuation chain of token x, `w` tokens long.
+    /// Falls back to repeating bigram top-1 beyond the stored depth.
+    pub fn ext_chain(&self, x: TokenId, j: usize, w: usize, out: &mut Vec<TokenId>) {
+        out.clear();
+        let r = (x as usize).min(self.ext_bigram.rows - 1);
+        let j = j.min(self.ext_bigram.cols - 1);
+        let depth = self.ext_bigram.depth;
+        for d in 0..w.min(depth) {
+            out.push(self.ext_bigram.at3(r, j, d));
+        }
+        // beyond stored depth: continue with bigram top-1 of the last token
+        while out.len() < w {
+            let last = *out.last().unwrap_or(&x) as usize;
+            out.push(self.bigram.at(last.min(self.bigram.rows - 1), 0));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table_bytes(rows: u32, cols: u32, depth: u32, data: &[u32]) -> Vec<u8> {
+        let mut b = Vec::new();
+        for v in [MAGIC, rows, cols, depth] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in data {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b
+    }
+
+    #[test]
+    fn parse_2d() {
+        let b = table_bytes(2, 3, 1, &[1, 2, 3, 4, 5, 6]);
+        let t = Table::from_bytes(&b).unwrap();
+        assert_eq!(t.at(0, 2), 3);
+        assert_eq!(t.at(1, 0), 4);
+        assert_eq!(t.row(1), &[4, 5, 6]);
+    }
+
+    #[test]
+    fn parse_3d() {
+        let b = table_bytes(2, 2, 2, &[0, 1, 2, 3, 4, 5, 6, 7]);
+        let t = Table::from_bytes(&b).unwrap();
+        assert_eq!(t.at3(1, 0, 1), 5);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_size() {
+        let mut b = table_bytes(1, 1, 1, &[9]);
+        b[0] ^= 0xff;
+        assert!(Table::from_bytes(&b).is_err());
+        let b = table_bytes(2, 2, 1, &[1, 2, 3]); // size mismatch
+        assert!(Table::from_bytes(&b).is_err());
+    }
+
+    #[test]
+    fn ext_chain_extends_past_depth() {
+        let tables = NgramTables {
+            bigram: Table::from_data(4, 2, 1, vec![1, 2, 2, 3, 3, 0, 0, 1]),
+            unigram: Table::from_data(1, 2, 1, vec![0, 1]),
+            // depth-2 chains: token x rank j -> [x+1, x+2] (mod 4)
+            ext_bigram: Table::from_data(
+                4, 2, 2,
+                (0..4u32).flat_map(|x| vec![(x + 1) % 4, (x + 2) % 4, (x + 2) % 4, (x + 3) % 4])
+                    .collect(),
+            ),
+        };
+        let mut out = Vec::new();
+        tables.ext_chain(1, 0, 4, &mut out);
+        // stored: [2, 3]; then bigram top-1 of 3 is 0, of 0 is 1
+        assert_eq!(out, vec![2, 3, 0, 1]);
+    }
+}

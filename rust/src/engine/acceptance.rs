@@ -1,0 +1,184 @@
+//! Greedy acceptance logic for batched speculation (pure — heavily unit-
+//! and property-tested).
+//!
+//! Block layout for row r (anchored at absolute position n = cache_len):
+//!   input  tokens:  [t_cur, d1, d2, ..., dw]        (t_cur already decided)
+//!   model outputs:  [o0,    o1, ..., ow]            oi = greedy prediction
+//!                                                   after consuming input i
+//! Draft di is accepted iff the model, having consumed the accepted prefix,
+//! predicts it: d1 == o0, d2 == o1, ... The emitted tokens for a row with
+//! accepted length a are d1..da plus the bonus token o_a — so every call
+//! emits >= 1 token and the output stream is EXACTLY the base model's
+//! greedy stream (the correctness invariant tested in prop tests).
+
+use crate::draft::DraftBatch;
+use crate::tokenizer::TokenId;
+
+/// Result of judging one verification call.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Acceptance {
+    /// winning row index
+    pub row: usize,
+    /// number of accepted draft tokens (0..=w)
+    pub accepted: usize,
+    /// tokens to emit: accepted drafts + bonus (len = accepted + 1)
+    pub emitted: Vec<TokenId>,
+}
+
+/// Accepted length of a single row.
+pub fn row_accept_len(drafts: &[TokenId], outputs: &[TokenId]) -> usize {
+    let mut a = 0;
+    while a < drafts.len() && a < outputs.len() && drafts[a] == outputs[a] {
+        a += 1;
+    }
+    a
+}
+
+/// Judge all rows of a verification call and pick the winner.
+///
+/// `next_ids` is row-major (k, w1) model output; `batch.rows[r].tokens`
+/// holds row r's drafts (possibly shorter than w — missing positions never
+/// match). Ties prefer the lowest row index, which (with the paper's
+/// context-first allocation) prefers context-n-gram rows.
+pub fn judge(batch: &DraftBatch, next_ids: &[TokenId], w1: usize) -> Acceptance {
+    let k = batch.rows.len();
+    debug_assert_eq!(next_ids.len(), k * w1);
+    let mut best_row = 0;
+    let mut best_a = 0;
+    for (r, row) in batch.rows.iter().enumerate() {
+        let out = &next_ids[r * w1..(r + 1) * w1];
+        let a = row_accept_len(&row.tokens, out);
+        if a > best_a {
+            best_a = a;
+            best_row = r;
+        }
+    }
+    let out = &next_ids[best_row * w1..(best_row + 1) * w1];
+    let mut emitted = Vec::with_capacity(best_a + 1);
+    emitted.extend_from_slice(&batch.rows[best_row].tokens[..best_a]);
+    emitted.push(out[best_a]); // bonus token
+    Acceptance { row: best_row, accepted: best_a, emitted }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::draft::StrategyKind;
+
+    fn batch(rows: Vec<Vec<TokenId>>, w: usize) -> DraftBatch {
+        let mut b = DraftBatch::new(w);
+        for r in rows {
+            b.push(r, StrategyKind::ContextNgram, 0);
+        }
+        b
+    }
+
+    #[test]
+    fn accepts_longest_prefix() {
+        // w = 3, k = 2. outputs row0: [9, 8, 7, 6]; row1: [5, 6, 9, 9]
+        let b = batch(vec![vec![9, 8, 0], vec![5, 6, 7]], 3);
+        let out = vec![9, 8, 7, 6, 5, 6, 9, 9];
+        let a = judge(&b, &out, 4);
+        // row0 accepts 2 ([9,8]), bonus 7; row1 accepts 2 ([5,6]), bonus 9.
+        // tie at 2 -> row 0 wins
+        assert_eq!(a.row, 0);
+        assert_eq!(a.accepted, 2);
+        assert_eq!(a.emitted, vec![9, 8, 7]);
+    }
+
+    #[test]
+    fn zero_accept_still_emits_bonus() {
+        let b = batch(vec![vec![1, 2]], 2);
+        let out = vec![7, 8, 9];
+        let a = judge(&b, &out, 3);
+        assert_eq!(a.accepted, 0);
+        assert_eq!(a.emitted, vec![7]); // the model's own next token
+    }
+
+    #[test]
+    fn full_accept_emits_w_plus_one() {
+        let b = batch(vec![vec![4, 5, 6]], 3);
+        let out = vec![4, 5, 6, 7];
+        let a = judge(&b, &out, 4);
+        assert_eq!(a.accepted, 3);
+        assert_eq!(a.emitted, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn longer_accept_beats_earlier_row() {
+        let b = batch(vec![vec![1, 0], vec![1, 2]], 2);
+        let out = vec![1, 2, 3, 1, 2, 3];
+        let a = judge(&b, &out, 3);
+        assert_eq!(a.row, 1);
+        assert_eq!(a.accepted, 2);
+    }
+
+    #[test]
+    fn short_row_never_matches_missing_positions() {
+        let b = batch(vec![vec![1]], 3); // row shorter than w
+        let out = vec![1, 2, 3, 4];
+        let a = judge(&b, &out, 4);
+        assert_eq!(a.accepted, 1);
+        assert_eq!(a.emitted, vec![1, 2]);
+    }
+
+    #[test]
+    fn greedy_stream_invariant_property() {
+        // For ANY drafts, the emitted tokens must equal what sequential
+        // greedy decoding would produce, given the model outputs are a
+        // function of the accepted prefix. We simulate a deterministic
+        // "model" out(prefix) = hash of prefix, and check equality.
+        use crate::util::{prop, rng::Rng};
+        fn model_next(prefix: &[TokenId]) -> TokenId {
+            let mut h = 1469598103934665603u64;
+            for &t in prefix {
+                h = (h ^ t as u64).wrapping_mul(1099511628211);
+            }
+            (h % 64) as TokenId
+        }
+        prop::check(300, |rng: &mut Rng| {
+            let w = rng.range(1, 6);
+            let k = rng.range(1, 5);
+            let plen = rng.range(1, 8);
+            let prefix: Vec<TokenId> = prop::vec_u32(rng, plen, 0..64);
+            // build drafts: random, sometimes copying the true continuation
+            let mut b = DraftBatch::new(w);
+            for _ in 0..k {
+                let mut row = Vec::with_capacity(w);
+                let mut p = prefix.clone();
+                for _ in 0..w {
+                    let t = if rng.f64() < 0.6 {
+                        model_next(&p)
+                    } else {
+                        rng.below(64) as TokenId
+                    };
+                    row.push(t);
+                    p.push(t);
+                }
+                b.push(row, StrategyKind::ContextNgram, 0);
+            }
+            // simulate the verifier: out[r][i] = model_next(prefix ++ row[..i])
+            let w1 = w + 1;
+            let mut out = vec![0; k * w1];
+            for (r, row) in b.rows.iter().enumerate() {
+                let mut p = prefix.clone();
+                for i in 0..w1 {
+                    out[r * w1 + i] = model_next(&p);
+                    if i < row.tokens.len() {
+                        p.push(row.tokens[i]);
+                    }
+                }
+            }
+            let acc = judge(&b, &out, w1);
+            // sequential greedy reference for the emitted span
+            let mut p = prefix.clone();
+            for &e in &acc.emitted {
+                if e != model_next(&p) {
+                    return false;
+                }
+                p.push(e);
+            }
+            acc.emitted.len() == acc.accepted + 1
+        });
+    }
+}

@@ -1,0 +1,243 @@
+//! Speculative decoding engine: the per-sequence decode loop that ties
+//! draft strategies (L3), the verification executable (L2+L1 via PJRT) and
+//! the shared KV cache together.
+
+pub mod acceptance;
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::config::EngineConfig;
+use crate::draft::{DraftBatch, DraftStrategy, StrategyKind};
+use crate::kvcache::SharedKvCache;
+use crate::runtime::ModelRuntime;
+use crate::tokenizer::TokenId;
+
+/// Per-verification-call trace (feeds the Fig. 4 ablations and the
+/// cost-model-simulated wall-times).
+#[derive(Debug, Clone)]
+pub struct StepTrace {
+    /// context length at the time of the call
+    pub ctx_len: usize,
+    /// actual block shape used
+    pub k: usize,
+    pub w: usize,
+    /// winning row's strategy + rank, accepted length
+    pub kind: StrategyKind,
+    pub rank: usize,
+    pub accepted: usize,
+    /// rows allocated per strategy in this call's batch
+    pub alloc_context: usize,
+    pub alloc_bigram: usize,
+    pub alloc_other: usize,
+    pub exec_time: Duration,
+}
+
+/// Result of generating one sequence.
+#[derive(Debug, Clone, Default)]
+pub struct GenResult {
+    pub tokens: Vec<TokenId>,
+    /// number of verification calls (excludes prefill)
+    pub calls: usize,
+    pub prefill_time: Duration,
+    pub decode_time: Duration,
+    /// pure model-execution time within decode
+    pub exec_time: Duration,
+    pub traces: Vec<StepTrace>,
+}
+
+impl GenResult {
+    /// The paper's "tokens per call" acceptance metric. The first token
+    /// comes from the prefill call, so only `len - 1` tokens are charged
+    /// to the `calls` verification calls — greedy decoding is exactly 1.0.
+    pub fn tokens_per_call(&self) -> f64 {
+        if self.calls == 0 {
+            0.0
+        } else {
+            (self.tokens.len().saturating_sub(1)) as f64 / self.calls as f64
+        }
+    }
+}
+
+/// Drives speculative decoding for single sequences.
+pub struct SpecDecoder<'rt> {
+    pub runtime: &'rt ModelRuntime,
+    pub strategy: Box<dyn DraftStrategy>,
+    pub cfg: EngineConfig,
+    /// collect per-step traces (slightly more allocation; on for benches)
+    pub collect_traces: bool,
+}
+
+impl<'rt> SpecDecoder<'rt> {
+    pub fn new(runtime: &'rt ModelRuntime, strategy: Box<dyn DraftStrategy>,
+               cfg: EngineConfig) -> Self {
+        SpecDecoder { runtime, strategy, cfg, collect_traces: false }
+    }
+
+    /// Generate up to `cfg.max_new_tokens` greedy tokens after `prompt`.
+    ///
+    /// INVARIANT: the returned stream is exactly the model's greedy
+    /// continuation of `prompt`, regardless of strategy or (k, w) — wrong
+    /// drafts can only cost speed, never correctness.
+    pub fn generate(&mut self, prompt: &[TokenId]) -> Result<GenResult> {
+        let dims = self.runtime.artifacts().dims.clone();
+        let mut cache = SharedKvCache::new(
+            dims.n_layers, dims.max_len, dims.n_heads, dims.head_dim);
+        self.strategy.reset();
+
+        let mut res = GenResult::default();
+        let t0 = Instant::now();
+        let pf = self.runtime.prefill(prompt, &mut cache)?;
+        res.prefill_time = t0.elapsed();
+
+        // `seq` = prompt ++ generated; the last element is always the
+        // current anchor token (KV not yet cached).
+        let mut seq: Vec<TokenId> = prompt.to_vec();
+        seq.push(pf.next_id);
+        res.tokens.push(pf.next_id);
+
+        let tdec = Instant::now();
+        while res.tokens.len() < self.cfg.max_new_tokens {
+            let room = cache.remaining();
+            // pick the largest artifact shape fitting config + cache room
+            let Some((k, w)) = self
+                .runtime
+                .best_fitting_shape(self.cfg.k, self.cfg.w, room)
+            else {
+                break; // cache exhausted
+            };
+            let w1 = w + 1;
+
+            // --- draft
+            let mut batch = DraftBatch::new(w);
+            if w > 0 {
+                self.strategy.propose(&seq, k, &mut batch);
+            }
+            pad_batch(&mut batch, k);
+
+            // --- assemble the (k, w1) block: col 0 = anchor, cols 1.. = drafts
+            let anchor = *seq.last().unwrap();
+            let mut tokens = Vec::with_capacity(k * w1);
+            for row in &batch.rows {
+                tokens.push(anchor);
+                tokens.extend_from_slice(&row.tokens);
+                // short rows pad with anchor repeats (never match outputs
+                // except by genuine coincidence; judged like any draft)
+                for _ in row.tokens.len()..w {
+                    tokens.push(anchor);
+                }
+            }
+
+            // --- verify
+            let out = self.runtime.spec_step(k, w, &tokens, &cache)?;
+            res.exec_time += out.exec_time;
+
+            // --- judge + commit
+            let acc = acceptance::judge(&batch, &out.next_ids, w1);
+            let consumed = acc.accepted + 1; // block tokens whose KV is valid
+            cache.commit_tail(&out.k_tail, &out.v_tail, k, w1, acc.row, consumed)?;
+
+            let win = &batch.rows[acc.row];
+            if self.collect_traces {
+                res.traces.push(StepTrace {
+                    ctx_len: cache.len - consumed,
+                    k,
+                    w,
+                    kind: win.kind,
+                    rank: win.rank,
+                    accepted: acc.accepted,
+                    alloc_context: count_kind(&batch, StrategyKind::ContextNgram),
+                    alloc_bigram: count_kind(&batch, StrategyKind::ExtendedBigram)
+                        + count_kind(&batch, StrategyKind::ModelBigram),
+                    alloc_other: batch.rows.len()
+                        - count_kind(&batch, StrategyKind::ContextNgram)
+                        - count_kind(&batch, StrategyKind::ExtendedBigram)
+                        - count_kind(&batch, StrategyKind::ModelBigram),
+                    exec_time: out.exec_time,
+                });
+            }
+            self.strategy.observe(&acc.emitted, out.row(acc.row));
+
+            res.calls += 1;
+            for &t in &acc.emitted {
+                seq.push(t);
+                res.tokens.push(t);
+                if res.tokens.len() >= self.cfg.max_new_tokens {
+                    break;
+                }
+            }
+        }
+        res.decode_time = tdec.elapsed();
+        Ok(res)
+    }
+}
+
+/// Duplicate the last row (or an empty-draft row) until the batch has
+/// exactly k rows — the verification executable's shape is fixed.
+fn pad_batch(batch: &mut DraftBatch, k: usize) {
+    batch.rows.truncate(k);
+    while batch.rows.len() < k {
+        let clone = batch
+            .rows
+            .last()
+            .map(|r| r.tokens.clone())
+            .unwrap_or_default();
+        batch.push(clone, StrategyKind::Empty, batch.rows.len());
+    }
+}
+
+fn count_kind(batch: &DraftBatch, kind: StrategyKind) -> usize {
+    batch.rows.iter().filter(|r| r.kind == kind).count()
+}
+
+/// Plain greedy decoding = speculation with (k, w) = (1, 0). Provided as
+/// the wall-time baseline for every speedup number in the benches.
+pub fn greedy_config(max_new_tokens: usize) -> EngineConfig {
+    EngineConfig { k: 1, w: 0, q: 1, max_new_tokens }
+}
+
+/// A strategy that never proposes anything (used for the greedy baseline).
+pub struct NoDraft;
+
+impl DraftStrategy for NoDraft {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn propose(&mut self, _seq: &[TokenId], _k: usize, _batch: &mut DraftBatch) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::draft::DraftRow;
+
+    #[test]
+    fn pad_batch_fills_to_k() {
+        let mut b = DraftBatch::new(2);
+        b.push(vec![1, 2], StrategyKind::ContextNgram, 0);
+        pad_batch(&mut b, 3);
+        assert_eq!(b.rows.len(), 3);
+        assert_eq!(b.rows[2].tokens, vec![1, 2]);
+        assert_eq!(b.rows[2].kind, StrategyKind::Empty);
+    }
+
+    #[test]
+    fn pad_batch_truncates_overfull() {
+        let mut b = DraftBatch::new(1);
+        for i in 0..5 {
+            b.push(vec![i], StrategyKind::ContextNgram, i as usize);
+        }
+        pad_batch(&mut b, 2);
+        assert_eq!(b.rows.len(), 2);
+    }
+
+    #[test]
+    fn pad_empty_batch() {
+        let mut b = DraftBatch::new(3);
+        pad_batch(&mut b, 2);
+        assert_eq!(b.rows.len(), 2);
+        assert!(b.rows.iter().all(|r: &DraftRow| r.tokens.is_empty()));
+    }
+}

@@ -1,0 +1,297 @@
+//! KV-cache management (paper Appendix D, adapted).
+//!
+//! The paper batches by repeating the context KV `k` times and overwriting
+//! all rows with the accepted row after verification. Because the k rows
+//! share the context *exactly*, this repo keeps a single **shared** context
+//! cache (batch dim 1) and lets the verification kernel treat it as shared
+//! (bifurcated attention); only the (w+1)-long speculative tails are
+//! per-row, and committing a step means copying the accepted row's tail
+//! into the shared cache — the "overwrite all rows / broadcast from k=1"
+//! dance collapses into a memcpy.
+//!
+//! Layout matches the L2 model: (layers, max_len, heads, head_dim) f32,
+//! row-major. `SharedKvCache` lives in host memory (CPU PJRT device memory
+//! *is* host memory) and is marshalled per call by the runtime.
+
+use anyhow::{anyhow, Result};
+
+/// Shared-context KV cache for a single sequence.
+#[derive(Debug, Clone)]
+pub struct SharedKvCache {
+    pub k_data: Vec<f32>,
+    pub v_data: Vec<f32>,
+    pub layers: usize,
+    pub max_len: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    /// number of valid positions (tokens whose KV is committed)
+    pub len: usize,
+}
+
+impl SharedKvCache {
+    pub fn new(layers: usize, max_len: usize, heads: usize, head_dim: usize) -> Self {
+        let n = layers * max_len * heads * head_dim;
+        SharedKvCache {
+            k_data: vec![0.0; n],
+            v_data: vec![0.0; n],
+            layers,
+            max_len,
+            heads,
+            head_dim,
+            len: 0,
+        }
+    }
+
+    /// Elements per cached position within one layer.
+    #[inline]
+    pub fn pos_stride(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// Elements per layer.
+    #[inline]
+    pub fn layer_stride(&self) -> usize {
+        self.max_len * self.pos_stride()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.k_data.len()
+    }
+
+    /// Remaining capacity in positions.
+    pub fn remaining(&self) -> usize {
+        self.max_len - self.len
+    }
+
+    /// Install a freshly prefetched cache (from the prefill executable's
+    /// output) and set the valid length.
+    pub fn install(&mut self, k_data: Vec<f32>, v_data: Vec<f32>, len: usize) -> Result<()> {
+        if k_data.len() != self.numel() || v_data.len() != self.numel() {
+            return Err(anyhow!(
+                "cache install size mismatch: got {} / {}, want {}",
+                k_data.len(),
+                v_data.len(),
+                self.numel()
+            ));
+        }
+        if len > self.max_len {
+            return Err(anyhow!("cache len {len} > max_len {}", self.max_len));
+        }
+        self.k_data = k_data;
+        self.v_data = v_data;
+        self.len = len;
+        Ok(())
+    }
+
+    /// Commit `count` positions from the accepted row of a step's KV tail.
+    ///
+    /// Tails are shaped (layers, k_rows, w1, heads, head_dim); this copies
+    /// `tail[layer][row][0..count]` into positions `len .. len+count` of
+    /// every layer and advances `len`.
+    pub fn commit_tail(
+        &mut self,
+        k_tail: &[f32],
+        v_tail: &[f32],
+        k_rows: usize,
+        w1: usize,
+        row: usize,
+        count: usize,
+    ) -> Result<()> {
+        if row >= k_rows || count > w1 {
+            return Err(anyhow!("bad commit row={row}/{k_rows} count={count}/{w1}"));
+        }
+        if self.len + count > self.max_len {
+            return Err(anyhow!(
+                "cache overflow: len {} + commit {} > max_len {}",
+                self.len,
+                count,
+                self.max_len
+            ));
+        }
+        let ps = self.pos_stride();
+        let expect = self.layers * k_rows * w1 * ps;
+        if k_tail.len() != expect || v_tail.len() != expect {
+            return Err(anyhow!(
+                "tail size mismatch: got {}, want {expect}",
+                k_tail.len()
+            ));
+        }
+        for layer in 0..self.layers {
+            let src_base = (layer * k_rows + row) * w1 * ps;
+            let dst_base = layer * self.layer_stride() + self.len * ps;
+            let n = count * ps;
+            self.k_data[dst_base..dst_base + n]
+                .copy_from_slice(&k_tail[src_base..src_base + n]);
+            self.v_data[dst_base..dst_base + n]
+                .copy_from_slice(&v_tail[src_base..src_base + n]);
+        }
+        self.len += count;
+        Ok(())
+    }
+
+    /// Rewind to a shorter length (used by failure-injection tests and
+    /// prefix-reuse). KV data beyond `len` becomes garbage-but-masked.
+    pub fn truncate(&mut self, len: usize) -> Result<()> {
+        if len > self.len {
+            return Err(anyhow!("cannot truncate {} -> {len}", self.len));
+        }
+        self.len = len;
+        Ok(())
+    }
+}
+
+/// Block-table paged allocator for multi-request serving (vLLM-style).
+///
+/// The serving layer holds many sequences; each grabs fixed-size blocks of
+/// cache slots on demand. This bounds memory and lets the scheduler admit
+/// requests by block budget rather than worst-case max_len.
+#[derive(Debug)]
+pub struct PagedAllocator {
+    block_size: usize,
+    free: Vec<usize>,
+    total_blocks: usize,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct BlockTable {
+    pub blocks: Vec<usize>,
+    pub len: usize,
+}
+
+impl PagedAllocator {
+    pub fn new(total_blocks: usize, block_size: usize) -> Self {
+        PagedAllocator {
+            block_size,
+            free: (0..total_blocks).rev().collect(),
+            total_blocks,
+        }
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_blocks(&self) -> usize {
+        self.total_blocks - self.free.len()
+    }
+
+    /// Blocks needed to hold `tokens` positions.
+    pub fn blocks_for(&self, tokens: usize) -> usize {
+        tokens.div_ceil(self.block_size)
+    }
+
+    /// Grow `table` so it can hold `new_len` positions. Fails (leaving the
+    /// table untouched) if not enough free blocks — the scheduler treats
+    /// that as backpressure.
+    pub fn grow(&mut self, table: &mut BlockTable, new_len: usize) -> Result<()> {
+        let need = self.blocks_for(new_len);
+        if need > table.blocks.len() {
+            let extra = need - table.blocks.len();
+            if extra > self.free.len() {
+                return Err(anyhow!(
+                    "out of cache blocks: need {extra}, free {}",
+                    self.free.len()
+                ));
+            }
+            for _ in 0..extra {
+                table.blocks.push(self.free.pop().unwrap());
+            }
+        }
+        table.len = new_len;
+        Ok(())
+    }
+
+    /// Release all blocks of a finished sequence.
+    pub fn release(&mut self, table: &mut BlockTable) {
+        self.free.append(&mut table.blocks);
+        table.len = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> SharedKvCache {
+        SharedKvCache::new(2, 8, 2, 4)
+    }
+
+    #[test]
+    fn commit_places_rows_correctly() {
+        let mut c = mk();
+        c.len = 3;
+        let (layers, k_rows, w1, ps) = (2, 3, 2, c.pos_stride());
+        let n = layers * k_rows * w1 * ps;
+        // tail values encode (layer, row, pos) so placement is checkable
+        let k_tail: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let v_tail: Vec<f32> = (0..n).map(|i| (i as f32) * 10.0).collect();
+        c.commit_tail(&k_tail, &v_tail, k_rows, w1, 1, 2).unwrap();
+        assert_eq!(c.len, 5);
+        // layer 0, committed position 3 == tail[layer=0][row=1][pos=0]
+        let src = (0 * k_rows + 1) * w1 * ps;
+        let dst = 0 * c.layer_stride() + 3 * ps;
+        assert_eq!(&c.k_data[dst..dst + ps], &k_tail[src..src + ps]);
+        // layer 1, committed position 4 == tail[layer=1][row=1][pos=1]
+        let src = ((1 * k_rows + 1) * w1 + 1) * ps;
+        let dst = 1 * c.layer_stride() + 4 * ps;
+        assert_eq!(&c.v_data[dst..dst + ps], &v_tail[src..src + ps]);
+    }
+
+    #[test]
+    fn commit_overflow_rejected() {
+        let mut c = mk();
+        c.len = 7;
+        let ps = c.pos_stride();
+        let n = 2 * 1 * 2 * ps;
+        let t = vec![0.0; n];
+        assert!(c.commit_tail(&t, &t, 1, 2, 0, 2).is_err());
+        assert_eq!(c.len, 7, "failed commit must not advance len");
+    }
+
+    #[test]
+    fn bad_row_rejected() {
+        let mut c = mk();
+        let ps = c.pos_stride();
+        let t = vec![0.0; 2 * 2 * 2 * ps];
+        assert!(c.commit_tail(&t, &t, 2, 2, 2, 1).is_err());
+    }
+
+    #[test]
+    fn truncate() {
+        let mut c = mk();
+        c.len = 5;
+        c.truncate(2).unwrap();
+        assert_eq!(c.len, 2);
+        assert!(c.truncate(3).is_err());
+    }
+
+    #[test]
+    fn paged_allocator_backpressure() {
+        let mut a = PagedAllocator::new(4, 16);
+        let mut t1 = BlockTable::default();
+        let mut t2 = BlockTable::default();
+        a.grow(&mut t1, 33).unwrap(); // 3 blocks
+        assert_eq!(a.free_blocks(), 1);
+        assert!(a.grow(&mut t2, 17).is_err()); // needs 2, only 1 free
+        assert_eq!(t2.blocks.len(), 0);
+        a.release(&mut t1);
+        assert_eq!(a.free_blocks(), 4);
+        a.grow(&mut t2, 17).unwrap();
+        assert_eq!(a.used_blocks(), 2);
+    }
+
+    #[test]
+    fn grow_is_idempotent_within_block() {
+        let mut a = PagedAllocator::new(4, 16);
+        let mut t = BlockTable::default();
+        a.grow(&mut t, 5).unwrap();
+        a.grow(&mut t, 10).unwrap();
+        assert_eq!(t.blocks.len(), 1);
+        a.grow(&mut t, 17).unwrap();
+        assert_eq!(t.blocks.len(), 2);
+    }
+}

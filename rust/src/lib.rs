@@ -1,0 +1,30 @@
+//! # N-Grammys: learning-free batched speculative decoding
+//!
+//! Production-style reproduction of *"The N-Grammys: Accelerating
+//! Autoregressive Inference with Learning-Free Batched Speculation"*
+//! (Stewart et al., 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — serving coordinator: draft strategies
+//!   ([`draft`]), batched guess-and-verify engine ([`engine`]), KV-cache
+//!   management ([`kvcache`]), request scheduling ([`scheduler`]), HTTP
+//!   serving ([`server`]), the accelerator cost model ([`costmodel`]) and
+//!   the paper's bench harness ([`bench`]).
+//! - **L2/L1 (python, build-time only)** — JAX transformer + Pallas
+//!   kernels, AOT-lowered to HLO text and executed through [`runtime`]
+//!   (PJRT CPU client). Python never runs on the request path.
+//!
+//! Start with [`engine::SpecDecoder`] or `examples/quickstart.rs`.
+
+pub mod bench;
+pub mod config;
+pub mod costmodel;
+pub mod draft;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod runtime;
+pub mod scheduler;
+pub mod server;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,221 @@
+//! ngrammys — CLI for the N-Grammys serving stack.
+//!
+//! Subcommands:
+//!   serve      start the HTTP serving front-end
+//!   generate   one-shot generation from a prompt
+//!   bench      reproduce the paper's tables/figures
+//!   info       print manifest / artifact summary
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use ngrammys::bench::{self, BenchCtx};
+use ngrammys::config::{default_artifacts_dir, EngineConfig, Manifest, ServeConfig};
+use ngrammys::scheduler::{Scheduler, StrategyName};
+use ngrammys::server::Server;
+use ngrammys::tokenizer::BpeTokenizer;
+use ngrammys::util::cli::Args;
+
+const USAGE: &str = "\
+ngrammys — learning-free batched speculative decoding (N-Grammys)
+
+USAGE:
+  ngrammys <command> [--artifacts DIR] [options]
+
+COMMANDS:
+  info                        artifact & model summary
+  generate --prompt TEXT      one-shot generation
+      [--model base] [--k 10] [--w 10] [--q 1] [--strategy mixed]
+      [--max-tokens 64] [--compare]
+  serve                       HTTP server (POST /generate, GET /metrics)
+      [--model base] [--addr 127.0.0.1:8077] [--workers 1]
+  bench <target>              reproduce a paper table/figure:
+      fig1                    phase-transition heatmaps (cost model)
+      fig2                    tokens/call vs top-k  [--model base]
+      table1                  the headline table    [--models small,base,large]
+      grid                    figs 3/5/6/7/8/9      [--model base]
+      fig4                    s5.2 ablations        [--model base]
+      qsweep                  footnote-4 q sweep    [--model base]
+      ablation-alloc          allocation-policy ablation
+      ablation-hardware       OTB-threshold sensitivity (footnote 5)
+      all                     everything above
+      common: [--prompts N] [--max-new N] [--ks 1,5,10] [--ws 2,6,10]
+";
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&["compare", "help", "traces"]).map_err(|e| anyhow!(e))?;
+    if args.has_flag("help") || args.positional.is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    let artifacts = PathBuf::from(
+        args.get_or("artifacts", default_artifacts_dir().to_str().unwrap()));
+
+    match args.positional[0].as_str() {
+        "info" => info(&artifacts),
+        "generate" => generate(&artifacts, &args),
+        "serve" => serve(&artifacts, &args),
+        "bench" => bench_cmd(&artifacts, &args),
+        other => Err(anyhow!("unknown command '{other}'\n{USAGE}")),
+    }
+}
+
+fn info(artifacts: &PathBuf) -> Result<()> {
+    let m = Manifest::load(artifacts)?;
+    println!("artifacts: {:?}", m.root);
+    println!("vocab: {}", m.vocab_size);
+    println!("tasks: {:?}", m.data.keys().collect::<Vec<_>>());
+    let mut names: Vec<_> = m.models.keys().collect();
+    names.sort();
+    for name in names {
+        let a = &m.models[name];
+        let mut buckets: Vec<_> = a.prefills.keys().collect();
+        buckets.sort();
+        println!(
+            "model '{}' (~{}): {} params, d={}, layers={}, heads={}, \
+             {} step shapes, prefill {:?}, train loss {:.3}",
+            name,
+            a.dims.analog,
+            a.dims.n_params,
+            a.dims.d_model,
+            a.dims.n_layers,
+            a.dims.n_heads,
+            a.steps.len(),
+            buckets,
+            a.train_final_loss,
+        );
+    }
+    Ok(())
+}
+
+fn generate(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let manifest = Manifest::load(artifacts)?;
+    let model = args.get_or("model", "base");
+    let prompt_text = args
+        .get("prompt")
+        .ok_or_else(|| anyhow!("--prompt required"))?;
+    let engine = EngineConfig {
+        k: args.get_usize("k", 10).map_err(|e| anyhow!(e))?,
+        w: args.get_usize("w", 10).map_err(|e| anyhow!(e))?,
+        q: args.get_usize("q", 1).map_err(|e| anyhow!(e))?,
+        max_new_tokens: args.get_usize("max-tokens", 64).map_err(|e| anyhow!(e))?,
+    };
+    let strategy = StrategyName::parse(args.get_or("strategy", "mixed"))?;
+
+    let ctx = BenchCtx::load(manifest, model)?;
+    let prompt = ctx.tokenizer.encode(prompt_text);
+    let run = |strat: StrategyName, eng: EngineConfig| -> Result<_> {
+        let s = ngrammys::scheduler::make_strategy(strat, &ctx.tables, eng.q);
+        let mut dec = ngrammys::engine::SpecDecoder::new(&ctx.runtime, s, eng);
+        let t = std::time::Instant::now();
+        let r = dec.generate(&prompt)?;
+        Ok((r, t.elapsed()))
+    };
+
+    let (r, dt) = run(strategy, engine.clone())?;
+    println!("{}", ctx.tokenizer.decode(&r.tokens));
+    eprintln!(
+        "\n[{} tokens, {} calls, {:.2} tok/call, {:.0} ms total ({:.1} tok/s)]",
+        r.tokens.len(),
+        r.calls,
+        r.tokens_per_call(),
+        dt.as_secs_f64() * 1e3,
+        r.tokens.len() as f64 / r.decode_time.as_secs_f64().max(1e-9),
+    );
+    if args.has_flag("compare") {
+        let (g, gdt) = run(StrategyName::None, ngrammys::engine::greedy_config(
+            engine.max_new_tokens))?;
+        assert_eq!(g.tokens, r.tokens,
+                   "INVARIANT VIOLATION: speculative != greedy stream");
+        eprintln!(
+            "[greedy: {} calls, {:.0} ms — identical output verified; cpu speedup {:.2}x]",
+            g.calls,
+            gdt.as_secs_f64() * 1e3,
+            g.decode_time.as_secs_f64() / r.decode_time.as_secs_f64(),
+        );
+    }
+    Ok(())
+}
+
+fn serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let manifest = Manifest::load(artifacts)?;
+    let model = args.get_or("model", "base");
+    let cfg = ServeConfig {
+        addr: args.get_or("addr", "127.0.0.1:8077").to_string(),
+        workers: args.get_usize("workers", 1).map_err(|e| anyhow!(e))?,
+        queue_cap: args.get_usize("queue-cap", 256).map_err(|e| anyhow!(e))?,
+        default_engine: EngineConfig {
+            k: args.get_usize("k", 10).map_err(|e| anyhow!(e))?,
+            w: args.get_usize("w", 10).map_err(|e| anyhow!(e))?,
+            q: args.get_usize("q", 1).map_err(|e| anyhow!(e))?,
+            max_new_tokens: args.get_usize("max-tokens", 64).map_err(|e| anyhow!(e))?,
+        },
+    };
+    let scheduler = Arc::new(Scheduler::start(&manifest, model, &cfg)?);
+    let tokenizer = Arc::new(BpeTokenizer::load(&manifest.tokenizer_path)?);
+    Server { scheduler, tokenizer, cfg }.run()
+}
+
+fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let target = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or_else(|| anyhow!("bench target required\n{USAGE}"))?;
+    let manifest = Manifest::load(artifacts)?;
+    let n_prompts = args.get_usize("prompts", 10).map_err(|e| anyhow!(e))?;
+    let max_new = args.get_usize("max-new", 48).map_err(|e| anyhow!(e))?;
+    let model = args.get_or("model", "base");
+    let ks = args
+        .get_usize_list("ks", &bench::grid::GRID_KS)
+        .map_err(|e| anyhow!(e))?;
+    let ws = args
+        .get_usize_list("ws", &bench::grid::GRID_WS)
+        .map_err(|e| anyhow!(e))?;
+
+    let load = || BenchCtx::load(manifest.clone(), model);
+    match target {
+        "fig1" => bench::fig1::run(Some(&load()?)),
+        "fig2" => bench::fig2::run(&load()?, n_prompts, max_new),
+        "fig4" => bench::fig4::run(&load()?, n_prompts, max_new),
+        "grid" => bench::grid::run(&load()?, n_prompts, max_new, &ks, &ws).map(|_| ()),
+        "qsweep" => bench::qsweep::run_qsweep(&load()?, n_prompts, max_new),
+        "ablation-alloc" => bench::qsweep::run_alloc_ablation(&load()?, n_prompts, max_new),
+        "ablation-hardware" => bench::qsweep::run_hardware_ablation(&load()?, n_prompts, max_new),
+        "table1" => {
+            let models: Vec<String> = args
+                .get_or("models", "small,base,large")
+                .split(',')
+                .map(|s| s.to_string())
+                .collect();
+            let mrefs: Vec<&str> = models.iter().map(|s| s.as_str()).collect();
+            bench::table1::run(&manifest, &mrefs, n_prompts, max_new, &ks, &ws)
+        }
+        "all" => {
+            let ctx = load()?;
+            bench::fig1::run(Some(&ctx))?;
+            bench::fig2::run(&ctx, n_prompts, max_new)?;
+            bench::fig4::run(&ctx, n_prompts, max_new)?;
+            bench::qsweep::run_qsweep(&ctx, n_prompts, max_new)?;
+            bench::qsweep::run_alloc_ablation(&ctx, n_prompts, max_new)?;
+            bench::qsweep::run_hardware_ablation(&ctx, n_prompts, max_new)?;
+            drop(ctx);
+            for m in ["small", "base", "large"] {
+                let c = BenchCtx::load(manifest.clone(), m)?;
+                bench::grid::run(&c, n_prompts, max_new, &ks, &ws)?;
+            }
+            bench::table1::run(&manifest, &["small", "base", "large"],
+                               n_prompts, max_new, &ks, &ws)
+        }
+        other => Err(anyhow!("unknown bench target '{other}'\n{USAGE}")),
+    }
+}

@@ -1,0 +1,177 @@
+//! Serving metrics: thread-safe counters + latency histograms, rendered in
+//! a Prometheus-ish text format at GET /metrics.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Exponential-bucket latency histogram (microseconds).
+#[derive(Debug)]
+pub struct LatencyHist {
+    /// bucket i counts observations <= 1µs * 2^i (last bucket = overflow)
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl LatencyHist {
+    pub fn new() -> Self {
+        LatencyHist {
+            buckets: (0..32).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / c as f64
+        }
+    }
+
+    /// Approximate quantile from the exponential buckets (upper bound).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            acc += b.load(Ordering::Relaxed);
+            if acc >= target {
+                return (1u64 << i) as f64;
+            }
+        }
+        (1u64 << (self.buckets.len() - 1)) as f64
+    }
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// All serving-level metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_total: AtomicU64,
+    pub requests_rejected: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub verify_calls: AtomicU64,
+    pub drafts_accepted: AtomicU64,
+    pub request_latency: LatencyHistDefault,
+    pub step_latency: LatencyHistDefault,
+    pub queue_depth: AtomicU64,
+    /// last N per-request summaries for debugging (bounded)
+    pub recent: Mutex<Vec<String>>,
+}
+
+// work around Default for LatencyHist in struct derive
+#[derive(Debug, Default)]
+pub struct LatencyHistDefault(pub LatencyHist);
+
+impl std::ops::Deref for LatencyHistDefault {
+    type Target = LatencyHist;
+    fn deref(&self) -> &LatencyHist {
+        &self.0
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self, latency: Duration, tokens: usize, calls: usize, accepted: usize) {
+        self.requests_completed.fetch_add(1, Ordering::Relaxed);
+        self.tokens_generated.fetch_add(tokens as u64, Ordering::Relaxed);
+        self.verify_calls.fetch_add(calls as u64, Ordering::Relaxed);
+        self.drafts_accepted.fetch_add(accepted as u64, Ordering::Relaxed);
+        self.request_latency.observe(latency);
+    }
+
+    /// Observed tokens-per-call across all requests (the paper's metric,
+    /// aggregated).
+    pub fn tokens_per_call(&self) -> f64 {
+        let calls = self.verify_calls.load(Ordering::Relaxed);
+        if calls == 0 {
+            0.0
+        } else {
+            self.tokens_generated.load(Ordering::Relaxed) as f64 / calls as f64
+        }
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let c = |n: &AtomicU64| n.load(Ordering::Relaxed);
+        s.push_str(&format!("ngrammys_requests_total {}\n", c(&self.requests_total)));
+        s.push_str(&format!("ngrammys_requests_rejected {}\n", c(&self.requests_rejected)));
+        s.push_str(&format!("ngrammys_requests_completed {}\n", c(&self.requests_completed)));
+        s.push_str(&format!("ngrammys_tokens_generated {}\n", c(&self.tokens_generated)));
+        s.push_str(&format!("ngrammys_verify_calls {}\n", c(&self.verify_calls)));
+        s.push_str(&format!("ngrammys_tokens_per_call {:.4}\n", self.tokens_per_call()));
+        s.push_str(&format!("ngrammys_queue_depth {}\n", c(&self.queue_depth)));
+        s.push_str(&format!(
+            "ngrammys_request_latency_ms_mean {:.3}\n",
+            self.request_latency.mean_us() / 1e3
+        ));
+        s.push_str(&format!(
+            "ngrammys_request_latency_ms_p50 {:.3}\n",
+            self.request_latency.quantile_us(0.5) / 1e3
+        ));
+        s.push_str(&format!(
+            "ngrammys_request_latency_ms_p99 {:.3}\n",
+            self.request_latency.quantile_us(0.99) / 1e3
+        ));
+        s.push_str(&format!(
+            "ngrammys_step_latency_ms_mean {:.3}\n",
+            self.step_latency.mean_us() / 1e3
+        ));
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = LatencyHist::new();
+        for ms in [1u64, 1, 1, 1, 1, 1, 1, 1, 1, 100] {
+            h.observe(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 10);
+        assert!(h.quantile_us(0.5) <= 2048.0);
+        assert!(h.quantile_us(0.99) >= 65536.0);
+        assert!((h.mean_us() - (9.0 * 1000.0 + 100_000.0) / 10.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn tokens_per_call_aggregates() {
+        let m = Metrics::new();
+        m.record_request(Duration::from_millis(5), 30, 10, 20);
+        m.record_request(Duration::from_millis(5), 10, 10, 0);
+        assert!((m.tokens_per_call() - 2.0).abs() < 1e-9);
+        let r = m.render();
+        assert!(r.contains("ngrammys_tokens_per_call 2.0000"));
+    }
+}

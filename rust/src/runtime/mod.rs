@@ -1,0 +1,313 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
+//! CPU PJRT client (`xla` crate). This is the ONLY place python output
+//! crosses into the serving process, and it happens at load time.
+//!
+//! Design notes:
+//! - Interchange is HLO **text** (jax >= 0.5 serialized protos use 64-bit
+//!   instruction ids that xla_extension 0.5.1 rejects; the text parser
+//!   reassigns ids — see /opt/xla-example/README.md).
+//! - Model weights are uploaded ONCE as device buffers; per-call arguments
+//!   (tokens, KV cache, cache_len) are marshalled per step via
+//!   `buffer_from_host_buffer` and everything runs through `execute_b`.
+//! - Executables for each (k, w) shape are compiled lazily on first use
+//!   and cached for the life of the process.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::config::ModelArtifacts;
+use crate::kvcache::SharedKvCache;
+use crate::tokenizer::TokenId;
+
+/// Output of one verification step.
+#[derive(Debug)]
+pub struct StepOutput {
+    /// greedy next-token ids, row-major (k, w+1)
+    pub next_ids: Vec<TokenId>,
+    pub k: usize,
+    pub w1: usize,
+    /// KV tails, (layers, k, w1, heads, head_dim) flattened
+    pub k_tail: Vec<f32>,
+    pub v_tail: Vec<f32>,
+    /// wall time of the device call (execute + output fetch)
+    pub exec_time: Duration,
+}
+
+impl StepOutput {
+    /// Model outputs for row r: out[i] = prediction after consuming block
+    /// position i.
+    pub fn row(&self, r: usize) -> &[TokenId] {
+        &self.next_ids[r * self.w1..(r + 1) * self.w1]
+    }
+}
+
+/// Output of a prefill call.
+#[derive(Debug)]
+pub struct PrefillOutput {
+    pub next_id: TokenId,
+    pub exec_time: Duration,
+}
+
+/// A loaded model: weights on device + lazily compiled executables.
+pub struct ModelRuntime {
+    client: PjRtClient,
+    art: ModelArtifacts,
+    params: Vec<PjRtBuffer>,
+    steps: RefCell<HashMap<(usize, usize), PjRtLoadedExecutable>>,
+    prefills: RefCell<HashMap<usize, PjRtLoadedExecutable>>,
+    /// cumulative compile time (reported by the bench harnesses)
+    pub compile_time: RefCell<Duration>,
+}
+
+// SAFETY: the PJRT CPU client is thread-safe for compilation and execution
+// (PJRT C API contract); the RefCell caches are never shared across threads
+// without external synchronization — the serving layer wraps ModelRuntime
+// in a Mutex.
+unsafe impl Send for ModelRuntime {}
+
+impl ModelRuntime {
+    pub fn load(art: &ModelArtifacts) -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Self::load_with_client(client, art)
+    }
+
+    pub fn load_with_client(client: PjRtClient, art: &ModelArtifacts) -> Result<Self> {
+        let params = upload_params(&client, art)?;
+        Ok(ModelRuntime {
+            client,
+            art: art.clone(),
+            params,
+            steps: RefCell::new(HashMap::new()),
+            prefills: RefCell::new(HashMap::new()),
+            compile_time: RefCell::new(Duration::ZERO),
+        })
+    }
+
+    pub fn artifacts(&self) -> &ModelArtifacts {
+        &self.art
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    fn compile(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let t = Instant::now();
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        *self.compile_time.borrow_mut() += t.elapsed();
+        Ok(exe)
+    }
+
+    /// Ensure the (k, w) step executable is compiled (startup warming).
+    pub fn warm_step(&self, k: usize, w: usize) -> Result<()> {
+        let mut steps = self.steps.borrow_mut();
+        if !steps.contains_key(&(k, w)) {
+            let path = self
+                .art
+                .steps
+                .get(&(k, w))
+                .ok_or_else(|| anyhow!("no step artifact for (k={k}, w={w})"))?;
+            let exe = self.compile(path)?;
+            steps.insert((k, w), exe);
+        }
+        Ok(())
+    }
+
+    pub fn warm_prefill(&self, bucket: usize) -> Result<()> {
+        let mut pf = self.prefills.borrow_mut();
+        if !pf.contains_key(&bucket) {
+            let path = self
+                .art
+                .prefills
+                .get(&bucket)
+                .ok_or_else(|| anyhow!("no prefill bucket {bucket}"))?;
+            let exe = self.compile(path)?;
+            pf.insert(bucket, exe);
+        }
+        Ok(())
+    }
+
+    /// Run prefill for `prompt`, filling `cache` and returning the first
+    /// greedy next-token. The prompt must fit the largest prefill bucket.
+    pub fn prefill(&self, prompt: &[TokenId], cache: &mut SharedKvCache) -> Result<PrefillOutput> {
+        if prompt.is_empty() {
+            return Err(anyhow!("empty prompt"));
+        }
+        let bucket = self
+            .art
+            .prefill_bucket(prompt.len())
+            .ok_or_else(|| anyhow!("prompt of {} tokens exceeds prefill buckets", prompt.len()))?;
+        self.warm_prefill(bucket)?;
+        let pf = self.prefills.borrow();
+        let exe = pf.get(&bucket).unwrap();
+
+        let mut toks: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
+        toks.resize(bucket, 0);
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(&toks, &[1, bucket], None)?;
+        let len_buf = self
+            .client
+            .buffer_from_host_buffer(&[prompt.len() as i32], &[], None)?;
+
+        let mut args: Vec<&PjRtBuffer> = self.params.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+
+        let t = Instant::now();
+        let result = exe.execute_b(&args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let exec_time = t.elapsed();
+
+        let outs = tuple_elements(lit)?;
+        if outs.len() != 3 {
+            return Err(anyhow!("prefill returned {} outputs, want 3", outs.len()));
+        }
+        let next_id = outs[0].to_vec::<i32>()?[0] as TokenId;
+        let kc = outs[1].to_vec::<f32>()?;
+        let vc = outs[2].to_vec::<f32>()?;
+        cache.install(kc, vc, prompt.len())?;
+        Ok(PrefillOutput { next_id, exec_time })
+    }
+
+    /// One verification call on a (k, w+1) block. `tokens` is row-major
+    /// (k, w+1): column 0 = last accepted token, columns 1.. = drafts.
+    pub fn spec_step(
+        &self,
+        k: usize,
+        w: usize,
+        tokens: &[TokenId],
+        cache: &SharedKvCache,
+    ) -> Result<StepOutput> {
+        let w1 = w + 1;
+        if tokens.len() != k * w1 {
+            return Err(anyhow!("tokens len {} != k*w1 {}", tokens.len(), k * w1));
+        }
+        if cache.len + w1 > cache.max_len {
+            return Err(anyhow!(
+                "cache too full for step: len {} + w1 {} > {}",
+                cache.len,
+                w1,
+                cache.max_len
+            ));
+        }
+        self.warm_step(k, w)?;
+        let steps = self.steps.borrow();
+        let exe = steps.get(&(k, w)).unwrap();
+
+        let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let d = &self.art.dims;
+        let cache_dims = [d.n_layers, d.max_len, d.n_heads, d.head_dim];
+        let tok_buf = self.client.buffer_from_host_buffer(&toks, &[k, w1], None)?;
+        let kc_buf = self
+            .client
+            .buffer_from_host_buffer(&cache.k_data, &cache_dims, None)?;
+        let vc_buf = self
+            .client
+            .buffer_from_host_buffer(&cache.v_data, &cache_dims, None)?;
+        let len_buf = self
+            .client
+            .buffer_from_host_buffer(&[cache.len as i32], &[], None)?;
+
+        let mut args: Vec<&PjRtBuffer> = self.params.iter().collect();
+        args.push(&tok_buf);
+        args.push(&kc_buf);
+        args.push(&vc_buf);
+        args.push(&len_buf);
+
+        let t = Instant::now();
+        let result = exe.execute_b(&args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let exec_time = t.elapsed();
+
+        let outs = tuple_elements(lit)?;
+        if outs.len() != 3 {
+            return Err(anyhow!("step returned {} outputs, want 3", outs.len()));
+        }
+        let next_ids: Vec<TokenId> = outs[0]
+            .to_vec::<i32>()?
+            .into_iter()
+            .map(|t| t as TokenId)
+            .collect();
+        let k_tail = outs[1].to_vec::<f32>()?;
+        let v_tail = outs[2].to_vec::<f32>()?;
+        Ok(StepOutput { next_ids, k, w1, k_tail, v_tail, exec_time })
+    }
+
+    /// Largest available (k', w') shape with k' <= k, w' <= w and w'+1 <=
+    /// room (used when the cache is nearly full and the block must shrink).
+    pub fn best_fitting_shape(&self, k: usize, w: usize, room: usize) -> Option<(usize, usize)> {
+        self.art
+            .steps
+            .keys()
+            .copied()
+            .filter(|&(sk, sw)| sk <= k && sw <= w && sw + 1 <= room)
+            .max_by_key(|&(sk, sw)| (sw, sk))
+    }
+}
+
+fn upload_params(client: &PjRtClient, art: &ModelArtifacts) -> Result<Vec<PjRtBuffer>> {
+    let bytes = std::fs::read(&art.params_bin)
+        .with_context(|| format!("reading params {:?}", art.params_bin))?;
+    let total: usize = art.param_spec.iter().map(|p| p.numel()).sum();
+    if bytes.len() != total * 4 {
+        return Err(anyhow!(
+            "params.bin is {} bytes, manifest expects {}",
+            bytes.len(),
+            total * 4
+        ));
+    }
+    let mut floats = vec![0f32; total];
+    for (i, c) in bytes.chunks_exact(4).enumerate() {
+        floats[i] = f32::from_le_bytes(c.try_into().unwrap());
+    }
+    let mut bufs = Vec::with_capacity(art.param_spec.len());
+    let mut off = 0;
+    for spec in &art.param_spec {
+        let n = spec.numel();
+        let buf = client
+            .buffer_from_host_buffer(&floats[off..off + n], &spec.shape, None)
+            .with_context(|| format!("uploading param {}", spec.name))?;
+        bufs.push(buf);
+        off += n;
+    }
+    Ok(bufs)
+}
+
+fn tuple_elements(lit: Literal) -> Result<Vec<Literal>> {
+    Ok(lit.to_tuple()?)
+}
+
+#[cfg(test)]
+mod tests {
+    // ModelRuntime integration tests live in rust/tests/ (they need the
+    // built artifacts); unit coverage here is limited to pure helpers.
+    use super::*;
+
+    #[test]
+    fn step_output_row_indexing() {
+        let out = StepOutput {
+            next_ids: vec![1, 2, 3, 4, 5, 6],
+            k: 2,
+            w1: 3,
+            k_tail: vec![],
+            v_tail: vec![],
+            exec_time: Duration::ZERO,
+        };
+        assert_eq!(out.row(0), &[1, 2, 3]);
+        assert_eq!(out.row(1), &[4, 5, 6]);
+    }
+}

@@ -1,0 +1,238 @@
+//! Request scheduler: bounded FIFO admission queue + worker pool.
+//!
+//! Parallelism structure mirrors the paper: the *batch dimension of a model
+//! call is spent on speculation rows for one sequence* (§3 — the paper
+//! serves at request-batch 1 and batches trajectories), so the scheduler
+//! parallelizes across requests with workers (each worker owns a
+//! ModelRuntime; PJRT executables are per-worker), and backpressure is a
+//! bounded queue: `submit` fails fast when the queue is full.
+
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{EngineConfig, Manifest, ServeConfig};
+use crate::draft::{
+    ContextNgram, DraftStrategy, ExtendedBigram, JacobiDraft, MixedStrategy, ModelBigram,
+    ModelUnigram, NgramTables, SessionNgramCache,
+};
+use crate::engine::{NoDraft, SpecDecoder};
+use crate::metrics::Metrics;
+use crate::runtime::ModelRuntime;
+use crate::tokenizer::TokenId;
+
+/// Strategy selector exposed through the API / CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StrategyName {
+    Mixed,
+    Context,
+    Bigram,
+    Unigram,
+    ExtBigram,
+    Jacobi,
+    /// online session n-gram cache (extension beyond the paper)
+    Session,
+    None,
+}
+
+impl StrategyName {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "mixed" => Self::Mixed,
+            "context" | "context-ngram" => Self::Context,
+            "bigram" | "model-bigram" => Self::Bigram,
+            "unigram" | "model-unigram" => Self::Unigram,
+            "ext-bigram" | "extended-bigram" => Self::ExtBigram,
+            "jacobi" => Self::Jacobi,
+            "session" | "session-cache" => Self::Session,
+            "none" | "greedy" => Self::None,
+            other => return Err(anyhow!("unknown strategy '{other}'")),
+        })
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Self::Mixed => "mixed",
+            Self::Context => "context",
+            Self::Bigram => "bigram",
+            Self::Unigram => "unigram",
+            Self::ExtBigram => "ext-bigram",
+            Self::Jacobi => "jacobi",
+            Self::Session => "session",
+            Self::None => "none",
+        }
+    }
+}
+
+/// Build a boxed strategy (used by workers, benches and examples alike).
+pub fn make_strategy(
+    name: StrategyName,
+    tables: &Arc<NgramTables>,
+    q: usize,
+) -> Box<dyn DraftStrategy> {
+    match name {
+        StrategyName::Mixed => Box::new(MixedStrategy::paper(tables.clone(), q)),
+        StrategyName::Context => Box::new(ContextNgram::new(q)),
+        StrategyName::Bigram => Box::new(ModelBigram::new(tables.clone())),
+        StrategyName::Unigram => Box::new(ModelUnigram::new(tables.clone())),
+        StrategyName::ExtBigram => Box::new(ExtendedBigram::new(tables.clone())),
+        StrategyName::Jacobi => Box::new(JacobiDraft::new(0)),
+        StrategyName::Session => Box::new(SessionNgramCache::new(8, 12, 100_000)),
+        StrategyName::None => Box::new(NoDraft),
+    }
+}
+
+/// One generation request.
+#[derive(Debug, Clone)]
+pub struct GenRequest {
+    pub prompt: Vec<TokenId>,
+    pub engine: EngineConfig,
+    pub strategy: StrategyName,
+}
+
+/// Completed response.
+#[derive(Debug)]
+pub struct GenResponse {
+    pub tokens: Vec<TokenId>,
+    pub tokens_per_call: f64,
+    pub calls: usize,
+    pub latency_ms: f64,
+}
+
+struct Job {
+    req: GenRequest,
+    reply: Sender<Result<GenResponse>>,
+}
+
+/// The scheduler handle: cheap to clone, submits jobs to the pool.
+pub struct Scheduler {
+    tx: SyncSender<Job>,
+    pub metrics: Arc<Metrics>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Scheduler {
+    /// Spin up `cfg.workers` workers for `model`. Each worker loads its own
+    /// ModelRuntime (PJRT executables are not shared across threads).
+    pub fn start(manifest: &Manifest, model: &str, cfg: &ServeConfig) -> Result<Scheduler> {
+        let art = manifest.model(model)?.clone();
+        let tables = Arc::new(NgramTables::load(&art)?);
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = sync_channel::<Job>(cfg.queue_cap);
+        let rx = Arc::new(Mutex::new(rx));
+
+        let mut workers = Vec::new();
+        for wid in 0..cfg.workers.max(1) {
+            let rx = rx.clone();
+            let art = art.clone();
+            let tables = tables.clone();
+            let metrics = metrics.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("ngrammys-worker-{wid}"))
+                .spawn(move || {
+                    let runtime = match ModelRuntime::load(&art) {
+                        Ok(rt) => rt,
+                        Err(e) => {
+                            eprintln!("worker {wid}: runtime load failed: {e:#}");
+                            return;
+                        }
+                    };
+                    worker_loop(wid, runtime, tables, metrics, rx);
+                })
+                .expect("spawning worker");
+            workers.push(handle);
+        }
+        Ok(Scheduler { tx, metrics, workers })
+    }
+
+    /// Non-blocking admission; `Err` = queue full (backpressure).
+    pub fn submit(&self, req: GenRequest) -> Result<Receiver<Result<GenResponse>>> {
+        self.metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        match self.tx.try_send(Job { req, reply: reply_tx }) {
+            Ok(()) => {
+                self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+                Ok(reply_rx)
+            }
+            Err(TrySendError::Full(_)) => {
+                self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                Err(anyhow!("queue full"))
+            }
+            Err(TrySendError::Disconnected(_)) => Err(anyhow!("scheduler stopped")),
+        }
+    }
+
+    /// Submit and wait (convenience for tests/examples).
+    pub fn generate(&self, req: GenRequest) -> Result<GenResponse> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| anyhow!("worker dropped"))?
+    }
+
+    /// Graceful shutdown: close the queue and join workers.
+    pub fn shutdown(self) {
+        drop(self.tx);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    _wid: usize,
+    runtime: ModelRuntime,
+    tables: Arc<NgramTables>,
+    metrics: Arc<Metrics>,
+    rx: Arc<Mutex<Receiver<Job>>>,
+) {
+    loop {
+        // hold the lock only while dequeuing
+        let job = match rx.lock().unwrap().recv() {
+            Ok(j) => j,
+            Err(_) => return, // scheduler dropped
+        };
+        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        let t = Instant::now();
+        let strategy = make_strategy(job.req.strategy, &tables, job.req.engine.q);
+        let mut dec = SpecDecoder::new(&runtime, strategy, job.req.engine.clone());
+        dec.collect_traces = true; // feeds the step-latency histogram
+        let result = dec.generate(&job.req.prompt).map(|r| {
+            let accepted = r.tokens.len().saturating_sub(r.calls);
+            metrics.record_request(t.elapsed(), r.tokens.len(), r.calls, accepted);
+            for tr in &r.traces {
+                metrics.step_latency.observe(tr.exec_time);
+            }
+            GenResponse {
+                tokens_per_call: r.tokens_per_call(),
+                calls: r.calls,
+                latency_ms: t.elapsed().as_secs_f64() * 1e3,
+                tokens: r.tokens,
+            }
+        });
+        let _ = job.reply.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_names_parse() {
+        for (s, n) in [
+            ("mixed", StrategyName::Mixed),
+            ("context", StrategyName::Context),
+            ("bigram", StrategyName::Bigram),
+            ("unigram", StrategyName::Unigram),
+            ("ext-bigram", StrategyName::ExtBigram),
+            ("jacobi", StrategyName::Jacobi),
+            ("greedy", StrategyName::None),
+        ] {
+            assert_eq!(StrategyName::parse(s).unwrap(), n);
+        }
+        assert!(StrategyName::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,204 @@
+//! Minimal HTTP/1.1 serving front-end on std::net (no tokio/hyper offline).
+//!
+//! Endpoints:
+//!   POST /generate   {"prompt": str, "max_tokens"?: int, "k"?: int,
+//!                     "w"?: int, "strategy"?: str}
+//!                 -> {"text": str, "tokens": int, "tokens_per_call": f,
+//!                     "calls": int, "latency_ms": f}
+//!   GET  /metrics    prometheus-style text
+//!   GET  /healthz    "ok"
+//!
+//! One thread per connection (bounded by the scheduler's queue for actual
+//! work); keep-alive is not supported — every response closes the socket,
+//! which keeps the parser tiny and is plenty for the benchmark driver.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{EngineConfig, ServeConfig};
+use crate::scheduler::{GenRequest, Scheduler, StrategyName};
+use crate::tokenizer::BpeTokenizer;
+use crate::util::json::Json;
+
+pub struct Server {
+    pub scheduler: Arc<Scheduler>,
+    pub tokenizer: Arc<BpeTokenizer>,
+    pub cfg: ServeConfig,
+}
+
+impl Server {
+    /// Blocking accept loop. Binds `cfg.addr`; call from main.
+    pub fn run(self) -> Result<()> {
+        let listener = TcpListener::bind(&self.cfg.addr)?;
+        eprintln!("ngrammys serving on http://{}", self.cfg.addr);
+        let me = Arc::new(self);
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            let me = me.clone();
+            std::thread::spawn(move || {
+                if let Err(e) = me.handle(stream) {
+                    eprintln!("connection error: {e:#}");
+                }
+            });
+        }
+        Ok(())
+    }
+
+    /// Bind and serve in a background thread; returns the bound address
+    /// (useful with port 0 in tests).
+    pub fn spawn(self) -> Result<(std::net::SocketAddr, std::thread::JoinHandle<()>)> {
+        let listener = TcpListener::bind(&self.cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let me = Arc::new(self);
+        let handle = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { continue };
+                let me = me.clone();
+                std::thread::spawn(move || {
+                    let _ = me.handle(stream);
+                });
+            }
+        });
+        Ok((addr, handle))
+    }
+
+    fn handle(&self, mut stream: TcpStream) -> Result<()> {
+        let req = parse_request(&mut stream)?;
+        let (status, body, ctype) = self.route(&req);
+        let resp = format!(
+            "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        stream.write_all(resp.as_bytes())?;
+        Ok(())
+    }
+
+    fn route(&self, req: &HttpRequest) -> (&'static str, String, &'static str) {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => ("200 OK", "ok\n".into(), "text/plain"),
+            ("GET", "/metrics") => {
+                ("200 OK", self.scheduler.metrics.render(), "text/plain")
+            }
+            ("POST", "/generate") => match self.generate(&req.body) {
+                Ok(j) => ("200 OK", j.to_string(), "application/json"),
+                Err(e) => (
+                    "400 Bad Request",
+                    Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
+                    "application/json",
+                ),
+            },
+            _ => ("404 Not Found", "not found\n".into(), "text/plain"),
+        }
+    }
+
+    fn generate(&self, body: &str) -> Result<Json> {
+        let j = Json::parse(body).map_err(|e| anyhow!("bad json: {e}"))?;
+        let prompt_text = j
+            .req("prompt")?
+            .as_str()
+            .ok_or_else(|| anyhow!("'prompt' must be a string"))?;
+        let d = &self.cfg.default_engine;
+        let engine = EngineConfig {
+            k: j.get("k").and_then(|v| v.as_usize()).unwrap_or(d.k),
+            w: j.get("w").and_then(|v| v.as_usize()).unwrap_or(d.w),
+            q: j.get("q").and_then(|v| v.as_usize()).unwrap_or(d.q),
+            max_new_tokens: j
+                .get("max_tokens")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(d.max_new_tokens),
+        };
+        let strategy = match j.get("strategy").and_then(|v| v.as_str()) {
+            Some(s) => StrategyName::parse(s)?,
+            None => StrategyName::Mixed,
+        };
+        let prompt = self.tokenizer.encode(prompt_text);
+        if prompt.is_empty() {
+            return Err(anyhow!("empty prompt"));
+        }
+        let resp = self.scheduler.generate(GenRequest { prompt, engine, strategy })?;
+        Ok(Json::obj(vec![
+            ("text", Json::Str(self.tokenizer.decode(&resp.tokens))),
+            ("tokens", Json::Num(resp.tokens.len() as f64)),
+            ("calls", Json::Num(resp.calls as f64)),
+            ("tokens_per_call", Json::Num(resp.tokens_per_call)),
+            ("latency_ms", Json::Num(resp.latency_ms)),
+        ]))
+    }
+}
+
+#[derive(Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: String,
+}
+
+pub fn parse_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    Ok(HttpRequest {
+        method,
+        path,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    })
+}
+
+/// Tiny blocking HTTP client for the examples / integration tests.
+pub mod client {
+    use super::*;
+
+    pub fn post(addr: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        request(addr, "POST", path, body)
+    }
+
+    pub fn get(addr: &str, path: &str) -> Result<(u16, String)> {
+        request(addr, "GET", path, "")
+    }
+
+    fn request(addr: &str, method: &str, path: &str, body: &str) -> Result<(u16, String)> {
+        let mut stream = TcpStream::connect(addr)?;
+        let req = format!(
+            "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        stream.write_all(req.as_bytes())?;
+        let mut buf = String::new();
+        BufReader::new(stream).read_to_string(&mut buf)?;
+        let status: u16 = buf
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| anyhow!("bad response"))?;
+        let body = buf
+            .split_once("\r\n\r\n")
+            .map(|(_, b)| b.to_string())
+            .unwrap_or_default();
+        Ok((status, body))
+    }
+}

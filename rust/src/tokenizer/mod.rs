@@ -1,0 +1,233 @@
+//! Byte-level BPE tokenizer: applies the merges trained by
+//! `python/compile/tokenizer.py` (shared artifact `tokenizer.json`).
+//!
+//! The piece-splitting rule MUST match the python side exactly (a word
+//! keeps one leading space; whitespace runs are their own pieces); the
+//! cross-language agreement is covered by `rust/tests/tokenizer_parity.rs`
+//! which round-trips corpus text through both implementations' artifacts.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+pub type TokenId = u32;
+
+#[derive(Debug)]
+pub struct BpeTokenizer {
+    merges: Vec<(u32, u32)>,
+    ranks: HashMap<(u32, u32), u32>,
+    expansions: Vec<Vec<u8>>,
+    pub vocab_size: usize,
+}
+
+impl BpeTokenizer {
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow!("tokenizer.json: {e}"))?;
+        if j.req("type")?.as_str() != Some("byte_bpe") {
+            return Err(anyhow!("unsupported tokenizer type"));
+        }
+        let mut merges = Vec::new();
+        for (i, m) in j.req("merges")?.as_arr().unwrap_or(&[]).iter().enumerate() {
+            let pair = m.as_arr().ok_or_else(|| anyhow!("bad merge entry"))?;
+            if pair.len() != 2 {
+                return Err(anyhow!("merge entry must have 2 ids"));
+            }
+            let (a, b) = (
+                pair[0].as_usize().unwrap_or(usize::MAX) as u32,
+                pair[1].as_usize().unwrap_or(usize::MAX) as u32,
+            );
+            // each merge may only reference bytes or earlier merge products
+            let limit = 256 + i as u32;
+            if a >= limit || b >= limit {
+                return Err(anyhow!(
+                    "merge {i} references id {} before it exists (limit {limit})",
+                    a.max(b)
+                ));
+            }
+            merges.push((a, b));
+        }
+        Ok(Self::from_merges(merges))
+    }
+
+    pub fn from_merges(merges: Vec<(u32, u32)>) -> Self {
+        let ranks = merges
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| (m, i as u32))
+            .collect();
+        let mut expansions: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        for &(a, b) in &merges {
+            let mut e = expansions[a as usize].clone();
+            e.extend_from_slice(&expansions[b as usize]);
+            expansions.push(e);
+        }
+        BpeTokenizer {
+            vocab_size: 256 + merges.len(),
+            merges,
+            ranks,
+            expansions,
+        }
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading tokenizer {path:?}"))?;
+        Self::from_json_text(&text)
+    }
+
+    pub fn n_merges(&self) -> usize {
+        self.merges.len()
+    }
+
+    fn encode_piece(&self, piece: &[u8], out: &mut Vec<TokenId>) {
+        let mut ids: Vec<u32> = piece.iter().map(|&b| b as u32).collect();
+        while ids.len() >= 2 {
+            let mut best: Option<(u32, usize)> = None;
+            for i in 0..ids.len() - 1 {
+                if let Some(&r) = self.ranks.get(&(ids[i], ids[i + 1])) {
+                    if best.map_or(true, |(br, _)| r < br) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            match best {
+                None => break,
+                Some((r, i)) => {
+                    ids[i] = 256 + r;
+                    ids.remove(i + 1);
+                }
+            }
+        }
+        out.extend(ids);
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<TokenId> {
+        let mut out = Vec::with_capacity(text.len() / 3 + 4);
+        for piece in split_pieces(text.as_bytes()) {
+            self.encode_piece(piece, &mut out);
+        }
+        out
+    }
+
+    pub fn decode(&self, ids: &[TokenId]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if let Some(e) = self.expansions.get(id as usize) {
+                bytes.extend_from_slice(e);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Byte expansion of a single token (for streaming decode).
+    pub fn token_bytes(&self, id: TokenId) -> &[u8] {
+        &self.expansions[id as usize]
+    }
+}
+
+fn is_ws(b: u8) -> bool {
+    matches!(b, 0x20 | 0x09 | 0x0A | 0x0D)
+}
+
+/// Split into pieces: `(optional single leading space) + non-ws run`, with
+/// leftover whitespace runs as their own pieces. Mirrors
+/// `python/compile/tokenizer.py::split_pieces` byte-for-byte.
+pub fn split_pieces(data: &[u8]) -> Vec<&[u8]> {
+    let mut pieces = Vec::new();
+    let n = data.len();
+    let mut i = 0;
+    while i < n {
+        let c = data[i];
+        if c == 0x20 && i + 1 < n && !is_ws(data[i + 1]) {
+            let mut j = i + 1;
+            while j < n && !is_ws(data[j]) {
+                j += 1;
+            }
+            pieces.push(&data[i..j]);
+            i = j;
+        } else if is_ws(c) {
+            let mut j = i;
+            while j < n && is_ws(data[j]) {
+                j += 1;
+            }
+            if j < n && data[j - 1] == 0x20 {
+                if j - 1 > i {
+                    pieces.push(&data[i..j - 1]);
+                }
+                i = j - 1;
+            } else {
+                pieces.push(&data[i..j]);
+                i = j;
+            }
+        } else {
+            let mut j = i;
+            while j < n && !is_ws(data[j]) {
+                j += 1;
+            }
+            pieces.push(&data[i..j]);
+            i = j;
+        }
+    }
+    pieces
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pieces_reassemble() {
+        let cases = [
+            "hello world",
+            "  leading",
+            "trailing  ",
+            "a\nb\n\n c",
+            "tabs\tand  spaces   x",
+            "",
+            " ",
+            "  ",
+        ];
+        for c in cases {
+            let pieces = split_pieces(c.as_bytes());
+            let joined: Vec<u8> = pieces.concat();
+            assert_eq!(joined, c.as_bytes(), "case {c:?} pieces {pieces:?}");
+        }
+    }
+
+    #[test]
+    fn word_keeps_leading_space() {
+        let p = split_pieces(b"a b");
+        assert_eq!(p, vec![b"a".as_ref(), b" b".as_ref()]);
+    }
+
+    #[test]
+    fn byte_fallback_roundtrip() {
+        let t = BpeTokenizer::from_merges(vec![]);
+        let ids = t.encode("héllo ☃");
+        assert_eq!(t.decode(&ids), "héllo ☃");
+        assert!(ids.iter().all(|&i| i < 256));
+    }
+
+    #[test]
+    fn merges_apply_by_rank() {
+        // merges: (h,e) -> 256, (256, l) -> 257
+        let t = BpeTokenizer::from_merges(vec![(b'h' as u32, b'e' as u32), (256, b'l' as u32)]);
+        let ids = t.encode("hell");
+        assert_eq!(ids, vec![257, b'l' as u32]);
+        assert_eq!(t.decode(&ids), "hell");
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = BpeTokenizer::from_merges(vec![(104, 101), (256, 108)]);
+        let json = format!(
+            "{{\"type\": \"byte_bpe\", \"vocab_size\": {}, \"merges\": [[104, 101], [256, 108]]}}",
+            t.vocab_size
+        );
+        let t2 = BpeTokenizer::from_json_text(&json).unwrap();
+        assert_eq!(t2.encode("hello"), t.encode("hello"));
+    }
+}

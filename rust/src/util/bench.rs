@@ -1,0 +1,133 @@
+//! Criterion-style micro-benchmark harness substrate (criterion is not
+//! available offline). Warmup + timed iterations, mean/std/median report,
+//! and a `black_box` to defeat constant folding.
+
+use std::hint;
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+pub fn black_box<T>(x: T) -> T {
+    hint::black_box(x)
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub std_ns: f64,
+    pub median_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}  ± {:>10}  (median {:>12}, min {:>12}, n={})",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.std_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.min_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub target: Duration,
+    pub max_iters: u64,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(300),
+            target: Duration::from_secs(1),
+            max_iters: 1_000_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            target: Duration::from_millis(300),
+            max_iters: 100_000,
+            ..Default::default()
+        }
+    }
+
+    /// Run `f` repeatedly; one sample = one call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // warmup + calibrate cost of one call
+        let wstart = Instant::now();
+        let mut calls = 0u64;
+        while wstart.elapsed() < self.warmup || calls < 3 {
+            f();
+            calls += 1;
+        }
+        let per_call = wstart.elapsed().as_nanos() as f64 / calls as f64;
+        let n = ((self.target.as_nanos() as f64 / per_call.max(1.0)) as u64)
+            .clamp(10, self.max_iters);
+
+        // sample in batches so per-sample timer overhead is amortized
+        let batches = 20u64.min(n);
+        let per_batch = (n / batches).max(1);
+        let mut samples = Vec::with_capacity(batches as usize);
+        for _ in 0..batches {
+            let t = Instant::now();
+            for _ in 0..per_batch {
+                f();
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / per_batch as f64);
+        }
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: batches * per_batch,
+            mean_ns: stats::mean(&samples),
+            std_ns: stats::std_dev(&samples),
+            median_ns: stats::median(&samples),
+            min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        };
+        println!("{}", res.report());
+        self.results.push(res);
+        self.results.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher {
+            warmup: Duration::from_millis(5),
+            target: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let r = b.bench("noop-ish", || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters >= 10);
+    }
+}

@@ -1,0 +1,122 @@
+//! Minimal CLI argument parser substrate (no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Each binary declares its options inline; `Args::usage_err` renders help.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (without the program name). `flag_names` lists options
+    /// that take no value.
+    pub fn parse(argv: &[String], flag_names: &[&str]) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if let Some(rest) = arg.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    a.flags.push(rest.to_string());
+                } else {
+                    i += 1;
+                    let v = argv
+                        .get(i)
+                        .ok_or_else(|| format!("option --{rest} needs a value"))?;
+                    a.options.insert(rest.to_string(), v.clone());
+                }
+            } else {
+                a.positional.push(arg.clone());
+            }
+            i += 1;
+        }
+        Ok(a)
+    }
+
+    pub fn from_env(flag_names: &[&str]) -> Result<Args, String> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, flag_names)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    /// Parse a comma-separated list of integers, e.g. "1,5,10".
+    pub fn get_usize_list(&self, name: &str, default: &[usize]) -> Result<Vec<usize>, String> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse()
+                        .map_err(|_| format!("--{name}: bad integer '{s}'"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&sv(&["run", "--k", "10", "--fast", "--w=5", "x"]), &["fast"]).unwrap();
+        assert_eq!(a.positional, vec!["run", "x"]);
+        assert_eq!(a.get("k"), Some("10"));
+        assert_eq!(a.get("w"), Some("5"));
+        assert!(a.has_flag("fast"));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["--k"]), &[]).is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = Args::parse(&sv(&["--ks", "1,5,10"]), &[]).unwrap();
+        assert_eq!(a.get_usize_list("ks", &[]).unwrap(), vec![1, 5, 10]);
+        assert_eq!(a.get_usize_list("ws", &[2, 4]).unwrap(), vec![2, 4]);
+    }
+}

@@ -1,0 +1,10 @@
+//! From-scratch utility substrates (the offline environment ships only the
+//! `xla` crate's dependency closure, so JSON / CLI / RNG / bench / property
+//! testing are implemented here — see DESIGN.md §System-inventory S14).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

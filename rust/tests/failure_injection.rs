@@ -1,0 +1,138 @@
+//! Failure injection: corrupted or missing artifacts must surface as
+//! actionable errors, never panics or silent misbehavior. Uses a scratch
+//! copy of the artifact tree so the real one is untouched.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use ngrammys::config::{default_artifacts_dir, Manifest};
+use ngrammys::draft::tables::Table;
+use ngrammys::draft::NgramTables;
+use ngrammys::runtime::ModelRuntime;
+use ngrammys::tokenizer::BpeTokenizer;
+
+struct Scratch(PathBuf);
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let _ = fs::remove_dir_all(&self.0);
+    }
+}
+
+/// Copy manifest + the `small` model dir + tokenizer into a temp tree.
+fn scratch_tree(tag: &str) -> Scratch {
+    let src = default_artifacts_dir();
+    let dst = std::env::temp_dir().join(format!("ngrammys-failinj-{tag}-{}", std::process::id()));
+    let _ = fs::remove_dir_all(&dst);
+    fs::create_dir_all(dst.join("models/small")).unwrap();
+    fs::create_dir_all(dst.join("data")).unwrap();
+    for f in ["manifest.json", "tokenizer.json"] {
+        fs::copy(src.join(f), dst.join(f)).unwrap();
+    }
+    for entry in fs::read_dir(src.join("models/small")).unwrap() {
+        let e = entry.unwrap();
+        fs::copy(e.path(), dst.join("models/small").join(e.file_name())).unwrap();
+    }
+    for entry in fs::read_dir(src.join("data")).unwrap() {
+        let e = entry.unwrap();
+        fs::copy(e.path(), dst.join("data").join(e.file_name())).unwrap();
+    }
+    Scratch(dst)
+}
+
+fn small_art(root: &Path) -> ngrammys::config::ModelArtifacts {
+    Manifest::load(root).unwrap().model("small").unwrap().clone()
+}
+
+#[test]
+fn truncated_params_bin_is_rejected() {
+    let s = scratch_tree("params");
+    let p = s.0.join("models/small/params.bin");
+    let data = fs::read(&p).unwrap();
+    fs::write(&p, &data[..data.len() / 2]).unwrap();
+    let err = match ModelRuntime::load(&small_art(&s.0)) {
+        Ok(_) => panic!("truncated params.bin accepted"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("params.bin"), "{err:#}");
+}
+
+#[test]
+fn corrupted_table_magic_is_rejected() {
+    let s = scratch_tree("table");
+    let p = s.0.join("models/small/bigram.bin");
+    let mut data = fs::read(&p).unwrap();
+    data[0] ^= 0xff;
+    fs::write(&p, &data).unwrap();
+    let err = NgramTables::load(&small_art(&s.0)).unwrap_err();
+    assert!(format!("{err:#}").contains("magic"), "{err:#}");
+}
+
+#[test]
+fn garbage_hlo_fails_at_compile_not_execute() {
+    let s = scratch_tree("hlo");
+    // find the (1, 0) step file and corrupt it
+    let art = small_art(&s.0);
+    let path = art.steps.get(&(1, 0)).unwrap();
+    fs::write(path, "HloModule not_actually_hlo ENTRY {").unwrap();
+    let rt = ModelRuntime::load(&art).unwrap();
+    assert!(rt.warm_step(1, 0).is_err());
+    // other shapes still work
+    assert!(rt.warm_step(1, 1).is_ok());
+}
+
+#[test]
+fn manifest_syntax_error_is_actionable() {
+    let s = scratch_tree("manifest");
+    fs::write(s.0.join("manifest.json"), "{\"version\": 1,,}").unwrap();
+    let err = Manifest::load(&s.0).unwrap_err();
+    assert!(format!("{err:#}").contains("json"), "{err:#}");
+}
+
+#[test]
+fn manifest_missing_model_key_is_actionable() {
+    let s = scratch_tree("key");
+    let text = fs::read_to_string(s.0.join("manifest.json")).unwrap();
+    let broken = text.replace("\"d_model\"", "\"d_model_gone\"");
+    fs::write(s.0.join("manifest.json"), broken).unwrap();
+    let err = Manifest::load(&s.0).unwrap_err();
+    assert!(format!("{err:#}").contains("d_model"), "{err:#}");
+}
+
+#[test]
+fn tokenizer_with_bad_merge_ids_is_rejected() {
+    // merge 1 references id 300, which doesn't exist yet -> must error,
+    // never panic (this test caught a real index-out-of-bounds)
+    let err = BpeTokenizer::from_json_text(
+        r#"{"type": "byte_bpe", "vocab_size": 258, "merges": [[104, 101], [300, 108]]}"#,
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("300"), "{err:#}");
+    // forward references are also invalid
+    assert!(BpeTokenizer::from_json_text(
+        r#"{"type": "byte_bpe", "vocab_size": 258, "merges": [[257, 101]]}"#,
+    )
+    .is_err());
+    // decode with out-of-range ids must be safe
+    let tok = BpeTokenizer::from_merges(vec![(104, 101)]);
+    let _ = tok.decode(&[0, 256, 9999]);
+}
+
+#[test]
+fn table_shape_mismatch_detected_against_manifest() {
+    let s = scratch_tree("shape");
+    // overwrite bigram with a wrong-rows table
+    let small = Table::from_data(4, 2, 1, vec![0, 1, 1, 2, 2, 3, 3, 0]);
+    let mut bytes = Vec::new();
+    for v in [ngrammys::draft::tables::MAGIC, 4, 2, 1] {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    for r in 0..4 {
+        for c in 0..2 {
+            bytes.extend_from_slice(&small.at(r, c).to_le_bytes());
+        }
+    }
+    fs::write(s.0.join("models/small/bigram.bin"), bytes).unwrap();
+    let err = NgramTables::load(&small_art(&s.0)).unwrap_err();
+    assert!(format!("{err:#}").contains("rows"), "{err:#}");
+}

@@ -1,0 +1,278 @@
+//! Property-based tests on coordinator invariants (in-repo prop harness;
+//! proptest is unavailable offline). Pure components get hundreds of random
+//! cases; the real-runtime property runs a smaller case count.
+
+use ngrammys::draft::tables::Table;
+use ngrammys::draft::{ContextNgram, DraftBatch, DraftStrategy, MixedStrategy, NgramTables};
+use ngrammys::engine::acceptance::{judge, row_accept_len};
+use ngrammys::kvcache::{BlockTable, PagedAllocator, SharedKvCache};
+use ngrammys::util::prop;
+use ngrammys::util::rng::Rng;
+use std::sync::Arc;
+
+fn random_tables(rng: &mut Rng, vocab: usize, topk: usize, depth: usize) -> Arc<NgramTables> {
+    let mut mk = |n: usize| -> Vec<u32> {
+        (0..n).map(|_| rng.below(vocab) as u32).collect()
+    };
+    let bigram = mk(vocab * topk);
+    let unigram = mk(topk);
+    let ext = mk(vocab * topk * depth);
+    Arc::new(NgramTables {
+        bigram: Table::from_data(vocab, topk, 1, bigram),
+        unigram: Table::from_data(1, topk, 1, unigram),
+        ext_bigram: Table::from_data(vocab, topk, depth, ext),
+    })
+}
+
+#[test]
+fn prop_context_ngram_candidates_are_real_continuations() {
+    // every candidate must literally appear after an occurrence of the query
+    prop::check(400, |rng| {
+        let vocab = rng.range(3, 12);
+        let len = rng.range(2, 120);
+        let q = rng.range(1, 3);
+        let w = rng.range(1, 6);
+        let seq = prop::vec_u32(rng, len, 0..vocab as u32);
+        let ctx = ContextNgram::new(q);
+        for (cand, count) in ctx.candidates(&seq, w) {
+            if seq.len() < q + 1 {
+                return false;
+            }
+            let query = &seq[seq.len() - q..];
+            let mut found = 0u32;
+            for i in 0..seq.len() - q {
+                if &seq[i..i + q] == query && seq[i + q..].starts_with(&cand) {
+                    found += 1;
+                }
+            }
+            if found < count {
+                return false; // counted more matches than exist
+            }
+            if cand.is_empty() || cand.len() > w {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_mixed_fills_k_distinct_rows_when_possible() {
+    prop::check(300, |rng| {
+        let vocab = rng.range(16, 64);
+        let topk = rng.range(8, 16);
+        let tables = random_tables(rng, vocab, topk, 8);
+        let k = rng.range(1, topk.min(8));
+        let w = rng.range(1, 8);
+        let slen = rng.range(1, 60);
+        let seq = prop::vec_u32(rng, slen, 0..vocab as u32);
+        let mut m = MixedStrategy::paper(tables, 1);
+        let mut b = DraftBatch::new(w);
+        m.propose(&seq, k, &mut b);
+        if b.k() > k {
+            return false;
+        }
+        // all rows distinct
+        for i in 0..b.rows.len() {
+            for j in 0..i {
+                if b.rows[i].tokens == b.rows[j].tokens {
+                    return false;
+                }
+            }
+        }
+        // rows never exceed w
+        b.rows.iter().all(|r| r.tokens.len() <= w)
+    });
+}
+
+#[test]
+fn prop_acceptance_never_exceeds_draft_len_and_always_emits() {
+    prop::check(500, |rng| {
+        let w = rng.range(0, 8);
+        let k = rng.range(1, 6);
+        let w1 = w + 1;
+        let mut b = DraftBatch::new(w);
+        for _ in 0..k {
+            let rl = rng.range(0, w);
+            b.push(prop::vec_u32(rng, rl, 0..16), ngrammys::draft::StrategyKind::Jacobi, 0);
+        }
+        let out = prop::vec_u32(rng, k * w1, 0..16);
+        let a = judge(&b, &out, w1);
+        a.row < k
+            && a.accepted <= w
+            && a.emitted.len() == a.accepted + 1
+            && a.accepted <= b.rows[a.row].tokens.len()
+    });
+}
+
+#[test]
+fn prop_row_accept_len_is_common_prefix() {
+    prop::check(500, |rng| {
+        let n = rng.range(0, 10);
+        let d = prop::vec_u32(rng, n, 0..4);
+        let olen = rng.range(n, n + 2);
+        let o = prop::vec_u32(rng, olen, 0..4);
+        let a = row_accept_len(&d, &o);
+        // definition check
+        let ok_prefix = (0..a).all(|i| d[i] == o[i]);
+        let maximal = a == d.len() || a >= o.len() || d[a] != o[a];
+        ok_prefix && maximal
+    });
+}
+
+#[test]
+fn prop_kv_commit_roundtrip_preserves_layout() {
+    // committing tails and reading them back must land at the right
+    // (layer, position) offsets for arbitrary shapes
+    prop::check(200, |rng| {
+        let layers = rng.range(1, 4);
+        let heads = rng.range(1, 4);
+        let hd = [2usize, 4, 8][rng.below(3)];
+        let max_len = rng.range(8, 32);
+        let mut c = SharedKvCache::new(layers, max_len, heads, hd);
+        let k_rows = rng.range(1, 4);
+        let w1 = rng.range(1, 5.min(max_len));
+        c.len = rng.range(0, max_len - w1);
+        let start_len = c.len;
+        let ps = c.pos_stride();
+        let n = layers * k_rows * w1 * ps;
+        // encode source coordinates in the values
+        let k_tail: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let v_tail: Vec<f32> = (0..n).map(|i| -(i as f32)).collect();
+        let row = rng.below(k_rows);
+        let count = rng.range(1, w1);
+        if c.commit_tail(&k_tail, &v_tail, k_rows, w1, row, count).is_err() {
+            return false;
+        }
+        if c.len != start_len + count {
+            return false;
+        }
+        for layer in 0..layers {
+            for pos in 0..count {
+                let src = ((layer * k_rows + row) * w1 + pos) * ps;
+                let dst = layer * c.layer_stride() + (start_len + pos) * ps;
+                for e in 0..ps {
+                    if c.k_data[dst + e] != k_tail[src + e]
+                        || c.v_data[dst + e] != v_tail[src + e]
+                    {
+                        return false;
+                    }
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_paged_allocator_conserves_blocks() {
+    prop::check(200, |rng| {
+        let total = rng.range(4, 40);
+        let bs = rng.range(1, 16);
+        let mut a = PagedAllocator::new(total, bs);
+        let mut tables: Vec<BlockTable> = (0..rng.range(1, 6)).map(|_| BlockTable::default()).collect();
+        for _ in 0..rng.range(1, 60) {
+            let i = rng.below(tables.len());
+            match rng.below(3) {
+                0 | 1 => {
+                    let want = tables[i].len + rng.range(1, 2 * bs);
+                    let _ = a.grow(&mut tables[i], want);
+                }
+                _ => a.release(&mut tables[i]),
+            }
+            // conservation: used + free == total, no double allocation
+            let used: usize = tables.iter().map(|t| t.blocks.len()).sum();
+            if used != a.used_blocks() || used + a.free_blocks() != total {
+                return false;
+            }
+            let mut all: Vec<usize> = tables.iter().flat_map(|t| t.blocks.clone()).collect();
+            all.sort_unstable();
+            let before = all.len();
+            all.dedup();
+            if all.len() != before {
+                return false; // same block handed to two tables
+            }
+            // every table can hold its claimed len
+            if tables.iter().any(|t| t.blocks.len() * bs < t.len) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    use ngrammys::util::json::Json;
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.below(100000) as f64) - 50000.0 + 0.5),
+            3 => {
+                let n = rng.range(0, 12);
+                Json::Str((0..n).map(|_| {
+                    let c = [b'a', b'"', b'\\', b'\n', 0xc3].map(|b| b as char);
+                    // keep valid utf-8: replace the raw byte with é
+                    let ch = c[rng.below(4)];
+                    ch
+                }).collect())
+            }
+            4 => Json::Arr((0..rng.range(0, 4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj((0..rng.range(0, 4)).map(|i| {
+                (format!("k{i}"), random_json(rng, depth - 1))
+            }).collect()),
+        }
+    }
+    prop::check(300, |rng| {
+        let j = random_json(rng, 3);
+        let compact = Json::parse(&j.to_string());
+        let pretty = Json::parse(&j.to_string_pretty());
+        compact.map(|c| c == j).unwrap_or(false)
+            && pretty.map(|p| p == j).unwrap_or(false)
+    });
+}
+
+/// The headline invariant against the REAL model: for random prompt slices
+/// and random (k, w) shapes, speculative decoding emits the greedy stream.
+#[test]
+fn prop_real_model_speculation_is_lossless() {
+    use ngrammys::bench::BenchCtx;
+    use ngrammys::config::{default_artifacts_dir, EngineConfig, Manifest};
+    use ngrammys::engine::{greedy_config, NoDraft, SpecDecoder};
+    use ngrammys::scheduler::{make_strategy, StrategyName};
+
+    let manifest = Manifest::load(&default_artifacts_dir()).expect("make artifacts");
+    let ctx = BenchCtx::load(manifest, "small").unwrap();
+    let corpus = std::fs::read_to_string(
+        &ctx.manifest.data["code"].1).unwrap();
+    let shapes: Vec<(usize, usize)> = ctx.runtime.artifacts().step_shapes();
+
+    prop::check(8, |rng| {
+        let start = rng.below(corpus.len().saturating_sub(400));
+        // align to char boundary
+        let mut s = start;
+        while !corpus.is_char_boundary(s) {
+            s += 1;
+        }
+        let text = &corpus[s..(s + 200).min(corpus.len())];
+        let mut toks = ctx.tokenizer.encode(text);
+        toks.truncate(48);
+        if toks.len() < 4 {
+            return true;
+        }
+        let (k, w) = shapes[rng.below(shapes.len())];
+        let max_new = rng.range(4, 24);
+
+        let mut greedy = SpecDecoder::new(
+            &ctx.runtime, Box::new(NoDraft), greedy_config(max_new));
+        let want = greedy.generate(&toks).unwrap().tokens;
+
+        let strat = [StrategyName::Mixed, StrategyName::Context, StrategyName::Jacobi]
+            [rng.below(3)];
+        let s = make_strategy(strat, &ctx.tables, 1);
+        let mut dec = SpecDecoder::new(
+            &ctx.runtime, s, EngineConfig { k, w, q: 1, max_new_tokens: max_new });
+        dec.generate(&toks).unwrap().tokens == want
+    });
+}

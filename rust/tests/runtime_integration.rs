@@ -1,0 +1,189 @@
+//! Integration tests over the REAL artifacts: runtime + engine + strategies.
+//! These are the tests that prove the three layers compose. They require
+//! `make artifacts` to have run; they fail loudly (not skip) otherwise,
+//! because a tree without artifacts is not a releasable tree.
+
+use std::sync::Arc;
+
+use ngrammys::bench::BenchCtx;
+use ngrammys::config::{default_artifacts_dir, EngineConfig, Manifest};
+use ngrammys::draft::NgramTables;
+use ngrammys::engine::{greedy_config, NoDraft, SpecDecoder};
+use ngrammys::kvcache::SharedKvCache;
+use ngrammys::runtime::ModelRuntime;
+use ngrammys::scheduler::{make_strategy, StrategyName};
+use ngrammys::workload;
+
+fn manifest() -> Manifest {
+    Manifest::load(&default_artifacts_dir()).expect("run `make artifacts` first")
+}
+
+fn ctx(model: &str) -> BenchCtx {
+    BenchCtx::load(manifest(), model).unwrap()
+}
+
+#[test]
+fn manifest_lists_three_models_and_tasks() {
+    let m = manifest();
+    for model in ["small", "base", "large"] {
+        assert!(m.models.contains_key(model), "missing model {model}");
+    }
+    for task in workload::TASKS {
+        assert!(m.data.contains_key(task), "missing task {task}");
+    }
+    assert!(m.vocab_size > 256);
+}
+
+#[test]
+fn prefill_then_greedy_steps_match_repeat_prefill() {
+    // decode 8 tokens greedily, then re-prefill with prompt+8 and check the
+    // next token matches the 9th greedy step — cache commit correctness.
+    let c = ctx("base");
+    let prompt = c.tokenizer.encode("def scale(x, y):\n    result");
+    let mut dec = SpecDecoder::new(&c.runtime, Box::new(NoDraft), greedy_config(9));
+    let r = dec.generate(&prompt).unwrap();
+    assert_eq!(r.tokens.len(), 9);
+
+    let mut full = prompt.clone();
+    full.extend_from_slice(&r.tokens[..8]);
+    let dims = &c.runtime.artifacts().dims;
+    let mut cache = SharedKvCache::new(
+        dims.n_layers, dims.max_len, dims.n_heads, dims.head_dim);
+    let pf = c.runtime.prefill(&full, &mut cache).unwrap();
+    assert_eq!(
+        pf.next_id, r.tokens[8],
+        "incremental KV cache diverged from fresh prefill"
+    );
+}
+
+#[test]
+fn speculative_equals_greedy_for_every_strategy() {
+    // THE paper invariant: wrong drafts cost speed, never correctness.
+    let c = ctx("base");
+    let prompts = [
+        "Question: Sam has 40 coins.",
+        "def clamp(a, b):",
+        "User: What is the capital of",
+    ];
+    for p in prompts {
+        let toks = c.tokenizer.encode(p);
+        let mut greedy = SpecDecoder::new(&c.runtime, Box::new(NoDraft), greedy_config(32));
+        let want = greedy.generate(&toks).unwrap().tokens;
+        for (strat, k, w) in [
+            (StrategyName::Mixed, 10, 10),
+            (StrategyName::Context, 5, 4),
+            (StrategyName::Bigram, 10, 1),
+            (StrategyName::Unigram, 5, 1),
+            (StrategyName::ExtBigram, 5, 8),
+            (StrategyName::Jacobi, 1, 10),
+        ] {
+            let s = make_strategy(strat, &c.tables, 1);
+            let mut dec = SpecDecoder::new(
+                &c.runtime,
+                s,
+                EngineConfig { k, w, q: 1, max_new_tokens: 32 },
+            );
+            let got = dec.generate(&toks).unwrap();
+            assert_eq!(
+                got.tokens, want,
+                "strategy {strat:?} (k={k}, w={w}) altered the greedy stream for {p:?}"
+            );
+            assert!(got.calls <= want.len(), "more calls than greedy?!");
+        }
+    }
+}
+
+#[test]
+fn mixed_strategy_beats_greedy_on_calls() {
+    // in-distribution code prompt: mixed must accept drafts (tok/call > 1.2)
+    let c = ctx("base");
+    let examples = workload::load_examples(&c.manifest, "code", 4).unwrap();
+    let prompts = workload::build_prompts(&c.tokenizer, &examples, 0.4, 96);
+    let mut total_tokens = 0usize;
+    let mut total_calls = 0usize;
+    for p in &prompts {
+        let s = make_strategy(StrategyName::Mixed, &c.tables, 1);
+        let mut dec = SpecDecoder::new(
+            &c.runtime, s, EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: 48 });
+        let r = dec.generate(&p.tokens).unwrap();
+        total_tokens += r.tokens.len();
+        total_calls += r.calls;
+    }
+    let tpc = total_tokens as f64 / total_calls as f64;
+    assert!(tpc > 1.2, "tokens/call {tpc:.2} — speculation is not accepting");
+}
+
+#[test]
+fn all_three_models_generate() {
+    for model in ["small", "base", "large"] {
+        let c = ctx(model);
+        let toks = c.tokenizer.encode("Question: Tom has 5 apples.");
+        let s = make_strategy(StrategyName::Mixed, &c.tables, 1);
+        let mut dec = SpecDecoder::new(
+            &c.runtime, s, EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: 16 });
+        let r = dec.generate(&toks).unwrap();
+        assert_eq!(r.tokens.len(), 16, "model {model}");
+        assert!(r.tokens.iter().all(|&t| (t as usize) < c.manifest.vocab_size));
+    }
+}
+
+#[test]
+fn long_generation_respects_cache_capacity() {
+    // push generation until the cache nearly fills; must not error and the
+    // engine must shrink w near the end rather than overflow.
+    let c = ctx("small");
+    let toks = c.tokenizer.encode("User: Tell me about ancient rivers.");
+    let s = make_strategy(StrategyName::Mixed, &c.tables, 1);
+    let max_len = c.runtime.artifacts().dims.max_len;
+    let budget = max_len - toks.len() - 16;
+    let mut dec = SpecDecoder::new(
+        &c.runtime, s, EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: budget });
+    let r = dec.generate(&toks).unwrap();
+    assert!(r.tokens.len() as f64 >= budget as f64 * 0.9,
+            "generated {} of {budget}", r.tokens.len());
+}
+
+#[test]
+fn runtime_rejects_overlong_prompt_and_bad_shapes() {
+    let c = ctx("small");
+    let dims = c.runtime.artifacts().dims.clone();
+    let long = vec![1u32; 300]; // > largest prefill bucket (256)
+    let mut cache = SharedKvCache::new(
+        dims.n_layers, dims.max_len, dims.n_heads, dims.head_dim);
+    assert!(c.runtime.prefill(&long, &mut cache).is_err());
+    assert!(c.runtime.prefill(&[], &mut cache).is_err());
+    // no (3, 3) artifact shape exists
+    assert!(c.runtime.spec_step(3, 3, &vec![0; 12], &cache).is_err());
+    // token count mismatch
+    assert!(c.runtime.spec_step(5, 4, &vec![0; 7], &cache).is_err());
+}
+
+#[test]
+fn tables_load_and_are_well_formed() {
+    let m = manifest();
+    for model in ["small", "base", "large"] {
+        let art = m.model(model).unwrap();
+        let t = NgramTables::load(art).unwrap();
+        let v = art.dims.vocab_size as u32;
+        assert_eq!(t.bigram.rows as u32, v);
+        for r in 0..t.bigram.rows {
+            for c2 in 0..t.bigram.cols {
+                assert!(t.bigram.at(r, c2) < v, "bigram[{r}][{c2}] out of vocab");
+            }
+        }
+        assert!(t.unigram.cols >= 32);
+        let _ = Arc::new(t);
+    }
+}
+
+#[test]
+fn best_fitting_shape_prefers_exact_then_shrinks() {
+    let c = ctx("base");
+    assert_eq!(c.runtime.best_fitting_shape(10, 10, 512), Some((10, 10)));
+    assert_eq!(c.runtime.best_fitting_shape(1, 0, 512), Some((1, 0)));
+    // little cache room left: w must shrink below requested
+    let s = c.runtime.best_fitting_shape(10, 10, 4).unwrap();
+    assert!(s.1 + 1 <= 4);
+    // nothing fits in zero room
+    assert_eq!(c.runtime.best_fitting_shape(10, 10, 0), None);
+}

@@ -1,0 +1,130 @@
+//! Serving-layer integration: scheduler + HTTP server over real artifacts.
+
+use std::sync::Arc;
+
+use ngrammys::config::{default_artifacts_dir, EngineConfig, Manifest, ServeConfig};
+use ngrammys::scheduler::{GenRequest, Scheduler, StrategyName};
+use ngrammys::server::{client, Server};
+use ngrammys::tokenizer::BpeTokenizer;
+use ngrammys::util::json::Json;
+
+fn manifest() -> Manifest {
+    Manifest::load(&default_artifacts_dir()).expect("run `make artifacts` first")
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 8,
+        default_engine: EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: 12 },
+    }
+}
+
+#[test]
+fn scheduler_round_trip() {
+    let m = manifest();
+    let sched = Scheduler::start(&m, "small", &serve_cfg()).unwrap();
+    let tok = BpeTokenizer::load(&m.tokenizer_path).unwrap();
+    let resp = sched
+        .generate(GenRequest {
+            prompt: tok.encode("Question: Tom has 3 apples."),
+            engine: EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: 10 },
+            strategy: StrategyName::Mixed,
+        })
+        .unwrap();
+    assert_eq!(resp.tokens.len(), 10);
+    assert!(resp.tokens_per_call >= 1.0);
+    assert_eq!(sched.metrics.requests_completed.load(std::sync::atomic::Ordering::Relaxed), 1);
+    sched.shutdown();
+}
+
+#[test]
+fn http_generate_metrics_and_errors() {
+    let m = manifest();
+    let cfg = serve_cfg();
+    let sched = Arc::new(Scheduler::start(&m, "small", &cfg).unwrap());
+    let tok = Arc::new(BpeTokenizer::load(&m.tokenizer_path).unwrap());
+    let (addr, _h) = Server { scheduler: sched.clone(), tokenizer: tok, cfg }
+        .spawn()
+        .unwrap();
+    let addr = addr.to_string();
+
+    // healthz
+    let (code, body) = client::get(&addr, "/healthz").unwrap();
+    assert_eq!((code, body.trim()), (200, "ok"));
+
+    // generate
+    let (code, body) = client::post(
+        &addr,
+        "/generate",
+        r#"{"prompt": "def scale(x):", "max_tokens": 8, "k": 5, "w": 4}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.req("tokens").unwrap().as_usize(), Some(8));
+    assert!(j.req("tokens_per_call").unwrap().as_f64().unwrap() >= 1.0);
+    assert!(!j.req("text").unwrap().as_str().unwrap().is_empty());
+
+    // strategy selection via API
+    let (code, _) = client::post(
+        &addr,
+        "/generate",
+        r#"{"prompt": "User: hi", "max_tokens": 4, "strategy": "jacobi"}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 200);
+
+    // metrics reflect the requests
+    let (code, metrics) = client::get(&addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    assert!(metrics.contains("ngrammys_requests_completed 2"), "{metrics}");
+    assert!(metrics.contains("ngrammys_tokens_per_call"));
+
+    // error paths
+    let (code, body) = client::post(&addr, "/generate", "{not json").unwrap();
+    assert_eq!(code, 400, "{body}");
+    let (code, _) = client::post(&addr, "/generate", r#"{"prompt": ""}"#).unwrap();
+    assert_eq!(code, 400);
+    let (code, _) = client::post(
+        &addr, "/generate", r#"{"prompt": "x", "strategy": "bogus"}"#).unwrap();
+    assert_eq!(code, 400);
+    let (code, _) = client::get(&addr, "/nope").unwrap();
+    assert_eq!(code, 404);
+}
+
+#[test]
+fn backpressure_rejects_when_queue_full() {
+    let m = manifest();
+    let mut cfg = serve_cfg();
+    cfg.queue_cap = 1;
+    let sched = Scheduler::start(&m, "small", &cfg).unwrap();
+    let tok = BpeTokenizer::load(&m.tokenizer_path).unwrap();
+    let prompt = tok.encode("Question: Tom has 3 apples and 4 pens and 5 cards.");
+    let req = || GenRequest {
+        prompt: prompt.clone(),
+        engine: EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: 64 },
+        strategy: StrategyName::Mixed,
+    };
+    // flood: exactly one can queue behind the in-flight one; the rest must
+    // be rejected fast (not block)
+    let mut rxs = Vec::new();
+    let mut rejected = 0;
+    for _ in 0..12 {
+        match sched.submit(req()) {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected >= 8, "only {rejected} rejected");
+    for rx in rxs {
+        let r = rx.recv().unwrap().unwrap();
+        assert_eq!(r.tokens.len(), 64);
+    }
+    assert_eq!(
+        sched.metrics.requests_rejected.load(std::sync::atomic::Ordering::Relaxed),
+        rejected
+    );
+    sched.shutdown();
+}

@@ -1,0 +1,60 @@
+//! Tokenizer parity with the python training side, through the shared
+//! artifacts: (1) rust round-trips the real corpora losslessly, (2) rust
+//! encodings match the python encodings captured in the fixtures file
+//! written by `python -m compile.fixtures` at artifact-build time.
+
+use ngrammys::config::{default_artifacts_dir, Manifest};
+use ngrammys::tokenizer::BpeTokenizer;
+use ngrammys::util::json::Json;
+
+fn load() -> (Manifest, BpeTokenizer) {
+    let m = Manifest::load(&default_artifacts_dir()).expect("make artifacts");
+    let t = BpeTokenizer::load(&m.tokenizer_path).unwrap();
+    (m, t)
+}
+
+#[test]
+fn roundtrips_all_corpora_losslessly() {
+    let (m, tok) = load();
+    for (task, (train, eval)) in &m.data {
+        for path in [train, eval] {
+            let text = std::fs::read_to_string(path).unwrap();
+            let ids = tok.encode(&text);
+            assert_eq!(tok.decode(&ids), text, "task {task} path {path:?}");
+            assert!(
+                ids.iter().all(|&i| (i as usize) < tok.vocab_size),
+                "out-of-vocab id in {task}"
+            );
+            // BPE must actually compress the corpus it was trained on
+            assert!(
+                ids.len() * 2 < text.len(),
+                "poor compression on {task}: {} ids for {} bytes",
+                ids.len(),
+                text.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn matches_python_fixture_encodings() {
+    let (m, tok) = load();
+    let path = m.root.join("tokenizer_fixtures.json");
+    let text = std::fs::read_to_string(&path)
+        .expect("tokenizer_fixtures.json missing — run `make artifacts`");
+    let j = Json::parse(&text).unwrap();
+    let cases = j.req("cases").unwrap().as_arr().unwrap();
+    assert!(cases.len() >= 8, "too few fixture cases");
+    for case in cases {
+        let s = case.req("text").unwrap().as_str().unwrap();
+        let want: Vec<u32> = case
+            .req("ids")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.as_usize().unwrap() as u32)
+            .collect();
+        assert_eq!(tok.encode(s), want, "python/rust disagree on {s:?}");
+    }
+}
