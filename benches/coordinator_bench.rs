@@ -8,9 +8,11 @@
 //! Requires `make artifacts` to have run.
 
 use ngrammys::bench::BenchCtx;
-use ngrammys::config::{default_artifacts_dir, Manifest};
+use ngrammys::config::{default_artifacts_dir, EngineConfig, Manifest};
+use ngrammys::engine::batched::generate_all;
+use ngrammys::engine::BatchedEngine;
 use ngrammys::kvcache::SharedKvCache;
-use ngrammys::scheduler::StrategyName;
+use ngrammys::scheduler::{make_strategy, StrategyName};
 use ngrammys::util::bench::{black_box, Bencher};
 
 fn main() {
@@ -72,5 +74,37 @@ fn main() {
                 &ctx, strat, &prompts[..1], k, w, 1, 24).unwrap();
             black_box(c.total_tokens);
         });
+    }
+
+    println!("\n== cross-request batching: aggregate throughput by concurrency ==");
+    println!("   (sim = A100 cost model over the run's real packed-call traces;");
+    println!("    the batched engine's packed call reads weights once per step)");
+    let reqs = ctx.prompts("code", 8, 96).unwrap();
+    let cm = ctx.cost_model();
+    let cfg = EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: 24 };
+    for conc in [1usize, 4, 8] {
+        let t0 = std::time::Instant::now();
+        let mut eng = BatchedEngine::new(&ctx.runtime, conc);
+        eng.collect_traces = true;
+        let requests: Vec<_> = reqs
+            .iter()
+            .map(|p| {
+                let s = make_strategy(StrategyName::Mixed, &ctx.tables, 1);
+                (p.tokens.clone(), s, cfg.clone())
+            })
+            .collect();
+        let results = generate_all(&mut eng, requests).unwrap();
+        let tokens: usize = results.iter().map(|r| r.tokens.len() - 1).sum();
+        let sim_s: f64 = eng
+            .packed_traces
+            .iter()
+            .map(|p| cm.call_time(p.rows, p.w + 1, p.max_ctx))
+            .sum();
+        println!(
+            "   conc={conc:<2} packed_calls={:<4} sim {:>9.1} tok/s   cpu {:>9.1} tok/s",
+            eng.packed_traces.len(),
+            tokens as f64 / sim_s,
+            tokens as f64 / t0.elapsed().as_secs_f64(),
+        );
     }
 }

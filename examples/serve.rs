@@ -4,25 +4,32 @@
 //! from the eval corpora through actual HTTP round-trips, and reports
 //! latency percentiles, throughput and the aggregate tokens/call.
 //!
-//!     cargo run --release --example serve -- [n_requests] [rate_per_s]
+//!     cargo run --release --example serve -- [--requests N] [--rate R]
+//!         [--batch LANES]
+//!
+//! `--batch N` (N >= 2) switches the scheduler to the continuous-batching
+//! `BatchedEngine`: N pooled KV lanes, one packed verification call per
+//! step across every in-flight request.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use ngrammys::config::{default_artifacts_dir, EngineConfig, Manifest, ServeConfig};
 use ngrammys::scheduler::Scheduler;
 use ngrammys::server::{client, Server};
 use ngrammys::tokenizer::BpeTokenizer;
+use ngrammys::util::cli::Args;
 use ngrammys::util::json::Json;
 use ngrammys::util::stats;
 use ngrammys::workload::{self, RequestTrace};
 
 fn main() -> Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    let n_requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(24);
-    let rate: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4.0);
+    let args = Args::from_env(&[]).map_err(|e| anyhow!(e))?;
+    let n_requests = args.get_usize("requests", 24).map_err(|e| anyhow!(e))?;
+    let rate = args.get_f64("rate", 4.0).map_err(|e| anyhow!(e))?;
+    let batch = args.get_usize("batch", 0).map_err(|e| anyhow!(e))?;
     let max_tokens = 48usize;
 
     // --- bring up the full stack on an ephemeral port
@@ -31,6 +38,7 @@ fn main() -> Result<()> {
         addr: "127.0.0.1:0".into(),
         workers: 1,
         queue_cap: 128,
+        batch,
         default_engine: EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: max_tokens },
     };
     let scheduler = Arc::new(Scheduler::start(&manifest, "base", &cfg)?);
@@ -57,7 +65,12 @@ fn main() -> Result<()> {
 
     // --- replay a Poisson trace over real HTTP
     let trace = RequestTrace::poisson(42, n_requests, rate, prompts.len());
-    eprintln!("replaying {n_requests} requests at ~{rate}/s (Poisson)...");
+    let mode = if batch >= 2 {
+        format!("batched engine, {batch} KV lanes")
+    } else {
+        "request-batch 1".to_string()
+    };
+    eprintln!("replaying {n_requests} requests at ~{rate}/s (Poisson), {mode}...");
     let t0 = Instant::now();
     let mut handles = Vec::new();
     for (at, pidx) in trace.arrivals {

@@ -10,6 +10,7 @@
 //!   model scale (CPU PJRT cannot show the §3 phase transition).
 //! - speedup(cpu) — honest measured wall-time ratio on this host's CPU.
 
+pub mod batched;
 pub mod fig1;
 pub mod fig2;
 pub mod fig4;

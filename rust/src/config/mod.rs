@@ -241,6 +241,11 @@ pub struct ServeConfig {
     pub addr: String,
     pub workers: usize,
     pub queue_cap: usize,
+    /// Cross-request batching: 0 or 1 = one private decode loop per worker
+    /// (request-batch 1); >= 2 = a continuous-batching `BatchedEngine` with
+    /// this many pooled KV lanes, verifying all active sequences in one
+    /// packed call per step.
+    pub batch: usize,
     pub default_engine: EngineConfig,
 }
 
@@ -250,16 +255,25 @@ impl Default for ServeConfig {
             addr: "127.0.0.1:8077".to_string(),
             workers: 1,
             queue_cap: 256,
+            batch: 0,
             default_engine: EngineConfig::default(),
         }
     }
 }
 
-/// Default artifacts directory: $NGRAMMYS_ARTIFACTS or ./artifacts.
+/// Default artifacts directory: $NGRAMMYS_ARTIFACTS, else ./artifacts if a
+/// manifest is present, else the synthetic reference-backend tree (built on
+/// demand by [`crate::testkit`]) — which is what makes a bare checkout
+/// buildable and testable without the python toolchain.
 pub fn default_artifacts_dir() -> PathBuf {
-    std::env::var("NGRAMMYS_ARTIFACTS")
-        .map(PathBuf::from)
-        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    if let Ok(p) = std::env::var("NGRAMMYS_ARTIFACTS") {
+        return PathBuf::from(p);
+    }
+    let local = PathBuf::from("artifacts");
+    if local.join("manifest.json").exists() {
+        return local;
+    }
+    crate::testkit::artifacts_dir()
 }
 
 #[cfg(test)]

@@ -1,0 +1,337 @@
+//! Continuous-batching engine: cross-request batched verification.
+//!
+//! The paper's premise is that the batch dimension of a verification call
+//! is nearly free while the call stays memory-bound (§3) — and the seed
+//! engine only ever spent that dimension on speculation rows *of one
+//! sequence*. `BatchedEngine` spends it on both axes at once: per step it
+//! gathers draft rows from ALL active sequences into one packed
+//! (sum of k_i, w+1) verification call, judges and commits each sequence's
+//! lanes independently against its own pooled KV lane, and admits/retires
+//! sequences between steps (continuous batching, vLLM-style).
+//!
+//! Correctness invariant — unchanged from [`super::SpecDecoder`] and
+//! enforced by the equivalence tests in `rust/tests/batched_engine.rs`:
+//! every sequence's output stream is exactly the base model's greedy
+//! continuation of its prompt, regardless of what else rides in the batch.
+//!
+//! Shape selection across sequences: all blocks in one packed call must
+//! share the speculation depth `w`, so each step picks the largest common
+//! `w` every active sequence can still afford (config + remaining lane
+//! room), then refits each sequence's row count `k_i` to it. Sequences
+//! that cannot meet the common depth (odd artifact sets) fall back to
+//! their own shape and run as a second packed group in the same step.
+
+use std::collections::{HashMap, VecDeque};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::EngineConfig;
+use crate::draft::{DraftBatch, DraftStrategy};
+use crate::kvcache::{KvPool, LaneId};
+use crate::runtime::{ModelRuntime, PackedBlock};
+use crate::tokenizer::TokenId;
+
+use super::{assemble_block, judge_and_commit, make_trace, pad_batch, GenResult};
+
+/// Identifier of one admitted sequence, unique within an engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SeqId(pub u64);
+
+/// One packed verification call, as the engine saw it (feeds the batched
+/// bench's cost-model throughput accounting).
+#[derive(Debug, Clone)]
+pub struct PackedTrace {
+    /// common speculation depth of the call
+    pub w: usize,
+    /// total rows across all sequences (the packed batch size, sum of k_i)
+    pub rows: usize,
+    /// largest context length among participating lanes
+    pub max_ctx: usize,
+    /// number of sequences that rode this call
+    pub seqs: usize,
+}
+
+struct SeqState {
+    id: SeqId,
+    cfg: EngineConfig,
+    /// prompt ++ generated; last element is the anchor (KV not yet cached)
+    seq: Vec<TokenId>,
+    strategy: Box<dyn DraftStrategy>,
+    lane: LaneId,
+    res: GenResult,
+    /// set when the sequence can no longer step (cache exhausted)
+    done: bool,
+    t_decode: Instant,
+}
+
+impl SeqState {
+    fn finished(&self) -> bool {
+        self.done || self.res.tokens.len() >= self.cfg.max_new_tokens
+    }
+}
+
+/// Multi-sequence speculative decoding over a pooled KV cache.
+pub struct BatchedEngine<'rt> {
+    pub runtime: &'rt ModelRuntime,
+    /// collect per-step traces on each sequence's GenResult + packed traces
+    pub collect_traces: bool,
+    /// one record per packed verification call (when collect_traces)
+    pub packed_traces: Vec<PackedTrace>,
+    pool: KvPool,
+    active: Vec<SeqState>,
+    next_id: u64,
+}
+
+impl<'rt> BatchedEngine<'rt> {
+    /// An engine with `max_concurrency` pooled KV lanes for `runtime`'s
+    /// model.
+    pub fn new(runtime: &'rt ModelRuntime, max_concurrency: usize) -> Self {
+        let d = &runtime.artifacts().dims;
+        BatchedEngine {
+            runtime,
+            collect_traces: false,
+            packed_traces: Vec::new(),
+            pool: KvPool::new(d.n_layers, d.max_len, d.n_heads, d.head_dim,
+                              max_concurrency.max(1)),
+            active: Vec::new(),
+            next_id: 0,
+        }
+    }
+
+    /// Max concurrent sequences (the lane-pool size).
+    pub fn capacity(&self) -> usize {
+        self.pool.capacity()
+    }
+
+    pub fn active(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn has_capacity(&self) -> bool {
+        self.active.len() < self.pool.capacity()
+    }
+
+    pub fn lanes_in_use(&self) -> usize {
+        self.pool.in_use()
+    }
+
+    /// Admit one sequence: claim a lane, prefill it, emit the first greedy
+    /// token. Fails (releasing the lane) on prefill errors; fails fast when
+    /// no lane is free — callers treat that as backpressure.
+    pub fn admit(
+        &mut self,
+        prompt: &[TokenId],
+        mut strategy: Box<dyn DraftStrategy>,
+        cfg: EngineConfig,
+    ) -> Result<SeqId> {
+        let lane = self
+            .pool
+            .acquire()
+            .ok_or_else(|| anyhow!("no free KV lanes ({} in use)", self.pool.in_use()))?;
+        strategy.reset();
+        let t0 = Instant::now();
+        let pf = match self.runtime.prefill(prompt, self.pool.lane_mut(lane)) {
+            Ok(pf) => pf,
+            Err(e) => {
+                self.pool.release(lane);
+                return Err(e);
+            }
+        };
+        let mut res = GenResult::default();
+        res.prefill_time = t0.elapsed();
+        res.tokens.push(pf.next_id);
+        let mut seq = prompt.to_vec();
+        seq.push(pf.next_id);
+
+        let id = SeqId(self.next_id);
+        self.next_id += 1;
+        self.active.push(SeqState {
+            id,
+            cfg,
+            seq,
+            strategy,
+            lane,
+            res,
+            done: false,
+            t_decode: Instant::now(),
+        });
+        Ok(id)
+    }
+
+    /// One engine step: draft every active sequence, verify all drafts in
+    /// packed calls, commit each sequence's winning lane, and retire
+    /// whatever finished. Returns the finished sequences (id + result);
+    /// their lanes are already reclaimed.
+    pub fn step(&mut self) -> Result<Vec<(SeqId, GenResult)>> {
+        let mut finished = Vec::new();
+
+        // Shape selection across sequences. Sequences whose lane cannot fit
+        // any block anymore are retired here (cache exhausted — same end
+        // condition as SpecDecoder's `break`).
+        let shapes = loop {
+            self.sweep_finished(&mut finished);
+            if self.active.is_empty() {
+                return Ok(finished);
+            }
+            let fits: Vec<Option<(usize, usize)>> = self
+                .active
+                .iter()
+                .map(|s| {
+                    let room = self.pool.lane(s.lane).remaining();
+                    self.runtime.best_fitting_shape(s.cfg.k, s.cfg.w, room)
+                })
+                .collect();
+            if fits.iter().all(|f| f.is_some()) {
+                let fits: Vec<(usize, usize)> = fits.into_iter().map(|f| f.unwrap()).collect();
+                let w_common = fits.iter().map(|&(_, w)| w).min().unwrap();
+                break self
+                    .active
+                    .iter()
+                    .zip(&fits)
+                    .map(|(s, &own)| {
+                        let room = self.pool.lane(s.lane).remaining();
+                        self.runtime
+                            .best_fitting_shape(s.cfg.k, w_common, room)
+                            .unwrap_or(own)
+                    })
+                    .collect::<Vec<(usize, usize)>>();
+            }
+            for (s, f) in self.active.iter_mut().zip(&fits) {
+                if f.is_none() {
+                    s.done = true;
+                }
+            }
+        };
+
+        // Group sequences by depth (one group — and one packed call — in
+        // the common case; ragged artifact sets produce more).
+        let mut groups: Vec<(usize, Vec<usize>)> = Vec::new();
+        for (i, &(_, w)) in shapes.iter().enumerate() {
+            match groups.iter_mut().find(|(gw, _)| *gw == w) {
+                Some((_, idxs)) => idxs.push(i),
+                None => groups.push((w, vec![i])),
+            }
+        }
+        for (w, idxs) in groups {
+            self.run_group(w, &idxs, &shapes)?;
+        }
+
+        self.sweep_finished(&mut finished);
+        Ok(finished)
+    }
+
+    /// Draft, pack, verify and commit one same-depth group of sequences.
+    fn run_group(&mut self, w: usize, idxs: &[usize], shapes: &[(usize, usize)]) -> Result<()> {
+        // --- draft every sequence's (k_i, w) block
+        let mut drafted: Vec<(DraftBatch, Vec<TokenId>, usize)> = Vec::with_capacity(idxs.len());
+        for &i in idxs {
+            let k = shapes[i].0;
+            let s = &mut self.active[i];
+            let mut batch = DraftBatch::new(w);
+            if w > 0 {
+                s.strategy.propose(&s.seq, k, &mut batch);
+            }
+            pad_batch(&mut batch, k);
+            let tokens = assemble_block(&batch, *s.seq.last().unwrap(), k, w);
+            drafted.push((batch, tokens, k));
+        }
+
+        // --- one packed verification call for the whole group
+        let blocks: Vec<PackedBlock> = idxs
+            .iter()
+            .zip(&drafted)
+            .map(|(&i, (_, tokens, k))| PackedBlock {
+                k: *k,
+                tokens,
+                cache: self.pool.lane(self.active[i].lane),
+            })
+            .collect();
+        if self.collect_traces {
+            self.packed_traces.push(PackedTrace {
+                w,
+                rows: blocks.iter().map(|b| b.k).sum(),
+                max_ctx: blocks.iter().map(|b| b.cache.len).max().unwrap_or(0),
+                seqs: blocks.len(),
+            });
+        }
+        let outs = self.runtime.spec_step_packed(w, &blocks)?;
+        drop(blocks);
+
+        // --- judge + commit each sequence independently
+        for ((&i, (batch, _, k)), out) in idxs.iter().zip(&drafted).zip(&outs) {
+            let s = &mut self.active[i];
+            let (acc, ctx_len) = judge_and_commit(batch, out, self.pool.lane_mut(s.lane))?;
+            s.res.exec_time += out.exec_time;
+            if self.collect_traces {
+                s.res
+                    .traces
+                    .push(make_trace(batch, &acc, *k, w, ctx_len, out.exec_time));
+            }
+            s.strategy.observe(&acc.emitted, out.row(acc.row));
+            s.res.calls += 1;
+            for &t in &acc.emitted {
+                s.seq.push(t);
+                s.res.tokens.push(t);
+                if s.res.tokens.len() >= s.cfg.max_new_tokens {
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Retire finished sequences: reclaim lanes, stamp decode time.
+    fn sweep_finished(&mut self, finished: &mut Vec<(SeqId, GenResult)>) {
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].finished() {
+                let mut s = self.active.remove(i);
+                s.res.decode_time = s.t_decode.elapsed();
+                self.pool.release(s.lane);
+                finished.push((s.id, s.res));
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Drive a whole request set through `eng` to completion: admit while
+/// lanes are free, step until every sequence retires, keep admitting as
+/// lanes free up. Results come back in request order. Callers own the
+/// engine, so traces (`eng.packed_traces`, per-sequence `GenResult`
+/// traces) stay inspectable afterwards — the benches and equivalence
+/// tests all drive through here; only the scheduler's streaming worker
+/// has its own loop (it must interleave queue arrivals).
+pub fn generate_all(
+    eng: &mut BatchedEngine,
+    requests: Vec<(Vec<TokenId>, Box<dyn DraftStrategy>, EngineConfig)>,
+) -> Result<Vec<GenResult>> {
+    let n = requests.len();
+    let mut pending: VecDeque<(usize, (Vec<TokenId>, Box<dyn DraftStrategy>, EngineConfig))> =
+        requests.into_iter().enumerate().collect();
+    let mut by_id: HashMap<SeqId, usize> = HashMap::new();
+    let mut out: Vec<Option<GenResult>> = (0..n).map(|_| None).collect();
+
+    loop {
+        while eng.has_capacity() && !pending.is_empty() {
+            let (ridx, (prompt, strategy, cfg)) = pending.pop_front().unwrap();
+            let id = eng.admit(&prompt, strategy, cfg)?;
+            by_id.insert(id, ridx);
+        }
+        if eng.active() == 0 && pending.is_empty() {
+            break;
+        }
+        for (id, res) in eng.step()? {
+            let ridx = by_id
+                .remove(&id)
+                .ok_or_else(|| anyhow!("engine returned unknown sequence {id:?}"))?;
+            out[ridx] = Some(res);
+        }
+    }
+    out.into_iter()
+        .enumerate()
+        .map(|(i, o)| o.ok_or_else(|| anyhow!("request {i} never completed")))
+        .collect()
+}

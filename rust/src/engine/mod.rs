@@ -1,8 +1,25 @@
-//! Speculative decoding engine: the per-sequence decode loop that ties
-//! draft strategies (L3), the verification executable (L2+L1 via PJRT) and
-//! the shared KV cache together.
+//! Speculative decoding engines: the decode loops that tie draft
+//! strategies (L3), the verification executable (L2+L1) and the KV cache
+//! together.
+//!
+//! Two engines share the same acceptance/commit/trace plumbing:
+//!
+//! - [`SpecDecoder`] — the paper's setting: one sequence, the model-call
+//!   batch dimension spent entirely on that sequence's speculation rows.
+//! - [`batched::BatchedEngine`] — continuous batching across requests:
+//!   per step, draft rows from ALL active sequences are verified in one
+//!   packed (sum of k_i, w+1) call against pooled per-sequence KV lanes,
+//!   and sequences are admitted/retired between steps. Same invariant,
+//!   spent on both batching axes at once.
+//!
+//! INVARIANT (both engines): every sequence's output stream is exactly the
+//! base model's greedy continuation of its prompt — wrong drafts can only
+//! cost speed, never correctness.
 
 pub mod acceptance;
+pub mod batched;
+
+pub use batched::{BatchedEngine, PackedTrace, SeqId};
 
 use std::time::{Duration, Instant};
 
@@ -11,14 +28,17 @@ use anyhow::Result;
 use crate::config::EngineConfig;
 use crate::draft::{DraftBatch, DraftStrategy, StrategyKind};
 use crate::kvcache::SharedKvCache;
-use crate::runtime::ModelRuntime;
+use crate::runtime::{ModelRuntime, StepOutput};
 use crate::tokenizer::TokenId;
+
+use acceptance::Acceptance;
 
 /// Per-verification-call trace (feeds the Fig. 4 ablations and the
 /// cost-model-simulated wall-times).
 #[derive(Debug, Clone)]
 pub struct StepTrace {
-    /// context length at the time of the call
+    /// context length at the time of the call (KV positions the verifier
+    /// attended over — captured BEFORE the step's tokens are committed)
     pub ctx_len: usize,
     /// actual block shape used
     pub k: usize,
@@ -42,7 +62,8 @@ pub struct GenResult {
     pub calls: usize,
     pub prefill_time: Duration,
     pub decode_time: Duration,
-    /// pure model-execution time within decode
+    /// pure model-execution time within decode (for a batched run, each
+    /// sequence is charged the full latency of every packed call it rode)
     pub exec_time: Duration,
     pub traces: Vec<StepTrace>,
 }
@@ -107,7 +128,6 @@ impl<'rt> SpecDecoder<'rt> {
             else {
                 break; // cache exhausted
             };
-            let w1 = w + 1;
 
             // --- draft
             let mut batch = DraftBatch::new(w);
@@ -115,47 +135,16 @@ impl<'rt> SpecDecoder<'rt> {
                 self.strategy.propose(&seq, k, &mut batch);
             }
             pad_batch(&mut batch, k);
-
-            // --- assemble the (k, w1) block: col 0 = anchor, cols 1.. = drafts
-            let anchor = *seq.last().unwrap();
-            let mut tokens = Vec::with_capacity(k * w1);
-            for row in &batch.rows {
-                tokens.push(anchor);
-                tokens.extend_from_slice(&row.tokens);
-                // short rows pad with anchor repeats (never match outputs
-                // except by genuine coincidence; judged like any draft)
-                for _ in row.tokens.len()..w {
-                    tokens.push(anchor);
-                }
-            }
+            let tokens = assemble_block(&batch, *seq.last().unwrap(), k, w);
 
             // --- verify
             let out = self.runtime.spec_step(k, w, &tokens, &cache)?;
             res.exec_time += out.exec_time;
 
             // --- judge + commit
-            let acc = acceptance::judge(&batch, &out.next_ids, w1);
-            let consumed = acc.accepted + 1; // block tokens whose KV is valid
-            cache.commit_tail(&out.k_tail, &out.v_tail, k, w1, acc.row, consumed)?;
-
-            let win = &batch.rows[acc.row];
+            let (acc, ctx_len) = judge_and_commit(&batch, &out, &mut cache)?;
             if self.collect_traces {
-                res.traces.push(StepTrace {
-                    ctx_len: cache.len - consumed,
-                    k,
-                    w,
-                    kind: win.kind,
-                    rank: win.rank,
-                    accepted: acc.accepted,
-                    alloc_context: count_kind(&batch, StrategyKind::ContextNgram),
-                    alloc_bigram: count_kind(&batch, StrategyKind::ExtendedBigram)
-                        + count_kind(&batch, StrategyKind::ModelBigram),
-                    alloc_other: batch.rows.len()
-                        - count_kind(&batch, StrategyKind::ContextNgram)
-                        - count_kind(&batch, StrategyKind::ExtendedBigram)
-                        - count_kind(&batch, StrategyKind::ModelBigram),
-                    exec_time: out.exec_time,
-                });
+                res.traces.push(make_trace(&batch, &acc, k, w, ctx_len, out.exec_time));
             }
             self.strategy.observe(&acc.emitted, out.row(acc.row));
 
@@ -173,17 +162,84 @@ impl<'rt> SpecDecoder<'rt> {
     }
 }
 
-/// Duplicate the last row (or an empty-draft row) until the batch has
-/// exactly k rows — the verification executable's shape is fixed.
-fn pad_batch(batch: &mut DraftBatch, k: usize) {
+/// Normalize a drafted batch to exactly `k` rows: drop duplicate rows
+/// (identical drafts burn verification slots for zero extra acceptance —
+/// first occurrence wins, preserving policy order and the judge's
+/// lowest-row tie-break), truncate overflow, and pad the remainder with
+/// EMPTY (anchor-only) rows rather than clones so the Fig. 4 `alloc_*`
+/// accounting reflects real allocations.
+pub(crate) fn pad_batch(batch: &mut DraftBatch, k: usize) {
+    let mut i = 0;
+    while i < batch.rows.len() {
+        let dup = batch.rows[..i].iter().any(|r| r.tokens == batch.rows[i].tokens);
+        if dup {
+            batch.rows.remove(i);
+        } else {
+            i += 1;
+        }
+    }
     batch.rows.truncate(k);
     while batch.rows.len() < k {
-        let clone = batch
-            .rows
-            .last()
-            .map(|r| r.tokens.clone())
-            .unwrap_or_default();
-        batch.push(clone, StrategyKind::Empty, batch.rows.len());
+        batch.push(Vec::new(), StrategyKind::Empty, batch.rows.len());
+    }
+}
+
+/// Assemble the row-major (k, w+1) token block for a verification call:
+/// column 0 = anchor (last accepted token), columns 1.. = drafts. Short
+/// rows pad with anchor repeats (never match outputs except by genuine
+/// coincidence; judged like any draft).
+pub(crate) fn assemble_block(batch: &DraftBatch, anchor: TokenId, k: usize,
+                             w: usize) -> Vec<TokenId> {
+    let mut tokens = Vec::with_capacity(k * (w + 1));
+    for row in &batch.rows {
+        tokens.push(anchor);
+        tokens.extend_from_slice(&row.tokens);
+        for _ in row.tokens.len()..w {
+            tokens.push(anchor);
+        }
+    }
+    tokens
+}
+
+/// Judge a verification call and commit the winning row's KV tail.
+/// Returns the acceptance and the context length AT CALL TIME (cache.len
+/// before the commit — what the verifier actually attended over).
+pub(crate) fn judge_and_commit(
+    batch: &DraftBatch,
+    out: &StepOutput,
+    cache: &mut SharedKvCache,
+) -> Result<(Acceptance, usize)> {
+    let ctx_len = cache.len;
+    let acc = acceptance::judge(batch, &out.next_ids, out.w1);
+    let consumed = acc.accepted + 1; // block tokens whose KV is valid
+    cache.commit_tail(&out.k_tail, &out.v_tail, out.k, out.w1, acc.row, consumed)?;
+    Ok((acc, ctx_len))
+}
+
+/// Build the per-call trace record shared by both engines.
+pub(crate) fn make_trace(
+    batch: &DraftBatch,
+    acc: &Acceptance,
+    k: usize,
+    w: usize,
+    ctx_len: usize,
+    exec_time: Duration,
+) -> StepTrace {
+    let win = &batch.rows[acc.row];
+    let n_ctx = count_kind(batch, StrategyKind::ContextNgram);
+    let n_big = count_kind(batch, StrategyKind::ExtendedBigram)
+        + count_kind(batch, StrategyKind::ModelBigram);
+    StepTrace {
+        ctx_len,
+        k,
+        w,
+        kind: win.kind,
+        rank: win.rank,
+        accepted: acc.accepted,
+        alloc_context: n_ctx,
+        alloc_bigram: n_big,
+        alloc_other: batch.rows.len() - n_ctx - n_big,
+        exec_time,
     }
 }
 
@@ -214,12 +270,30 @@ mod tests {
     use crate::draft::DraftRow;
 
     #[test]
-    fn pad_batch_fills_to_k() {
+    fn pad_batch_fills_with_empty_rows() {
         let mut b = DraftBatch::new(2);
         b.push(vec![1, 2], StrategyKind::ContextNgram, 0);
         pad_batch(&mut b, 3);
         assert_eq!(b.rows.len(), 3);
-        assert_eq!(b.rows[2].tokens, vec![1, 2]);
+        // padding must be anchor-only rows, not clones of the last draft
+        assert!(b.rows[1].tokens.is_empty());
+        assert!(b.rows[2].tokens.is_empty());
+        assert_eq!(b.rows[1].kind, StrategyKind::Empty);
+        assert_eq!(b.rows[2].kind, StrategyKind::Empty);
+    }
+
+    #[test]
+    fn pad_batch_dedups_identical_rows() {
+        let mut b = DraftBatch::new(2);
+        b.push(vec![4, 5], StrategyKind::ContextNgram, 0);
+        b.push(vec![4, 5], StrategyKind::ExtendedBigram, 0); // duplicate
+        b.push(vec![4, 6], StrategyKind::ExtendedBigram, 1);
+        pad_batch(&mut b, 3);
+        assert_eq!(b.rows.len(), 3);
+        // first occurrence survives, duplicate slot becomes an empty row
+        assert_eq!(b.rows[0].tokens, vec![4, 5]);
+        assert_eq!(b.rows[0].kind, StrategyKind::ContextNgram);
+        assert_eq!(b.rows[1].tokens, vec![4, 6]);
         assert_eq!(b.rows[2].kind, StrategyKind::Empty);
     }
 
@@ -239,5 +313,14 @@ mod tests {
         pad_batch(&mut b, 2);
         assert_eq!(b.rows.len(), 2);
         assert!(b.rows.iter().all(|r: &DraftRow| r.tokens.is_empty()));
+    }
+
+    #[test]
+    fn assemble_block_pads_short_rows_with_anchor() {
+        let mut b = DraftBatch::new(3);
+        b.push(vec![7], StrategyKind::ContextNgram, 0);
+        b.push(vec![8, 9, 10], StrategyKind::ContextNgram, 1);
+        let toks = assemble_block(&b, 99, 2, 3);
+        assert_eq!(toks, vec![99, 7, 99, 99, 99, 8, 9, 10]);
     }
 }

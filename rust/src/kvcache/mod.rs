@@ -212,6 +212,77 @@ impl PagedAllocator {
     }
 }
 
+/// Handle to one lane of a [`KvPool`]. Opaque outside this module so lanes
+/// can only be reached through the pool that owns them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct LaneId(usize);
+
+/// Pool of per-sequence KV lanes for the continuous-batching engine.
+///
+/// Each admitted sequence acquires a lane (its own `SharedKvCache`),
+/// decodes into it for its whole lifetime, and releases it on retirement;
+/// the lane is then reclaimed for the next admission. Lanes are physically
+/// separate buffers, so one sequence's commits can never touch another's
+/// context — the cross-contamination property test in
+/// `rust/tests/batched_engine.rs` pins this down.
+#[derive(Debug)]
+pub struct KvPool {
+    lanes: Vec<SharedKvCache>,
+    free: Vec<usize>,
+}
+
+impl KvPool {
+    pub fn new(layers: usize, max_len: usize, heads: usize, head_dim: usize,
+               n_lanes: usize) -> Self {
+        assert!(n_lanes > 0, "pool needs at least one lane");
+        KvPool {
+            lanes: (0..n_lanes)
+                .map(|_| SharedKvCache::new(layers, max_len, heads, head_dim))
+                .collect(),
+            free: (0..n_lanes).rev().collect(),
+        }
+    }
+
+    /// Total number of lanes (the engine's max concurrency).
+    pub fn capacity(&self) -> usize {
+        self.lanes.len()
+    }
+
+    pub fn available(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.lanes.len() - self.free.len()
+    }
+
+    /// Claim a free lane (length reset to 0), or None under full load —
+    /// the admission loop treats that as backpressure.
+    pub fn acquire(&mut self) -> Option<LaneId> {
+        let i = self.free.pop()?;
+        self.lanes[i].len = 0;
+        Some(LaneId(i))
+    }
+
+    /// Return a retired sequence's lane to the free list. Idempotent: a
+    /// double release is ignored rather than corrupting the free list.
+    pub fn release(&mut self, lane: LaneId) {
+        debug_assert!(!self.free.contains(&lane.0), "double lane release");
+        if !self.free.contains(&lane.0) {
+            self.lanes[lane.0].len = 0;
+            self.free.push(lane.0);
+        }
+    }
+
+    pub fn lane(&self, lane: LaneId) -> &SharedKvCache {
+        &self.lanes[lane.0]
+    }
+
+    pub fn lane_mut(&mut self, lane: LaneId) -> &mut SharedKvCache {
+        &mut self.lanes[lane.0]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -282,6 +353,31 @@ mod tests {
         assert_eq!(a.free_blocks(), 4);
         a.grow(&mut t2, 17).unwrap();
         assert_eq!(a.used_blocks(), 2);
+    }
+
+    #[test]
+    fn kv_pool_acquire_release_cycle() {
+        let mut p = KvPool::new(1, 8, 1, 2, 2);
+        assert_eq!((p.capacity(), p.available(), p.in_use()), (2, 2, 0));
+        let a = p.acquire().unwrap();
+        let b = p.acquire().unwrap();
+        assert_ne!(a, b);
+        assert!(p.acquire().is_none(), "over-capacity acquire must fail");
+        p.lane_mut(a).len = 5;
+        p.release(a);
+        assert_eq!(p.available(), 1);
+        let c = p.acquire().unwrap();
+        assert_eq!(p.lane(c).len, 0, "reclaimed lane must be reset");
+        assert_eq!(p.in_use(), 2);
+    }
+
+    #[test]
+    fn kv_pool_lanes_are_distinct_buffers() {
+        let mut p = KvPool::new(1, 4, 1, 2, 2);
+        let a = p.acquire().unwrap();
+        let b = p.acquire().unwrap();
+        p.lane_mut(a).k_data[0] = 7.0;
+        assert_eq!(p.lane(b).k_data[0], 0.0);
     }
 
     #[test]

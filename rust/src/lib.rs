@@ -5,15 +5,26 @@
 //! (Stewart et al., 2024) as a three-layer Rust + JAX + Pallas stack:
 //!
 //! - **L3 (this crate)** — serving coordinator: draft strategies
-//!   ([`draft`]), batched guess-and-verify engine ([`engine`]), KV-cache
-//!   management ([`kvcache`]), request scheduling ([`scheduler`]), HTTP
-//!   serving ([`server`]), the accelerator cost model ([`costmodel`]) and
-//!   the paper's bench harness ([`bench`]).
+//!   ([`draft`]), guess-and-verify engines ([`engine`]) — the per-sequence
+//!   [`engine::SpecDecoder`] and the continuous-batching
+//!   [`engine::BatchedEngine`] that verifies ALL active sequences in one
+//!   packed call per step over a pooled KV cache
+//!   ([`kvcache::KvPool`]) — KV-cache management ([`kvcache`]), request
+//!   scheduling ([`scheduler`]), HTTP serving ([`server`]), the
+//!   accelerator cost model ([`costmodel`]) and the paper's bench harness
+//!   ([`bench`]).
 //! - **L2/L1 (python, build-time only)** — JAX transformer + Pallas
 //!   kernels, AOT-lowered to HLO text and executed through [`runtime`]
-//!   (PJRT CPU client). Python never runs on the request path.
+//!   behind the `pjrt` feature. Python never runs on the request path.
 //!
-//! Start with [`engine::SpecDecoder`] or `examples/quickstart.rs`.
+//! Without the `pjrt` toolchain the crate runs on the deterministic
+//! [`runtime::reference`] backend against the synthetic artifact tree
+//! built by [`testkit`] — which is what makes a bare checkout build, test
+//! and serve with zero external dependencies beyond `anyhow`.
+//!
+//! Start with [`engine::SpecDecoder`] or `examples/quickstart.rs`; for
+//! cross-request batching see [`engine::batched::generate_all`] or
+//! `ngrammys serve --batch N`.
 
 pub mod bench;
 pub mod config;
@@ -25,6 +36,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod scheduler;
 pub mod server;
+pub mod testkit;
 pub mod tokenizer;
 pub mod util;
 pub mod workload;

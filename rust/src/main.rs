@@ -31,6 +31,8 @@ COMMANDS:
       [--max-tokens 64] [--compare]
   serve                       HTTP server (POST /generate, GET /metrics)
       [--model base] [--addr 127.0.0.1:8077] [--workers 1]
+      [--batch N]             continuous batching: N pooled KV lanes, one
+                              packed verification call per step (N >= 2)
   bench <target>              reproduce a paper table/figure:
       fig1                    phase-transition heatmaps (cost model)
       fig2                    tokens/call vs top-k  [--model base]
@@ -40,6 +42,8 @@ COMMANDS:
       qsweep                  footnote-4 q sweep    [--model base]
       ablation-alloc          allocation-policy ablation
       ablation-hardware       OTB-threshold sensitivity (footnote 5)
+      batched                 cross-request batching throughput
+                              [--model base] [--conc 1,2,4,8]
       all                     everything above
       common: [--prompts N] [--max-new N] [--ks 1,5,10] [--ws 2,6,10]
 ";
@@ -153,6 +157,7 @@ fn serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
         addr: args.get_or("addr", "127.0.0.1:8077").to_string(),
         workers: args.get_usize("workers", 1).map_err(|e| anyhow!(e))?,
         queue_cap: args.get_usize("queue-cap", 256).map_err(|e| anyhow!(e))?,
+        batch: args.get_usize("batch", 0).map_err(|e| anyhow!(e))?,
         default_engine: EngineConfig {
             k: args.get_usize("k", 10).map_err(|e| anyhow!(e))?,
             w: args.get_usize("w", 10).map_err(|e| anyhow!(e))?,
@@ -191,6 +196,12 @@ fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
         "qsweep" => bench::qsweep::run_qsweep(&load()?, n_prompts, max_new),
         "ablation-alloc" => bench::qsweep::run_alloc_ablation(&load()?, n_prompts, max_new),
         "ablation-hardware" => bench::qsweep::run_hardware_ablation(&load()?, n_prompts, max_new),
+        "batched" => {
+            let conc = args
+                .get_usize_list("conc", &bench::batched::CONCURRENCIES)
+                .map_err(|e| anyhow!(e))?;
+            bench::batched::run(&load()?, n_prompts, max_new, &conc)
+        }
         "table1" => {
             let models: Vec<String> = args
                 .get_or("models", "small,base,large")
@@ -208,6 +219,7 @@ fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
             bench::qsweep::run_qsweep(&ctx, n_prompts, max_new)?;
             bench::qsweep::run_alloc_ablation(&ctx, n_prompts, max_new)?;
             bench::qsweep::run_hardware_ablation(&ctx, n_prompts, max_new)?;
+            bench::batched::run(&ctx, n_prompts, max_new, &bench::batched::CONCURRENCIES)?;
             drop(ctx);
             for m in ["small", "base", "large"] {
                 let c = BenchCtx::load(manifest.clone(), m)?;

@@ -1,30 +1,38 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts and executes them on the
-//! CPU PJRT client (`xla` crate). This is the ONLY place python output
-//! crosses into the serving process, and it happens at load time.
+//! Model runtime: loads a model's artifacts and executes prefill and
+//! batched verification calls against it, behind a backend-neutral API.
 //!
-//! Design notes:
-//! - Interchange is HLO **text** (jax >= 0.5 serialized protos use 64-bit
-//!   instruction ids that xla_extension 0.5.1 rejects; the text parser
-//!   reassigns ids — see /opt/xla-example/README.md).
-//! - Model weights are uploaded ONCE as device buffers; per-call arguments
-//!   (tokens, KV cache, cache_len) are marshalled per step via
-//!   `buffer_from_host_buffer` and everything runs through `execute_b`.
-//! - Executables for each (k, w) shape are compiled lazily on first use
-//!   and cached for the life of the process.
+//! Two backends implement the same contract:
+//!
+//! - [`reference`] (default) — a deterministic pure-Rust model that derives
+//!   its outputs from the KV cache contents, so every cache-management bug
+//!   is observable. Runs anywhere, needs no artifacts beyond the synthetic
+//!   tree (`testkit`), and is what CI exercises.
+//! - [`pjrt`] (feature `pjrt`) — the real path: AOT HLO-text artifacts from
+//!   the python build, compiled and executed on the CPU PJRT client
+//!   (`xla` crate). Python never runs on the request path.
+//!
+//! New in the batched-engine refactor: [`ModelRuntime::spec_step_packed`]
+//! verifies draft blocks from MANY sequences in one call — the paper's
+//! batch dimension spent across requests as well as speculation rows. The
+//! reference backend executes the packed call as a single unit; the PJRT
+//! backend currently lowers it to per-sequence executions (per-sequence
+//! caches live in separate device buffers) and is the documented gap.
+
+pub mod reference;
+
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 use std::cell::RefCell;
-use std::collections::HashMap;
-use std::path::Path;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use anyhow::{anyhow, Result};
 
 use crate::config::ModelArtifacts;
 use crate::kvcache::SharedKvCache;
 use crate::tokenizer::TokenId;
 
-/// Output of one verification step.
+/// Output of one verification step (one sequence's block).
 #[derive(Debug)]
 pub struct StepOutput {
     /// greedy next-token ids, row-major (k, w+1)
@@ -34,7 +42,9 @@ pub struct StepOutput {
     /// KV tails, (layers, k, w1, heads, head_dim) flattened
     pub k_tail: Vec<f32>,
     pub v_tail: Vec<f32>,
-    /// wall time of the device call (execute + output fetch)
+    /// wall time of the device call (execute + output fetch); for packed
+    /// calls this is the whole packed call's latency — the time every
+    /// participating sequence actually waited
     pub exec_time: Duration,
 }
 
@@ -53,37 +63,42 @@ pub struct PrefillOutput {
     pub exec_time: Duration,
 }
 
-/// A loaded model: weights on device + lazily compiled executables.
+/// One sequence's slice of a packed multi-sequence verification call:
+/// `k` draft rows of `w+1` tokens (row-major) against that sequence's own
+/// KV lane. All blocks in one packed call share the same `w`.
+pub struct PackedBlock<'a> {
+    pub k: usize,
+    pub tokens: &'a [TokenId],
+    pub cache: &'a SharedKvCache,
+}
+
+enum Backend {
+    Reference(reference::RefBackend),
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtBackend),
+}
+
+/// A loaded model: artifacts + execution backend.
 pub struct ModelRuntime {
-    client: PjRtClient,
     art: ModelArtifacts,
-    params: Vec<PjRtBuffer>,
-    steps: RefCell<HashMap<(usize, usize), PjRtLoadedExecutable>>,
-    prefills: RefCell<HashMap<usize, PjRtLoadedExecutable>>,
-    /// cumulative compile time (reported by the bench harnesses)
+    backend: Backend,
+    /// cumulative artifact compile/validate time (reported by benches)
     pub compile_time: RefCell<Duration>,
 }
 
-// SAFETY: the PJRT CPU client is thread-safe for compilation and execution
-// (PJRT C API contract); the RefCell caches are never shared across threads
-// without external synchronization — the serving layer wraps ModelRuntime
-// in a Mutex.
+// SAFETY (pjrt only): the PJRT CPU client is thread-safe for compilation
+// and execution (PJRT C API contract); the RefCell caches are never shared
+// across threads without external synchronization — the serving layer gives
+// each worker its own ModelRuntime. The reference backend is Send already.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for ModelRuntime {}
 
 impl ModelRuntime {
     pub fn load(art: &ModelArtifacts) -> Result<Self> {
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Self::load_with_client(client, art)
-    }
-
-    pub fn load_with_client(client: PjRtClient, art: &ModelArtifacts) -> Result<Self> {
-        let params = upload_params(&client, art)?;
+        let backend = pick_backend(art)?;
         Ok(ModelRuntime {
-            client,
             art: art.clone(),
-            params,
-            steps: RefCell::new(HashMap::new()),
-            prefills: RefCell::new(HashMap::new()),
+            backend,
             compile_time: RefCell::new(Duration::ZERO),
         })
     }
@@ -92,52 +107,46 @@ impl ModelRuntime {
         &self.art
     }
 
-    pub fn client(&self) -> &PjRtClient {
-        &self.client
-    }
-
-    fn compile(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
-        let t = Instant::now();
-        let proto = HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {path:?}"))?;
-        *self.compile_time.borrow_mut() += t.elapsed();
-        Ok(exe)
-    }
-
-    /// Ensure the (k, w) step executable is compiled (startup warming).
-    pub fn warm_step(&self, k: usize, w: usize) -> Result<()> {
-        let mut steps = self.steps.borrow_mut();
-        if !steps.contains_key(&(k, w)) {
-            let path = self
-                .art
-                .steps
-                .get(&(k, w))
-                .ok_or_else(|| anyhow!("no step artifact for (k={k}, w={w})"))?;
-            let exe = self.compile(path)?;
-            steps.insert((k, w), exe);
+    /// Which execution backend this runtime is using.
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            Backend::Reference(_) => "reference",
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(_) => "pjrt",
         }
-        Ok(())
+    }
+
+    /// Ensure the (k, w) step executable is compiled/validated.
+    pub fn warm_step(&self, k: usize, w: usize) -> Result<()> {
+        let path = self
+            .art
+            .steps
+            .get(&(k, w))
+            .ok_or_else(|| anyhow!("no step artifact for (k={k}, w={w})"))?;
+        let t = Instant::now();
+        let r = match &self.backend {
+            Backend::Reference(b) => b.warm_step(path, k, w),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.warm_step(path, k, w),
+        };
+        *self.compile_time.borrow_mut() += t.elapsed();
+        r
     }
 
     pub fn warm_prefill(&self, bucket: usize) -> Result<()> {
-        let mut pf = self.prefills.borrow_mut();
-        if !pf.contains_key(&bucket) {
-            let path = self
-                .art
-                .prefills
-                .get(&bucket)
-                .ok_or_else(|| anyhow!("no prefill bucket {bucket}"))?;
-            let exe = self.compile(path)?;
-            pf.insert(bucket, exe);
-        }
-        Ok(())
+        let path = self
+            .art
+            .prefills
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("no prefill bucket {bucket}"))?;
+        let t = Instant::now();
+        let r = match &self.backend {
+            Backend::Reference(b) => b.warm_prefill(path, bucket),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.warm_prefill(path, bucket),
+        };
+        *self.compile_time.borrow_mut() += t.elapsed();
+        r
     }
 
     /// Run prefill for `prompt`, filling `cache` and returning the first
@@ -151,36 +160,11 @@ impl ModelRuntime {
             .prefill_bucket(prompt.len())
             .ok_or_else(|| anyhow!("prompt of {} tokens exceeds prefill buckets", prompt.len()))?;
         self.warm_prefill(bucket)?;
-        let pf = self.prefills.borrow();
-        let exe = pf.get(&bucket).unwrap();
-
-        let mut toks: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
-        toks.resize(bucket, 0);
-        let tok_buf = self
-            .client
-            .buffer_from_host_buffer(&toks, &[1, bucket], None)?;
-        let len_buf = self
-            .client
-            .buffer_from_host_buffer(&[prompt.len() as i32], &[], None)?;
-
-        let mut args: Vec<&PjRtBuffer> = self.params.iter().collect();
-        args.push(&tok_buf);
-        args.push(&len_buf);
-
-        let t = Instant::now();
-        let result = exe.execute_b(&args)?;
-        let lit = result[0][0].to_literal_sync()?;
-        let exec_time = t.elapsed();
-
-        let outs = tuple_elements(lit)?;
-        if outs.len() != 3 {
-            return Err(anyhow!("prefill returned {} outputs, want 3", outs.len()));
+        match &self.backend {
+            Backend::Reference(b) => b.prefill(&self.art, prompt, cache),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.prefill(&self.art, bucket, prompt, cache),
         }
-        let next_id = outs[0].to_vec::<i32>()?[0] as TokenId;
-        let kc = outs[1].to_vec::<f32>()?;
-        let vc = outs[2].to_vec::<f32>()?;
-        cache.install(kc, vc, prompt.len())?;
-        Ok(PrefillOutput { next_id, exec_time })
     }
 
     /// One verification call on a (k, w+1) block. `tokens` is row-major
@@ -192,59 +176,35 @@ impl ModelRuntime {
         tokens: &[TokenId],
         cache: &SharedKvCache,
     ) -> Result<StepOutput> {
-        let w1 = w + 1;
-        if tokens.len() != k * w1 {
-            return Err(anyhow!("tokens len {} != k*w1 {}", tokens.len(), k * w1));
-        }
-        if cache.len + w1 > cache.max_len {
-            return Err(anyhow!(
-                "cache too full for step: len {} + w1 {} > {}",
-                cache.len,
-                w1,
-                cache.max_len
-            ));
-        }
+        validate_block(k, w, tokens.len(), cache)?;
         self.warm_step(k, w)?;
-        let steps = self.steps.borrow();
-        let exe = steps.get(&(k, w)).unwrap();
-
-        let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
-        let d = &self.art.dims;
-        let cache_dims = [d.n_layers, d.max_len, d.n_heads, d.head_dim];
-        let tok_buf = self.client.buffer_from_host_buffer(&toks, &[k, w1], None)?;
-        let kc_buf = self
-            .client
-            .buffer_from_host_buffer(&cache.k_data, &cache_dims, None)?;
-        let vc_buf = self
-            .client
-            .buffer_from_host_buffer(&cache.v_data, &cache_dims, None)?;
-        let len_buf = self
-            .client
-            .buffer_from_host_buffer(&[cache.len as i32], &[], None)?;
-
-        let mut args: Vec<&PjRtBuffer> = self.params.iter().collect();
-        args.push(&tok_buf);
-        args.push(&kc_buf);
-        args.push(&vc_buf);
-        args.push(&len_buf);
-
-        let t = Instant::now();
-        let result = exe.execute_b(&args)?;
-        let lit = result[0][0].to_literal_sync()?;
-        let exec_time = t.elapsed();
-
-        let outs = tuple_elements(lit)?;
-        if outs.len() != 3 {
-            return Err(anyhow!("step returned {} outputs, want 3", outs.len()));
+        match &self.backend {
+            Backend::Reference(b) => b.spec_step(&self.art, k, w, tokens, cache),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(b) => b.spec_step(&self.art, k, w, tokens, cache),
         }
-        let next_ids: Vec<TokenId> = outs[0]
-            .to_vec::<i32>()?
-            .into_iter()
-            .map(|t| t as TokenId)
-            .collect();
-        let k_tail = outs[1].to_vec::<f32>()?;
-        let v_tail = outs[2].to_vec::<f32>()?;
-        Ok(StepOutput { next_ids, k, w1, k_tail, v_tail, exec_time })
+    }
+
+    /// One PACKED verification call over blocks from many sequences: the
+    /// (sum of k_i, w+1) batch the batched engine builds per step. All
+    /// blocks share `w`; each keeps its own KV lane. Returns one
+    /// `StepOutput` per block, in order.
+    pub fn spec_step_packed(&self, w: usize, blocks: &[PackedBlock]) -> Result<Vec<StepOutput>> {
+        if blocks.is_empty() {
+            return Ok(Vec::new());
+        }
+        for b in blocks {
+            validate_block(b.k, w, b.tokens.len(), b.cache)?;
+            self.warm_step(b.k, w)?;
+        }
+        match &self.backend {
+            Backend::Reference(r) => r.spec_step_packed(&self.art, w, blocks),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => blocks
+                .iter()
+                .map(|b| p.spec_step(&self.art, b.k, w, b.tokens, b.cache))
+                .collect(),
+        }
     }
 
     /// Largest available (k', w') shape with k' <= k, w' <= w and w'+1 <=
@@ -259,42 +219,48 @@ impl ModelRuntime {
     }
 }
 
-fn upload_params(client: &PjRtClient, art: &ModelArtifacts) -> Result<Vec<PjRtBuffer>> {
-    let bytes = std::fs::read(&art.params_bin)
-        .with_context(|| format!("reading params {:?}", art.params_bin))?;
-    let total: usize = art.param_spec.iter().map(|p| p.numel()).sum();
-    if bytes.len() != total * 4 {
+fn validate_block(k: usize, w: usize, tok_len: usize, cache: &SharedKvCache) -> Result<()> {
+    let w1 = w + 1;
+    if tok_len != k * w1 {
+        return Err(anyhow!("tokens len {} != k*w1 {}", tok_len, k * w1));
+    }
+    if cache.len + w1 > cache.max_len {
         return Err(anyhow!(
-            "params.bin is {} bytes, manifest expects {}",
-            bytes.len(),
-            total * 4
+            "cache too full for step: len {} + w1 {} > {}",
+            cache.len,
+            w1,
+            cache.max_len
         ));
     }
-    let mut floats = vec![0f32; total];
-    for (i, c) in bytes.chunks_exact(4).enumerate() {
-        floats[i] = f32::from_le_bytes(c.try_into().unwrap());
-    }
-    let mut bufs = Vec::with_capacity(art.param_spec.len());
-    let mut off = 0;
-    for spec in &art.param_spec {
-        let n = spec.numel();
-        let buf = client
-            .buffer_from_host_buffer(&floats[off..off + n], &spec.shape, None)
-            .with_context(|| format!("uploading param {}", spec.name))?;
-        bufs.push(buf);
-        off += n;
-    }
-    Ok(bufs)
+    Ok(())
 }
 
-fn tuple_elements(lit: Literal) -> Result<Vec<Literal>> {
-    Ok(lit.to_tuple()?)
+#[cfg(not(feature = "pjrt"))]
+fn pick_backend(art: &ModelArtifacts) -> Result<Backend> {
+    Ok(Backend::Reference(reference::RefBackend::load(art)?))
+}
+
+/// With the pjrt feature on, artifacts pick their backend by content: the
+/// synthetic testkit tree carries REFSTEP headers, real AOT builds carry
+/// HLO text.
+#[cfg(feature = "pjrt")]
+fn pick_backend(art: &ModelArtifacts) -> Result<Backend> {
+    let looks_reference = art
+        .steps
+        .values()
+        .next()
+        .and_then(|p| std::fs::read_to_string(p).ok())
+        .map(|t| t.starts_with(reference::STEP_MAGIC))
+        .unwrap_or(false);
+    if looks_reference {
+        Ok(Backend::Reference(reference::RefBackend::load(art)?))
+    } else {
+        Ok(Backend::Pjrt(pjrt::PjrtBackend::load(art)?))
+    }
 }
 
 #[cfg(test)]
 mod tests {
-    // ModelRuntime integration tests live in rust/tests/ (they need the
-    // built artifacts); unit coverage here is limited to pure helpers.
     use super::*;
 
     #[test]
@@ -309,5 +275,16 @@ mod tests {
         };
         assert_eq!(out.row(0), &[1, 2, 3]);
         assert_eq!(out.row(1), &[4, 5, 6]);
+    }
+
+    #[test]
+    fn validate_block_checks_shape_and_room() {
+        let cache = SharedKvCache::new(1, 8, 1, 2);
+        assert!(validate_block(2, 1, 4, &cache).is_ok());
+        assert!(validate_block(2, 1, 5, &cache).is_err()); // len mismatch
+        let mut full = SharedKvCache::new(1, 8, 1, 2);
+        full.len = 7;
+        assert!(validate_block(1, 1, 2, &full).is_err()); // no room for w1=2
+        assert!(validate_block(1, 0, 1, &full).is_ok());
     }
 }

@@ -1,0 +1,215 @@
+//! PJRT/XLA execution backend (feature `pjrt`): loads the AOT HLO-text
+//! artifacts written by `python -m compile.aot` and executes them on the
+//! CPU PJRT client (`xla` crate).
+//!
+//! This module is OFF by default so the crate builds without the offline
+//! accelerator toolchain; enable with `--features pjrt` after adding the
+//! `xla` crate from the toolchain image to [dependencies].
+//!
+//! Design notes:
+//! - Interchange is HLO **text** (jax >= 0.5 serialized protos use 64-bit
+//!   instruction ids that xla_extension 0.5.1 rejects; the text parser
+//!   reassigns ids — see /opt/xla-example/README.md).
+//! - Model weights are uploaded ONCE as device buffers; per-call arguments
+//!   (tokens, KV cache, cache_len) are marshalled per step via
+//!   `buffer_from_host_buffer` and everything runs through `execute_b`.
+//! - Executables for each (k, w) shape are compiled lazily on first use
+//!   and cached for the life of the process.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::config::ModelArtifacts;
+use crate::kvcache::SharedKvCache;
+use crate::tokenizer::TokenId;
+
+use super::{PrefillOutput, StepOutput};
+
+pub struct PjrtBackend {
+    client: PjRtClient,
+    params: Vec<PjRtBuffer>,
+    steps: RefCell<HashMap<(usize, usize), PjRtLoadedExecutable>>,
+    prefills: RefCell<HashMap<usize, PjRtLoadedExecutable>>,
+}
+
+impl PjrtBackend {
+    pub fn load(art: &ModelArtifacts) -> Result<Self> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let params = upload_params(&client, art)?;
+        Ok(PjrtBackend {
+            client,
+            params,
+            steps: RefCell::new(HashMap::new()),
+            prefills: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    fn compile(&self, path: &Path) -> Result<PjRtLoadedExecutable> {
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))
+    }
+
+    pub fn warm_step(&self, path: &Path, k: usize, w: usize) -> Result<()> {
+        let mut steps = self.steps.borrow_mut();
+        if !steps.contains_key(&(k, w)) {
+            let exe = self.compile(path)?;
+            steps.insert((k, w), exe);
+        }
+        Ok(())
+    }
+
+    pub fn warm_prefill(&self, path: &Path, bucket: usize) -> Result<()> {
+        let mut pf = self.prefills.borrow_mut();
+        if !pf.contains_key(&bucket) {
+            let exe = self.compile(path)?;
+            pf.insert(bucket, exe);
+        }
+        Ok(())
+    }
+
+    /// Run prefill for `prompt` (bucket pre-warmed by the caller), filling
+    /// `cache` and returning the first greedy next-token.
+    pub fn prefill(
+        &self,
+        art: &ModelArtifacts,
+        bucket: usize,
+        prompt: &[TokenId],
+        cache: &mut SharedKvCache,
+    ) -> Result<PrefillOutput> {
+        let pf = self.prefills.borrow();
+        let exe = pf
+            .get(&bucket)
+            .ok_or_else(|| anyhow!("prefill bucket {bucket} not warmed"))?;
+        let _ = art;
+
+        let mut toks: Vec<i32> = prompt.iter().map(|&t| t as i32).collect();
+        toks.resize(bucket, 0);
+        let tok_buf = self
+            .client
+            .buffer_from_host_buffer(&toks, &[1, bucket], None)?;
+        let len_buf = self
+            .client
+            .buffer_from_host_buffer(&[prompt.len() as i32], &[], None)?;
+
+        let mut args: Vec<&PjRtBuffer> = self.params.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+
+        let t = Instant::now();
+        let result = exe.execute_b(&args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let exec_time = t.elapsed();
+
+        let outs = tuple_elements(lit)?;
+        if outs.len() != 3 {
+            return Err(anyhow!("prefill returned {} outputs, want 3", outs.len()));
+        }
+        let next_id = outs[0].to_vec::<i32>()?[0] as TokenId;
+        let kc = outs[1].to_vec::<f32>()?;
+        let vc = outs[2].to_vec::<f32>()?;
+        cache.install(kc, vc, prompt.len())?;
+        Ok(PrefillOutput { next_id, exec_time })
+    }
+
+    /// One verification call on a (k, w+1) block (shape pre-warmed and
+    /// pre-validated by the caller).
+    pub fn spec_step(
+        &self,
+        art: &ModelArtifacts,
+        k: usize,
+        w: usize,
+        tokens: &[TokenId],
+        cache: &SharedKvCache,
+    ) -> Result<StepOutput> {
+        let w1 = w + 1;
+        let steps = self.steps.borrow();
+        let exe = steps
+            .get(&(k, w))
+            .ok_or_else(|| anyhow!("step ({k}, {w}) not warmed"))?;
+
+        let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        let d = &art.dims;
+        let cache_dims = [d.n_layers, d.max_len, d.n_heads, d.head_dim];
+        let tok_buf = self.client.buffer_from_host_buffer(&toks, &[k, w1], None)?;
+        let kc_buf = self
+            .client
+            .buffer_from_host_buffer(&cache.k_data, &cache_dims, None)?;
+        let vc_buf = self
+            .client
+            .buffer_from_host_buffer(&cache.v_data, &cache_dims, None)?;
+        let len_buf = self
+            .client
+            .buffer_from_host_buffer(&[cache.len as i32], &[], None)?;
+
+        let mut args: Vec<&PjRtBuffer> = self.params.iter().collect();
+        args.push(&tok_buf);
+        args.push(&kc_buf);
+        args.push(&vc_buf);
+        args.push(&len_buf);
+
+        let t = Instant::now();
+        let result = exe.execute_b(&args)?;
+        let lit = result[0][0].to_literal_sync()?;
+        let exec_time = t.elapsed();
+
+        let outs = tuple_elements(lit)?;
+        if outs.len() != 3 {
+            return Err(anyhow!("step returned {} outputs, want 3", outs.len()));
+        }
+        let next_ids: Vec<TokenId> = outs[0]
+            .to_vec::<i32>()?
+            .into_iter()
+            .map(|t| t as TokenId)
+            .collect();
+        let k_tail = outs[1].to_vec::<f32>()?;
+        let v_tail = outs[2].to_vec::<f32>()?;
+        Ok(StepOutput { next_ids, k, w1, k_tail, v_tail, exec_time })
+    }
+}
+
+fn upload_params(client: &PjRtClient, art: &ModelArtifacts) -> Result<Vec<PjRtBuffer>> {
+    let bytes = std::fs::read(&art.params_bin)
+        .with_context(|| format!("reading params {:?}", art.params_bin))?;
+    let total: usize = art.param_spec.iter().map(|p| p.numel()).sum();
+    if bytes.len() != total * 4 {
+        return Err(anyhow!(
+            "params.bin is {} bytes, manifest expects {}",
+            bytes.len(),
+            total * 4
+        ));
+    }
+    let mut floats = vec![0f32; total];
+    for (i, c) in bytes.chunks_exact(4).enumerate() {
+        floats[i] = f32::from_le_bytes(c.try_into().unwrap());
+    }
+    let mut bufs = Vec::with_capacity(art.param_spec.len());
+    let mut off = 0;
+    for spec in &art.param_spec {
+        let n = spec.numel();
+        let buf = client
+            .buffer_from_host_buffer(&floats[off..off + n], &spec.shape, None)
+            .with_context(|| format!("uploading param {}", spec.name))?;
+        bufs.push(buf);
+        off += n;
+    }
+    Ok(bufs)
+}
+
+fn tuple_elements(lit: Literal) -> Result<Vec<Literal>> {
+    Ok(lit.to_tuple()?)
+}

@@ -1,14 +1,23 @@
-//! Request scheduler: bounded FIFO admission queue + worker pool.
+//! Request scheduler: bounded FIFO admission queue + decode workers.
 //!
-//! Parallelism structure mirrors the paper: the *batch dimension of a model
-//! call is spent on speculation rows for one sequence* (§3 — the paper
-//! serves at request-batch 1 and batches trajectories), so the scheduler
-//! parallelizes across requests with workers (each worker owns a
-//! ModelRuntime; PJRT executables are per-worker), and backpressure is a
-//! bounded queue: `submit` fails fast when the queue is full.
+//! Two execution modes, selected by `ServeConfig::batch`:
+//!
+//! - **Per-sequence workers** (`batch <= 1`, the paper's §3 setting): each
+//!   worker owns a private `ModelRuntime` and decodes one request at a time
+//!   with `SpecDecoder` — the model-call batch dimension is spent entirely
+//!   on that request's speculation rows.
+//! - **Batched engine** (`batch >= 2`): one engine thread drives a
+//!   continuous-batching [`BatchedEngine`] with `batch` pooled KV lanes.
+//!   Requests are admitted as lanes free up, every active sequence's draft
+//!   rows are verified in one packed call per step, and responses complete
+//!   out of order — the batch dimension is spent on requests AND rows.
+//!
+//! Both modes share the same bounded-queue backpressure: `submit` fails
+//! fast when the queue is full.
 
+use std::collections::HashMap;
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -20,7 +29,7 @@ use crate::draft::{
     ContextNgram, DraftStrategy, ExtendedBigram, JacobiDraft, MixedStrategy, ModelBigram,
     ModelUnigram, NgramTables, SessionNgramCache,
 };
-use crate::engine::{NoDraft, SpecDecoder};
+use crate::engine::{BatchedEngine, GenResult, NoDraft, SeqId, SpecDecoder};
 use crate::metrics::Metrics;
 use crate::runtime::ModelRuntime;
 use crate::tokenizer::TokenId;
@@ -116,8 +125,9 @@ pub struct Scheduler {
 }
 
 impl Scheduler {
-    /// Spin up `cfg.workers` workers for `model`. Each worker loads its own
-    /// ModelRuntime (PJRT executables are not shared across threads).
+    /// Spin up workers for `model`: `cfg.workers` per-sequence workers, or
+    /// (when `cfg.batch >= 2`) one batched engine thread with `cfg.batch`
+    /// KV lanes. Each thread loads its own ModelRuntime.
     pub fn start(manifest: &Manifest, model: &str, cfg: &ServeConfig) -> Result<Scheduler> {
         let art = manifest.model(model)?.clone();
         let tables = Arc::new(NgramTables::load(&art)?);
@@ -126,25 +136,46 @@ impl Scheduler {
         let rx = Arc::new(Mutex::new(rx));
 
         let mut workers = Vec::new();
-        for wid in 0..cfg.workers.max(1) {
+        if cfg.batch >= 2 {
+            let lanes = cfg.batch;
             let rx = rx.clone();
-            let art = art.clone();
             let tables = tables.clone();
             let metrics = metrics.clone();
             let handle = std::thread::Builder::new()
-                .name(format!("ngrammys-worker-{wid}"))
+                .name("ngrammys-batch-engine".to_string())
                 .spawn(move || {
                     let runtime = match ModelRuntime::load(&art) {
                         Ok(rt) => rt,
                         Err(e) => {
-                            eprintln!("worker {wid}: runtime load failed: {e:#}");
+                            eprintln!("batch engine: runtime load failed: {e:#}");
                             return;
                         }
                     };
-                    worker_loop(wid, runtime, tables, metrics, rx);
+                    batched_worker_loop(&runtime, lanes, tables, metrics, rx);
                 })
-                .expect("spawning worker");
+                .expect("spawning batch engine");
             workers.push(handle);
+        } else {
+            for wid in 0..cfg.workers.max(1) {
+                let rx = rx.clone();
+                let art = art.clone();
+                let tables = tables.clone();
+                let metrics = metrics.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("ngrammys-worker-{wid}"))
+                    .spawn(move || {
+                        let runtime = match ModelRuntime::load(&art) {
+                            Ok(rt) => rt,
+                            Err(e) => {
+                                eprintln!("worker {wid}: runtime load failed: {e:#}");
+                                return;
+                            }
+                        };
+                        worker_loop(wid, runtime, tables, metrics, rx);
+                    })
+                    .expect("spawning worker");
+                workers.push(handle);
+            }
         }
         Ok(Scheduler { tx, metrics, workers })
     }
@@ -181,6 +212,20 @@ impl Scheduler {
     }
 }
 
+fn finish_response(metrics: &Metrics, t_submit: Instant, r: GenResult) -> GenResponse {
+    let accepted = r.tokens.len().saturating_sub(r.calls);
+    metrics.record_request(t_submit.elapsed(), r.tokens.len(), r.calls, accepted);
+    for tr in &r.traces {
+        metrics.step_latency.observe(tr.exec_time);
+    }
+    GenResponse {
+        tokens_per_call: r.tokens_per_call(),
+        calls: r.calls,
+        latency_ms: t_submit.elapsed().as_secs_f64() * 1e3,
+        tokens: r.tokens,
+    }
+}
+
 fn worker_loop(
     _wid: usize,
     runtime: ModelRuntime,
@@ -199,20 +244,83 @@ fn worker_loop(
         let strategy = make_strategy(job.req.strategy, &tables, job.req.engine.q);
         let mut dec = SpecDecoder::new(&runtime, strategy, job.req.engine.clone());
         dec.collect_traces = true; // feeds the step-latency histogram
-        let result = dec.generate(&job.req.prompt).map(|r| {
-            let accepted = r.tokens.len().saturating_sub(r.calls);
-            metrics.record_request(t.elapsed(), r.tokens.len(), r.calls, accepted);
-            for tr in &r.traces {
-                metrics.step_latency.observe(tr.exec_time);
-            }
-            GenResponse {
-                tokens_per_call: r.tokens_per_call(),
-                calls: r.calls,
-                latency_ms: t.elapsed().as_secs_f64() * 1e3,
-                tokens: r.tokens,
-            }
-        });
+        let result = dec
+            .generate(&job.req.prompt)
+            .map(|r| finish_response(&metrics, t, r));
         let _ = job.reply.send(result);
+    }
+}
+
+/// The continuous-batching worker: one engine, many in-flight requests.
+/// Blocks on the queue only when idle; while sequences are active it
+/// drains the queue opportunistically between steps so arrivals join the
+/// running batch without waiting for it to finish.
+fn batched_worker_loop(
+    runtime: &ModelRuntime,
+    lanes: usize,
+    tables: Arc<NgramTables>,
+    metrics: Arc<Metrics>,
+    rx: Arc<Mutex<Receiver<Job>>>,
+) {
+    let mut eng = BatchedEngine::new(runtime, lanes);
+    eng.collect_traces = true;
+    let mut inflight: HashMap<SeqId, (Sender<Result<GenResponse>>, Instant)> = HashMap::new();
+    loop {
+        if eng.active() == 0 {
+            let job = match rx.lock().unwrap().recv() {
+                Ok(j) => j,
+                Err(_) => return, // scheduler dropped, everything drained
+            };
+            admit_job(&mut eng, job, &tables, &metrics, &mut inflight);
+        }
+        while eng.has_capacity() {
+            match rx.lock().unwrap().try_recv() {
+                Ok(job) => admit_job(&mut eng, job, &tables, &metrics, &mut inflight),
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        match eng.step() {
+            Ok(done) => {
+                for (id, r) in done {
+                    if let Some((reply, t)) = inflight.remove(&id) {
+                        let _ = reply.send(Ok(finish_response(&metrics, t, r)));
+                    }
+                }
+            }
+            Err(e) => {
+                // A step error poisons the whole batch (shared call): fail
+                // every in-flight request and restart with a fresh engine.
+                eprintln!("batch engine: step failed: {e:#}");
+                for (_, (reply, _)) in inflight.drain() {
+                    let _ = reply.send(Err(anyhow!("batched engine step failed: {e:#}")));
+                }
+                eng = BatchedEngine::new(runtime, lanes);
+                eng.collect_traces = true;
+            }
+        }
+    }
+}
+
+fn admit_job(
+    eng: &mut BatchedEngine,
+    job: Job,
+    tables: &Arc<NgramTables>,
+    metrics: &Metrics,
+    inflight: &mut HashMap<SeqId, (Sender<Result<GenResponse>>, Instant)>,
+) {
+    metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    let strategy = make_strategy(job.req.strategy, tables, job.req.engine.q);
+    // start the latency clock BEFORE admit: admit runs the prefill, which
+    // the per-sequence worker's clock also covers — keep the modes
+    // comparable in latency_ms and /metrics
+    let t = Instant::now();
+    match eng.admit(&job.req.prompt, strategy, job.req.engine.clone()) {
+        Ok(id) => {
+            inflight.insert(id, (job.reply, t));
+        }
+        Err(e) => {
+            let _ = job.reply.send(Err(e));
+        }
     }
 }
 

@@ -11,6 +11,11 @@
 //! One thread per connection (bounded by the scheduler's queue for actual
 //! work); keep-alive is not supported — every response closes the socket,
 //! which keeps the parser tiny and is plenty for the benchmark driver.
+//!
+//! Request hardening: the parser enforces a body-size cap (1 MiB), header
+//! count/size caps, and a valid Content-Length on POST. Violations get a
+//! proper 4xx JSON error response ({"error": ...}) instead of a dropped
+//! connection.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -66,8 +71,14 @@ impl Server {
     }
 
     fn handle(&self, mut stream: TcpStream) -> Result<()> {
-        let req = parse_request(&mut stream)?;
-        let (status, body, ctype) = self.route(&req);
+        let (status, body, ctype) = match parse_request(&mut stream) {
+            Ok(req) => self.route(&req),
+            Err(e) => (
+                e.status,
+                Json::obj(vec![("error", Json::Str(e.msg))]).to_string(),
+                "application/json",
+            ),
+        };
         let resp = format!(
             "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
             body.len()
@@ -136,31 +147,109 @@ pub struct HttpRequest {
     pub body: String,
 }
 
-pub fn parse_request(stream: &mut TcpStream) -> Result<HttpRequest> {
+/// Largest request body the server accepts (absurd Content-Lengths are
+/// rejected with 413 instead of attempting the allocation).
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+const MAX_HEADER_LINE_BYTES: usize = 8 * 1024;
+const MAX_HEADERS: usize = 100;
+
+/// A request-parse failure with the HTTP status it should be reported as.
+#[derive(Debug)]
+pub struct HttpError {
+    pub status: &'static str,
+    pub msg: String,
+}
+
+impl HttpError {
+    fn new(status: &'static str, msg: impl Into<String>) -> Self {
+        HttpError { status, msg: msg.into() }
+    }
+}
+
+/// Read one CRLF-terminated line without ever buffering more than `cap`
+/// bytes — a client streaming an endless unterminated line is cut off at
+/// the cap instead of growing the allocation until OOM.
+fn read_line_capped<R: BufRead>(
+    reader: &mut R,
+    cap: usize,
+) -> std::result::Result<String, HttpError> {
+    let mut buf = Vec::new();
+    let mut limited = Read::take(reader.by_ref(), cap as u64 + 1);
+    limited
+        .read_until(b'\n', &mut buf)
+        .map_err(|e| HttpError::new("400 Bad Request", format!("malformed request: {e}")))?;
+    if buf.len() > cap {
+        return Err(HttpError::new(
+            "431 Request Header Fields Too Large",
+            format!("header line exceeds the {cap}-byte limit"),
+        ));
+    }
+    Ok(String::from_utf8_lossy(&buf).into_owned())
+}
+
+pub fn parse_request(stream: &mut TcpStream) -> std::result::Result<HttpRequest, HttpError> {
+    let bad = |msg: String| HttpError::new("400 Bad Request", msg);
     let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    reader.read_line(&mut line)?;
+    let line = read_line_capped(&mut reader, MAX_HEADER_LINE_BYTES)?;
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
+    if method.is_empty() || path.is_empty() {
+        return Err(bad("malformed request line".to_string()));
+    }
 
-    let mut content_length = 0usize;
+    let mut content_length: Option<usize> = None;
+    let mut n_headers = 0usize;
     loop {
-        let mut h = String::new();
-        reader.read_line(&mut h)?;
+        let h = read_line_capped(&mut reader, MAX_HEADER_LINE_BYTES)?;
+        if h.is_empty() {
+            // EOF before the blank line terminating the header block
+            return Err(bad("truncated request: headers not terminated".to_string()));
+        }
         let h = h.trim_end();
         if h.is_empty() {
             break;
         }
+        n_headers += 1;
+        if n_headers > MAX_HEADERS {
+            return Err(HttpError::new(
+                "431 Request Header Fields Too Large",
+                format!("more than {MAX_HEADERS} headers"),
+            ));
+        }
         if let Some((k, v)) = h.split_once(':') {
             if k.eq_ignore_ascii_case("content-length") {
-                content_length = v.trim().parse().unwrap_or(0);
+                let n: usize = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| bad(format!("invalid Content-Length '{}'", v.trim())))?;
+                if n > MAX_BODY_BYTES {
+                    return Err(HttpError::new(
+                        "413 Payload Too Large",
+                        format!("Content-Length {n} exceeds the {MAX_BODY_BYTES}-byte limit"),
+                    ));
+                }
+                content_length = Some(n);
             }
         }
     }
+
+    let content_length = match content_length {
+        Some(n) => n,
+        // a bodied method without Content-Length cannot be framed
+        None if method == "POST" || method == "PUT" => {
+            return Err(HttpError::new(
+                "411 Length Required",
+                "POST requires a Content-Length header",
+            ));
+        }
+        None => 0,
+    };
     let mut body = vec![0u8; content_length];
     if content_length > 0 {
-        reader.read_exact(&mut body)?;
+        reader
+            .read_exact(&mut body)
+            .map_err(|_| bad("body shorter than Content-Length".to_string()))?;
     }
     Ok(HttpRequest {
         method,

@@ -1,0 +1,634 @@
+//! Synthetic artifact tree for the reference backend.
+//!
+//! The real artifact tree is produced by `make artifacts` (python + JAX +
+//! Pallas, AOT-lowered to HLO text). That toolchain is not available in a
+//! bare build environment, and the seed repo shipped with NO way to build
+//! or test without it. This module restores a zero-dependency path: it
+//! materializes a complete, deterministic artifact tree — manifest,
+//! tokenizer (BPE actually trained on the synthetic corpora), corpora,
+//! N-gram tables, params.bin and step/prefill artifacts — that the
+//! [`crate::runtime::reference`] backend executes.
+//!
+//! Fidelity notes:
+//! - The N-gram tables are built from the SAME `bigram_next` attractor the
+//!   reference model follows ~3/4 of the time, so draft acceptance is
+//!   realistic (tokens/call well above 1), not degenerate.
+//! - The tokenizer is a real byte-BPE trained here with the same greedy
+//!   most-frequent-pair rule the python side uses, so the parity tests
+//!   exercise the actual merge machinery.
+//! - Layout matches the python build exactly (models/<name>/..., data/...),
+//!   so failure-injection tests can corrupt copies of it.
+//!
+//! The tree is built once per machine under `$TMPDIR/ngrammys-synth-v<N>`
+//! (build into a staging dir, atomic rename), and
+//! [`crate::config::default_artifacts_dir`] falls back to it when no real
+//! artifact tree is present — which is what lets `cargo test` run green on
+//! a machine that has never seen the python toolchain.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::OnceLock;
+
+use anyhow::{Context, Result};
+
+use crate::draft::tables;
+use crate::runtime::reference;
+use crate::tokenizer::{split_pieces, BpeTokenizer};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Bump when the synthetic format changes so stale trees are not reused.
+const FORMAT_VERSION: u32 = 1;
+const N_MERGES: usize = 200;
+const TABLE_TOPK: usize = 32;
+const UNIGRAM_TOPK: usize = 32;
+const EXT_BIGRAM_W: usize = 8;
+const STEP_KS: [usize; 6] = [1, 2, 5, 10, 20, 25];
+const STEP_WS: [usize; 9] = [0, 1, 2, 4, 6, 8, 10, 12, 14];
+const PREFILL_BUCKETS: [usize; 4] = [32, 64, 128, 256];
+
+struct ModelSpec {
+    name: &'static str,
+    analog: &'static str,
+    d_model: usize,
+    n_layers: usize,
+    n_heads: usize,
+    head_dim: usize,
+    mlp_hidden: usize,
+    max_len: usize,
+    params_seed: u64,
+    train_final_loss: f64,
+}
+
+const MODELS: [ModelSpec; 3] = [
+    ModelSpec {
+        name: "small",
+        analog: "phi3",
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 2,
+        head_dim: 8,
+        mlp_hidden: 64,
+        max_len: 288,
+        params_seed: 0xA11CE,
+        train_final_loss: 1.61,
+    },
+    ModelSpec {
+        name: "base",
+        analog: "mistral",
+        d_model: 48,
+        n_layers: 3,
+        n_heads: 3,
+        head_dim: 8,
+        mlp_hidden: 96,
+        max_len: 320,
+        params_seed: 0xB0B,
+        train_final_loss: 1.42,
+    },
+    ModelSpec {
+        name: "large",
+        analog: "vicuna",
+        d_model: 64,
+        n_layers: 4,
+        n_heads: 4,
+        head_dim: 8,
+        mlp_hidden: 128,
+        max_len: 352,
+        params_seed: 0xCAFE,
+        train_final_loss: 1.27,
+    },
+];
+
+/// Path of the shared synthetic artifact tree, building it on first use.
+pub fn artifacts_dir() -> PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let root = std::env::temp_dir().join(format!("ngrammys-synth-v{FORMAT_VERSION}"));
+        if root.join("manifest.json").exists() {
+            return root;
+        }
+        let staging = std::env::temp_dir().join(format!(
+            "ngrammys-synth-v{FORMAT_VERSION}-build-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&staging);
+        build_tree(&staging).expect("building synthetic artifacts");
+        if fs::rename(&staging, &root).is_err() {
+            // a concurrent builder won the rename, or rename is unsupported:
+            // fall back to building in place if the tree is still missing
+            let _ = fs::remove_dir_all(&staging);
+            if !root.join("manifest.json").exists() {
+                build_tree(&root).expect("building synthetic artifacts in place");
+            }
+        }
+        root
+    })
+    .clone()
+}
+
+/// Convenience for tests: the parsed manifest of the synthetic tree.
+pub fn manifest() -> crate::config::Manifest {
+    crate::config::Manifest::load(&artifacts_dir()).expect("loading synthetic manifest")
+}
+
+/// Build the whole tree under `root` (which must not yet exist).
+pub fn build_tree(root: &Path) -> Result<()> {
+    fs::create_dir_all(root.join("data"))?;
+
+    // --- corpora
+    let corpora: Vec<(&str, String, String)> = vec![
+        ("chat", gen_chat(80), gen_chat_seeded(30, 0x17)),
+        ("code", gen_code(80), gen_code_seeded(30, 0x23)),
+        ("math", gen_math(80), gen_math_seeded(30, 0x31)),
+    ];
+    let mut all_text = Vec::new();
+    for (task, train, eval) in &corpora {
+        fs::write(root.join("data").join(format!("{task}_train.txt")), train)?;
+        fs::write(root.join("data").join(format!("{task}_eval.txt")), eval)?;
+        all_text.push(train.clone());
+        all_text.push(eval.clone());
+    }
+
+    // --- tokenizer: real BPE trained on the corpora
+    let merges = train_bpe(&all_text, N_MERGES);
+    let vocab = 256 + merges.len();
+    write_tokenizer(&root.join("tokenizer.json"), &merges)?;
+    let tok = BpeTokenizer::from_merges(merges.clone());
+    write_fixtures(&root.join("tokenizer_fixtures.json"), &tok, &corpora)?;
+
+    // --- models
+    let mut model_jsons = Vec::new();
+    for spec in &MODELS {
+        let dir = root.join("models").join(spec.name);
+        fs::create_dir_all(&dir)?;
+        let j = build_model(&dir, spec, vocab)?;
+        model_jsons.push((spec.name, j));
+    }
+
+    // --- manifest
+    let data_json = Json::Obj(
+        corpora
+            .iter()
+            .map(|(task, _, _)| {
+                (
+                    task.to_string(),
+                    Json::obj(vec![
+                        ("train", Json::Str(format!("data/{task}_train.txt"))),
+                        ("eval", Json::Str(format!("data/{task}_eval.txt"))),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    let manifest = Json::obj(vec![
+        ("version", Json::Num(FORMAT_VERSION as f64)),
+        ("builder", Json::Str("rust-testkit-synthetic".into())),
+        ("vocab_size", Json::Num(vocab as f64)),
+        ("tokenizer", Json::Str("tokenizer.json".into())),
+        ("data", data_json),
+        (
+            "table_topk",
+            Json::obj(vec![
+                ("bigram", Json::Num(TABLE_TOPK as f64)),
+                ("unigram", Json::Num(UNIGRAM_TOPK as f64)),
+                ("ext_bigram_w", Json::Num(EXT_BIGRAM_W as f64)),
+            ]),
+        ),
+        (
+            "models",
+            Json::Obj(
+                model_jsons
+                    .into_iter()
+                    .map(|(n, j)| (n.to_string(), j))
+                    .collect(),
+            ),
+        ),
+    ]);
+    fs::write(root.join("manifest.json"), manifest.to_string_pretty())
+        .context("writing manifest.json")?;
+    Ok(())
+}
+
+fn build_model(dir: &Path, spec: &ModelSpec, vocab: usize) -> Result<Json> {
+    // params.bin: deterministic pseudo-random bytes; the reference model's
+    // seed is derived from these bytes, so each model behaves differently.
+    let param_spec: Vec<(&str, Vec<usize>)> = vec![
+        ("embedding", vec![vocab, spec.d_model]),
+        ("blocks", vec![spec.n_layers, spec.d_model, 4]),
+        ("lm_head", vec![spec.d_model, vocab]),
+    ];
+    let total: usize = param_spec
+        .iter()
+        .map(|(_, s)| s.iter().product::<usize>())
+        .sum();
+    let mut rng = Rng::new(spec.params_seed);
+    let mut bytes = Vec::with_capacity(total * 4);
+    while bytes.len() < total * 4 {
+        bytes.extend_from_slice(&rng.next_u64().to_le_bytes());
+    }
+    bytes.truncate(total * 4);
+    fs::write(dir.join("params.bin"), &bytes)?;
+    let seed = reference::seed_from_params(&bytes);
+
+    // tables derived from the model's own bigram attractor
+    write_bigram_tables(dir, seed, vocab)?;
+
+    // step + prefill artifacts for the reference backend
+    let mut steps = Vec::new();
+    for &k in &STEP_KS {
+        for &w in &STEP_WS {
+            let f = format!("step_k{k}_w{w}.txt");
+            fs::write(
+                dir.join(&f),
+                format!(
+                    "{} k={k} w={w}\nsynthetic reference-backend verification artifact\n",
+                    reference::STEP_MAGIC
+                ),
+            )?;
+            steps.push((k, w, f));
+        }
+    }
+    let mut prefills = Vec::new();
+    for &p in &PREFILL_BUCKETS {
+        let f = format!("prefill_{p}.txt");
+        fs::write(
+            dir.join(&f),
+            format!(
+                "{} p={p}\nsynthetic reference-backend prefill artifact\n",
+                reference::PREFILL_MAGIC
+            ),
+        )?;
+        prefills.push((p, f));
+    }
+
+    Ok(Json::obj(vec![
+        (
+            "dir",
+            Json::Str(format!("models/{}", spec.name)),
+        ),
+        ("analog", Json::Str(spec.analog.into())),
+        ("vocab_size", Json::Num(vocab as f64)),
+        ("d_model", Json::Num(spec.d_model as f64)),
+        ("n_layers", Json::Num(spec.n_layers as f64)),
+        ("n_heads", Json::Num(spec.n_heads as f64)),
+        ("head_dim", Json::Num(spec.head_dim as f64)),
+        ("mlp_hidden", Json::Num(spec.mlp_hidden as f64)),
+        ("max_len", Json::Num(spec.max_len as f64)),
+        ("n_params", Json::Num(total as f64)),
+        (
+            "param_spec",
+            Json::Arr(
+                param_spec
+                    .iter()
+                    .map(|(n, s)| {
+                        Json::obj(vec![
+                            ("name", Json::Str((*n).into())),
+                            (
+                                "shape",
+                                Json::Arr(s.iter().map(|&d| Json::Num(d as f64)).collect()),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("params_bin", Json::Str("params.bin".into())),
+        (
+            "steps",
+            Json::Obj(
+                steps
+                    .into_iter()
+                    .map(|(k, w, f)| (format!("{k},{w}"), Json::Str(f)))
+                    .collect(),
+            ),
+        ),
+        (
+            "prefills",
+            Json::Obj(
+                prefills
+                    .into_iter()
+                    .map(|(p, f)| (format!("{p}"), Json::Str(f)))
+                    .collect(),
+            ),
+        ),
+        (
+            "tables",
+            Json::obj(vec![
+                ("bigram", Json::Str("bigram.bin".into())),
+                ("unigram", Json::Str("unigram.bin".into())),
+                ("ext_bigram", Json::Str("ext_bigram.bin".into())),
+            ]),
+        ),
+        ("train_final_loss", Json::Num(spec.train_final_loss)),
+    ]))
+}
+
+/// Bigram/unigram/ext-bigram tables consistent with the reference model:
+/// rank 0 of the bigram table IS the model's attractor, and ext-bigram
+/// chains are greedy closures of it, so speculation genuinely accepts.
+fn write_bigram_tables(dir: &Path, seed: u64, vocab: usize) -> Result<()> {
+    let mut bigram = Vec::with_capacity(vocab * TABLE_TOPK);
+    for x in 0..vocab as u32 {
+        let top = reference::bigram_next(seed, x, vocab);
+        for j in 0..TABLE_TOPK as u32 {
+            bigram.push((top + j) % vocab as u32);
+        }
+    }
+    write_table(&dir.join("bigram.bin"), vocab, TABLE_TOPK, 1, &bigram)?;
+
+    let unigram: Vec<u32> = (0..UNIGRAM_TOPK as u64)
+        .map(|j| (reference::mix(seed ^ 0x0001_0000 ^ j) % vocab as u64) as u32)
+        .collect();
+    write_table(&dir.join("unigram.bin"), 1, UNIGRAM_TOPK, 1, &unigram)?;
+
+    let mut ext = Vec::with_capacity(vocab * TABLE_TOPK * EXT_BIGRAM_W);
+    for x in 0..vocab as u32 {
+        let top = reference::bigram_next(seed, x, vocab);
+        for j in 0..TABLE_TOPK as u32 {
+            let mut cur = (top + j) % vocab as u32;
+            for _ in 0..EXT_BIGRAM_W {
+                ext.push(cur);
+                cur = reference::bigram_next(seed, cur, vocab);
+            }
+        }
+    }
+    write_table(
+        &dir.join("ext_bigram.bin"),
+        vocab,
+        TABLE_TOPK,
+        EXT_BIGRAM_W,
+        &ext,
+    )?;
+    Ok(())
+}
+
+fn write_table(path: &Path, rows: usize, cols: usize, depth: usize, data: &[u32]) -> Result<()> {
+    assert_eq!(data.len(), rows * cols * depth);
+    let mut bytes = Vec::with_capacity(16 + data.len() * 4);
+    for v in [tables::MAGIC, rows as u32, cols as u32, depth as u32] {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in data {
+        bytes.extend_from_slice(&v.to_le_bytes());
+    }
+    fs::write(path, bytes).with_context(|| format!("writing table {path:?}"))?;
+    Ok(())
+}
+
+fn write_tokenizer(path: &Path, merges: &[(u32, u32)]) -> Result<()> {
+    let j = Json::obj(vec![
+        ("type", Json::Str("byte_bpe".into())),
+        ("vocab_size", Json::Num((256 + merges.len()) as f64)),
+        (
+            "merges",
+            Json::Arr(
+                merges
+                    .iter()
+                    .map(|&(a, b)| Json::Arr(vec![Json::Num(a as f64), Json::Num(b as f64)]))
+                    .collect(),
+            ),
+        ),
+    ]);
+    fs::write(path, j.to_string_pretty()).context("writing tokenizer.json")?;
+    Ok(())
+}
+
+fn write_fixtures(
+    path: &Path,
+    tok: &BpeTokenizer,
+    corpora: &[(&str, String, String)],
+) -> Result<()> {
+    let mut texts: Vec<String> = vec![
+        "def scale(x, y):\n    return x".into(),
+        "User: What is the capital of France?".into(),
+        "Question: Tom has 5 apples.".into(),
+        "hello world".into(),
+        "  leading and trailing  ".into(),
+        "tabs\tand\nnewlines".into(),
+        "Answer: Tom has 5 plus 3 which makes 8 apples.".into(),
+        "Assistant: That is a good question.".into(),
+    ];
+    for (_, train, _) in corpora {
+        let cut = train
+            .char_indices()
+            .take_while(|(i, _)| *i < 120)
+            .last()
+            .map(|(i, c)| i + c.len_utf8())
+            .unwrap_or(0);
+        texts.push(train[..cut].to_string());
+    }
+    let cases: Vec<Json> = texts
+        .iter()
+        .map(|t| {
+            Json::obj(vec![
+                ("text", Json::Str(t.clone())),
+                (
+                    "ids",
+                    Json::Arr(
+                        tok.encode(t)
+                            .into_iter()
+                            .map(|i| Json::Num(i as f64))
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+    let j = Json::obj(vec![("cases", Json::Arr(cases))]);
+    fs::write(path, j.to_string_pretty()).context("writing tokenizer_fixtures.json")?;
+    Ok(())
+}
+
+// --- BPE training -----------------------------------------------------------
+
+/// Greedy most-frequent-pair BPE over the piece-split corpora (the same
+/// rule `python/compile/tokenizer.py` trains with). Deterministic: ties
+/// break toward the lexicographically smallest pair.
+fn train_bpe(texts: &[String], n_merges: usize) -> Vec<(u32, u32)> {
+    let mut pieces: Vec<Vec<u32>> = texts
+        .iter()
+        .flat_map(|t| {
+            split_pieces(t.as_bytes())
+                .into_iter()
+                .map(|p| p.iter().map(|&b| b as u32).collect::<Vec<u32>>())
+        })
+        .collect();
+    let mut merges = Vec::with_capacity(n_merges);
+    for i in 0..n_merges {
+        let mut counts: HashMap<(u32, u32), u64> = HashMap::new();
+        for p in &pieces {
+            for w in p.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+        }
+        let best = counts
+            .iter()
+            .max_by(|a, b| a.1.cmp(b.1).then(b.0.cmp(a.0)))
+            .map(|(&pair, &c)| (pair, c));
+        let Some((pair, count)) = best else { break };
+        if count < 2 {
+            break;
+        }
+        let new_id = 256 + i as u32;
+        merges.push(pair);
+        for p in pieces.iter_mut() {
+            apply_merge(p, pair, new_id);
+        }
+    }
+    merges
+}
+
+fn apply_merge(p: &mut Vec<u32>, pair: (u32, u32), new_id: u32) {
+    let mut out = Vec::with_capacity(p.len());
+    let mut i = 0;
+    while i < p.len() {
+        if i + 1 < p.len() && p[i] == pair.0 && p[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(p[i]);
+            i += 1;
+        }
+    }
+    *p = out;
+}
+
+// --- corpora ----------------------------------------------------------------
+
+const NAMES: [&str; 4] = ["Tom", "Mia", "Sam", "Ava"];
+const ITEMS: [&str; 4] = ["apples", "coins", "pens", "cards"];
+const TOPICS: [&str; 6] = [
+    "the capital of France",
+    "the speed of light",
+    "ancient rivers",
+    "the water cycle",
+    "simple machines",
+    "the rules of chess",
+];
+
+fn gen_chat(n: usize) -> String {
+    gen_chat_seeded(n, 0x11)
+}
+
+fn gen_chat_seeded(n: usize, seed: u64) -> String {
+    let mut rng = Rng::new(seed);
+    let mut s = String::new();
+    for _ in 0..n {
+        let t = *rng.choose(&TOPICS);
+        let q = match rng.below(3) {
+            0 => format!("What is {t}?"),
+            1 => format!("Tell me about {t}."),
+            _ => format!("Why does {t} matter?"),
+        };
+        let a = match rng.below(3) {
+            0 => format!(
+                "That is a good question. The short answer is that {t} is a \
+                 classic topic and people study it every day."
+            ),
+            1 => format!(
+                "Many people ask about {t}. The simple story is that {t} \
+                 shapes the way we think about the world."
+            ),
+            _ => format!(
+                "Let me explain. The key idea behind {t} is that small parts \
+                 work together, and that is why {t} matters."
+            ),
+        };
+        s.push_str(&format!("User: {q}\nAssistant: {a}\n\n"));
+    }
+    s
+}
+
+fn gen_code(n: usize) -> String {
+    gen_code_seeded(n, 0x21)
+}
+
+fn gen_code_seeded(n: usize, seed: u64) -> String {
+    let mut rng = Rng::new(seed);
+    const FNS: [&str; 6] = ["scale", "clamp", "blend", "total", "ratio", "shift"];
+    const VARS: [&str; 4] = ["x", "y", "value", "count"];
+    const OPS: [&str; 3] = ["+", "-", "*"];
+    let mut s = String::new();
+    for i in 0..n {
+        let f = *rng.choose(&FNS);
+        let a = *rng.choose(&VARS);
+        let mut b = *rng.choose(&VARS);
+        if b == a {
+            b = "other";
+        }
+        let op = *rng.choose(&OPS);
+        let c = rng.range(2, 9);
+        s.push_str(&format!(
+            "def {f}_{i}({a}, {b}):\n    result = {a} {op} {b}\n    \
+             result = result {op} {c}\n    return result\n\n"
+        ));
+    }
+    s
+}
+
+fn gen_math(n: usize) -> String {
+    gen_math_seeded(n, 0x41)
+}
+
+fn gen_math_seeded(n: usize, seed: u64) -> String {
+    let mut rng = Rng::new(seed);
+    let mut s = String::new();
+    for _ in 0..n {
+        let name = *rng.choose(&NAMES);
+        let item = *rng.choose(&ITEMS);
+        let x = rng.range(2, 9);
+        let y = rng.range(2, 9);
+        s.push_str(&format!(
+            "Question: {name} has {x} {item}. {name} buys {y} more {item}. \
+             How many {item} does {name} have now?\nAnswer: {name} has {x} \
+             plus {y} which makes {z} {item}.\n\n",
+            z = x + y
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bpe_trainer_matches_encoder() {
+        // training then encoding the training text must reproduce the
+        // trained segmentation (merges apply in rank order on both sides)
+        let texts = vec![gen_chat_seeded(10, 1)];
+        let merges = train_bpe(&texts, 50);
+        assert!(!merges.is_empty());
+        let tok = BpeTokenizer::from_merges(merges);
+        let ids = tok.encode(&texts[0]);
+        assert_eq!(tok.decode(&ids), texts[0]);
+        // trained BPE must compress its own training corpus well
+        assert!(
+            ids.len() * 2 < texts[0].len(),
+            "{} ids for {} bytes",
+            ids.len(),
+            texts[0].len()
+        );
+    }
+
+    #[test]
+    fn corpora_are_deterministic() {
+        assert_eq!(gen_chat(5), gen_chat(5));
+        assert_eq!(gen_code(5), gen_code(5));
+        assert_eq!(gen_math(5), gen_math(5));
+    }
+
+    #[test]
+    fn synthetic_tree_loads_as_manifest() {
+        let m = manifest();
+        assert_eq!(m.models.len(), 3);
+        assert!(m.vocab_size > 256);
+        for task in ["chat", "code", "math"] {
+            assert!(m.data.contains_key(task));
+        }
+        let art = m.model("small").unwrap();
+        assert!(art.steps.contains_key(&(10, 10)));
+        assert!(art.prefills.contains_key(&256));
+    }
+}

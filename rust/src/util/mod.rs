@@ -1,6 +1,6 @@
-//! From-scratch utility substrates (the offline environment ships only the
-//! `xla` crate's dependency closure, so JSON / CLI / RNG / bench / property
-//! testing are implemented here — see DESIGN.md §System-inventory S14).
+//! From-scratch utility substrates (the default build depends only on
+//! `anyhow`, so JSON / CLI / RNG / bench / property testing are implemented
+//! here — see DESIGN.md §System-inventory S14).
 
 pub mod bench;
 pub mod cli;

@@ -1,0 +1,254 @@
+//! Batched-engine integration: the continuous-batching engine must be
+//! byte-identical to per-sequence decoding (the paper's invariant extended
+//! across the request-batch axis), lanes must never cross-contaminate, and
+//! packing must actually pay at the cost-model level.
+
+use ngrammys::bench::BenchCtx;
+use ngrammys::config::EngineConfig;
+use ngrammys::engine::batched::generate_all;
+use ngrammys::engine::{BatchedEngine, SpecDecoder};
+use ngrammys::kvcache::KvPool;
+use ngrammys::scheduler::{make_strategy, StrategyName};
+use ngrammys::util::prop;
+use ngrammys::util::rng::Rng;
+
+fn ctx(model: &str) -> BenchCtx {
+    BenchCtx::load(ngrammys::testkit::manifest(), model).unwrap()
+}
+
+fn prompts(c: &BenchCtx) -> Vec<Vec<u32>> {
+    [
+        "Question: Tom has 4 apples. Tom buys 2 more.",
+        "def scale(x, y):\n    result",
+        "User: What is the capital of France?",
+        "Answer: Mia has 5 coins.",
+        "def blend(value, count):",
+        "User: Tell me about ancient rivers.",
+        "Question: Sam has 7 cards.",
+        "Assistant: That is a good question.",
+    ]
+    .iter()
+    .map(|p| c.tokenizer.encode(p))
+    .collect()
+}
+
+/// THE acceptance test: for the same prompts, the batched engine at
+/// concurrency 1, 4 and 8 produces byte-identical token streams to the
+/// single-sequence SpecDecoder, for mixed/context/none strategies.
+#[test]
+fn batched_streams_equal_per_sequence_streams() {
+    let c = ctx("small");
+    let prompts = prompts(&c);
+    for (strat, k, w) in [
+        (StrategyName::Mixed, 10, 10),
+        (StrategyName::Context, 5, 4),
+        (StrategyName::None, 1, 0),
+    ] {
+        let cfg = EngineConfig { k, w, q: 1, max_new_tokens: 20 };
+        let want: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| {
+                let s = make_strategy(strat, &c.tables, 1);
+                let mut dec = SpecDecoder::new(&c.runtime, s, cfg.clone());
+                dec.generate(p).unwrap().tokens
+            })
+            .collect();
+        for conc in [1usize, 4, 8] {
+            let reqs: Vec<_> = prompts
+                .iter()
+                .map(|p| (p.clone(), make_strategy(strat, &c.tables, 1), cfg.clone()))
+                .collect();
+            let mut eng = BatchedEngine::new(&c.runtime, conc);
+            let got = generate_all(&mut eng, reqs).unwrap();
+            for (i, (g, w_)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    &g.tokens, w_,
+                    "strategy {strat:?} conc {conc} prompt {i}: batched stream diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Requests with DIFFERENT (k, w) configs share packed steps and still
+/// all come back greedy-identical.
+#[test]
+fn heterogeneous_configs_share_a_batch_correctly() {
+    let c = ctx("small");
+    let prompts = prompts(&c);
+    let cfgs = [
+        EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: 16 },
+        EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: 16 },
+        EngineConfig { k: 2, w: 2, q: 1, max_new_tokens: 16 },
+        EngineConfig { k: 1, w: 0, q: 1, max_new_tokens: 16 },
+    ];
+    let want: Vec<Vec<u32>> = prompts
+        .iter()
+        .zip(cfgs.iter().cycle())
+        .map(|(p, cfg)| {
+            let s = make_strategy(StrategyName::Mixed, &c.tables, 1);
+            let mut dec = SpecDecoder::new(&c.runtime, s, cfg.clone());
+            dec.generate(p).unwrap().tokens
+        })
+        .collect();
+    let reqs: Vec<_> = prompts
+        .iter()
+        .zip(cfgs.iter().cycle())
+        .map(|(p, cfg)| {
+            (p.clone(), make_strategy(StrategyName::Mixed, &c.tables, 1), cfg.clone())
+        })
+        .collect();
+    let mut eng = BatchedEngine::new(&c.runtime, 4);
+    let got = generate_all(&mut eng, reqs).unwrap();
+    for (i, (g, w_)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(&g.tokens, w_, "heterogeneous request {i} diverged");
+    }
+}
+
+/// More requests than lanes: lanes must recycle and every request must
+/// still complete, in order, with the pool fully reclaimed.
+#[test]
+fn lanes_recycle_across_admission_waves() {
+    let c = ctx("small");
+    let all = prompts(&c);
+    let cfg = EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: 10 };
+    // 8 requests through 2 lanes -> at least 4 admission waves
+    let mut eng = BatchedEngine::new(&c.runtime, 2);
+    let mut next = 0usize;
+    let mut done = 0usize;
+    while done < all.len() {
+        while eng.has_capacity() && next < all.len() {
+            let s = make_strategy(StrategyName::Mixed, &c.tables, 1);
+            eng.admit(&all[next], s, cfg.clone()).unwrap();
+            next += 1;
+        }
+        assert!(eng.lanes_in_use() <= 2);
+        for (_, r) in eng.step().unwrap() {
+            assert_eq!(r.tokens.len(), 10);
+            done += 1;
+        }
+    }
+    assert_eq!(eng.active(), 0);
+    assert_eq!(eng.lanes_in_use(), 0, "retired lanes must be reclaimed");
+    // the freed pool admits again immediately
+    let s = make_strategy(StrategyName::Mixed, &c.tables, 1);
+    eng.admit(&all[0], s, cfg).unwrap();
+    assert_eq!(eng.lanes_in_use(), 1);
+}
+
+/// Property: commits into one pool lane NEVER touch another lane's bytes
+/// or length, for arbitrary shapes, lanes and interleavings.
+#[test]
+fn prop_lane_commits_never_cross_contaminate() {
+    prop::check(150, |rng: &mut Rng| {
+        let layers = rng.range(1, 3);
+        let heads = rng.range(1, 3);
+        let hd = 4usize;
+        let max_len = rng.range(8, 24);
+        let n_lanes = rng.range(2, 4);
+        let mut pool = KvPool::new(layers, max_len, heads, hd, n_lanes);
+        let lanes: Vec<_> = (0..n_lanes).map(|_| pool.acquire().unwrap()).collect();
+        // give every lane a distinct fingerprint
+        for (li, &lane) in lanes.iter().enumerate() {
+            let c = pool.lane_mut(lane);
+            for v in c.k_data.iter_mut() {
+                *v = li as f32 + 100.0;
+            }
+            for v in c.v_data.iter_mut() {
+                *v = -(li as f32) - 100.0;
+            }
+            c.len = rng.range(0, max_len / 2);
+        }
+        let mut snapshot: Vec<(Vec<f32>, Vec<f32>, usize)> = lanes
+            .iter()
+            .map(|&l| (pool.lane(l).k_data.clone(), pool.lane(l).v_data.clone(), pool.lane(l).len))
+            .collect();
+
+        // random interleaved commits
+        for _ in 0..rng.range(1, 8) {
+            let target = rng.below(n_lanes);
+            let lane = lanes[target];
+            let ps = pool.lane(lane).pos_stride();
+            let k_rows = rng.range(1, 3);
+            let w1 = rng.range(1, 3);
+            let room = max_len - pool.lane(lane).len;
+            if room < w1 {
+                continue;
+            }
+            let n = layers * k_rows * w1 * ps;
+            let k_tail: Vec<f32> = (0..n).map(|i| 1000.0 + target as f32 + i as f32).collect();
+            let v_tail: Vec<f32> = (0..n).map(|i| -(1000.0 + target as f32 + i as f32)).collect();
+            let row = rng.below(k_rows);
+            let count = rng.range(1, w1);
+            pool.lane_mut(lane)
+                .commit_tail(&k_tail, &v_tail, k_rows, w1, row, count)
+                .unwrap();
+            // every OTHER lane must be bit-identical to its snapshot
+            for (li, &other) in lanes.iter().enumerate() {
+                if li == target {
+                    continue;
+                }
+                let (k0, v0, len0) = &snapshot[li];
+                let c = pool.lane(other);
+                if &c.k_data != k0 || &c.v_data != v0 || c.len != *len0 {
+                    return false;
+                }
+            }
+            // refresh the committed lane's snapshot for later iterations
+            let c = pool.lane(lane);
+            snapshot[target] = (c.k_data.clone(), c.v_data.clone(), c.len);
+        }
+        true
+    });
+}
+
+/// The point of packing: at concurrency 4+, the cost model prices the
+/// batched engine's packed calls well below the per-sequence calls they
+/// replace — higher aggregate simulated tokens/sec than request-batch 1.
+#[test]
+fn packed_calls_beat_request_batch_1_on_the_cost_model() {
+    let c = ctx("base");
+    let prompts = prompts(&c);
+    let cfg = EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: 16 };
+    let cm = c.cost_model();
+
+    // request-batch-1 baseline
+    let mut seq_tokens = 0usize;
+    let mut seq_sim = 0.0f64;
+    for p in &prompts {
+        let s = make_strategy(StrategyName::Mixed, &c.tables, 1);
+        let mut dec = SpecDecoder::new(&c.runtime, s, cfg.clone());
+        dec.collect_traces = true;
+        let r = dec.generate(p).unwrap();
+        seq_tokens += r.tokens.len() - 1;
+        seq_sim += r
+            .traces
+            .iter()
+            .map(|t| cm.call_time(t.k, t.w + 1, t.ctx_len))
+            .sum::<f64>();
+    }
+
+    // batched engine at concurrency 4
+    let mut eng = BatchedEngine::new(&c.runtime, 4);
+    eng.collect_traces = true;
+    let reqs: Vec<_> = prompts
+        .iter()
+        .map(|p| (p.clone(), make_strategy(StrategyName::Mixed, &c.tables, 1), cfg.clone()))
+        .collect();
+    let bat_results = generate_all(&mut eng, reqs).unwrap();
+    let bat_tokens: usize = bat_results.iter().map(|r| r.tokens.len() - 1).sum();
+    assert_eq!(bat_tokens, seq_tokens, "token accounting diverged");
+    let bat_sim: f64 = eng
+        .packed_traces
+        .iter()
+        .map(|p| cm.call_time(p.rows, p.w + 1, p.max_ctx))
+        .sum();
+
+    let seq_tps = seq_tokens as f64 / seq_sim;
+    let bat_tps = bat_tokens as f64 / bat_sim;
+    assert!(
+        bat_tps > seq_tps * 1.3,
+        "batched sim throughput {bat_tps:.1} tok/s not clearly above \
+         request-batch-1 {seq_tps:.1} tok/s"
+    );
+}

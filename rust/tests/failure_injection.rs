@@ -5,7 +5,7 @@
 use std::fs;
 use std::path::{Path, PathBuf};
 
-use ngrammys::config::{default_artifacts_dir, Manifest};
+use ngrammys::config::Manifest;
 use ngrammys::draft::tables::Table;
 use ngrammys::draft::NgramTables;
 use ngrammys::runtime::ModelRuntime;
@@ -21,7 +21,7 @@ impl Drop for Scratch {
 
 /// Copy manifest + the `small` model dir + tokenizer into a temp tree.
 fn scratch_tree(tag: &str) -> Scratch {
-    let src = default_artifacts_dir();
+    let src = ngrammys::testkit::artifacts_dir();
     let dst = std::env::temp_dir().join(format!("ngrammys-failinj-{tag}-{}", std::process::id()));
     let _ = fs::remove_dir_all(&dst);
     fs::create_dir_all(dst.join("models/small")).unwrap();

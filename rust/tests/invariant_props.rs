@@ -233,16 +233,17 @@ fn prop_json_roundtrip() {
     });
 }
 
-/// The headline invariant against the REAL model: for random prompt slices
-/// and random (k, w) shapes, speculative decoding emits the greedy stream.
+/// The headline invariant against the full runtime: for random prompt
+/// slices and random (k, w) shapes, speculative decoding emits the greedy
+/// stream.
 #[test]
 fn prop_real_model_speculation_is_lossless() {
     use ngrammys::bench::BenchCtx;
-    use ngrammys::config::{default_artifacts_dir, EngineConfig, Manifest};
+    use ngrammys::config::EngineConfig;
     use ngrammys::engine::{greedy_config, NoDraft, SpecDecoder};
     use ngrammys::scheduler::{make_strategy, StrategyName};
 
-    let manifest = Manifest::load(&default_artifacts_dir()).expect("make artifacts");
+    let manifest = ngrammys::testkit::manifest();
     let ctx = BenchCtx::load(manifest, "small").unwrap();
     let corpus = std::fs::read_to_string(
         &ctx.manifest.data["code"].1).unwrap();

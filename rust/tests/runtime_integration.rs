@@ -1,21 +1,23 @@
-//! Integration tests over the REAL artifacts: runtime + engine + strategies.
-//! These are the tests that prove the three layers compose. They require
-//! `make artifacts` to have run; they fail loudly (not skip) otherwise,
-//! because a tree without artifacts is not a releasable tree.
+//! Integration tests over a full artifact tree: runtime + engine +
+//! strategies. They run against the synthetic reference-backend tree
+//! (`ngrammys::testkit`), which has the same layout and manifest schema as
+//! the python-built one — so they prove the three layers compose without
+//! requiring the `make artifacts` toolchain. With a real tree present
+//! (NGRAMMYS_ARTIFACTS + `--features pjrt`) the same tests cover the PJRT
+//! path.
 
 use std::sync::Arc;
 
 use ngrammys::bench::BenchCtx;
-use ngrammys::config::{default_artifacts_dir, EngineConfig, Manifest};
+use ngrammys::config::{EngineConfig, Manifest};
 use ngrammys::draft::NgramTables;
 use ngrammys::engine::{greedy_config, NoDraft, SpecDecoder};
 use ngrammys::kvcache::SharedKvCache;
-use ngrammys::runtime::ModelRuntime;
 use ngrammys::scheduler::{make_strategy, StrategyName};
 use ngrammys::workload;
 
 fn manifest() -> Manifest {
-    Manifest::load(&default_artifacts_dir()).expect("run `make artifacts` first")
+    ngrammys::testkit::manifest()
 }
 
 fn ctx(model: &str) -> BenchCtx {
@@ -173,6 +175,32 @@ fn tables_load_and_are_well_formed() {
         }
         assert!(t.unigram.cols >= 32);
         let _ = Arc::new(t);
+    }
+}
+
+#[test]
+fn step_trace_ctx_len_is_captured_at_call_time() {
+    // regression: ctx_len must be the cache length the verifier attended
+    // over (BEFORE the step's commit), i.e. the first call sees exactly
+    // the prompt length and each later call sees the previous ctx_len
+    // plus the tokens the previous call committed (accepted + 1).
+    let c = ctx("small");
+    let prompt = c.tokenizer.encode("Question: Mia has 4 coins. Mia buys 3 more.");
+    let s = make_strategy(StrategyName::Mixed, &c.tables, 1);
+    let mut dec = SpecDecoder::new(
+        &c.runtime, s, EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: 24 });
+    dec.collect_traces = true;
+    let r = dec.generate(&prompt).unwrap();
+    assert!(!r.traces.is_empty());
+    assert_eq!(
+        r.traces[0].ctx_len,
+        prompt.len(),
+        "first verification call must see exactly the prefilled prompt"
+    );
+    let mut expect = prompt.len();
+    for t in &r.traces {
+        assert_eq!(t.ctx_len, expect, "ctx_len mislabeled mid-stream");
+        expect += t.accepted + 1; // the call committed accepted + bonus
     }
 }
 

@@ -1,15 +1,19 @@
-//! Serving-layer integration: scheduler + HTTP server over real artifacts.
+//! Serving-layer integration: scheduler + HTTP server over the synthetic
+//! artifact tree — both the per-sequence worker mode and the
+//! continuous-batching engine mode, plus the request-hardening paths.
 
+use std::io::{BufReader, Read, Write};
+use std::net::TcpStream;
 use std::sync::Arc;
 
-use ngrammys::config::{default_artifacts_dir, EngineConfig, Manifest, ServeConfig};
+use ngrammys::config::{EngineConfig, Manifest, ServeConfig};
 use ngrammys::scheduler::{GenRequest, Scheduler, StrategyName};
 use ngrammys::server::{client, Server};
 use ngrammys::tokenizer::BpeTokenizer;
 use ngrammys::util::json::Json;
 
 fn manifest() -> Manifest {
-    Manifest::load(&default_artifacts_dir()).expect("run `make artifacts` first")
+    ngrammys::testkit::manifest()
 }
 
 fn serve_cfg() -> ServeConfig {
@@ -17,6 +21,7 @@ fn serve_cfg() -> ServeConfig {
         addr: "127.0.0.1:0".into(),
         workers: 1,
         queue_cap: 8,
+        batch: 0,
         default_engine: EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: 12 },
     }
 }
@@ -37,6 +42,47 @@ fn scheduler_round_trip() {
     assert!(resp.tokens_per_call >= 1.0);
     assert_eq!(sched.metrics.requests_completed.load(std::sync::atomic::Ordering::Relaxed), 1);
     sched.shutdown();
+}
+
+#[test]
+fn batched_scheduler_round_trip_matches_per_sequence() {
+    // the SAME requests through both scheduler modes must produce the
+    // SAME token streams — the engine swap is invisible to clients.
+    let m = manifest();
+    let tok = BpeTokenizer::load(&m.tokenizer_path).unwrap();
+    let prompts = [
+        "Question: Tom has 3 apples.",
+        "def scale(x, y):",
+        "User: What is the capital of France?",
+        "Answer: Mia has 5 coins.",
+    ];
+    let req = |p: &str| GenRequest {
+        prompt: tok.encode(p),
+        engine: EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: 12 },
+        strategy: StrategyName::Mixed,
+    };
+
+    let seq_sched = Scheduler::start(&m, "small", &serve_cfg()).unwrap();
+    let want: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|p| seq_sched.generate(req(p)).unwrap().tokens)
+        .collect();
+    seq_sched.shutdown();
+
+    let mut cfg = serve_cfg();
+    cfg.batch = 4;
+    let bat_sched = Scheduler::start(&m, "small", &cfg).unwrap();
+    // submit all four concurrently so they actually share packed calls
+    let rxs: Vec<_> = prompts.iter().map(|p| bat_sched.submit(req(p)).unwrap()).collect();
+    for (rx, want) in rxs.into_iter().zip(&want) {
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(&got.tokens, want, "batched mode altered a token stream");
+    }
+    assert_eq!(
+        bat_sched.metrics.requests_completed.load(std::sync::atomic::Ordering::Relaxed),
+        prompts.len() as u64
+    );
+    bat_sched.shutdown();
 }
 
 #[test]
@@ -92,6 +138,72 @@ fn http_generate_metrics_and_errors() {
     assert_eq!(code, 400);
     let (code, _) = client::get(&addr, "/nope").unwrap();
     assert_eq!(code, 404);
+}
+
+/// Send raw bytes and return (status, body) — for requests the well-formed
+/// in-repo client cannot produce.
+fn raw_request(addr: &str, payload: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(payload.as_bytes()).unwrap();
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let mut buf = String::new();
+    BufReader::new(stream).read_to_string(&mut buf).unwrap();
+    let status: u16 = buf.split_whitespace().nth(1).unwrap_or("0").parse().unwrap_or(0);
+    let body = buf.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+#[test]
+fn hardened_request_parsing_returns_4xx_json() {
+    let m = manifest();
+    let cfg = serve_cfg();
+    let sched = Arc::new(Scheduler::start(&m, "small", &cfg).unwrap());
+    let tok = Arc::new(BpeTokenizer::load(&m.tokenizer_path).unwrap());
+    let (addr, _h) = Server { scheduler: sched, tokenizer: tok, cfg }.spawn().unwrap();
+    let addr = addr.to_string();
+
+    // POST without Content-Length -> 411
+    let (code, body) = raw_request(
+        &addr,
+        "POST /generate HTTP/1.1\r\nHost: x\r\n\r\n{\"prompt\": \"hi\"}",
+    );
+    assert_eq!(code, 411, "{body}");
+    assert!(Json::parse(&body).unwrap().get("error").is_some(), "{body}");
+
+    // absurd Content-Length -> 413, without attempting the allocation
+    let (code, body) = raw_request(
+        &addr,
+        "POST /generate HTTP/1.1\r\nContent-Length: 999999999999\r\n\r\n",
+    );
+    assert_eq!(code, 413, "{body}");
+    assert!(Json::parse(&body).unwrap().get("error").is_some());
+
+    // non-numeric Content-Length -> 400
+    let (code, _) = raw_request(
+        &addr,
+        "POST /generate HTTP/1.1\r\nContent-Length: banana\r\n\r\n",
+    );
+    assert_eq!(code, 400);
+
+    // body shorter than the declared Content-Length -> 400, not a hang
+    let (code, _) = raw_request(
+        &addr,
+        "POST /generate HTTP/1.1\r\nContent-Length: 50\r\n\r\n{\"a\":1}",
+    );
+    assert_eq!(code, 400);
+
+    // garbage request line -> 400
+    let (code, _) = raw_request(&addr, "\r\n\r\n");
+    assert_eq!(code, 400);
+
+    // the server survives all of the above and still serves
+    let (code, body) = client::post(
+        &addr,
+        "/generate",
+        r#"{"prompt": "User: hi", "max_tokens": 4}"#,
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
 }
 
 #[test]

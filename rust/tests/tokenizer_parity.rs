@@ -1,14 +1,15 @@
-//! Tokenizer parity with the python training side, through the shared
-//! artifacts: (1) rust round-trips the real corpora losslessly, (2) rust
-//! encodings match the python encodings captured in the fixtures file
-//! written by `python -m compile.fixtures` at artifact-build time.
+//! Tokenizer parity through the shared artifact tree: (1) rust round-trips
+//! the corpora losslessly, (2) rust encodings match the fixture encodings
+//! captured at artifact-build time (python's `compile.fixtures` for a real
+//! tree; the testkit's trained BPE for the synthetic one — either way the
+//! merge machinery is exercised against a frozen reference).
 
-use ngrammys::config::{default_artifacts_dir, Manifest};
+use ngrammys::config::Manifest;
 use ngrammys::tokenizer::BpeTokenizer;
 use ngrammys::util::json::Json;
 
 fn load() -> (Manifest, BpeTokenizer) {
-    let m = Manifest::load(&default_artifacts_dir()).expect("make artifacts");
+    let m = ngrammys::testkit::manifest();
     let t = BpeTokenizer::load(&m.tokenizer_path).unwrap();
     (m, t)
 }
