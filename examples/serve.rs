@@ -40,6 +40,7 @@ fn main() -> Result<()> {
         queue_cap: 128,
         batch,
         default_engine: EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: max_tokens },
+        ..ServeConfig::default()
     };
     let scheduler = Arc::new(Scheduler::start(&manifest, "base", &cfg)?);
     let tokenizer = Arc::new(BpeTokenizer::load(&manifest.tokenizer_path)?);

@@ -1,0 +1,117 @@
+//! Packed-batch row-budget allocation.
+//!
+//! The batched engine's per-step verification cost is driven by the packed
+//! batch size `sum k_i` (paper §3: the batch dimension is only ~free while
+//! the call stays memory-bound). Under a global row budget `B`, rows
+//! should go where they buy the most expected acceptance — hot sequences
+//! get deep speculation, cold ones degrade toward their anchor row.
+
+/// Allocate a global row budget across sequences by marginal expected
+/// acceptance. Returns per-sequence row counts `a_i` with:
+///
+/// - `1 <= a_i <= caps[i]` (every active sequence keeps at least its
+///   anchor row — a sequence cannot sit a step out);
+/// - `sum a_i <= max(budget, n)` (the budget floors at one row per active
+///   sequence; callers keep `B >= lanes` for a strict `sum <= B`).
+///
+/// Greedy water-filling: rows go one at a time to the sequence whose NEXT
+/// row has the highest marginal gain `gain(seq, row_idx)`; ties break to
+/// the lower sequence index, so the result is deterministic. For gains
+/// that are non-increasing in `row_idx` (true of every estimator here)
+/// this greedy is exactly optimal.
+pub fn allocate_rows(
+    budget: usize,
+    caps: &[usize],
+    gain: impl Fn(usize, usize) -> f64,
+) -> Vec<usize> {
+    let n = caps.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut alloc: Vec<usize> = caps.iter().map(|&c| c.min(1)).collect();
+    let mut used: usize = alloc.iter().sum();
+    let budget = budget.max(used);
+    while used < budget {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, &cap) in caps.iter().enumerate() {
+            if alloc[i] >= cap {
+                continue;
+            }
+            let g = gain(i, alloc[i]);
+            match best {
+                Some((_, bg)) if g <= bg => {}
+                _ => best = Some((i, g)),
+            }
+        }
+        let Some((i, _)) = best else { break }; // everyone at cap
+        alloc[i] += 1;
+        used += 1;
+    }
+    alloc
+}
+
+/// Marginal-gain prior for sequences without an adaptive controller:
+/// plain diminishing returns in row depth (rank-0 rows win most often —
+/// the paper's Fig. 4 middle panel).
+pub fn static_gain(row_idx: usize) -> f64 {
+    1.0 / (1.0 + row_idx as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{prop, rng::Rng};
+
+    #[test]
+    fn respects_budget_and_caps() {
+        let caps = [10, 10, 10];
+        let a = allocate_rows(12, &caps, |_, j| static_gain(j));
+        assert_eq!(a.iter().sum::<usize>(), 12);
+        assert!(a.iter().zip(&caps).all(|(&x, &c)| x >= 1 && x <= c));
+        // uniform gains spread evenly
+        assert_eq!(a, vec![4, 4, 4]);
+    }
+
+    #[test]
+    fn hot_sequences_get_more_rows() {
+        // sequence 1 is "hot": its marginal gains dominate at every depth
+        let a = allocate_rows(8, &[10, 10], |i, j| {
+            if i == 1 { 10.0 * static_gain(j) } else { static_gain(j) }
+        });
+        assert_eq!(a.iter().sum::<usize>(), 8);
+        assert!(a[1] > a[0], "hot sequence got {a:?}");
+        assert!(a[0] >= 1, "cold sequence must keep its anchor row");
+    }
+
+    #[test]
+    fn budget_floors_at_one_row_per_sequence() {
+        let a = allocate_rows(2, &[5, 5, 5, 5], |_, j| static_gain(j));
+        assert_eq!(a, vec![1, 1, 1, 1]); // effective budget = max(B, n)
+    }
+
+    #[test]
+    fn caps_bound_total_below_budget() {
+        let a = allocate_rows(100, &[2, 3], |_, j| static_gain(j));
+        assert_eq!(a, vec![2, 3]);
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(allocate_rows(10, &[], |_, _| 1.0).is_empty());
+    }
+
+    #[test]
+    fn prop_allocation_invariants() {
+        prop::check(200, |rng: &mut Rng| {
+            let n = rng.range(1, 8);
+            let caps: Vec<usize> = (0..n).map(|_| rng.range(1, 12)).collect();
+            let budget = rng.range(0, 40);
+            let heats: Vec<f64> = (0..n).map(|_| rng.f64() * 5.0).collect();
+            let a = allocate_rows(budget, &caps, |i, j| heats[i] * static_gain(j));
+            let total: usize = a.iter().sum();
+            let cap_total: usize = caps.iter().sum();
+            total <= budget.max(n).min(cap_total)
+                && a.iter().zip(&caps).all(|(&x, &c)| x >= 1 && x <= c)
+        });
+    }
+}

@@ -1,0 +1,425 @@
+//! The per-sequence adaptive controller: a deterministic UCB bandit over
+//! `StrategyName` arms plus cost-model-driven (k, w) planning.
+//!
+//! Determinism: arm choice and shape choice are pure functions of the
+//! observed history (no RNG), so a decode replays bit-identically — the
+//! losslessness property tests rely on nothing more than the acceptance
+//! invariant, but deterministic control keeps benches reproducible.
+
+use crate::costmodel::CostModel;
+use crate::draft::{DraftBatch, DraftStrategy, StrategyKind};
+use crate::scheduler::StrategyName;
+use crate::tokenizer::TokenId;
+
+use super::estimator::{ewma, AcceptanceEstimator, KindStats};
+use super::{AdaptiveConfig, StepFeedback};
+
+/// One bandit arm: a strategy plus its running value estimate.
+struct Arm {
+    name: StrategyName,
+    strategy: Box<dyn DraftStrategy>,
+    pulls: u64,
+    /// EWMA of emitted tokens per step while this arm drove the draft
+    ewma_emitted: f64,
+    /// EWMA of the simulated verify cost per step (seconds, cost model)
+    ewma_cost: f64,
+    /// total tokens emitted across this arm's pulls (exact, for reporting)
+    emitted_total: u64,
+}
+
+impl Arm {
+    /// Expected accepted-tokens-per-verify-cost (the bandit's raw value;
+    /// 0 until the arm has been pulled).
+    fn value(&self) -> f64 {
+        if self.pulls == 0 {
+            0.0
+        } else {
+            self.ewma_emitted / self.ewma_cost.max(1e-12)
+        }
+    }
+}
+
+/// Operator-facing snapshot of one arm (bench / metrics output).
+#[derive(Debug, Clone)]
+pub struct ArmReport {
+    pub name: StrategyName,
+    pub pulls: u64,
+    pub ewma_emitted: f64,
+    /// total tokens emitted across this arm's pulls (exact)
+    pub emitted_total: u64,
+    /// expected emitted tokens per second of simulated verify cost
+    pub value: f64,
+}
+
+/// Online (k, w) + strategy selection for ONE sequence.
+pub struct SeqController {
+    pub cfg: AdaptiveConfig,
+    cm: CostModel,
+    arms: Vec<Arm>,
+    /// arm driving the CURRENT step (chosen by `plan`, charged by `observe`)
+    cur: usize,
+    /// completed (observed) steps
+    steps: u64,
+    est: AcceptanceEstimator,
+    /// EWMA of the accepted-prefix length per step (arm-agnostic)
+    ewma_accept: f64,
+    /// EWMA of "some draft token accepted" per step
+    ewma_hit: f64,
+    /// EWMA of winning row index + 1 (useful batch depth)
+    ewma_depth: f64,
+    /// confidence profile of the latest proposed batch, by row index
+    /// (feeds the packed-batch allocator's marginal gains)
+    last_conf: Vec<f64>,
+}
+
+impl SeqController {
+    /// `arms` must be non-empty and must not contain `Adaptive` itself.
+    pub fn new(
+        arms: Vec<(StrategyName, Box<dyn DraftStrategy>)>,
+        cfg: AdaptiveConfig,
+        cm: CostModel,
+    ) -> Self {
+        assert!(!arms.is_empty(), "adaptive controller needs at least one arm");
+        assert!(
+            arms.iter().all(|(n, _)| *n != StrategyName::Adaptive),
+            "adaptive cannot be its own arm"
+        );
+        let alpha = cfg.alpha;
+        SeqController {
+            cfg,
+            cm,
+            arms: arms
+                .into_iter()
+                .map(|(name, strategy)| Arm {
+                    name,
+                    strategy,
+                    pulls: 0,
+                    ewma_emitted: 0.0,
+                    ewma_cost: 0.0,
+                    emitted_total: 0,
+                })
+                .collect(),
+            cur: 0,
+            steps: 0,
+            est: AcceptanceEstimator::new(alpha),
+            ewma_accept: 0.0,
+            ewma_hit: 0.0,
+            ewma_depth: 1.0,
+            last_conf: Vec::new(),
+        }
+    }
+
+    /// Choose the arm and the desired (k, w) for the next step.
+    ///
+    /// `shapes` is the model's available artifact (k, w) grid; the result
+    /// is one of those shapes (capped by `k_cap`/`w_cap`/`room`), so the
+    /// engine's `best_fitting_shape` on it is exact. Idempotent: calling
+    /// twice without an intervening `observe` re-derives the same answer.
+    pub fn plan(
+        &mut self,
+        ctx_len: usize,
+        room: usize,
+        shapes: &[(usize, usize)],
+        k_cap: usize,
+        w_cap: usize,
+    ) -> (usize, usize) {
+        // --- arm: round-robin during warmup, then UCB. The exploration
+        // bonus is ADDITIVE on max-normalized values (standard UCB1 form):
+        // a weak arm's bonus grows with ln(total)/pulls until it gets
+        // re-pulled, so regime shifts can re-trigger exploration — a
+        // multiplicative bonus would be scaled away by the weak arm's own
+        // low value and never fire.
+        let n = self.arms.len();
+        let warmup_steps = (self.cfg.warmup * n) as u64;
+        self.cur = if self.steps < warmup_steps {
+            (self.steps as usize) % n
+        } else {
+            let total = self.steps as f64;
+            let vmax = self.arms.iter().map(Arm::value).fold(1e-12, f64::max);
+            let mut best = 0usize;
+            let mut best_s = f64::NEG_INFINITY;
+            for (i, a) in self.arms.iter().enumerate() {
+                let s = if a.pulls == 0 {
+                    f64::INFINITY
+                } else {
+                    a.value() / vmax
+                        + self.cfg.explore * (total.ln_1p() / a.pulls as f64).sqrt()
+                };
+                if s > best_s {
+                    best_s = s;
+                    best = i;
+                }
+            }
+            best
+        };
+
+        // --- shape: before any feedback, behave like the static config
+        if self.steps == 0 {
+            return (k_cap, w_cap);
+        }
+
+        // Expected emitted tokens for shape (k, w): the bonus token plus
+        // the expected accepted prefix, which saturates at the optimistic
+        // depth estimate and needs enough rows to cover the useful rank
+        // depth. The hit rate is floored so a cold streak can never
+        // collapse the plan to w = 0 forever (w = 0 proposes nothing, so
+        // acceptance could never be re-observed); probing stays ~free
+        // while the verify call is memory-bound, which is the paper's
+        // whole premise.
+        let opt_len = self.ewma_accept * self.cfg.depth_optimism + 1.0;
+        let depth_need = self.ewma_depth * self.cfg.depth_optimism + 1.0;
+        let hit = self.ewma_hit.max(0.05);
+        let expect = |k: usize, w: usize| -> f64 {
+            let coverage = (k as f64 / depth_need).min(1.0);
+            1.0 + hit * coverage * opt_len.min(w as f64)
+        };
+        let mut best: Option<((usize, usize), f64)> = None;
+        for &(k, w) in shapes {
+            if k > k_cap || w > w_cap || w + 1 > room {
+                continue;
+            }
+            let v = expect(k, w) / self.cm.call_time(k, w + 1, ctx_len);
+            match best {
+                Some((_, bv)) if v <= bv => {}
+                _ => best = Some(((k, w), v)),
+            }
+        }
+        best.map(|(s, _)| s).unwrap_or((k_cap, w_cap))
+    }
+
+    /// Draft via the arm chosen by the latest `plan`; records the batch's
+    /// confidence profile for the budget allocator.
+    pub fn propose(&mut self, seq: &[TokenId], k: usize, batch: &mut DraftBatch) {
+        self.arms[self.cur].strategy.propose(seq, k, batch);
+        self.last_conf.clear();
+        self.last_conf.extend(batch.rows.iter().map(|r| r.confidence));
+    }
+
+    /// Digest one judged step: arm value, per-kind estimators, shape
+    /// statistics, and the arm strategy's own `observe`.
+    pub fn observe(&mut self, fb: &StepFeedback) {
+        let a = self.cfg.alpha;
+        let cost = self.cm.call_time(fb.k, fb.w + 1, fb.ctx_len);
+        let emitted = (fb.accepted + 1) as f64;
+
+        let arm = &mut self.arms[self.cur];
+        arm.ewma_emitted = ewma(arm.ewma_emitted, emitted, a, arm.pulls);
+        arm.ewma_cost = ewma(arm.ewma_cost, cost, a, arm.pulls);
+        arm.pulls += 1;
+        arm.emitted_total += (fb.accepted + 1) as u64;
+        // Stream feedback is arm-agnostic (the emitted tokens and verifier
+        // output do not depend on who drafted), so EVERY arm gets to learn
+        // from it — otherwise a late-blooming learning arm (session cache)
+        // could never warm up while unpulled and the bandit would starve it
+        // forever. Only the pulled arm's VALUE estimate is charged above.
+        for other in &mut self.arms {
+            other.strategy.observe(fb.emitted, fb.model_out);
+        }
+
+        self.est.observe(fb.batch, fb.row, fb.accepted);
+        self.ewma_accept = ewma(self.ewma_accept, fb.accepted as f64, a, self.steps);
+        let hit = if fb.accepted > 0 { 1.0 } else { 0.0 };
+        self.ewma_hit = ewma(self.ewma_hit, hit, a, self.steps);
+        if fb.accepted > 0 {
+            // row 0 is the judge's default on barren steps — only genuine
+            // wins say anything about the useful rank depth
+            self.ewma_depth = ewma(self.ewma_depth, (fb.row + 1) as f64, a, self.steps);
+        }
+        self.steps += 1;
+    }
+
+    /// Marginal expected acceptance of this sequence's `row_idx`-th packed
+    /// row next step (for [`super::budget::allocate_rows`]). Scaled by the
+    /// sequence's "heat" so hot sequences outbid cold ones; within a
+    /// sequence it decays with the latest draft's confidence profile.
+    pub fn marginal_gain(&self, row_idx: usize) -> f64 {
+        let heat = self.ewma_hit * (1.0 + self.ewma_accept);
+        let decay = self
+            .last_conf
+            .get(row_idx)
+            .copied()
+            .unwrap_or_else(|| super::budget::static_gain(row_idx));
+        heat.max(1e-3) * decay
+    }
+
+    /// Per-arm statistics (pulls, EWMA emitted, tokens-per-cost value).
+    pub fn arm_reports(&self) -> Vec<ArmReport> {
+        self.arms
+            .iter()
+            .map(|a| ArmReport {
+                name: a.name,
+                pulls: a.pulls,
+                ewma_emitted: a.ewma_emitted,
+                emitted_total: a.emitted_total,
+                value: a.value(),
+            })
+            .collect()
+    }
+
+    /// Per-kind acceptance estimates observed so far.
+    pub fn kind_reports(&self) -> Vec<(StrategyKind, KindStats)> {
+        self.est.active_kinds()
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Reset per-sequence state between requests. Arm strategies keep
+    /// their own cross-request semantics (`SessionNgramCache` persists its
+    /// table through reset by design).
+    pub fn reset(&mut self) {
+        for arm in &mut self.arms {
+            arm.strategy.reset();
+            arm.pulls = 0;
+            arm.ewma_emitted = 0.0;
+            arm.ewma_cost = 0.0;
+            arm.emitted_total = 0;
+        }
+        self.cur = 0;
+        self.steps = 0;
+        self.est.reset();
+        self.ewma_accept = 0.0;
+        self.ewma_hit = 0.0;
+        self.ewma_depth = 1.0;
+        self.last_conf.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NoDraft;
+
+    fn ctl(n_arms: usize) -> SeqController {
+        let names = [
+            StrategyName::Mixed,
+            StrategyName::Context,
+            StrategyName::ExtBigram,
+        ];
+        let arms: Vec<(StrategyName, Box<dyn DraftStrategy>)> = names[..n_arms]
+            .iter()
+            .map(|&n| (n, Box::new(NoDraft) as Box<dyn DraftStrategy>))
+            .collect();
+        SeqController::new(arms, AdaptiveConfig::default(), CostModel::for_analog("mistral"))
+    }
+
+    fn feed(c: &mut SeqController, accepted: usize, k: usize, w: usize) {
+        let mut b = DraftBatch::new(w);
+        b.push(vec![0; w.min(3)], StrategyKind::ContextNgram, 0);
+        let emitted = vec![0u32; accepted + 1];
+        let model_out = vec![0u32; w + 1];
+        c.observe(&StepFeedback {
+            batch: &b,
+            row: 0,
+            accepted,
+            emitted: &emitted,
+            model_out: &model_out,
+            k,
+            w,
+            ctx_len: 100,
+        });
+    }
+
+    const SHAPES: [(usize, usize); 8] = [
+        (1, 0), (1, 4), (2, 4), (5, 4), (5, 10), (10, 10), (10, 14), (25, 14),
+    ];
+
+    #[test]
+    fn cold_plan_matches_static_config() {
+        let mut c = ctl(2);
+        assert_eq!(c.plan(10, 100, &SHAPES, 10, 10), (10, 10));
+    }
+
+    #[test]
+    fn warmup_round_robins_arms() {
+        let mut c = ctl(3);
+        for expect_arm in [0usize, 1, 2, 0, 1, 2] {
+            c.plan(10, 100, &SHAPES, 10, 10);
+            assert_eq!(c.cur, expect_arm);
+            feed(&mut c, 1, 10, 10);
+        }
+    }
+
+    #[test]
+    fn hot_sequence_plans_deep_cold_plans_shallow() {
+        let mut hot = ctl(1);
+        for _ in 0..12 {
+            hot.plan(10, 100, &SHAPES, 25, 14);
+            feed(&mut hot, 9, 10, 10);
+        }
+        let (_, w_hot) = hot.plan(10, 100, &SHAPES, 25, 14);
+        assert!(w_hot >= 10, "hot sequence chose w={w_hot}");
+
+        let mut cold = ctl(1);
+        for _ in 0..12 {
+            cold.plan(10, 100, &SHAPES, 25, 14);
+            feed(&mut cold, 0, 10, 10);
+        }
+        let (k_cold, w_cold) = cold.plan(10, 100, &SHAPES, 25, 14);
+        assert!(
+            w_cold <= w_hot && k_cold <= 25,
+            "cold sequence chose ({k_cold}, {w_cold}) vs hot w={w_hot}"
+        );
+    }
+
+    #[test]
+    fn plan_respects_room_and_caps() {
+        let mut c = ctl(1);
+        feed(&mut c, 3, 5, 4);
+        let (k, w) = c.plan(10, 3, &SHAPES, 10, 14); // room 3 -> w + 1 <= 3
+        assert!(w + 1 <= 3 && k <= 10);
+    }
+
+    #[test]
+    fn plan_is_idempotent_between_observes() {
+        let mut c = ctl(3);
+        for _ in 0..8 {
+            c.plan(10, 100, &SHAPES, 10, 10);
+            feed(&mut c, 2, 10, 10);
+        }
+        let a = c.plan(50, 100, &SHAPES, 10, 10);
+        let arm_a = c.cur;
+        let b = c.plan(50, 100, &SHAPES, 10, 10);
+        assert_eq!(a, b);
+        assert_eq!(arm_a, c.cur);
+    }
+
+    #[test]
+    fn bandit_prefers_the_paying_arm() {
+        let mut c = ctl(2);
+        // warmup: arm 0 gets big acceptance, arm 1 gets none
+        for _ in 0..20 {
+            c.plan(10, 100, &SHAPES, 10, 10);
+            let acc = if c.cur == 0 { 8 } else { 0 };
+            feed(&mut c, acc, 10, 10);
+        }
+        c.plan(10, 100, &SHAPES, 10, 10);
+        assert_eq!(c.cur, 0, "bandit should exploit the accepting arm");
+    }
+
+    #[test]
+    fn marginal_gain_decays_with_depth_and_scales_with_heat() {
+        let mut hot = ctl(1);
+        for _ in 0..6 {
+            hot.plan(10, 100, &SHAPES, 10, 10);
+            feed(&mut hot, 8, 10, 10);
+        }
+        let cold = ctl(1);
+        assert!(hot.marginal_gain(0) > cold.marginal_gain(0));
+        assert!(hot.marginal_gain(0) >= hot.marginal_gain(5));
+    }
+
+    #[test]
+    fn reset_restores_cold_start() {
+        let mut c = ctl(2);
+        for _ in 0..5 {
+            c.plan(10, 100, &SHAPES, 10, 10);
+            feed(&mut c, 4, 10, 10);
+        }
+        c.reset();
+        assert_eq!(c.steps(), 0);
+        assert_eq!(c.plan(10, 100, &SHAPES, 10, 10), (10, 10));
+        assert!(c.arm_reports().iter().all(|r| r.pulls == 0));
+    }
+}

@@ -1,0 +1,173 @@
+//! Per-sequence, per-`StrategyKind` acceptance estimators.
+//!
+//! Fed from step row provenance (which kinds had rows allocated, which row
+//! won, how long its accepted prefix was), these EWMAs are the raw signal
+//! behind both the controller's arm scores and the operator-facing arm
+//! statistics printed by `bench adaptive`.
+
+use crate::draft::{DraftBatch, StrategyKind};
+
+/// EWMA acceptance statistics for one `StrategyKind` within one sequence.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KindStats {
+    /// EWMA of the accepted-prefix length on steps a row of this kind won
+    pub ewma_accepted: f64,
+    /// EWMA of the hit rate: 1 when this kind won a step it had rows in,
+    /// 0 when it had rows allocated but lost
+    pub ewma_hit: f64,
+    /// steps in which this kind had at least one allocated row
+    pub steps_allocated: u64,
+    /// steps a row of this kind won
+    pub wins: u64,
+    /// total accepted draft tokens across winning steps
+    pub accepted_total: u64,
+}
+
+/// Fixed-array estimator over every `StrategyKind`.
+#[derive(Debug, Clone)]
+pub struct AcceptanceEstimator {
+    alpha: f64,
+    stats: [KindStats; StrategyKind::COUNT],
+}
+
+/// One EWMA update; the first sample initializes the average directly.
+pub(crate) fn ewma(old: f64, x: f64, alpha: f64, samples: u64) -> f64 {
+    if samples == 0 {
+        x
+    } else {
+        alpha * x + (1.0 - alpha) * old
+    }
+}
+
+impl AcceptanceEstimator {
+    pub fn new(alpha: f64) -> Self {
+        AcceptanceEstimator {
+            alpha: alpha.clamp(0.01, 1.0),
+            stats: [KindStats::default(); StrategyKind::COUNT],
+        }
+    }
+
+    /// Digest one judged step: for every kind with allocated rows, update
+    /// its hit rate (did it win?) and, for the winner, its accepted-length
+    /// EWMA. A step with NO accepted draft tokens has no winner — the
+    /// judge defaults to row 0 there, and crediting row 0's kind would
+    /// systematically inflate whatever strategy fills the top row.
+    pub fn observe(&mut self, batch: &DraftBatch, win_row: usize, accepted: usize) {
+        if batch.rows.is_empty() {
+            return;
+        }
+        let winner = (accepted > 0).then(|| batch.rows[win_row].kind);
+        for kind in StrategyKind::ALL {
+            if kind == StrategyKind::Empty {
+                continue; // padding rows carry no signal
+            }
+            let allocated = batch.rows.iter().any(|r| r.kind == kind);
+            if !allocated {
+                continue;
+            }
+            let i = kind.index();
+            let hit = winner == Some(kind);
+            let s = &mut self.stats[i];
+            s.ewma_hit = ewma(s.ewma_hit, if hit { 1.0 } else { 0.0 }, self.alpha,
+                              s.steps_allocated);
+            if hit {
+                s.ewma_accepted = ewma(s.ewma_accepted, accepted as f64, self.alpha, s.wins);
+                s.wins += 1;
+                s.accepted_total += accepted as u64;
+            }
+            s.steps_allocated += 1;
+        }
+    }
+
+    pub fn stats(&self, kind: StrategyKind) -> &KindStats {
+        &self.stats[kind.index()]
+    }
+
+    /// (kind, stats) for every kind that ever had rows allocated.
+    pub fn active_kinds(&self) -> Vec<(StrategyKind, KindStats)> {
+        StrategyKind::ALL
+            .iter()
+            .filter_map(|&k| {
+                let s = self.stats[k.index()];
+                (s.steps_allocated > 0).then_some((k, s))
+            })
+            .collect()
+    }
+
+    pub fn reset(&mut self) {
+        self.stats = [KindStats::default(); StrategyKind::COUNT];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch(kinds: &[StrategyKind]) -> DraftBatch {
+        let mut b = DraftBatch::new(4);
+        for (i, &k) in kinds.iter().enumerate() {
+            b.push(vec![1, 2], k, i);
+        }
+        b
+    }
+
+    #[test]
+    fn winner_and_losers_update_separately() {
+        let mut e = AcceptanceEstimator::new(0.5);
+        let b = batch(&[StrategyKind::ContextNgram, StrategyKind::ExtendedBigram]);
+        e.observe(&b, 0, 2);
+        let ctx = e.stats(StrategyKind::ContextNgram);
+        let big = e.stats(StrategyKind::ExtendedBigram);
+        assert_eq!(ctx.wins, 1);
+        assert_eq!(big.wins, 0);
+        assert!((ctx.ewma_hit - 1.0).abs() < 1e-12);
+        assert!((big.ewma_hit - 0.0).abs() < 1e-12);
+        assert!((ctx.ewma_accepted - 2.0).abs() < 1e-12);
+        assert_eq!(ctx.steps_allocated, 1);
+        assert_eq!(big.steps_allocated, 1);
+    }
+
+    #[test]
+    fn ewma_tracks_recent_behavior() {
+        let mut e = AcceptanceEstimator::new(0.5);
+        let b = batch(&[StrategyKind::ContextNgram]);
+        e.observe(&b, 0, 4);
+        e.observe(&b, 0, 2);
+        let s = e.stats(StrategyKind::ContextNgram);
+        assert!((s.ewma_accepted - 3.0).abs() < 1e-12); // 0.5*2 + 0.5*4
+        assert_eq!(s.accepted_total, 6);
+        assert_eq!(s.wins, 2);
+    }
+
+    #[test]
+    fn zero_acceptance_steps_have_no_winner() {
+        let mut e = AcceptanceEstimator::new(0.5);
+        let b = batch(&[StrategyKind::ContextNgram, StrategyKind::ExtendedBigram]);
+        // judge defaults to row 0 when nothing matched; that is a MISS for
+        // every allocated kind, not a win for row 0's kind
+        e.observe(&b, 0, 0);
+        let ctx = e.stats(StrategyKind::ContextNgram);
+        assert_eq!(ctx.wins, 0);
+        assert!((ctx.ewma_hit - 0.0).abs() < 1e-12);
+        assert_eq!(ctx.steps_allocated, 1);
+    }
+
+    #[test]
+    fn unallocated_kinds_untouched_and_empty_ignored() {
+        let mut e = AcceptanceEstimator::new(0.3);
+        let mut b = batch(&[StrategyKind::ContextNgram]);
+        b.push(Vec::new(), StrategyKind::Empty, 1);
+        e.observe(&b, 0, 1);
+        assert_eq!(e.stats(StrategyKind::ModelBigram).steps_allocated, 0);
+        assert_eq!(e.stats(StrategyKind::Empty).steps_allocated, 0);
+        assert_eq!(e.active_kinds().len(), 1);
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut e = AcceptanceEstimator::new(0.3);
+        e.observe(&batch(&[StrategyKind::ContextNgram]), 0, 3);
+        e.reset();
+        assert!(e.active_kinds().is_empty());
+    }
+}

@@ -1,0 +1,110 @@
+//! Adaptive speculation control: online (k, w) + strategy selection under
+//! a packed-batch row budget.
+//!
+//! The paper (Fig. 1/4) shows the best learning-free strategy mix and the
+//! useful speculation depth vary sharply by task and by position in the
+//! stream, yet a static engine pins one strategy and one (k, w) per
+//! request for its whole lifetime. This subsystem closes the loop:
+//!
+//! - [`estimator`] — per-sequence, per-[`StrategyKind`] acceptance
+//!   estimators (EWMA of accepted-prefix length and hit rate), fed from
+//!   the step's row provenance (`DraftBatch` kinds + the winning row).
+//! - [`controller`] — [`SeqController`]: a deterministic UCB bandit over
+//!   `StrategyName` arms scored by expected accepted-tokens-per-verify-
+//!   cost (the [`crate::costmodel`] call time), plus per-step (k, w)
+//!   planning over the model's available artifact shapes.
+//! - [`budget`] — the packed-batch row allocator for
+//!   [`crate::engine::BatchedEngine`]: distributes a global row budget
+//!   `sum k_i <= B` across active sequences by marginal expected
+//!   acceptance, so hot sequences get deep speculation and cold ones
+//!   degrade toward anchor-only rows.
+//!
+//! CORRECTNESS: adaptation is lossless by construction. The controller
+//! only ever changes *which drafts are proposed* and *how many rows/how
+//! deep* the verifier checks — acceptance itself (`engine::acceptance`)
+//! still emits exactly the base model's greedy stream, so any adaptation
+//! trajectory, however bad, can only cost speed (property-tested in
+//! `rust/tests/adaptive.rs`).
+
+pub mod budget;
+pub mod controller;
+pub mod estimator;
+
+pub use controller::{ArmReport, SeqController};
+pub use estimator::AcceptanceEstimator;
+
+use std::sync::Arc;
+
+use crate::config::SessionCacheConfig;
+use crate::costmodel::CostModel;
+use crate::draft::{DraftBatch, NgramTables};
+use crate::scheduler::{make_strategy_with_cache, StrategyName};
+use crate::tokenizer::TokenId;
+
+/// Tuning knobs for the per-sequence controller. Every field has a sane
+/// default; the losslessness property tests randomize all of them.
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    /// EWMA decay for acceptance statistics (weight of the newest sample).
+    pub alpha: f64,
+    /// UCB exploration coefficient for arm selection (0 = pure greedy).
+    pub explore: f64,
+    /// Round-robin passes through the arms before the bandit exploits.
+    pub warmup: usize,
+    /// Optimism factor on the estimated acceptance length when planning
+    /// speculation depth: plan for `ewma * depth_optimism + 1` tokens so a
+    /// hot sequence keeps probing deeper than its average run.
+    pub depth_optimism: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig { alpha: 0.25, explore: 0.15, warmup: 2, depth_optimism: 1.5 }
+    }
+}
+
+/// Everything the controller learns from about one verification step.
+/// Built by the engines right after `judge_and_commit`.
+pub struct StepFeedback<'a> {
+    /// the judged draft batch (row provenance: kind / rank / confidence)
+    pub batch: &'a DraftBatch,
+    /// winning row index within the batch
+    pub row: usize,
+    /// accepted draft-prefix length of the winning row
+    pub accepted: usize,
+    /// tokens emitted this step (accepted drafts + bonus token)
+    pub emitted: &'a [TokenId],
+    /// verifier output for the winning row (forwarded to the arm strategy)
+    pub model_out: &'a [TokenId],
+    /// block shape actually verified
+    pub k: usize,
+    pub w: usize,
+    /// context length at call time
+    pub ctx_len: usize,
+}
+
+/// The default arm set: the paper's mixed policy plus its two strongest
+/// single sources and the online session cache (which only pays off late
+/// in repetitive streams — exactly what the bandit is for).
+pub const DEFAULT_ARMS: [StrategyName; 4] = [
+    StrategyName::Mixed,
+    StrategyName::Context,
+    StrategyName::ExtBigram,
+    StrategyName::Session,
+];
+
+/// Build a per-sequence controller with the default arm set for a model:
+/// `analog` picks the cost-model dims (`TxDims::for_analog`, falling back
+/// to the 7B analog) so verify costs are scored at paper scale.
+pub fn controller_for(
+    tables: &Arc<NgramTables>,
+    q: usize,
+    cache: &SessionCacheConfig,
+    analog: &str,
+) -> SeqController {
+    let arms = DEFAULT_ARMS
+        .iter()
+        .map(|&name| (name, make_strategy_with_cache(name, tables, q, cache)))
+        .collect();
+    SeqController::new(arms, AdaptiveConfig::default(), CostModel::for_analog(analog))
+}

@@ -1,0 +1,294 @@
+//! Adaptive-controller bench: online (k, w) + strategy selection vs every
+//! static single-strategy configuration on the repetitive testkit
+//! workload, plus the budgeted batched engine.
+//!
+//! Headline: adaptive tokens/call should meet or beat the BEST static
+//! arm at the paper-default (10, 10) — the controller gets the same row
+//! cap but may plan deeper speculation when its acceptance estimates say
+//! the stream is hot, and routes drafting to whichever arm is paying.
+//! Per-arm pull counts and per-kind acceptance estimates are printed so
+//! the bandit's behavior is inspectable, not just its score.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::adaptive::{self, DEFAULT_ARMS};
+use crate::config::{EngineConfig, SessionCacheConfig};
+use crate::costmodel::CostModel;
+use crate::engine::{BatchedEngine, SpecDecoder};
+use crate::scheduler::{make_strategy, StrategyName};
+use crate::util::json::Json;
+use crate::workload::{Prompt, TASKS};
+
+/// Concurrency (pooled KV lanes) of the budgeted-batched section. The
+/// default row budget is derived from it as 60% of the unbudgeted
+/// `BATCH_CONC * k` rows, so the allocator has real decisions to make.
+const BATCH_CONC: usize = 4;
+
+pub fn run(
+    ctx: &super::BenchCtx,
+    n_prompts: usize,
+    max_new: usize,
+    budget: Option<usize>,
+    smoke: bool,
+) -> Result<()> {
+    let (n_prompts, max_new) = if smoke { (2, 16) } else { (n_prompts, max_new) };
+    let (k, w) = (10usize, 10usize);
+    let cm = ctx.cost_model();
+    let cache_cfg = SessionCacheConfig::default();
+    let analog = ctx.runtime.artifacts().dims.analog.clone();
+    // adaptive gets the same row cap but the full artifact depth range
+    let w_cap = ctx
+        .runtime
+        .artifacts()
+        .step_shapes()
+        .iter()
+        .map(|&(_, sw)| sw)
+        .max()
+        .unwrap_or(w);
+
+    let mut prompts = Vec::new();
+    for task in TASKS {
+        prompts.extend(ctx.prompts(task, n_prompts.div_ceil(TASKS.len()).max(2), 96)?);
+    }
+
+    println!(
+        "== adaptive controller vs static strategies (model '{}', {} prompts x {} tokens) ==\n",
+        ctx.model,
+        prompts.len(),
+        max_new
+    );
+    println!("{:<22} {:>9} {:>7} {:>12}", "config", "tok/call", "calls", "sim tok/s");
+
+    // --- static single-strategy baselines at the paper default (10, 10).
+    // One decoder per config, reused across prompts, so the session cache
+    // keeps its cross-request table — same semantics the controller's
+    // session arm gets.
+    let mut best_static = f64::NEG_INFINITY;
+    let mut best_static_name = "";
+    let mut rows = Vec::new();
+    for name in DEFAULT_ARMS {
+        let strat = make_strategy(name, &ctx.tables, 1);
+        let mut dec = SpecDecoder::new(
+            &ctx.runtime,
+            strat,
+            EngineConfig { k, w, q: 1, max_new_tokens: max_new },
+        );
+        dec.collect_traces = true;
+        let (tokens, calls, sim_s) = decode_all(&mut dec, &prompts, &cm)?;
+        let tpc = tokens as f64 / calls.max(1) as f64;
+        let sim_tps = tokens as f64 / sim_s;
+        if tpc > best_static {
+            best_static = tpc;
+            best_static_name = name.label();
+        }
+        let label = format!("static {} ({k},{w})", name.label());
+        println!("{label:<22} {tpc:>9.2} {calls:>7} {sim_tps:>12.1}");
+        rows.push(Json::obj(vec![
+            ("config", Json::Str(format!("static-{}", name.label()))),
+            ("tokens_per_call", Json::Num(tpc)),
+            ("calls", Json::Num(calls as f64)),
+            ("sim_tokens_per_s", Json::Num(sim_tps)),
+        ]));
+    }
+
+    // --- adaptive: same row cap, full depth range, bandit over the arms
+    let ctrl = adaptive::controller_for(&ctx.tables, 1, &cache_cfg, &analog);
+    let mut dec = SpecDecoder::with_controller(
+        &ctx.runtime,
+        ctrl,
+        EngineConfig { k, w: w_cap, q: 1, max_new_tokens: max_new },
+    );
+    dec.collect_traces = true;
+    let mut arm_pulls = vec![0u64; DEFAULT_ARMS.len()];
+    let mut arm_emitted = vec![0u64; DEFAULT_ARMS.len()];
+    let mut kinds: BTreeMap<&'static str, (u64, u64, f64)> = BTreeMap::new();
+    let mut tokens = 0usize;
+    let mut calls = 0usize;
+    let mut sim_s = 0.0f64;
+    for p in &prompts {
+        let r = dec.generate(&p.tokens)?;
+        tokens += r.tokens.len().saturating_sub(1);
+        calls += r.calls;
+        sim_s += r
+            .traces
+            .iter()
+            .map(|t| cm.call_time(t.k, t.w + 1, t.ctx_len))
+            .sum::<f64>();
+        // harvest per-arm / per-kind stats before the next generate resets
+        let c = dec.controller.as_ref().expect("adaptive decoder");
+        for (i, rep) in c.arm_reports().iter().enumerate() {
+            arm_pulls[i] += rep.pulls;
+            arm_emitted[i] += rep.emitted_total;
+        }
+        for (kind, s) in c.kind_reports() {
+            let e = kinds.entry(kind.label()).or_insert((0, 0, 0.0));
+            e.0 += s.wins;
+            e.1 += s.accepted_total;
+            e.2 = e.2.max(s.ewma_hit);
+        }
+    }
+    let adaptive_tpc = tokens as f64 / calls.max(1) as f64;
+    let adaptive_tps = tokens as f64 / sim_s;
+    let label = format!("adaptive (<={k},<={w_cap})");
+    println!("{label:<22} {adaptive_tpc:>9.2} {calls:>7} {adaptive_tps:>12.1}");
+    println!(
+        "\nbest static: {best_static_name} at {best_static:.2} tok/call; adaptive {}: \
+         {adaptive_tpc:.2} tok/call",
+        if adaptive_tpc >= best_static { "MATCHES/BEATS it" } else { "BELOW it" },
+    );
+
+    println!("\n-- adaptive arm statistics (summed over {} prompts) --", prompts.len());
+    println!("{:<12} {:>7} {:>14}", "arm", "pulls", "mean emitted");
+    let mut arm_json = Vec::new();
+    for (i, name) in DEFAULT_ARMS.iter().enumerate() {
+        let mean = arm_emitted[i] as f64 / (arm_pulls[i].max(1)) as f64;
+        println!("{:<12} {:>7} {:>14.2}", name.label(), arm_pulls[i], mean);
+        arm_json.push(Json::obj(vec![
+            ("arm", Json::Str(name.label().into())),
+            ("pulls", Json::Num(arm_pulls[i] as f64)),
+            ("mean_emitted", Json::Num(mean)),
+        ]));
+    }
+    println!("\n-- per-kind acceptance (wins / accepted tokens / peak hit-rate EWMA) --");
+    for (label, (wins, accepted, hit)) in &kinds {
+        println!("{:<14} {:>6} {:>8} {:>8.2}", label, wins, accepted, hit);
+    }
+
+    rows.push(Json::obj(vec![
+        ("config", Json::Str("adaptive".into())),
+        ("tokens_per_call", Json::Num(adaptive_tpc)),
+        ("calls", Json::Num(calls as f64)),
+        ("sim_tokens_per_s", Json::Num(adaptive_tps)),
+    ]));
+
+    // --- budgeted batched engine: adaptive sequences under a shared row
+    // budget, vs the same engine unbudgeted
+    let b = budget.unwrap_or(BATCH_CONC * k * 3 / 5); // 60% of the unbudgeted rows
+    println!(
+        "\n== budgeted batched engine (conc {BATCH_CONC}, row budget {b}, adaptive mode) =="
+    );
+    let budgeted =
+        run_batched(ctx, &prompts, max_new, k, w_cap, Some(b), &cache_cfg, &analog, &cm)?;
+    let unbudgeted =
+        run_batched(ctx, &prompts, max_new, k, w_cap, None, &cache_cfg, &analog, &cm)?;
+    println!(
+        "{:<12} {:>9} {:>11} {:>11} {:>12}",
+        "mode", "tok/call", "rows/step", "max rows", "sim tok/s"
+    );
+    for (label, r) in [("budget", &budgeted), ("unbudgeted", &unbudgeted)] {
+        println!(
+            "{:<12} {:>9.2} {:>11.1} {:>11} {:>12.1}",
+            label, r.tokens_per_call, r.mean_rows, r.max_rows, r.sim_tps
+        );
+    }
+    // the effective budget floors at one row per active sequence
+    let limit = b.max(BATCH_CONC);
+    anyhow::ensure!(
+        budgeted.max_rows <= limit,
+        "budget violated: packed {} rows in a step with budget {limit}",
+        budgeted.max_rows
+    );
+
+    super::write_json(
+        &format!("adaptive_{}", ctx.model),
+        &Json::obj(vec![
+            ("bench", Json::Str("adaptive".into())),
+            ("model", Json::Str(ctx.model.clone())),
+            ("max_new", Json::Num(max_new as f64)),
+            ("n_prompts", Json::Num(prompts.len() as f64)),
+            ("best_static", Json::Str(best_static_name.into())),
+            ("best_static_tokens_per_call", Json::Num(best_static)),
+            ("rows", Json::Arr(rows)),
+            ("arms", Json::Arr(arm_json)),
+            ("batch_budget", Json::Num(b as f64)),
+            ("batch_budget_max_rows", Json::Num(budgeted.max_rows as f64)),
+            ("batch_budget_tokens_per_call", Json::Num(budgeted.tokens_per_call)),
+            ("batch_unbudgeted_tokens_per_call", Json::Num(unbudgeted.tokens_per_call)),
+        ]),
+    )
+}
+
+/// Decode every prompt with one (reused) decoder; returns (decode tokens,
+/// calls, simulated seconds at paper scale).
+fn decode_all(
+    dec: &mut SpecDecoder,
+    prompts: &[Prompt],
+    cm: &CostModel,
+) -> Result<(usize, usize, f64)> {
+    let mut tokens = 0usize;
+    let mut calls = 0usize;
+    let mut sim_s = 0.0f64;
+    for p in prompts {
+        let r = dec.generate(&p.tokens)?;
+        tokens += r.tokens.len().saturating_sub(1);
+        calls += r.calls;
+        sim_s += r
+            .traces
+            .iter()
+            .map(|t| cm.call_time(t.k, t.w + 1, t.ctx_len))
+            .sum::<f64>();
+    }
+    Ok((tokens, calls, sim_s))
+}
+
+struct BatchedRun {
+    tokens_per_call: f64,
+    mean_rows: f64,
+    max_rows: usize,
+    sim_tps: f64,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_batched(
+    ctx: &super::BenchCtx,
+    prompts: &[Prompt],
+    max_new: usize,
+    k: usize,
+    w_cap: usize,
+    budget: Option<usize>,
+    cache_cfg: &SessionCacheConfig,
+    analog: &str,
+    cm: &CostModel,
+) -> Result<BatchedRun> {
+    let cfg = EngineConfig { k, w: w_cap, q: 1, max_new_tokens: max_new };
+    let mut eng = BatchedEngine::with_budget(&ctx.runtime, BATCH_CONC, budget);
+    eng.collect_traces = true;
+    let mut pending: Vec<&Prompt> = prompts.iter().collect();
+    pending.reverse();
+    let mut tokens = 0usize;
+    let mut calls = 0usize;
+    loop {
+        while eng.has_capacity() {
+            let Some(p) = pending.pop() else { break };
+            let strat = make_strategy(StrategyName::Mixed, &ctx.tables, 1);
+            let ctrl = adaptive::controller_for(&ctx.tables, 1, cache_cfg, analog);
+            eng.admit_with(&p.tokens, strat, Some(ctrl), cfg.clone())?;
+        }
+        if eng.active() == 0 && pending.is_empty() {
+            break;
+        }
+        for (_, r) in eng.step()? {
+            tokens += r.tokens.len().saturating_sub(1);
+            calls += r.calls;
+        }
+    }
+    // per-step packed rows (a ragged step issues several packed calls)
+    let mut per_step: BTreeMap<u64, usize> = BTreeMap::new();
+    for t in &eng.packed_traces {
+        *per_step.entry(t.step).or_insert(0) += t.rows;
+    }
+    let sim_s: f64 = eng
+        .packed_traces
+        .iter()
+        .map(|t| cm.call_time(t.rows, t.w + 1, t.max_ctx))
+        .sum();
+    let n_steps = per_step.len().max(1);
+    Ok(BatchedRun {
+        tokens_per_call: tokens as f64 / calls.max(1) as f64,
+        mean_rows: per_step.values().sum::<usize>() as f64 / n_steps as f64,
+        max_rows: per_step.values().copied().max().unwrap_or(0),
+        sim_tps: tokens as f64 / sim_s.max(1e-12),
+    })
+}

@@ -10,6 +10,7 @@
 //!   model scale (CPU PJRT cannot show the §3 phase transition).
 //! - speedup(cpu) — honest measured wall-time ratio on this host's CPU.
 
+pub mod adaptive;
 pub mod batched;
 pub mod fig1;
 pub mod fig2;
@@ -23,7 +24,7 @@ use std::sync::Arc;
 use anyhow::Result;
 
 use crate::config::{EngineConfig, Manifest};
-use crate::costmodel::{CostModel, Hardware, TxDims};
+use crate::costmodel::CostModel;
 use crate::draft::NgramTables;
 use crate::engine::{GenResult, SpecDecoder};
 use crate::runtime::ModelRuntime;
@@ -57,8 +58,7 @@ impl BenchCtx {
 
     /// Cost model at the paper's scale for this nano model's analog.
     pub fn cost_model(&self) -> CostModel {
-        let dims = TxDims::for_analog(&self.model).unwrap_or_else(TxDims::mistral_7b);
-        CostModel::new(Hardware::a100_40gb(), dims)
+        CostModel::for_analog(&self.model)
     }
 }
 

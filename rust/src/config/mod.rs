@@ -7,6 +7,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::scheduler::StrategyName;
 use crate::util::json::Json;
 
 /// Dimensions of one nano model (mirrors python/compile/configs.py).
@@ -235,6 +236,26 @@ impl Default for EngineConfig {
     }
 }
 
+/// Bounds for the online `SessionNgramCache` strategy (per-query fanout,
+/// stored chain length, total stored chains). Plumbed from the CLI so
+/// operators can size the cache to their workload instead of inheriting
+/// hardcoded bounds.
+#[derive(Debug, Clone)]
+pub struct SessionCacheConfig {
+    /// max continuations kept per query token
+    pub per_query: usize,
+    /// max chain length stored per continuation
+    pub max_chain: usize,
+    /// max total stored chains across the session
+    pub cap: usize,
+}
+
+impl Default for SessionCacheConfig {
+    fn default() -> Self {
+        SessionCacheConfig { per_query: 8, max_chain: 12, cap: 100_000 }
+    }
+}
+
 /// Serving-layer settings.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -246,6 +267,17 @@ pub struct ServeConfig {
     /// this many pooled KV lanes, verifying all active sequences in one
     /// packed call per step.
     pub batch: usize,
+    /// Packed-row budget for the batched engine: caps the per-step packed
+    /// batch size `sum k_i` at `max(budget, active)`; rows are distributed
+    /// across sequences by marginal expected acceptance. `None` = unbudgeted
+    /// (every sequence speculates at its own configured width).
+    pub budget: Option<usize>,
+    /// Default strategy for requests that don't name one (`Adaptive`
+    /// turns on the online controller). Typed, so an invalid name fails
+    /// at config construction, not silently per request.
+    pub default_strategy: StrategyName,
+    /// Bounds for the session n-gram cache strategy.
+    pub session_cache: SessionCacheConfig,
     pub default_engine: EngineConfig,
 }
 
@@ -256,6 +288,9 @@ impl Default for ServeConfig {
             workers: 1,
             queue_cap: 256,
             batch: 0,
+            budget: None,
+            default_strategy: StrategyName::Mixed,
+            session_cache: SessionCacheConfig::default(),
             default_engine: EngineConfig::default(),
         }
     }

@@ -166,6 +166,14 @@ impl CostModel {
         CostModel { hw, dims }
     }
 
+    /// Paper-scale cost model for a nano model's analog name (manifest
+    /// `dims.analog`), defaulting to the 7B analog on the reference A100.
+    /// This is what the adaptive controller scores verify calls with.
+    pub fn for_analog(analog: &str) -> Self {
+        let dims = TxDims::for_analog(analog).unwrap_or_else(TxDims::mistral_7b);
+        CostModel::new(Hardware::a100_40gb(), dims)
+    }
+
     /// Time for one GEMM: max(memory roofline, wave-quantized compute) +
     /// launch overhead.
     fn gemm_time(&self, g: Gemm) -> f64 {

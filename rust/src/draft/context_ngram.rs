@@ -11,7 +11,7 @@
 
 use std::collections::HashMap;
 
-use super::{DraftBatch, DraftStrategy, StrategyKind};
+use super::{count_share, DraftBatch, DraftStrategy, StrategyKind};
 use crate::tokenizer::TokenId;
 
 #[derive(Debug)]
@@ -79,11 +79,14 @@ impl DraftStrategy for ContextNgram {
             return;
         }
         let w = batch.w;
-        for (rank, (tokens, _count)) in self.candidates(seq, w).into_iter().enumerate() {
+        let cands = self.candidates(seq, w);
+        let total: u32 = cands.iter().map(|(_, c)| *c).sum();
+        for (rank, (tokens, count)) in cands.into_iter().enumerate() {
             if batch.is_full(k) {
                 break;
             }
-            batch.push(tokens, StrategyKind::ContextNgram, rank);
+            // confidence = this continuation's share of the observed matches
+            batch.push_conf(tokens, StrategyKind::ContextNgram, rank, count_share(count, total));
         }
     }
 }

@@ -10,7 +10,8 @@
 use std::sync::Arc;
 
 use super::{
-    ContextNgram, DraftBatch, DraftStrategy, ExtendedBigram, NgramTables, StrategyKind,
+    count_share, ContextNgram, DraftBatch, DraftStrategy, ExtendedBigram, NgramTables,
+    StrategyKind,
 };
 use crate::tokenizer::TokenId;
 
@@ -56,28 +57,29 @@ impl DraftStrategy for MixedStrategy {
     }
 
     fn propose(&mut self, seq: &[TokenId], k: usize, batch: &mut DraftBatch) {
-        // Gather both sources' ranked candidates, then fill the batch with
-        // DISTINCT rows in policy order (duplicates waste verification rows).
+        // Gather both sources' ranked candidates (with confidences), then
+        // fill the batch with DISTINCT rows in policy order (duplicates
+        // waste verification rows).
         let w = batch.w;
-        let ctx_rows: Vec<Vec<TokenId>> = self
-            .context
-            .candidates(seq, w)
+        let ctx_cands = self.context.candidates(seq, w);
+        let ctx_total: u32 = ctx_cands.iter().map(|(_, c)| *c).sum();
+        let ctx_rows: Vec<(Vec<TokenId>, f64)> = ctx_cands
             .into_iter()
-            .map(|(g, _)| g)
+            .map(|(g, c)| (g, count_share(c, ctx_total)))
             .collect();
         let tables = self.bigram_tables();
-        let mut big_rows: Vec<Vec<TokenId>> = Vec::new();
+        let mut big_rows: Vec<(Vec<TokenId>, f64)> = Vec::new();
         if let Some(&cur) = seq.last() {
             let mut chain = Vec::new();
             for j in 0..tables.ext_bigram.cols {
                 tables.ext_chain(cur, j, w, &mut chain);
-                big_rows.push(chain.clone());
+                big_rows.push((chain.clone(), 1.0 / (1.0 + j as f64)));
             }
         }
 
-        let push = |batch: &mut DraftBatch, rows: &[Vec<TokenId>],
+        let push = |batch: &mut DraftBatch, rows: &[(Vec<TokenId>, f64)],
                     kind: StrategyKind, quota: usize| {
-            for (rank, row) in rows.iter().enumerate() {
+            for (rank, (row, conf)) in rows.iter().enumerate() {
                 if batch.is_full(quota) {
                     break;
                 }
@@ -85,7 +87,7 @@ impl DraftStrategy for MixedStrategy {
                     r.tokens.len() == row.len().min(w) && r.tokens == row[..row.len().min(w)]
                 });
                 if !exists {
-                    batch.push(row.clone(), kind, rank);
+                    batch.push_conf(row.clone(), kind, rank, *conf);
                 }
             }
         };

@@ -21,7 +21,9 @@ pub use tables::NgramTables;
 
 use crate::tokenizer::TokenId;
 
-/// Which strategy produced a draft row (for the paper's Fig. 4 ablations).
+/// Which strategy produced a draft row (for the paper's Fig. 4 ablations,
+/// the adaptive controller's per-kind acceptance estimators, and the
+/// per-strategy serving counters).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum StrategyKind {
     ContextNgram,
@@ -29,11 +31,33 @@ pub enum StrategyKind {
     ModelUnigram,
     ExtendedBigram,
     Jacobi,
+    /// online session n-gram cache rows (extension beyond the paper)
+    SessionCache,
     /// row k=0 baseline: greedy continuation column only (no draft)
     Empty,
 }
 
 impl StrategyKind {
+    /// Every variant, in `index()` order — the adaptive estimators and the
+    /// metrics counters are fixed arrays over this.
+    pub const ALL: [StrategyKind; Self::COUNT] = [
+        StrategyKind::ContextNgram,
+        StrategyKind::ModelBigram,
+        StrategyKind::ModelUnigram,
+        StrategyKind::ExtendedBigram,
+        StrategyKind::Jacobi,
+        StrategyKind::SessionCache,
+        StrategyKind::Empty,
+    ];
+    pub const COUNT: usize = 7;
+
+    /// Dense index into `ALL` (used for array-backed per-kind statistics).
+    /// `ALL` lists the variants in declaration order, so the discriminant
+    /// IS the index — no hand-maintained mapping to drift.
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
+
     pub fn label(&self) -> &'static str {
         match self {
             StrategyKind::ContextNgram => "context-ngram",
@@ -41,6 +65,7 @@ impl StrategyKind {
             StrategyKind::ModelUnigram => "model-unigram",
             StrategyKind::ExtendedBigram => "ext-bigram",
             StrategyKind::Jacobi => "jacobi",
+            StrategyKind::SessionCache => "session-cache",
             StrategyKind::Empty => "empty",
         }
     }
@@ -53,6 +78,11 @@ pub struct DraftRow {
     pub kind: StrategyKind,
     /// rank of this row within its strategy's own ordering (0 = top)
     pub rank: usize,
+    /// strategy-reported confidence in (0, 1]: count-based strategies
+    /// (context n-gram, session cache) report normalized occurrence mass,
+    /// table strategies fall back to the rank prior 1/(1+rank). Feeds the
+    /// adaptive budget allocator's marginal-gain estimates.
+    pub confidence: f64,
 }
 
 /// The (k, w) speculation batch handed to the verifier.
@@ -67,10 +97,25 @@ impl DraftBatch {
         DraftBatch { rows: Vec::new(), w }
     }
 
-    pub fn push(&mut self, mut tokens: Vec<TokenId>, kind: StrategyKind, rank: usize) {
-        debug_assert!(tokens.len() <= self.w);
+    pub fn push(&mut self, tokens: Vec<TokenId>, kind: StrategyKind, rank: usize) {
+        let confidence = 1.0 / (1.0 + rank as f64);
+        self.push_conf(tokens, kind, rank, confidence);
+    }
+
+    /// `push` with an explicit strategy-reported confidence (clamped to
+    /// (0, 1]); strategies with real frequency counts use this.
+    pub fn push_conf(
+        &mut self,
+        mut tokens: Vec<TokenId>,
+        kind: StrategyKind,
+        rank: usize,
+        confidence: f64,
+    ) {
+        // over-length rows are truncated (the documented contract; see
+        // `batch_truncates_to_w`)
         tokens.truncate(self.w);
-        self.rows.push(DraftRow { tokens, kind, rank });
+        let confidence = confidence.clamp(f64::MIN_POSITIVE, 1.0);
+        self.rows.push(DraftRow { tokens, kind, rank, confidence });
     }
 
     pub fn k(&self) -> usize {
@@ -80,6 +125,14 @@ impl DraftBatch {
     pub fn is_full(&self, k: usize) -> bool {
         self.rows.len() >= k
     }
+}
+
+/// Normalized count share for strategy confidence reporting: `count`'s
+/// fraction of `total` observed occurrences (safe on an empty total).
+/// Shared by every count-based strategy so their confidences stay
+/// comparable inputs to the adaptive budget allocator.
+pub fn count_share(count: u32, total: u32) -> f64 {
+    count as f64 / total.max(1) as f64
 }
 
 /// A draft proposal source. `seq` is the whole token history *including*

@@ -12,7 +12,7 @@
 
 use std::collections::HashMap;
 
-use super::{DraftBatch, DraftStrategy, StrategyKind};
+use super::{count_share, DraftBatch, DraftStrategy, StrategyKind};
 use crate::tokenizer::TokenId;
 
 /// (query token, continuation) statistics with LRU-ish bounding.
@@ -88,12 +88,17 @@ impl DraftStrategy for SessionNgramCache {
         let Some(&cur) = seq.last() else { return };
         let w = batch.w;
         if let Some(conts) = self.table.get(&cur) {
-            for (rank, (chain, _)) in conts.iter().enumerate() {
+            let total: u32 = conts.iter().map(|(_, c)| *c).sum();
+            for (rank, (chain, count)) in conts.iter().enumerate() {
                 if batch.is_full(k) {
                     break;
                 }
-                batch.push(chain.iter().copied().take(w).collect(),
-                           StrategyKind::ContextNgram, rank);
+                batch.push_conf(
+                    chain.iter().copied().take(w).collect(),
+                    StrategyKind::SessionCache,
+                    rank,
+                    count_share(*count, total),
+                );
             }
         }
     }

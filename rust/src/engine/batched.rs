@@ -26,6 +26,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::adaptive::{budget, SeqController, StepFeedback};
 use crate::config::EngineConfig;
 use crate::draft::{DraftBatch, DraftStrategy};
 use crate::kvcache::{KvPool, LaneId};
@@ -50,6 +51,10 @@ pub struct PackedTrace {
     pub max_ctx: usize,
     /// number of sequences that rode this call
     pub seqs: usize,
+    /// engine step index this call belonged to (a step with a ragged
+    /// depth set issues several packed calls; the row budget bounds their
+    /// SUM per step — asserted in `rust/tests/adaptive.rs`)
+    pub step: u64,
 }
 
 struct SeqState {
@@ -58,6 +63,9 @@ struct SeqState {
     /// prompt ++ generated; last element is the anchor (KV not yet cached)
     seq: Vec<TokenId>,
     strategy: Box<dyn DraftStrategy>,
+    /// adaptive mode: plans this sequence's (k, w), drafts via its bandit
+    /// arm and bids for budget rows; `strategy` is ignored when set
+    controller: Option<SeqController>,
     lane: LaneId,
     res: GenResult,
     /// set when the sequence can no longer step (cache exhausted)
@@ -78,9 +86,21 @@ pub struct BatchedEngine<'rt> {
     pub collect_traces: bool,
     /// one record per packed verification call (when collect_traces)
     pub packed_traces: Vec<PackedTrace>,
+    /// Global row budget per step: the packed batch size `sum k_i` across
+    /// ALL of a step's calls is capped at `max(B, active)` (every active
+    /// sequence keeps at least its anchor row; keep `B >= lanes` for a
+    /// strict `sum <= B`). Rows are distributed by marginal expected
+    /// acceptance — adaptive sequences bid with their controller's
+    /// estimates, static ones with the rank-decay prior.
+    pub budget: Option<usize>,
     pool: KvPool,
     active: Vec<SeqState>,
     next_id: u64,
+    /// completed engine steps (stamps `PackedTrace::step`)
+    steps_done: u64,
+    /// the model's sorted (k, w) artifact grid, hoisted out of the
+    /// per-step hot loop (adaptive planning scans it every step)
+    shape_grid: Vec<(usize, usize)>,
 }
 
 impl<'rt> BatchedEngine<'rt> {
@@ -92,11 +112,25 @@ impl<'rt> BatchedEngine<'rt> {
             runtime,
             collect_traces: false,
             packed_traces: Vec::new(),
+            budget: None,
             pool: KvPool::new(d.n_layers, d.max_len, d.n_heads, d.head_dim,
                               max_concurrency.max(1)),
             active: Vec::new(),
             next_id: 0,
+            steps_done: 0,
+            shape_grid: runtime.artifacts().step_shapes(),
         }
+    }
+
+    /// An engine with a per-step packed-row budget (see [`Self::budget`]).
+    pub fn with_budget(
+        runtime: &'rt ModelRuntime,
+        max_concurrency: usize,
+        budget: Option<usize>,
+    ) -> Self {
+        let mut e = Self::new(runtime, max_concurrency);
+        e.budget = budget;
+        e
     }
 
     /// Max concurrent sequences (the lane-pool size).
@@ -122,7 +156,20 @@ impl<'rt> BatchedEngine<'rt> {
     pub fn admit(
         &mut self,
         prompt: &[TokenId],
+        strategy: Box<dyn DraftStrategy>,
+        cfg: EngineConfig,
+    ) -> Result<SeqId> {
+        self.admit_with(prompt, strategy, None, cfg)
+    }
+
+    /// [`Self::admit`] with an optional adaptive controller; when present
+    /// the controller drives this sequence's drafting and shape planning
+    /// and `strategy` is ignored.
+    pub fn admit_with(
+        &mut self,
+        prompt: &[TokenId],
         mut strategy: Box<dyn DraftStrategy>,
+        mut controller: Option<SeqController>,
         cfg: EngineConfig,
     ) -> Result<SeqId> {
         let lane = self
@@ -130,6 +177,9 @@ impl<'rt> BatchedEngine<'rt> {
             .acquire()
             .ok_or_else(|| anyhow!("no free KV lanes ({} in use)", self.pool.in_use()))?;
         strategy.reset();
+        if let Some(c) = controller.as_mut() {
+            c.reset();
+        }
         let t0 = Instant::now();
         let pf = match self.runtime.prefill(prompt, self.pool.lane_mut(lane)) {
             Ok(pf) => pf,
@@ -151,6 +201,7 @@ impl<'rt> BatchedEngine<'rt> {
             cfg,
             seq,
             strategy,
+            controller,
             lane,
             res,
             done: false,
@@ -168,40 +219,79 @@ impl<'rt> BatchedEngine<'rt> {
 
         // Shape selection across sequences. Sequences whose lane cannot fit
         // any block anymore are retired here (cache exhausted — same end
-        // condition as SpecDecoder's `break`).
+        // condition as SpecDecoder's `break`). Adaptive sequences plan
+        // their own (k, w) caps each step; static ones use their config.
         let shapes = loop {
             self.sweep_finished(&mut finished);
             if self.active.is_empty() {
                 return Ok(finished);
             }
-            let fits: Vec<Option<(usize, usize)>> = self
-                .active
-                .iter()
-                .map(|s| {
-                    let room = self.pool.lane(s.lane).remaining();
-                    self.runtime.best_fitting_shape(s.cfg.k, s.cfg.w, room)
-                })
-                .collect();
+            let mut caps: Vec<(usize, usize)> = Vec::with_capacity(self.active.len());
+            let mut fits: Vec<Option<(usize, usize)>> = Vec::with_capacity(self.active.len());
+            for s in self.active.iter_mut() {
+                let room = self.pool.lane(s.lane).remaining();
+                let ctx = self.pool.lane(s.lane).len;
+                let (ck, cw) = (s.cfg.k, s.cfg.w);
+                let cap = match s.controller.as_mut() {
+                    Some(c) => c.plan(ctx, room, &self.shape_grid, ck, cw),
+                    None => (ck, cw),
+                };
+                caps.push(cap);
+                fits.push(self.runtime.best_fitting_shape(cap.0, cap.1, room));
+            }
             if fits.iter().all(|f| f.is_some()) {
                 let fits: Vec<(usize, usize)> = fits.into_iter().map(|f| f.unwrap()).collect();
                 let w_common = fits.iter().map(|&(_, w)| w).min().unwrap();
-                break self
+                let shaped: Vec<(usize, usize)> = self
                     .active
                     .iter()
-                    .zip(&fits)
-                    .map(|(s, &own)| {
+                    .zip(fits.iter().zip(&caps))
+                    .map(|(s, (&own, &(k_cap, _)))| {
                         let room = self.pool.lane(s.lane).remaining();
                         self.runtime
-                            .best_fitting_shape(s.cfg.k, w_common, room)
+                            .best_fitting_shape(k_cap, w_common, room)
                             .unwrap_or(own)
                     })
-                    .collect::<Vec<(usize, usize)>>();
+                    .collect();
+                break shaped;
             }
             for (s, f) in self.active.iter_mut().zip(&fits) {
                 if f.is_none() {
                     s.done = true;
                 }
             }
+        };
+
+        // Packed-row budget: refit each sequence's k_i so the step packs
+        // at most max(B, active) rows, distributed by marginal expected
+        // acceptance (hot sequences outbid cold ones, which degrade toward
+        // their anchor row). A ragged artifact grid may have no shape
+        // small enough for a sequence's allocation; it then takes the
+        // grid's fewest-rows shape instead, which minimizes (but on such
+        // grids cannot always eliminate) budget overshoot — on a full
+        // k x w grid, which always has k = 1 shapes, the bound is exact.
+        let shapes = match self.budget {
+            Some(b) => {
+                let caps_k: Vec<usize> = shapes.iter().map(|&(k, _)| k).collect();
+                let alloc = budget::allocate_rows(b, &caps_k, |i, j| {
+                    match &self.active[i].controller {
+                        Some(c) => c.marginal_gain(j),
+                        None => budget::static_gain(j),
+                    }
+                });
+                shapes
+                    .iter()
+                    .enumerate()
+                    .map(|(i, &(k, w))| {
+                        let room = self.pool.lane(self.active[i].lane).remaining();
+                        self.runtime
+                            .best_fitting_shape(alloc[i].min(k), w, room)
+                            .or_else(|| self.runtime.smallest_row_shape(w, room))
+                            .unwrap_or((k, w))
+                    })
+                    .collect()
+            }
+            None => shapes,
         };
 
         // Group sequences by depth (one group — and one packed call — in
@@ -216,9 +306,15 @@ impl<'rt> BatchedEngine<'rt> {
         for (w, idxs) in groups {
             self.run_group(w, &idxs, &shapes)?;
         }
+        self.steps_done += 1;
 
         self.sweep_finished(&mut finished);
         Ok(finished)
+    }
+
+    /// Completed engine steps so far.
+    pub fn steps_done(&self) -> u64 {
+        self.steps_done
     }
 
     /// Draft, pack, verify and commit one same-depth group of sequences.
@@ -230,7 +326,10 @@ impl<'rt> BatchedEngine<'rt> {
             let s = &mut self.active[i];
             let mut batch = DraftBatch::new(w);
             if w > 0 {
-                s.strategy.propose(&s.seq, k, &mut batch);
+                match s.controller.as_mut() {
+                    Some(c) => c.propose(&s.seq, k, &mut batch),
+                    None => s.strategy.propose(&s.seq, k, &mut batch),
+                }
             }
             pad_batch(&mut batch, k);
             let tokens = assemble_block(&batch, *s.seq.last().unwrap(), k, w);
@@ -253,6 +352,7 @@ impl<'rt> BatchedEngine<'rt> {
                 rows: blocks.iter().map(|b| b.k).sum(),
                 max_ctx: blocks.iter().map(|b| b.cache.len).max().unwrap_or(0),
                 seqs: blocks.len(),
+                step: self.steps_done,
             });
         }
         let outs = self.runtime.spec_step_packed(w, &blocks)?;
@@ -268,7 +368,19 @@ impl<'rt> BatchedEngine<'rt> {
                     .traces
                     .push(make_trace(batch, &acc, *k, w, ctx_len, out.exec_time));
             }
-            s.strategy.observe(&acc.emitted, out.row(acc.row));
+            match s.controller.as_mut() {
+                Some(c) => c.observe(&StepFeedback {
+                    batch,
+                    row: acc.row,
+                    accepted: acc.accepted,
+                    emitted: &acc.emitted,
+                    model_out: out.row(acc.row),
+                    k: *k,
+                    w,
+                    ctx_len,
+                }),
+                None => s.strategy.observe(&acc.emitted, out.row(acc.row)),
+            }
             s.res.calls += 1;
             for &t in &acc.emitted {
                 s.seq.push(t);

@@ -25,6 +25,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::adaptive::{SeqController, StepFeedback};
 use crate::config::EngineConfig;
 use crate::draft::{DraftBatch, DraftStrategy, StrategyKind};
 use crate::kvcache::SharedKvCache;
@@ -88,12 +89,31 @@ pub struct SpecDecoder<'rt> {
     pub cfg: EngineConfig,
     /// collect per-step traces (slightly more allocation; on for benches)
     pub collect_traces: bool,
+    /// Adaptive (k, w) + strategy selection (`adaptive` mode). When set,
+    /// `strategy` is ignored: the controller's bandit-chosen arm drafts
+    /// each step and `cfg.k`/`cfg.w` become CAPS the controller plans
+    /// under rather than the fixed shape. Output is unchanged either way —
+    /// the acceptance invariant does not depend on what was proposed.
+    pub controller: Option<SeqController>,
 }
 
 impl<'rt> SpecDecoder<'rt> {
     pub fn new(runtime: &'rt ModelRuntime, strategy: Box<dyn DraftStrategy>,
                cfg: EngineConfig) -> Self {
-        SpecDecoder { runtime, strategy, cfg, collect_traces: false }
+        SpecDecoder { runtime, strategy, cfg, collect_traces: false, controller: None }
+    }
+
+    /// An adaptive decoder: `controller` picks each step's (k, w) and
+    /// draft source within the `cfg` caps.
+    pub fn with_controller(runtime: &'rt ModelRuntime, controller: SeqController,
+                           cfg: EngineConfig) -> Self {
+        SpecDecoder {
+            runtime,
+            strategy: Box::new(NoDraft),
+            cfg,
+            collect_traces: false,
+            controller: Some(controller),
+        }
     }
 
     /// Generate up to `cfg.max_new_tokens` greedy tokens after `prompt`.
@@ -106,6 +126,10 @@ impl<'rt> SpecDecoder<'rt> {
         let mut cache = SharedKvCache::new(
             dims.n_layers, dims.max_len, dims.n_heads, dims.head_dim);
         self.strategy.reset();
+        if let Some(c) = self.controller.as_mut() {
+            c.reset();
+        }
+        let shape_grid = self.runtime.artifacts().step_shapes();
 
         let mut res = GenResult::default();
         let t0 = Instant::now();
@@ -121,10 +145,14 @@ impl<'rt> SpecDecoder<'rt> {
         let tdec = Instant::now();
         while res.tokens.len() < self.cfg.max_new_tokens {
             let room = cache.remaining();
-            // pick the largest artifact shape fitting config + cache room
-            let Some((k, w)) = self
-                .runtime
-                .best_fitting_shape(self.cfg.k, self.cfg.w, room)
+            // adaptive mode plans the next shape under the config caps;
+            // static mode uses the caps directly
+            let (k_cap, w_cap) = match self.controller.as_mut() {
+                Some(c) => c.plan(cache.len, room, &shape_grid, self.cfg.k, self.cfg.w),
+                None => (self.cfg.k, self.cfg.w),
+            };
+            // pick the largest artifact shape fitting the caps + cache room
+            let Some((k, w)) = self.runtime.best_fitting_shape(k_cap, w_cap, room)
             else {
                 break; // cache exhausted
             };
@@ -132,7 +160,10 @@ impl<'rt> SpecDecoder<'rt> {
             // --- draft
             let mut batch = DraftBatch::new(w);
             if w > 0 {
-                self.strategy.propose(&seq, k, &mut batch);
+                match self.controller.as_mut() {
+                    Some(c) => c.propose(&seq, k, &mut batch),
+                    None => self.strategy.propose(&seq, k, &mut batch),
+                }
             }
             pad_batch(&mut batch, k);
             let tokens = assemble_block(&batch, *seq.last().unwrap(), k, w);
@@ -146,7 +177,19 @@ impl<'rt> SpecDecoder<'rt> {
             if self.collect_traces {
                 res.traces.push(make_trace(&batch, &acc, k, w, ctx_len, out.exec_time));
             }
-            self.strategy.observe(&acc.emitted, out.row(acc.row));
+            match self.controller.as_mut() {
+                Some(c) => c.observe(&StepFeedback {
+                    batch: &batch,
+                    row: acc.row,
+                    accepted: acc.accepted,
+                    emitted: &acc.emitted,
+                    model_out: out.row(acc.row),
+                    k,
+                    w,
+                    ctx_len,
+                }),
+                None => self.strategy.observe(&acc.emitted, out.row(acc.row)),
+            }
 
             res.calls += 1;
             for &t in &acc.emitted {

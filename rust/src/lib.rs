@@ -26,6 +26,7 @@
 //! cross-request batching see [`engine::batched::generate_all`] or
 //! `ngrammys serve --batch N`.
 
+pub mod adaptive;
 pub mod bench;
 pub mod config;
 pub mod costmodel;

@@ -12,7 +12,9 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use ngrammys::bench::{self, BenchCtx};
-use ngrammys::config::{default_artifacts_dir, EngineConfig, Manifest, ServeConfig};
+use ngrammys::config::{
+    default_artifacts_dir, EngineConfig, Manifest, ServeConfig, SessionCacheConfig,
+};
 use ngrammys::scheduler::{Scheduler, StrategyName};
 use ngrammys::server::Server;
 use ngrammys::tokenizer::BpeTokenizer;
@@ -29,10 +31,17 @@ COMMANDS:
   generate --prompt TEXT      one-shot generation
       [--model base] [--k 10] [--w 10] [--q 1] [--strategy mixed]
       [--max-tokens 64] [--compare]
+      strategy 'adaptive' = online (k, w) + strategy selection (k/w as caps)
   serve                       HTTP server (POST /generate, GET /metrics)
       [--model base] [--addr 127.0.0.1:8077] [--workers 1]
       [--batch N]             continuous batching: N pooled KV lanes, one
                               packed verification call per step (N >= 2)
+      [--budget B]            packed-row budget: cap the per-step batch at
+                              sum k_i <= max(B, active), rows allotted by
+                              marginal expected acceptance (0 = off)
+      [--strategy mixed]      default strategy for requests that name none
+      [--cache-per-query 8] [--cache-chain 12] [--cache-cap 100000]
+                              session n-gram cache bounds
   bench <target>              reproduce a paper table/figure:
       fig1                    phase-transition heatmaps (cost model)
       fig2                    tokens/call vs top-k  [--model base]
@@ -44,6 +53,8 @@ COMMANDS:
       ablation-hardware       OTB-threshold sensitivity (footnote 5)
       batched                 cross-request batching throughput
                               [--model base] [--conc 1,2,4,8]
+      adaptive                adaptive controller vs static strategies
+                              [--model base] [--budget B] [--smoke]
       all                     everything above
       common: [--prompts N] [--max-new N] [--ks 1,5,10] [--ws 2,6,10]
 ";
@@ -56,7 +67,7 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["compare", "help", "traces"]).map_err(|e| anyhow!(e))?;
+    let args = Args::from_env(&["compare", "help", "traces", "smoke"]).map_err(|e| anyhow!(e))?;
     if args.has_flag("help") || args.positional.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -120,6 +131,14 @@ fn generate(artifacts: &PathBuf, args: &Args) -> Result<()> {
     let run = |strat: StrategyName, eng: EngineConfig| -> Result<_> {
         let s = ngrammys::scheduler::make_strategy(strat, &ctx.tables, eng.q);
         let mut dec = ngrammys::engine::SpecDecoder::new(&ctx.runtime, s, eng);
+        if strat == StrategyName::Adaptive {
+            dec.controller = Some(ngrammys::adaptive::controller_for(
+                &ctx.tables,
+                dec.cfg.q,
+                &SessionCacheConfig::default(),
+                &ctx.runtime.artifacts().dims.analog,
+            ));
+        }
         let t = std::time::Instant::now();
         let r = dec.generate(&prompt)?;
         Ok((r, t.elapsed()))
@@ -153,11 +172,24 @@ fn generate(artifacts: &PathBuf, args: &Args) -> Result<()> {
 fn serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
     let manifest = Manifest::load(artifacts)?;
     let model = args.get_or("model", "base");
+    let default_strategy = StrategyName::parse(args.get_or("strategy", "mixed"))?;
+    let cache_defaults = SessionCacheConfig::default();
     let cfg = ServeConfig {
         addr: args.get_or("addr", "127.0.0.1:8077").to_string(),
         workers: args.get_usize("workers", 1).map_err(|e| anyhow!(e))?,
         queue_cap: args.get_usize("queue-cap", 256).map_err(|e| anyhow!(e))?,
         batch: args.get_usize("batch", 0).map_err(|e| anyhow!(e))?,
+        budget: parse_budget(args)?,
+        default_strategy,
+        session_cache: SessionCacheConfig {
+            per_query: args
+                .get_usize("cache-per-query", cache_defaults.per_query)
+                .map_err(|e| anyhow!(e))?,
+            max_chain: args
+                .get_usize("cache-chain", cache_defaults.max_chain)
+                .map_err(|e| anyhow!(e))?,
+            cap: args.get_usize("cache-cap", cache_defaults.cap).map_err(|e| anyhow!(e))?,
+        },
         default_engine: EngineConfig {
             k: args.get_usize("k", 10).map_err(|e| anyhow!(e))?,
             w: args.get_usize("w", 10).map_err(|e| anyhow!(e))?,
@@ -168,6 +200,14 @@ fn serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
     let scheduler = Arc::new(Scheduler::start(&manifest, model, &cfg)?);
     let tokenizer = Arc::new(BpeTokenizer::load(&manifest.tokenizer_path)?);
     Server { scheduler, tokenizer, cfg }.run()
+}
+
+/// `--budget B` with 0 (the default) meaning "no row budget".
+fn parse_budget(args: &Args) -> Result<Option<usize>> {
+    Ok(match args.get_usize("budget", 0).map_err(|e| anyhow!(e))? {
+        0 => None,
+        b => Some(b),
+    })
 }
 
 fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
@@ -202,6 +242,10 @@ fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
                 .map_err(|e| anyhow!(e))?;
             bench::batched::run(&load()?, n_prompts, max_new, &conc)
         }
+        "adaptive" => {
+            let budget = parse_budget(args)?;
+            bench::adaptive::run(&load()?, n_prompts, max_new, budget, args.has_flag("smoke"))
+        }
         "table1" => {
             let models: Vec<String> = args
                 .get_or("models", "small,base,large")
@@ -220,6 +264,7 @@ fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
             bench::qsweep::run_alloc_ablation(&ctx, n_prompts, max_new)?;
             bench::qsweep::run_hardware_ablation(&ctx, n_prompts, max_new)?;
             bench::batched::run(&ctx, n_prompts, max_new, &bench::batched::CONCURRENCIES)?;
+            bench::adaptive::run(&ctx, n_prompts, max_new, None, false)?;
             drop(ctx);
             for m in ["small", "base", "large"] {
                 let c = BenchCtx::load(manifest.clone(), m)?;

@@ -5,6 +5,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use crate::draft::StrategyKind;
+
 /// Exponential-bucket latency histogram (microseconds).
 #[derive(Debug)]
 pub struct LatencyHist {
@@ -80,6 +82,11 @@ pub struct Metrics {
     pub request_latency: LatencyHistDefault,
     pub step_latency: LatencyHistDefault,
     pub queue_depth: AtomicU64,
+    /// per-`StrategyKind` step wins (indexed by `StrategyKind::index()`):
+    /// which draft source actually won each verification call
+    pub strategy_wins: [AtomicU64; StrategyKind::COUNT],
+    /// per-`StrategyKind` accepted draft tokens across winning steps
+    pub strategy_accepted: [AtomicU64; StrategyKind::COUNT],
     /// last N per-request summaries for debugging (bounded)
     pub recent: Mutex<Vec<String>>,
 }
@@ -106,6 +113,15 @@ impl Metrics {
         self.verify_calls.fetch_add(calls as u64, Ordering::Relaxed);
         self.drafts_accepted.fetch_add(accepted as u64, Ordering::Relaxed);
         self.request_latency.observe(latency);
+    }
+
+    /// Record one verification call's winner: which strategy kind won and
+    /// how many draft tokens it got accepted (operators watch these to see
+    /// which strategies are actually paying for their rows).
+    pub fn record_strategy_step(&self, kind: StrategyKind, accepted: usize) {
+        let i = kind.index();
+        self.strategy_wins[i].fetch_add(1, Ordering::Relaxed);
+        self.strategy_accepted[i].fetch_add(accepted as u64, Ordering::Relaxed);
     }
 
     /// Observed tokens-per-call across all requests (the paper's metric,
@@ -145,6 +161,19 @@ impl Metrics {
             "ngrammys_step_latency_ms_mean {:.3}\n",
             self.step_latency.mean_us() / 1e3
         ));
+        for kind in StrategyKind::ALL {
+            let i = kind.index();
+            s.push_str(&format!(
+                "ngrammys_strategy_wins{{strategy=\"{}\"}} {}\n",
+                kind.label(),
+                c(&self.strategy_wins[i])
+            ));
+            s.push_str(&format!(
+                "ngrammys_strategy_accepted_tokens{{strategy=\"{}\"}} {}\n",
+                kind.label(),
+                c(&self.strategy_accepted[i])
+            ));
+        }
         s
     }
 }
@@ -173,5 +202,18 @@ mod tests {
         assert!((m.tokens_per_call() - 2.0).abs() < 1e-9);
         let r = m.render();
         assert!(r.contains("ngrammys_tokens_per_call 2.0000"));
+    }
+
+    #[test]
+    fn per_strategy_counters_render() {
+        let m = Metrics::new();
+        m.record_strategy_step(StrategyKind::ContextNgram, 4);
+        m.record_strategy_step(StrategyKind::ContextNgram, 2);
+        m.record_strategy_step(StrategyKind::SessionCache, 7);
+        let r = m.render();
+        assert!(r.contains("ngrammys_strategy_wins{strategy=\"context-ngram\"} 2"));
+        assert!(r.contains("ngrammys_strategy_accepted_tokens{strategy=\"context-ngram\"} 6"));
+        assert!(r.contains("ngrammys_strategy_wins{strategy=\"session-cache\"} 1"));
+        assert!(r.contains("ngrammys_strategy_wins{strategy=\"ext-bigram\"} 0"));
     }
 }

@@ -217,6 +217,20 @@ impl ModelRuntime {
             .filter(|&(sk, sw)| sk <= k && sw <= w && sw + 1 <= room)
             .max_by_key(|&(sk, sw)| (sw, sk))
     }
+
+    /// The FEWEST-rows shape with w' <= w and w'+1 <= room (deepest such
+    /// shape on a row tie). Fallback for the batched engine's row-budget
+    /// refit on ragged artifact grids where no shape small enough for a
+    /// sequence's allocation exists — it minimizes how far a step can
+    /// overshoot the budget.
+    pub fn smallest_row_shape(&self, w: usize, room: usize) -> Option<(usize, usize)> {
+        self.art
+            .steps
+            .keys()
+            .copied()
+            .filter(|&(_, sw)| sw <= w && sw + 1 <= room)
+            .min_by_key(|&(sk, sw)| (sk, std::cmp::Reverse(sw)))
+    }
 }
 
 fn validate_block(k: usize, w: usize, tok_len: usize, cache: &SharedKvCache) -> Result<()> {

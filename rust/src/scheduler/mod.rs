@@ -24,10 +24,11 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{EngineConfig, Manifest, ServeConfig};
+use crate::adaptive::{self, SeqController};
+use crate::config::{EngineConfig, Manifest, ServeConfig, SessionCacheConfig};
 use crate::draft::{
     ContextNgram, DraftStrategy, ExtendedBigram, JacobiDraft, MixedStrategy, ModelBigram,
-    ModelUnigram, NgramTables, SessionNgramCache,
+    ModelUnigram, NgramTables, SessionNgramCache, StrategyKind,
 };
 use crate::engine::{BatchedEngine, GenResult, NoDraft, SeqId, SpecDecoder};
 use crate::metrics::Metrics;
@@ -45,22 +46,46 @@ pub enum StrategyName {
     Jacobi,
     /// online session n-gram cache (extension beyond the paper)
     Session,
+    /// online (k, w) + strategy selection (`crate::adaptive`)
+    Adaptive,
     None,
 }
 
 impl StrategyName {
+    /// Every variant. `parse` and its error message derive from this plus
+    /// `label()` (whose match the compiler keeps exhaustive), so the name
+    /// set lives in exactly one place per direction.
+    pub const ALL: [StrategyName; 9] = [
+        Self::Mixed,
+        Self::Context,
+        Self::Bigram,
+        Self::Unigram,
+        Self::ExtBigram,
+        Self::Jacobi,
+        Self::Session,
+        Self::Adaptive,
+        Self::None,
+    ];
+
     pub fn parse(s: &str) -> Result<Self> {
-        Ok(match s {
-            "mixed" => Self::Mixed,
-            "context" | "context-ngram" => Self::Context,
-            "bigram" | "model-bigram" => Self::Bigram,
-            "unigram" | "model-unigram" => Self::Unigram,
-            "ext-bigram" | "extended-bigram" => Self::ExtBigram,
-            "jacobi" => Self::Jacobi,
-            "session" | "session-cache" => Self::Session,
-            "none" | "greedy" => Self::None,
-            other => return Err(anyhow!("unknown strategy '{other}'")),
-        })
+        // long-form aliases kept for back-compat with existing clients
+        let canon = match s {
+            "context-ngram" => "context",
+            "model-bigram" => "bigram",
+            "model-unigram" => "unigram",
+            "extended-bigram" => "ext-bigram",
+            "session-cache" => "session",
+            "greedy" => "none",
+            other => other,
+        };
+        Self::ALL
+            .iter()
+            .copied()
+            .find(|v| v.label() == canon)
+            .ok_or_else(|| {
+                let valid: Vec<&str> = Self::ALL.iter().map(|v| v.label()).collect();
+                anyhow!("unknown strategy '{s}' (valid: {})", valid.join(", "))
+            })
     }
 
     pub fn label(&self) -> &'static str {
@@ -72,16 +97,33 @@ impl StrategyName {
             Self::ExtBigram => "ext-bigram",
             Self::Jacobi => "jacobi",
             Self::Session => "session",
+            Self::Adaptive => "adaptive",
             Self::None => "none",
         }
     }
 }
 
-/// Build a boxed strategy (used by workers, benches and examples alike).
+/// Build a boxed strategy (used by workers, benches and examples alike)
+/// with default session-cache bounds.
 pub fn make_strategy(
     name: StrategyName,
     tables: &Arc<NgramTables>,
     q: usize,
+) -> Box<dyn DraftStrategy> {
+    make_strategy_with_cache(name, tables, q, &SessionCacheConfig::default())
+}
+
+/// [`make_strategy`] with explicit session-cache bounds (`ServeConfig::
+/// session_cache`). `Adaptive` is a control MODE, not a drafting source:
+/// every real adaptive path attaches a [`SeqController`] to the engine
+/// (which owns the drafting arms and ignores the engine's strategy slot),
+/// so `Adaptive` maps to the no-op placeholder here rather than building
+/// a strategy that would never be consulted.
+pub fn make_strategy_with_cache(
+    name: StrategyName,
+    tables: &Arc<NgramTables>,
+    q: usize,
+    cache: &SessionCacheConfig,
 ) -> Box<dyn DraftStrategy> {
     match name {
         StrategyName::Mixed => Box::new(MixedStrategy::paper(tables.clone(), q)),
@@ -90,9 +132,26 @@ pub fn make_strategy(
         StrategyName::Unigram => Box::new(ModelUnigram::new(tables.clone())),
         StrategyName::ExtBigram => Box::new(ExtendedBigram::new(tables.clone())),
         StrategyName::Jacobi => Box::new(JacobiDraft::new(0)),
-        StrategyName::Session => Box::new(SessionNgramCache::new(8, 12, 100_000)),
-        StrategyName::None => Box::new(NoDraft),
+        StrategyName::Session => {
+            Box::new(SessionNgramCache::new(cache.per_query, cache.max_chain, cache.cap))
+        }
+        StrategyName::Adaptive | StrategyName::None => Box::new(NoDraft),
     }
+}
+
+/// The adaptive controller for one request, when the request asked for
+/// adaptive mode.
+fn controller_for_request(
+    name: StrategyName,
+    tables: &Arc<NgramTables>,
+    q: usize,
+    cfg: &ServeConfig,
+    runtime: &ModelRuntime,
+) -> Option<SeqController> {
+    (name == StrategyName::Adaptive).then(|| {
+        adaptive::controller_for(tables, q, &cfg.session_cache,
+                                 &runtime.artifacts().dims.analog)
+    })
 }
 
 /// One generation request.
@@ -141,6 +200,7 @@ impl Scheduler {
             let rx = rx.clone();
             let tables = tables.clone();
             let metrics = metrics.clone();
+            let scfg = cfg.clone();
             let handle = std::thread::Builder::new()
                 .name("ngrammys-batch-engine".to_string())
                 .spawn(move || {
@@ -151,7 +211,7 @@ impl Scheduler {
                             return;
                         }
                     };
-                    batched_worker_loop(&runtime, lanes, tables, metrics, rx);
+                    batched_worker_loop(&runtime, lanes, tables, metrics, rx, &scfg);
                 })
                 .expect("spawning batch engine");
             workers.push(handle);
@@ -161,6 +221,7 @@ impl Scheduler {
                 let art = art.clone();
                 let tables = tables.clone();
                 let metrics = metrics.clone();
+                let scfg = cfg.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("ngrammys-worker-{wid}"))
                     .spawn(move || {
@@ -171,7 +232,7 @@ impl Scheduler {
                                 return;
                             }
                         };
-                        worker_loop(wid, runtime, tables, metrics, rx);
+                        worker_loop(wid, runtime, tables, metrics, rx, &scfg);
                     })
                     .expect("spawning worker");
                 workers.push(handle);
@@ -217,6 +278,11 @@ fn finish_response(metrics: &Metrics, t_submit: Instant, r: GenResult) -> GenRes
     metrics.record_request(t_submit.elapsed(), r.tokens.len(), r.calls, accepted);
     for tr in &r.traces {
         metrics.step_latency.observe(tr.exec_time);
+        // a call where no draft token matched has no winning strategy —
+        // the judge's row-0 default would otherwise credit whatever kind
+        // fills row 0 (context-ngram under the mixed policy) with a "win"
+        let kind = if tr.accepted > 0 { tr.kind } else { StrategyKind::Empty };
+        metrics.record_strategy_step(kind, tr.accepted);
     }
     GenResponse {
         tokens_per_call: r.tokens_per_call(),
@@ -232,6 +298,7 @@ fn worker_loop(
     tables: Arc<NgramTables>,
     metrics: Arc<Metrics>,
     rx: Arc<Mutex<Receiver<Job>>>,
+    scfg: &ServeConfig,
 ) {
     loop {
         // hold the lock only while dequeuing
@@ -241,8 +308,11 @@ fn worker_loop(
         };
         metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
         let t = Instant::now();
-        let strategy = make_strategy(job.req.strategy, &tables, job.req.engine.q);
+        let strategy = make_strategy_with_cache(
+            job.req.strategy, &tables, job.req.engine.q, &scfg.session_cache);
         let mut dec = SpecDecoder::new(&runtime, strategy, job.req.engine.clone());
+        dec.controller =
+            controller_for_request(job.req.strategy, &tables, job.req.engine.q, scfg, &runtime);
         dec.collect_traces = true; // feeds the step-latency histogram
         let result = dec
             .generate(&job.req.prompt)
@@ -261,8 +331,9 @@ fn batched_worker_loop(
     tables: Arc<NgramTables>,
     metrics: Arc<Metrics>,
     rx: Arc<Mutex<Receiver<Job>>>,
+    scfg: &ServeConfig,
 ) {
-    let mut eng = BatchedEngine::new(runtime, lanes);
+    let mut eng = BatchedEngine::with_budget(runtime, lanes, scfg.budget);
     eng.collect_traces = true;
     let mut inflight: HashMap<SeqId, (Sender<Result<GenResponse>>, Instant)> = HashMap::new();
     loop {
@@ -271,11 +342,13 @@ fn batched_worker_loop(
                 Ok(j) => j,
                 Err(_) => return, // scheduler dropped, everything drained
             };
-            admit_job(&mut eng, job, &tables, &metrics, &mut inflight);
+            admit_job(&mut eng, job, &tables, &metrics, &mut inflight, scfg, runtime);
         }
         while eng.has_capacity() {
             match rx.lock().unwrap().try_recv() {
-                Ok(job) => admit_job(&mut eng, job, &tables, &metrics, &mut inflight),
+                Ok(job) => {
+                    admit_job(&mut eng, job, &tables, &metrics, &mut inflight, scfg, runtime)
+                }
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
             }
         }
@@ -294,27 +367,33 @@ fn batched_worker_loop(
                 for (_, (reply, _)) in inflight.drain() {
                     let _ = reply.send(Err(anyhow!("batched engine step failed: {e:#}")));
                 }
-                eng = BatchedEngine::new(runtime, lanes);
+                eng = BatchedEngine::with_budget(runtime, lanes, scfg.budget);
                 eng.collect_traces = true;
             }
         }
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn admit_job(
     eng: &mut BatchedEngine,
     job: Job,
     tables: &Arc<NgramTables>,
     metrics: &Metrics,
     inflight: &mut HashMap<SeqId, (Sender<Result<GenResponse>>, Instant)>,
+    scfg: &ServeConfig,
+    runtime: &ModelRuntime,
 ) {
     metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
-    let strategy = make_strategy(job.req.strategy, tables, job.req.engine.q);
+    let strategy =
+        make_strategy_with_cache(job.req.strategy, tables, job.req.engine.q, &scfg.session_cache);
+    let controller =
+        controller_for_request(job.req.strategy, tables, job.req.engine.q, scfg, runtime);
     // start the latency clock BEFORE admit: admit runs the prefill, which
     // the per-sequence worker's clock also covers — keep the modes
     // comparable in latency_ms and /metrics
     let t = Instant::now();
-    match eng.admit(&job.req.prompt, strategy, job.req.engine.clone()) {
+    match eng.admit_with(&job.req.prompt, strategy, controller, job.req.engine.clone()) {
         Ok(id) => {
             inflight.insert(id, (job.reply, t));
         }
@@ -337,10 +416,24 @@ mod tests {
             ("unigram", StrategyName::Unigram),
             ("ext-bigram", StrategyName::ExtBigram),
             ("jacobi", StrategyName::Jacobi),
+            ("session", StrategyName::Session),
+            ("adaptive", StrategyName::Adaptive),
             ("greedy", StrategyName::None),
         ] {
             assert_eq!(StrategyName::parse(s).unwrap(), n);
         }
-        assert!(StrategyName::parse("bogus").is_err());
+        // the error must enumerate every valid name, not just echo the input
+        let err = StrategyName::parse("bogus").unwrap_err().to_string();
+        assert!(err.contains("bogus"));
+        for v in StrategyName::ALL {
+            assert!(err.contains(v.label()), "error missing '{}': {err}", v.label());
+        }
+    }
+
+    #[test]
+    fn every_variant_round_trips_through_parse() {
+        for v in StrategyName::ALL {
+            assert_eq!(StrategyName::parse(v.label()).unwrap(), v);
+        }
     }
 }

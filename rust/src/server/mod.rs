@@ -5,8 +5,14 @@
 //!                     "w"?: int, "strategy"?: str}
 //!                 -> {"text": str, "tokens": int, "tokens_per_call": f,
 //!                     "calls": int, "latency_ms": f}
-//!   GET  /metrics    prometheus-style text
+//!   GET  /metrics    prometheus-style text, including the per-strategy
+//!                    win/accepted-token counters (which draft source is
+//!                    actually paying for its rows)
 //!   GET  /healthz    "ok"
+//!
+//! Requests that don't name a strategy get `ServeConfig::default_strategy`
+//! (`ngrammys serve --strategy adaptive` makes online (k, w) + strategy
+//! selection the server default; per-request `"strategy"` still wins).
 //!
 //! One thread per connection (bounded by the scheduler's queue for actual
 //! work); keep-alive is not supported — every response closes the socket,
@@ -123,7 +129,7 @@ impl Server {
         };
         let strategy = match j.get("strategy").and_then(|v| v.as_str()) {
             Some(s) => StrategyName::parse(s)?,
-            None => StrategyName::Mixed,
+            None => self.cfg.default_strategy,
         };
         let prompt = self.tokenizer.encode(prompt_text);
         if prompt.is_empty() {

@@ -1,0 +1,271 @@
+//! Adaptive-mode invariants: the controller's output stream must be
+//! byte-identical to greedy/static decoding across randomized (k, w) and
+//! strategy trajectories — in both `SpecDecoder` and `BatchedEngine`
+//! (concurrency 1/4/8) — and the batched engine must never pack more than
+//! the configured row budget in any step.
+
+use std::collections::HashMap;
+
+use ngrammys::adaptive::{self, AdaptiveConfig, SeqController};
+use ngrammys::bench::BenchCtx;
+use ngrammys::config::{EngineConfig, SessionCacheConfig};
+use ngrammys::draft::{DraftBatch, DraftStrategy};
+use ngrammys::engine::{greedy_config, BatchedEngine, NoDraft, SpecDecoder};
+use ngrammys::scheduler::{make_strategy, StrategyName};
+use ngrammys::tokenizer::TokenId;
+use ngrammys::util::rng::Rng;
+
+fn ctx(model: &str) -> BenchCtx {
+    BenchCtx::load(ngrammys::testkit::manifest(), model).unwrap()
+}
+
+fn prompts(c: &BenchCtx) -> Vec<Vec<u32>> {
+    [
+        "Question: Tom has 4 apples. Tom buys 2 more.",
+        "def scale(x, y):\n    result",
+        "User: What is the capital of France?",
+        "Answer: Mia has 5 coins.",
+        "def blend(value, count):",
+        "User: Tell me about ancient rivers.",
+        "Question: Sam has 7 cards.",
+        "Assistant: That is a good question.",
+    ]
+    .iter()
+    .map(|p| c.tokenizer.encode(p))
+    .collect()
+}
+
+fn greedy_stream(c: &BenchCtx, prompt: &[u32], max_new: usize) -> Vec<u32> {
+    let mut dec = SpecDecoder::new(&c.runtime, Box::new(NoDraft), greedy_config(max_new));
+    dec.generate(prompt).unwrap().tokens
+}
+
+fn controller(c: &BenchCtx, cfg: AdaptiveConfig) -> SeqController {
+    let mut ctl = adaptive::controller_for(
+        &c.tables,
+        1,
+        &SessionCacheConfig::default(),
+        &c.runtime.artifacts().dims.analog,
+    );
+    ctl.cfg = cfg;
+    ctl
+}
+
+fn random_cfg(rng: &mut Rng) -> AdaptiveConfig {
+    AdaptiveConfig {
+        alpha: 0.05 + rng.f64() * 0.9,
+        explore: rng.f64(),
+        warmup: rng.below(3),
+        depth_optimism: 1.0 + rng.f64() * 2.0,
+    }
+}
+
+/// A worst-case "trajectory": every step drafts with a randomly chosen
+/// strategy, so the stream of (strategy, proposal) pairs is arbitrary.
+/// Losslessness must hold anyway — acceptance never trusts a draft.
+struct ShuffledArms {
+    arms: Vec<Box<dyn DraftStrategy>>,
+    rng: Rng,
+}
+
+impl DraftStrategy for ShuffledArms {
+    fn name(&self) -> &'static str {
+        "test-shuffled-arms"
+    }
+
+    fn propose(&mut self, seq: &[TokenId], k: usize, batch: &mut DraftBatch) {
+        let i = self.rng.below(self.arms.len());
+        self.arms[i].propose(seq, k, batch);
+    }
+
+    fn observe(&mut self, accepted: &[TokenId], model_out: &[TokenId]) {
+        for a in &mut self.arms {
+            a.observe(accepted, model_out);
+        }
+    }
+
+    fn reset(&mut self) {
+        for a in &mut self.arms {
+            a.reset();
+        }
+    }
+}
+
+fn shuffled(c: &BenchCtx, seed: u64) -> Box<dyn DraftStrategy> {
+    let arms = [
+        StrategyName::Mixed,
+        StrategyName::Context,
+        StrategyName::ExtBigram,
+        StrategyName::Session,
+        StrategyName::Jacobi,
+    ]
+    .iter()
+    .map(|&n| make_strategy(n, &c.tables, 1))
+    .collect();
+    Box::new(ShuffledArms { arms, rng: Rng::new(seed) })
+}
+
+/// Adaptive SpecDecoder output == greedy stream for randomized controller
+/// configs and (k, w) caps.
+#[test]
+fn adaptive_specdecoder_is_lossless() {
+    let c = ctx("small");
+    let max_new = 24;
+    let ps = prompts(&c);
+    let want: Vec<Vec<u32>> = ps.iter().map(|p| greedy_stream(&c, p, max_new)).collect();
+    let mut rng = Rng::new(0xADA9);
+    for case in 0..6 {
+        let cfg = random_cfg(&mut rng);
+        let k_cap = *rng.choose(&[2usize, 5, 10, 20]);
+        let w_cap = *rng.choose(&[2usize, 4, 10, 14]);
+        for (i, (p, wanted)) in ps.iter().zip(&want).enumerate() {
+            let ctl = controller(&c, cfg.clone());
+            let mut dec = SpecDecoder::with_controller(
+                &c.runtime,
+                ctl,
+                EngineConfig { k: k_cap, w: w_cap, q: 1, max_new_tokens: max_new },
+            );
+            let got = dec.generate(p).unwrap().tokens;
+            assert_eq!(
+                &got, wanted,
+                "case {case} (k_cap {k_cap}, w_cap {w_cap}) prompt {i}: adaptive diverged"
+            );
+        }
+    }
+}
+
+/// Even an adversarially random strategy trajectory (a different draft
+/// source every step) cannot change the output stream.
+#[test]
+fn random_strategy_trajectories_are_lossless() {
+    let c = ctx("small");
+    let max_new = 20;
+    let ps = prompts(&c);
+    let mut rng = Rng::new(0x7E57);
+    for (i, p) in ps.iter().enumerate() {
+        let want = greedy_stream(&c, p, max_new);
+        for rep in 0..2 {
+            let k_cap = rng.range(1, 20);
+            let w_cap = rng.range(0, 14);
+            let mut dec = SpecDecoder::new(
+                &c.runtime,
+                shuffled(&c, rng.next_u64()),
+                EngineConfig { k: k_cap, w: w_cap, q: 1, max_new_tokens: max_new },
+            );
+            let got = dec.generate(p).unwrap().tokens;
+            assert_eq!(
+                got, want,
+                "prompt {i} rep {rep} (k {k_cap}, w {w_cap}): shuffled trajectory diverged"
+            );
+        }
+    }
+}
+
+/// Batched engine with a MIXED population (adaptive, static, shuffled) at
+/// concurrency 1/4/8 under a row budget: every stream byte-identical to
+/// greedy, and no step ever packs more than the budget.
+#[test]
+fn adaptive_batched_is_lossless_and_respects_budget() {
+    let c = ctx("small");
+    let max_new = 20;
+    let ps = prompts(&c);
+    let want: Vec<Vec<u32>> = ps.iter().map(|p| greedy_stream(&c, p, max_new)).collect();
+    let cfg = EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: max_new };
+
+    for conc in [1usize, 4, 8] {
+        let budget = conc * 6; // >= lanes, well under conc * k
+        let mut eng = BatchedEngine::with_budget(&c.runtime, conc, Some(budget));
+        eng.collect_traces = true;
+        let mut by_id: HashMap<ngrammys::engine::SeqId, usize> = HashMap::new();
+        let mut results: Vec<Option<Vec<u32>>> = vec![None; ps.len()];
+        let mut next = 0usize;
+        let mut done = 0usize;
+        while done < ps.len() {
+            while eng.has_capacity() && next < ps.len() {
+                let id = match next % 3 {
+                    0 => eng
+                        .admit_with(
+                            &ps[next],
+                            make_strategy(StrategyName::Mixed, &c.tables, 1),
+                            Some(controller(&c, AdaptiveConfig::default())),
+                            cfg.clone(),
+                        )
+                        .unwrap(),
+                    1 => eng
+                        .admit(
+                            &ps[next],
+                            make_strategy(StrategyName::Mixed, &c.tables, 1),
+                            cfg.clone(),
+                        )
+                        .unwrap(),
+                    _ => eng
+                        .admit(&ps[next], shuffled(&c, next as u64), cfg.clone())
+                        .unwrap(),
+                };
+                by_id.insert(id, next);
+                next += 1;
+            }
+            for (id, r) in eng.step().unwrap() {
+                results[by_id[&id]] = Some(r.tokens);
+                done += 1;
+            }
+        }
+        for (i, got) in results.iter().enumerate() {
+            assert_eq!(
+                got.as_ref().unwrap(),
+                &want[i],
+                "conc {conc} prompt {i}: batched adaptive stream diverged"
+            );
+        }
+
+        // the row budget bounds the SUM of packed rows across each step's
+        // calls (a ragged-depth step issues several)
+        let mut per_step: HashMap<u64, usize> = HashMap::new();
+        for t in &eng.packed_traces {
+            *per_step.entry(t.step).or_insert(0) += t.rows;
+        }
+        assert!(!per_step.is_empty());
+        for (&s, &rows) in &per_step {
+            assert!(
+                rows <= budget,
+                "conc {conc} step {s}: packed {rows} rows > budget {budget}"
+            );
+        }
+    }
+}
+
+/// The budget genuinely constrains packing: the same static workload
+/// unbudgeted packs more rows per step than the budgeted cap allows.
+#[test]
+fn budget_caps_rows_below_unbudgeted_packing() {
+    let c = ctx("small");
+    let max_new = 16;
+    let ps = prompts(&c);
+    let cfg = EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: max_new };
+    let budget = 16usize; // 4 lanes x k=10 would pack up to 40 unbudgeted
+
+    let run = |budget: Option<usize>| -> (usize, Vec<Vec<u32>>) {
+        let mut eng = BatchedEngine::with_budget(&c.runtime, 4, budget);
+        eng.collect_traces = true;
+        let reqs: Vec<_> = ps
+            .iter()
+            .map(|p| (p.clone(), make_strategy(StrategyName::Mixed, &c.tables, 1), cfg.clone()))
+            .collect();
+        let results = ngrammys::engine::batched::generate_all(&mut eng, reqs).unwrap();
+        let mut per_step: HashMap<u64, usize> = HashMap::new();
+        for t in &eng.packed_traces {
+            *per_step.entry(t.step).or_insert(0) += t.rows;
+        }
+        let max_rows = per_step.values().copied().max().unwrap_or(0);
+        (max_rows, results.into_iter().map(|r| r.tokens).collect())
+    };
+
+    let (max_budgeted, toks_budgeted) = run(Some(budget));
+    let (max_unbudgeted, toks_unbudgeted) = run(None);
+    assert!(max_budgeted <= budget, "budgeted engine packed {max_budgeted} rows");
+    assert!(
+        max_unbudgeted > budget,
+        "unbudgeted engine only packed {max_unbudgeted} rows — workload too small to test"
+    );
+    assert_eq!(toks_budgeted, toks_unbudgeted, "budgeting changed the streams");
+}

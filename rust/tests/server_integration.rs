@@ -23,6 +23,7 @@ fn serve_cfg() -> ServeConfig {
         queue_cap: 8,
         batch: 0,
         default_engine: EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: 12 },
+        ..ServeConfig::default()
     }
 }
 
