@@ -5,11 +5,16 @@
 //! latency percentiles, throughput and the aggregate tokens/call.
 //!
 //!     cargo run --release --example serve -- [--requests N] [--rate R]
-//!         [--batch LANES]
+//!         [--batch LANES] [--no-elastic]
 //!
 //! `--batch N` (N >= 2) switches the scheduler to the continuous-batching
-//! `BatchedEngine`: N pooled KV lanes, one packed verification call per
-//! step across every in-flight request.
+//! `BatchedEngine`. By default that engine is ELASTIC: N is the cap of a
+//! demand-autoscaled lane range, the per-step row budget is derived
+//! online from the cost model, and admissions are ordered by expected
+//! accepted-tokens-per-cost (watch `ngrammys_lanes`,
+//! `ngrammys_derived_budget` and `ngrammys_admission_reorders` in the
+//! final metrics dump). `--no-elastic` pins N fixed lanes, FIFO, no
+//! budget — the pre-elastic behavior.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -26,7 +31,7 @@ use ngrammys::util::stats;
 use ngrammys::workload::{self, RequestTrace};
 
 fn main() -> Result<()> {
-    let args = Args::from_env(&[]).map_err(|e| anyhow!(e))?;
+    let args = Args::from_env(&["no-elastic"]).map_err(|e| anyhow!(e))?;
     let n_requests = args.get_usize("requests", 24).map_err(|e| anyhow!(e))?;
     let rate = args.get_f64("rate", 4.0).map_err(|e| anyhow!(e))?;
     let batch = args.get_usize("batch", 0).map_err(|e| anyhow!(e))?;
@@ -39,9 +44,11 @@ fn main() -> Result<()> {
         workers: 1,
         queue_cap: 128,
         batch,
+        elastic: !args.has_flag("no-elastic"),
         default_engine: EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: max_tokens },
         ..ServeConfig::default()
     };
+    let elastic = cfg.elastic;
     let scheduler = Arc::new(Scheduler::start(&manifest, "base", &cfg)?);
     let tokenizer = Arc::new(BpeTokenizer::load(&manifest.tokenizer_path)?);
     let metrics = scheduler.metrics.clone();
@@ -66,8 +73,10 @@ fn main() -> Result<()> {
 
     // --- replay a Poisson trace over real HTTP
     let trace = RequestTrace::poisson(42, n_requests, rate, prompts.len());
-    let mode = if batch >= 2 {
-        format!("batched engine, {batch} KV lanes")
+    let mode = if batch >= 2 && elastic {
+        format!("elastic batched engine, lane cap {batch}, derived budget")
+    } else if batch >= 2 {
+        format!("batched engine, {batch} fixed KV lanes")
     } else {
         "request-batch 1".to_string()
     };

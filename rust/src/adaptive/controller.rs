@@ -42,8 +42,11 @@ impl Arm {
 /// Operator-facing snapshot of one arm (bench / metrics output).
 #[derive(Debug, Clone)]
 pub struct ArmReport {
+    /// the arm's strategy
     pub name: StrategyName,
+    /// steps this arm drove the draft
     pub pulls: u64,
+    /// EWMA of tokens emitted per pulled step
     pub ewma_emitted: f64,
     /// total tokens emitted across this arm's pulls (exact)
     pub emitted_total: u64,
@@ -53,6 +56,7 @@ pub struct ArmReport {
 
 /// Online (k, w) + strategy selection for ONE sequence.
 pub struct SeqController {
+    /// tuning knobs (public so tests/benches can randomize them)
     pub cfg: AdaptiveConfig,
     cm: CostModel,
     arms: Vec<Arm>,
@@ -228,18 +232,35 @@ impl SeqController {
         self.steps += 1;
     }
 
+    /// This sequence's "heat": expected accepted tokens per verification
+    /// step, from the arm-agnostic acceptance EWMAs (hit rate times one
+    /// plus the mean accepted-prefix length). Cold or cold-started
+    /// sequences sit near 0; a stream accepting long drafts every step
+    /// approaches `1 + w`. This is the demand signal the elastic
+    /// scheduler's autoscaler aggregates across lanes: hot lanes retire
+    /// sequences quickly, so the same queue needs fewer of them.
+    pub fn heat(&self) -> f64 {
+        self.ewma_hit * (1.0 + self.ewma_accept)
+    }
+
+    /// Expected accepted-tokens-per-second-of-verify-cost of the best arm
+    /// so far (0 until any arm has been pulled) — the cost-aware aggregate
+    /// the admission scorer compares against a cold request's prior.
+    pub fn expected_rate(&self) -> f64 {
+        self.arms.iter().map(Arm::value).fold(0.0, f64::max)
+    }
+
     /// Marginal expected acceptance of this sequence's `row_idx`-th packed
     /// row next step (for [`super::budget::allocate_rows`]). Scaled by the
-    /// sequence's "heat" so hot sequences outbid cold ones; within a
-    /// sequence it decays with the latest draft's confidence profile.
+    /// sequence's [`Self::heat`] so hot sequences outbid cold ones; within
+    /// a sequence it decays with the latest draft's confidence profile.
     pub fn marginal_gain(&self, row_idx: usize) -> f64 {
-        let heat = self.ewma_hit * (1.0 + self.ewma_accept);
         let decay = self
             .last_conf
             .get(row_idx)
             .copied()
             .unwrap_or_else(|| super::budget::static_gain(row_idx));
-        heat.max(1e-3) * decay
+        self.heat().max(1e-3) * decay
     }
 
     /// Per-arm statistics (pulls, EWMA emitted, tokens-per-cost value).
@@ -261,6 +282,7 @@ impl SeqController {
         self.est.active_kinds()
     }
 
+    /// Completed (observed) steps so far.
     pub fn steps(&self) -> u64 {
         self.steps
     }
@@ -408,6 +430,19 @@ mod tests {
         let cold = ctl(1);
         assert!(hot.marginal_gain(0) > cold.marginal_gain(0));
         assert!(hot.marginal_gain(0) >= hot.marginal_gain(5));
+    }
+
+    #[test]
+    fn heat_and_expected_rate_track_acceptance() {
+        let mut hot = ctl(1);
+        let cold = ctl(1);
+        for _ in 0..6 {
+            hot.plan(10, 100, &SHAPES, 10, 10);
+            feed(&mut hot, 8, 10, 10);
+        }
+        assert!(hot.heat() > cold.heat(), "hot {} vs cold {}", hot.heat(), cold.heat());
+        assert!(hot.expected_rate() > 0.0);
+        assert_eq!(cold.expected_rate(), 0.0, "unpulled arms must report rate 0");
     }
 
     #[test]

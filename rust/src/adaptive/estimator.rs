@@ -40,6 +40,7 @@ pub(crate) fn ewma(old: f64, x: f64, alpha: f64, samples: u64) -> f64 {
 }
 
 impl AcceptanceEstimator {
+    /// An empty estimator with EWMA decay `alpha` (clamped to [0.01, 1]).
     pub fn new(alpha: f64) -> Self {
         AcceptanceEstimator {
             alpha: alpha.clamp(0.01, 1.0),
@@ -79,6 +80,7 @@ impl AcceptanceEstimator {
         }
     }
 
+    /// Statistics for one kind.
     pub fn stats(&self, kind: StrategyKind) -> &KindStats {
         &self.stats[kind.index()]
     }
@@ -94,6 +96,7 @@ impl AcceptanceEstimator {
             .collect()
     }
 
+    /// Clear all per-kind statistics (between requests).
     pub fn reset(&mut self) {
         self.stats = [KindStats::default(); StrategyKind::COUNT];
     }

@@ -78,6 +78,7 @@ pub struct StepFeedback<'a> {
     pub model_out: &'a [TokenId],
     /// block shape actually verified
     pub k: usize,
+    /// speculation depth actually verified
     pub w: usize,
     /// context length at call time
     pub ctx_len: usize,

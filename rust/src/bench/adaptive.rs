@@ -26,6 +26,8 @@ use crate::workload::{Prompt, TASKS};
 /// `BATCH_CONC * k` rows, so the allocator has real decisions to make.
 const BATCH_CONC: usize = 4;
 
+/// Run the adaptive-vs-static comparison plus the budgeted-batch
+/// section (`--smoke` shrinks the workload for CI).
 pub fn run(
     ctx: &super::BenchCtx,
     n_prompts: usize,

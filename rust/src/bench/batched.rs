@@ -23,8 +23,11 @@ use crate::scheduler::{make_strategy, StrategyName};
 use crate::util::json::Json;
 use crate::workload::TASKS;
 
+/// Default lane counts swept by `bench batched`.
 pub const CONCURRENCIES: [usize; 4] = [1, 2, 4, 8];
 
+/// Run the batched-vs-sequential throughput comparison at each
+/// concurrency in `concurrencies`.
 pub fn run(
     ctx: &super::BenchCtx,
     n_prompts: usize,

@@ -12,8 +12,11 @@ use anyhow::Result;
 use crate::costmodel::{CostModel, Hardware, TxDims};
 use crate::util::json::Json;
 
+/// The paper's Fig. 1 context lengths.
 pub const CTX_LENS: [usize; 3] = [25, 100, 500];
 
+/// Print the phase-transition heatmaps (plus a measured-CPU series
+/// when a context is provided).
 pub fn run(measured: Option<&super::BenchCtx>) -> Result<()> {
     let cm = CostModel::new(Hardware::a100_40gb(), TxDims::mistral_7b());
     let ks: Vec<usize> = (0..=5).map(|i| 1usize << i).collect(); // 1..32

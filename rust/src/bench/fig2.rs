@@ -8,6 +8,7 @@ use anyhow::Result;
 use crate::scheduler::StrategyName;
 use crate::util::json::Json;
 
+/// Print tokens/call vs top-k for the model-derived strategies.
 pub fn run(ctx: &super::BenchCtx, n_prompts: usize, max_new: usize) -> Result<()> {
     let ks = [1usize, 2, 5, 10, 15, 20, 25];
     println!("== Figure 2: tokens/call vs top-k (model '{}') ==\n", ctx.model);

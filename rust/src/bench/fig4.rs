@@ -12,6 +12,7 @@ use crate::util::json::Json;
 use crate::util::stats::Histogram;
 use crate::workload::TASKS;
 
+/// Print the SS5.2 ablation distributions for the mixed strategy.
 pub fn run(ctx: &super::BenchCtx, n_prompts: usize, max_new: usize) -> Result<()> {
     let (k, w) = (10usize, 10usize);
     println!("== Figure 4 ablations: mixed strategy at (k, w) = ({k}, {w}), model '{}' ==\n",

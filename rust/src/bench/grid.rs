@@ -8,14 +8,18 @@ use crate::scheduler::StrategyName;
 use crate::util::json::Json;
 use crate::workload::TASKS;
 
+/// The paper's grid sweep k values.
 pub const GRID_KS: [usize; 5] = [1, 5, 10, 20, 25];
+/// The paper's grid sweep w values.
 pub const GRID_WS: [usize; 7] = [2, 4, 6, 8, 10, 12, 14];
 
+/// Grid-sweep output: one (tokens/call, speedup) cell per (k, w).
 pub struct GridResult {
     /// per task: map (k, w) -> (tokens_per_call, sim_speedup)
     pub cells: Vec<(String, Vec<((usize, usize), (f64, f64))>)>,
 }
 
+/// Run the full mixed-strategy (k, w) grid for one model.
 pub fn run(ctx: &super::BenchCtx, n_prompts: usize, max_new: usize,
            ks: &[usize], ws: &[usize]) -> Result<GridResult> {
     println!(

@@ -12,6 +12,7 @@
 
 pub mod adaptive;
 pub mod batched;
+pub mod elastic;
 pub mod fig1;
 pub mod fig2;
 pub mod fig4;
@@ -35,14 +36,20 @@ use crate::workload::{build_prompts, load_examples, Prompt};
 
 /// Everything a bench target needs for one model.
 pub struct BenchCtx {
+    /// loaded manifest
     pub manifest: Manifest,
+    /// model name within the manifest
     pub model: String,
+    /// loaded model runtime
     pub runtime: ModelRuntime,
+    /// shared n-gram tables
     pub tables: Arc<NgramTables>,
+    /// shared tokenizer
     pub tokenizer: Arc<BpeTokenizer>,
 }
 
 impl BenchCtx {
+    /// Load everything a bench target needs for `model`.
     pub fn load(manifest: Manifest, model: &str) -> Result<BenchCtx> {
         let art = manifest.model(model)?.clone();
         let runtime = ModelRuntime::load(&art)?;
@@ -51,6 +58,7 @@ impl BenchCtx {
         Ok(BenchCtx { manifest, model: model.to_string(), runtime, tables, tokenizer })
     }
 
+    /// Prompt prefixes from a task's eval corpus.
     pub fn prompts(&self, task: &str, n: usize, max_prompt: usize) -> Result<Vec<Prompt>> {
         let examples = load_examples(&self.manifest, task, n)?;
         Ok(build_prompts(&self.tokenizer, &examples, 0.4, max_prompt))
@@ -65,14 +73,19 @@ impl BenchCtx {
 /// Aggregated measurements for one (strategy, k, w) cell over a prompt set.
 #[derive(Debug, Clone)]
 pub struct CellStats {
+    /// the paper's acceptance metric over the cell
     pub tokens_per_call: f64,
     /// total generated tokens / total decode wall-time (CPU)
     pub cpu_tokens_per_s: f64,
     /// cost-model speedup vs greedy at paper scale (mean over prompts)
     pub sim_speedup: f64,
+    /// std dev of the per-prompt simulated speedups
     pub sim_speedup_std: f64,
+    /// tokens emitted across all prompts
     pub total_tokens: usize,
+    /// verification calls across all prompts
     pub total_calls: usize,
+    /// per-prompt raw results
     pub results: Vec<GenResult>,
 }
 

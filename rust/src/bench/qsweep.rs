@@ -15,6 +15,7 @@ use crate::scheduler::StrategyName;
 use crate::util::json::Json;
 use crate::workload::TASKS;
 
+/// Print the footnote-4 context query-length sweep.
 pub fn run_qsweep(ctx: &super::BenchCtx, n_prompts: usize, max_new: usize) -> Result<()> {
     let (k, w) = (10usize, 10usize);
     println!("== q-sweep: context query length (mixed, k={k}, w={w}, model '{}') ==\n",

@@ -28,6 +28,7 @@ pub const PAPER_OURS_1010: [(&str, [(f64, f64); 3]); 3] = [
     ("13b", [(2.78, 2.31), (2.89, 2.50), (2.56, 2.21)]),
 ];
 
+/// Print the headline table across models, tasks and baselines.
 pub fn run(
     manifest: &Manifest,
     models: &[&str],
@@ -175,6 +176,7 @@ fn print_row(analog: &str, label: &str, cells: &[super::CellStats]) {
     println!("{s}");
 }
 
+/// Paper-size label ("7b", ...) for a repo model name.
 pub fn paper_size_label(model: &str) -> &'static str {
     match model {
         "small" => "3b",

@@ -7,32 +7,45 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::scheduler::StrategyName;
+use crate::scheduler::{AutoscaleConfig, StrategyName};
 use crate::util::json::Json;
 
 /// Dimensions of one nano model (mirrors python/compile/configs.py).
 #[derive(Debug, Clone)]
 pub struct ModelDims {
+    /// model name (the manifest key)
     pub name: String,
+    /// paper-scale analog this nano model stands in for (cost-model key)
     pub analog: String,
+    /// vocabulary size
     pub vocab_size: usize,
+    /// residual-stream width
     pub d_model: usize,
+    /// transformer layer count
     pub n_layers: usize,
+    /// attention head count
     pub n_heads: usize,
+    /// per-head dimension
     pub head_dim: usize,
+    /// MLP hidden width
     pub mlp_hidden: usize,
+    /// maximum sequence length (KV-cache positions)
     pub max_len: usize,
+    /// total parameter count
     pub n_params: usize,
 }
 
 /// One weight tensor's name + shape, in flat params.bin order.
 #[derive(Debug, Clone)]
 pub struct ParamSpec {
+    /// tensor name
     pub name: String,
+    /// tensor shape
     pub shape: Vec<usize>,
 }
 
 impl ParamSpec {
+    /// Total element count of the tensor.
     pub fn numel(&self) -> usize {
         self.shape.iter().product()
     }
@@ -41,9 +54,13 @@ impl ParamSpec {
 /// Everything the runtime needs to know about one model's artifacts.
 #[derive(Debug, Clone)]
 pub struct ModelArtifacts {
+    /// model dimensions
     pub dims: ModelDims,
+    /// this model's artifact directory
     pub dir: PathBuf,
+    /// flat f32 weight file
     pub params_bin: PathBuf,
+    /// tensor name/shape list, in `params_bin` order
     pub param_spec: Vec<ParamSpec>,
     /// (k, w) -> HLO text path for the verification step.
     pub steps: HashMap<(usize, usize), PathBuf>,
@@ -52,9 +69,13 @@ pub struct ModelArtifacts {
     /// (k, w) -> HLO text path for the device-side KV commit (perf path;
     /// may be empty for artifacts built before the commit stage existed).
     pub commits: HashMap<(usize, usize), PathBuf>,
+    /// model-derived bigram table path
     pub bigram_table: PathBuf,
+    /// model-derived unigram table path
     pub unigram_table: PathBuf,
+    /// extended-bigram chain table path
     pub ext_bigram_table: PathBuf,
+    /// final training loss recorded by the build (NaN when absent)
     pub train_final_loss: f64,
 }
 
@@ -75,18 +96,26 @@ impl ModelArtifacts {
 /// The parsed artifact manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// artifacts root directory
     pub root: PathBuf,
+    /// shared vocabulary size
     pub vocab_size: usize,
+    /// shared tokenizer.json path
     pub tokenizer_path: PathBuf,
     /// task name -> (train corpus path, eval corpus path)
     pub data: HashMap<String, (PathBuf, PathBuf)>,
+    /// model name -> artifact set
     pub models: HashMap<String, ModelArtifacts>,
+    /// top-k stored per bigram-table row
     pub bigram_topk: usize,
+    /// top-k stored in the unigram table
     pub unigram_topk: usize,
+    /// chain depth stored in the extended-bigram table
     pub ext_bigram_w: usize,
 }
 
 impl Manifest {
+    /// Parse `manifest.json` under `artifacts_dir`.
     pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
         let path = artifacts_dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -128,6 +157,7 @@ impl Manifest {
         })
     }
 
+    /// Look up one model's artifact set by manifest name.
     pub fn model(&self, name: &str) -> Result<&ModelArtifacts> {
         self.models
             .get(name)
@@ -226,6 +256,7 @@ pub struct EngineConfig {
     pub w: usize,
     /// context-n-gram query length (paper's q; q=1 everywhere in §5)
     pub q: usize,
+    /// max tokens to emit (the prefill-emitted first token counts)
     pub max_new_tokens: usize,
 }
 
@@ -259,25 +290,46 @@ impl Default for SessionCacheConfig {
 /// Serving-layer settings.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// listen address (host:port; port 0 = ephemeral)
     pub addr: String,
+    /// per-sequence decode workers (the `batch <= 1` mode)
     pub workers: usize,
+    /// bounded admission-queue length (backpressure limit)
     pub queue_cap: usize,
     /// Cross-request batching: 0 or 1 = one private decode loop per worker
-    /// (request-batch 1); >= 2 = a continuous-batching `BatchedEngine` with
-    /// this many pooled KV lanes, verifying all active sequences in one
-    /// packed call per step.
+    /// (request-batch 1); >= 2 = a continuous-batching `BatchedEngine`.
+    /// With `elastic` on (the default), this is the CAP of the lane range
+    /// the autoscaler works in; with it off, the fixed pooled-lane count.
     pub batch: usize,
-    /// Packed-row budget for the batched engine: caps the per-step packed
+    /// Packed-row budget for the batched engine: bounds the per-step packed
     /// batch size `sum k_i` at `max(budget, active)`; rows are distributed
-    /// across sequences by marginal expected acceptance. `None` = unbudgeted
-    /// (every sequence speculates at its own configured width).
+    /// across sequences by marginal expected acceptance. With `elastic` on,
+    /// this is a CAP over the budget derived online from the cost model
+    /// (`None` = derived value used as-is); with it off, the fixed budget
+    /// (`None` = unbudgeted).
     pub budget: Option<usize>,
+    /// Elastic batched serving (ignored when `batch <= 1`): the scheduler
+    /// autoscales the lane pool between `autoscale.min_lanes` and `batch`
+    /// from demand, derives the per-step row budget from
+    /// [`crate::costmodel::CostModel::memory_bound_rows`], and orders
+    /// admissions by expected accepted-tokens-per-cost. Turn off
+    /// (`--no-elastic`) to pin `batch` lanes and the static `budget`, the
+    /// pre-elastic behavior. Output streams are identical either way.
+    pub elastic: bool,
+    /// Autoscaler tuning for elastic mode. `max_lanes` is overridden by
+    /// `batch` at scheduler start; `min_lanes` is clamped into its range.
+    pub autoscale: AutoscaleConfig,
+    /// Slowdown tolerance for the online-derived row budget (elastic
+    /// mode): rows are packed while they cost at most this factor over a
+    /// one-row call of the same depth on the cost model.
+    pub budget_slack: f64,
     /// Default strategy for requests that don't name one (`Adaptive`
     /// turns on the online controller). Typed, so an invalid name fails
     /// at config construction, not silently per request.
     pub default_strategy: StrategyName,
     /// Bounds for the session n-gram cache strategy.
     pub session_cache: SessionCacheConfig,
+    /// engine settings for requests that do not override them
     pub default_engine: EngineConfig,
 }
 
@@ -289,6 +341,9 @@ impl Default for ServeConfig {
             queue_cap: 256,
             batch: 0,
             budget: None,
+            elastic: true,
+            autoscale: AutoscaleConfig::for_cap(1),
+            budget_slack: crate::engine::AutoBudget::DEFAULT_SLACK,
             default_strategy: StrategyName::Mixed,
             session_cache: SessionCacheConfig::default(),
             default_engine: EngineConfig::default(),

@@ -17,6 +17,7 @@
 /// Hardware description (defaults = NVIDIA A100 40GB SXM, bf16).
 #[derive(Debug, Clone)]
 pub struct Hardware {
+    /// human-readable device name (bench reports)
     pub name: &'static str,
     /// peak dense bf16 throughput, FLOP/s
     pub peak_flops: f64,
@@ -33,6 +34,7 @@ pub struct Hardware {
 }
 
 impl Hardware {
+    /// The paper's reference device.
     pub fn a100_40gb() -> Self {
         Hardware {
             name: "A100-40GB (bf16)",
@@ -79,12 +81,19 @@ impl Hardware {
 /// produce simulated wall-times at the paper's scale).
 #[derive(Debug, Clone)]
 pub struct TxDims {
+    /// size label used in bench output ("7b", "3b", "13b")
     pub name: &'static str,
+    /// residual-stream width
     pub d_model: usize,
+    /// transformer layer count
     pub n_layers: usize,
+    /// attention head count
     pub n_heads: usize,
+    /// per-head dimension
     pub head_dim: usize,
+    /// MLP hidden width
     pub mlp_hidden: usize,
+    /// vocabulary size (lm-head width)
     pub vocab: usize,
     /// bytes per parameter/activation element (bf16 = 2)
     pub dtype_bytes: usize,
@@ -133,6 +142,7 @@ impl TxDims {
         }
     }
 
+    /// Dimensions for a paper-model analog name (`None` if unknown).
     pub fn for_analog(name: &str) -> Option<Self> {
         match name {
             "small" | "3b" | "phi3" => Some(Self::phi3_mini()),
@@ -156,12 +166,17 @@ struct Gemm {
     shared_b: bool,
 }
 
+/// Analytical call-time model: per-GEMM max(memory roofline,
+/// wave-quantized compute) summed over one forward pass.
 pub struct CostModel {
+    /// device description
     pub hw: Hardware,
+    /// transformer dimensions at paper scale
     pub dims: TxDims,
 }
 
 impl CostModel {
+    /// A cost model for `dims` running on `hw`.
     pub fn new(hw: Hardware, dims: TxDims) -> Self {
         CostModel { hw, dims }
     }
@@ -241,6 +256,39 @@ impl CostModel {
         self.call_time(k_rows, w + 1, ctx_len) / self.call_time(1, 1, ctx_len)
     }
 
+    /// Largest packed row count that stays (approximately) memory-bound at
+    /// depth `w` and context `ctx_len`: the biggest `rows` whose
+    /// [`Self::slowdown`] relative to a single row of the same depth is at
+    /// most `slack` (e.g. 1.15 = "rows may cost at most 15% extra"). This
+    /// is the online replacement for the operator's static `--budget` flag:
+    /// while the verification call is memory-bound, extra rows are ~free
+    /// (paper §3), so the budget should sit exactly at the phase-transition
+    /// knee for the CURRENT context lengths — which shifts as sequences
+    /// grow — rather than at a number picked at boot.
+    ///
+    /// The search is a linear scan capped at [`Self::MAX_BUDGET_ROWS`];
+    /// wave quantization makes the slowdown curve only coarsely monotone,
+    /// so the scan returns the last row count before the FIRST crossing,
+    /// which is the conservative (never compute-bound) choice. Always
+    /// returns at least 1.
+    pub fn memory_bound_rows(&self, w: usize, ctx_len: usize, slack: f64) -> usize {
+        let base = self.call_time(1, w + 1, ctx_len);
+        let mut rows = 1;
+        while rows < Self::MAX_BUDGET_ROWS {
+            let t = self.call_time(rows + 1, w + 1, ctx_len);
+            if t > base * slack.max(1.0) {
+                break;
+            }
+            rows += 1;
+        }
+        rows
+    }
+
+    /// Upper bound of the [`Self::memory_bound_rows`] scan — far above any
+    /// packed batch a real lane pool can produce, so the cap only guards
+    /// against a pathological cost-model configuration.
+    pub const MAX_BUDGET_ROWS: usize = 256;
+
     /// Simulated wall-time of a decode trace: per call, the (k, w) shape
     /// and context length; baseline = one (1, 0) call per emitted token.
     pub fn simulate_speedup(&self, calls: &[(usize, usize, usize)], tokens: usize) -> f64 {
@@ -304,6 +352,42 @@ mod tests {
         let calls = vec![(10, 10, 100), (10, 10, 104), (10, 10, 108)];
         let s = m.simulate_speedup(&calls, 10);
         assert!(s > 1.5 && s < 4.0, "speedup {s}");
+    }
+
+    #[test]
+    fn memory_bound_rows_sits_at_the_knee() {
+        let m = cm();
+        let b = m.memory_bound_rows(10, 100, 1.15);
+        // the derived budget must be a real batch (the whole point is that
+        // rows are ~free while memory-bound) but must stop before the
+        // compute-bound regime the large-block test pins down
+        assert!(b >= 4, "budget {b} too small to be useful");
+        assert!(b < CostModel::MAX_BUDGET_ROWS, "budget scan never found the knee");
+        // one past the budget really does cross the slack threshold
+        let base = m.call_time(1, 11, 100);
+        assert!(m.call_time(b + 1, 11, 100) > base * 1.15);
+        assert!(m.call_time(b, 11, 100) <= base * 1.15);
+    }
+
+    #[test]
+    fn memory_bound_rows_shrinks_with_depth_and_context() {
+        let m = cm();
+        let shallow = m.memory_bound_rows(2, 100, 1.15);
+        let deep = m.memory_bound_rows(14, 100, 1.15);
+        assert!(deep <= shallow, "deep {deep} > shallow {shallow}");
+        let short = m.memory_bound_rows(10, 50, 1.15);
+        let long = m.memory_bound_rows(10, 2000, 1.15);
+        assert!(long <= short, "long-ctx {long} > short-ctx {short}");
+        assert!(long >= 1, "budget must floor at one row");
+    }
+
+    #[test]
+    fn memory_bound_rows_monotone_in_slack() {
+        let m = cm();
+        let tight = m.memory_bound_rows(10, 100, 1.0);
+        let loose = m.memory_bound_rows(10, 100, 1.5);
+        assert!(tight <= loose);
+        assert!(tight >= 1);
     }
 
     #[test]

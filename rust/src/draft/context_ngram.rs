@@ -14,6 +14,7 @@ use std::collections::HashMap;
 use super::{count_share, DraftBatch, DraftStrategy, StrategyKind};
 use crate::tokenizer::TokenId;
 
+/// Context n-gram drafting state (just the query length).
 #[derive(Debug)]
 pub struct ContextNgram {
     /// query length (paper's q; the paper uses q=1, and reports q in {2,3}
@@ -22,6 +23,7 @@ pub struct ContextNgram {
 }
 
 impl ContextNgram {
+    /// A context n-gram drafter with query length `q` (>= 1).
     pub fn new(q: usize) -> Self {
         assert!(q >= 1);
         ContextNgram { q }

@@ -7,6 +7,7 @@
 use super::{DraftBatch, DraftStrategy, StrategyKind};
 use crate::tokenizer::TokenId;
 
+/// Jacobi-decoding draft state (previous step's model outputs).
 #[derive(Debug)]
 pub struct JacobiDraft {
     /// model outputs for the chosen row from the previous verification call
@@ -17,6 +18,7 @@ pub struct JacobiDraft {
 }
 
 impl JacobiDraft {
+    /// A Jacobi drafter whose cold-start guess is `init_token`.
     pub fn new(init_token: TokenId) -> Self {
         JacobiDraft { prev_out: Vec::new(), consumed: 0, init_token }
     }

@@ -26,9 +26,14 @@ pub enum AllocationPolicy {
     FixedSplit { ctx: usize },
 }
 
+/// The paper's mixed drafting policy: context n-gram rows plus
+/// extended-bigram fill.
 pub struct MixedStrategy {
+    /// the context n-gram source
     pub context: ContextNgram,
+    /// the extended-bigram source
     pub bigram: ExtendedBigram,
+    /// how the k rows are split between the two sources
     pub policy: AllocationPolicy,
 }
 
@@ -42,6 +47,7 @@ impl MixedStrategy {
         }
     }
 
+    /// A mixed strategy with an explicit allocation policy (ablations).
     pub fn with_policy(tables: Arc<NgramTables>, q: usize, policy: AllocationPolicy) -> Self {
         MixedStrategy {
             context: ContextNgram::new(q),

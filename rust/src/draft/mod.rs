@@ -26,10 +26,15 @@ use crate::tokenizer::TokenId;
 /// per-strategy serving counters).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum StrategyKind {
+    /// context n-gram rows (SS4.2)
     ContextNgram,
+    /// model bigram rows (SS4.1)
     ModelBigram,
+    /// model unigram rows (App. B.1)
     ModelUnigram,
+    /// extended bigram chain rows (SS4.1)
     ExtendedBigram,
+    /// Jacobi decoding rows
     Jacobi,
     /// online session n-gram cache rows (extension beyond the paper)
     SessionCache,
@@ -49,6 +54,7 @@ impl StrategyKind {
         StrategyKind::SessionCache,
         StrategyKind::Empty,
     ];
+    /// Number of variants (sizes the array-backed statistics).
     pub const COUNT: usize = 7;
 
     /// Dense index into `ALL` (used for array-backed per-kind statistics).
@@ -58,6 +64,7 @@ impl StrategyKind {
         *self as usize
     }
 
+    /// Stable label used in metrics and bench output.
     pub fn label(&self) -> &'static str {
         match self {
             StrategyKind::ContextNgram => "context-ngram",
@@ -74,7 +81,9 @@ impl StrategyKind {
 /// One proposed row: `w` draft tokens plus provenance.
 #[derive(Debug, Clone)]
 pub struct DraftRow {
+    /// the row's draft tokens (at most `w`)
     pub tokens: Vec<TokenId>,
+    /// producing strategy
     pub kind: StrategyKind,
     /// rank of this row within its strategy's own ordering (0 = top)
     pub rank: usize,
@@ -88,15 +97,19 @@ pub struct DraftRow {
 /// The (k, w) speculation batch handed to the verifier.
 #[derive(Debug, Clone, Default)]
 pub struct DraftBatch {
+    /// proposed rows, in policy order
     pub rows: Vec<DraftRow>,
+    /// speculation depth every row is truncated to
     pub w: usize,
 }
 
 impl DraftBatch {
+    /// An empty batch of depth `w`.
     pub fn new(w: usize) -> Self {
         DraftBatch { rows: Vec::new(), w }
     }
 
+    /// Append a row with the rank-prior confidence `1 / (1 + rank)`.
     pub fn push(&mut self, tokens: Vec<TokenId>, kind: StrategyKind, rank: usize) {
         let confidence = 1.0 / (1.0 + rank as f64);
         self.push_conf(tokens, kind, rank, confidence);
@@ -118,10 +131,12 @@ impl DraftBatch {
         self.rows.push(DraftRow { tokens, kind, rank, confidence });
     }
 
+    /// Current row count.
     pub fn k(&self) -> usize {
         self.rows.len()
     }
 
+    /// Whether the batch already holds `k` rows.
     pub fn is_full(&self, k: usize) -> bool {
         self.rows.len() >= k
     }
@@ -139,6 +154,7 @@ pub fn count_share(count: u32, total: u32) -> f64 {
 /// the current last accepted token (`seq.last()` is the token whose KV is
 /// not yet cached — the anchor of the speculation block).
 pub trait DraftStrategy: Send {
+    /// Stable human-readable strategy name.
     fn name(&self) -> &'static str;
 
     /// Append up to `k - batch.k()` rows of `batch.w` tokens each.

@@ -17,10 +17,12 @@ pub struct ExtendedBigram {
 }
 
 impl ExtendedBigram {
+    /// An extended-bigram drafter over `tables`.
     pub fn new(tables: Arc<NgramTables>) -> Self {
         ExtendedBigram { tables, scratch: Vec::new() }
     }
 
+    /// The backing tables (bench introspection).
     pub fn tables(&self) -> &NgramTables {
         &self.tables
     }
@@ -53,6 +55,7 @@ pub struct ModelBigram {
 }
 
 impl ModelBigram {
+    /// A plain-bigram drafter over `tables`.
     pub fn new(tables: Arc<NgramTables>) -> Self {
         ModelBigram { tables, scratch: Vec::new() }
     }
@@ -93,6 +96,7 @@ pub struct ModelUnigram {
 }
 
 impl ModelUnigram {
+    /// A unigram drafter over `tables`.
     pub fn new(tables: Arc<NgramTables>) -> Self {
         ModelUnigram { tables, scratch: Vec::new() }
     }

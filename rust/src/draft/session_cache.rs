@@ -32,6 +32,8 @@ pub struct SessionNgramCache {
 }
 
 impl SessionNgramCache {
+    /// A cache bounded to `per_query` continuations per query token,
+    /// `max_chain` tokens per chain and `cap` chains total.
     pub fn new(per_query: usize, max_chain: usize, cap: usize) -> Self {
         SessionNgramCache {
             table: HashMap::new(),
@@ -43,10 +45,12 @@ impl SessionNgramCache {
         }
     }
 
+    /// Stored continuation chains.
     pub fn len(&self) -> usize {
         self.stored
     }
 
+    /// Whether nothing has been cached yet.
     pub fn is_empty(&self) -> bool {
         self.stored == 0
     }

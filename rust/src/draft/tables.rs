@@ -10,23 +10,29 @@ use anyhow::{anyhow, Context, Result};
 use crate::config::ModelArtifacts;
 use crate::tokenizer::TokenId;
 
+/// Table-file magic: "NGRM" as a little-endian u32.
 pub const MAGIC: u32 = 0x4E47524D;
 
 /// A dense u32 lookup table of rank 2 (rows, cols) or 3 (rows, cols, depth).
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// first dimension
     pub rows: usize,
+    /// second dimension
     pub cols: usize,
+    /// third dimension (1 for rank-2 tables)
     pub depth: usize,
     data: Vec<u32>,
 }
 
 impl Table {
+    /// Read and parse one table file.
     pub fn load(path: &Path) -> Result<Table> {
         let bytes = std::fs::read(path).with_context(|| format!("reading table {path:?}"))?;
         Table::from_bytes(&bytes).with_context(|| format!("parsing table {path:?}"))
     }
 
+    /// Parse a table from raw bytes (header + row-major u32 data).
     pub fn from_bytes(bytes: &[u8]) -> Result<Table> {
         if bytes.len() < 16 {
             return Err(anyhow!("table too short"));
@@ -88,6 +94,7 @@ pub struct NgramTables {
 }
 
 impl NgramTables {
+    /// Load the three tables referenced by a model's artifacts.
     pub fn load(art: &ModelArtifacts) -> Result<NgramTables> {
         let t = NgramTables {
             bigram: Table::load(&art.bigram_table)?,

@@ -28,6 +28,7 @@ use anyhow::{anyhow, Result};
 
 use crate::adaptive::{budget, SeqController, StepFeedback};
 use crate::config::EngineConfig;
+use crate::costmodel::CostModel;
 use crate::draft::{DraftBatch, DraftStrategy};
 use crate::kvcache::{KvPool, LaneId};
 use crate::runtime::{ModelRuntime, PackedBlock};
@@ -38,6 +39,38 @@ use super::{assemble_block, judge_and_commit, make_trace, pad_batch, GenResult};
 /// Identifier of one admitted sequence, unique within an engine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct SeqId(pub u64);
+
+/// Online row-budget derivation for the elastic serving path.
+///
+/// When installed on a [`BatchedEngine`], every step recomputes its
+/// packed-row budget as the largest batch that still stays memory-bound
+/// for the step's speculation depth and the CURRENT context lengths
+/// ([`CostModel::memory_bound_rows`]) — the phase-transition knee moves
+/// as sequences grow, so a boot-time `--budget` number is wrong for most
+/// of a long decode. The engine's static [`BatchedEngine::budget`], when
+/// also set, acts as an operator CAP on the derived value, never as the
+/// value itself.
+pub struct AutoBudget {
+    /// paper-scale cost model the budget is derived on (normally the
+    /// served model's analog, [`CostModel::for_analog`])
+    pub cm: CostModel,
+    /// slowdown tolerance handed to [`CostModel::memory_bound_rows`]:
+    /// rows may cost at most this factor over a one-row call of the same
+    /// depth before the budget cuts them off
+    pub slack: f64,
+}
+
+impl AutoBudget {
+    /// Default slowdown tolerance: rows are admitted while they cost at
+    /// most 15% over the memory-bound floor — inside the flat region of
+    /// the paper's Fig. 1 curves for every analog.
+    pub const DEFAULT_SLACK: f64 = 1.15;
+
+    /// An auto-budget with the default slack for `cm`.
+    pub fn new(cm: CostModel) -> Self {
+        AutoBudget { cm, slack: Self::DEFAULT_SLACK }
+    }
+}
 
 /// One packed verification call, as the engine saw it (feeds the batched
 /// bench's cost-model throughput accounting).
@@ -80,7 +113,34 @@ impl SeqState {
 }
 
 /// Multi-sequence speculative decoding over a pooled KV cache.
+///
+/// # Example
+///
+/// Serve two sequences through one engine (each step verifies both in a
+/// single packed call); [`generate_all`] drives admit/step to completion:
+///
+/// ```
+/// use ngrammys::config::EngineConfig;
+/// use ngrammys::draft::DraftStrategy;
+/// use ngrammys::engine::batched::generate_all;
+/// use ngrammys::engine::{BatchedEngine, NoDraft};
+/// use ngrammys::runtime::ModelRuntime;
+///
+/// let manifest = ngrammys::testkit::manifest();
+/// let runtime = ModelRuntime::load(manifest.model("small")?)?;
+/// let mut eng = BatchedEngine::new(&runtime, 2); // two pooled KV lanes
+/// let cfg = EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: 6 };
+/// let reqs: Vec<(Vec<u32>, Box<dyn DraftStrategy>, EngineConfig)> = vec![
+///     (vec![1, 2, 3], Box::new(NoDraft), cfg.clone()),
+///     (vec![7, 8, 9], Box::new(NoDraft), cfg),
+/// ];
+/// let results = generate_all(&mut eng, reqs)?;
+/// assert_eq!(results.len(), 2);
+/// assert!(results.iter().all(|r| r.tokens.len() == 6));
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub struct BatchedEngine<'rt> {
+    /// the loaded model every lane executes against
     pub runtime: &'rt ModelRuntime,
     /// collect per-step traces on each sequence's GenResult + packed traces
     pub collect_traces: bool,
@@ -91,8 +151,18 @@ pub struct BatchedEngine<'rt> {
     /// sequence keeps at least its anchor row; keep `B >= lanes` for a
     /// strict `sum <= B`). Rows are distributed by marginal expected
     /// acceptance — adaptive sequences bid with their controller's
-    /// estimates, static ones with the rank-decay prior.
+    /// estimates, static ones with the rank-decay prior. When
+    /// [`Self::auto_budget`] is also set, this value is demoted to an
+    /// operator CAP on the per-step derived budget.
     pub budget: Option<usize>,
+    /// Elastic mode: derive each step's row budget online from the cost
+    /// model instead of using [`Self::budget`] directly (see
+    /// [`AutoBudget`]).
+    pub auto_budget: Option<AutoBudget>,
+    /// The budget the most recent [`Self::step`] actually enforced
+    /// (derived or static) — exported as the `ngrammys_derived_budget`
+    /// gauge by the elastic scheduler.
+    last_budget: Option<usize>,
     pool: KvPool,
     active: Vec<SeqState>,
     next_id: u64,
@@ -113,6 +183,8 @@ impl<'rt> BatchedEngine<'rt> {
             collect_traces: false,
             packed_traces: Vec::new(),
             budget: None,
+            auto_budget: None,
+            last_budget: None,
             pool: KvPool::new(d.n_layers, d.max_len, d.n_heads, d.head_dim,
                               max_concurrency.max(1)),
             active: Vec::new(),
@@ -138,16 +210,60 @@ impl<'rt> BatchedEngine<'rt> {
         self.pool.capacity()
     }
 
+    /// Grow or shrink the lane pool toward `target` lanes and return the
+    /// achieved capacity — the elastic scheduler's scale knob. Growth is
+    /// immediate; shrinking reclaims only free lanes (see
+    /// [`KvPool::resize`]), so in-flight sequences are never evicted and
+    /// a downscale decision converges over the next few steps as
+    /// sequences retire. Output streams are unaffected either way: scale
+    /// events only change how many sequences may ride future packed
+    /// calls, never what any existing sequence emits.
+    pub fn set_capacity(&mut self, target: usize) -> usize {
+        self.pool.resize(target)
+    }
+
+    /// Number of currently active (admitted, unfinished) sequences.
     pub fn active(&self) -> usize {
         self.active.len()
     }
 
+    /// Whether another sequence can be admitted right now.
     pub fn has_capacity(&self) -> bool {
         self.active.len() < self.pool.capacity()
     }
 
+    /// KV lanes currently claimed by active sequences.
     pub fn lanes_in_use(&self) -> usize {
         self.pool.in_use()
+    }
+
+    /// Mean controller heat (expected accepted tokens per step, see
+    /// [`SeqController::heat`]) across active adaptive sequences; `None`
+    /// when no active sequence carries a controller. The autoscaler uses
+    /// this to discount queue pressure — hot lanes drain the queue faster,
+    /// so the same backlog needs fewer of them.
+    pub fn mean_heat(&self) -> Option<f64> {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for s in &self.active {
+            if let Some(c) = s.controller.as_ref() {
+                sum += c.heat();
+                n += 1;
+            }
+        }
+        if n > 0 {
+            Some(sum / n as f64)
+        } else {
+            None
+        }
+    }
+
+    /// The packed-row budget the most recent [`Self::step`] enforced:
+    /// the online-derived value in auto-budget mode, the static
+    /// [`Self::budget`] otherwise, `None` before any step or when
+    /// unbudgeted.
+    pub fn last_step_budget(&self) -> Option<usize> {
+        self.last_budget
     }
 
     /// Admit one sequence: claim a lane, prefill it, emit the first greedy
@@ -262,6 +378,26 @@ impl<'rt> BatchedEngine<'rt> {
             }
         };
 
+        // Effective budget for THIS step: in auto mode it is re-derived
+        // from the cost model at the step's deepest planned w and the
+        // largest current context (the conservative corner of the packed
+        // call), with the static budget demoted to an operator cap.
+        let step_budget = match &self.auto_budget {
+            Some(ab) => {
+                let w_max = shapes.iter().map(|&(_, w)| w).max().unwrap_or(0);
+                let ctx = self
+                    .active
+                    .iter()
+                    .map(|s| self.pool.lane(s.lane).len)
+                    .max()
+                    .unwrap_or(0);
+                let derived = ab.cm.memory_bound_rows(w_max, ctx, ab.slack);
+                Some(self.budget.map_or(derived, |cap| derived.min(cap)))
+            }
+            None => self.budget,
+        };
+        self.last_budget = step_budget;
+
         // Packed-row budget: refit each sequence's k_i so the step packs
         // at most max(B, active) rows, distributed by marginal expected
         // acceptance (hot sequences outbid cold ones, which degrade toward
@@ -270,7 +406,7 @@ impl<'rt> BatchedEngine<'rt> {
         // grid's fewest-rows shape instead, which minimizes (but on such
         // grids cannot always eliminate) budget overshoot — on a full
         // k x w grid, which always has k = 1 shapes, the bound is exact.
-        let shapes = match self.budget {
+        let shapes = match step_budget {
             Some(b) => {
                 let caps_k: Vec<usize> = shapes.iter().map(|&(k, _)| k).collect();
                 let alloc = budget::allocate_rows(b, &caps_k, |i, j| {

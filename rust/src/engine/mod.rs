@@ -19,7 +19,7 @@
 pub mod acceptance;
 pub mod batched;
 
-pub use batched::{BatchedEngine, PackedTrace, SeqId};
+pub use batched::{AutoBudget, BatchedEngine, PackedTrace, SeqId};
 
 use std::time::{Duration, Instant};
 
@@ -43,29 +43,39 @@ pub struct StepTrace {
     pub ctx_len: usize,
     /// actual block shape used
     pub k: usize,
+    /// speculation depth of the call
     pub w: usize,
     /// winning row's strategy + rank, accepted length
     pub kind: StrategyKind,
+    /// winning row's rank within its producing strategy
     pub rank: usize,
+    /// accepted draft-prefix length of the winning row
     pub accepted: usize,
     /// rows allocated per strategy in this call's batch
     pub alloc_context: usize,
+    /// rows allocated to the model/extended bigram sources
     pub alloc_bigram: usize,
+    /// rows from any other source (incl. anchor-only padding)
     pub alloc_other: usize,
+    /// device execution time of the call
     pub exec_time: Duration,
 }
 
 /// Result of generating one sequence.
 #[derive(Debug, Clone, Default)]
 pub struct GenResult {
+    /// emitted tokens (the first comes from the prefill call)
     pub tokens: Vec<TokenId>,
     /// number of verification calls (excludes prefill)
     pub calls: usize,
+    /// wall time of the prefill call
     pub prefill_time: Duration,
+    /// wall time of the decode loop
     pub decode_time: Duration,
     /// pure model-execution time within decode (for a batched run, each
     /// sequence is charged the full latency of every packed call it rode)
     pub exec_time: Duration,
+    /// per-call traces (populated when `collect_traces` is on)
     pub traces: Vec<StepTrace>,
 }
 
@@ -83,9 +93,31 @@ impl GenResult {
 }
 
 /// Drives speculative decoding for single sequences.
+///
+/// # Example
+///
+/// Decode a few greedy tokens against the synthetic testkit artifacts
+/// (a bare checkout needs no external toolchain for this):
+///
+/// ```
+/// use ngrammys::config::EngineConfig;
+/// use ngrammys::engine::{NoDraft, SpecDecoder};
+/// use ngrammys::runtime::ModelRuntime;
+///
+/// let manifest = ngrammys::testkit::manifest();
+/// let runtime = ModelRuntime::load(manifest.model("small")?)?;
+/// let cfg = EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: 8 };
+/// let mut dec = SpecDecoder::new(&runtime, Box::new(NoDraft), cfg);
+/// let out = dec.generate(&[1, 2, 3])?;
+/// assert_eq!(out.tokens.len(), 8);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub struct SpecDecoder<'rt> {
+    /// the loaded model this decoder executes against
     pub runtime: &'rt ModelRuntime,
+    /// draft source (ignored when `controller` is set)
     pub strategy: Box<dyn DraftStrategy>,
+    /// block shape + generation limits
     pub cfg: EngineConfig,
     /// collect per-step traces (slightly more allocation; on for benches)
     pub collect_traces: bool,
@@ -98,6 +130,7 @@ pub struct SpecDecoder<'rt> {
 }
 
 impl<'rt> SpecDecoder<'rt> {
+    /// A decoder for `runtime` drafting with `strategy` under `cfg`.
     pub fn new(runtime: &'rt ModelRuntime, strategy: Box<dyn DraftStrategy>,
                cfg: EngineConfig) -> Self {
         SpecDecoder { runtime, strategy, cfg, collect_traces: false, controller: None }

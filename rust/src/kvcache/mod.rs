@@ -18,17 +18,24 @@ use anyhow::{anyhow, Result};
 /// Shared-context KV cache for a single sequence.
 #[derive(Debug, Clone)]
 pub struct SharedKvCache {
+    /// key cache, (layers, max_len, heads, head_dim) row-major
     pub k_data: Vec<f32>,
+    /// value cache, same layout
     pub v_data: Vec<f32>,
+    /// transformer layer count
     pub layers: usize,
+    /// cache capacity in positions
     pub max_len: usize,
+    /// attention head count
     pub heads: usize,
+    /// per-head dimension
     pub head_dim: usize,
     /// number of valid positions (tokens whose KV is committed)
     pub len: usize,
 }
 
 impl SharedKvCache {
+    /// A zeroed cache of the given geometry (len 0).
     pub fn new(layers: usize, max_len: usize, heads: usize, head_dim: usize) -> Self {
         let n = layers * max_len * heads * head_dim;
         SharedKvCache {
@@ -54,6 +61,7 @@ impl SharedKvCache {
         self.max_len * self.pos_stride()
     }
 
+    /// Total elements in each of `k_data` / `v_data`.
     pub fn numel(&self) -> usize {
         self.k_data.len()
     }
@@ -152,13 +160,17 @@ pub struct PagedAllocator {
     total_blocks: usize,
 }
 
+/// One sequence's allocated block list plus its logical length.
 #[derive(Debug, Default, Clone)]
 pub struct BlockTable {
+    /// owned block indexes, in allocation order
     pub blocks: Vec<usize>,
+    /// positions currently in use
     pub len: usize,
 }
 
 impl PagedAllocator {
+    /// An allocator of `total_blocks` free blocks, `block_size` positions each.
     pub fn new(total_blocks: usize, block_size: usize) -> Self {
         PagedAllocator {
             block_size,
@@ -167,14 +179,17 @@ impl PagedAllocator {
         }
     }
 
+    /// Positions per block.
     pub fn block_size(&self) -> usize {
         self.block_size
     }
 
+    /// Currently free blocks.
     pub fn free_blocks(&self) -> usize {
         self.free.len()
     }
 
+    /// Currently allocated blocks.
     pub fn used_blocks(&self) -> usize {
         self.total_blocks - self.free.len()
     }
@@ -229,9 +244,13 @@ pub struct LaneId(usize);
 pub struct KvPool {
     lanes: Vec<SharedKvCache>,
     free: Vec<usize>,
+    /// lane dimensions, kept so [`Self::resize`] can mint new lanes
+    dims: (usize, usize, usize, usize),
 }
 
 impl KvPool {
+    /// A pool of `n_lanes` lanes, each a `(layers, max_len, heads,
+    /// head_dim)` [`SharedKvCache`].
     pub fn new(layers: usize, max_len: usize, heads: usize, head_dim: usize,
                n_lanes: usize) -> Self {
         assert!(n_lanes > 0, "pool needs at least one lane");
@@ -240,7 +259,37 @@ impl KvPool {
                 .map(|_| SharedKvCache::new(layers, max_len, heads, head_dim))
                 .collect(),
             free: (0..n_lanes).rev().collect(),
+            dims: (layers, max_len, heads, head_dim),
         }
+    }
+
+    /// Grow or shrink the pool toward `target` lanes (floored at 1) and
+    /// return the resulting capacity — the elastic scheduler's scale knob.
+    ///
+    /// Growth allocates fresh (zeroed, free) lanes immediately. Shrinking
+    /// only ever reclaims FREE lanes, and only from the tail of the lane
+    /// array, so every outstanding [`LaneId`] stays valid: a busy lane in
+    /// tail position pauses the shrink, and the autoscaler simply re-asks
+    /// on a later step once that sequence has retired. Memory for a
+    /// reclaimed lane is released outright (lanes are independent buffers).
+    pub fn resize(&mut self, target: usize) -> usize {
+        let target = target.max(1);
+        let (layers, max_len, heads, head_dim) = self.dims;
+        while self.lanes.len() < target {
+            self.free.push(self.lanes.len());
+            self.lanes.push(SharedKvCache::new(layers, max_len, heads, head_dim));
+        }
+        while self.lanes.len() > target {
+            let tail = self.lanes.len() - 1;
+            match self.free.iter().position(|&i| i == tail) {
+                Some(pos) => {
+                    self.free.swap_remove(pos);
+                    self.lanes.pop();
+                }
+                None => break, // tail lane busy; shrink resumes later
+            }
+        }
+        self.lanes.len()
     }
 
     /// Total number of lanes (the engine's max concurrency).
@@ -248,18 +297,32 @@ impl KvPool {
         self.lanes.len()
     }
 
+    /// Free lanes.
     pub fn available(&self) -> usize {
         self.free.len()
     }
 
+    /// Lanes currently claimed by sequences.
     pub fn in_use(&self) -> usize {
         self.lanes.len() - self.free.len()
     }
 
     /// Claim a free lane (length reset to 0), or None under full load —
     /// the admission loop treats that as backpressure.
+    ///
+    /// Always claims the LOWEST-index free lane, so under steady traffic
+    /// the busy lanes pack toward the low end of the pool and the
+    /// tail-only shrink in [`Self::resize`] can actually reclaim the high
+    /// end — a LIFO free list would hand freshly-grown tail lanes out
+    /// first and starve every downscale.
     pub fn acquire(&mut self) -> Option<LaneId> {
-        let i = self.free.pop()?;
+        let pos = self
+            .free
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, &lane)| lane)
+            .map(|(pos, _)| pos)?;
+        let i = self.free.swap_remove(pos);
         self.lanes[i].len = 0;
         Some(LaneId(i))
     }
@@ -274,10 +337,12 @@ impl KvPool {
         }
     }
 
+    /// Borrow one lane's cache.
     pub fn lane(&self, lane: LaneId) -> &SharedKvCache {
         &self.lanes[lane.0]
     }
 
+    /// Mutably borrow one lane's cache.
     pub fn lane_mut(&mut self, lane: LaneId) -> &mut SharedKvCache {
         &mut self.lanes[lane.0]
     }
@@ -369,6 +434,57 @@ mod tests {
         let c = p.acquire().unwrap();
         assert_eq!(p.lane(c).len, 0, "reclaimed lane must be reset");
         assert_eq!(p.in_use(), 2);
+    }
+
+    #[test]
+    fn acquire_prefers_lowest_index_lane() {
+        let mut p = KvPool::new(1, 8, 1, 2, 1);
+        let a = p.acquire().unwrap();
+        assert_eq!(p.resize(4), 4);
+        p.release(a);
+        // free lanes {0, 1, 2, 3}: the lowest index wins, so the tail
+        // stays reclaimable under steady acquire/release churn
+        let b = p.acquire().unwrap();
+        assert_eq!(b, a, "re-acquire must pick the lowest free lane");
+        assert_eq!(p.resize(1), 1, "tail lanes stayed free and shrinkable");
+        assert_eq!(p.in_use(), 1);
+    }
+
+    #[test]
+    fn kv_pool_resize_grows_and_shrinks() {
+        let mut p = KvPool::new(1, 8, 1, 2, 2);
+        assert_eq!(p.resize(4), 4);
+        assert_eq!((p.capacity(), p.available()), (4, 4));
+        // new lanes are immediately acquirable
+        let ids: Vec<_> = (0..4).map(|_| p.acquire().unwrap()).collect();
+        assert_eq!(p.in_use(), 4);
+        for id in ids {
+            p.release(id);
+        }
+        assert_eq!(p.resize(1), 1);
+        assert_eq!((p.capacity(), p.available()), (1, 1));
+        // floor at one lane
+        assert_eq!(p.resize(0), 1);
+    }
+
+    #[test]
+    fn kv_pool_shrink_never_evicts_busy_lanes() {
+        let mut p = KvPool::new(1, 8, 1, 2, 4);
+        let a = p.acquire().unwrap(); // lane 0 (lowest index first)
+        let b = p.acquire().unwrap(); // lane 1
+        // lanes 2/3 are free tail lanes: the shrink reclaims them, then
+        // stops dead at busy lane 1 instead of evicting it
+        assert_eq!(p.resize(1), 2);
+        assert_eq!(p.in_use(), 2);
+        p.lane_mut(a).len = 3;
+        p.release(a);
+        // lane 0 is free but lane 1 (the tail) is still busy: no progress
+        assert_eq!(p.resize(1), 2);
+        p.release(b);
+        assert_eq!(p.resize(1), 1);
+        // the surviving lane is usable
+        let c = p.acquire().unwrap();
+        assert_eq!(p.lane(c).len, 0);
     }
 
     #[test]

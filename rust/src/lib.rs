@@ -24,7 +24,14 @@
 //!
 //! Start with [`engine::SpecDecoder`] or `examples/quickstart.rs`; for
 //! cross-request batching see [`engine::batched::generate_all`] or
-//! `ngrammys serve --batch N`.
+//! `ngrammys serve --batch N` (elastic by default: lane autoscaling +
+//! cost-model-derived row budgets + scored admission — see
+//! `rust/docs/ARCHITECTURE.md` for the full module map and data flow).
+
+// Every public item carries rustdoc; CI runs `cargo doc --no-deps` with
+// RUSTDOCFLAGS="-D warnings", so a missing doc or broken intra-doc link
+// fails the build rather than rotting silently.
+#![warn(missing_docs)]
 
 pub mod adaptive;
 pub mod bench;

@@ -34,11 +34,19 @@ COMMANDS:
       strategy 'adaptive' = online (k, w) + strategy selection (k/w as caps)
   serve                       HTTP server (POST /generate, GET /metrics)
       [--model base] [--addr 127.0.0.1:8077] [--workers 1]
-      [--batch N]             continuous batching: N pooled KV lanes, one
-                              packed verification call per step (N >= 2)
-      [--budget B]            packed-row budget: cap the per-step batch at
-                              sum k_i <= max(B, active), rows allotted by
-                              marginal expected acceptance (0 = off)
+      [--batch N]             continuous batching (N >= 2). Elastic by
+                              default: N is the CAP of a demand-driven
+                              lane range, the per-step row budget is
+                              derived from the cost model, and admissions
+                              are ordered by expected tokens-per-cost
+      [--budget B]            packed-row budget CAP over the derived
+                              value (0 = derived value used as-is; with
+                              --no-elastic: the fixed budget, 0 = off)
+      [--no-elastic]          pin --batch lanes + static --budget (the
+                              pre-elastic fixed-pool behavior)
+      [--min-lanes 1]         lower bound of the elastic lane range
+      [--scale-down-after 8]  idle decisions before shedding one lane
+      [--budget-slack 1.15]   slowdown tolerance of the derived budget
       [--strategy mixed]      default strategy for requests that name none
       [--cache-per-query 8] [--cache-chain 12] [--cache-cap 100000]
                               session n-gram cache bounds
@@ -55,6 +63,8 @@ COMMANDS:
                               [--model base] [--conc 1,2,4,8]
       adaptive                adaptive controller vs static strategies
                               [--model base] [--budget B] [--smoke]
+      elastic                 elastic autoscaling vs every static --batch
+                              [--model base] [--caps 2,4,8] [--smoke]
       all                     everything above
       common: [--prompts N] [--max-new N] [--ks 1,5,10] [--ws 2,6,10]
 ";
@@ -67,7 +77,8 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["compare", "help", "traces", "smoke"]).map_err(|e| anyhow!(e))?;
+    let args = Args::from_env(&["compare", "help", "traces", "smoke", "no-elastic"])
+        .map_err(|e| anyhow!(e))?;
     if args.has_flag("help") || args.positional.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -174,12 +185,27 @@ fn serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
     let model = args.get_or("model", "base");
     let default_strategy = StrategyName::parse(args.get_or("strategy", "mixed"))?;
     let cache_defaults = SessionCacheConfig::default();
+    let defaults = ServeConfig::default();
     let cfg = ServeConfig {
         addr: args.get_or("addr", "127.0.0.1:8077").to_string(),
         workers: args.get_usize("workers", 1).map_err(|e| anyhow!(e))?,
         queue_cap: args.get_usize("queue-cap", 256).map_err(|e| anyhow!(e))?,
         batch: args.get_usize("batch", 0).map_err(|e| anyhow!(e))?,
         budget: parse_budget(args)?,
+        elastic: !args.has_flag("no-elastic"),
+        autoscale: ngrammys::scheduler::AutoscaleConfig {
+            min_lanes: args
+                .get_usize("min-lanes", defaults.autoscale.min_lanes)
+                .map_err(|e| anyhow!(e))?,
+            // overridden by `batch` at scheduler start
+            max_lanes: defaults.autoscale.max_lanes,
+            down_after_steps: args
+                .get_usize("scale-down-after", defaults.autoscale.down_after_steps as usize)
+                .map_err(|e| anyhow!(e))? as u32,
+        },
+        budget_slack: args
+            .get_f64("budget-slack", defaults.budget_slack)
+            .map_err(|e| anyhow!(e))?,
         default_strategy,
         session_cache: SessionCacheConfig {
             per_query: args
@@ -246,6 +272,12 @@ fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
             let budget = parse_budget(args)?;
             bench::adaptive::run(&load()?, n_prompts, max_new, budget, args.has_flag("smoke"))
         }
+        "elastic" => {
+            let caps = args
+                .get_usize_list("caps", &bench::elastic::STATIC_CAPS)
+                .map_err(|e| anyhow!(e))?;
+            bench::elastic::run(&load()?, n_prompts, max_new, &caps, args.has_flag("smoke"))
+        }
         "table1" => {
             let models: Vec<String> = args
                 .get_or("models", "small,base,large")
@@ -265,6 +297,7 @@ fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
             bench::qsweep::run_hardware_ablation(&ctx, n_prompts, max_new)?;
             bench::batched::run(&ctx, n_prompts, max_new, &bench::batched::CONCURRENCIES)?;
             bench::adaptive::run(&ctx, n_prompts, max_new, None, false)?;
+            bench::elastic::run(&ctx, n_prompts, max_new, &bench::elastic::STATIC_CAPS, false)?;
             drop(ctx);
             for m in ["small", "base", "large"] {
                 let c = BenchCtx::load(manifest.clone(), m)?;

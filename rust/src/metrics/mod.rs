@@ -17,6 +17,7 @@ pub struct LatencyHist {
 }
 
 impl LatencyHist {
+    /// An empty histogram.
     pub fn new() -> Self {
         LatencyHist {
             buckets: (0..32).map(|_| AtomicU64::new(0)).collect(),
@@ -25,6 +26,7 @@ impl LatencyHist {
         }
     }
 
+    /// Record one latency observation.
     pub fn observe(&self, d: Duration) {
         let us = d.as_micros() as u64;
         let idx = (64 - us.max(1).leading_zeros() as usize).min(self.buckets.len() - 1);
@@ -33,10 +35,12 @@ impl LatencyHist {
         self.sum_us.fetch_add(us, Ordering::Relaxed);
     }
 
+    /// Total observations.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean latency in microseconds (0 when empty).
     pub fn mean_us(&self) -> f64 {
         let c = self.count();
         if c == 0 {
@@ -73,15 +77,40 @@ impl Default for LatencyHist {
 /// All serving-level metrics.
 #[derive(Debug, Default)]
 pub struct Metrics {
+    /// requests ever submitted (accepted + rejected)
     pub requests_total: AtomicU64,
+    /// requests rejected at the bounded queue (backpressure)
     pub requests_rejected: AtomicU64,
+    /// requests fully decoded and replied
     pub requests_completed: AtomicU64,
+    /// total tokens emitted across completed requests
     pub tokens_generated: AtomicU64,
+    /// total verification calls across completed requests
     pub verify_calls: AtomicU64,
+    /// total accepted draft tokens
     pub drafts_accepted: AtomicU64,
+    /// submit-to-reply latency histogram
     pub request_latency: LatencyHistDefault,
+    /// per-verification-call latency histogram
     pub step_latency: LatencyHistDefault,
+    /// requests admitted to the queue but not yet on a worker/lane
     pub queue_depth: AtomicU64,
+    /// current pooled-lane capacity of the batched engine (elastic mode
+    /// scales this between `--min-lanes` and the `--batch` cap)
+    pub lanes: AtomicU64,
+    /// lane target the autoscaler last decided; `lanes` sits ABOVE this
+    /// transiently while a shrink waits for busy lanes to retire (growth
+    /// is applied immediately, so `lanes` never lags a larger target)
+    pub lanes_target: AtomicU64,
+    /// packed-row budget the batched engine enforced on its latest step
+    /// (derived online from the cost model in elastic mode)
+    pub derived_budget: AtomicU64,
+    /// admissions that overtook an older queued request under the
+    /// expected-tokens-per-cost admission ordering
+    pub admission_reorders: AtomicU64,
+    /// requests that reached the engine but failed admission (no free
+    /// lane after all, or a prefill error)
+    pub admissions_failed: AtomicU64,
     /// per-`StrategyKind` step wins (indexed by `StrategyKind::index()`):
     /// which draft source actually won each verification call
     pub strategy_wins: [AtomicU64; StrategyKind::COUNT],
@@ -91,7 +120,8 @@ pub struct Metrics {
     pub recent: Mutex<Vec<String>>,
 }
 
-// work around Default for LatencyHist in struct derive
+/// Default-able newtype around [`LatencyHist`] so [`Metrics`] can derive
+/// `Default`; derefs to the inner histogram.
 #[derive(Debug, Default)]
 pub struct LatencyHistDefault(pub LatencyHist);
 
@@ -103,10 +133,12 @@ impl std::ops::Deref for LatencyHistDefault {
 }
 
 impl Metrics {
+    /// Fresh zeroed metrics.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one completed request's aggregates.
     pub fn record_request(&self, latency: Duration, tokens: usize, calls: usize, accepted: usize) {
         self.requests_completed.fetch_add(1, Ordering::Relaxed);
         self.tokens_generated.fetch_add(tokens as u64, Ordering::Relaxed);
@@ -135,6 +167,8 @@ impl Metrics {
         }
     }
 
+    /// Render every metric in the Prometheus-ish text format served at
+    /// GET /metrics (field names are pinned by the render tests below).
     pub fn render(&self) -> String {
         let mut s = String::new();
         let c = |n: &AtomicU64| n.load(Ordering::Relaxed);
@@ -145,6 +179,11 @@ impl Metrics {
         s.push_str(&format!("ngrammys_verify_calls {}\n", c(&self.verify_calls)));
         s.push_str(&format!("ngrammys_tokens_per_call {:.4}\n", self.tokens_per_call()));
         s.push_str(&format!("ngrammys_queue_depth {}\n", c(&self.queue_depth)));
+        s.push_str(&format!("ngrammys_lanes {}\n", c(&self.lanes)));
+        s.push_str(&format!("ngrammys_lanes_target {}\n", c(&self.lanes_target)));
+        s.push_str(&format!("ngrammys_derived_budget {}\n", c(&self.derived_budget)));
+        s.push_str(&format!("ngrammys_admission_reorders {}\n", c(&self.admission_reorders)));
+        s.push_str(&format!("ngrammys_admissions_failed {}\n", c(&self.admissions_failed)));
         s.push_str(&format!(
             "ngrammys_request_latency_ms_mean {:.3}\n",
             self.request_latency.mean_us() / 1e3
@@ -202,6 +241,64 @@ mod tests {
         assert!((m.tokens_per_call() - 2.0).abs() < 1e-9);
         let r = m.render();
         assert!(r.contains("ngrammys_tokens_per_call 2.0000"));
+    }
+
+    /// The `/metrics` contract: every field documented in the
+    /// rust/README.md reference table must appear in `render` output
+    /// under exactly this name. Renaming or adding a field means
+    /// updating the README table AND this list — the doc can no longer
+    /// drift silently.
+    #[test]
+    fn render_exports_every_documented_field() {
+        let m = Metrics::new();
+        let r = m.render();
+        const FIELDS: [&str; 16] = [
+            "ngrammys_requests_total",
+            "ngrammys_requests_rejected",
+            "ngrammys_requests_completed",
+            "ngrammys_tokens_generated",
+            "ngrammys_verify_calls",
+            "ngrammys_tokens_per_call",
+            "ngrammys_queue_depth",
+            "ngrammys_lanes",
+            "ngrammys_lanes_target",
+            "ngrammys_derived_budget",
+            "ngrammys_admission_reorders",
+            "ngrammys_admissions_failed",
+            "ngrammys_request_latency_ms_mean",
+            "ngrammys_request_latency_ms_p50",
+            "ngrammys_request_latency_ms_p99",
+            "ngrammys_step_latency_ms_mean",
+        ];
+        for f in FIELDS {
+            let line_start = format!("{f} ");
+            assert!(
+                r.starts_with(&line_start) || r.contains(&format!("\n{line_start}")),
+                "missing /metrics field '{f}' in:\n{r}"
+            );
+        }
+        for kind in StrategyKind::ALL {
+            for family in ["ngrammys_strategy_wins", "ngrammys_strategy_accepted_tokens"] {
+                let field = format!("{family}{{strategy=\"{}\"}} ", kind.label());
+                assert!(r.contains(&field), "missing {field}");
+            }
+        }
+    }
+
+    #[test]
+    fn elastic_gauges_render_stored_values() {
+        let m = Metrics::new();
+        m.lanes.store(3, Ordering::Relaxed);
+        m.lanes_target.store(5, Ordering::Relaxed);
+        m.derived_budget.store(17, Ordering::Relaxed);
+        m.admission_reorders.store(2, Ordering::Relaxed);
+        m.admissions_failed.store(1, Ordering::Relaxed);
+        let r = m.render();
+        assert!(r.contains("ngrammys_lanes 3\n"));
+        assert!(r.contains("ngrammys_lanes_target 5\n"));
+        assert!(r.contains("ngrammys_derived_budget 17\n"));
+        assert!(r.contains("ngrammys_admission_reorders 2\n"));
+        assert!(r.contains("ngrammys_admissions_failed 1\n"));
     }
 
     #[test]

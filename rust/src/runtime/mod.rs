@@ -37,10 +37,13 @@ use crate::tokenizer::TokenId;
 pub struct StepOutput {
     /// greedy next-token ids, row-major (k, w+1)
     pub next_ids: Vec<TokenId>,
+    /// rows in the verified block
     pub k: usize,
+    /// block width (w + 1)
     pub w1: usize,
     /// KV tails, (layers, k, w1, heads, head_dim) flattened
     pub k_tail: Vec<f32>,
+    /// value-cache tail, same shape as `k_tail`
     pub v_tail: Vec<f32>,
     /// wall time of the device call (execute + output fetch); for packed
     /// calls this is the whole packed call's latency — the time every
@@ -59,7 +62,9 @@ impl StepOutput {
 /// Output of a prefill call.
 #[derive(Debug)]
 pub struct PrefillOutput {
+    /// first greedy token after the prompt
     pub next_id: TokenId,
+    /// wall time of the prefill call
     pub exec_time: Duration,
 }
 
@@ -67,8 +72,11 @@ pub struct PrefillOutput {
 /// `k` draft rows of `w+1` tokens (row-major) against that sequence's own
 /// KV lane. All blocks in one packed call share the same `w`.
 pub struct PackedBlock<'a> {
+    /// draft rows in this block
     pub k: usize,
+    /// row-major (k, w+1) token block
     pub tokens: &'a [TokenId],
+    /// this sequence's own KV lane
     pub cache: &'a SharedKvCache,
 }
 
@@ -94,6 +102,7 @@ pub struct ModelRuntime {
 unsafe impl Send for ModelRuntime {}
 
 impl ModelRuntime {
+    /// Load `art` and pick an execution backend for it.
     pub fn load(art: &ModelArtifacts) -> Result<Self> {
         let backend = pick_backend(art)?;
         Ok(ModelRuntime {
@@ -103,6 +112,7 @@ impl ModelRuntime {
         })
     }
 
+    /// The loaded artifact set.
     pub fn artifacts(&self) -> &ModelArtifacts {
         &self.art
     }
@@ -133,6 +143,7 @@ impl ModelRuntime {
         r
     }
 
+    /// Ensure the prefill executable for `bucket` is compiled/validated.
     pub fn warm_prefill(&self, bucket: usize) -> Result<()> {
         let path = self
             .art

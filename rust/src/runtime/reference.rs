@@ -120,6 +120,7 @@ pub struct RefBackend {
 }
 
 impl RefBackend {
+    /// Validate `params.bin` against the manifest and derive the model seed.
     pub fn load(art: &ModelArtifacts) -> Result<Self> {
         let bytes = std::fs::read(&art.params_bin)
             .with_context(|| format!("reading params {:?}", art.params_bin))?;
@@ -139,6 +140,7 @@ impl RefBackend {
         })
     }
 
+    /// The parameter-derived model seed (tests predict outputs from it).
     pub fn seed(&self) -> u64 {
         self.seed
     }
@@ -162,6 +164,7 @@ impl RefBackend {
         Ok(())
     }
 
+    /// Validate a prefill artifact's header (see [`Self::warm_step`]).
     pub fn warm_prefill(&self, path: &Path, bucket: usize) -> Result<()> {
         if self.prefills_ok.borrow().contains(&bucket) {
             return Ok(());
@@ -179,6 +182,8 @@ impl RefBackend {
         Ok(())
     }
 
+    /// Reference prefill: fill `cache` deterministically from the prompt
+    /// and return the first greedy token.
     pub fn prefill(
         &self,
         art: &ModelArtifacts,
@@ -267,6 +272,7 @@ impl RefBackend {
         (next_ids, k_tail, v_tail)
     }
 
+    /// Reference verification call on one (k, w) block against `cache`.
     pub fn spec_step(
         &self,
         art: &ModelArtifacts,

@@ -1,0 +1,246 @@
+//! Cost-aware admission ordering for the elastic batched serving path.
+//!
+//! The plain scheduler admits FIFO: whichever request reached the queue
+//! first gets the next free KV lane, regardless of what it is expected to
+//! return for the verification rows it will consume. Under load that is
+//! the wrong order — the paper's economics say a verification row should
+//! go wherever it buys the most accepted tokens per unit of (simulated)
+//! call time, and the same logic extends one level up to whole requests:
+//! a cheap short-prompt speculative request that the fleet's history says
+//! accepts 2.5 tokens/call should not wait behind an expensive greedy
+//! long-prompt one that by construction returns 1.0.
+//!
+//! [`AdmissionQueue`] holds decoded-but-unadmitted requests and releases
+//! them highest [`request_score`] first (ties FIFO by arrival, so equal
+//! requests keep their order). Ordering never becomes starvation: the
+//! oldest waiting request can be overtaken at most
+//! [`AdmissionQueue::MAX_OVERTAKES`] times before it is admitted
+//! regardless of score, so every request's delay is bounded even under
+//! sustained higher-scoring load. Every pop that overtakes an older
+//! request increments a reorder counter, exported as
+//! `ngrammys_admission_reorders` so operators can see the policy
+//! actually doing something.
+//!
+//! Bounded-queue backpressure is unchanged: the scheduler's sync channel
+//! still rejects when full; this queue only re-orders what was accepted.
+
+use crate::config::EngineConfig;
+use crate::costmodel::CostModel;
+use crate::scheduler::StrategyName;
+
+/// Expected accepted-tokens-per-simulated-verify-second of admitting a
+/// request now — the admission priority.
+///
+/// Until any request has completed (`observed_tokens_per_call <= 0`)
+/// every request scores 0, so a COLD scheduler is exactly FIFO — with no
+/// acceptance evidence there is no basis to prefer one request over an
+/// earlier one. Warm, the numerator is a prior on tokens/call: exactly
+/// 1.0 for greedy requests (speculation off, so every call emits one
+/// token by construction) and the fleet-wide observed tokens/call
+/// (floored at 1.0, the greedy baseline) for speculative ones. The
+/// denominator is the cost model's time for one of this request's
+/// verification calls at its prompt's context length, so long contexts
+/// and deep/wide shapes pay their real (simulated) price.
+/// `max_new_tokens` cancels out of the ratio: a request that wants more
+/// tokens needs proportionally more calls at the same per-call rate.
+pub fn request_score(
+    cm: &CostModel,
+    observed_tokens_per_call: f64,
+    strategy: StrategyName,
+    engine: &EngineConfig,
+    prompt_len: usize,
+) -> f64 {
+    if observed_tokens_per_call <= 0.0 {
+        return 0.0; // cold start: uniform score = FIFO
+    }
+    let prior_tpc = if strategy == StrategyName::None || engine.w == 0 {
+        1.0
+    } else {
+        observed_tokens_per_call.max(1.0)
+    };
+    prior_tpc / cm.call_time(engine.k, engine.w + 1, prompt_len)
+}
+
+struct Entry<T> {
+    item: T,
+    /// FIFO arrival stamp (tie-break + reorder accounting)
+    seq: u64,
+    score: f64,
+    /// times a younger entry was popped past this one while it was the
+    /// oldest waiter (drives the anti-starvation bound)
+    overtaken: u64,
+}
+
+/// Score-ordered holding pen between the scheduler's bounded channel and
+/// the engine's lanes. Pops are deterministic: highest score wins, ties
+/// go to the earliest arrival.
+pub struct AdmissionQueue<T> {
+    entries: Vec<Entry<T>>,
+    next_seq: u64,
+    reorders: u64,
+}
+
+impl<T> Default for AdmissionQueue<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<T> AdmissionQueue<T> {
+    /// Times the oldest waiter may be overtaken before it is admitted
+    /// regardless of score — the progress guarantee the plain FIFO queue
+    /// had, retained at a bounded cost to the ordering policy.
+    pub const MAX_OVERTAKES: u64 = 8;
+
+    /// An empty queue.
+    pub fn new() -> Self {
+        AdmissionQueue { entries: Vec::new(), next_seq: 0, reorders: 0 }
+    }
+
+    /// Enqueue `item` with its admission `score`.
+    pub fn push(&mut self, item: T, score: f64) {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.entries.push(Entry { item, seq, score, overtaken: 0 });
+    }
+
+    /// Waiting requests.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether nothing is waiting.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Remove and return the best-scored entry (ties FIFO). Increments
+    /// the reorder count when the winner overtook an older arrival.
+    ///
+    /// Anti-starvation: once the oldest waiter has been overtaken
+    /// [`Self::MAX_OVERTAKES`] times, it is popped unconditionally.
+    /// Every pop either removes the oldest entry or bumps its overtake
+    /// count, so (inductively) every entry is admitted after a bounded
+    /// number of pops.
+    pub fn pop_best(&mut self) -> Option<T> {
+        let oldest = self
+            .entries
+            .iter()
+            .enumerate()
+            .min_by_key(|&(_, e)| e.seq)
+            .map(|(i, _)| i)?;
+        if self.entries[oldest].overtaken >= Self::MAX_OVERTAKES {
+            return Some(self.entries.swap_remove(oldest).item);
+        }
+        let best = self
+            .entries
+            .iter()
+            .enumerate()
+            .max_by(|(_, a), (_, b)| {
+                a.score
+                    .partial_cmp(&b.score)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(b.seq.cmp(&a.seq)) // lower seq wins score ties
+            })
+            .map(|(i, _)| i)?;
+        if best != oldest {
+            self.reorders += 1;
+            self.entries[oldest].overtaken += 1;
+        }
+        Some(self.entries.swap_remove(best).item)
+    }
+
+    /// Pops that overtook an older arrival so far.
+    pub fn reorders(&self) -> u64 {
+        self.reorders
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_by_score_then_fifo() {
+        let mut q = AdmissionQueue::new();
+        q.push("a", 1.0);
+        q.push("b", 3.0);
+        q.push("c", 3.0);
+        q.push("d", 2.0);
+        assert_eq!(q.len(), 4);
+        // b and c tie at 3.0: FIFO says b first
+        assert_eq!(q.pop_best(), Some("b"));
+        assert_eq!(q.pop_best(), Some("c"));
+        assert_eq!(q.pop_best(), Some("d"));
+        assert_eq!(q.pop_best(), Some("a"));
+        assert_eq!(q.pop_best(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn counts_reorders_only_when_overtaking() {
+        let mut q = AdmissionQueue::new();
+        q.push("a", 5.0);
+        q.push("b", 1.0);
+        q.push("c", 9.0);
+        assert_eq!(q.pop_best(), Some("c")); // overtook a and b
+        assert_eq!(q.reorders(), 1);
+        assert_eq!(q.pop_best(), Some("a")); // oldest: not a reorder
+        assert_eq!(q.pop_best(), Some("b"));
+        assert_eq!(q.reorders(), 1);
+    }
+
+    #[test]
+    fn oldest_entry_cannot_starve() {
+        let mut q = AdmissionQueue::new();
+        q.push(-1i64, 0.1); // low score, oldest
+        let mut pops = 0u64;
+        loop {
+            // sustained stream of strictly better-scoring arrivals
+            q.push(pops as i64, 10.0);
+            let got = q.pop_best().unwrap();
+            pops += 1;
+            if got == -1 {
+                break;
+            }
+            assert!(
+                pops <= AdmissionQueue::<i64>::MAX_OVERTAKES + 1,
+                "victim still waiting after {pops} pops"
+            );
+        }
+        assert_eq!(pops, AdmissionQueue::<i64>::MAX_OVERTAKES + 1);
+    }
+
+    #[test]
+    fn uniform_scores_are_pure_fifo() {
+        let mut q = AdmissionQueue::new();
+        for i in 0..5 {
+            q.push(i, 1.0);
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop_best(), Some(i));
+        }
+        assert_eq!(q.reorders(), 0);
+    }
+
+    #[test]
+    fn score_prefers_cheap_speculative_requests() {
+        let cm = CostModel::for_analog("mistral");
+        let spec = EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: 64 };
+        let greedy = EngineConfig { k: 1, w: 0, q: 1, max_new_tokens: 64 };
+        let observed = 2.5;
+        // an accepting speculative request beats greedy at the same prompt
+        let s_spec = request_score(&cm, observed, StrategyName::Mixed, &spec, 100);
+        let s_greedy = request_score(&cm, observed, StrategyName::None, &greedy, 100);
+        assert!(s_spec > s_greedy, "spec {s_spec} <= greedy {s_greedy}");
+        // longer prompts cost more, so they score lower at equal priors
+        let s_long = request_score(&cm, observed, StrategyName::Mixed, &spec, 4000);
+        assert!(s_long < s_spec);
+        // a cold scheduler scores everything 0 — pure FIFO until any
+        // request has completed
+        let cold_spec = request_score(&cm, 0.0, StrategyName::Mixed, &spec, 100);
+        let cold_greedy = request_score(&cm, 0.0, StrategyName::None, &greedy, 100);
+        assert_eq!(cold_spec, 0.0);
+        assert_eq!(cold_greedy, 0.0);
+    }
+}

@@ -1,0 +1,203 @@
+//! Demand-driven lane autoscaling for the elastic batched serving path.
+//!
+//! The fixed `--batch N` flag forced operators to pick one lane count for
+//! the whole process lifetime: too low and the queue backs up under
+//! bursts, too high and idle KV lanes pin memory (a lane is a full
+//! `(layers, max_len, heads, head_dim)` cache). The [`Autoscaler`] closes
+//! that loop: each engine iteration it converts the observed demand — the
+//! admission-queue depth, the active sequence count, and the adaptive
+//! controllers' mean heat ([`crate::adaptive::SeqController::heat`]) —
+//! into a target lane count, which the scheduler applies through
+//! [`crate::engine::BatchedEngine::set_capacity`]. `--batch` survives as
+//! the CAP on the scale range, not the pinned value.
+//!
+//! The policy is deliberately deterministic (no clocks, no RNG): scale-up
+//! is immediate (a queued request is latency the moment it waits),
+//! scale-down is hysteretic — one lane at a time, only after
+//! `down_after_steps` consecutive low-demand decisions — so a bursty
+//! arrival pattern cannot make the pool thrash. Determinism also keeps
+//! the elastic property tests (`rust/tests/elastic.rs`) and `bench
+//! elastic` reproducible.
+//!
+//! CORRECTNESS: scaling only changes how many sequences may ride a packed
+//! call; each sequence's stream is still exactly the base model's greedy
+//! continuation (the engine invariant), so any scaling trajectory —
+//! however bad — can only cost speed or memory, never output bytes.
+
+/// Tuning knobs for the [`Autoscaler`]. The defaults favor latency:
+/// scale to demand instantly, give lanes back slowly.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Lower bound of the lane range (also the boot capacity). At least 1.
+    pub min_lanes: usize,
+    /// Upper bound of the lane range (the old `--batch N` becomes this).
+    pub max_lanes: usize,
+    /// Consecutive low-demand decisions required before the pool gives up
+    /// ONE lane. Higher = stickier capacity under bursty arrivals.
+    pub down_after_steps: u32,
+}
+
+impl AutoscaleConfig {
+    /// Defaults for a given lane cap: start at one lane, shed a lane
+    /// after 8 consecutive idle decisions.
+    pub fn for_cap(max_lanes: usize) -> Self {
+        AutoscaleConfig { min_lanes: 1, max_lanes: max_lanes.max(1), down_after_steps: 8 }
+    }
+}
+
+/// One iteration's demand snapshot, as the scheduler sees it.
+#[derive(Debug, Clone, Copy)]
+pub struct Demand {
+    /// requests waiting in the admission queue (not yet on a lane)
+    pub queue_depth: usize,
+    /// sequences currently decoding
+    pub active: usize,
+    /// current lane-pool capacity
+    pub lanes: usize,
+    /// mean controller heat across active adaptive sequences
+    /// ([`crate::engine::BatchedEngine::mean_heat`]); `None` when the
+    /// population carries no controllers
+    pub mean_heat: Option<f64>,
+}
+
+/// The scale-decision state machine. Pure and deterministic: the target
+/// is a function of the demand snapshot plus the internal low-demand
+/// streak counter.
+#[derive(Debug)]
+pub struct Autoscaler {
+    cfg: AutoscaleConfig,
+    /// consecutive decisions where demand sat below current capacity
+    low_streak: u32,
+    /// scale events observed (up, down) — exported as gauges
+    ups: u64,
+    downs: u64,
+}
+
+impl Autoscaler {
+    /// A fresh autoscaler for `cfg` (no demand history).
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        Autoscaler { cfg, low_streak: 0, ups: 0, downs: 0 }
+    }
+
+    /// Decide the lane target for the next engine iteration.
+    ///
+    /// Demand is `active + ceil(queue / (1 + heat))`: every active
+    /// sequence needs its lane, and queued requests are discounted by the
+    /// observed heat because a lane that accepts `heat` extra tokens per
+    /// step retires sequences proportionally faster — cold traffic
+    /// (heat ~ 0) gets one lane per queued request, a population
+    /// accepting 3 tokens/step gets a quarter of that. Scale-up jumps
+    /// straight to the clamped demand; scale-down waits for
+    /// `down_after_steps` consecutive low-demand calls and then releases
+    /// a single lane, so capacity decays gently toward `min_lanes`.
+    pub fn target_lanes(&mut self, d: &Demand) -> usize {
+        let heat = d.mean_heat.unwrap_or(0.0).max(0.0);
+        let queue_lanes = (d.queue_depth as f64 / (1.0 + heat)).ceil() as usize;
+        let demand = (d.active + queue_lanes).clamp(self.cfg.min_lanes, self.cfg.max_lanes);
+        if demand >= d.lanes {
+            self.low_streak = 0;
+            if demand > d.lanes {
+                self.ups += 1;
+            }
+            demand
+        } else {
+            self.low_streak += 1;
+            if self.low_streak >= self.cfg.down_after_steps {
+                self.low_streak = 0;
+                self.downs += 1;
+                (d.lanes - 1).max(demand)
+            } else {
+                d.lanes
+            }
+        }
+    }
+
+    /// (scale-up events, scale-down events) decided so far.
+    pub fn events(&self) -> (u64, u64) {
+        (self.ups, self.downs)
+    }
+
+    /// The configured lane range.
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scaler(min: usize, max: usize, down_after: u32) -> Autoscaler {
+        Autoscaler::new(AutoscaleConfig {
+            min_lanes: min,
+            max_lanes: max,
+            down_after_steps: down_after,
+        })
+    }
+
+    fn demand(queue: usize, active: usize, lanes: usize, heat: Option<f64>) -> Demand {
+        Demand { queue_depth: queue, active, lanes, mean_heat: heat }
+    }
+
+    #[test]
+    fn scales_up_immediately_to_demand() {
+        let mut s = scaler(1, 8, 4);
+        assert_eq!(s.target_lanes(&demand(5, 1, 1, None)), 6);
+        assert_eq!(s.events(), (1, 0));
+    }
+
+    #[test]
+    fn cap_bounds_the_target() {
+        let mut s = scaler(1, 4, 4);
+        assert_eq!(s.target_lanes(&demand(100, 4, 4, None)), 4);
+        // at-cap demand is not a scale event
+        assert_eq!(s.events(), (0, 0));
+    }
+
+    #[test]
+    fn heat_discounts_queue_pressure() {
+        // 9 queued cold requests want 9 lanes; at heat 2 (three tokens
+        // emitted per step) they want ceil(9/3) = 3
+        let mut cold = scaler(1, 16, 4);
+        assert_eq!(cold.target_lanes(&demand(9, 0, 1, Some(0.0))), 9);
+        let mut hot = scaler(1, 16, 4);
+        assert_eq!(hot.target_lanes(&demand(9, 0, 1, Some(2.0))), 3);
+    }
+
+    #[test]
+    fn scale_down_is_hysteretic_and_single_step() {
+        let mut s = scaler(1, 8, 3);
+        // demand 2 against 6 lanes: two quiet decisions keep capacity,
+        // the third sheds exactly one lane
+        assert_eq!(s.target_lanes(&demand(0, 2, 6, None)), 6);
+        assert_eq!(s.target_lanes(&demand(0, 2, 6, None)), 6);
+        assert_eq!(s.target_lanes(&demand(0, 2, 6, None)), 5);
+        assert_eq!(s.events(), (0, 1));
+        // the streak resets after a shed: two more quiet ticks, then -1
+        assert_eq!(s.target_lanes(&demand(0, 2, 5, None)), 5);
+        assert_eq!(s.target_lanes(&demand(0, 2, 5, None)), 5);
+        assert_eq!(s.target_lanes(&demand(0, 2, 5, None)), 4);
+    }
+
+    #[test]
+    fn burst_resets_the_down_streak() {
+        let mut s = scaler(1, 8, 2);
+        assert_eq!(s.target_lanes(&demand(0, 1, 4, None)), 4);
+        // a burst arrives before the streak completes: jump up, streak 0
+        assert_eq!(s.target_lanes(&demand(6, 1, 4, None)), 7);
+        assert_eq!(s.target_lanes(&demand(0, 1, 7, None)), 7);
+        assert_eq!(s.target_lanes(&demand(0, 1, 7, None)), 6);
+    }
+
+    #[test]
+    fn never_goes_below_min_or_demand() {
+        let mut s = scaler(2, 8, 1);
+        // down_after 1: every low call sheds a lane, but never below
+        // max(min_lanes, demand)
+        assert_eq!(s.target_lanes(&demand(0, 3, 5, None)), 4);
+        assert_eq!(s.target_lanes(&demand(0, 3, 4, None)), 3);
+        assert_eq!(s.target_lanes(&demand(0, 3, 3, None)), 3);
+        assert_eq!(s.target_lanes(&demand(0, 0, 3, None)), 2);
+        assert_eq!(s.target_lanes(&demand(0, 0, 2, None)), 2);
+    }
+}

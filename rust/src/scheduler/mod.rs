@@ -1,4 +1,4 @@
-//! Request scheduler: bounded FIFO admission queue + decode workers.
+//! Request scheduler: bounded admission queue + decode workers.
 //!
 //! Two execution modes, selected by `ServeConfig::batch`:
 //!
@@ -7,13 +7,25 @@
 //!   with `SpecDecoder` — the model-call batch dimension is spent entirely
 //!   on that request's speculation rows.
 //! - **Batched engine** (`batch >= 2`): one engine thread drives a
-//!   continuous-batching [`BatchedEngine`] with `batch` pooled KV lanes.
-//!   Requests are admitted as lanes free up, every active sequence's draft
-//!   rows are verified in one packed call per step, and responses complete
-//!   out of order — the batch dimension is spent on requests AND rows.
+//!   continuous-batching [`BatchedEngine`]. Requests are admitted as lanes
+//!   free up, every active sequence's draft rows are verified in one
+//!   packed call per step, and responses complete out of order — the batch
+//!   dimension is spent on requests AND rows. By default the engine is
+//!   **elastic** (`ServeConfig::elastic`): the lane pool scales between
+//!   `autoscale.min_lanes` and `batch` from observed demand
+//!   ([`autoscale::Autoscaler`]), the per-step row budget is derived
+//!   online from the cost model (`--budget` caps it), and admissions are
+//!   ordered by expected accepted-tokens-per-cost
+//!   ([`admission::AdmissionQueue`]) rather than FIFO.
 //!
 //! Both modes share the same bounded-queue backpressure: `submit` fails
-//! fast when the queue is full.
+//! fast — counting and logging the rejection — when the queue is full.
+
+pub mod admission;
+pub mod autoscale;
+
+pub use admission::{request_score, AdmissionQueue};
+pub use autoscale::{AutoscaleConfig, Autoscaler, Demand};
 
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
@@ -26,11 +38,12 @@ use anyhow::{anyhow, Result};
 
 use crate::adaptive::{self, SeqController};
 use crate::config::{EngineConfig, Manifest, ServeConfig, SessionCacheConfig};
+use crate::costmodel::CostModel;
 use crate::draft::{
     ContextNgram, DraftStrategy, ExtendedBigram, JacobiDraft, MixedStrategy, ModelBigram,
     ModelUnigram, NgramTables, SessionNgramCache, StrategyKind,
 };
-use crate::engine::{BatchedEngine, GenResult, NoDraft, SeqId, SpecDecoder};
+use crate::engine::{AutoBudget, BatchedEngine, GenResult, NoDraft, SeqId, SpecDecoder};
 use crate::metrics::Metrics;
 use crate::runtime::ModelRuntime;
 use crate::tokenizer::TokenId;
@@ -38,16 +51,23 @@ use crate::tokenizer::TokenId;
 /// Strategy selector exposed through the API / CLI.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum StrategyName {
+    /// the paper's SS4.3 mixed policy (context n-gram + extended bigram)
     Mixed,
+    /// context n-gram (SS4.2)
     Context,
+    /// model bigram top-k (SS4.1)
     Bigram,
+    /// model unigram (App. B.1)
     Unigram,
+    /// extended bigram chains (SS4.1)
     ExtBigram,
+    /// Jacobi decoding baseline
     Jacobi,
     /// online session n-gram cache (extension beyond the paper)
     Session,
     /// online (k, w) + strategy selection (`crate::adaptive`)
     Adaptive,
+    /// no drafting (plain greedy decoding)
     None,
 }
 
@@ -67,6 +87,7 @@ impl StrategyName {
         Self::None,
     ];
 
+    /// Parse a CLI/API strategy name (long-form aliases accepted).
     pub fn parse(s: &str) -> Result<Self> {
         // long-form aliases kept for back-compat with existing clients
         let canon = match s {
@@ -88,6 +109,7 @@ impl StrategyName {
             })
     }
 
+    /// Canonical short name (the CLI/API spelling).
     pub fn label(&self) -> &'static str {
         match self {
             Self::Mixed => "mixed",
@@ -157,17 +179,24 @@ fn controller_for_request(
 /// One generation request.
 #[derive(Debug, Clone)]
 pub struct GenRequest {
+    /// tokenized prompt
     pub prompt: Vec<TokenId>,
+    /// per-request engine settings
     pub engine: EngineConfig,
+    /// draft strategy for this request
     pub strategy: StrategyName,
 }
 
 /// Completed response.
 #[derive(Debug)]
 pub struct GenResponse {
+    /// emitted tokens (the first comes from prefill)
     pub tokens: Vec<TokenId>,
+    /// the paper's acceptance metric for this request
     pub tokens_per_call: f64,
+    /// verification calls spent
     pub calls: usize,
+    /// submit-to-reply latency in milliseconds
     pub latency_ms: f64,
 }
 
@@ -179,14 +208,17 @@ struct Job {
 /// The scheduler handle: cheap to clone, submits jobs to the pool.
 pub struct Scheduler {
     tx: SyncSender<Job>,
+    /// shared serving metrics (rendered at GET /metrics)
     pub metrics: Arc<Metrics>,
     workers: Vec<JoinHandle<()>>,
 }
 
 impl Scheduler {
     /// Spin up workers for `model`: `cfg.workers` per-sequence workers, or
-    /// (when `cfg.batch >= 2`) one batched engine thread with `cfg.batch`
-    /// KV lanes. Each thread loads its own ModelRuntime.
+    /// (when `cfg.batch >= 2`) one batched engine thread — with `cfg.batch`
+    /// pooled KV lanes when `cfg.elastic` is off, or a demand-autoscaled
+    /// lane pool capped at `cfg.batch` when it is on (the default). Each
+    /// thread loads its own ModelRuntime.
     pub fn start(manifest: &Manifest, model: &str, cfg: &ServeConfig) -> Result<Scheduler> {
         let art = manifest.model(model)?.clone();
         let tables = Arc::new(NgramTables::load(&art)?);
@@ -241,7 +273,10 @@ impl Scheduler {
         Ok(Scheduler { tx, metrics, workers })
     }
 
-    /// Non-blocking admission; `Err` = queue full (backpressure).
+    /// Non-blocking admission; `Err` = queue full (backpressure). A
+    /// rejection is never silent: it bumps `requests_rejected` (rendered
+    /// at `/metrics`) and logs the drop with the queue size so overload
+    /// is visible on both the dashboard and the console.
     pub fn submit(&self, req: GenRequest) -> Result<Receiver<Result<GenResponse>>> {
         self.metrics.requests_total.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
@@ -251,7 +286,8 @@ impl Scheduler {
                 Ok(reply_rx)
             }
             Err(TrySendError::Full(_)) => {
-                self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed);
+                let n = self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed) + 1;
+                eprintln!("scheduler: queue full, rejecting request ({n} rejected total)");
                 Err(anyhow!("queue full"))
             }
             Err(TrySendError::Disconnected(_)) => Err(anyhow!("scheduler stopped")),
@@ -321,39 +357,143 @@ fn worker_loop(
     }
 }
 
+/// A fresh batched engine for the worker loop: traces on (they feed the
+/// step-latency histogram) and, in elastic mode, the online-derived row
+/// budget installed with the operator `--budget` demoted to a cap.
+fn fresh_engine<'rt>(
+    runtime: &'rt ModelRuntime,
+    lanes: usize,
+    scfg: &ServeConfig,
+    analog: &str,
+) -> BatchedEngine<'rt> {
+    let mut eng = BatchedEngine::with_budget(runtime, lanes, scfg.budget);
+    eng.collect_traces = true;
+    if scfg.elastic {
+        eng.auto_budget = Some(AutoBudget {
+            cm: CostModel::for_analog(analog),
+            slack: scfg.budget_slack,
+        });
+    }
+    eng
+}
+
+/// Score an arriving job and move it into the admission holding pen.
+/// With elastic off, every job gets the same score, and the queue's
+/// FIFO tie-break makes admission exactly the pre-elastic arrival order.
+fn enqueue_job(
+    adq: &mut AdmissionQueue<Job>,
+    job: Job,
+    cm: &CostModel,
+    metrics: &Metrics,
+    elastic: bool,
+) {
+    let score = if elastic {
+        request_score(
+            cm,
+            metrics.tokens_per_call(),
+            job.req.strategy,
+            &job.req.engine,
+            job.req.prompt.len(),
+        )
+    } else {
+        0.0
+    };
+    adq.push(job, score);
+}
+
 /// The continuous-batching worker: one engine, many in-flight requests.
 /// Blocks on the queue only when idle; while sequences are active it
 /// drains the queue opportunistically between steps so arrivals join the
 /// running batch without waiting for it to finish.
+///
+/// Elastic mode (`scfg.elastic`, the default) closes three loops per
+/// iteration that the static mode leaves to the operator:
+///
+/// 1. **lanes** — the [`Autoscaler`] turns (queue depth, active count,
+///    mean controller heat) into a lane target between
+///    `autoscale.min_lanes` and `lane_cap`, applied via
+///    `BatchedEngine::set_capacity` (shrinks reclaim only free lanes);
+/// 2. **budget** — the engine re-derives its packed-row budget each step
+///    from `CostModel::memory_bound_rows` at the current context lengths
+///    (`--budget` caps it);
+/// 3. **admission order** — lanes go to the highest
+///    [`request_score`] first instead of FIFO.
+///
+/// None of this touches output bytes: every stream stays the base
+/// model's greedy continuation (asserted in `rust/tests/elastic.rs`).
 fn batched_worker_loop(
     runtime: &ModelRuntime,
-    lanes: usize,
+    lane_cap: usize,
     tables: Arc<NgramTables>,
     metrics: Arc<Metrics>,
     rx: Arc<Mutex<Receiver<Job>>>,
     scfg: &ServeConfig,
 ) {
-    let mut eng = BatchedEngine::with_budget(runtime, lanes, scfg.budget);
-    eng.collect_traces = true;
+    let analog = runtime.artifacts().dims.analog.clone();
+    let cm = CostModel::for_analog(&analog);
+    let mut au_cfg = scfg.autoscale.clone();
+    au_cfg.max_lanes = lane_cap;
+    au_cfg.min_lanes = au_cfg.min_lanes.clamp(1, lane_cap);
+    let boot_lanes = if scfg.elastic { au_cfg.min_lanes } else { lane_cap };
+    let mut scaler = Autoscaler::new(au_cfg);
+
+    let mut eng = fresh_engine(runtime, boot_lanes, scfg, &analog);
+    let mut adq: AdmissionQueue<Job> = AdmissionQueue::new();
     let mut inflight: HashMap<SeqId, (Sender<Result<GenResponse>>, Instant)> = HashMap::new();
     loop {
-        if eng.active() == 0 {
-            let job = match rx.lock().unwrap().recv() {
-                Ok(j) => j,
+        // block for work only when fully idle
+        if eng.active() == 0 && adq.is_empty() {
+            if scfg.elastic {
+                // Fully idle: give the lane memory back NOW. The loop is
+                // about to block, so the hysteretic scale-down path below
+                // would never tick; with every lane free the shrink to
+                // min_lanes succeeds in one call.
+                let min = scaler.config().min_lanes;
+                let lanes = eng.set_capacity(min);
+                metrics.lanes_target.store(min as u64, Ordering::Relaxed);
+                metrics.lanes.store(lanes as u64, Ordering::Relaxed);
+            }
+            match rx.lock().unwrap().recv() {
+                Ok(job) => enqueue_job(&mut adq, job, &cm, &metrics, scfg.elastic),
                 Err(_) => return, // scheduler dropped, everything drained
-            };
-            admit_job(&mut eng, job, &tables, &metrics, &mut inflight, scfg, runtime);
+            }
         }
-        while eng.has_capacity() {
+        // drain arrivals into the scored holding pen
+        loop {
             match rx.lock().unwrap().try_recv() {
-                Ok(job) => {
-                    admit_job(&mut eng, job, &tables, &metrics, &mut inflight, scfg, runtime)
-                }
+                Ok(job) => enqueue_job(&mut adq, job, &cm, &metrics, scfg.elastic),
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
             }
         }
+        // scale lanes to demand
+        if scfg.elastic {
+            let target = scaler.target_lanes(&Demand {
+                queue_depth: adq.len(),
+                active: eng.active(),
+                lanes: eng.capacity(),
+                mean_heat: eng.mean_heat(),
+            });
+            let achieved = eng.set_capacity(target);
+            metrics.lanes_target.store(target as u64, Ordering::Relaxed);
+            metrics.lanes.store(achieved as u64, Ordering::Relaxed);
+        } else {
+            metrics.lanes_target.store(lane_cap as u64, Ordering::Relaxed);
+            metrics.lanes.store(eng.capacity() as u64, Ordering::Relaxed);
+        }
+        // admit best-scored first while lanes are free
+        while eng.has_capacity() {
+            let Some(job) = adq.pop_best() else { break };
+            admit_job(&mut eng, job, &tables, &metrics, &mut inflight, scfg, runtime);
+        }
+        metrics.admission_reorders.store(adq.reorders(), Ordering::Relaxed);
+        if eng.active() == 0 {
+            continue; // every pending admission failed; wait for work
+        }
         match eng.step() {
             Ok(done) => {
+                if let Some(b) = eng.last_step_budget() {
+                    metrics.derived_budget.store(b as u64, Ordering::Relaxed);
+                }
                 for (id, r) in done {
                     if let Some((reply, t)) = inflight.remove(&id) {
                         let _ = reply.send(Ok(finish_response(&metrics, t, r)));
@@ -362,13 +502,14 @@ fn batched_worker_loop(
             }
             Err(e) => {
                 // A step error poisons the whole batch (shared call): fail
-                // every in-flight request and restart with a fresh engine.
+                // every in-flight request and restart with a fresh engine
+                // at the capacity the autoscaler had reached.
                 eprintln!("batch engine: step failed: {e:#}");
                 for (_, (reply, _)) in inflight.drain() {
                     let _ = reply.send(Err(anyhow!("batched engine step failed: {e:#}")));
                 }
-                eng = BatchedEngine::with_budget(runtime, lanes, scfg.budget);
-                eng.collect_traces = true;
+                let lanes = eng.capacity();
+                eng = fresh_engine(runtime, lanes, scfg, &analog);
             }
         }
     }
@@ -398,6 +539,10 @@ fn admit_job(
             inflight.insert(id, (job.reply, t));
         }
         Err(e) => {
+            // count + log: an admission that dies here (no lane after all,
+            // prefill failure) must not vanish into the reply channel only
+            metrics.admissions_failed.fetch_add(1, Ordering::Relaxed);
+            eprintln!("batch engine: admission failed: {e:#}");
             let _ = job.reply.send(Err(e));
         }
     }

@@ -34,9 +34,14 @@ use crate::scheduler::{GenRequest, Scheduler, StrategyName};
 use crate::tokenizer::BpeTokenizer;
 use crate::util::json::Json;
 
+/// HTTP front-end: the scheduler handle, tokenizer and settings one
+/// accept loop serves.
 pub struct Server {
+    /// request scheduler handle
     pub scheduler: Arc<Scheduler>,
+    /// shared tokenizer
     pub tokenizer: Arc<BpeTokenizer>,
+    /// serving settings (defaults for /generate)
     pub cfg: ServeConfig,
 }
 
@@ -146,10 +151,14 @@ impl Server {
     }
 }
 
+/// One parsed HTTP request.
 #[derive(Debug)]
 pub struct HttpRequest {
+    /// request method (GET, POST, ...)
     pub method: String,
+    /// request path
     pub path: String,
+    /// request body (empty when no Content-Length)
     pub body: String,
 }
 
@@ -162,7 +171,9 @@ const MAX_HEADERS: usize = 100;
 /// A request-parse failure with the HTTP status it should be reported as.
 #[derive(Debug)]
 pub struct HttpError {
+    /// HTTP status line to report (e.g. "400 Bad Request")
     pub status: &'static str,
+    /// human-readable error detail (returned as JSON)
     pub msg: String,
 }
 
@@ -193,6 +204,8 @@ fn read_line_capped<R: BufRead>(
     Ok(String::from_utf8_lossy(&buf).into_owned())
 }
 
+/// Parse one HTTP/1.1 request from `stream`, enforcing the header and
+/// body caps; violations carry the 4xx status they should produce.
 pub fn parse_request(stream: &mut TcpStream) -> std::result::Result<HttpRequest, HttpError> {
     let bad = |msg: String| HttpError::new("400 Bad Request", msg);
     let mut reader = BufReader::new(stream);
@@ -268,10 +281,12 @@ pub fn parse_request(stream: &mut TcpStream) -> std::result::Result<HttpRequest,
 pub mod client {
     use super::*;
 
+    /// POST `body` to `path`; returns (status, response body).
     pub fn post(addr: &str, path: &str, body: &str) -> Result<(u16, String)> {
         request(addr, "POST", path, body)
     }
 
+    /// GET `path`; returns (status, response body).
     pub fn get(addr: &str, path: &str) -> Result<(u16, String)> {
         request(addr, "GET", path, "")
     }

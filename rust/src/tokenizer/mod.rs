@@ -13,17 +13,21 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::Json;
 
+/// Token identifier: index into the byte-BPE vocabulary.
 pub type TokenId = u32;
 
+/// Byte-level BPE tokenizer loaded from the shared tokenizer.json.
 #[derive(Debug)]
 pub struct BpeTokenizer {
     merges: Vec<(u32, u32)>,
     ranks: HashMap<(u32, u32), u32>,
     expansions: Vec<Vec<u8>>,
+    /// 256 byte tokens plus one per merge
     pub vocab_size: usize,
 }
 
 impl BpeTokenizer {
+    /// Parse the tokenizer.json artifact text.
     pub fn from_json_text(text: &str) -> Result<Self> {
         let j = Json::parse(text).map_err(|e| anyhow!("tokenizer.json: {e}"))?;
         if j.req("type")?.as_str() != Some("byte_bpe") {
@@ -52,6 +56,7 @@ impl BpeTokenizer {
         Ok(Self::from_merges(merges))
     }
 
+    /// Build directly from a merge list (tests and fixtures).
     pub fn from_merges(merges: Vec<(u32, u32)>) -> Self {
         let ranks = merges
             .iter()
@@ -72,12 +77,14 @@ impl BpeTokenizer {
         }
     }
 
+    /// Read and parse tokenizer.json from disk.
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading tokenizer {path:?}"))?;
         Self::from_json_text(&text)
     }
 
+    /// Number of learned merges.
     pub fn n_merges(&self) -> usize {
         self.merges.len()
     }
@@ -104,6 +111,7 @@ impl BpeTokenizer {
         out.extend(ids);
     }
 
+    /// Tokenize text: piece-split, then greedy lowest-rank merges.
     pub fn encode(&self, text: &str) -> Vec<TokenId> {
         let mut out = Vec::with_capacity(text.len() / 3 + 4);
         for piece in split_pieces(text.as_bytes()) {
@@ -112,6 +120,7 @@ impl BpeTokenizer {
         out
     }
 
+    /// Byte-expand ids back to (lossily UTF-8) text.
     pub fn decode(&self, ids: &[TokenId]) -> String {
         let mut bytes = Vec::new();
         for &id in ids {

@@ -7,21 +7,30 @@ use std::time::{Duration, Instant};
 
 use super::stats;
 
+/// Opaque identity to defeat constant folding in benches.
 pub fn black_box<T>(x: T) -> T {
     hint::black_box(x)
 }
 
+/// Summary statistics of one micro-benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// benchmark label
     pub name: String,
+    /// timed iterations
     pub iters: u64,
+    /// mean ns per iteration
     pub mean_ns: f64,
+    /// sample std dev, ns
     pub std_ns: f64,
+    /// median ns per iteration
     pub median_ns: f64,
+    /// fastest iteration, ns
     pub min_ns: f64,
 }
 
 impl BenchResult {
+    /// One-line human-readable summary.
     pub fn report(&self) -> String {
         format!(
             "{:<44} {:>12}  ± {:>10}  (median {:>12}, min {:>12}, n={})",
@@ -35,6 +44,7 @@ impl BenchResult {
     }
 }
 
+/// Format nanoseconds with an adaptive unit.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {
         format!("{ns:.1} ns")
@@ -47,10 +57,15 @@ pub fn fmt_ns(ns: f64) -> String {
     }
 }
 
+/// Micro-benchmark runner: warmup, then timed iterations.
 pub struct Bencher {
+    /// warmup duration before timing starts
     pub warmup: Duration,
+    /// target total timed duration
     pub target: Duration,
+    /// hard iteration cap
     pub max_iters: u64,
+    /// accumulated results, in run order
     pub results: Vec<BenchResult>,
 }
 
@@ -66,6 +81,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Short-run configuration for smoke benches.
     pub fn quick() -> Self {
         Bencher {
             warmup: Duration::from_millis(50),

@@ -5,10 +5,14 @@
 
 use std::collections::HashMap;
 
+/// Parsed command line: positionals, `--key value` options, `--flag`s.
 #[derive(Debug, Default, Clone)]
 pub struct Args {
+    /// positional arguments, in order
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options
     pub options: HashMap<String, String>,
+    /// bare `--flag`s that take no value
     pub flags: Vec<String>,
 }
 
@@ -40,23 +44,28 @@ impl Args {
         Ok(a)
     }
 
+    /// [`Self::parse`] over the process arguments.
     pub fn from_env(flag_names: &[&str]) -> Result<Args, String> {
         let argv: Vec<String> = std::env::args().skip(1).collect();
         Args::parse(&argv, flag_names)
     }
 
+    /// Whether `--name` was passed as a flag.
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Option value for `--name`, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Option value with a default.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// Integer option with a default; `Err` on unparsable input.
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
         match self.get(name) {
             None => Ok(default),
@@ -66,6 +75,7 @@ impl Args {
         }
     }
 
+    /// Float option with a default; `Err` on unparsable input.
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
         match self.get(name) {
             None => Ok(default),

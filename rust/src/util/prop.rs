@@ -25,6 +25,7 @@ pub fn check<F: FnMut(&mut Rng) -> bool>(cases: u64, mut prop: F) {
 
 const N_GRAMMYS_SEED: u64 = 0x6772616d6d7973; // "grammys"
 
+/// [`check`] with an explicit base seed, for replaying a failing run.
 pub fn check_seeded<F: FnMut(&mut Rng) -> bool>(base_seed: u64, cases: u64, prop: &mut F) {
     for case in 0..cases {
         let seed = base_seed ^ (case.wrapping_mul(0x9E3779B97F4A7C15));

@@ -2,12 +2,14 @@
 //! a xoshiro256** core. Used by workload generation, property tests and the
 //! bench harness; every consumer takes an explicit seed so runs reproduce.
 
+/// xoshiro256** generator seeded via SplitMix64.
 #[derive(Debug, Clone)]
 pub struct Rng {
     s: [u64; 4],
 }
 
 impl Rng {
+    /// A seeded generator (same seed, same stream).
     pub fn new(seed: u64) -> Self {
         // SplitMix64 expansion of the seed into the xoshiro state
         let mut x = seed;
@@ -21,6 +23,7 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
+    /// Next raw 64-bit output.
     pub fn next_u64(&mut self) -> u64 {
         let r = self.s[1]
             .wrapping_mul(5)
@@ -55,14 +58,17 @@ impl Rng {
         lo + self.below(hi - lo + 1)
     }
 
+    /// Uniform f64 in [0, 1).
     pub fn f64(&mut self) -> f64 {
         (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
     }
 
+    /// Uniform choice from a non-empty slice.
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.below(xs.len())]
     }
 
+    /// In-place Fisher-Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
             xs.swap(i, self.below(i + 1));

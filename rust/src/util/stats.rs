@@ -35,6 +35,7 @@ pub fn percentile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Median (the 50th percentile).
 pub fn median(xs: &[f64]) -> f64 {
     percentile(xs, 50.0)
 }
@@ -42,16 +43,21 @@ pub fn median(xs: &[f64]) -> f64 {
 /// Simple fixed-bucket histogram for integer observations.
 #[derive(Debug, Clone)]
 pub struct Histogram {
+    /// per-bucket counts (last bucket catches overflow)
     pub buckets: Vec<u64>,
+    /// total observations
     pub count: u64,
+    /// sum of observed values
     pub sum: f64,
 }
 
 impl Histogram {
+    /// An empty histogram with `n_buckets` buckets.
     pub fn new(n_buckets: usize) -> Self {
         Histogram { buckets: vec![0; n_buckets], count: 0, sum: 0.0 }
     }
 
+    /// Record `v`, clamped into the last bucket.
     pub fn record(&mut self, v: usize) {
         let idx = v.min(self.buckets.len() - 1);
         self.buckets[idx] += 1;
@@ -59,6 +65,7 @@ impl Histogram {
         self.sum += v as f64;
     }
 
+    /// Mean observed value (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -75,6 +82,7 @@ impl Histogram {
         self.buckets.iter().map(|&b| b as f64 / self.count as f64).collect()
     }
 
+    /// Add another histogram's counts (shapes must match).
     pub fn merge(&mut self, other: &Histogram) {
         assert_eq!(self.buckets.len(), other.buckets.len());
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {

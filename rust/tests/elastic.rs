@@ -1,0 +1,215 @@
+//! Elastic-serving invariants: lane autoscaling (grow AND shrink, mid
+//! flight), the online-derived row budget, and cost-aware admission
+//! ordering must never change a single output byte — every stream stays
+//! exactly the per-sequence greedy continuation of its prompt — while
+//! the derived budget bound holds step by step.
+
+use std::collections::HashMap;
+
+use ngrammys::adaptive;
+use ngrammys::bench::BenchCtx;
+use ngrammys::config::{EngineConfig, ServeConfig, SessionCacheConfig};
+use ngrammys::costmodel::CostModel;
+use ngrammys::engine::{greedy_config, AutoBudget, BatchedEngine, NoDraft, SeqId, SpecDecoder};
+use ngrammys::scheduler::{make_strategy, GenRequest, Scheduler, StrategyName};
+use ngrammys::util::rng::Rng;
+
+fn ctx(model: &str) -> BenchCtx {
+    BenchCtx::load(ngrammys::testkit::manifest(), model).unwrap()
+}
+
+fn prompts(c: &BenchCtx) -> Vec<Vec<u32>> {
+    [
+        "Question: Tom has 4 apples. Tom buys 2 more.",
+        "def scale(x, y):\n    result",
+        "User: What is the capital of France?",
+        "Answer: Mia has 5 coins.",
+        "def blend(value, count):",
+        "User: Tell me about ancient rivers.",
+        "Question: Sam has 7 cards.",
+        "Assistant: That is a good question.",
+    ]
+    .iter()
+    .map(|p| c.tokenizer.encode(p))
+    .collect()
+}
+
+fn greedy_stream(c: &BenchCtx, prompt: &[u32], max_new: usize) -> Vec<u32> {
+    let mut dec = SpecDecoder::new(&c.runtime, Box::new(NoDraft), greedy_config(max_new));
+    dec.generate(prompt).unwrap().tokens
+}
+
+fn auto_budget(c: &BenchCtx) -> AutoBudget {
+    AutoBudget::new(CostModel::for_analog(&c.runtime.artifacts().dims.analog))
+}
+
+/// Random scale-up/scale-down trajectories at lane caps 1/4/8, with the
+/// derived budget on and a mixed adaptive/static population: streams are
+/// byte-identical to greedy, every step's packed rows respect that
+/// step's derived budget, and a shrink never evicts a busy lane.
+#[test]
+fn autoscaling_is_lossless_and_budget_bounded() {
+    let c = ctx("small");
+    let max_new = 20;
+    let ps = prompts(&c);
+    let want: Vec<Vec<u32>> = ps.iter().map(|p| greedy_stream(&c, p, max_new)).collect();
+    let cfg = EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: max_new };
+    let cache = SessionCacheConfig::default();
+    let analog = c.runtime.artifacts().dims.analog.clone();
+
+    for cap in [1usize, 4, 8] {
+        let mut rng = Rng::new(0xE1A5 + cap as u64);
+        let mut eng = BatchedEngine::new(&c.runtime, 1);
+        eng.collect_traces = true;
+        eng.auto_budget = Some(auto_budget(&c));
+        let mut by_id: HashMap<SeqId, usize> = HashMap::new();
+        let mut results: Vec<Option<Vec<u32>>> = vec![None; ps.len()];
+        let mut next = 0usize;
+        let mut done = 0usize;
+        while done < ps.len() {
+            // adversarial autoscaler: a random target every iteration
+            let target = 1 + rng.below(cap);
+            let achieved = eng.set_capacity(target);
+            assert!(achieved >= eng.lanes_in_use(), "shrink evicted a busy lane");
+            assert!(achieved <= cap, "capacity {achieved} above cap {cap}");
+            while eng.has_capacity() && next < ps.len() {
+                let id = if next % 2 == 0 {
+                    let ctrl = adaptive::controller_for(&c.tables, 1, &cache, &analog);
+                    eng.admit_with(
+                        &ps[next],
+                        make_strategy(StrategyName::Mixed, &c.tables, 1),
+                        Some(ctrl),
+                        cfg.clone(),
+                    )
+                    .unwrap()
+                } else {
+                    eng.admit(
+                        &ps[next],
+                        make_strategy(StrategyName::Mixed, &c.tables, 1),
+                        cfg.clone(),
+                    )
+                    .unwrap()
+                };
+                by_id.insert(id, next);
+                next += 1;
+            }
+            let active_before = eng.active();
+            let trace_mark = eng.packed_traces.len();
+            for (id, r) in eng.step().unwrap() {
+                results[by_id[&id]] = Some(r.tokens);
+                done += 1;
+            }
+            let step_rows: usize = eng.packed_traces[trace_mark..].iter().map(|t| t.rows).sum();
+            let budget = eng
+                .last_step_budget()
+                .expect("auto-budget engine must report its step budget");
+            assert!(
+                step_rows <= budget.max(active_before),
+                "cap {cap}: step packed {step_rows} rows > derived budget {budget} \
+                 (active {active_before})"
+            );
+        }
+        for (i, got) in results.iter().enumerate() {
+            assert_eq!(
+                got.as_ref().unwrap(),
+                &want[i],
+                "cap {cap} prompt {i}: stream diverged under autoscaling"
+            );
+        }
+        // guaranteed scale-down exercise: once drained, a shrink to one
+        // lane must fully succeed regardless of the random trajectory
+        assert_eq!(eng.set_capacity(1), 1, "cap {cap}: drained pool refused to shrink");
+    }
+}
+
+/// After the population drains, repeated downscale requests converge to
+/// one lane — busy lanes only defer the shrink, never block it forever.
+#[test]
+fn shrink_converges_after_drain() {
+    let c = ctx("small");
+    let ps = prompts(&c);
+    let cfg = EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: 12 };
+    let mut eng = BatchedEngine::new(&c.runtime, 6);
+    for p in ps.iter().take(6) {
+        eng.admit(p, make_strategy(StrategyName::Mixed, &c.tables, 1), cfg.clone())
+            .unwrap();
+    }
+    assert_eq!(eng.capacity(), 6);
+    // mid-flight downscale: bounded by busy lanes now...
+    let mid = eng.set_capacity(1);
+    assert!(mid >= eng.lanes_in_use());
+    // ...but once everything retires, the next request lands
+    while eng.active() > 0 {
+        eng.step().unwrap();
+        eng.set_capacity(1);
+    }
+    assert_eq!(eng.set_capacity(1), 1);
+}
+
+/// The full elastic scheduler (autoscaler + derived budget + scored
+/// admission, `elastic: true` default) returns exactly the per-sequence
+/// scheduler's streams and populates the elastic gauges.
+#[test]
+fn elastic_scheduler_matches_per_sequence_streams() {
+    let m = ngrammys::testkit::manifest();
+    let tok = ngrammys::tokenizer::BpeTokenizer::load(&m.tokenizer_path).unwrap();
+    let texts = [
+        "Question: Tom has 3 apples.",
+        "def scale(x, y):",
+        "User: What is the capital of France?",
+        "Answer: Mia has 5 coins.",
+        "Question: Sam has 7 cards.",
+        "def blend(value, count):",
+    ];
+    let req = |p: &str, greedy: bool| GenRequest {
+        prompt: tok.encode(p),
+        engine: EngineConfig {
+            k: if greedy { 1 } else { 5 },
+            w: if greedy { 0 } else { 4 },
+            q: 1,
+            max_new_tokens: 12,
+        },
+        strategy: if greedy { StrategyName::None } else { StrategyName::Mixed },
+    };
+    let base_cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: 1,
+        queue_cap: 16,
+        ..ServeConfig::default()
+    };
+
+    let seq_sched = Scheduler::start(&m, "small", &base_cfg).unwrap();
+    let want: Vec<Vec<u32>> = texts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| seq_sched.generate(req(p, i % 3 == 2)).unwrap().tokens)
+        .collect();
+    seq_sched.shutdown();
+
+    let mut cfg = base_cfg;
+    cfg.batch = 4;
+    assert!(cfg.elastic, "elastic must be the batched-mode default");
+    let sched = Scheduler::start(&m, "small", &cfg).unwrap();
+    // submit everything at once: the pool must scale up from min_lanes,
+    // admissions get reordered by score, and the budget is derived
+    let rxs: Vec<_> = texts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| sched.submit(req(p, i % 3 == 2)).unwrap())
+        .collect();
+    for (rx, want) in rxs.into_iter().zip(&want) {
+        let got = rx.recv().unwrap().unwrap();
+        assert_eq!(&got.tokens, want, "elastic scheduler altered a stream");
+    }
+    let ord = std::sync::atomic::Ordering::Relaxed;
+    assert!(sched.metrics.lanes.load(ord) >= 1, "lanes gauge never set");
+    assert!(sched.metrics.lanes_target.load(ord) >= 1);
+    assert!(
+        sched.metrics.derived_budget.load(ord) >= 1,
+        "derived budget gauge never set"
+    );
+    let rendered = sched.metrics.render();
+    assert!(rendered.contains("ngrammys_lanes "));
+    assert!(rendered.contains("ngrammys_derived_budget "));
+    sched.shutdown();
+}

@@ -239,5 +239,12 @@ fn backpressure_rejects_when_queue_full() {
         sched.metrics.requests_rejected.load(std::sync::atomic::Ordering::Relaxed),
         rejected
     );
+    // overflow is never a silent drop: the count is exported at /metrics
+    // under the documented field name
+    let rendered = sched.metrics.render();
+    assert!(
+        rendered.contains(&format!("ngrammys_requests_rejected {rejected}\n")),
+        "rejections missing from /metrics: {rendered}"
+    );
     sched.shutdown();
 }
