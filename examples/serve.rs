@@ -5,16 +5,20 @@
 //! latency percentiles, throughput and the aggregate tokens/call.
 //!
 //!     cargo run --release --example serve -- [--requests N] [--rate R]
-//!         [--batch LANES] [--no-elastic]
+//!         [--batch LANES] [--engines E] [--no-elastic]
 //!
 //! `--batch N` (N >= 2) switches the scheduler to the continuous-batching
-//! `BatchedEngine`. By default that engine is ELASTIC: N is the cap of a
-//! demand-autoscaled lane range, the per-step row budget is derived
-//! online from the cost model, and admissions are ordered by expected
-//! accepted-tokens-per-cost (watch `ngrammys_lanes`,
+//! engine pool; `--engines E` (default 1) caps how many engine worker
+//! threads — each with its own runtime and KV lane pool — serve behind
+//! the shared queue, with requests routed depth-aware (greedy vs
+//! speculative). By default the pool is ELASTIC: N is the per-engine cap
+//! of a demand-autoscaled lane range, whole engines spawn/retire on
+//! sustained pressure/quiet, the per-step row budget is derived online
+//! from the cost model, and admissions are ordered by expected
+//! accepted-tokens-per-cost (watch `ngrammys_engines`, `ngrammys_lanes`,
 //! `ngrammys_derived_budget` and `ngrammys_admission_reorders` in the
-//! final metrics dump). `--no-elastic` pins N fixed lanes, FIFO, no
-//! budget — the pre-elastic behavior.
+//! final metrics dump). `--no-elastic` pins E engines x N fixed lanes,
+//! FIFO, no budget — the pre-elastic behavior.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -35,6 +39,7 @@ fn main() -> Result<()> {
     let n_requests = args.get_usize("requests", 24).map_err(|e| anyhow!(e))?;
     let rate = args.get_f64("rate", 4.0).map_err(|e| anyhow!(e))?;
     let batch = args.get_usize("batch", 0).map_err(|e| anyhow!(e))?;
+    let engines = args.get_usize("engines", 1).map_err(|e| anyhow!(e))?;
     let max_tokens = 48usize;
 
     // --- bring up the full stack on an ephemeral port
@@ -44,6 +49,7 @@ fn main() -> Result<()> {
         workers: 1,
         queue_cap: 128,
         batch,
+        engines,
         elastic: !args.has_flag("no-elastic"),
         default_engine: EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: max_tokens },
         ..ServeConfig::default()
@@ -74,9 +80,12 @@ fn main() -> Result<()> {
     // --- replay a Poisson trace over real HTTP
     let trace = RequestTrace::poisson(42, n_requests, rate, prompts.len());
     let mode = if batch >= 2 && elastic {
-        format!("elastic batched engine, lane cap {batch}, derived budget")
+        format!(
+            "elastic engine pool (cap {engines} engines x {batch} lanes), derived budget, \
+             depth-aware routing"
+        )
     } else if batch >= 2 {
-        format!("batched engine, {batch} fixed KV lanes")
+        format!("engine pool, {engines} x {batch} fixed KV lanes")
     } else {
         "request-batch 1".to_string()
     };

@@ -209,7 +209,11 @@ pub fn run(
             ("batch_budget_tokens_per_call", Json::Num(budgeted.tokens_per_call)),
             ("batch_unbudgeted_tokens_per_call", Json::Num(unbudgeted.tokens_per_call)),
         ]),
-    )
+    )?;
+    // the CI bench-regression gate compares this summary against the
+    // committed benches/baseline.json (`ngrammys ci-bench-check`)
+    super::write_bench_summary("adaptive", adaptive_tps, adaptive_tpc,
+                               super::accept_rate(tokens, calls))
 }
 
 /// Decode every prompt with one (reused) decoder; returns (decode tokens,

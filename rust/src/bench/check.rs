@@ -1,0 +1,264 @@
+//! CI bench-regression gate: compare the `BENCH_*.json` summaries the
+//! smoke benches emit under `bench_out/` against the committed
+//! `benches/baseline.json`, and FAIL on a cost-model throughput
+//! regression beyond the tolerance.
+//!
+//! Baseline format — one object per gated bench, keyed by the summary
+//! name ([`crate::bench::write_bench_summary`]):
+//!
+//! ```json
+//! {
+//!   "elastic": {"tokens_per_s": 1234.5},
+//!   "adaptive": {"tokens_per_s": 987.6},
+//!   "pool":    {"tokens_per_s": null}
+//! }
+//! ```
+//!
+//! A `null` (or missing) `tokens_per_s` means "not recorded yet": the
+//! gate prints the observed value to copy into the baseline and passes —
+//! that is how a fresh bench bootstraps into the gate without guessing a
+//! number. Refresh the committed numbers with
+//! `ngrammys ci-bench-check --update` after an intentional perf change
+//! (the cost-model throughput is deterministic, so CI reproduces the
+//! committed values exactly and the 10% tolerance only absorbs real
+//! regressions, not noise).
+
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::util::json::Json;
+
+/// Default allowed throughput drop before the gate fails (10%).
+pub const DEFAULT_TOLERANCE: f64 = 0.10;
+
+/// Verdict for one gated bench.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Verdict {
+    /// current ≥ baseline × (1 − tolerance)
+    Pass,
+    /// baseline has no recorded number yet: print-and-pass
+    Bootstrap,
+    /// current < baseline × (1 − tolerance): the gate fails
+    Regressed {
+        /// committed baseline tokens/s
+        baseline: f64,
+        /// fractional drop below the baseline (0.25 = −25%)
+        drop: f64,
+    },
+}
+
+/// Compare one bench's current throughput against its baseline entry.
+pub fn verdict(baseline_tps: Option<f64>, current_tps: f64, tolerance: f64) -> Verdict {
+    match baseline_tps {
+        None => Verdict::Bootstrap,
+        Some(b) if b <= 0.0 => Verdict::Bootstrap,
+        Some(b) => {
+            if current_tps >= b * (1.0 - tolerance) {
+                Verdict::Pass
+            } else {
+                Verdict::Regressed { baseline: b, drop: 1.0 - current_tps / b }
+            }
+        }
+    }
+}
+
+/// Run the gate: read `baseline_path`, find each gated bench's
+/// `BENCH_<name>.json` under `bench_dir`, compare, print a table, and
+/// fail if any bench regressed past `tolerance` (or is missing its
+/// summary entirely). With `update`, rewrite the baseline file with the
+/// observed values instead of failing — the refresh procedure.
+pub fn run(baseline_path: &Path, bench_dir: &Path, tolerance: f64, update: bool) -> Result<()> {
+    let baseline = Json::from_file(baseline_path)?;
+    let entries = baseline
+        .as_obj()
+        .ok_or_else(|| anyhow!("{baseline_path:?}: baseline must be a JSON object"))?;
+    ensure!(!entries.is_empty(), "{baseline_path:?}: baseline lists no benches");
+
+    println!(
+        "== ci-bench-check: {} benches vs {baseline_path:?} (tolerance {:.0}%) ==\n",
+        entries.len(),
+        tolerance * 100.0
+    );
+    println!("{:<12} {:>14} {:>14} {:>9}  verdict", "bench", "baseline", "current", "delta");
+
+    let mut updated = Vec::new();
+    let mut failures = Vec::new();
+    for (name, entry) in entries {
+        let summary_path = bench_dir.join(format!("BENCH_{name}.json"));
+        let summary = Json::from_file(&summary_path).map_err(|e| {
+            anyhow!("{e:#} — did the `bench {name} --smoke` step run before the gate?")
+        })?;
+        let current = summary
+            .get("tokens_per_s")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("{summary_path:?}: missing tokens_per_s"))?;
+        let base = entry.get("tokens_per_s").and_then(|v| v.as_f64());
+        let v = verdict(base, current, tolerance);
+        let delta = base
+            .filter(|&b| b > 0.0)
+            .map(|b| format!("{:+.1}%", (current / b - 1.0) * 100.0))
+            .unwrap_or_else(|| "--".into());
+        let verdict_str = match &v {
+            Verdict::Pass => "ok".to_string(),
+            Verdict::Bootstrap => "bootstrap (no baseline yet — run with --update)".to_string(),
+            Verdict::Regressed { drop, .. } => format!("REGRESSED −{:.1}%", drop * 100.0),
+        };
+        println!(
+            "{name:<12} {:>14} {current:>14.1} {delta:>9}  {verdict_str}",
+            base.map(|b| format!("{b:.1}")).unwrap_or_else(|| "null".into()),
+        );
+        if let Verdict::Regressed { .. } = v {
+            failures.push(name.clone());
+        }
+        updated.push((name.clone(), Json::obj(vec![("tokens_per_s", Json::Num(current))])));
+    }
+
+    // the gate must be symmetric: a summary the baseline does not know
+    // about is as much a hole as a baseline entry with no summary —
+    // otherwise a new gated bench silently escapes the gate forever
+    let known: Vec<&str> = entries.iter().map(|(n, _)| n.as_str()).collect();
+    let mut strays = Vec::new();
+    if let Ok(dir) = std::fs::read_dir(bench_dir) {
+        for f in dir.flatten() {
+            let fname = f.file_name().to_string_lossy().into_owned();
+            if let Some(name) = fname.strip_prefix("BENCH_").and_then(|s| s.strip_suffix(".json"))
+            {
+                if !known.contains(&name) {
+                    strays.push(name.to_string());
+                }
+            }
+        }
+    }
+    strays.sort();
+    if update {
+        for name in &strays {
+            let summary = Json::from_file(&bench_dir.join(format!("BENCH_{name}.json")))?;
+            let current = summary
+                .get("tokens_per_s")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("BENCH_{name}.json: missing tokens_per_s"))?;
+            println!("{name:<12} {:>14} {current:>14.1} {:>9}  added to baseline", "--", "--");
+            updated.push((name.clone(), Json::obj(vec![("tokens_per_s", Json::Num(current))])));
+        }
+    } else {
+        ensure!(
+            strays.is_empty(),
+            "bench summaries with no baseline entry: {} (add a null entry to {baseline_path:?} \
+             or run `ngrammys ci-bench-check --update`)",
+            strays.join(", ")
+        );
+    }
+
+    if update {
+        let j = Json::Obj(updated);
+        std::fs::write(baseline_path, j.to_string_pretty())
+            .map_err(|e| anyhow!("writing {baseline_path:?}: {e}"))?;
+        println!("\nwrote observed values to {baseline_path:?}");
+        return Ok(());
+    }
+    ensure!(
+        failures.is_empty(),
+        "cost-model throughput regressed >{:.0}% on: {} (refresh {baseline_path:?} with \
+         `ngrammys ci-bench-check --update` ONLY if the change is intentional)",
+        tolerance * 100.0,
+        failures.join(", ")
+    );
+    println!("\nbench-regression gate: OK");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verdict_passes_within_tolerance() {
+        assert_eq!(verdict(Some(100.0), 100.0, 0.10), Verdict::Pass);
+        assert_eq!(verdict(Some(100.0), 95.0, 0.10), Verdict::Pass);
+        assert_eq!(verdict(Some(100.0), 90.0, 0.10), Verdict::Pass); // exactly at the edge
+        assert_eq!(verdict(Some(100.0), 140.0, 0.10), Verdict::Pass); // improvements always pass
+    }
+
+    #[test]
+    fn verdict_fails_past_tolerance() {
+        match verdict(Some(100.0), 80.0, 0.10) {
+            Verdict::Regressed { baseline, drop } => {
+                assert_eq!(baseline, 100.0);
+                assert!((drop - 0.2).abs() < 1e-9);
+            }
+            v => panic!("expected Regressed, got {v:?}"),
+        }
+    }
+
+    #[test]
+    fn verdict_bootstraps_on_missing_baseline() {
+        assert_eq!(verdict(None, 123.0, 0.10), Verdict::Bootstrap);
+        assert_eq!(verdict(Some(0.0), 123.0, 0.10), Verdict::Bootstrap);
+    }
+
+    #[test]
+    fn gate_end_to_end_against_temp_files() {
+        let dir = std::env::temp_dir().join(format!("ngrammys-gate-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let baseline = dir.join("baseline.json");
+        std::fs::write(
+            &baseline,
+            r#"{"alpha": {"tokens_per_s": 100.0}, "beta": {"tokens_per_s": null}}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("BENCH_alpha.json"),
+            r#"{"bench": "alpha", "tokens_per_s": 96.0, "tokens_per_call": 2.0, "accept_rate": 0.5}"#,
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("BENCH_beta.json"),
+            r#"{"bench": "beta", "tokens_per_s": 50.0, "tokens_per_call": 1.5, "accept_rate": 0.3}"#,
+        )
+        .unwrap();
+        // alpha within tolerance, beta bootstraps: the gate passes
+        run(&baseline, &dir, 0.10, false).unwrap();
+        // a regression on alpha fails the gate and names the bench
+        std::fs::write(
+            dir.join("BENCH_alpha.json"),
+            r#"{"bench": "alpha", "tokens_per_s": 50.0, "tokens_per_call": 2.0, "accept_rate": 0.5}"#,
+        )
+        .unwrap();
+        let err = run(&baseline, &dir, 0.10, false).unwrap_err().to_string();
+        assert!(err.contains("alpha"), "error must name the regressed bench: {err}");
+        // --update rewrites the baseline with the observed values and a
+        // re-check against the refreshed numbers passes
+        run(&baseline, &dir, 0.10, true).unwrap();
+        let refreshed = Json::from_file(&baseline).unwrap();
+        assert_eq!(
+            refreshed.get("alpha").unwrap().get("tokens_per_s").unwrap().as_f64(),
+            Some(50.0)
+        );
+        assert_eq!(
+            refreshed.get("beta").unwrap().get("tokens_per_s").unwrap().as_f64(),
+            Some(50.0)
+        );
+        run(&baseline, &dir, 0.10, false).unwrap();
+        // a summary with NO baseline entry fails the gate (no silent
+        // exclusion of new benches) and --update adopts it
+        std::fs::write(
+            dir.join("BENCH_gamma.json"),
+            r#"{"bench": "gamma", "tokens_per_s": 7.5, "tokens_per_call": 1.1, "accept_rate": 0.1}"#,
+        )
+        .unwrap();
+        let err = run(&baseline, &dir, 0.10, false).unwrap_err().to_string();
+        assert!(err.contains("gamma"), "error must name the stray summary: {err}");
+        run(&baseline, &dir, 0.10, true).unwrap();
+        let adopted = Json::from_file(&baseline).unwrap();
+        assert_eq!(
+            adopted.get("gamma").unwrap().get("tokens_per_s").unwrap().as_f64(),
+            Some(7.5)
+        );
+        run(&baseline, &dir, 0.10, false).unwrap();
+        // a missing summary is an error, not a silent pass
+        std::fs::remove_file(dir.join("BENCH_beta.json")).unwrap();
+        assert!(run(&baseline, &dir, 0.10, false).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

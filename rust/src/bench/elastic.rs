@@ -194,6 +194,14 @@ pub fn run(
             ("best_static_sim_tokens_per_s", Json::Num(best_static)),
             ("rows", Json::Arr(rows)),
         ]),
+    )?;
+    // the CI bench-regression gate compares this summary against the
+    // committed benches/baseline.json (`ngrammys ci-bench-check`)
+    super::write_bench_summary(
+        "elastic",
+        elastic.sim_tps(),
+        elastic.tokens as f64 / elastic.calls.max(1) as f64,
+        super::accept_rate(elastic.tokens, elastic.calls),
     )
 }
 

@@ -12,11 +12,13 @@
 
 pub mod adaptive;
 pub mod batched;
+pub mod check;
 pub mod elastic;
 pub mod fig1;
 pub mod fig2;
 pub mod fig4;
 pub mod grid;
+pub mod pool;
 pub mod qsweep;
 pub mod table1;
 
@@ -148,6 +150,41 @@ pub fn write_json(name: &str, json: &crate::util::json::Json) -> Result<()> {
     std::fs::write(&path, json.to_string_pretty())?;
     eprintln!("  -> wrote {path}");
     Ok(())
+}
+
+/// Write the machine-readable CI summary `bench_out/BENCH_<name>.json`
+/// the bench-regression gate compares against `benches/baseline.json`
+/// (`ngrammys ci-bench-check`). Every gated bench emits exactly these
+/// three fields: cost-model throughput (the regression-gated headline),
+/// tokens/call, and the accept rate (accepted draft tokens per decode
+/// token — greedy decoding is exactly 0).
+pub fn write_bench_summary(
+    name: &str,
+    tokens_per_s: f64,
+    tokens_per_call: f64,
+    accept_rate: f64,
+) -> Result<()> {
+    use crate::util::json::Json;
+    write_json(
+        &format!("BENCH_{name}"),
+        &Json::obj(vec![
+            ("bench", Json::Str(name.into())),
+            ("tokens_per_s", Json::Num(tokens_per_s)),
+            ("tokens_per_call", Json::Num(tokens_per_call)),
+            ("accept_rate", Json::Num(accept_rate)),
+        ]),
+    )
+}
+
+/// Accept rate over a run: the share of decode tokens that came from
+/// accepted draft rows (each verification call emits its accepted drafts
+/// plus one bonus token, so greedy decoding is exactly 0).
+pub fn accept_rate(decode_tokens: usize, calls: usize) -> f64 {
+    if decode_tokens == 0 {
+        0.0
+    } else {
+        decode_tokens.saturating_sub(calls) as f64 / decode_tokens as f64
+    }
 }
 
 /// Render an ASCII heat-grid (rows = k values, cols = w values).

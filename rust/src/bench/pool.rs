@@ -1,0 +1,383 @@
+//! Engine-pool bench: 1-engine vs N-engine cost-model throughput on a
+//! bursty MIXED workload (greedy w = 0 alongside speculative requests).
+//!
+//! Both runs serve the SAME request trace through the same engine code
+//! and the same depth-aware routing policy the serving pool uses; they
+//! differ only in the engine cap. Each engine models its own device at
+//! paper scale (engines run concurrently in production), so simulated
+//! wall-clock is the BUSIEST engine's accumulated packed-call time, and
+//! the headline is aggregate tokens/sec on the cost model. The run FAILS
+//! unless the N-engine configuration at least matches 1-engine on the
+//! bursty workload — the PR's acceptance bar — and byte-identity across
+//! the two configurations is asserted on every stream.
+
+use std::collections::VecDeque;
+
+use anyhow::{ensure, Result};
+
+use crate::config::EngineConfig;
+use crate::costmodel::CostModel;
+use crate::engine::{AutoBudget, BatchedEngine, SeqId};
+use crate::scheduler::pool::STARVATION_DEFERRALS;
+use crate::scheduler::{
+    make_strategy, request_score, AdmissionQueue, DepthClass, EngineScaleConfig, EngineScaler,
+    StrategyName,
+};
+use crate::tokenizer::TokenId;
+use crate::util::json::Json;
+use crate::workload::TASKS;
+
+/// Engine cap of the N-engine run (vs the 1-engine baseline).
+pub const ENGINE_CAP: usize = 4;
+
+/// Per-engine lane cap of both runs.
+const LANE_CAP: usize = 4;
+
+/// One request of the bench workload.
+struct Req {
+    prompt: Vec<TokenId>,
+    engine: EngineConfig,
+    strategy: StrategyName,
+    class: DepthClass,
+    /// scheduler tick at which this request becomes visible
+    arrives_at: u64,
+}
+
+/// One simulated engine: a real `BatchedEngine` whose packed calls are
+/// priced on its OWN device clock.
+struct SimEngine<'rt> {
+    eng: BatchedEngine<'rt>,
+    /// accumulated packed-call seconds on this engine's device
+    busy_s: f64,
+    /// packed traces already priced
+    trace_mark: usize,
+    /// resident (admitted, unfinished) request indexes
+    resident: Vec<(SeqId, usize)>,
+    greedy: usize,
+    spec: usize,
+}
+
+impl<'rt> SimEngine<'rt> {
+    fn can_take(&self) -> bool {
+        self.resident.len() < LANE_CAP
+    }
+
+    fn compatible(&self, class: DepthClass) -> bool {
+        match class {
+            DepthClass::Greedy => self.spec == 0,
+            DepthClass::Speculative => self.greedy == 0,
+        }
+    }
+}
+
+/// Aggregates of one pool run.
+struct RunOut {
+    tokens: usize,
+    calls: usize,
+    /// busiest engine's device time = simulated wall-clock
+    wall_s: f64,
+    peak_engines: usize,
+    spawns: u64,
+    retires: u64,
+    fallbacks: u64,
+    /// decode tokens / calls over SPECULATIVE requests only
+    spec_tpc: f64,
+    streams: Vec<Vec<TokenId>>,
+}
+
+impl RunOut {
+    fn sim_tps(&self) -> f64 {
+        self.tokens as f64 / self.wall_s.max(1e-12)
+    }
+}
+
+/// Run the 1-engine vs N-engine comparison; fails unless N engines match
+/// or beat one on cost-model throughput.
+pub fn run(
+    ctx: &super::BenchCtx,
+    n_prompts: usize,
+    max_new: usize,
+    engine_cap: usize,
+    smoke: bool,
+) -> Result<()> {
+    let (n_prompts, max_new) = if smoke { (2, 16) } else { (n_prompts, max_new) };
+    let engine_cap = engine_cap.max(2);
+
+    // Bursty mixed traffic: every third request is greedy (w = 0), the
+    // rest speculate at the paper default (10, 10) — the regime where a
+    // single shared engine used to collapse packed depth and where
+    // depth-aware routing has real placements to choose.
+    let mut prompts = Vec::new();
+    for task in TASKS {
+        prompts.extend(ctx.prompts(task, n_prompts.div_ceil(TASKS.len()).max(2), 96)?);
+    }
+    let burst = (engine_cap * LANE_CAP / 2).max(2);
+    let gap = (max_new as u64 / 2).max(4);
+    let reqs: Vec<Req> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let greedy = i % 3 == 2;
+            let engine = if greedy {
+                EngineConfig { k: 1, w: 0, q: 1, max_new_tokens: max_new }
+            } else {
+                EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: max_new }
+            };
+            let strategy = if greedy { StrategyName::None } else { StrategyName::Mixed };
+            Req {
+                prompt: p.tokens.clone(),
+                class: DepthClass::of(strategy, &engine),
+                engine,
+                strategy,
+                arrives_at: (i / burst) as u64 * gap,
+            }
+        })
+        .collect();
+
+    println!(
+        "== engine pool: 1 vs {engine_cap} engines (model '{}', {} requests x {} tokens, \
+         {} greedy / {} spec, bursts of {burst} every {gap} ticks, lane cap {LANE_CAP}) ==\n",
+        ctx.model,
+        reqs.len(),
+        max_new,
+        reqs.iter().filter(|r| r.class == DepthClass::Greedy).count(),
+        reqs.iter().filter(|r| r.class == DepthClass::Speculative).count(),
+    );
+    println!(
+        "{:<14} {:>9} {:>13} {:>7} {:>12} {:>13} {:>9}",
+        "config", "tok/call", "spec tok/call", "calls", "sim tok/s", "spawn/retire", "fallbacks"
+    );
+
+    let one = drive(ctx, &reqs, 1)?;
+    let many = drive(ctx, &reqs, engine_cap)?;
+    let mut rows = Vec::new();
+    for (label, out) in [("1 engine", &one), ("pool", &many)] {
+        println!(
+            "{:<14} {:>9.2} {:>13.2} {:>7} {:>12.1} {:>13} {:>9}",
+            format!("{label} (peak {})", out.peak_engines),
+            out.tokens as f64 / out.calls.max(1) as f64,
+            out.spec_tpc,
+            out.calls,
+            out.sim_tps(),
+            format!("{}/{}", out.spawns, out.retires),
+            out.fallbacks,
+        );
+        rows.push(Json::obj(vec![
+            ("config", Json::Str(label.to_string())),
+            ("sim_tokens_per_s", Json::Num(out.sim_tps())),
+            ("tokens_per_call", Json::Num(out.tokens as f64 / out.calls.max(1) as f64)),
+            ("spec_tokens_per_call", Json::Num(out.spec_tpc)),
+            ("peak_engines", Json::Num(out.peak_engines as f64)),
+            ("spawns", Json::Num(out.spawns as f64)),
+            ("retires", Json::Num(out.retires as f64)),
+            ("routing_fallbacks", Json::Num(out.fallbacks as f64)),
+        ]));
+    }
+
+    // Losslessness across engine counts: identical streams.
+    ensure!(
+        one.streams == many.streams,
+        "1-engine and {engine_cap}-engine runs produced different streams"
+    );
+    println!(
+        "\n{engine_cap}-engine pool {}: {:.1} vs {:.1} sim tok/s (1 engine)",
+        if many.sim_tps() >= one.sim_tps() { "MATCHES/BEATS 1 engine" } else { "BELOW 1 engine" },
+        many.sim_tps(),
+        one.sim_tps(),
+    );
+    ensure!(
+        many.sim_tps() >= one.sim_tps(),
+        "pool throughput {:.1} below single-engine {:.1} — scale-out or routing is mis-tuned",
+        many.sim_tps(),
+        one.sim_tps()
+    );
+
+    super::write_json(
+        &format!("pool_{}", ctx.model),
+        &Json::obj(vec![
+            ("bench", Json::Str("engine-pool".into())),
+            ("model", Json::Str(ctx.model.clone())),
+            ("max_new", Json::Num(max_new as f64)),
+            ("n_requests", Json::Num(reqs.len() as f64)),
+            ("engine_cap", Json::Num(engine_cap as f64)),
+            ("rows", Json::Arr(rows)),
+        ]),
+    )?;
+    super::write_bench_summary(
+        "pool",
+        many.sim_tps(),
+        many.tokens as f64 / many.calls.max(1) as f64,
+        super::accept_rate(many.tokens, many.calls),
+    )
+}
+
+/// Serve `reqs` to completion on up to `engine_cap` simulated engines,
+/// spawn/retire decided by the real [`EngineScaler`] and placement by the
+/// pool's depth-aware routing policy (compatible engine first, any
+/// engine after [`STARVATION_DEFERRALS`] deferred rounds).
+fn drive(ctx: &super::BenchCtx, reqs: &[Req], engine_cap: usize) -> Result<RunOut> {
+    let cm = ctx.cost_model();
+    let mk_engine = || {
+        let mut eng = BatchedEngine::new(&ctx.runtime, 1);
+        eng.collect_traces = true;
+        eng.auto_budget = Some(AutoBudget::new(ctx.cost_model()));
+        SimEngine { eng, busy_s: 0.0, trace_mark: 0, resident: Vec::new(), greedy: 0, spec: 0 }
+    };
+    let mut engines: Vec<SimEngine> = vec![mk_engine()];
+    let mut scaler = EngineScaler::new(EngineScaleConfig {
+        min_engines: 1,
+        max_engines: engine_cap,
+        up_after_steps: 1,
+        down_after_steps: 4,
+    });
+
+    let mut arrivals: VecDeque<usize> = (0..reqs.len()).collect();
+    let mut pending: AdmissionQueue<(usize, u32)> = AdmissionQueue::new();
+    let mut streams: Vec<Vec<TokenId>> = vec![Vec::new(); reqs.len()];
+    let mut out = RunOut {
+        tokens: 0,
+        calls: 0,
+        wall_s: 0.0,
+        peak_engines: 1,
+        spawns: 0,
+        retires: 0,
+        fallbacks: 0,
+        spec_tpc: 0.0,
+        streams: Vec::new(),
+    };
+    let mut spec_tokens = 0usize;
+    let mut spec_calls = 0usize;
+    // device clocks freed by retired engines: a respawn REUSES a freed
+    // device (inherits its accumulated busy time), so wall-clock counts
+    // at most `engine_cap` device slots — a retire/respawn cycle cannot
+    // reset the busiest clock and flatter the pool
+    let mut freed_clocks: Vec<f64> = Vec::new();
+    let mut done = 0usize;
+    let mut tick: u64 = 0;
+    while done < reqs.len() {
+        // requests whose arrival tick has come enter the admission queue
+        while let Some(&i) = arrivals.front() {
+            if reqs[i].arrives_at > tick {
+                break;
+            }
+            arrivals.pop_front();
+            let score = request_score(
+                &cm,
+                1.5,
+                reqs[i].strategy,
+                &reqs[i].engine,
+                reqs[i].prompt.len(),
+            );
+            pending.push((i, 0), score);
+        }
+        // idle with future arrivals: fast-forward to the next burst
+        let all_idle = engines.iter().all(|e| e.resident.is_empty());
+        if all_idle && pending.is_empty() {
+            if let Some(&i) = arrivals.front() {
+                tick = reqs[i].arrives_at;
+                continue;
+            }
+        }
+        // engine-level scaling: spawn on pressure, retire an idle engine
+        // on sustained quiet
+        let held: usize = engines.iter().map(|e| e.resident.len()).sum();
+        let target = scaler.target_engines(held + pending.len(), LANE_CAP, engines.len());
+        if target > engines.len() {
+            let mut se = mk_engine();
+            se.busy_s = freed_clocks.pop().unwrap_or(0.0); // reuse a freed device
+            engines.push(se);
+            out.spawns += 1;
+            out.peak_engines = out.peak_engines.max(engines.len());
+        } else if target < engines.len() {
+            if let Some(idx) = engines.iter().position(|e| e.resident.is_empty()) {
+                freed_clocks.push(engines.remove(idx).busy_s);
+                out.retires += 1;
+            }
+        }
+        // depth-aware routing + admission (the sim admits directly: no
+        // cross-thread backlog to model)
+        let mut held_back: Vec<((usize, u32), f64, u64)> = Vec::new();
+        while engines.iter().any(|e| e.can_take()) {
+            let Some(((i, deferrals), score, seq)) = pending.pop_best_entry() else { break };
+            let r = &reqs[i];
+            let pick = engines
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.can_take() && e.compatible(r.class))
+                .min_by_key(|(_, e)| e.resident.len())
+                .map(|(j, _)| (j, false))
+                .or_else(|| {
+                    (deferrals >= STARVATION_DEFERRALS)
+                        .then(|| {
+                            engines
+                                .iter()
+                                .enumerate()
+                                .filter(|(_, e)| e.can_take())
+                                .min_by_key(|(_, e)| e.resident.len())
+                                .map(|(j, _)| (j, true))
+                        })
+                        .flatten()
+                });
+            match pick {
+                Some((j, fallback)) => {
+                    if fallback {
+                        out.fallbacks += 1;
+                    }
+                    let se = &mut engines[j];
+                    if !se.eng.has_capacity() {
+                        se.eng.set_capacity(se.eng.capacity() + 1);
+                    }
+                    let strat = make_strategy(r.strategy, &ctx.tables, r.engine.q);
+                    let id = se.eng.admit(&r.prompt, strat, r.engine.clone())?;
+                    se.resident.push((id, i));
+                    match r.class {
+                        DepthClass::Greedy => se.greedy += 1,
+                        DepthClass::Speculative => se.spec += 1,
+                    }
+                }
+                None => held_back.push(((i, deferrals + 1), score, seq)),
+            }
+        }
+        for (item, score, seq) in held_back {
+            pending.reinsert(item, score, seq);
+        }
+        // step every engine that has work, on its own device clock
+        for se in engines.iter_mut() {
+            if se.eng.active() == 0 {
+                continue;
+            }
+            for (id, r) in se.eng.step()? {
+                let pos = se
+                    .resident
+                    .iter()
+                    .position(|&(sid, _)| sid == id)
+                    .expect("engine returned unknown sequence");
+                let (_, i) = se.resident.swap_remove(pos);
+                match reqs[i].class {
+                    DepthClass::Greedy => se.greedy -= 1,
+                    DepthClass::Speculative => {
+                        se.spec -= 1;
+                        spec_tokens += r.tokens.len().saturating_sub(1);
+                        spec_calls += r.calls;
+                    }
+                }
+                out.tokens += r.tokens.len().saturating_sub(1);
+                out.calls += r.calls;
+                streams[i] = r.tokens;
+                done += 1;
+            }
+            let new_busy: f64 = se.eng.packed_traces[se.trace_mark..]
+                .iter()
+                .map(|t| cm.call_time(t.rows, t.w + 1, t.max_ctx))
+                .sum();
+            se.trace_mark = se.eng.packed_traces.len();
+            se.busy_s += new_busy;
+        }
+        tick += 1;
+    }
+    let freed_max = freed_clocks.iter().copied().fold(0.0f64, f64::max);
+    out.wall_s = engines.iter().map(|e| e.busy_s).fold(freed_max, f64::max);
+    out.spec_tpc = spec_tokens as f64 / spec_calls.max(1) as f64;
+    out.streams = streams;
+    Ok(out)
+}

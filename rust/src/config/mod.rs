@@ -7,7 +7,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::scheduler::{AutoscaleConfig, StrategyName};
+use crate::scheduler::{AutoscaleConfig, EngineScaleConfig, StrategyName};
 use crate::util::json::Json;
 
 /// Dimensions of one nano model (mirrors python/compile/configs.py).
@@ -297,10 +297,24 @@ pub struct ServeConfig {
     /// bounded admission-queue length (backpressure limit)
     pub queue_cap: usize,
     /// Cross-request batching: 0 or 1 = one private decode loop per worker
-    /// (request-batch 1); >= 2 = a continuous-batching `BatchedEngine`.
-    /// With `elastic` on (the default), this is the CAP of the lane range
-    /// the autoscaler works in; with it off, the fixed pooled-lane count.
+    /// (request-batch 1); >= 2 = the continuous-batching engine pool.
+    /// This is a PER-ENGINE lane count: with `elastic` on (the default)
+    /// each engine's autoscaler works within this cap, with it off each
+    /// engine pins exactly this many pooled lanes.
     pub batch: usize,
+    /// Engine-pool cap (`--engines N`): how many batched engine worker
+    /// threads — each with its own `ModelRuntime` and KV lane pool — may
+    /// serve behind the shared admission queue. 1 (the default) is the
+    /// single-engine behavior. With `elastic` on, engines are
+    /// spawned/retired between 1 and this cap by the two-level autoscaler
+    /// ([`crate::scheduler::EngineScaler`]); with it off, exactly this
+    /// many engines run for the process lifetime. Ignored when
+    /// `batch <= 1`.
+    pub engines: usize,
+    /// Engine-level tuning for the two-level autoscaler (elastic mode).
+    /// `max_engines` is overridden by `engines` at scheduler start;
+    /// `min_engines` is clamped into its range.
+    pub engine_scale: EngineScaleConfig,
     /// Packed-row budget for the batched engine: bounds the per-step packed
     /// batch size `sum k_i` at `max(budget, active)`; rows are distributed
     /// across sequences by marginal expected acceptance. With `elastic` on,
@@ -340,6 +354,8 @@ impl Default for ServeConfig {
             workers: 1,
             queue_cap: 256,
             batch: 0,
+            engines: 1,
+            engine_scale: EngineScaleConfig::for_cap(1),
             budget: None,
             elastic: true,
             autoscale: AutoscaleConfig::for_cap(1),

@@ -15,11 +15,15 @@
 //! continuation of its prompt, regardless of what else rides in the batch.
 //!
 //! Shape selection across sequences: all blocks in one packed call must
-//! share the speculation depth `w`, so each step picks the largest common
-//! `w` every active sequence can still afford (config + remaining lane
-//! room), then refits each sequence's row count `k_i` to it. Sequences
-//! that cannot meet the common depth (odd artifact sets) fall back to
-//! their own shape and run as a second packed group in the same step.
+//! share the speculation depth `w`. Sequences are first split by DEPTH
+//! CLASS — greedy (w = 0) vs speculative — so a greedy request can never
+//! drag a speculative group's common depth to 0 (the mixed-traffic
+//! regression `rust/tests/pool.rs` pins down); each step then picks the
+//! largest common `w` every *speculative* sequence can still afford
+//! (config + remaining lane room) and refits each sequence's row count
+//! `k_i` to its class depth. Sequences that cannot meet their class's
+//! common depth (odd artifact sets) fall back to their own shape; every
+//! distinct depth runs as its own packed group within the same step.
 
 use std::collections::{HashMap, VecDeque};
 use std::time::Instant;
@@ -237,6 +241,13 @@ impl<'rt> BatchedEngine<'rt> {
         self.pool.in_use()
     }
 
+    /// Bytes the engine's KV lane pool currently pins (all capacity
+    /// lanes, busy or free) — the memory a lane shrink or an engine
+    /// retire actually returns.
+    pub fn kv_bytes(&self) -> usize {
+        self.pool.memory_bytes()
+    }
+
     /// Mean controller heat (expected accepted tokens per step, see
     /// [`SeqController::heat`]) across active adaptive sequences; `None`
     /// when no active sequence carries a controller. The autoscaler uses
@@ -357,15 +368,25 @@ impl<'rt> BatchedEngine<'rt> {
             }
             if fits.iter().all(|f| f.is_some()) {
                 let fits: Vec<(usize, usize)> = fits.into_iter().map(|f| f.unwrap()).collect();
-                let w_common = fits.iter().map(|&(_, w)| w).min().unwrap();
+                // Common-depth selection PER DEPTH CLASS: greedy (w = 0)
+                // sequences form their own packed group and no longer drag
+                // every speculative co-resident to depth 0 — a step with
+                // both classes issues (at least) two packed calls, one per
+                // class. Within the speculative class the depth is still
+                // the largest COMMON one every member affords.
+                let w_common_spec = fits.iter().map(|&(_, w)| w).filter(|&w| w > 0).min();
                 let shaped: Vec<(usize, usize)> = self
                     .active
                     .iter()
                     .zip(fits.iter().zip(&caps))
                     .map(|(s, (&own, &(k_cap, _)))| {
+                        let (_, w_fit) = own;
+                        if w_fit == 0 {
+                            return own; // greedy class keeps its anchor-only shape
+                        }
                         let room = self.pool.lane(s.lane).remaining();
                         self.runtime
-                            .best_fitting_shape(k_cap, w_common, room)
+                            .best_fitting_shape(k_cap, w_common_spec.unwrap(), room)
                             .unwrap_or(own)
                     })
                     .collect();

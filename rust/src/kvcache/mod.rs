@@ -297,6 +297,21 @@ impl KvPool {
         self.lanes.len()
     }
 
+    /// Bytes one lane pins (key + value buffers). Lanes are full
+    /// `(layers, max_len, heads, head_dim)` f32 caches, so this is what
+    /// every scale decision trades against latency.
+    pub fn lane_bytes(&self) -> usize {
+        let (layers, max_len, heads, head_dim) = self.dims;
+        2 * layers * max_len * heads * head_dim * std::mem::size_of::<f32>()
+    }
+
+    /// Bytes the whole pool currently pins — what an engine retire or a
+    /// lane shrink actually gives back (exported per engine as the
+    /// `ngrammys_engine_kv_bytes` gauge).
+    pub fn memory_bytes(&self) -> usize {
+        self.lanes.len() * self.lane_bytes()
+    }
+
     /// Free lanes.
     pub fn available(&self) -> usize {
         self.free.len()
@@ -494,6 +509,18 @@ mod tests {
         let b = p.acquire().unwrap();
         p.lane_mut(a).k_data[0] = 7.0;
         assert_eq!(p.lane(b).k_data[0], 0.0);
+    }
+
+    #[test]
+    fn memory_accounting_tracks_resize() {
+        let mut p = KvPool::new(2, 8, 2, 4, 3);
+        // 2 buffers * layers * max_len * heads * head_dim * 4 bytes
+        assert_eq!(p.lane_bytes(), 2 * 2 * 8 * 2 * 4 * 4);
+        assert_eq!(p.memory_bytes(), 3 * p.lane_bytes());
+        p.resize(1);
+        assert_eq!(p.memory_bytes(), p.lane_bytes());
+        p.resize(4);
+        assert_eq!(p.memory_bytes(), 4 * p.lane_bytes());
     }
 
     #[test]

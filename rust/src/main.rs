@@ -35,15 +35,23 @@ COMMANDS:
   serve                       HTTP server (POST /generate, GET /metrics)
       [--model base] [--addr 127.0.0.1:8077] [--workers 1]
       [--batch N]             continuous batching (N >= 2). Elastic by
-                              default: N is the CAP of a demand-driven
-                              lane range, the per-step row budget is
-                              derived from the cost model, and admissions
-                              are ordered by expected tokens-per-cost
+                              default: N is the PER-ENGINE CAP of a
+                              demand-driven lane range, the per-step row
+                              budget is derived from the cost model, and
+                              admissions are ordered by expected
+                              tokens-per-cost with per-strategy priors
+      [--engines E]           engine-pool cap (default 1): up to E
+                              batched engine threads, each with its own
+                              runtime + KV pool, behind one queue; whole
+                              engines spawn/retire on sustained
+                              pressure/quiet (elastic) or run pinned at E
+                              (--no-elastic); requests are routed
+                              depth-aware (greedy vs speculative)
       [--budget B]            packed-row budget CAP over the derived
                               value (0 = derived value used as-is; with
                               --no-elastic: the fixed budget, 0 = off)
-      [--no-elastic]          pin --batch lanes + static --budget (the
-                              pre-elastic fixed-pool behavior)
+      [--no-elastic]          pin --batch lanes x --engines E + static
+                              --budget (the pre-elastic fixed behavior)
       [--min-lanes 1]         lower bound of the elastic lane range
       [--scale-down-after 8]  idle decisions before shedding one lane
       [--budget-slack 1.15]   slowdown tolerance of the derived budget
@@ -65,8 +73,19 @@ COMMANDS:
                               [--model base] [--budget B] [--smoke]
       elastic                 elastic autoscaling vs every static --batch
                               [--model base] [--caps 2,4,8] [--smoke]
+      pool                    1-engine vs N-engine pool throughput on a
+                              mixed greedy+speculative burst workload
+                              [--model base] [--engines 4] [--smoke]
       all                     everything above
       common: [--prompts N] [--max-new N] [--ks 1,5,10] [--ws 2,6,10]
+  ci-bench-check              bench-regression gate: compare the
+                              bench_out/BENCH_*.json summaries emitted by
+                              the smoke benches against a committed
+                              baseline; fails on >tolerance throughput
+                              regression
+      [--baseline benches/baseline.json] [--bench-dir bench_out]
+      [--tolerance 0.10] [--update]  (--update rewrites the baseline
+                              with the observed values)
 ";
 
 fn main() {
@@ -77,7 +96,7 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["compare", "help", "traces", "smoke", "no-elastic"])
+    let args = Args::from_env(&["compare", "help", "traces", "smoke", "no-elastic", "update"])
         .map_err(|e| anyhow!(e))?;
     if args.has_flag("help") || args.positional.is_empty() {
         print!("{USAGE}");
@@ -91,6 +110,7 @@ fn run() -> Result<()> {
         "generate" => generate(&artifacts, &args),
         "serve" => serve(&artifacts, &args),
         "bench" => bench_cmd(&artifacts, &args),
+        "ci-bench-check" => check_cmd(&args),
         other => Err(anyhow!("unknown command '{other}'\n{USAGE}")),
     }
 }
@@ -191,6 +211,9 @@ fn serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
         workers: args.get_usize("workers", 1).map_err(|e| anyhow!(e))?,
         queue_cap: args.get_usize("queue-cap", 256).map_err(|e| anyhow!(e))?,
         batch: args.get_usize("batch", 0).map_err(|e| anyhow!(e))?,
+        engines: args.get_usize("engines", 1).map_err(|e| anyhow!(e))?,
+        // max_engines is overridden by `engines` at scheduler start
+        engine_scale: defaults.engine_scale.clone(),
         budget: parse_budget(args)?,
         elastic: !args.has_flag("no-elastic"),
         autoscale: ngrammys::scheduler::AutoscaleConfig {
@@ -236,6 +259,18 @@ fn parse_budget(args: &Args) -> Result<Option<usize>> {
     })
 }
 
+/// The CI bench-regression gate (`ngrammys ci-bench-check`): compares
+/// the smoke benches' `BENCH_*.json` output against the committed
+/// baseline and fails on a >tolerance cost-model throughput regression.
+fn check_cmd(args: &Args) -> Result<()> {
+    let baseline = PathBuf::from(args.get_or("baseline", "benches/baseline.json"));
+    let dir = PathBuf::from(args.get_or("bench-dir", "bench_out"));
+    let tolerance = args
+        .get_f64("tolerance", ngrammys::bench::check::DEFAULT_TOLERANCE)
+        .map_err(|e| anyhow!(e))?;
+    ngrammys::bench::check::run(&baseline, &dir, tolerance, args.has_flag("update"))
+}
+
 fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
     let target = args
         .positional
@@ -278,6 +313,12 @@ fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
                 .map_err(|e| anyhow!(e))?;
             bench::elastic::run(&load()?, n_prompts, max_new, &caps, args.has_flag("smoke"))
         }
+        "pool" => {
+            let engines = args
+                .get_usize("engines", bench::pool::ENGINE_CAP)
+                .map_err(|e| anyhow!(e))?;
+            bench::pool::run(&load()?, n_prompts, max_new, engines, args.has_flag("smoke"))
+        }
         "table1" => {
             let models: Vec<String> = args
                 .get_or("models", "small,base,large")
@@ -298,6 +339,7 @@ fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
             bench::batched::run(&ctx, n_prompts, max_new, &bench::batched::CONCURRENCIES)?;
             bench::adaptive::run(&ctx, n_prompts, max_new, None, false)?;
             bench::elastic::run(&ctx, n_prompts, max_new, &bench::elastic::STATIC_CAPS, false)?;
+            bench::pool::run(&ctx, n_prompts, max_new, bench::pool::ENGINE_CAP, false)?;
             drop(ctx);
             for m in ["small", "base", "large"] {
                 let c = BenchCtx::load(manifest.clone(), m)?;

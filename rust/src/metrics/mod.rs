@@ -95,13 +95,25 @@ pub struct Metrics {
     pub step_latency: LatencyHistDefault,
     /// requests admitted to the queue but not yet on a worker/lane
     pub queue_depth: AtomicU64,
-    /// current pooled-lane capacity of the batched engine (elastic mode
-    /// scales this between `--min-lanes` and the `--batch` cap)
+    /// pooled-lane capacity summed across all live engines (elastic mode
+    /// scales each engine between `--min-lanes` and the `--batch`
+    /// per-engine cap)
     pub lanes: AtomicU64,
-    /// lane target the autoscaler last decided; `lanes` sits ABOVE this
+    /// lane target summed across engines; `lanes` sits ABOVE this
     /// transiently while a shrink waits for busy lanes to retire (growth
     /// is applied immediately, so `lanes` never lags a larger target)
     pub lanes_target: AtomicU64,
+    /// engine worker threads currently live in the pool
+    pub engines: AtomicU64,
+    /// engine count the two-level autoscaler last decided; `engines`
+    /// converges toward it as spawns boot and idle engines retire
+    pub engines_target: AtomicU64,
+    /// depth-aware routing decisions that fell back to a
+    /// depth-incompatible engine after the starvation threshold
+    pub routing_fallbacks: AtomicU64,
+    /// per-engine gauge snapshots (labelled `engine="<id>"` in render),
+    /// overwritten wholesale by the pool dispatcher each iteration
+    pub per_engine: Mutex<Vec<EngineGauges>>,
     /// packed-row budget the batched engine enforced on its latest step
     /// (derived online from the cost model in elastic mode)
     pub derived_budget: AtomicU64,
@@ -118,6 +130,30 @@ pub struct Metrics {
     pub strategy_accepted: [AtomicU64; StrategyKind::COUNT],
     /// last N per-request summaries for debugging (bounded)
     pub recent: Mutex<Vec<String>>,
+}
+
+/// One engine worker's gauge snapshot, as the pool dispatcher last saw
+/// it. Rendered as the `ngrammys_engine_*{engine="<id>"}` families; the
+/// label is the engine's stable spawn ordinal, so a retired engine's
+/// series simply stops instead of being renumbered.
+#[derive(Debug, Clone, Default)]
+pub struct EngineGauges {
+    /// stable spawn ordinal (the `engine` label value)
+    pub id: u64,
+    /// current lane-pool capacity
+    pub lanes: u64,
+    /// lane target this engine's autoscaler last decided
+    pub lanes_target: u64,
+    /// sequences currently decoding on this engine
+    pub active: u64,
+    /// resident + routed greedy (w = 0) requests
+    pub greedy: u64,
+    /// resident + routed speculative requests
+    pub speculative: u64,
+    /// mean adaptive-controller heat across this engine's lanes
+    pub heat: f64,
+    /// bytes this engine's KV lane pool currently pins
+    pub kv_bytes: u64,
 }
 
 /// Default-able newtype around [`LatencyHist`] so [`Metrics`] can derive
@@ -156,6 +192,12 @@ impl Metrics {
         self.strategy_accepted[i].fetch_add(accepted as u64, Ordering::Relaxed);
     }
 
+    /// Replace the per-engine gauge snapshots (the pool dispatcher calls
+    /// this once per routing iteration with every engine's live gauges).
+    pub fn set_per_engine(&self, snaps: Vec<EngineGauges>) {
+        *self.per_engine.lock().unwrap() = snaps;
+    }
+
     /// Observed tokens-per-call across all requests (the paper's metric,
     /// aggregated).
     pub fn tokens_per_call(&self) -> f64 {
@@ -181,6 +223,25 @@ impl Metrics {
         s.push_str(&format!("ngrammys_queue_depth {}\n", c(&self.queue_depth)));
         s.push_str(&format!("ngrammys_lanes {}\n", c(&self.lanes)));
         s.push_str(&format!("ngrammys_lanes_target {}\n", c(&self.lanes_target)));
+        s.push_str(&format!("ngrammys_engines {}\n", c(&self.engines)));
+        s.push_str(&format!("ngrammys_engines_target {}\n", c(&self.engines_target)));
+        s.push_str(&format!("ngrammys_routing_fallbacks {}\n", c(&self.routing_fallbacks)));
+        for g in self.per_engine.lock().unwrap().iter() {
+            let e = g.id;
+            s.push_str(&format!("ngrammys_engine_lanes{{engine=\"{e}\"}} {}\n", g.lanes));
+            s.push_str(&format!(
+                "ngrammys_engine_lanes_target{{engine=\"{e}\"}} {}\n",
+                g.lanes_target
+            ));
+            s.push_str(&format!("ngrammys_engine_active{{engine=\"{e}\"}} {}\n", g.active));
+            s.push_str(&format!("ngrammys_engine_greedy{{engine=\"{e}\"}} {}\n", g.greedy));
+            s.push_str(&format!(
+                "ngrammys_engine_speculative{{engine=\"{e}\"}} {}\n",
+                g.speculative
+            ));
+            s.push_str(&format!("ngrammys_engine_heat{{engine=\"{e}\"}} {:.3}\n", g.heat));
+            s.push_str(&format!("ngrammys_engine_kv_bytes{{engine=\"{e}\"}} {}\n", g.kv_bytes));
+        }
         s.push_str(&format!("ngrammys_derived_budget {}\n", c(&self.derived_budget)));
         s.push_str(&format!("ngrammys_admission_reorders {}\n", c(&self.admission_reorders)));
         s.push_str(&format!("ngrammys_admissions_failed {}\n", c(&self.admissions_failed)));
@@ -252,7 +313,7 @@ mod tests {
     fn render_exports_every_documented_field() {
         let m = Metrics::new();
         let r = m.render();
-        const FIELDS: [&str; 16] = [
+        const FIELDS: [&str; 19] = [
             "ngrammys_requests_total",
             "ngrammys_requests_rejected",
             "ngrammys_requests_completed",
@@ -262,6 +323,9 @@ mod tests {
             "ngrammys_queue_depth",
             "ngrammys_lanes",
             "ngrammys_lanes_target",
+            "ngrammys_engines",
+            "ngrammys_engines_target",
+            "ngrammys_routing_fallbacks",
             "ngrammys_derived_budget",
             "ngrammys_admission_reorders",
             "ngrammys_admissions_failed",
@@ -299,6 +363,64 @@ mod tests {
         assert!(r.contains("ngrammys_derived_budget 17\n"));
         assert!(r.contains("ngrammys_admission_reorders 2\n"));
         assert!(r.contains("ngrammys_admissions_failed 1\n"));
+    }
+
+    /// The per-engine gauge families: one labelled series per snapshot,
+    /// keyed by the engine's stable spawn ordinal — every family the
+    /// README table documents must render under exactly these names.
+    #[test]
+    fn per_engine_gauges_render_labelled_families() {
+        let m = Metrics::new();
+        m.engines.store(2, Ordering::Relaxed);
+        m.engines_target.store(3, Ordering::Relaxed);
+        m.routing_fallbacks.store(4, Ordering::Relaxed);
+        m.set_per_engine(vec![
+            EngineGauges {
+                id: 0,
+                lanes: 2,
+                lanes_target: 2,
+                active: 1,
+                greedy: 0,
+                speculative: 1,
+                heat: 1.5,
+                kv_bytes: 4096,
+            },
+            EngineGauges {
+                id: 3,
+                lanes: 4,
+                lanes_target: 3,
+                active: 4,
+                greedy: 4,
+                speculative: 0,
+                heat: 0.0,
+                kv_bytes: 8192,
+            },
+        ]);
+        let r = m.render();
+        assert!(r.contains("ngrammys_engines 2\n"));
+        assert!(r.contains("ngrammys_engines_target 3\n"));
+        assert!(r.contains("ngrammys_routing_fallbacks 4\n"));
+        // labels are spawn ordinals, NOT vector positions: engine 3 kept
+        // its id even though it renders second
+        assert!(r.contains("ngrammys_engine_lanes{engine=\"0\"} 2\n"));
+        assert!(r.contains("ngrammys_engine_lanes_target{engine=\"0\"} 2\n"));
+        assert!(r.contains("ngrammys_engine_active{engine=\"0\"} 1\n"));
+        assert!(r.contains("ngrammys_engine_greedy{engine=\"0\"} 0\n"));
+        assert!(r.contains("ngrammys_engine_speculative{engine=\"0\"} 1\n"));
+        assert!(r.contains("ngrammys_engine_heat{engine=\"0\"} 1.500\n"));
+        assert!(r.contains("ngrammys_engine_kv_bytes{engine=\"0\"} 4096\n"));
+        assert!(r.contains("ngrammys_engine_kv_bytes{engine=\"3\"} 8192\n"));
+        assert!(r.contains("ngrammys_engine_lanes{engine=\"3\"} 4\n"));
+        assert!(r.contains("ngrammys_engine_lanes_target{engine=\"3\"} 3\n"));
+        assert!(r.contains("ngrammys_engine_active{engine=\"3\"} 4\n"));
+        assert!(r.contains("ngrammys_engine_greedy{engine=\"3\"} 4\n"));
+        assert!(r.contains("ngrammys_engine_speculative{engine=\"3\"} 0\n"));
+        assert!(r.contains("ngrammys_engine_heat{engine=\"3\"} 0.000\n"));
+        // a later snapshot REPLACES the families (retired engines stop)
+        m.set_per_engine(vec![EngineGauges { id: 3, lanes: 1, ..EngineGauges::default() }]);
+        let r = m.render();
+        assert!(!r.contains("engine=\"0\""));
+        assert!(r.contains("ngrammys_engine_lanes{engine=\"3\"} 1\n"));
     }
 
     #[test]

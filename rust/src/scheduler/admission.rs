@@ -24,41 +24,87 @@
 //! Bounded-queue backpressure is unchanged: the scheduler's sync channel
 //! still rejects when full; this queue only re-orders what was accepted.
 
+use std::sync::atomic::Ordering;
+
 use crate::config::EngineConfig;
 use crate::costmodel::CostModel;
+use crate::metrics::Metrics;
 use crate::scheduler::StrategyName;
 
 /// Expected accepted-tokens-per-simulated-verify-second of admitting a
 /// request now — the admission priority.
 ///
-/// Until any request has completed (`observed_tokens_per_call <= 0`)
+/// Until any acceptance evidence exists (`prior_tokens_per_call <= 0`)
 /// every request scores 0, so a COLD scheduler is exactly FIFO — with no
 /// acceptance evidence there is no basis to prefer one request over an
 /// earlier one. Warm, the numerator is a prior on tokens/call: exactly
 /// 1.0 for greedy requests (speculation off, so every call emits one
-/// token by construction) and the fleet-wide observed tokens/call
-/// (floored at 1.0, the greedy baseline) for speculative ones. The
-/// denominator is the cost model's time for one of this request's
-/// verification calls at its prompt's context length, so long contexts
-/// and deep/wide shapes pay their real (simulated) price.
-/// `max_new_tokens` cancels out of the ratio: a request that wants more
-/// tokens needs proportionally more calls at the same per-call rate.
+/// token by construction) and the caller-supplied prior (floored at 1.0,
+/// the greedy baseline) for speculative ones — normally the per-strategy
+/// [`strategy_prior_tpc`], which keys on the request's own
+/// `StrategyKind` counters instead of blaming/crediting every strategy
+/// with the fleet-wide average. The denominator is the cost model's time
+/// for one of this request's verification calls at its prompt's context
+/// length, so long contexts and deep/wide shapes pay their real
+/// (simulated) price. `max_new_tokens` cancels out of the ratio: a
+/// request that wants more tokens needs proportionally more calls at the
+/// same per-call rate.
 pub fn request_score(
     cm: &CostModel,
-    observed_tokens_per_call: f64,
+    prior_tokens_per_call: f64,
     strategy: StrategyName,
     engine: &EngineConfig,
     prompt_len: usize,
 ) -> f64 {
-    if observed_tokens_per_call <= 0.0 {
+    if prior_tokens_per_call <= 0.0 {
         return 0.0; // cold start: uniform score = FIFO
     }
     let prior_tpc = if strategy == StrategyName::None || engine.w == 0 {
         1.0
     } else {
-        observed_tokens_per_call.max(1.0)
+        prior_tokens_per_call.max(1.0)
     };
     prior_tpc / cm.call_time(engine.k, engine.w + 1, prompt_len)
+}
+
+/// Evidence (winning verification calls) at which the per-strategy prior
+/// trusts half of its observed mean — below it the prior shrinks toward
+/// the greedy baseline so a couple of lucky steps cannot dominate
+/// admission order.
+pub const PRIOR_SHRINK_CALLS: f64 = 4.0;
+
+/// Per-strategy tokens/call prior for [`request_score`], keyed by the
+/// request's draft-source [`crate::draft::StrategyKind`]s against the
+/// fleet's per-strategy win/accepted counters ([`Metrics`]).
+///
+/// The old scorer fed the FLEET-WIDE tokens/call to every strategy, so a
+/// consistently-losing strategy inherited the winners' acceptance record
+/// (and vice versa) for as long as the process lived. This prior instead
+/// sums wins and accepted tokens over the kinds the strategy actually
+/// drafts with (`StrategyName::kinds`):
+///
+/// - kinds with winning calls: `1 + mean_accepted_per_win * shrink`,
+///   where `shrink = wins / (wins + PRIOR_SHRINK_CALLS)` pulls thin
+///   evidence toward the greedy baseline of 1.0 — a strategy whose rows
+///   rarely survive verification scores barely above greedy;
+/// - no per-strategy evidence at all: the fleet-wide tokens/call, the
+///   documented FALLBACK (a brand-new strategy should inherit the fleet
+///   prior rather than being scored as a known loser);
+/// - fully cold fleet: 0.0, which [`request_score`] maps to pure FIFO.
+pub fn strategy_prior_tpc(metrics: &Metrics, name: StrategyName) -> f64 {
+    let mut wins = 0u64;
+    let mut accepted = 0u64;
+    for kind in name.kinds() {
+        let i = kind.index();
+        wins += metrics.strategy_wins[i].load(Ordering::Relaxed);
+        accepted += metrics.strategy_accepted[i].load(Ordering::Relaxed);
+    }
+    if wins == 0 {
+        return metrics.tokens_per_call(); // no per-strategy evidence
+    }
+    let mean = accepted as f64 / wins as f64;
+    let shrink = wins as f64 / (wins as f64 + PRIOR_SHRINK_CALLS);
+    1.0 + mean * shrink
 }
 
 struct Entry<T> {
@@ -123,6 +169,14 @@ impl<T> AdmissionQueue<T> {
     /// count, so (inductively) every entry is admitted after a bounded
     /// number of pops.
     pub fn pop_best(&mut self) -> Option<T> {
+        self.pop_best_entry().map(|(item, _, _)| item)
+    }
+
+    /// [`Self::pop_best`] returning the entry's score and arrival stamp
+    /// alongside the item, so a caller that cannot place the item this
+    /// round (the engine pool's depth-aware router) can hand both back to
+    /// [`Self::reinsert`] without forging a fresh arrival.
+    pub fn pop_best_entry(&mut self) -> Option<(T, f64, u64)> {
         let oldest = self
             .entries
             .iter()
@@ -130,7 +184,8 @@ impl<T> AdmissionQueue<T> {
             .min_by_key(|&(_, e)| e.seq)
             .map(|(i, _)| i)?;
         if self.entries[oldest].overtaken >= Self::MAX_OVERTAKES {
-            return Some(self.entries.swap_remove(oldest).item);
+            let e = self.entries.swap_remove(oldest);
+            return Some((e.item, e.score, e.seq));
         }
         let best = self
             .entries
@@ -147,7 +202,17 @@ impl<T> AdmissionQueue<T> {
             self.reorders += 1;
             self.entries[oldest].overtaken += 1;
         }
-        Some(self.entries.swap_remove(best).item)
+        let e = self.entries.swap_remove(best);
+        Some((e.item, e.score, e.seq))
+    }
+
+    /// Re-insert an entry popped this round but not placeable yet,
+    /// keeping its original arrival stamp so FIFO tie-breaks and the
+    /// anti-starvation bound still see its true age. (The overtake count
+    /// restarts; routing-level starvation is bounded separately by the
+    /// pool's deferral threshold, which lives in the item itself.)
+    pub fn reinsert(&mut self, item: T, score: f64, seq: u64) {
+        self.entries.push(Entry { item, seq, score, overtaken: 0 });
     }
 
     /// Pops that overtook an older arrival so far.
@@ -221,6 +286,53 @@ mod tests {
             assert_eq!(q.pop_best(), Some(i));
         }
         assert_eq!(q.reorders(), 0);
+    }
+
+    #[test]
+    fn reinsert_keeps_the_original_arrival_stamp() {
+        let mut q = AdmissionQueue::new();
+        q.push("old", 1.0);
+        q.push("new", 1.0);
+        let (item, score, seq) = q.pop_best_entry().unwrap();
+        assert_eq!(item, "old"); // uniform scores: FIFO
+        q.reinsert(item, score, seq);
+        // the reinserted entry still ties on score and still wins FIFO
+        assert_eq!(q.pop_best(), Some("old"));
+        assert_eq!(q.pop_best(), Some("new"));
+    }
+
+    #[test]
+    fn losing_strategy_scores_below_winning_one() {
+        use crate::draft::StrategyKind;
+
+        let cm = CostModel::for_analog("mistral");
+        let m = Metrics::new();
+        // context n-gram (the Context strategy's kind) wins often and its
+        // rows survive deep; ext-bigram wins as often but its rows die at
+        // the first draft token — a consistently LOSING source
+        for _ in 0..10 {
+            m.record_strategy_step(StrategyKind::ContextNgram, 4);
+            m.record_strategy_step(StrategyKind::ExtendedBigram, 0);
+        }
+        let winner = strategy_prior_tpc(&m, StrategyName::Context);
+        let loser = strategy_prior_tpc(&m, StrategyName::ExtBigram);
+        assert!(
+            winner > loser,
+            "winning prior {winner} must beat losing prior {loser}"
+        );
+        assert!((loser - 1.0).abs() < 1e-9, "a never-accepting strategy is greedy-equivalent");
+        // the scores inherit the ordering at identical shapes/prompts
+        let eng = EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: 64 };
+        let s_win = request_score(&cm, winner, StrategyName::Context, &eng, 100);
+        let s_lose = request_score(&cm, loser, StrategyName::ExtBigram, &eng, 100);
+        assert!(s_win > s_lose, "winner score {s_win} <= loser score {s_lose}");
+        // a strategy with NO per-kind evidence falls back to the
+        // fleet-wide tokens/call instead of being scored as a loser
+        let fallback = strategy_prior_tpc(&m, StrategyName::Session);
+        assert!((fallback - m.tokens_per_call()).abs() < 1e-9);
+        // fully cold fleet: prior 0 = FIFO
+        let cold = Metrics::new();
+        assert_eq!(strategy_prior_tpc(&cold, StrategyName::Context), 0.0);
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Demand-driven lane autoscaling for the elastic batched serving path.
+//! Demand-driven TWO-LEVEL autoscaling for the elastic batched serving
+//! path: lanes within an engine, whole engines within the pool.
 //!
 //! The fixed `--batch N` flag forced operators to pick one lane count for
 //! the whole process lifetime: too low and the queue backs up under
@@ -10,6 +11,16 @@
 //! into a target lane count, which the scheduler applies through
 //! [`crate::engine::BatchedEngine::set_capacity`]. `--batch` survives as
 //! the CAP on the scale range, not the pinned value.
+//!
+//! One level up, the [`EngineScaler`] does the same for whole
+//! [`crate::engine::BatchedEngine`] worker threads in the engine pool
+//! ([`crate::scheduler::pool`]; `--engines N` is the engine cap):
+//! sustained lane demand beyond what the live engines can hold
+//! spawns another engine (each with its own `ModelRuntime` and KV pool),
+//! sustained quiet retires one. Both directions are hysteretic — an
+//! engine spawn loads a whole model runtime, so it must not happen on a
+//! single-iteration blip, and a retire discards warm state, so it waits
+//! for a long quiet streak.
 //!
 //! The policy is deliberately deterministic (no clocks, no RNG): scale-up
 //! is immediate (a queued request is latency the moment it waits),
@@ -123,6 +134,110 @@ impl Autoscaler {
     }
 }
 
+/// Tuning knobs for the ENGINE level of the two-level autoscaler: how many
+/// [`crate::engine::BatchedEngine`] worker threads the pool may run, and
+/// how sticky spawn/retire decisions are.
+#[derive(Debug, Clone)]
+pub struct EngineScaleConfig {
+    /// Lower bound of the engine range (also the boot count). At least 1.
+    pub min_engines: usize,
+    /// Upper bound of the engine range (`--engines N` becomes this).
+    pub max_engines: usize,
+    /// Consecutive over-demand decisions required before the pool spawns
+    /// ONE engine (a spawn loads a whole `ModelRuntime`, so a single
+    /// burst iteration must not trigger it).
+    pub up_after_steps: u32,
+    /// Consecutive under-demand decisions required before the pool
+    /// retires ONE engine. Much stickier than the lane-level knob: a
+    /// retired engine's warm state (compiled shapes, session caches) is
+    /// gone for good.
+    pub down_after_steps: u32,
+}
+
+impl EngineScaleConfig {
+    /// Defaults for a given engine cap: boot one engine, spawn after 2
+    /// sustained-pressure decisions, retire after 32 quiet ones.
+    pub fn for_cap(max_engines: usize) -> Self {
+        EngineScaleConfig {
+            min_engines: 1,
+            max_engines: max_engines.max(1),
+            up_after_steps: 2,
+            down_after_steps: 32,
+        }
+    }
+}
+
+/// The engine-count decision state machine — the top level of the
+/// two-level autoscaler. Pure and deterministic like [`Autoscaler`]: the
+/// target is a function of the demand snapshot plus two streak counters.
+#[derive(Debug)]
+pub struct EngineScaler {
+    cfg: EngineScaleConfig,
+    /// consecutive decisions where demand exceeded live engine capacity
+    high_streak: u32,
+    /// consecutive decisions where demand fit in one fewer engine
+    low_streak: u32,
+    ups: u64,
+    downs: u64,
+}
+
+impl EngineScaler {
+    /// A fresh engine scaler for `cfg` (no demand history).
+    pub fn new(cfg: EngineScaleConfig) -> Self {
+        EngineScaler { cfg, high_streak: 0, low_streak: 0, ups: 0, downs: 0 }
+    }
+
+    /// Decide the engine-count target for the next pool iteration.
+    ///
+    /// `demand_lanes` is the pool-wide lane demand (active sequences +
+    /// routed backlog + heat-discounted queue depth — the same quantity
+    /// the lane-level [`Autoscaler`] works from), `lane_cap` the
+    /// per-engine lane cap, and `engines` the current live engine count.
+    /// The needed engine count is `ceil(demand / lane_cap)` clamped into
+    /// the configured range; both scale directions move ONE engine at a
+    /// time and only after their streak threshold, so neither a burst
+    /// nor a lull can thrash whole model runtimes.
+    pub fn target_engines(&mut self, demand_lanes: usize, lane_cap: usize, engines: usize)
+                          -> usize {
+        let needed = demand_lanes
+            .div_ceil(lane_cap.max(1))
+            .clamp(self.cfg.min_engines, self.cfg.max_engines);
+        if needed > engines {
+            self.low_streak = 0;
+            self.high_streak += 1;
+            if self.high_streak >= self.cfg.up_after_steps {
+                self.high_streak = 0;
+                self.ups += 1;
+                return engines + 1;
+            }
+            engines
+        } else if needed < engines {
+            self.high_streak = 0;
+            self.low_streak += 1;
+            if self.low_streak >= self.cfg.down_after_steps {
+                self.low_streak = 0;
+                self.downs += 1;
+                return (engines - 1).max(needed);
+            }
+            engines
+        } else {
+            self.high_streak = 0;
+            self.low_streak = 0;
+            engines
+        }
+    }
+
+    /// (spawn events, retire events) decided so far.
+    pub fn events(&self) -> (u64, u64) {
+        (self.ups, self.downs)
+    }
+
+    /// The configured engine range.
+    pub fn config(&self) -> &EngineScaleConfig {
+        &self.cfg
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -199,5 +314,70 @@ mod tests {
         assert_eq!(s.target_lanes(&demand(0, 3, 3, None)), 3);
         assert_eq!(s.target_lanes(&demand(0, 0, 3, None)), 2);
         assert_eq!(s.target_lanes(&demand(0, 0, 2, None)), 2);
+    }
+
+    fn escaler(min: usize, max: usize, up: u32, down: u32) -> EngineScaler {
+        EngineScaler::new(EngineScaleConfig {
+            min_engines: min,
+            max_engines: max,
+            up_after_steps: up,
+            down_after_steps: down,
+        })
+    }
+
+    #[test]
+    fn engine_spawn_needs_sustained_pressure() {
+        let mut s = escaler(1, 4, 3, 8);
+        // demand for 2 engines (lane cap 4): two pressure ticks hold, the
+        // third spawns exactly one engine
+        assert_eq!(s.target_engines(7, 4, 1), 1);
+        assert_eq!(s.target_engines(7, 4, 1), 1);
+        assert_eq!(s.target_engines(7, 4, 1), 2);
+        assert_eq!(s.events(), (1, 0));
+        // the streak resets after a spawn: growth to 3 takes 3 more ticks
+        assert_eq!(s.target_engines(12, 4, 2), 2);
+        assert_eq!(s.target_engines(12, 4, 2), 2);
+        assert_eq!(s.target_engines(12, 4, 2), 3);
+    }
+
+    #[test]
+    fn engine_retire_is_stickier_and_single_step() {
+        let mut s = escaler(1, 4, 1, 3);
+        // quiet against 3 engines: two quiet ticks hold, the third
+        // retires exactly one
+        assert_eq!(s.target_engines(2, 4, 3), 3);
+        assert_eq!(s.target_engines(2, 4, 3), 3);
+        assert_eq!(s.target_engines(2, 4, 3), 2);
+        assert_eq!(s.events(), (0, 1));
+    }
+
+    #[test]
+    fn engine_cap_and_floor_bound_the_target() {
+        let mut s = escaler(1, 2, 1, 1);
+        // huge demand: one spawn per decision, never past the cap
+        assert_eq!(s.target_engines(100, 4, 1), 2);
+        assert_eq!(s.target_engines(100, 4, 2), 2);
+        // zero demand: retire one at a time, never below min_engines
+        assert_eq!(s.target_engines(0, 4, 2), 1);
+        assert_eq!(s.target_engines(0, 4, 1), 1);
+    }
+
+    #[test]
+    fn engine_burst_resets_the_retire_streak() {
+        let mut s = escaler(1, 4, 1, 2);
+        assert_eq!(s.target_engines(1, 4, 2), 2); // quiet tick 1
+        assert_eq!(s.target_engines(9, 4, 2), 3); // burst: spawn, streak 0
+        assert_eq!(s.target_engines(1, 4, 3), 3); // quiet tick 1 again
+        assert_eq!(s.target_engines(1, 4, 3), 2); // quiet tick 2: retire
+    }
+
+    #[test]
+    fn matched_demand_holds_and_clears_streaks() {
+        let mut s = escaler(1, 4, 2, 2);
+        assert_eq!(s.target_engines(9, 4, 2), 2); // pressure tick 1
+        assert_eq!(s.target_engines(8, 4, 2), 2); // exact fit: streak cleared
+        assert_eq!(s.target_engines(9, 4, 2), 2); // pressure tick 1 again
+        assert_eq!(s.target_engines(9, 4, 2), 3); // tick 2: spawn
+        assert_eq!(s.events(), (1, 0));
     }
 }

@@ -6,30 +6,37 @@
 //!   worker owns a private `ModelRuntime` and decodes one request at a time
 //!   with `SpecDecoder` — the model-call batch dimension is spent entirely
 //!   on that request's speculation rows.
-//! - **Batched engine** (`batch >= 2`): one engine thread drives a
-//!   continuous-batching [`BatchedEngine`]. Requests are admitted as lanes
-//!   free up, every active sequence's draft rows are verified in one
-//!   packed call per step, and responses complete out of order — the batch
-//!   dimension is spent on requests AND rows. By default the engine is
-//!   **elastic** (`ServeConfig::elastic`): the lane pool scales between
-//!   `autoscale.min_lanes` and `batch` from observed demand
-//!   ([`autoscale::Autoscaler`]), the per-step row budget is derived
-//!   online from the cost model (`--budget` caps it), and admissions are
-//!   ordered by expected accepted-tokens-per-cost
-//!   ([`admission::AdmissionQueue`]) rather than FIFO.
+//! - **Engine pool** (`batch >= 2`): a [`pool`] of up to
+//!   `ServeConfig::engines` continuous-batching worker threads, each
+//!   driving its own [`crate::engine::BatchedEngine`] over its own
+//!   `ModelRuntime` and resizable KV lane pool, behind ONE scored
+//!   [`admission::AdmissionQueue`]. Requests are routed depth-aware —
+//!   greedy (w = 0) and speculative traffic land on different engines
+//!   while capacity allows — admitted as lanes free up, and every engine
+//!   verifies its active sequences' draft rows in packed calls per step;
+//!   responses complete out of order. By default the pool is **elastic**
+//!   (`ServeConfig::elastic`), autoscaled at TWO levels: each engine's
+//!   lane pool scales between `autoscale.min_lanes` and the `batch`
+//!   per-engine cap ([`autoscale::Autoscaler`]), and whole engines are
+//!   spawned/retired between 1 and the `engines` cap on sustained
+//!   pressure/quiet ([`autoscale::EngineScaler`]); the per-step row
+//!   budget is derived online from the cost model (`--budget` caps it)
+//!   and admissions are ordered by expected accepted-tokens-per-cost with
+//!   per-strategy priors ([`admission::strategy_prior_tpc`]) rather than
+//!   FIFO.
 //!
 //! Both modes share the same bounded-queue backpressure: `submit` fails
 //! fast — counting and logging the rejection — when the queue is full.
 
 pub mod admission;
 pub mod autoscale;
+pub mod pool;
 
-pub use admission::{request_score, AdmissionQueue};
-pub use autoscale::{AutoscaleConfig, Autoscaler, Demand};
+pub use admission::{request_score, strategy_prior_tpc, AdmissionQueue};
+pub use autoscale::{AutoscaleConfig, Autoscaler, Demand, EngineScaleConfig, EngineScaler};
 
-use std::collections::HashMap;
 use std::sync::atomic::Ordering;
-use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TryRecvError, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -38,12 +45,11 @@ use anyhow::{anyhow, Result};
 
 use crate::adaptive::{self, SeqController};
 use crate::config::{EngineConfig, Manifest, ServeConfig, SessionCacheConfig};
-use crate::costmodel::CostModel;
 use crate::draft::{
     ContextNgram, DraftStrategy, ExtendedBigram, JacobiDraft, MixedStrategy, ModelBigram,
     ModelUnigram, NgramTables, SessionNgramCache, StrategyKind,
 };
-use crate::engine::{AutoBudget, BatchedEngine, GenResult, NoDraft, SeqId, SpecDecoder};
+use crate::engine::{GenResult, NoDraft, SpecDecoder};
 use crate::metrics::Metrics;
 use crate::runtime::ModelRuntime;
 use crate::tokenizer::TokenId;
@@ -121,6 +127,56 @@ impl StrategyName {
             Self::Session => "session",
             Self::Adaptive => "adaptive",
             Self::None => "none",
+        }
+    }
+
+    /// The draft-row [`StrategyKind`]s this strategy actually produces —
+    /// the key set for the per-strategy admission prior
+    /// ([`strategy_prior_tpc`]): a request's expected tokens/call should
+    /// come from its own draft sources' acceptance record, not the
+    /// fleet-wide average. `Adaptive` spans its default arm set
+    /// ([`crate::adaptive::DEFAULT_ARMS`]); `None` drafts nothing.
+    pub fn kinds(&self) -> &'static [StrategyKind] {
+        match self {
+            Self::Mixed => &[StrategyKind::ContextNgram, StrategyKind::ExtendedBigram],
+            Self::Context => &[StrategyKind::ContextNgram],
+            Self::Bigram => &[StrategyKind::ModelBigram],
+            Self::Unigram => &[StrategyKind::ModelUnigram],
+            Self::ExtBigram => &[StrategyKind::ExtendedBigram],
+            Self::Jacobi => &[StrategyKind::Jacobi],
+            Self::Session => &[StrategyKind::SessionCache],
+            Self::Adaptive => &[
+                StrategyKind::ContextNgram,
+                StrategyKind::ExtendedBigram,
+                StrategyKind::SessionCache,
+            ],
+            Self::None => &[],
+        }
+    }
+}
+
+/// Speculation-depth class of a request — the engine pool's routing
+/// bucket. Greedy (w = 0) and speculative traffic are kept on different
+/// engines while capacity allows, so a greedy request can only collapse
+/// the packed depth of a group that is already greedy (the in-engine
+/// per-class depth split covers the forced-mixing fallback).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepthClass {
+    /// speculation disabled: strategy `none` or a w = 0 shape
+    Greedy,
+    /// every other request (drafts ride verification calls)
+    Speculative,
+}
+
+impl DepthClass {
+    /// Classify a request the same way [`request_score`] prices it: it is
+    /// greedy exactly when speculation cannot emit more than one token
+    /// per call by construction.
+    pub fn of(strategy: StrategyName, engine: &EngineConfig) -> Self {
+        if strategy == StrategyName::None || engine.w == 0 {
+            DepthClass::Greedy
+        } else {
+            DepthClass::Speculative
         }
     }
 }
@@ -215,10 +271,12 @@ pub struct Scheduler {
 
 impl Scheduler {
     /// Spin up workers for `model`: `cfg.workers` per-sequence workers, or
-    /// (when `cfg.batch >= 2`) one batched engine thread — with `cfg.batch`
-    /// pooled KV lanes when `cfg.elastic` is off, or a demand-autoscaled
-    /// lane pool capped at `cfg.batch` when it is on (the default). Each
-    /// thread loads its own ModelRuntime.
+    /// (when `cfg.batch >= 2`) an engine-[`pool`] dispatcher thread
+    /// driving up to `cfg.engines` batched engine workers — each with
+    /// `cfg.batch` pooled KV lanes when `cfg.elastic` is off, or a
+    /// demand-autoscaled lane pool capped at `cfg.batch` when it is on
+    /// (the default, which also spawns/retires whole engines on sustained
+    /// pressure/quiet). Each engine thread loads its own ModelRuntime.
     pub fn start(manifest: &Manifest, model: &str, cfg: &ServeConfig) -> Result<Scheduler> {
         let art = manifest.model(model)?.clone();
         let tables = Arc::new(NgramTables::load(&art)?);
@@ -228,24 +286,14 @@ impl Scheduler {
 
         let mut workers = Vec::new();
         if cfg.batch >= 2 {
-            let lanes = cfg.batch;
             let rx = rx.clone();
             let tables = tables.clone();
             let metrics = metrics.clone();
             let scfg = cfg.clone();
             let handle = std::thread::Builder::new()
-                .name("ngrammys-batch-engine".to_string())
-                .spawn(move || {
-                    let runtime = match ModelRuntime::load(&art) {
-                        Ok(rt) => rt,
-                        Err(e) => {
-                            eprintln!("batch engine: runtime load failed: {e:#}");
-                            return;
-                        }
-                    };
-                    batched_worker_loop(&runtime, lanes, tables, metrics, rx, &scfg);
-                })
-                .expect("spawning batch engine");
+                .name("ngrammys-engine-pool".to_string())
+                .spawn(move || pool::run_pool(art, tables, metrics, rx, scfg))
+                .expect("spawning engine pool");
             workers.push(handle);
         } else {
             for wid in 0..cfg.workers.max(1) {
@@ -354,197 +402,6 @@ fn worker_loop(
             .generate(&job.req.prompt)
             .map(|r| finish_response(&metrics, t, r));
         let _ = job.reply.send(result);
-    }
-}
-
-/// A fresh batched engine for the worker loop: traces on (they feed the
-/// step-latency histogram) and, in elastic mode, the online-derived row
-/// budget installed with the operator `--budget` demoted to a cap.
-fn fresh_engine<'rt>(
-    runtime: &'rt ModelRuntime,
-    lanes: usize,
-    scfg: &ServeConfig,
-    analog: &str,
-) -> BatchedEngine<'rt> {
-    let mut eng = BatchedEngine::with_budget(runtime, lanes, scfg.budget);
-    eng.collect_traces = true;
-    if scfg.elastic {
-        eng.auto_budget = Some(AutoBudget {
-            cm: CostModel::for_analog(analog),
-            slack: scfg.budget_slack,
-        });
-    }
-    eng
-}
-
-/// Score an arriving job and move it into the admission holding pen.
-/// With elastic off, every job gets the same score, and the queue's
-/// FIFO tie-break makes admission exactly the pre-elastic arrival order.
-fn enqueue_job(
-    adq: &mut AdmissionQueue<Job>,
-    job: Job,
-    cm: &CostModel,
-    metrics: &Metrics,
-    elastic: bool,
-) {
-    let score = if elastic {
-        request_score(
-            cm,
-            metrics.tokens_per_call(),
-            job.req.strategy,
-            &job.req.engine,
-            job.req.prompt.len(),
-        )
-    } else {
-        0.0
-    };
-    adq.push(job, score);
-}
-
-/// The continuous-batching worker: one engine, many in-flight requests.
-/// Blocks on the queue only when idle; while sequences are active it
-/// drains the queue opportunistically between steps so arrivals join the
-/// running batch without waiting for it to finish.
-///
-/// Elastic mode (`scfg.elastic`, the default) closes three loops per
-/// iteration that the static mode leaves to the operator:
-///
-/// 1. **lanes** — the [`Autoscaler`] turns (queue depth, active count,
-///    mean controller heat) into a lane target between
-///    `autoscale.min_lanes` and `lane_cap`, applied via
-///    `BatchedEngine::set_capacity` (shrinks reclaim only free lanes);
-/// 2. **budget** — the engine re-derives its packed-row budget each step
-///    from `CostModel::memory_bound_rows` at the current context lengths
-///    (`--budget` caps it);
-/// 3. **admission order** — lanes go to the highest
-///    [`request_score`] first instead of FIFO.
-///
-/// None of this touches output bytes: every stream stays the base
-/// model's greedy continuation (asserted in `rust/tests/elastic.rs`).
-fn batched_worker_loop(
-    runtime: &ModelRuntime,
-    lane_cap: usize,
-    tables: Arc<NgramTables>,
-    metrics: Arc<Metrics>,
-    rx: Arc<Mutex<Receiver<Job>>>,
-    scfg: &ServeConfig,
-) {
-    let analog = runtime.artifacts().dims.analog.clone();
-    let cm = CostModel::for_analog(&analog);
-    let mut au_cfg = scfg.autoscale.clone();
-    au_cfg.max_lanes = lane_cap;
-    au_cfg.min_lanes = au_cfg.min_lanes.clamp(1, lane_cap);
-    let boot_lanes = if scfg.elastic { au_cfg.min_lanes } else { lane_cap };
-    let mut scaler = Autoscaler::new(au_cfg);
-
-    let mut eng = fresh_engine(runtime, boot_lanes, scfg, &analog);
-    let mut adq: AdmissionQueue<Job> = AdmissionQueue::new();
-    let mut inflight: HashMap<SeqId, (Sender<Result<GenResponse>>, Instant)> = HashMap::new();
-    loop {
-        // block for work only when fully idle
-        if eng.active() == 0 && adq.is_empty() {
-            if scfg.elastic {
-                // Fully idle: give the lane memory back NOW. The loop is
-                // about to block, so the hysteretic scale-down path below
-                // would never tick; with every lane free the shrink to
-                // min_lanes succeeds in one call.
-                let min = scaler.config().min_lanes;
-                let lanes = eng.set_capacity(min);
-                metrics.lanes_target.store(min as u64, Ordering::Relaxed);
-                metrics.lanes.store(lanes as u64, Ordering::Relaxed);
-            }
-            match rx.lock().unwrap().recv() {
-                Ok(job) => enqueue_job(&mut adq, job, &cm, &metrics, scfg.elastic),
-                Err(_) => return, // scheduler dropped, everything drained
-            }
-        }
-        // drain arrivals into the scored holding pen
-        loop {
-            match rx.lock().unwrap().try_recv() {
-                Ok(job) => enqueue_job(&mut adq, job, &cm, &metrics, scfg.elastic),
-                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
-            }
-        }
-        // scale lanes to demand
-        if scfg.elastic {
-            let target = scaler.target_lanes(&Demand {
-                queue_depth: adq.len(),
-                active: eng.active(),
-                lanes: eng.capacity(),
-                mean_heat: eng.mean_heat(),
-            });
-            let achieved = eng.set_capacity(target);
-            metrics.lanes_target.store(target as u64, Ordering::Relaxed);
-            metrics.lanes.store(achieved as u64, Ordering::Relaxed);
-        } else {
-            metrics.lanes_target.store(lane_cap as u64, Ordering::Relaxed);
-            metrics.lanes.store(eng.capacity() as u64, Ordering::Relaxed);
-        }
-        // admit best-scored first while lanes are free
-        while eng.has_capacity() {
-            let Some(job) = adq.pop_best() else { break };
-            admit_job(&mut eng, job, &tables, &metrics, &mut inflight, scfg, runtime);
-        }
-        metrics.admission_reorders.store(adq.reorders(), Ordering::Relaxed);
-        if eng.active() == 0 {
-            continue; // every pending admission failed; wait for work
-        }
-        match eng.step() {
-            Ok(done) => {
-                if let Some(b) = eng.last_step_budget() {
-                    metrics.derived_budget.store(b as u64, Ordering::Relaxed);
-                }
-                for (id, r) in done {
-                    if let Some((reply, t)) = inflight.remove(&id) {
-                        let _ = reply.send(Ok(finish_response(&metrics, t, r)));
-                    }
-                }
-            }
-            Err(e) => {
-                // A step error poisons the whole batch (shared call): fail
-                // every in-flight request and restart with a fresh engine
-                // at the capacity the autoscaler had reached.
-                eprintln!("batch engine: step failed: {e:#}");
-                for (_, (reply, _)) in inflight.drain() {
-                    let _ = reply.send(Err(anyhow!("batched engine step failed: {e:#}")));
-                }
-                let lanes = eng.capacity();
-                eng = fresh_engine(runtime, lanes, scfg, &analog);
-            }
-        }
-    }
-}
-
-#[allow(clippy::too_many_arguments)]
-fn admit_job(
-    eng: &mut BatchedEngine,
-    job: Job,
-    tables: &Arc<NgramTables>,
-    metrics: &Metrics,
-    inflight: &mut HashMap<SeqId, (Sender<Result<GenResponse>>, Instant)>,
-    scfg: &ServeConfig,
-    runtime: &ModelRuntime,
-) {
-    metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
-    let strategy =
-        make_strategy_with_cache(job.req.strategy, tables, job.req.engine.q, &scfg.session_cache);
-    let controller =
-        controller_for_request(job.req.strategy, tables, job.req.engine.q, scfg, runtime);
-    // start the latency clock BEFORE admit: admit runs the prefill, which
-    // the per-sequence worker's clock also covers — keep the modes
-    // comparable in latency_ms and /metrics
-    let t = Instant::now();
-    match eng.admit_with(&job.req.prompt, strategy, controller, job.req.engine.clone()) {
-        Ok(id) => {
-            inflight.insert(id, (job.reply, t));
-        }
-        Err(e) => {
-            // count + log: an admission that dies here (no lane after all,
-            // prefill failure) must not vanish into the reply channel only
-            metrics.admissions_failed.fetch_add(1, Ordering::Relaxed);
-            eprintln!("batch engine: admission failed: {e:#}");
-            let _ = job.reply.send(Err(e));
-        }
     }
 }
 

@@ -1,0 +1,749 @@
+//! Multi-engine scale-out: several [`BatchedEngine`] worker threads
+//! behind ONE admission queue, with two-level autoscaling and depth-aware
+//! routing.
+//!
+//! The elastic scheduler used to funnel every request through a single
+//! engine thread, so one `ModelRuntime` was the throughput ceiling no
+//! matter how high the lane cap went, and a single greedy (w = 0)
+//! request could collapse the packed depth of its whole group. The
+//! `EnginePool` removes both limits:
+//!
+//! - **Scale-out** — a dispatcher thread owns the scored
+//!   [`AdmissionQueue`] and routes requests to up to
+//!   `ServeConfig::engines` engine worker threads, each with its own
+//!   `ModelRuntime` and resizable KV lane pool (`--batch` is the
+//!   PER-ENGINE lane cap). The autoscaler is two-level: each worker
+//!   scales its own lanes ([`Autoscaler`], level 1) while the dispatcher
+//!   spawns/retires whole engines on sustained pressure/quiet
+//!   ([`EngineScaler`], level 2). A spawn loads a full runtime; a retire
+//!   only ever takes an idle engine, so in-flight requests never move.
+//! - **Depth-aware routing** — requests are bucketed by
+//!   [`DepthClass`] (greedy w = 0 vs speculative) and placed on the
+//!   least-loaded engine whose resident population is depth-compatible,
+//!   so greedy traffic cannot sit in speculative packed groups at all
+//!   while capacity allows. A request that only incompatible engines
+//!   could take is deferred at most [`STARVATION_DEFERRALS`] routing
+//!   rounds, then placed anywhere with room (counted in
+//!   `ngrammys_routing_fallbacks`); the engine-level per-class depth
+//!   split (`engine/batched.rs`) keeps even that fallback from zeroing
+//!   co-resident speculation depth.
+//!
+//! CORRECTNESS: routing, spawn/retire and both autoscale levels only
+//! decide WHERE and alongside WHOM a sequence decodes — each stream is
+//! still exactly the base model's greedy continuation of its prompt
+//! (byte-identity across engine caps 1/2/4 and adversarial spawn/retire
+//! trajectories is pinned in `rust/tests/pool.rs`).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError, TrySendError,
+};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{ModelArtifacts, ServeConfig};
+use crate::costmodel::CostModel;
+use crate::draft::NgramTables;
+use crate::engine::{AutoBudget, BatchedEngine, SeqId};
+use crate::metrics::{EngineGauges, Metrics};
+use crate::runtime::ModelRuntime;
+
+use super::admission::{request_score, strategy_prior_tpc, AdmissionQueue};
+use super::autoscale::{Autoscaler, Demand, EngineScaler};
+use super::{
+    controller_for_request, finish_response, make_strategy_with_cache, DepthClass, GenResponse,
+    Job,
+};
+
+/// Dispatcher pacing: how long one routing iteration waits on the arrival
+/// channel while engines are busy. Bounds routing latency without
+/// spinning; correctness never depends on it.
+const DISPATCH_TICK: Duration = Duration::from_millis(1);
+
+/// Routing rounds a request may be deferred because only
+/// depth-INCOMPATIBLE engines had room, before it is placed on any engine
+/// with a free slot. Keeps depth segregation a performance policy, never
+/// a progress hazard.
+pub const STARVATION_DEFERRALS: u32 = 4;
+
+/// Consecutive engine-spawn failures (runtime load errors) after which
+/// the pool stops respawning and fails queued work fast instead.
+const MAX_SPAWN_FAILURES: u32 = 3;
+
+/// A routed request: the scheduler job plus its depth bucket and how
+/// often depth-aware placement has already passed it over.
+struct PoolJob {
+    job: Job,
+    class: DepthClass,
+    deferrals: u32,
+}
+
+/// Gauges one engine worker exports to the dispatcher (lock-free; the
+/// dispatcher snapshots them into [`Metrics`] every iteration).
+struct EngineStatus {
+    /// jobs routed to this worker but not yet admitted to a lane
+    backlog: AtomicUsize,
+    /// sequences currently decoding
+    active: AtomicUsize,
+    /// resident + routed greedy requests (depth bucket population)
+    greedy: AtomicUsize,
+    /// resident + routed speculative requests
+    spec: AtomicUsize,
+    /// current lane-pool capacity
+    lanes: AtomicUsize,
+    /// the lane target the worker's autoscaler last decided
+    lanes_target: AtomicUsize,
+    /// mean controller heat across the worker's lanes, milli-units
+    heat_milli: AtomicU64,
+    /// bytes this engine's KV lane pool currently pins
+    kv_bytes: AtomicU64,
+    /// worker is retiring (or failed to boot): route nothing more to it
+    draining: AtomicBool,
+    /// the worker never served: its `ModelRuntime` failed to load
+    load_failed: AtomicBool,
+}
+
+impl EngineStatus {
+    fn new() -> Self {
+        EngineStatus {
+            backlog: AtomicUsize::new(0),
+            active: AtomicUsize::new(0),
+            greedy: AtomicUsize::new(0),
+            spec: AtomicUsize::new(0),
+            lanes: AtomicUsize::new(0),
+            lanes_target: AtomicUsize::new(0),
+            heat_milli: AtomicU64::new(0),
+            kv_bytes: AtomicU64::new(0),
+            draining: AtomicBool::new(false),
+            load_failed: AtomicBool::new(false),
+        }
+    }
+
+    /// Requests this engine currently owns (decoding + routed backlog).
+    fn held(&self) -> usize {
+        self.active.load(Ordering::Relaxed) + self.backlog.load(Ordering::Relaxed)
+    }
+
+    fn idle(&self) -> bool {
+        self.held() == 0
+    }
+
+    /// Whether a `class` request can join this engine without mixing
+    /// depth buckets (an empty engine is compatible with everything).
+    fn compatible(&self, class: DepthClass) -> bool {
+        match class {
+            DepthClass::Greedy => self.spec.load(Ordering::Relaxed) == 0,
+            DepthClass::Speculative => self.greedy.load(Ordering::Relaxed) == 0,
+        }
+    }
+
+    fn class_counter(&self, class: DepthClass) -> &AtomicUsize {
+        match class {
+            DepthClass::Greedy => &self.greedy,
+            DepthClass::Speculative => &self.spec,
+        }
+    }
+
+    fn heat(&self) -> f64 {
+        self.heat_milli.load(Ordering::Relaxed) as f64 / 1e3
+    }
+}
+
+/// One engine worker as the dispatcher sees it.
+struct EngineSlot {
+    /// stable spawn ordinal — the `engine="<id>"` label on `/metrics`
+    id: u64,
+    /// `None` once the engine is retiring (closing the channel is the
+    /// retire signal; the worker exits when its backlog drains)
+    tx: Option<SyncSender<PoolJob>>,
+    status: Arc<EngineStatus>,
+    handle: JoinHandle<()>,
+}
+
+impl EngineSlot {
+    fn live(&self) -> bool {
+        self.tx.is_some() && !self.status.draining.load(Ordering::Relaxed)
+    }
+
+    /// Whether the dispatcher may route one more request here.
+    fn can_take(&self, lane_cap: usize) -> bool {
+        self.live() && self.status.held() < lane_cap
+    }
+}
+
+/// The pool dispatcher: runs on the scheduler's `ngrammys-engine-pool`
+/// thread until the scheduler shuts down and every routed request has
+/// been answered.
+pub(super) fn run_pool(
+    art: ModelArtifacts,
+    tables: Arc<NgramTables>,
+    metrics: Arc<Metrics>,
+    rx: Arc<Mutex<Receiver<Job>>>,
+    scfg: ServeConfig,
+) {
+    let cm = CostModel::for_analog(&art.dims.analog);
+    let lane_cap = scfg.batch.max(2);
+    let mut es_cfg = scfg.engine_scale.clone();
+    es_cfg.max_engines = scfg.engines.max(1);
+    es_cfg.min_engines = es_cfg.min_engines.clamp(1, es_cfg.max_engines);
+    let boot = if scfg.elastic { es_cfg.min_engines } else { es_cfg.max_engines };
+    let mut scaler = EngineScaler::new(es_cfg.clone());
+
+    let mut next_id = 0u64;
+    let mut engines: Vec<EngineSlot> = Vec::new();
+    for _ in 0..boot {
+        engines.push(spawn_engine(&mut next_id, &art, &tables, &metrics, &scfg, lane_cap));
+    }
+
+    let mut adq: AdmissionQueue<PoolJob> = AdmissionQueue::new();
+    let mut spawn_failures = 0u32;
+    let mut open = true;
+    loop {
+        spawn_failures += reap(&mut engines);
+        let busy = engines.iter().any(|e| !e.status.idle());
+        if !open && adq.is_empty() && !busy {
+            break; // scheduler gone, every request answered
+        }
+
+        // ---- arrivals
+        if open && adq.is_empty() && !busy {
+            // Fully idle and about to block: retire surplus engines NOW
+            // (all are idle, so each retire completes as soon as the
+            // worker notices) — the engine-level mirror of the lane
+            // pool's idle shrink. The hysteretic path below never ticks
+            // while the dispatcher is parked in recv().
+            if scfg.elastic {
+                while live_count(&engines) > es_cfg.min_engines && retire_one(&mut engines) {}
+            }
+            publish(&metrics, &engines);
+            match rx.lock().unwrap().recv() {
+                Ok(job) => enqueue(&mut adq, job, &cm, &metrics, scfg.elastic),
+                Err(_) => open = false,
+            }
+        } else if open {
+            // pace the loop on the arrival channel: picks up new work
+            // and yields the CPU while the engine workers step
+            match rx.lock().unwrap().recv_timeout(DISPATCH_TICK) {
+                Ok(job) => enqueue(&mut adq, job, &cm, &metrics, scfg.elastic),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => open = false,
+            }
+        } else {
+            std::thread::sleep(DISPATCH_TICK);
+        }
+        while open {
+            let polled = rx.lock().unwrap().try_recv();
+            match polled {
+                Ok(job) => enqueue(&mut adq, job, &cm, &metrics, scfg.elastic),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+
+        // ---- engine-level scaling (level 2 of the autoscaler)
+        let live = live_count(&engines);
+        if scfg.elastic {
+            let target = scaler.target_engines(lane_demand(&engines, &adq), lane_cap, live);
+            metrics.engines_target.store(target as u64, Ordering::Relaxed);
+            if target > live && spawn_failures <= MAX_SPAWN_FAILURES {
+                engines.push(spawn_engine(&mut next_id, &art, &tables, &metrics, &scfg, lane_cap));
+            } else if target < live {
+                // only an IDLE engine retires; if none is idle the
+                // scaler simply re-decides on a later iteration
+                retire_one(&mut engines);
+            }
+        } else {
+            metrics.engines_target.store(es_cfg.max_engines as u64, Ordering::Relaxed);
+            // fixed pool: replace crashed engines (bounded by the spawn
+            // failure cap so a broken artifact set cannot spawn forever)
+            while live_count(&engines) < es_cfg.max_engines && spawn_failures <= MAX_SPAWN_FAILURES
+            {
+                engines.push(spawn_engine(&mut next_id, &art, &tables, &metrics, &scfg, lane_cap));
+            }
+        }
+
+        // every engine dead and no way to spawn more: fail queued work
+        // fast rather than holding clients forever
+        if live_count(&engines) == 0 && spawn_failures > MAX_SPAWN_FAILURES {
+            while let Some((pj, _, _)) = adq.pop_best_entry() {
+                metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                metrics.admissions_failed.fetch_add(1, Ordering::Relaxed);
+                let _ = pj
+                    .job
+                    .reply
+                    .send(Err(anyhow!("engine pool: no engine available (runtime load failed)")));
+            }
+        }
+
+        // ---- depth-aware routing
+        route(&mut adq, &engines, &metrics, lane_cap);
+        metrics.admission_reorders.store(adq.reorders(), Ordering::Relaxed);
+
+        // ---- gauges
+        publish(&metrics, &engines);
+    }
+    // shutdown: close every channel, then join the workers
+    for e in &mut engines {
+        e.tx = None;
+    }
+    publish(&metrics, &engines);
+    for e in engines {
+        let _ = e.handle.join();
+    }
+}
+
+/// Score an arriving job and move it into the admission holding pen.
+/// With elastic off every job scores 0, so the queue's FIFO tie-break
+/// reproduces plain arrival order.
+fn enqueue(
+    adq: &mut AdmissionQueue<PoolJob>,
+    job: Job,
+    cm: &CostModel,
+    metrics: &Metrics,
+    elastic: bool,
+) {
+    let class = DepthClass::of(job.req.strategy, &job.req.engine);
+    let score = if elastic {
+        request_score(
+            cm,
+            strategy_prior_tpc(metrics, job.req.strategy),
+            job.req.strategy,
+            &job.req.engine,
+            job.req.prompt.len(),
+        )
+    } else {
+        0.0
+    };
+    adq.push(PoolJob { job, class, deferrals: 0 }, score);
+}
+
+/// Pool-wide lane demand for the engine scaler: requests already held by
+/// engines plus the queue, discounted by the fleet's mean heat exactly
+/// like the lane-level scaler discounts its queue.
+fn lane_demand(engines: &[EngineSlot], adq: &AdmissionQueue<PoolJob>) -> usize {
+    let held: usize = engines.iter().filter(|e| e.live()).map(|e| e.status.held()).sum();
+    let mut heat_sum = 0.0;
+    let mut n = 0usize;
+    for e in engines {
+        let h = e.status.heat();
+        if h > 0.0 {
+            heat_sum += h;
+            n += 1;
+        }
+    }
+    let heat = if n > 0 { heat_sum / n as f64 } else { 0.0 };
+    held + (adq.len() as f64 / (1.0 + heat)).ceil() as usize
+}
+
+fn live_count(engines: &[EngineSlot]) -> usize {
+    engines.iter().filter(|e| e.live()).count()
+}
+
+/// Mark ONE idle live engine as retiring (newest first, mirroring the
+/// lane pool's tail-shrink) and close its channel. Returns whether an
+/// engine was retired; busy engines never are.
+fn retire_one(engines: &mut [EngineSlot]) -> bool {
+    let Some(slot) = engines
+        .iter_mut()
+        .filter(|e| e.live() && e.status.idle())
+        .max_by_key(|e| e.id)
+    else {
+        return false;
+    };
+    slot.status.draining.store(true, Ordering::Relaxed);
+    slot.tx = None; // the worker exits once its (empty) channel reports Disconnected
+    true
+}
+
+/// Remove engine slots whose worker thread has exited, joining them.
+/// Returns how many of the removed workers died on a runtime load
+/// failure (the dispatcher's spawn-failure budget).
+fn reap(engines: &mut Vec<EngineSlot>) -> u32 {
+    let mut failures = 0u32;
+    let mut i = 0;
+    while i < engines.len() {
+        // a worker that exits on its own (load failure) marks itself
+        // draining; close its channel so anything still routed fails fast
+        if engines[i].status.draining.load(Ordering::Relaxed) {
+            engines[i].tx = None;
+        }
+        if engines[i].tx.is_none() && engines[i].handle.is_finished() {
+            let e = engines.remove(i);
+            if e.status.load_failed.load(Ordering::Relaxed) {
+                failures += 1;
+            }
+            let _ = e.handle.join();
+        } else {
+            i += 1;
+        }
+    }
+    failures
+}
+
+/// Least-loaded engine able to take a request now; `class` restricts the
+/// choice to depth-compatible engines (`None` = any, the starvation
+/// fallback).
+fn best_slot(engines: &[EngineSlot], lane_cap: usize, class: Option<DepthClass>) -> Option<usize> {
+    engines
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.can_take(lane_cap))
+        .filter(|(_, e)| match class {
+            Some(c) => e.status.compatible(c),
+            None => true,
+        })
+        .min_by_key(|(_, e)| e.status.held())
+        .map(|(i, _)| i)
+}
+
+/// One routing pass: place best-scored requests on depth-compatible
+/// engines while any engine has room. Requests only an incompatible
+/// engine could take are deferred (re-inserted with their original
+/// arrival stamp) until [`STARVATION_DEFERRALS`] passes, then placed
+/// anywhere free — counted in `ngrammys_routing_fallbacks`.
+fn route(
+    adq: &mut AdmissionQueue<PoolJob>,
+    engines: &[EngineSlot],
+    metrics: &Metrics,
+    lane_cap: usize,
+) {
+    let mut held: Vec<(PoolJob, f64, u64)> = Vec::new();
+    while engines.iter().any(|e| e.can_take(lane_cap)) {
+        let Some((mut pj, score, seq)) = adq.pop_best_entry() else { break };
+        let pick = match best_slot(engines, lane_cap, Some(pj.class)) {
+            Some(i) => Some((i, false)),
+            None if pj.deferrals >= STARVATION_DEFERRALS => {
+                best_slot(engines, lane_cap, None).map(|i| (i, true))
+            }
+            None => None,
+        };
+        match pick {
+            Some((i, fallback)) => {
+                if fallback {
+                    metrics.routing_fallbacks.fetch_add(1, Ordering::Relaxed);
+                }
+                let slot = &engines[i];
+                slot.status.backlog.fetch_add(1, Ordering::Relaxed);
+                slot.status.class_counter(pj.class).fetch_add(1, Ordering::Relaxed);
+                let tx = slot.tx.as_ref().expect("live slot has a sender");
+                if let Err(e) = tx.try_send(pj) {
+                    // bounded channel full or worker just exited: undo
+                    // the accounting and hold the job for the next pass
+                    let pj = match e {
+                        TrySendError::Full(pj) | TrySendError::Disconnected(pj) => pj,
+                    };
+                    slot.status.backlog.fetch_sub(1, Ordering::Relaxed);
+                    slot.status.class_counter(pj.class).fetch_sub(1, Ordering::Relaxed);
+                    held.push((pj, score, seq));
+                }
+            }
+            None => {
+                pj.deferrals += 1;
+                held.push((pj, score, seq));
+            }
+        }
+    }
+    for (pj, score, seq) in held {
+        adq.reinsert(pj, score, seq);
+    }
+}
+
+/// Snapshot every engine's gauges into [`Metrics`]. The legacy
+/// single-engine `lanes`/`lanes_target` gauges become pool aggregates so
+/// existing dashboards keep a meaningful total.
+fn publish(metrics: &Metrics, engines: &[EngineSlot]) {
+    metrics.engines.store(live_count(engines) as u64, Ordering::Relaxed);
+    let mut lanes = 0u64;
+    let mut lanes_target = 0u64;
+    let snaps: Vec<EngineGauges> = engines
+        .iter()
+        .map(|e| {
+            let g = EngineGauges {
+                id: e.id,
+                lanes: e.status.lanes.load(Ordering::Relaxed) as u64,
+                lanes_target: e.status.lanes_target.load(Ordering::Relaxed) as u64,
+                active: e.status.active.load(Ordering::Relaxed) as u64,
+                greedy: e.status.greedy.load(Ordering::Relaxed) as u64,
+                speculative: e.status.spec.load(Ordering::Relaxed) as u64,
+                heat: e.status.heat(),
+                kv_bytes: e.status.kv_bytes.load(Ordering::Relaxed),
+            };
+            lanes += g.lanes;
+            lanes_target += g.lanes_target;
+            g
+        })
+        .collect();
+    metrics.lanes.store(lanes, Ordering::Relaxed);
+    metrics.lanes_target.store(lanes_target, Ordering::Relaxed);
+    metrics.set_per_engine(snaps);
+}
+
+/// Spawn one engine worker thread (its `ModelRuntime` loads on the new
+/// thread, so the dispatcher never blocks on artifact IO).
+fn spawn_engine(
+    next_id: &mut u64,
+    art: &ModelArtifacts,
+    tables: &Arc<NgramTables>,
+    metrics: &Arc<Metrics>,
+    scfg: &ServeConfig,
+    lane_cap: usize,
+) -> EngineSlot {
+    let id = *next_id;
+    *next_id += 1;
+    let status = Arc::new(EngineStatus::new());
+    let (tx, rx) = sync_channel::<PoolJob>(lane_cap);
+    let art = art.clone();
+    let tables = tables.clone();
+    let metrics = metrics.clone();
+    let scfg = scfg.clone();
+    let st = status.clone();
+    let handle = std::thread::Builder::new()
+        .name(format!("ngrammys-engine-{id}"))
+        .spawn(move || {
+            let runtime = match ModelRuntime::load(&art) {
+                Ok(rt) => rt,
+                Err(e) => {
+                    eprintln!("engine {id}: runtime load failed: {e:#}");
+                    st.load_failed.store(true, Ordering::Relaxed);
+                    st.draining.store(true, Ordering::Relaxed);
+                    // fail whatever was routed here until the dispatcher
+                    // notices the drain flag and closes the channel
+                    while let Ok(pj) = rx.recv() {
+                        metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                        st.backlog.fetch_sub(1, Ordering::Relaxed);
+                        st.class_counter(pj.class).fetch_sub(1, Ordering::Relaxed);
+                        metrics.admissions_failed.fetch_add(1, Ordering::Relaxed);
+                        let _ = pj
+                            .job
+                            .reply
+                            .send(Err(anyhow!("engine {id}: runtime load failed: {e:#}")));
+                    }
+                    return;
+                }
+            };
+            engine_worker_loop(&runtime, &tables, &metrics, rx, &scfg, &st, lane_cap);
+        })
+        .expect("spawning engine worker");
+    EngineSlot { id, tx: Some(tx), status, handle }
+}
+
+/// A fresh batched engine for one worker: traces on (they feed the
+/// step-latency histogram) and, in elastic mode, the online-derived row
+/// budget installed with the operator `--budget` demoted to a cap.
+fn fresh_engine<'rt>(
+    runtime: &'rt ModelRuntime,
+    lanes: usize,
+    scfg: &ServeConfig,
+    analog: &str,
+) -> BatchedEngine<'rt> {
+    let mut eng = BatchedEngine::with_budget(runtime, lanes, scfg.budget);
+    eng.collect_traces = true;
+    if scfg.elastic {
+        eng.auto_budget =
+            Some(AutoBudget { cm: CostModel::for_analog(analog), slack: scfg.budget_slack });
+    }
+    eng
+}
+
+/// An admitted request's reply route plus the bookkeeping needed to give
+/// its lane's class slot back on retirement.
+struct Inflight {
+    reply: Sender<Result<GenResponse>>,
+    t: Instant,
+    class: DepthClass,
+}
+
+/// One engine worker: the continuous-batching loop over the requests the
+/// dispatcher routed here. Blocks on its channel only when idle; while
+/// sequences are active it drains arrivals opportunistically between
+/// steps so routed requests join the running batch without waiting for
+/// it to finish. Exits when the dispatcher closes the channel (retire or
+/// shutdown) and the last resident sequence completes.
+fn engine_worker_loop(
+    runtime: &ModelRuntime,
+    tables: &Arc<NgramTables>,
+    metrics: &Arc<Metrics>,
+    rx: Receiver<PoolJob>,
+    scfg: &ServeConfig,
+    status: &EngineStatus,
+    lane_cap: usize,
+) {
+    let analog = runtime.artifacts().dims.analog.clone();
+    let mut au_cfg = scfg.autoscale.clone();
+    au_cfg.max_lanes = lane_cap;
+    au_cfg.min_lanes = au_cfg.min_lanes.clamp(1, lane_cap);
+    let boot_lanes = if scfg.elastic { au_cfg.min_lanes } else { lane_cap };
+    let mut scaler = Autoscaler::new(au_cfg);
+
+    let mut eng = fresh_engine(runtime, boot_lanes, scfg, &analog);
+    status.lanes.store(eng.capacity(), Ordering::Relaxed);
+    status.lanes_target.store(eng.capacity(), Ordering::Relaxed);
+    status.kv_bytes.store(eng.kv_bytes() as u64, Ordering::Relaxed);
+    let mut inflight: HashMap<SeqId, Inflight> = HashMap::new();
+    let mut open = true;
+    loop {
+        // block for work only when fully idle
+        if open && eng.active() == 0 && status.backlog.load(Ordering::Relaxed) == 0 {
+            if scfg.elastic {
+                // idle: give the lane memory back NOW (the hysteretic
+                // path below never ticks while recv() is parked)
+                let min = scaler.config().min_lanes;
+                let lanes = eng.set_capacity(min);
+                status.lanes.store(lanes, Ordering::Relaxed);
+                status.lanes_target.store(min, Ordering::Relaxed);
+                status.heat_milli.store(0, Ordering::Relaxed);
+                status.kv_bytes.store(eng.kv_bytes() as u64, Ordering::Relaxed);
+            }
+            match rx.recv() {
+                Ok(pj) => {
+                    admit_pool_job(&mut eng, pj, tables, metrics, &mut inflight, scfg, runtime,
+                                   status, lane_cap);
+                }
+                Err(_) => open = false,
+            }
+        }
+        // drain routed arrivals while lanes are free (growing toward the
+        // cap first: the dispatcher routes up to lane_cap, which may be
+        // ahead of the current capacity)
+        loop {
+            if !eng.has_capacity() {
+                let want = (eng.active() + status.backlog.load(Ordering::Relaxed)).min(lane_cap);
+                if scfg.elastic && eng.capacity() < want {
+                    let lanes = eng.set_capacity(want);
+                    status.lanes.store(lanes, Ordering::Relaxed);
+                }
+                if !eng.has_capacity() {
+                    break;
+                }
+            }
+            match rx.try_recv() {
+                Ok(pj) => {
+                    admit_pool_job(&mut eng, pj, tables, metrics, &mut inflight, scfg, runtime,
+                                   status, lane_cap);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    open = false;
+                    break;
+                }
+            }
+        }
+        if eng.active() == 0 {
+            if !open {
+                return; // retired: channel closed and fully drained
+            }
+            continue; // spurious wake / failed admission: wait for work
+        }
+        // lane-level autoscale (level 1): this engine's routed backlog is
+        // its queue pressure
+        if scfg.elastic {
+            let target = scaler.target_lanes(&Demand {
+                queue_depth: status.backlog.load(Ordering::Relaxed),
+                active: eng.active(),
+                lanes: eng.capacity(),
+                mean_heat: eng.mean_heat(),
+            });
+            let achieved = eng.set_capacity(target);
+            status.lanes_target.store(target, Ordering::Relaxed);
+            status.lanes.store(achieved, Ordering::Relaxed);
+        } else {
+            status.lanes_target.store(lane_cap, Ordering::Relaxed);
+            status.lanes.store(eng.capacity(), Ordering::Relaxed);
+        }
+        match eng.step() {
+            Ok(done) => {
+                if let Some(b) = eng.last_step_budget() {
+                    metrics.derived_budget.store(b as u64, Ordering::Relaxed);
+                }
+                for (id, r) in done {
+                    if let Some(inf) = inflight.remove(&id) {
+                        status.active.fetch_sub(1, Ordering::Relaxed);
+                        status.class_counter(inf.class).fetch_sub(1, Ordering::Relaxed);
+                        let _ = inf.reply.send(Ok(finish_response(metrics, inf.t, r)));
+                    }
+                }
+            }
+            Err(e) => {
+                // a step error poisons the whole batch (shared call):
+                // fail every in-flight request and restart with a fresh
+                // engine at the capacity the autoscaler had reached
+                eprintln!("engine pool: step failed: {e:#}");
+                for (_, inf) in inflight.drain() {
+                    status.active.fetch_sub(1, Ordering::Relaxed);
+                    status.class_counter(inf.class).fetch_sub(1, Ordering::Relaxed);
+                    let _ = inf.reply.send(Err(anyhow!("batched engine step failed: {e:#}")));
+                }
+                let lanes = eng.capacity();
+                eng = fresh_engine(runtime, lanes, scfg, &analog);
+            }
+        }
+        status.heat_milli.store(
+            (eng.mean_heat().unwrap_or(0.0).max(0.0) * 1e3) as u64,
+            Ordering::Relaxed,
+        );
+        status.kv_bytes.store(eng.kv_bytes() as u64, Ordering::Relaxed);
+    }
+}
+
+/// Move one routed request onto a lane: claims (growing if the router
+/// ran ahead of the autoscaler), prefills, and registers the reply
+/// route. Admission failures are counted, logged and answered — never
+/// silent.
+#[allow(clippy::too_many_arguments)]
+fn admit_pool_job(
+    eng: &mut BatchedEngine,
+    pj: PoolJob,
+    tables: &Arc<NgramTables>,
+    metrics: &Metrics,
+    inflight: &mut HashMap<SeqId, Inflight>,
+    scfg: &ServeConfig,
+    runtime: &ModelRuntime,
+    status: &EngineStatus,
+    lane_cap: usize,
+) {
+    metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    if !eng.has_capacity() && eng.capacity() < lane_cap {
+        // the dispatcher routes ahead of the lane autoscaler: grow on
+        // demand so a routed request never bounces off a stale capacity
+        let lanes = eng.set_capacity(eng.capacity() + 1);
+        status.lanes.store(lanes, Ordering::Relaxed);
+    }
+    let strategy = make_strategy_with_cache(
+        pj.job.req.strategy,
+        tables,
+        pj.job.req.engine.q,
+        &scfg.session_cache,
+    );
+    let controller =
+        controller_for_request(pj.job.req.strategy, tables, pj.job.req.engine.q, scfg, runtime);
+    // start the latency clock BEFORE admit: admit runs the prefill, which
+    // the per-sequence worker's clock also covers — keep the modes
+    // comparable in latency_ms and /metrics
+    let t = Instant::now();
+    let admitted =
+        eng.admit_with(&pj.job.req.prompt, strategy, controller, pj.job.req.engine.clone());
+    // account active BEFORE giving the backlog slot back: held() must
+    // never transiently dip to 0 mid-admit, or the dispatcher could
+    // mistake a busy engine for an idle one and retire it
+    match admitted {
+        Ok(id) => {
+            status.active.fetch_add(1, Ordering::Relaxed);
+            status.backlog.fetch_sub(1, Ordering::Relaxed);
+            inflight.insert(id, Inflight { reply: pj.job.reply, t, class: pj.class });
+        }
+        Err(e) => {
+            status.class_counter(pj.class).fetch_sub(1, Ordering::Relaxed);
+            status.backlog.fetch_sub(1, Ordering::Relaxed);
+            metrics.admissions_failed.fetch_add(1, Ordering::Relaxed);
+            eprintln!("engine pool: admission failed: {e:#}");
+            let _ = pj.job.reply.send(Err(e));
+        }
+    }
+}

@@ -55,6 +55,15 @@ impl Json {
         Ok(v)
     }
 
+    /// Parse a JSON file from disk (the `ci-bench-check` gate reads both
+    /// the committed baseline and the emitted `BENCH_*.json` through
+    /// this, so parse errors carry the path).
+    pub fn from_file(path: &std::path::Path) -> anyhow::Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path:?}: {e}"))
+    }
+
     // -- typed accessors ---------------------------------------------------
     /// Object field lookup (`None` for non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {

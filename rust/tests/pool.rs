@@ -1,0 +1,241 @@
+//! Engine-pool invariants: multi-engine scale-out (spawn AND retire, mid
+//! traffic), depth-aware routing, and the per-class packed-depth split
+//! must never change a single output byte — every stream stays exactly
+//! the per-sequence greedy continuation of its prompt — while mixed
+//! greedy + speculative traffic keeps its speculative tokens/call
+//! instead of collapsing to depth 0.
+
+use std::sync::atomic::Ordering;
+
+use ngrammys::bench::BenchCtx;
+use ngrammys::config::{EngineConfig, ServeConfig};
+use ngrammys::engine::{
+    batched::generate_all, greedy_config, BatchedEngine, NoDraft, SpecDecoder,
+};
+use ngrammys::scheduler::{
+    make_strategy, DepthClass, EngineScaleConfig, GenRequest, Scheduler, StrategyName,
+};
+
+fn ctx(model: &str) -> BenchCtx {
+    BenchCtx::load(ngrammys::testkit::manifest(), model).unwrap()
+}
+
+fn greedy_stream(c: &BenchCtx, prompt: &[u32], max_new: usize) -> Vec<u32> {
+    let mut dec = SpecDecoder::new(&c.runtime, Box::new(NoDraft), greedy_config(max_new));
+    dec.generate(prompt).unwrap().tokens
+}
+
+const TEXTS: [&str; 8] = [
+    "Question: Tom has 4 apples. Tom buys 2 more.",
+    "def scale(x, y):\n    result",
+    "User: What is the capital of France?",
+    "Answer: Mia has 5 coins.",
+    "def blend(value, count):",
+    "User: Tell me about ancient rivers.",
+    "Question: Sam has 7 cards.",
+    "Assistant: That is a good question.",
+];
+
+/// Mixed-traffic request: every third request is greedy (w = 0).
+fn req(c: &BenchCtx, text: &str, i: usize, max_new: usize) -> GenRequest {
+    let greedy = i % 3 == 2;
+    GenRequest {
+        prompt: c.tokenizer.encode(text),
+        engine: EngineConfig {
+            k: if greedy { 1 } else { 10 },
+            w: if greedy { 0 } else { 10 },
+            q: 1,
+            max_new_tokens: max_new,
+        },
+        strategy: if greedy { StrategyName::None } else { StrategyName::Mixed },
+    }
+}
+
+/// The full pool scheduler (two-level autoscaling + depth-aware routing,
+/// `elastic: true` default) returns byte-identical streams to
+/// per-sequence greedy decoding at engine caps 1/2/4, across TWO bursts
+/// with an idle gap between them — the trajectory that exercises engine
+/// spawn (burst pressure), idle retire (the gap) and respawn (second
+/// burst). The per-engine gauges must be populated afterwards.
+#[test]
+fn pool_is_lossless_across_engine_caps_and_spawn_retire() {
+    let c = ctx("small");
+    let max_new = 12;
+    let want: Vec<Vec<u32>> = TEXTS
+        .iter()
+        .enumerate()
+        .map(|(i, t)| {
+            let r = req(&c, t, i, max_new);
+            greedy_stream(&c, &r.prompt, max_new)
+        })
+        .collect();
+
+    for cap in [1usize, 2, 4] {
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            queue_cap: 64,
+            batch: 3, // per-engine lane cap: one burst overflows one engine
+            engines: cap,
+            // fast two-level scaling so the short test really spawns and
+            // retires engines (up after 1 pressure tick, down after 2)
+            engine_scale: EngineScaleConfig {
+                min_engines: 1,
+                max_engines: cap,
+                up_after_steps: 1,
+                down_after_steps: 2,
+            },
+            ..ServeConfig::default()
+        };
+        assert!(cfg.elastic, "elastic must be the batched-mode default");
+        let sched = Scheduler::start(&ngrammys::testkit::manifest(), "small", &cfg).unwrap();
+
+        for wave in 0..2 {
+            // submit the whole burst at once: the queue backs up behind
+            // one engine's lanes and the pool must scale out (cap > 1)
+            let rxs: Vec<_> = TEXTS
+                .iter()
+                .enumerate()
+                .map(|(i, t)| sched.submit(req(&c, t, i, max_new)).unwrap())
+                .collect();
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let got = rx.recv().unwrap().unwrap();
+                assert_eq!(
+                    got.tokens, want[i],
+                    "cap {cap} wave {wave} prompt {i}: stream diverged in the pool"
+                );
+            }
+            // idle gap: the dispatcher parks, retiring surplus engines
+            // down to min_engines before it blocks — the second wave then
+            // respawns them
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+
+        let engines = sched.metrics.engines.load(Ordering::Relaxed);
+        assert!(
+            engines >= 1 && engines as usize <= cap,
+            "cap {cap}: engines gauge {engines} outside [1, {cap}]"
+        );
+        assert!(sched.metrics.lanes.load(Ordering::Relaxed) >= 1, "lanes gauge never set");
+        assert!(
+            sched.metrics.derived_budget.load(Ordering::Relaxed) >= 1,
+            "derived budget gauge never set"
+        );
+        let rendered = sched.metrics.render();
+        assert!(rendered.contains("ngrammys_engines "));
+        assert!(rendered.contains("ngrammys_engines_target "));
+        assert!(rendered.contains("ngrammys_routing_fallbacks "));
+        assert!(
+            rendered.contains("ngrammys_engine_lanes{engine=\""),
+            "per-engine gauge families missing:\n{rendered}"
+        );
+        sched.shutdown();
+    }
+}
+
+/// REGRESSION PIN (mixed traffic): a w = 0 admission used to drag every
+/// co-resident sequence's packed depth to the global minimum 0, so
+/// speculative tokens/call collapsed to ~1. With the per-class depth
+/// split, speculative sequences keep their depth (and their exact output
+/// bytes), and the step's packed calls show BOTH a w = 0 group and a
+/// w > 0 group while the classes coexist.
+#[test]
+fn greedy_admission_does_not_collapse_speculative_depth() {
+    let c = ctx("small");
+    let max_new = 20;
+    let spec_cfg = EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: max_new };
+    let spec_prompts: Vec<Vec<u32>> =
+        TEXTS[..4].iter().map(|t| c.tokenizer.encode(t)).collect();
+    let greedy_prompts: Vec<Vec<u32>> =
+        TEXTS[4..6].iter().map(|t| c.tokenizer.encode(t)).collect();
+
+    // baseline: speculative population only
+    let mut base_eng = BatchedEngine::new(&c.runtime, 4);
+    base_eng.collect_traces = true;
+    let base_reqs = spec_prompts
+        .iter()
+        .map(|p| {
+            (
+                p.clone(),
+                make_strategy(StrategyName::Mixed, &c.tables, 1),
+                spec_cfg.clone(),
+            )
+        })
+        .collect();
+    let base = generate_all(&mut base_eng, base_reqs).unwrap();
+    let base_tpc: f64 = base.iter().map(|r| r.tokens_per_call()).sum::<f64>() / base.len() as f64;
+
+    // mixed: same speculative population + co-resident greedy requests
+    let mut eng = BatchedEngine::new(&c.runtime, 6);
+    eng.collect_traces = true;
+    let mut reqs: Vec<(Vec<u32>, Box<dyn ngrammys::draft::DraftStrategy>, EngineConfig)> =
+        Vec::new();
+    for p in &spec_prompts {
+        reqs.push((p.clone(), make_strategy(StrategyName::Mixed, &c.tables, 1), spec_cfg.clone()));
+    }
+    for p in &greedy_prompts {
+        reqs.push((p.clone(), Box::new(NoDraft), greedy_config(max_new)));
+    }
+    let mixed = generate_all(&mut eng, reqs).unwrap();
+
+    // byte-identity: speculative streams are EXACTLY the baseline's (and
+    // the greedy streams are the per-sequence greedy continuations)
+    for (i, r) in mixed[..4].iter().enumerate() {
+        assert_eq!(r.tokens, base[i].tokens, "spec stream {i} changed when greedy joined");
+    }
+    for (i, r) in mixed[4..].iter().enumerate() {
+        assert_eq!(
+            r.tokens,
+            greedy_stream(&c, &greedy_prompts[i], max_new),
+            "greedy stream {i} diverged"
+        );
+    }
+
+    // the acceptance bar: speculative tokens/call with co-resident
+    // greedy traffic within 10% of the greedy-free baseline (the old
+    // global-minimum depth collapsed it to ~1.0)
+    let mixed_tpc: f64 =
+        mixed[..4].iter().map(|r| r.tokens_per_call()).sum::<f64>() / 4.0;
+    assert!(
+        mixed_tpc >= base_tpc * 0.9,
+        "speculative tokens/call degraded: mixed {mixed_tpc:.2} vs baseline {base_tpc:.2}"
+    );
+
+    // the packed calls themselves: while both classes are resident, a
+    // step issues a w = 0 group AND a w > 0 group — no global minimum
+    let mut saw_split_step = false;
+    for t in &eng.packed_traces {
+        if t.w > 0
+            && eng
+                .packed_traces
+                .iter()
+                .any(|u| u.step == t.step && u.w == 0)
+        {
+            saw_split_step = true;
+            break;
+        }
+    }
+    assert!(
+        saw_split_step,
+        "no step packed both a w=0 and a w>0 call; traces: {:?}",
+        eng.packed_traces
+            .iter()
+            .map(|t| (t.step, t.w, t.rows))
+            .collect::<Vec<_>>()
+    );
+    assert!(
+        eng.packed_traces.iter().any(|t| t.w > 1),
+        "speculative group never ran deeper than w=1 with greedy co-resident"
+    );
+}
+
+/// Depth classes derive from strategy + shape exactly like the admission
+/// scorer prices them.
+#[test]
+fn depth_class_of_request() {
+    let spec = EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: 8 };
+    let flat = EngineConfig { k: 10, w: 0, q: 1, max_new_tokens: 8 };
+    assert_eq!(DepthClass::of(StrategyName::Mixed, &spec), DepthClass::Speculative);
+    assert_eq!(DepthClass::of(StrategyName::None, &spec), DepthClass::Greedy);
+    assert_eq!(DepthClass::of(StrategyName::Mixed, &flat), DepthClass::Greedy);
+    assert_eq!(DepthClass::of(StrategyName::Adaptive, &spec), DepthClass::Speculative);
+}
