@@ -3,6 +3,11 @@
 //! bench harness (criterion is unavailable offline).
 //!
 //!     cargo bench --bench draft_bench
+//!
+//! The batches are created once and `reset` per iteration — the engines'
+//! steady-state pattern, so these numbers reflect the allocation-free
+//! arena path (see also `ngrammys bench draft` for the incremental-vs-
+//! rescan comparison and the CI-gated summary).
 
 use std::sync::Arc;
 
@@ -54,36 +59,37 @@ fn main() {
     let mut b = Bencher::default();
 
     let mut ctx = ContextNgram::new(1);
+    let mut batch = DraftBatch::new(10);
     b.bench("context-ngram propose (q=1, len=400, k=10, w=10)", || {
-        let mut batch = DraftBatch::new(10);
+        batch.reset(10);
         ctx.propose(black_box(&seq), 10, &mut batch);
         black_box(batch.k());
     });
 
     let mut ctx2 = ContextNgram::new(2);
     b.bench("context-ngram propose (q=2)", || {
-        let mut batch = DraftBatch::new(10);
+        batch.reset(10);
         ctx2.propose(black_box(&seq), 10, &mut batch);
         black_box(batch.k());
     });
 
     let mut big = ExtendedBigram::new(tables.clone());
     b.bench("ext-bigram propose (k=10, w=10)", || {
-        let mut batch = DraftBatch::new(10);
+        batch.reset(10);
         big.propose(black_box(&seq), 10, &mut batch);
         black_box(batch.k());
     });
 
     let mut mixed = MixedStrategy::paper(tables.clone(), 1);
     b.bench("mixed propose (k=10, w=10)", || {
-        let mut batch = DraftBatch::new(10);
+        batch.reset(10);
         mixed.propose(black_box(&seq), 10, &mut batch);
         black_box(batch.k());
     });
 
     let mut mixed25 = MixedStrategy::paper(tables.clone(), 1);
     b.bench("mixed propose (k=25, w=14)", || {
-        let mut batch = DraftBatch::new(14);
+        batch.reset(14);
         mixed25.propose(black_box(&seq), 25, &mut batch);
         black_box(batch.k());
     });
@@ -91,20 +97,20 @@ fn main() {
     let mut jac = JacobiDraft::new(0);
     jac.observe(&[1, 2], &[1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11]);
     b.bench("jacobi propose (k=1, w=10)", || {
-        let mut batch = DraftBatch::new(10);
+        batch.reset(10);
         jac.propose(black_box(&seq), 1, &mut batch);
         black_box(batch.k());
     });
 
     // acceptance judging
-    let mut batch = DraftBatch::new(10);
-    mixed.propose(&seq, 10, &mut batch);
-    while batch.rows.len() < 10 {
-        batch.push(vec![0; 10], ngrammys::draft::StrategyKind::Empty, 0);
+    let mut judged = DraftBatch::new(10);
+    mixed.propose(&seq, 10, &mut judged);
+    while judged.k() < 10 {
+        judged.push(vec![0; 10], ngrammys::draft::StrategyKind::Empty, 0);
     }
     let out: Vec<u32> = prop::vec_u32(&mut rng, 10 * 11, 0..512);
     b.bench("acceptance judge (k=10, w=10)", || {
-        black_box(acceptance::judge(black_box(&batch), black_box(&out), 11));
+        black_box(acceptance::judge(black_box(&judged), black_box(&out), 11));
     });
 
     println!("\nAll drafting costs should be in the ns-µs range — negligible");

@@ -39,6 +39,22 @@ impl Arm {
     }
 }
 
+/// A fleet-derived warm-start prior for one arm (see
+/// [`SeqController::seed_arms`]): the strategy's observed tokens/call
+/// plus a pseudo-pull weight saying how much evidence backs it.
+#[derive(Debug, Clone, Copy)]
+pub struct ArmPrior {
+    /// the arm this prior applies to
+    pub name: StrategyName,
+    /// expected emitted tokens per verification call (floored at the
+    /// greedy baseline of 1.0 when applied)
+    pub tokens_per_call: f64,
+    /// pseudo-pull count the prior is worth (0 disables the prior; keep
+    /// it small so live per-sequence feedback can overturn a stale fleet
+    /// picture within a few EWMA updates)
+    pub pulls: u64,
+}
+
 /// Operator-facing snapshot of one arm (bench / metrics output).
 #[derive(Debug, Clone)]
 pub struct ArmReport {
@@ -74,6 +90,10 @@ pub struct SeqController {
     /// confidence profile of the latest proposed batch, by row index
     /// (feeds the packed-batch allocator's marginal gains)
     last_conf: Vec<f64>,
+    /// fleet-derived arm priors, re-applied on every [`Self::reset`] so a
+    /// fresh request still boots from fleet-wide knowledge (empty =
+    /// unseeded, the seed behavior)
+    seeds: Vec<ArmPrior>,
 }
 
 impl SeqController {
@@ -110,7 +130,54 @@ impl SeqController {
             ewma_hit: 0.0,
             ewma_depth: 1.0,
             last_conf: Vec::new(),
+            seeds: Vec::new(),
         }
+    }
+
+    /// Reference call shape the seeded arm values are priced at: every
+    /// prior divides the same simulated verify cost, so seeding fixes the
+    /// arms' RELATIVE order (what the bandit consumes) while staying on
+    /// the same scale as live accepted-tokens-per-cost observations.
+    const SEED_SHAPE: (usize, usize, usize) = (10, 10, 256);
+
+    /// Warm-start arm values from fleet-wide priors (ROADMAP
+    /// "cross-request bandit priors"; the admission-scorer half is
+    /// [`crate::scheduler::strategy_prior_tpc`]). A seeded arm starts
+    /// with `pulls` pseudo-pulls at `tokens_per_call` emitted per
+    /// reference-shape verify cost, so a NEW sequence's bandit exploits
+    /// the fleet's best-known strategy immediately instead of booting
+    /// through the uniform round-robin warmup — while arms with no fleet
+    /// evidence keep their infinite UCB bonus and still get explored
+    /// first. Shape planning is deliberately NOT seeded: (k, w) depends
+    /// on per-sequence acceptance EWMAs that only real feedback fills.
+    /// Priors are stored and re-applied by [`Self::reset`], and live
+    /// feedback folds into the seeded EWMAs like any later sample.
+    pub fn seed_arms(&mut self, priors: &[ArmPrior]) {
+        self.seeds = priors.to_vec();
+        self.apply_seeds();
+    }
+
+    fn apply_seeds(&mut self) {
+        let (k, w, ctx) = Self::SEED_SHAPE;
+        let cost = self.cm.call_time(k, w + 1, ctx);
+        for si in 0..self.seeds.len() {
+            let p = self.seeds[si];
+            if p.pulls == 0 || !p.tokens_per_call.is_finite() || p.tokens_per_call <= 0.0 {
+                continue;
+            }
+            if let Some(arm) = self.arms.iter_mut().find(|a| a.name == p.name) {
+                arm.pulls = p.pulls;
+                arm.ewma_emitted = p.tokens_per_call.max(1.0);
+                arm.ewma_cost = cost;
+                // emitted_total stays 0: it is an exact observed counter
+            }
+        }
+    }
+
+    /// Whether any arm carries fleet-seeded evidence (skips the uniform
+    /// warmup round-robin in [`Self::plan`]).
+    fn seeded(&self) -> bool {
+        self.seeds.iter().any(|p| p.pulls > 0 && p.tokens_per_call > 0.0)
     }
 
     /// Choose the arm and the desired (k, w) for the next step.
@@ -135,7 +202,10 @@ impl SeqController {
         // low value and never fire.
         let n = self.arms.len();
         let warmup_steps = (self.cfg.warmup * n) as u64;
-        self.cur = if self.steps < warmup_steps {
+        // Fleet-seeded controllers skip the uniform round-robin warmup:
+        // the seeded values already rank the arms, and any UNSEEDED arm
+        // still gets pulled first through UCB's infinite bonus below.
+        self.cur = if self.steps < warmup_steps && !self.seeded() {
             (self.steps as usize) % n
         } else {
             let total = self.steps as f64;
@@ -196,7 +266,7 @@ impl SeqController {
     pub fn propose(&mut self, seq: &[TokenId], k: usize, batch: &mut DraftBatch) {
         self.arms[self.cur].strategy.propose(seq, k, batch);
         self.last_conf.clear();
-        self.last_conf.extend(batch.rows.iter().map(|r| r.confidence));
+        self.last_conf.extend(batch.rows().iter().map(|r| r.confidence));
     }
 
     /// Digest one judged step: arm value, per-kind estimators, shape
@@ -289,7 +359,8 @@ impl SeqController {
 
     /// Reset per-sequence state between requests. Arm strategies keep
     /// their own cross-request semantics (`SessionNgramCache` persists its
-    /// table through reset by design).
+    /// table through reset by design), and fleet-seeded arm priors are
+    /// re-applied so the next request boots warm too.
     pub fn reset(&mut self) {
         for arm in &mut self.arms {
             arm.strategy.reset();
@@ -305,6 +376,7 @@ impl SeqController {
         self.ewma_hit = 0.0;
         self.ewma_depth = 1.0;
         self.last_conf.clear();
+        self.apply_seeds();
     }
 }
 
@@ -456,5 +528,63 @@ mod tests {
         assert_eq!(c.steps(), 0);
         assert_eq!(c.plan(10, 100, &SHAPES, 10, 10), (10, 10));
         assert!(c.arm_reports().iter().all(|r| r.pulls == 0));
+    }
+
+    #[test]
+    fn seeded_controller_skips_warmup_and_exploits_the_prior() {
+        let mut c = ctl(3);
+        // fleet says Context pays 3.2 tokens/call, Mixed only 1.1; the
+        // third arm (ExtBigram) has no fleet evidence
+        c.seed_arms(&[
+            ArmPrior { name: StrategyName::Context, tokens_per_call: 3.2, pulls: 8 },
+            ArmPrior { name: StrategyName::Mixed, tokens_per_call: 1.1, pulls: 8 },
+        ]);
+        // every arm now has a value except the unseeded one, which keeps
+        // the infinite UCB bonus: it gets explored first...
+        c.plan(10, 100, &SHAPES, 10, 10);
+        assert_eq!(c.cur, 2, "unseeded arm must be explored first");
+        feed(&mut c, 0, 10, 10);
+        // ...then the bandit exploits the best SEEDED arm instead of
+        // round-robining through warmup (arms are Mixed=0, Context=1)
+        c.plan(10, 100, &SHAPES, 10, 10);
+        assert_eq!(c.cur, 1, "bandit must exploit the fleet's best arm");
+    }
+
+    #[test]
+    fn seeds_survive_reset_and_live_feedback_can_overturn_them() {
+        let mut c = ctl(2);
+        c.seed_arms(&[
+            ArmPrior { name: StrategyName::Mixed, tokens_per_call: 1.05, pulls: 4 },
+            ArmPrior { name: StrategyName::Context, tokens_per_call: 4.0, pulls: 4 },
+        ]);
+        c.reset();
+        assert!(
+            c.arm_reports().iter().any(|r| r.pulls > 0),
+            "seeded pulls must survive reset"
+        );
+        // the seeded favourite (Context, arm 1) gets pulled but never
+        // accepts; the seeded underdog eventually wins the bandit back
+        for _ in 0..40 {
+            c.plan(10, 100, &SHAPES, 10, 10);
+            let acc = if c.cur == 0 { 6 } else { 0 };
+            feed(&mut c, acc, 10, 10);
+        }
+        c.plan(10, 100, &SHAPES, 10, 10);
+        assert_eq!(c.cur, 0, "live feedback must overturn a stale prior");
+    }
+
+    #[test]
+    fn unseeded_behavior_is_unchanged() {
+        let mut a = ctl(2);
+        let mut b = ctl(2);
+        b.seed_arms(&[]); // empty priors = unseeded
+        for _ in 0..6 {
+            let pa = a.plan(10, 100, &SHAPES, 10, 10);
+            let pb = b.plan(10, 100, &SHAPES, 10, 10);
+            assert_eq!(pa, pb);
+            assert_eq!(a.cur, b.cur);
+            feed(&mut a, 2, 10, 10);
+            feed(&mut b, 2, 10, 10);
+        }
     }
 }

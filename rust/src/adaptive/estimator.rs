@@ -54,15 +54,15 @@ impl AcceptanceEstimator {
     /// judge defaults to row 0 there, and crediting row 0's kind would
     /// systematically inflate whatever strategy fills the top row.
     pub fn observe(&mut self, batch: &DraftBatch, win_row: usize, accepted: usize) {
-        if batch.rows.is_empty() {
+        if batch.k() == 0 {
             return;
         }
-        let winner = (accepted > 0).then(|| batch.rows[win_row].kind);
+        let winner = (accepted > 0).then(|| batch.rows()[win_row].kind);
         for kind in StrategyKind::ALL {
             if kind == StrategyKind::Empty {
                 continue; // padding rows carry no signal
             }
-            let allocated = batch.rows.iter().any(|r| r.kind == kind);
+            let allocated = batch.rows().iter().any(|r| r.kind == kind);
             if !allocated {
                 continue;
             }
@@ -159,7 +159,7 @@ mod tests {
     fn unallocated_kinds_untouched_and_empty_ignored() {
         let mut e = AcceptanceEstimator::new(0.3);
         let mut b = batch(&[StrategyKind::ContextNgram]);
-        b.push(Vec::new(), StrategyKind::Empty, 1);
+        b.push(Vec::<u32>::new(), StrategyKind::Empty, 1);
         e.observe(&b, 0, 1);
         assert_eq!(e.stats(StrategyKind::ModelBigram).steps_allocated, 0);
         assert_eq!(e.stats(StrategyKind::Empty).steps_allocated, 0);

@@ -30,15 +30,17 @@ pub mod budget;
 pub mod controller;
 pub mod estimator;
 
-pub use controller::{ArmReport, SeqController};
+pub use controller::{ArmPrior, ArmReport, SeqController};
 pub use estimator::AcceptanceEstimator;
 
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use crate::config::SessionCacheConfig;
 use crate::costmodel::CostModel;
 use crate::draft::{DraftBatch, NgramTables};
-use crate::scheduler::{make_strategy_with_cache, StrategyName};
+use crate::metrics::Metrics;
+use crate::scheduler::{make_strategy_with_cache, strategy_prior_tpc, StrategyName};
 use crate::tokenizer::TokenId;
 
 /// Tuning knobs for the per-sequence controller. Every field has a sane
@@ -108,4 +110,90 @@ pub fn controller_for(
         .map(|&name| (name, make_strategy_with_cache(name, tables, q, cache)))
         .collect();
     SeqController::new(arms, AdaptiveConfig::default(), CostModel::for_analog(analog))
+}
+
+/// Pseudo-pull cap on fleet-derived arm priors: enough weight that the
+/// bandit exploits the fleet's best arm immediately, small enough that a
+/// few live steps of contrary evidence overturn a stale prior.
+pub const MAX_SEED_PULLS: u64 = 8;
+
+/// Fleet-wide arm priors from the serving metrics' per-strategy counters
+/// (ROADMAP "cross-request bandit priors"): each default arm whose draft
+/// kinds have recorded wins gets its [`crate::scheduler::strategy_prior_tpc`]
+/// tokens/call at a pseudo-pull weight of `wins` capped at
+/// [`MAX_SEED_PULLS`]. Arms with no fleet evidence are omitted so the
+/// controller still explores them first. A cold fleet returns an empty
+/// list — seeding with it is a no-op and the controller boots exactly
+/// like the unseeded seed behavior.
+pub fn fleet_arm_priors(metrics: &Metrics) -> Vec<ArmPrior> {
+    DEFAULT_ARMS
+        .iter()
+        .filter_map(|&name| {
+            let wins: u64 = name
+                .kinds()
+                .iter()
+                .map(|k| metrics.strategy_wins[k.index()].load(Ordering::Relaxed))
+                .sum();
+            if wins == 0 {
+                return None;
+            }
+            Some(ArmPrior {
+                name,
+                tokens_per_call: strategy_prior_tpc(metrics, name),
+                pulls: wins.min(MAX_SEED_PULLS),
+            })
+        })
+        .collect()
+}
+
+/// [`controller_for`] warm-started from the fleet's per-strategy
+/// acceptance record: new sequences no longer boot with uniform arm
+/// values (see [`SeqController::seed_arms`]).
+pub fn controller_for_seeded(
+    tables: &Arc<NgramTables>,
+    q: usize,
+    cache: &SessionCacheConfig,
+    analog: &str,
+    metrics: &Metrics,
+) -> SeqController {
+    let mut c = controller_for(tables, q, cache, analog);
+    c.seed_arms(&fleet_arm_priors(metrics));
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::draft::StrategyKind;
+
+    #[test]
+    fn fleet_priors_map_counters_to_arms() {
+        let m = Metrics::new();
+        assert!(fleet_arm_priors(&m).is_empty(), "cold fleet seeds nothing");
+        // context-ngram wins a lot and deep; session cache wins a little
+        for _ in 0..20 {
+            m.record_strategy_step(StrategyKind::ContextNgram, 4);
+        }
+        m.record_strategy_step(StrategyKind::SessionCache, 1);
+        let priors = fleet_arm_priors(&m);
+        let ctx = priors
+            .iter()
+            .find(|p| p.name == StrategyName::Context)
+            .expect("context arm must be seeded");
+        assert_eq!(ctx.pulls, MAX_SEED_PULLS, "pulls cap at MAX_SEED_PULLS");
+        assert!(ctx.tokens_per_call > 1.0);
+        let session = priors
+            .iter()
+            .find(|p| p.name == StrategyName::Session)
+            .expect("session arm must be seeded");
+        assert_eq!(session.pulls, 1);
+        assert!(
+            ctx.tokens_per_call > session.tokens_per_call,
+            "deep-accepting strategy must carry the larger prior"
+        );
+        // ext-bigram never won: it must stay unseeded (so UCB explores it)
+        assert!(priors.iter().all(|p| p.name != StrategyName::ExtBigram));
+        // Mixed spans context-ngram kinds, so it inherits that evidence
+        assert!(priors.iter().any(|p| p.name == StrategyName::Mixed));
+    }
 }

@@ -1,0 +1,215 @@
+//! `bench draft [--smoke]` — the draft hot-path regression bench.
+//!
+//! Measures proposals/sec of the incremental suffix-index `ContextNgram`
+//! against the seed's O(context) rescan
+//! ([`crate::draft::context_ngram::reference_candidates`], preserved as
+//! the specification oracle) across context lengths and query lengths,
+//! plus the arena-backed mixed proposal path. Each incremental iteration
+//! does the full decode-step work — append one token, sync the index,
+//! propose, roll the token back — so index maintenance and rollback are
+//! inside the measurement, not amortised away.
+//!
+//! THE GATE: the bench FAILS (non-zero exit, red CI) unless the
+//! incremental path achieves at least [`MIN_SPEEDUP`]x the rescan's
+//! proposals/sec at every context >= 256 — a hardware-independent ratio,
+//! which is why it is asserted here rather than compared against a
+//! committed wall-clock number. `BENCH_draft.json` also feeds the
+//! `ci-bench-check` gate; its `tokens_per_s` (incremental proposals/sec
+//! at the headline config) is machine-dependent wall-clock, so the
+//! committed baseline entry deliberately stays `null` (bootstrap) — the
+//! ratio assertion above is the regression tooth.
+//!
+//! For scale, every config also prints the drafting cost as a share of
+//! one paper-scale A100 verification call ([`crate::costmodel`]): the
+//! paper's premise is that this share is ~0.
+
+use anyhow::{ensure, Result};
+
+use crate::costmodel::CostModel;
+use crate::draft::context_ngram::reference_candidates;
+use crate::draft::tables::Table;
+use crate::draft::{ContextNgram, DraftBatch, DraftStrategy, MixedStrategy, NgramTables};
+use crate::util::bench::{black_box, fmt_ns, Bencher};
+use crate::util::json::Json;
+use crate::util::prop;
+use crate::util::rng::Rng;
+use std::sync::Arc;
+
+/// Required incremental-over-rescan proposals/sec ratio at context >= 256
+/// (the acceptance bar for the suffix-index rewrite).
+pub const MIN_SPEEDUP: f64 = 2.0;
+
+/// Block shape every config proposes at (the paper's headline (k, w)).
+const K: usize = 10;
+const W: usize = 10;
+
+fn synthetic_tables(vocab: usize, topk: usize, depth: usize) -> Arc<NgramTables> {
+    let bigram = Table::from_data(
+        vocab,
+        topk,
+        1,
+        (0..vocab as u32)
+            .flat_map(|x| (1..=topk as u32).map(move |j| (x + j) % vocab as u32))
+            .collect(),
+    );
+    let unigram = Table::from_data(1, topk, 1, (0..topk as u32).collect());
+    let ext = Table::from_data(
+        vocab,
+        topk,
+        depth,
+        (0..vocab as u32)
+            .flat_map(|x| {
+                (1..=topk as u32)
+                    .flat_map(move |j| (0..depth as u32).map(move |d| (x + j + d) % vocab as u32))
+            })
+            .collect(),
+    );
+    Arc::new(NgramTables { bigram, unigram, ext_bigram: ext })
+}
+
+/// A repetitive decode-like sequence of `len` tokens (heavy n-gram reuse,
+/// like the paper's code/markdown workloads where context drafting pays).
+fn synthetic_seq(rng: &mut Rng, len: usize, vocab: u32) -> Vec<u32> {
+    let mut seq = prop::vec_u32(rng, (len / 4).max(24), 0..vocab);
+    while seq.len() < len {
+        let start = rng.below(seq.len().saturating_sub(20).max(1));
+        let n = rng.range(4, 16).min(seq.len() - start);
+        let repeat: Vec<u32> = seq[start..start + n].to_vec();
+        seq.extend(repeat);
+    }
+    seq.truncate(len);
+    seq
+}
+
+/// One measured configuration's results.
+struct Cell {
+    ctx: usize,
+    q: usize,
+    rescan_ns: f64,
+    incremental_ns: f64,
+}
+
+impl Cell {
+    fn speedup(&self) -> f64 {
+        self.rescan_ns / self.incremental_ns.max(1e-9)
+    }
+}
+
+/// Run the draft bench; see the module docs for what is measured and
+/// what fails the gate.
+pub fn run(smoke: bool) -> Result<()> {
+    let mut bench = if smoke { Bencher::quick() } else { Bencher::default() };
+    let contexts: &[usize] = if smoke { &[64, 256] } else { &[64, 256, 512] };
+    let qs: &[usize] = if smoke { &[1] } else { &[1, 2] };
+    let vocab = 512u32;
+    let cm = CostModel::for_analog("mistral");
+
+    println!("== bench draft: incremental suffix index vs seed rescan ==");
+    println!("   shape (k={K}, w={W}); every incremental iteration appends one");
+    println!("   token, syncs the index, proposes, then rolls the token back\n");
+
+    let mut rng = Rng::new(0x6472616674); // "draft"
+    let mut cells: Vec<Cell> = Vec::new();
+    for &q in qs {
+        for &ctx_len in contexts {
+            let seq = synthetic_seq(&mut rng, ctx_len, vocab);
+
+            // --- seed rescan: rebuild the window map every proposal
+            let r = bench.bench(
+                &format!("rescan    propose (q={q}, ctx={ctx_len})"),
+                || {
+                    black_box(reference_candidates(q, black_box(&seq), W).len());
+                },
+            );
+            let rescan_ns = r.mean_ns;
+
+            // --- incremental: persistent index, decode-style step
+            let mut ctx = ContextNgram::new(q);
+            let mut batch = DraftBatch::new(W);
+            let mut live = seq.clone();
+            ctx.propose(&live, K, &mut batch); // warm the index once
+            let mut step = 0u32;
+            let r = bench.bench(
+                &format!("suffix-ix propose (q={q}, ctx={ctx_len})"),
+                || {
+                    live.push(step % vocab);
+                    step = step.wrapping_add(1);
+                    batch.reset(W);
+                    ctx.propose(black_box(&live), K, &mut batch);
+                    black_box(batch.k());
+                    live.pop();
+                },
+            );
+            let incremental_ns = r.mean_ns;
+            cells.push(Cell { ctx: ctx_len, q, rescan_ns, incremental_ns });
+        }
+    }
+
+    // arena-backed mixed proposal at the headline config, for the
+    // negligible-cost table
+    let tables = synthetic_tables(vocab as usize, 32, 16);
+    let seq = synthetic_seq(&mut rng, 256, vocab);
+    let mut mixed = MixedStrategy::paper(tables, 1);
+    let mut batch = DraftBatch::new(W);
+    let mixed_ns = bench
+        .bench("mixed     propose (q=1, ctx=256, arena)", || {
+            batch.reset(W);
+            mixed.propose(black_box(&seq), K, &mut batch);
+            black_box(batch.k());
+        })
+        .mean_ns;
+
+    // --- report + gate
+    println!("\n{:<6} {:>3} {:>14} {:>14} {:>9} {:>16}", "ctx", "q", "rescan", "suffix-ix",
+             "speedup", "% of verify call");
+    let mut worst_gated: Option<f64> = None;
+    for c in &cells {
+        let verify_ns = cm.call_time(K, W + 1, c.ctx) * 1e9;
+        println!(
+            "{:<6} {:>3} {:>14} {:>14} {:>8.1}x {:>15.4}%",
+            c.ctx,
+            c.q,
+            fmt_ns(c.rescan_ns),
+            fmt_ns(c.incremental_ns),
+            c.speedup(),
+            c.incremental_ns / verify_ns * 100.0,
+        );
+        if c.ctx >= 256 {
+            let s = c.speedup();
+            worst_gated = Some(worst_gated.map_or(s, |w: f64| w.min(s)));
+        }
+    }
+    println!("mixed arena propose (ctx=256): {}", fmt_ns(mixed_ns));
+
+    // headline summary for ci-bench-check: incremental proposals/sec at
+    // (q=1, ctx=256); wall-clock, so the committed baseline stays null
+    // and regressions are caught by the ratio gate below instead
+    let headline = cells
+        .iter()
+        .find(|c| c.q == 1 && c.ctx == 256)
+        .expect("ctx=256 q=1 cell always measured");
+    let proposals_per_s = 1e9 / headline.incremental_ns.max(1e-9);
+    super::write_json(
+        "BENCH_draft",
+        &Json::obj(vec![
+            ("bench", Json::Str("draft".into())),
+            ("tokens_per_s", Json::Num(proposals_per_s)),
+            ("rescan_ns", Json::Num(headline.rescan_ns)),
+            ("incremental_ns", Json::Num(headline.incremental_ns)),
+            ("speedup", Json::Num(headline.speedup())),
+            ("min_gated_speedup", Json::Num(worst_gated.unwrap_or(0.0))),
+            ("mixed_arena_ns", Json::Num(mixed_ns)),
+        ]),
+    )?;
+
+    let worst = worst_gated.expect("at least one ctx >= 256 config is always measured");
+    ensure!(
+        worst >= MIN_SPEEDUP,
+        "incremental context-ngram path lost its edge: {worst:.2}x < {MIN_SPEEDUP}x \
+         over the seed rescan at ctx >= 256"
+    );
+    println!(
+        "\ndraft gate: OK (worst ctx>=256 speedup {worst:.1}x >= {MIN_SPEEDUP}x)"
+    );
+    Ok(())
+}

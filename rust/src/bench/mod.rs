@@ -13,6 +13,7 @@
 pub mod adaptive;
 pub mod batched;
 pub mod check;
+pub mod draft;
 pub mod elastic;
 pub mod fig1;
 pub mod fig2;

@@ -5,68 +5,149 @@
 //! Matches are ranked by occurrence count, ties broken by recency
 //! (later match wins) — exactly the paper's counting rule.
 //!
-//! The scan is O(len) per proposal with an incremental last-token
-//! position index (len ≤ max_len ≈ 512 here, so the cost is hundreds of
-//! nanoseconds — "negligible" in the paper's sense; see draft_bench.rs).
+//! Proposals run off a persistent [`SuffixIndex`]: posting lists keyed by
+//! the `q`-token window, maintained incrementally as accepted tokens are
+//! appended (O(1) amortised per token, with truncate-on-rollback), so one
+//! proposal costs a single flat prefix memcmp (the index's sync guard;
+//! see `index.rs` for why it is kept) plus O(#matches) to gather
+//! candidates and O(m log m) to rank the m distinct continuations —
+//! instead of the seed's rescan that re-hashed every context window into
+//! a fresh `HashMap` with per-candidate heap allocations on every decode
+//! step. The ranking is byte-identical to the seed rescan (kept below as
+//! [`reference_candidates`], the property-test oracle and the
+//! `bench draft` comparison baseline).
 
 use std::collections::HashMap;
 
+use super::index::SuffixIndex;
 use super::{count_share, DraftBatch, DraftStrategy, StrategyKind};
 use crate::tokenizer::TokenId;
 
-/// Context n-gram drafting state (just the query length).
+/// One ranked candidate group: a distinct continuation and its evidence.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct CtxGroup {
+    /// occurrences of this continuation after the query
+    pub count: u32,
+    /// latest match start position (the recency tie-break)
+    pub last: u32,
+    /// one representative match start (the continuation's tokens are
+    /// `seq[rep + q .. min(rep + q + w, len)]`)
+    pub rep: u32,
+}
+
+/// Context n-gram drafting state: the query length plus the persistent
+/// suffix index and reusable ranking scratch.
 #[derive(Debug)]
 pub struct ContextNgram {
-    /// query length (paper's q; the paper uses q=1, and reports q in {2,3}
-    /// degrading quality — reproduced by `bench qsweep`)
-    pub q: usize,
+    /// query length (the paper's q)
+    q: usize,
+    index: SuffixIndex,
+    /// candidate match positions for the current proposal (reused)
+    pos_scratch: Vec<u32>,
+    /// ranked candidate groups for the current proposal (reused)
+    groups: Vec<CtxGroup>,
 }
 
 impl ContextNgram {
-    /// A context n-gram drafter with query length `q` (>= 1).
+    /// A context n-gram drafter with query length `q` (>= 1; the paper
+    /// uses q=1 and reports q in {2,3} degrading quality — reproduced by
+    /// `bench qsweep`).
     pub fn new(q: usize) -> Self {
         assert!(q >= 1);
-        ContextNgram { q }
+        ContextNgram {
+            q,
+            index: SuffixIndex::new(q),
+            pos_scratch: Vec::new(),
+            groups: Vec::new(),
+        }
     }
 
-    /// All candidate continuations, ranked. Exposed for the qsweep bench
-    /// and tests; `propose` uses the top `k` of these.
-    pub fn candidates(&self, seq: &[TokenId], w: usize) -> Vec<(Vec<TokenId>, u32)> {
+    /// Query length (the paper's q).
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    /// Sync the index with `seq` and rebuild the ranked candidate groups
+    /// for depth `w` into the reusable scratch. Returns the total number
+    /// of matches (the confidence normalizer); 0 means no candidates.
+    /// Allocation-free once the scratch and posting lists are warm.
+    pub(crate) fn refresh(&mut self, seq: &[TokenId], w: usize) -> u32 {
+        self.pos_scratch.clear();
+        self.groups.clear();
         let n = seq.len();
         if n < self.q + 1 || w == 0 {
-            return Vec::new();
+            // keep the index in step even on degenerate calls so the next
+            // real proposal still extends incrementally
+            self.index.sync(seq);
+            return 0;
         }
-        let query = &seq[n - self.q..];
-        // gram -> (count, last_match_pos)
-        let mut counts: HashMap<&[TokenId], (u32, usize)> = HashMap::new();
-        // candidate start positions i: seq[i..i+q] == query, continuation
-        // seq[i+q..i+q+w'] nonempty, and the match must be strictly before
-        // the query itself (i + q <= n - q is NOT required — overlapping
-        // matches that end before the final token still count).
-        let last_start = n - self.q; // query occupies [last_start, n)
-        for i in 0..last_start {
-            if &seq[i..i + self.q] == query {
-                let cont_end = (i + self.q + w).min(n);
-                let cont = &seq[i + self.q..cont_end];
-                if cont.is_empty() {
-                    continue;
-                }
-                let e = counts.entry(cont).or_insert((0, i));
-                e.0 += 1;
-                e.1 = i; // later match overwrites -> recency tiebreak
+        self.index.sync(seq);
+        let q = self.q;
+        let last_start = (n - q) as u32;
+        let query = &seq[n - q..];
+        self.pos_scratch.extend(
+            self.index
+                .positions(query)
+                .iter()
+                .copied()
+                .filter(|&i| i < last_start),
+        );
+        if self.pos_scratch.is_empty() {
+            return 0;
+        }
+        // continuation of a match starting at i (possibly truncated at the
+        // end of the sequence, exactly like the seed rescan)
+        let cont = |i: u32| {
+            let s = i as usize + q;
+            &seq[s..(s + w).min(n)]
+        };
+        // group equal continuations: sort positions by continuation
+        // content, then walk runs
+        self.pos_scratch.sort_unstable_by(|&a, &b| cont(a).cmp(cont(b)));
+        let total = self.pos_scratch.len() as u32;
+        let mut i = 0;
+        while i < self.pos_scratch.len() {
+            let rep = self.pos_scratch[i];
+            let mut last = rep;
+            let mut j = i + 1;
+            while j < self.pos_scratch.len() && cont(self.pos_scratch[j]) == cont(rep) {
+                last = last.max(self.pos_scratch[j]);
+                j += 1;
             }
+            self.groups.push(CtxGroup { count: (j - i) as u32, last, rep });
+            i = j;
         }
-        let mut ranked: Vec<(&[TokenId], (u32, usize))> = counts.into_iter().collect();
-        // count desc, then recency desc, then lexicographic for determinism
-        ranked.sort_by(|a, b| {
-            b.1 .0
-                .cmp(&a.1 .0)
-                .then(b.1 .1.cmp(&a.1 .1))
-                .then(a.0.cmp(b.0))
+        // count desc, then recency desc, then lexicographic for
+        // determinism — the seed rescan's exact ordering (total: distinct
+        // groups can never tie on content)
+        self.groups.sort_unstable_by(|a, b| {
+            b.count
+                .cmp(&a.count)
+                .then(b.last.cmp(&a.last))
+                .then(cont(a.rep).cmp(cont(b.rep)))
         });
-        ranked
-            .into_iter()
-            .map(|(g, (c, _))| (g.to_vec(), c))
+        total
+    }
+
+    /// The ranked candidate groups produced by the latest
+    /// [`Self::refresh`] (consumed by [`super::MixedStrategy`]).
+    pub(crate) fn ranked(&self) -> &[CtxGroup] {
+        &self.groups
+    }
+
+    /// All candidate continuations, ranked. Exposed for benches and
+    /// tests; `propose` streams the same groups into the batch without
+    /// materializing them.
+    pub fn candidates(&mut self, seq: &[TokenId], w: usize) -> Vec<(Vec<TokenId>, u32)> {
+        self.refresh(seq, w);
+        let n = seq.len();
+        let q = self.q;
+        self.groups
+            .iter()
+            .map(|g| {
+                let s = g.rep as usize + q;
+                (seq[s..(s + w).min(n)].to_vec(), g.count)
+            })
             .collect()
     }
 }
@@ -81,16 +162,76 @@ impl DraftStrategy for ContextNgram {
             return;
         }
         let w = batch.w;
-        let cands = self.candidates(seq, w);
-        let total: u32 = cands.iter().map(|(_, c)| *c).sum();
-        for (rank, (tokens, count)) in cands.into_iter().enumerate() {
+        let total = self.refresh(seq, w);
+        if total == 0 {
+            return;
+        }
+        let n = seq.len();
+        let q = self.q;
+        for (rank, g) in self.groups.iter().enumerate() {
             if batch.is_full(k) {
                 break;
             }
+            let s = g.rep as usize + q;
             // confidence = this continuation's share of the observed matches
-            batch.push_conf(tokens, StrategyKind::ContextNgram, rank, count_share(count, total));
+            batch.push_conf(
+                &seq[s..(s + w).min(n)],
+                StrategyKind::ContextNgram,
+                rank,
+                count_share(g.count, total),
+            );
         }
     }
+
+    fn reset(&mut self) {
+        self.index.clear();
+        self.pos_scratch.clear();
+        self.groups.clear();
+    }
+}
+
+/// The seed implementation, preserved verbatim as the specification
+/// oracle: a full O(context) rescan that rebuilds a window `HashMap` per
+/// call. `ContextNgram` must reproduce its output byte-identically
+/// (`rust/tests/draft_equiv.rs`); `bench draft` measures the incremental
+/// path against it.
+pub fn reference_candidates(q: usize, seq: &[TokenId], w: usize) -> Vec<(Vec<TokenId>, u32)> {
+    let n = seq.len();
+    if n < q + 1 || w == 0 {
+        return Vec::new();
+    }
+    let query = &seq[n - q..];
+    // gram -> (count, last_match_pos)
+    let mut counts: HashMap<&[TokenId], (u32, usize)> = HashMap::new();
+    // candidate start positions i: seq[i..i+q] == query, continuation
+    // seq[i+q..i+q+w'] nonempty, and the match must be strictly before
+    // the query itself (i + q <= n - q is NOT required — overlapping
+    // matches that end before the final token still count).
+    let last_start = n - q; // query occupies [last_start, n)
+    for i in 0..last_start {
+        if &seq[i..i + q] == query {
+            let cont_end = (i + q + w).min(n);
+            let cont = &seq[i + q..cont_end];
+            if cont.is_empty() {
+                continue;
+            }
+            let e = counts.entry(cont).or_insert((0, i));
+            e.0 += 1;
+            e.1 = i; // later match overwrites -> recency tiebreak
+        }
+    }
+    let mut ranked: Vec<(&[TokenId], (u32, usize))> = counts.into_iter().collect();
+    // count desc, then recency desc, then lexicographic for determinism
+    ranked.sort_by(|a, b| {
+        b.1 .0
+            .cmp(&a.1 .0)
+            .then(b.1 .1.cmp(&a.1 .1))
+            .then(a.0.cmp(b.0))
+    });
+    ranked
+        .into_iter()
+        .map(|(g, (c, _))| (g.to_vec(), c))
+        .collect()
 }
 
 #[cfg(test)]
@@ -110,8 +251,8 @@ mod tests {
         let b = propose(1, &seq, 4, 2);
         assert_eq!(b.k(), 2);
         // [2,3] and [2,9] tie at count 1; recency: [2,9] started later (i=4)
-        assert_eq!(b.rows[0].tokens, vec![2, 9]);
-        assert_eq!(b.rows[1].tokens, vec![2, 3]);
+        assert_eq!(b.row_tokens(0), vec![2, 9]);
+        assert_eq!(b.row_tokens(1), vec![2, 3]);
     }
 
     #[test]
@@ -119,8 +260,8 @@ mod tests {
         // continuation [7] occurs twice, [8] once (later)
         let seq = [4, 7, 4, 7, 4, 8, 4];
         let b = propose(1, &seq, 2, 1);
-        assert_eq!(b.rows[0].tokens, vec![7]);
-        assert_eq!(b.rows[1].tokens, vec![8]);
+        assert_eq!(b.row_tokens(0), vec![7]);
+        assert_eq!(b.row_tokens(1), vec![8]);
     }
 
     #[test]
@@ -128,7 +269,7 @@ mod tests {
         let seq = [1, 2, 5, 9, 1, 2];
         let b = propose(2, &seq, 2, 1);
         assert_eq!(b.k(), 1);
-        assert_eq!(b.rows[0].tokens, vec![5]);
+        assert_eq!(b.row_tokens(0), vec![5]);
     }
 
     #[test]
@@ -142,7 +283,7 @@ mod tests {
         // match just before the query: continuation shorter than w
         let seq = [3, 8, 3];
         let b = propose(1, &seq, 1, 4);
-        assert_eq!(b.rows[0].tokens, vec![8, 3]); // only 2 tokens available
+        assert_eq!(b.row_tokens(0), vec![8, 3]); // only 2 tokens available
     }
 
     #[test]
@@ -157,5 +298,20 @@ mod tests {
         assert_eq!(propose(3, &[1, 2], 4, 2).k(), 0);
         assert_eq!(propose(1, &[], 4, 2).k(), 0);
         assert_eq!(propose(1, &[5], 4, 0).k(), 0);
+    }
+
+    #[test]
+    fn incremental_proposals_survive_append_and_rollback() {
+        // the same persistent instance must match the reference oracle as
+        // its sequence grows and rolls back
+        let mut ctx = ContextNgram::new(1);
+        let mut seq: Vec<u32> = vec![1, 2, 3, 1, 2, 9, 1];
+        assert_eq!(ctx.candidates(&seq, 2), reference_candidates(1, &seq, 2));
+        seq.extend([2, 3, 1]); // append accepted tokens
+        assert_eq!(ctx.candidates(&seq, 2), reference_candidates(1, &seq, 2));
+        seq.truncate(8); // rollback
+        assert_eq!(ctx.candidates(&seq, 2), reference_candidates(1, &seq, 2));
+        seq.extend([7, 7, 1]); // diverge after the rollback
+        assert_eq!(ctx.candidates(&seq, 2), reference_candidates(1, &seq, 2));
     }
 }

@@ -1,0 +1,285 @@
+//! Persistent per-sequence suffix index for context-derived N-grams.
+//!
+//! The seed `ContextNgram` re-scanned the whole sequence and rebuilt a
+//! `HashMap` of windows on EVERY proposal — O(context) hashing and heap
+//! allocation per decode step per lane, which is exactly the cost the
+//! paper's "negligible-cost drafting" premise forbids. [`SuffixIndex`]
+//! replaces the rescan with posting lists maintained *online*:
+//!
+//! - **Key**: the `q`-token window `seq[i..i + q]` (the paper's query
+//!   length; q = 1 in the headline configuration).
+//! - **Posting list**: every start position `i` at which that window
+//!   occurs, in ascending order.
+//! - **Append**: pushing one accepted token adds exactly one new window
+//!   (the one ending at the new token) — O(1) amortised, allocation-free
+//!   once the key has been seen before.
+//! - **Rollback**: [`SuffixIndex::truncate`] removes the windows that
+//!   overlap the rolled-back suffix by popping each affected posting
+//!   list's tail (positions are appended in ascending order, so the
+//!   victim is always the last element) — O(rolled-back tokens).
+//! - **Sync**: [`SuffixIndex::sync`] reconciles the index with an
+//!   arbitrary caller-supplied sequence: a prefix equality check (one
+//!   vectorised word-compare over the common prefix — no hashing, no
+//!   allocation) confirms the common case of pure extension; divergence
+//!   rolls back to the longest common prefix and re-appends. This is
+//!   what keeps the stateless `DraftStrategy::propose(&seq, ..)`
+//!   contract safe even for callers that hand the strategy a completely
+//!   different sequence.
+//!
+//! A proposal then costs one O(context) prefix memcmp (the sync guard —
+//! a straight-line word-compare, deliberately kept so byte-identity
+//! never rests on trusting the caller; ~2 KB at this repo's 512-token
+//! max context, orders of magnitude cheaper than the seed's per-window
+//! hashing and allocation over the same span) plus O(#matches) to
+//! gather candidate positions and O(m log m) to rank the m distinct
+//! continuations — while reproducing the seed rescan's
+//! count-desc/recency-desc/lexicographic ranking byte-identically
+//! (property-tested in `rust/tests/draft_equiv.rs`). Contexts far
+//! beyond this repo's artifact limits would want a bounded guard
+//! (length/generation stamp) instead of the full memcmp.
+
+use std::collections::HashMap;
+
+use crate::tokenizer::TokenId;
+
+/// Incrementally maintained posting lists over one token sequence's
+/// `q`-token windows (see the module docs for the cost model).
+#[derive(Debug)]
+pub struct SuffixIndex {
+    /// window length (the paper's q)
+    q: usize,
+    /// the ingested sequence (the index's own copy; `sync` diffs the
+    /// caller's sequence against it)
+    tokens: Vec<TokenId>,
+    /// window content -> ascending start positions. Emptied lists are
+    /// kept so their allocations (key and list) are reused when the same
+    /// window reappears after a rollback.
+    postings: HashMap<Vec<TokenId>, Vec<u32>>,
+}
+
+impl SuffixIndex {
+    /// An empty index over `q`-token windows (`q >= 1`).
+    pub fn new(q: usize) -> Self {
+        assert!(q >= 1, "window length must be at least 1");
+        SuffixIndex { q, tokens: Vec::new(), postings: HashMap::new() }
+    }
+
+    /// Window length this index was built with.
+    pub fn q(&self) -> usize {
+        self.q
+    }
+
+    /// Tokens ingested so far.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Whether nothing has been ingested.
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// The ingested sequence (what `sync` last reconciled against).
+    pub fn tokens(&self) -> &[TokenId] {
+        &self.tokens
+    }
+
+    /// Drop all state (between requests). Allocation capacity is NOT
+    /// kept: a new request shares no windows with the old one, so stale
+    /// keys would only pin memory.
+    pub fn clear(&mut self) {
+        self.tokens.clear();
+        self.postings.clear();
+    }
+
+    /// Ingest one appended token: registers the single new window that
+    /// ends at it. O(1) amortised; allocates only when the window content
+    /// has never been seen before.
+    pub fn append(&mut self, t: TokenId) {
+        self.tokens.push(t);
+        let n = self.tokens.len();
+        if n < self.q {
+            return;
+        }
+        let i = n - self.q;
+        if let Some(list) = self.postings.get_mut(&self.tokens[i..n]) {
+            list.push(i as u32);
+            return;
+        }
+        self.postings.insert(self.tokens[i..n].to_vec(), vec![i as u32]);
+    }
+
+    /// Roll the index back to its first `new_len` tokens (rejected
+    /// speculation, or a caller switching to a diverging sequence):
+    /// every window overlapping the removed suffix is unregistered by
+    /// popping its posting list's tail. O(removed tokens).
+    pub fn truncate(&mut self, new_len: usize) {
+        let n = self.tokens.len();
+        if new_len >= n {
+            return;
+        }
+        if n >= self.q {
+            // valid window starts are 0..=n-q; a window [i, i+q) survives
+            // the truncation iff i + q <= new_len
+            let last = n - self.q;
+            let first = (new_len + 1).saturating_sub(self.q);
+            // remove in descending start order so each affected posting
+            // list's LAST element is always the position being removed
+            for i in (first..=last).rev() {
+                let key = &self.tokens[i..i + self.q];
+                if let Some(list) = self.postings.get_mut(key) {
+                    debug_assert_eq!(list.last().copied(), Some(i as u32));
+                    list.pop();
+                }
+            }
+        }
+        self.tokens.truncate(new_len);
+    }
+
+    /// Reconcile the index with `seq`: extend in place when `seq` extends
+    /// the ingested sequence (the decode-loop common case — one cheap
+    /// prefix word-compare, then O(new tokens) appends), otherwise roll
+    /// back to the longest common prefix and re-ingest the rest.
+    pub fn sync(&mut self, seq: &[TokenId]) {
+        let n = self.tokens.len().min(seq.len());
+        if self.tokens[..n] == seq[..n] {
+            if self.tokens.len() > seq.len() {
+                self.truncate(seq.len());
+            }
+        } else {
+            let mut common = 0;
+            while common < n && self.tokens[common] == seq[common] {
+                common += 1;
+            }
+            self.truncate(common);
+        }
+        let start = self.tokens.len();
+        for &t in &seq[start..] {
+            self.append(t);
+        }
+    }
+
+    /// Ascending start positions whose window equals `window` (empty when
+    /// the window was never ingested). `window.len()` must be `q`.
+    pub fn positions(&self, window: &[TokenId]) -> &[u32] {
+        debug_assert_eq!(window.len(), self.q);
+        self.postings.get(window).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn positions_of(ix: &SuffixIndex, window: &[TokenId]) -> Vec<u32> {
+        ix.positions(window).to_vec()
+    }
+
+    #[test]
+    fn append_registers_every_window() {
+        let mut ix = SuffixIndex::new(2);
+        for t in [1, 2, 1, 2, 3] {
+            ix.append(t);
+        }
+        assert_eq!(positions_of(&ix, &[1, 2]), vec![0, 2]);
+        assert_eq!(positions_of(&ix, &[2, 1]), vec![1]);
+        assert_eq!(positions_of(&ix, &[2, 3]), vec![3]);
+        assert_eq!(positions_of(&ix, &[3, 1]), Vec::<u32>::new());
+        assert_eq!(ix.len(), 5);
+    }
+
+    #[test]
+    fn truncate_unregisters_overlapping_windows() {
+        let mut ix = SuffixIndex::new(2);
+        for t in [1, 2, 1, 2, 3] {
+            ix.append(t);
+        }
+        ix.truncate(3); // keep [1, 2, 1]
+        assert_eq!(positions_of(&ix, &[1, 2]), vec![0]);
+        assert_eq!(positions_of(&ix, &[2, 1]), vec![1]);
+        assert_eq!(positions_of(&ix, &[2, 3]), Vec::<u32>::new());
+        assert_eq!(ix.len(), 3);
+        // re-appending after a rollback re-registers cleanly
+        ix.append(9);
+        assert_eq!(positions_of(&ix, &[1, 9]), vec![2]);
+    }
+
+    #[test]
+    fn truncate_below_q_empties_everything() {
+        let mut ix = SuffixIndex::new(3);
+        for t in [4, 5, 6, 7] {
+            ix.append(t);
+        }
+        ix.truncate(2);
+        assert_eq!(positions_of(&ix, &[4, 5, 6]), Vec::<u32>::new());
+        assert_eq!(positions_of(&ix, &[5, 6, 7]), Vec::<u32>::new());
+        assert_eq!(ix.len(), 2);
+    }
+
+    #[test]
+    fn sync_extends_rolls_back_and_rebuilds() {
+        let mut ix = SuffixIndex::new(1);
+        ix.sync(&[1, 2, 3]);
+        assert_eq!(ix.tokens(), &[1, 2, 3]);
+        // pure extension
+        ix.sync(&[1, 2, 3, 4]);
+        assert_eq!(positions_of(&ix, &[4]), vec![3]);
+        // pure rollback
+        ix.sync(&[1, 2]);
+        assert_eq!(positions_of(&ix, &[3]), Vec::<u32>::new());
+        assert_eq!(positions_of(&ix, &[4]), Vec::<u32>::new());
+        // divergence: rollback to the common prefix, then re-ingest
+        ix.sync(&[1, 9, 9]);
+        assert_eq!(ix.tokens(), &[1, 9, 9]);
+        assert_eq!(positions_of(&ix, &[9]), vec![1, 2]);
+        assert_eq!(positions_of(&ix, &[2]), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn sync_against_empty_and_short_sequences() {
+        let mut ix = SuffixIndex::new(2);
+        ix.sync(&[7]);
+        assert_eq!(ix.len(), 1);
+        assert!(ix.positions(&[7, 7]).is_empty());
+        ix.sync(&[]);
+        assert!(ix.is_empty());
+    }
+
+    #[test]
+    fn random_trajectories_match_a_fresh_rebuild() {
+        use crate::util::{prop, rng::Rng};
+        prop::check(200, |rng: &mut Rng| {
+            let q = rng.range(1, 3);
+            let vocab = rng.range(2, 6);
+            let mut ix = SuffixIndex::new(q);
+            let mut shadow: Vec<TokenId> = Vec::new();
+            for _ in 0..rng.range(3, 20) {
+                if rng.f64() < 0.65 || shadow.is_empty() {
+                    for _ in 0..rng.range(1, 6) {
+                        let t = rng.below(vocab) as TokenId;
+                        shadow.push(t);
+                    }
+                } else {
+                    let keep = rng.below(shadow.len());
+                    shadow.truncate(keep);
+                }
+                ix.sync(&shadow);
+                // compare every window's postings against a rebuild
+                let mut fresh = SuffixIndex::new(q);
+                fresh.sync(&shadow);
+                if ix.tokens() != shadow.as_slice() {
+                    return false;
+                }
+                if shadow.len() >= q {
+                    for i in 0..=shadow.len() - q {
+                        let win = &shadow[i..i + q];
+                        if ix.positions(win) != fresh.positions(win) {
+                            return false;
+                        }
+                    }
+                }
+            }
+            true
+        });
+    }
+}

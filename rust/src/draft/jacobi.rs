@@ -37,21 +37,21 @@ impl DraftStrategy for JacobiDraft {
         // unconsumed leftover model predictions from last step; they were
         // produced past the accepted prefix so they are a (stale but often
         // good) guess at the upcoming tokens — the Jacobi fixed point.
-        let mut row: Vec<TokenId> = self
-            .prev_out
-            .iter()
-            .skip(self.consumed)
-            .copied()
-            .take(w)
-            .collect();
-        while row.len() < w {
-            row.push(self.init_token);
+        // Written straight into the batch arena (no per-step row Vec).
+        batch.begin_row();
+        for &t in self.prev_out.iter().skip(self.consumed).take(w) {
+            batch.push_token(t);
         }
-        batch.push(row, StrategyKind::Jacobi, 0);
+        while batch.open_row().len() < w {
+            batch.push_token(self.init_token);
+        }
+        batch.commit_row(StrategyKind::Jacobi, 0);
     }
 
     fn observe(&mut self, accepted: &[TokenId], model_out: &[TokenId]) {
-        self.prev_out = model_out.to_vec();
+        // reuse the buffer (steady state: no allocation once warm)
+        self.prev_out.clear();
+        self.prev_out.extend_from_slice(model_out);
         self.consumed = accepted.len();
     }
 
@@ -70,7 +70,7 @@ mod tests {
         let mut j = JacobiDraft::new(7);
         let mut b = DraftBatch::new(3);
         j.propose(&[1], 1, &mut b);
-        assert_eq!(b.rows[0].tokens, vec![7, 7, 7]);
+        assert_eq!(b.row_tokens(0), vec![7, 7, 7]);
     }
 
     #[test]
@@ -80,7 +80,7 @@ mod tests {
         j.observe(&[5, 6], &[5, 6, 7, 8]);
         let mut b = DraftBatch::new(3);
         j.propose(&[1], 1, &mut b);
-        assert_eq!(b.rows[0].tokens, vec![7, 8, 0]);
+        assert_eq!(b.row_tokens(0), vec![7, 8, 0]);
     }
 
     #[test]
@@ -90,6 +90,6 @@ mod tests {
         j.reset();
         let mut b = DraftBatch::new(2);
         j.propose(&[9], 1, &mut b);
-        assert_eq!(b.rows[0].tokens, vec![1, 1]);
+        assert_eq!(b.row_tokens(0), vec![1, 1]);
     }
 }

@@ -5,7 +5,12 @@
 //! provenance).
 //!
 //! `AllocationPolicy` generalizes the paper's ordering for the ablation
-//! benches (`bench ablation-alloc`).
+//! benches (`bench ablation-alloc`). Both sources stream straight into the
+//! `DraftBatch` arena — context rows as slices of the live sequence,
+//! bigram chains through the open-row writer — with duplicate rows
+//! (identical drafts waste verification rows) rejected by comparing
+//! against the arena in place, so the whole mixed proposal is
+//! allocation-free once warm.
 
 use std::sync::Arc;
 
@@ -23,7 +28,10 @@ pub enum AllocationPolicy {
     /// inverse ordering (ablation)
     BigramFirst,
     /// fixed split: at most `ctx` rows from the context (ablation)
-    FixedSplit { ctx: usize },
+    FixedSplit {
+        /// context-row quota
+        ctx: usize,
+    },
 }
 
 /// The paper's mixed drafting policy: context n-gram rows plus
@@ -55,6 +63,59 @@ impl MixedStrategy {
             policy,
         }
     }
+
+    /// Push the context source's ranked candidates (rank order, skipping
+    /// rows already present) until `quota` rows stand.
+    fn push_context(&self, seq: &[TokenId], ctx_total: u32, quota: usize, batch: &mut DraftBatch) {
+        let w = batch.w;
+        let n = seq.len();
+        let q = self.context.q();
+        for (rank, g) in self.context.ranked().iter().enumerate() {
+            if batch.is_full(quota) {
+                break;
+            }
+            let s = g.rep as usize + q;
+            let row = &seq[s..(s + w).min(n)];
+            let dup = (0..batch.k()).any(|i| batch.row_tokens(i) == row);
+            if !dup {
+                batch.push_conf(
+                    row,
+                    StrategyKind::ContextNgram,
+                    rank,
+                    count_share(g.count, ctx_total),
+                );
+            }
+        }
+    }
+
+    /// Push extended-bigram chains (rank order, skipping rows already
+    /// present) until `quota` rows stand. Chains are written through the
+    /// arena writer and aborted in place when they duplicate an earlier row.
+    fn push_bigram(&self, cur: Option<TokenId>, quota: usize, batch: &mut DraftBatch) {
+        let Some(cur) = cur else { return };
+        let t = self.bigram.tables();
+        let w = batch.w;
+        for j in 0..t.ext_bigram.cols {
+            if batch.is_full(quota) {
+                break;
+            }
+            batch.begin_row();
+            let r = (cur as usize).min(t.ext_bigram.rows - 1);
+            for d in 0..w.min(t.ext_bigram.depth) {
+                batch.push_token(t.ext_bigram.at3(r, j, d));
+            }
+            while batch.open_row().len() < w {
+                let last = batch.open_row().last().copied().unwrap_or(cur);
+                batch.push_token(t.bigram.at((last as usize).min(t.bigram.rows - 1), 0));
+            }
+            let dup = (0..batch.k()).any(|i| batch.row_tokens(i) == batch.open_row());
+            if dup {
+                batch.abort_row();
+            } else {
+                batch.commit_row_conf(StrategyKind::ExtendedBigram, j, 1.0 / (1.0 + j as f64));
+            }
+        }
+    }
 }
 
 impl DraftStrategy for MixedStrategy {
@@ -63,54 +124,25 @@ impl DraftStrategy for MixedStrategy {
     }
 
     fn propose(&mut self, seq: &[TokenId], k: usize, batch: &mut DraftBatch) {
-        // Gather both sources' ranked candidates (with confidences), then
-        // fill the batch with DISTINCT rows in policy order (duplicates
-        // waste verification rows).
+        // Rank the context source once (refreshing its suffix index), then
+        // fill the batch with DISTINCT rows in policy order.
         let w = batch.w;
-        let ctx_cands = self.context.candidates(seq, w);
-        let ctx_total: u32 = ctx_cands.iter().map(|(_, c)| *c).sum();
-        let ctx_rows: Vec<(Vec<TokenId>, f64)> = ctx_cands
-            .into_iter()
-            .map(|(g, c)| (g, count_share(c, ctx_total)))
-            .collect();
-        let tables = self.bigram_tables();
-        let mut big_rows: Vec<(Vec<TokenId>, f64)> = Vec::new();
-        if let Some(&cur) = seq.last() {
-            let mut chain = Vec::new();
-            for j in 0..tables.ext_bigram.cols {
-                tables.ext_chain(cur, j, w, &mut chain);
-                big_rows.push((chain.clone(), 1.0 / (1.0 + j as f64)));
-            }
-        }
-
-        let push = |batch: &mut DraftBatch, rows: &[(Vec<TokenId>, f64)],
-                    kind: StrategyKind, quota: usize| {
-            for (rank, (row, conf)) in rows.iter().enumerate() {
-                if batch.is_full(quota) {
-                    break;
-                }
-                let exists = batch.rows.iter().any(|r| {
-                    r.tokens.len() == row.len().min(w) && r.tokens == row[..row.len().min(w)]
-                });
-                if !exists {
-                    batch.push_conf(row.clone(), kind, rank, *conf);
-                }
-            }
-        };
+        let ctx_total = self.context.refresh(seq, w);
+        let cur = seq.last().copied();
 
         match self.policy {
             AllocationPolicy::ContextFirst => {
-                push(batch, &ctx_rows, StrategyKind::ContextNgram, k);
-                push(batch, &big_rows, StrategyKind::ExtendedBigram, k);
+                self.push_context(seq, ctx_total, k, batch);
+                self.push_bigram(cur, k, batch);
             }
             AllocationPolicy::BigramFirst => {
-                push(batch, &big_rows, StrategyKind::ExtendedBigram, k);
-                push(batch, &ctx_rows, StrategyKind::ContextNgram, k);
+                self.push_bigram(cur, k, batch);
+                self.push_context(seq, ctx_total, k, batch);
             }
             AllocationPolicy::FixedSplit { ctx } => {
-                push(batch, &ctx_rows, StrategyKind::ContextNgram, ctx.min(k));
-                push(batch, &big_rows, StrategyKind::ExtendedBigram, k);
-                push(batch, &ctx_rows, StrategyKind::ContextNgram, k);
+                self.push_context(seq, ctx_total, ctx.min(k), batch);
+                self.push_bigram(cur, k, batch);
+                self.push_context(seq, ctx_total, k, batch);
             }
         }
     }
@@ -118,12 +150,6 @@ impl DraftStrategy for MixedStrategy {
     fn reset(&mut self) {
         self.context.reset();
         self.bigram.reset();
-    }
-}
-
-impl MixedStrategy {
-    fn bigram_tables(&self) -> &NgramTables {
-        self.bigram.tables()
     }
 }
 
@@ -156,9 +182,9 @@ mod tests {
         let mut b = DraftBatch::new(1);
         m.propose(&seq, 4, &mut b);
         assert_eq!(b.k(), 4);
-        assert_eq!(b.rows[0].kind, StrategyKind::ContextNgram);
-        assert_eq!(b.rows[0].tokens, vec![6]);
-        assert!(b.rows[1..].iter().all(|r| r.kind == StrategyKind::ExtendedBigram));
+        assert_eq!(b.rows()[0].kind, StrategyKind::ContextNgram);
+        assert_eq!(b.row_tokens(0), vec![6]);
+        assert!(b.rows()[1..].iter().all(|r| r.kind == StrategyKind::ExtendedBigram));
     }
 
     #[test]
@@ -169,7 +195,7 @@ mod tests {
         let seq = [2, 3, 2];
         let mut b = DraftBatch::new(1);
         m.propose(&seq, 3, &mut b);
-        let toks: Vec<_> = b.rows.iter().map(|r| r.tokens[0]).collect();
+        let toks: Vec<u32> = (0..b.k()).map(|r| b.row_tokens(r)[0]).collect();
         let mut uniq = toks.clone();
         uniq.sort_unstable();
         uniq.dedup();
@@ -183,7 +209,7 @@ mod tests {
         let seq = [5, 6, 1, 5];
         let mut b = DraftBatch::new(1);
         m.propose(&seq, 2, &mut b);
-        assert_eq!(b.rows[0].kind, StrategyKind::ExtendedBigram);
+        assert_eq!(b.rows()[0].kind, StrategyKind::ExtendedBigram);
     }
 
     #[test]
@@ -193,7 +219,7 @@ mod tests {
         let seq = [1, 2, 0, 1, 4, 0, 1];
         let mut b = DraftBatch::new(1);
         m.propose(&seq, 4, &mut b);
-        let n_ctx = b.rows.iter().filter(|r| r.kind == StrategyKind::ContextNgram).count();
+        let n_ctx = b.rows().iter().filter(|r| r.kind == StrategyKind::ContextNgram).count();
         assert!(n_ctx <= 2); // 1 from quota (+1 possible from final refill)
         assert_eq!(b.k(), 4);
     }

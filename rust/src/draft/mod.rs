@@ -3,9 +3,16 @@
 //! A strategy fills rows of a `DraftBatch` with `w` speculative tokens each;
 //! the engine verifies all rows in one model call. Strategies are
 //! negligible-cost by construction: table lookups (model-derived N-grams)
-//! or context scans (context-derived N-grams), never a model call.
+//! or posting-list probes (context-derived N-grams, [`index::SuffixIndex`]),
+//! never a model call.
+//!
+//! The batch itself is **arena-backed**: one contiguous token buffer plus
+//! per-row descriptors (offset/len/kind/rank/confidence), reused across
+//! steps via [`DraftBatch::reset`], so a steady-state decode step performs
+//! zero draft-side heap allocations (pinned by `rust/tests/draft_alloc.rs`).
 
 pub mod context_ngram;
+pub mod index;
 pub mod jacobi;
 pub mod mixed;
 pub mod model_ngram;
@@ -13,6 +20,7 @@ pub mod session_cache;
 pub mod tables;
 
 pub use context_ngram::ContextNgram;
+pub use index::SuffixIndex;
 pub use jacobi::JacobiDraft;
 pub use mixed::MixedStrategy;
 pub use model_ngram::{ExtendedBigram, ModelBigram, ModelUnigram};
@@ -78,11 +86,15 @@ impl StrategyKind {
     }
 }
 
-/// One proposed row: `w` draft tokens plus provenance.
-#[derive(Debug, Clone)]
+/// One proposed row's descriptor: provenance plus the row's span within
+/// the batch's shared token arena (read the tokens back with
+/// [`DraftBatch::row_tokens`]).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct DraftRow {
-    /// the row's draft tokens (at most `w`)
-    pub tokens: Vec<TokenId>,
+    /// start of the row's tokens in the batch arena
+    off: usize,
+    /// number of draft tokens in the row (at most the batch's `w`)
+    len: usize,
     /// producing strategy
     pub kind: StrategyKind,
     /// rank of this row within its strategy's own ordering (0 = top)
@@ -94,41 +106,148 @@ pub struct DraftRow {
     pub confidence: f64,
 }
 
+impl DraftRow {
+    /// Number of draft tokens in the row.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the row carries no draft tokens (anchor-only padding).
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
 /// The (k, w) speculation batch handed to the verifier.
+///
+/// Arena layout: all rows' tokens live back-to-back in one contiguous
+/// buffer; [`DraftRow`] descriptors carry each row's span. Strategies
+/// append either whole slices ([`DraftBatch::push_conf`]) or token by
+/// token through the open-row writer ([`DraftBatch::begin_row`] /
+/// [`DraftBatch::push_token`] / [`DraftBatch::commit_row`]), so chain
+/// construction needs no intermediate `Vec`. [`DraftBatch::reset`] clears
+/// rows and arena while keeping both allocations, which is what makes the
+/// per-step draft path allocation-free once warm.
 #[derive(Debug, Clone, Default)]
 pub struct DraftBatch {
-    /// proposed rows, in policy order
-    pub rows: Vec<DraftRow>,
     /// speculation depth every row is truncated to
     pub w: usize,
+    /// contiguous token storage for all rows
+    arena: Vec<TokenId>,
+    /// per-row descriptors, in policy order
+    rows: Vec<DraftRow>,
+    /// arena offset of the currently open (uncommitted) row, if any
+    open: Option<usize>,
 }
 
 impl DraftBatch {
     /// An empty batch of depth `w`.
     pub fn new(w: usize) -> Self {
-        DraftBatch { rows: Vec::new(), w }
+        DraftBatch { w, arena: Vec::new(), rows: Vec::new(), open: None }
+    }
+
+    /// Clear all rows and re-target depth `w`, KEEPING the arena and
+    /// descriptor allocations — the per-step reuse hook.
+    pub fn reset(&mut self, w: usize) {
+        self.w = w;
+        self.arena.clear();
+        self.rows.clear();
+        self.open = None;
     }
 
     /// Append a row with the rank-prior confidence `1 / (1 + rank)`.
-    pub fn push(&mut self, tokens: Vec<TokenId>, kind: StrategyKind, rank: usize) {
+    pub fn push(&mut self, tokens: impl AsRef<[TokenId]>, kind: StrategyKind, rank: usize) {
         let confidence = 1.0 / (1.0 + rank as f64);
         self.push_conf(tokens, kind, rank, confidence);
     }
 
     /// `push` with an explicit strategy-reported confidence (clamped to
-    /// (0, 1]); strategies with real frequency counts use this.
+    /// (0, 1]); strategies with real frequency counts use this. The row is
+    /// truncated to the batch depth `w` (the documented contract; see
+    /// `batch_truncates_to_w`).
     pub fn push_conf(
         &mut self,
-        mut tokens: Vec<TokenId>,
+        tokens: impl AsRef<[TokenId]>,
         kind: StrategyKind,
         rank: usize,
         confidence: f64,
     ) {
-        // over-length rows are truncated (the documented contract; see
-        // `batch_truncates_to_w`)
-        tokens.truncate(self.w);
+        debug_assert!(self.open.is_none(), "push while a writer row is open");
+        let s = tokens.as_ref();
+        let len = s.len().min(self.w);
+        let off = self.arena.len();
+        self.arena.extend_from_slice(&s[..len]);
         let confidence = confidence.clamp(f64::MIN_POSITIVE, 1.0);
-        self.rows.push(DraftRow { tokens, kind, rank, confidence });
+        self.rows.push(DraftRow { off, len, kind, rank, confidence });
+    }
+
+    /// Open a new row for token-by-token writing (chain strategies write
+    /// straight into the arena; finish with [`Self::commit_row`] /
+    /// [`Self::commit_row_conf`] or discard with [`Self::abort_row`]).
+    pub fn begin_row(&mut self) {
+        debug_assert!(self.open.is_none(), "begin_row while a row is open");
+        self.open = Some(self.arena.len());
+    }
+
+    /// Append one token to the open row; silently ignored once the row
+    /// has reached the batch depth `w` (same truncation contract as
+    /// [`Self::push_conf`]).
+    pub fn push_token(&mut self, t: TokenId) {
+        let off = self.open.expect("push_token without begin_row");
+        if self.arena.len() - off < self.w {
+            self.arena.push(t);
+        }
+    }
+
+    /// The open row's tokens so far (empty when no row is open).
+    pub fn open_row(&self) -> &[TokenId] {
+        match self.open {
+            Some(off) => &self.arena[off..],
+            None => &[],
+        }
+    }
+
+    /// Commit the open row with the rank-prior confidence `1/(1+rank)`.
+    pub fn commit_row(&mut self, kind: StrategyKind, rank: usize) {
+        let confidence = 1.0 / (1.0 + rank as f64);
+        self.commit_row_conf(kind, rank, confidence);
+    }
+
+    /// Commit the open row with an explicit confidence (clamped to (0, 1]).
+    pub fn commit_row_conf(&mut self, kind: StrategyKind, rank: usize, confidence: f64) {
+        let off = self.open.take().expect("commit_row without begin_row");
+        let len = self.arena.len() - off;
+        let confidence = confidence.clamp(f64::MIN_POSITIVE, 1.0);
+        self.rows.push(DraftRow { off, len, kind, rank, confidence });
+    }
+
+    /// Discard the open row, returning its arena span for reuse.
+    pub fn abort_row(&mut self) {
+        if let Some(off) = self.open.take() {
+            self.arena.truncate(off);
+        }
+    }
+
+    /// The committed row descriptors, in policy order.
+    pub fn rows(&self) -> &[DraftRow] {
+        &self.rows
+    }
+
+    /// Row `r`'s draft tokens (a view into the arena).
+    pub fn row_tokens(&self, r: usize) -> &[TokenId] {
+        let d = &self.rows[r];
+        &self.arena[d.off..d.off + d.len]
+    }
+
+    /// Drop row `r`'s descriptor (its arena span becomes dead space until
+    /// the next [`Self::reset`] — cheap, and a batch lives one step).
+    pub(crate) fn remove_row(&mut self, r: usize) {
+        self.rows.remove(r);
+    }
+
+    /// Keep only the first `k` rows (descriptor truncation only).
+    pub(crate) fn truncate_rows(&mut self, k: usize) {
+        self.rows.truncate(k);
     }
 
     /// Current row count.
@@ -180,7 +299,40 @@ mod tests {
     fn batch_truncates_to_w() {
         let mut b = DraftBatch::new(3);
         b.push(vec![1, 2, 3, 4, 5], StrategyKind::ModelBigram, 0);
-        assert_eq!(b.rows[0].tokens, vec![1, 2, 3]);
+        assert_eq!(b.row_tokens(0), vec![1, 2, 3]);
         assert_eq!(b.k(), 1);
+    }
+
+    #[test]
+    fn writer_rows_truncate_commit_and_abort() {
+        let mut b = DraftBatch::new(2);
+        b.begin_row();
+        b.push_token(7);
+        b.push_token(8);
+        b.push_token(9); // beyond w: ignored
+        assert_eq!(b.open_row(), vec![7, 8]);
+        b.commit_row(StrategyKind::ExtendedBigram, 1);
+        assert_eq!(b.k(), 1);
+        assert_eq!(b.row_tokens(0), vec![7, 8]);
+        assert_eq!(b.rows()[0].rank, 1);
+        assert!((b.rows()[0].confidence - 0.5).abs() < 1e-12);
+
+        b.begin_row();
+        b.push_token(5);
+        b.abort_row();
+        assert_eq!(b.k(), 1, "aborted rows leave no descriptor");
+        b.push(vec![3], StrategyKind::ContextNgram, 0);
+        assert_eq!(b.row_tokens(1), vec![3], "arena reuses the aborted span");
+    }
+
+    #[test]
+    fn reset_keeps_capacity_and_clears_rows() {
+        let mut b = DraftBatch::new(4);
+        b.push(vec![1, 2, 3, 4], StrategyKind::ContextNgram, 0);
+        b.reset(2);
+        assert_eq!(b.k(), 0);
+        assert_eq!(b.w, 2);
+        b.push(vec![9, 9, 9], StrategyKind::ContextNgram, 0);
+        assert_eq!(b.row_tokens(0), vec![9, 9]);
     }
 }

@@ -2,24 +2,38 @@
 //!
 //! All three consume the tables extracted at build time from the trained
 //! model weights (draft/tables.rs) — zero model calls at decode time.
+//! Chains are written token-by-token straight into the `DraftBatch`
+//! arena (the open-row writer), so proposing is allocation-free once the
+//! batch is warm — no per-row scratch `Vec`, no per-row clone.
 
 use std::sync::Arc;
 
 use super::{DraftBatch, DraftStrategy, NgramTables, StrategyKind};
 use crate::tokenizer::TokenId;
 
+/// Extend the open row of `batch` with bigram top-1 chaining until it
+/// reaches the batch depth: each next token is the bigram table's rank-0
+/// continuation of the previous one (`anchor` seeds an empty row). The
+/// shared tail rule of all three table strategies.
+fn chain_to_depth(batch: &mut DraftBatch, tables: &NgramTables, anchor: TokenId) {
+    while batch.open_row().len() < batch.w {
+        let last = batch.open_row().last().copied().unwrap_or(anchor);
+        let r = (last as usize).min(tables.bigram.rows - 1);
+        batch.push_token(tables.bigram.at(r, 0));
+    }
+}
+
 /// Top-k of p_M(. | last token), one row per rank; rows extended past the
 /// first token with greedy bigram chains ("extended bigram", §4.1).
 #[derive(Clone)]
 pub struct ExtendedBigram {
     tables: Arc<NgramTables>,
-    scratch: Vec<TokenId>,
 }
 
 impl ExtendedBigram {
     /// An extended-bigram drafter over `tables`.
     pub fn new(tables: Arc<NgramTables>) -> Self {
-        ExtendedBigram { tables, scratch: Vec::new() }
+        ExtendedBigram { tables }
     }
 
     /// The backing tables (bench introspection).
@@ -36,10 +50,18 @@ impl DraftStrategy for ExtendedBigram {
     fn propose(&mut self, seq: &[TokenId], k: usize, batch: &mut DraftBatch) {
         let Some(&cur) = seq.last() else { return };
         let w = batch.w;
+        let t = &self.tables;
         let mut rank = 0;
-        while !batch.is_full(k) && rank < self.tables.ext_bigram.cols {
-            self.tables.ext_chain(cur, rank, w, &mut self.scratch);
-            batch.push(self.scratch.clone(), StrategyKind::ExtendedBigram, rank);
+        while !batch.is_full(k) && rank < t.ext_bigram.cols {
+            // the stored chain for (cur, rank), then bigram top-1 beyond
+            // its depth — ext_chain's rule, written straight into the arena
+            batch.begin_row();
+            let r = (cur as usize).min(t.ext_bigram.rows - 1);
+            for d in 0..w.min(t.ext_bigram.depth) {
+                batch.push_token(t.ext_bigram.at3(r, rank, d));
+            }
+            chain_to_depth(batch, t, cur);
+            batch.commit_row(StrategyKind::ExtendedBigram, rank);
             rank += 1;
         }
     }
@@ -51,13 +73,12 @@ impl DraftStrategy for ExtendedBigram {
 #[derive(Clone)]
 pub struct ModelBigram {
     tables: Arc<NgramTables>,
-    scratch: Vec<TokenId>,
 }
 
 impl ModelBigram {
     /// A plain-bigram drafter over `tables`.
     pub fn new(tables: Arc<NgramTables>) -> Self {
-        ModelBigram { tables, scratch: Vec::new() }
+        ModelBigram { tables }
     }
 }
 
@@ -68,19 +89,14 @@ impl DraftStrategy for ModelBigram {
 
     fn propose(&mut self, seq: &[TokenId], k: usize, batch: &mut DraftBatch) {
         let Some(&cur) = seq.last() else { return };
-        let row = (cur as usize).min(self.tables.bigram.rows - 1);
-        let w = batch.w;
+        let t = &self.tables;
+        let row = (cur as usize).min(t.bigram.rows - 1);
         let mut rank = 0;
-        while !batch.is_full(k) && rank < self.tables.bigram.cols {
-            let first = self.tables.bigram.at(row, rank);
-            self.scratch.clear();
-            self.scratch.push(first);
-            while self.scratch.len() < w {
-                let last = *self.scratch.last().unwrap() as usize;
-                self.scratch
-                    .push(self.tables.bigram.at(last.min(self.tables.bigram.rows - 1), 0));
-            }
-            batch.push(self.scratch.clone(), StrategyKind::ModelBigram, rank);
+        while !batch.is_full(k) && rank < t.bigram.cols {
+            batch.begin_row();
+            batch.push_token(t.bigram.at(row, rank));
+            chain_to_depth(batch, t, cur);
+            batch.commit_row(StrategyKind::ModelBigram, rank);
             rank += 1;
         }
     }
@@ -92,13 +108,12 @@ impl DraftStrategy for ModelBigram {
 #[derive(Clone)]
 pub struct ModelUnigram {
     tables: Arc<NgramTables>,
-    scratch: Vec<TokenId>,
 }
 
 impl ModelUnigram {
     /// A unigram drafter over `tables`.
     pub fn new(tables: Arc<NgramTables>) -> Self {
-        ModelUnigram { tables, scratch: Vec::new() }
+        ModelUnigram { tables }
     }
 }
 
@@ -108,18 +123,14 @@ impl DraftStrategy for ModelUnigram {
     }
 
     fn propose(&mut self, _seq: &[TokenId], k: usize, batch: &mut DraftBatch) {
-        let w = batch.w;
+        let t = &self.tables;
         let mut rank = 0;
-        while !batch.is_full(k) && rank < self.tables.unigram.cols {
-            let first = self.tables.unigram.at(0, rank);
-            self.scratch.clear();
-            self.scratch.push(first);
-            while self.scratch.len() < w {
-                let last = *self.scratch.last().unwrap() as usize;
-                self.scratch
-                    .push(self.tables.bigram.at(last.min(self.tables.bigram.rows - 1), 0));
-            }
-            batch.push(self.scratch.clone(), StrategyKind::ModelUnigram, rank);
+        while !batch.is_full(k) && rank < t.unigram.cols {
+            let first = t.unigram.at(0, rank);
+            batch.begin_row();
+            batch.push_token(first);
+            chain_to_depth(batch, t, first);
+            batch.commit_row(StrategyKind::ModelUnigram, rank);
             rank += 1;
         }
     }
@@ -155,9 +166,9 @@ mod tests {
         let mut b = DraftBatch::new(3);
         s.propose(&[0, 1], 2, &mut b);
         assert_eq!(b.k(), 2);
-        assert_eq!(b.rows[0].tokens, vec![2, 3, 0]); // rank 0 chain of token 1
-        assert_eq!(b.rows[1].tokens, vec![3, 0, 1]); // rank 1 chain
-        assert_eq!(b.rows[0].kind, StrategyKind::ExtendedBigram);
+        assert_eq!(b.row_tokens(0), vec![2, 3, 0]); // rank 0 chain of token 1
+        assert_eq!(b.row_tokens(1), vec![3, 0, 1]); // rank 1 chain
+        assert_eq!(b.rows()[0].kind, StrategyKind::ExtendedBigram);
     }
 
     #[test]
@@ -166,7 +177,7 @@ mod tests {
         let mut b = DraftBatch::new(3);
         s.propose(&[1], 1, &mut b);
         // first = bigram(1, rank0) = 2; chain: top1(2)=3, top1(3)=0
-        assert_eq!(b.rows[0].tokens, vec![2, 3, 0]);
+        assert_eq!(b.row_tokens(0), vec![2, 3, 0]);
     }
 
     #[test]
@@ -176,10 +187,10 @@ mod tests {
         let mut b2 = DraftBatch::new(1);
         s.propose(&[0], 3, &mut b1);
         s.propose(&[3, 2, 1], 3, &mut b2);
-        let t1: Vec<_> = b1.rows.iter().map(|r| r.tokens.clone()).collect();
-        let t2: Vec<_> = b2.rows.iter().map(|r| r.tokens.clone()).collect();
+        let t1: Vec<Vec<u32>> = (0..b1.k()).map(|r| b1.row_tokens(r).to_vec()).collect();
+        let t2: Vec<Vec<u32>> = (0..b2.k()).map(|r| b2.row_tokens(r).to_vec()).collect();
         assert_eq!(t1, t2);
-        assert_eq!(b1.rows[0].tokens, vec![2]); // unigram top-1
+        assert_eq!(b1.row_tokens(0), vec![2]); // unigram top-1
     }
 
     #[test]
@@ -189,8 +200,8 @@ mod tests {
         b.push(vec![9, 9], StrategyKind::ContextNgram, 0);
         s.propose(&[1], 2, &mut b);
         assert_eq!(b.k(), 2);
-        assert_eq!(b.rows[0].kind, StrategyKind::ContextNgram);
-        assert_eq!(b.rows[1].kind, StrategyKind::ExtendedBigram);
+        assert_eq!(b.rows()[0].kind, StrategyKind::ContextNgram);
+        assert_eq!(b.rows()[1].kind, StrategyKind::ExtendedBigram);
     }
 
     #[test]

@@ -9,6 +9,14 @@
 //!
 //! Learning-free in the paper's sense: no gradient updates, no external
 //! data — only counting what the base model already emitted (P1, P2, P3).
+//!
+//! Hot-path discipline: ingestion bumps counts **in place** and restores
+//! the count-descending order by bubbling the bumped entry up to its
+//! ranked position (byte-identical to the seed's full re-sort, at O(moved
+//! entries) instead of O(list log list) per observation), chains are
+//! matched against the span by slice comparison (no per-position clone),
+//! and `observe` ingests the rolling tail without copying it — so a
+//! saturated cache learns and proposes with zero heap allocations.
 
 use std::collections::HashMap;
 
@@ -18,7 +26,8 @@ use crate::tokenizer::TokenId;
 /// (query token, continuation) statistics with LRU-ish bounding.
 #[derive(Debug)]
 pub struct SessionNgramCache {
-    /// query token -> ranked continuations (token chain, count)
+    /// query token -> continuations (token chain, count), kept sorted by
+    /// count descending (stable w.r.t. insertion order on ties)
     table: HashMap<TokenId, Vec<(Vec<TokenId>, u32)>>,
     /// max continuations kept per query
     per_query: usize,
@@ -56,29 +65,41 @@ impl SessionNgramCache {
     }
 
     /// Ingest a span of accepted text: for each position, record the
-    /// following `max_chain` tokens under the query token.
+    /// following `max_chain` tokens under the query token. Existing
+    /// chains are updated in place (count bump + ranked re-insertion);
+    /// only genuinely new chains allocate.
     pub fn ingest(&mut self, span: &[TokenId]) {
         for i in 0..span.len().saturating_sub(1) {
             let q = span[i];
-            let chain: Vec<TokenId> = span[i + 1..].iter().copied()
-                .take(self.max_chain).collect();
+            let end = span.len().min(i + 1 + self.max_chain);
+            let chain = &span[i + 1..end];
             if chain.is_empty() {
                 continue;
             }
             let entry = self.table.entry(q).or_default();
-            if let Some(e) = entry.iter_mut().find(|(c, _)| {
-                c.starts_with(&chain) || chain.starts_with(c)
-            }) {
-                // extend to the longer chain, bump the count
-                if chain.len() > e.0.len() {
-                    e.0 = chain;
+            if let Some(idx) = entry
+                .iter()
+                .position(|(c, _)| c.starts_with(chain) || chain.starts_with(c))
+            {
+                // extend to the longer chain (in place), bump the count
+                if chain.len() > entry[idx].0.len() {
+                    entry[idx].0.clear();
+                    entry[idx].0.extend_from_slice(chain);
                 }
-                e.1 += 1;
+                entry[idx].1 += 1;
+                // restore count-descending order: bubble the bumped entry
+                // up past every entry its new count now beats — exactly
+                // where the seed's stable re-sort would put it
+                let mut j = idx;
+                while j > 0 && entry[j - 1].1 < entry[j].1 {
+                    entry.swap(j - 1, j);
+                    j -= 1;
+                }
             } else if entry.len() < self.per_query && self.stored < self.cap {
-                entry.push((chain, 1));
+                // count 1 ranks at the tail: sorted order is preserved
+                entry.push((chain.to_vec(), 1));
                 self.stored += 1;
             }
-            entry.sort_by(|a, b| b.1.cmp(&a.1));
         }
     }
 }
@@ -98,7 +119,7 @@ impl DraftStrategy for SessionNgramCache {
                     break;
                 }
                 batch.push_conf(
-                    chain.iter().copied().take(w).collect(),
+                    &chain[..chain.len().min(w)],
                     StrategyKind::SessionCache,
                     rank,
                     count_share(*count, total),
@@ -111,10 +132,14 @@ impl DraftStrategy for SessionNgramCache {
         // ingest with one token of overlap so cross-step bigrams are seen
         self.tail.extend_from_slice(accepted);
         if self.tail.len() > self.max_chain + 1 {
-            let span: Vec<TokenId> = self.tail.clone();
-            self.ingest(&span);
+            // ingest the tail in place: move it out (Vec::new allocates
+            // nothing), ingest, put it back — no clone of the rolling tail
+            let tail = std::mem::take(&mut self.tail);
+            self.ingest(&tail);
+            self.tail = tail;
             let keep = self.max_chain.min(self.tail.len());
-            self.tail.drain(..self.tail.len() - keep);
+            let cut = self.tail.len() - keep;
+            self.tail.drain(..cut);
         }
     }
 
@@ -136,7 +161,7 @@ mod tests {
         let mut b = DraftBatch::new(3);
         c.propose(&[7, 1], 2, &mut b);
         assert!(b.k() >= 1);
-        assert_eq!(&b.rows[0].tokens[..2], &[2, 3]);
+        assert_eq!(&b.row_tokens(0)[..2], &[2, 3]);
     }
 
     #[test]
@@ -145,7 +170,25 @@ mod tests {
         c.ingest(&[5, 7, 0, 5, 7, 0, 5, 8]);
         let mut b = DraftBatch::new(2);
         c.propose(&[5], 2, &mut b);
-        assert_eq!(b.rows[0].tokens[0], 7); // seen twice
+        assert_eq!(b.row_tokens(0)[0], 7); // seen twice
+    }
+
+    #[test]
+    fn bumped_entries_keep_stable_ranked_order() {
+        // three distinct continuations of 5, then one gets re-observed:
+        // it must move ahead of the count-1 entries but keep the original
+        // order among the entries it ties with
+        let mut c = SessionNgramCache::new(8, 2, 1000);
+        c.ingest(&[5, 1, 5, 2, 5, 3]); // query 5: chains [1,5], [2,5], [3], each count 1
+        let mut b = DraftBatch::new(2);
+        c.propose(&[5], 8, &mut b);
+        let first_before = b.row_tokens(0).to_vec();
+        // re-observe the LAST-ranked continuation twice so it outranks all
+        c.ingest(&[5, 3, 0, 5, 3, 0]);
+        let mut b2 = DraftBatch::new(2);
+        c.propose(&[5], 8, &mut b2);
+        assert_eq!(b2.row_tokens(0)[0], 3, "bumped entry must rise to the top");
+        assert_ne!(first_before[0], 3, "top entry actually changed");
     }
 
     #[test]

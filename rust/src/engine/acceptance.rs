@@ -36,18 +36,18 @@ pub fn row_accept_len(drafts: &[TokenId], outputs: &[TokenId]) -> usize {
 
 /// Judge all rows of a verification call and pick the winner.
 ///
-/// `next_ids` is row-major (k, w1) model output; `batch.rows[r].tokens`
+/// `next_ids` is row-major (k, w1) model output; `batch.row_tokens(r)`
 /// holds row r's drafts (possibly shorter than w — missing positions never
 /// match). Ties prefer the lowest row index, which (with the paper's
 /// context-first allocation) prefers context-n-gram rows.
 pub fn judge(batch: &DraftBatch, next_ids: &[TokenId], w1: usize) -> Acceptance {
-    let k = batch.rows.len();
+    let k = batch.k();
     debug_assert_eq!(next_ids.len(), k * w1);
     let mut best_row = 0;
     let mut best_a = 0;
-    for (r, row) in batch.rows.iter().enumerate() {
+    for r in 0..k {
         let out = &next_ids[r * w1..(r + 1) * w1];
-        let a = row_accept_len(&row.tokens, out);
+        let a = row_accept_len(batch.row_tokens(r), out);
         if a > best_a {
             best_a = a;
             best_row = r;
@@ -55,7 +55,7 @@ pub fn judge(batch: &DraftBatch, next_ids: &[TokenId], w1: usize) -> Acceptance 
     }
     let out = &next_ids[best_row * w1..(best_row + 1) * w1];
     let mut emitted = Vec::with_capacity(best_a + 1);
-    emitted.extend_from_slice(&batch.rows[best_row].tokens[..best_a]);
+    emitted.extend_from_slice(&batch.row_tokens(best_row)[..best_a]);
     emitted.push(out[best_a]); // bonus token
     Acceptance { row: best_row, accepted: best_a, emitted }
 }
@@ -160,12 +160,13 @@ mod tests {
             // simulate the verifier: out[r][i] = model_next(prefix ++ row[..i])
             let w1 = w + 1;
             let mut out = vec![0; k * w1];
-            for (r, row) in b.rows.iter().enumerate() {
+            for r in 0..b.k() {
+                let row = b.row_tokens(r);
                 let mut p = prefix.clone();
                 for i in 0..w1 {
                     out[r * w1 + i] = model_next(&p);
-                    if i < row.tokens.len() {
-                        p.push(row.tokens[i]);
+                    if i < row.len() {
+                        p.push(row[i]);
                     }
                 }
             }

@@ -38,7 +38,7 @@ use crate::kvcache::{KvPool, LaneId};
 use crate::runtime::{ModelRuntime, PackedBlock};
 use crate::tokenizer::TokenId;
 
-use super::{assemble_block, judge_and_commit, make_trace, pad_batch, GenResult};
+use super::{assemble_block_into, judge_and_commit, make_trace, pad_batch, GenResult};
 
 /// Identifier of one admitted sequence, unique within an engine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -92,6 +92,17 @@ pub struct PackedTrace {
     /// depth set issues several packed calls; the row budget bounds their
     /// SUM per step — asserted in `rust/tests/adaptive.rs`)
     pub step: u64,
+}
+
+/// Reusable per-lane draft scratch: the arena-backed batch plus the
+/// assembled (k, w+1) block buffer. One slot per co-drafted sequence,
+/// pooled on the engine and reused every step, so the steady-state draft
+/// path performs no heap allocation (the slots only grow when a step
+/// drafts more sequences at once than any step before it).
+#[derive(Default)]
+struct DraftSlot {
+    batch: DraftBatch,
+    block: Vec<TokenId>,
 }
 
 struct SeqState {
@@ -175,6 +186,9 @@ pub struct BatchedEngine<'rt> {
     /// the model's sorted (k, w) artifact grid, hoisted out of the
     /// per-step hot loop (adaptive planning scans it every step)
     shape_grid: Vec<(usize, usize)>,
+    /// pooled per-sequence draft scratch (arena batches + block buffers),
+    /// reused across steps so drafting allocates nothing in steady state
+    draft_scratch: Vec<DraftSlot>,
 }
 
 impl<'rt> BatchedEngine<'rt> {
@@ -195,6 +209,7 @@ impl<'rt> BatchedEngine<'rt> {
             next_id: 0,
             steps_done: 0,
             shape_grid: runtime.artifacts().step_shapes(),
+            draft_scratch: Vec::new(),
         }
     }
 
@@ -476,30 +491,35 @@ impl<'rt> BatchedEngine<'rt> {
 
     /// Draft, pack, verify and commit one same-depth group of sequences.
     fn run_group(&mut self, w: usize, idxs: &[usize], shapes: &[(usize, usize)]) -> Result<()> {
-        // --- draft every sequence's (k_i, w) block
-        let mut drafted: Vec<(DraftBatch, Vec<TokenId>, usize)> = Vec::with_capacity(idxs.len());
-        for &i in idxs {
+        // --- draft every sequence's (k_i, w) block into the pooled
+        // scratch slots (taken out of self for the duration so the
+        // borrow checker sees the disjoint accesses; put back at the end)
+        let mut slots = std::mem::take(&mut self.draft_scratch);
+        while slots.len() < idxs.len() {
+            slots.push(DraftSlot::default());
+        }
+        for (slot, &i) in slots.iter_mut().zip(idxs) {
             let k = shapes[i].0;
             let s = &mut self.active[i];
-            let mut batch = DraftBatch::new(w);
+            slot.batch.reset(w);
             if w > 0 {
                 match s.controller.as_mut() {
-                    Some(c) => c.propose(&s.seq, k, &mut batch),
-                    None => s.strategy.propose(&s.seq, k, &mut batch),
+                    Some(c) => c.propose(&s.seq, k, &mut slot.batch),
+                    None => s.strategy.propose(&s.seq, k, &mut slot.batch),
                 }
             }
-            pad_batch(&mut batch, k);
-            let tokens = assemble_block(&batch, *s.seq.last().unwrap(), k, w);
-            drafted.push((batch, tokens, k));
+            pad_batch(&mut slot.batch, k);
+            assemble_block_into(&slot.batch, *s.seq.last().unwrap(), w, &mut slot.block);
         }
 
-        // --- one packed verification call for the whole group
+        // --- one packed verification call for the whole group, straight
+        // off the arena-assembled block buffers (no intermediate copies)
         let blocks: Vec<PackedBlock> = idxs
             .iter()
-            .zip(&drafted)
-            .map(|(&i, (_, tokens, k))| PackedBlock {
-                k: *k,
-                tokens,
+            .zip(&slots)
+            .map(|(&i, slot)| PackedBlock {
+                k: slot.batch.k(),
+                tokens: &slot.block,
                 cache: self.pool.lane(self.active[i].lane),
             })
             .collect();
@@ -512,18 +532,30 @@ impl<'rt> BatchedEngine<'rt> {
                 step: self.steps_done,
             });
         }
-        let outs = self.runtime.spec_step_packed(w, &blocks)?;
+        let outs = self.runtime.spec_step_packed(w, &blocks);
         drop(blocks);
+        let outs = match outs {
+            Ok(o) => o,
+            Err(e) => {
+                self.draft_scratch = slots;
+                return Err(e);
+            }
+        };
 
-        // --- judge + commit each sequence independently
-        for ((&i, (batch, _, k)), out) in idxs.iter().zip(&drafted).zip(&outs) {
+        // --- judge + commit each sequence independently. (An early `?`
+        // return here drops the scratch instead of restoring it — a
+        // failed step ends the engine's life anyway, the pool replaces
+        // it wholesale.)
+        for ((&i, slot), out) in idxs.iter().zip(&slots).zip(&outs) {
+            let batch = &slot.batch;
+            let k = batch.k();
             let s = &mut self.active[i];
             let (acc, ctx_len) = judge_and_commit(batch, out, self.pool.lane_mut(s.lane))?;
             s.res.exec_time += out.exec_time;
             if self.collect_traces {
                 s.res
                     .traces
-                    .push(make_trace(batch, &acc, *k, w, ctx_len, out.exec_time));
+                    .push(make_trace(batch, &acc, k, w, ctx_len, out.exec_time));
             }
             match s.controller.as_mut() {
                 Some(c) => c.observe(&StepFeedback {
@@ -532,7 +564,7 @@ impl<'rt> BatchedEngine<'rt> {
                     accepted: acc.accepted,
                     emitted: &acc.emitted,
                     model_out: out.row(acc.row),
-                    k: *k,
+                    k,
                     w,
                     ctx_len,
                 }),
@@ -547,6 +579,7 @@ impl<'rt> BatchedEngine<'rt> {
                 }
             }
         }
+        self.draft_scratch = slots;
         Ok(())
     }
 

@@ -175,6 +175,12 @@ impl<'rt> SpecDecoder<'rt> {
         seq.push(pf.next_id);
         res.tokens.push(pf.next_id);
 
+        // per-step scratch, reused across the whole decode: the draft
+        // batch arena and the assembled block buffer keep their
+        // capacity, so a steady-state step allocates nothing draft-side
+        let mut batch = DraftBatch::new(0);
+        let mut block: Vec<TokenId> = Vec::new();
+
         let tdec = Instant::now();
         while res.tokens.len() < self.cfg.max_new_tokens {
             let room = cache.remaining();
@@ -191,7 +197,7 @@ impl<'rt> SpecDecoder<'rt> {
             };
 
             // --- draft
-            let mut batch = DraftBatch::new(w);
+            batch.reset(w);
             if w > 0 {
                 match self.controller.as_mut() {
                     Some(c) => c.propose(&seq, k, &mut batch),
@@ -199,10 +205,10 @@ impl<'rt> SpecDecoder<'rt> {
                 }
             }
             pad_batch(&mut batch, k);
-            let tokens = assemble_block(&batch, *seq.last().unwrap(), k, w);
+            assemble_block_into(&batch, *seq.last().unwrap(), w, &mut block);
 
             // --- verify
-            let out = self.runtime.spec_step(k, w, &tokens, &cache)?;
+            let out = self.runtime.spec_step(k, w, &block, &cache)?;
             res.exec_time += out.exec_time;
 
             // --- judge + commit
@@ -243,38 +249,55 @@ impl<'rt> SpecDecoder<'rt> {
 /// first occurrence wins, preserving policy order and the judge's
 /// lowest-row tie-break), truncate overflow, and pad the remainder with
 /// EMPTY (anchor-only) rows rather than clones so the Fig. 4 `alloc_*`
-/// accounting reflects real allocations.
+/// accounting reflects real allocations. Operates on the arena-backed
+/// batch in place: dedup/truncate touch only row descriptors and padding
+/// rows are zero-length arena spans, so no tokens are copied.
 pub(crate) fn pad_batch(batch: &mut DraftBatch, k: usize) {
     let mut i = 0;
-    while i < batch.rows.len() {
-        let dup = batch.rows[..i].iter().any(|r| r.tokens == batch.rows[i].tokens);
+    while i < batch.k() {
+        let dup = (0..i).any(|j| batch.row_tokens(j) == batch.row_tokens(i));
         if dup {
-            batch.rows.remove(i);
+            batch.remove_row(i);
         } else {
             i += 1;
         }
     }
-    batch.rows.truncate(k);
-    while batch.rows.len() < k {
-        batch.push(Vec::new(), StrategyKind::Empty, batch.rows.len());
+    batch.truncate_rows(k);
+    while batch.k() < k {
+        batch.begin_row();
+        batch.commit_row(StrategyKind::Empty, batch.k());
     }
 }
 
-/// Assemble the row-major (k, w+1) token block for a verification call:
-/// column 0 = anchor (last accepted token), columns 1.. = drafts. Short
+/// Assemble the row-major (k, w+1) token block for a verification call
+/// into the reusable `out` buffer: column 0 = anchor (last accepted
+/// token), columns 1.. = drafts, straight from the batch arena. Short
 /// rows pad with anchor repeats (never match outputs except by genuine
 /// coincidence; judged like any draft).
-pub(crate) fn assemble_block(batch: &DraftBatch, anchor: TokenId, k: usize,
-                             w: usize) -> Vec<TokenId> {
-    let mut tokens = Vec::with_capacity(k * (w + 1));
-    for row in &batch.rows {
-        tokens.push(anchor);
-        tokens.extend_from_slice(&row.tokens);
-        for _ in row.tokens.len()..w {
-            tokens.push(anchor);
+pub(crate) fn assemble_block_into(
+    batch: &DraftBatch,
+    anchor: TokenId,
+    w: usize,
+    out: &mut Vec<TokenId>,
+) {
+    out.clear();
+    out.reserve(batch.k() * (w + 1));
+    for r in 0..batch.k() {
+        out.push(anchor);
+        let toks = batch.row_tokens(r);
+        out.extend_from_slice(toks);
+        for _ in toks.len()..w {
+            out.push(anchor);
         }
     }
-    tokens
+}
+
+/// [`assemble_block_into`] returning a fresh `Vec` (tests/one-shot callers).
+#[cfg(test)]
+pub(crate) fn assemble_block(batch: &DraftBatch, anchor: TokenId, w: usize) -> Vec<TokenId> {
+    let mut out = Vec::new();
+    assemble_block_into(batch, anchor, w, &mut out);
+    out
 }
 
 /// Judge a verification call and commit the winning row's KV tail.
@@ -301,7 +324,7 @@ pub(crate) fn make_trace(
     ctx_len: usize,
     exec_time: Duration,
 ) -> StepTrace {
-    let win = &batch.rows[acc.row];
+    let win = &batch.rows()[acc.row];
     let n_ctx = count_kind(batch, StrategyKind::ContextNgram);
     let n_big = count_kind(batch, StrategyKind::ExtendedBigram)
         + count_kind(batch, StrategyKind::ModelBigram);
@@ -314,13 +337,13 @@ pub(crate) fn make_trace(
         accepted: acc.accepted,
         alloc_context: n_ctx,
         alloc_bigram: n_big,
-        alloc_other: batch.rows.len() - n_ctx - n_big,
+        alloc_other: batch.k() - n_ctx - n_big,
         exec_time,
     }
 }
 
 fn count_kind(batch: &DraftBatch, kind: StrategyKind) -> usize {
-    batch.rows.iter().filter(|r| r.kind == kind).count()
+    batch.rows().iter().filter(|r| r.kind == kind).count()
 }
 
 /// Plain greedy decoding = speculation with (k, w) = (1, 0). Provided as
@@ -343,19 +366,18 @@ impl DraftStrategy for NoDraft {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::draft::DraftRow;
 
     #[test]
     fn pad_batch_fills_with_empty_rows() {
         let mut b = DraftBatch::new(2);
         b.push(vec![1, 2], StrategyKind::ContextNgram, 0);
         pad_batch(&mut b, 3);
-        assert_eq!(b.rows.len(), 3);
+        assert_eq!(b.k(), 3);
         // padding must be anchor-only rows, not clones of the last draft
-        assert!(b.rows[1].tokens.is_empty());
-        assert!(b.rows[2].tokens.is_empty());
-        assert_eq!(b.rows[1].kind, StrategyKind::Empty);
-        assert_eq!(b.rows[2].kind, StrategyKind::Empty);
+        assert!(b.rows()[1].is_empty());
+        assert!(b.rows()[2].is_empty());
+        assert_eq!(b.rows()[1].kind, StrategyKind::Empty);
+        assert_eq!(b.rows()[2].kind, StrategyKind::Empty);
     }
 
     #[test]
@@ -365,30 +387,30 @@ mod tests {
         b.push(vec![4, 5], StrategyKind::ExtendedBigram, 0); // duplicate
         b.push(vec![4, 6], StrategyKind::ExtendedBigram, 1);
         pad_batch(&mut b, 3);
-        assert_eq!(b.rows.len(), 3);
+        assert_eq!(b.k(), 3);
         // first occurrence survives, duplicate slot becomes an empty row
-        assert_eq!(b.rows[0].tokens, vec![4, 5]);
-        assert_eq!(b.rows[0].kind, StrategyKind::ContextNgram);
-        assert_eq!(b.rows[1].tokens, vec![4, 6]);
-        assert_eq!(b.rows[2].kind, StrategyKind::Empty);
+        assert_eq!(b.row_tokens(0), vec![4, 5]);
+        assert_eq!(b.rows()[0].kind, StrategyKind::ContextNgram);
+        assert_eq!(b.row_tokens(1), vec![4, 6]);
+        assert_eq!(b.rows()[2].kind, StrategyKind::Empty);
     }
 
     #[test]
     fn pad_batch_truncates_overfull() {
         let mut b = DraftBatch::new(1);
-        for i in 0..5 {
+        for i in 0..5u32 {
             b.push(vec![i], StrategyKind::ContextNgram, i as usize);
         }
         pad_batch(&mut b, 2);
-        assert_eq!(b.rows.len(), 2);
+        assert_eq!(b.k(), 2);
     }
 
     #[test]
     fn pad_empty_batch() {
         let mut b = DraftBatch::new(3);
         pad_batch(&mut b, 2);
-        assert_eq!(b.rows.len(), 2);
-        assert!(b.rows.iter().all(|r: &DraftRow| r.tokens.is_empty()));
+        assert_eq!(b.k(), 2);
+        assert!(b.rows().iter().all(|r| r.is_empty()));
     }
 
     #[test]
@@ -396,7 +418,7 @@ mod tests {
         let mut b = DraftBatch::new(3);
         b.push(vec![7], StrategyKind::ContextNgram, 0);
         b.push(vec![8, 9, 10], StrategyKind::ContextNgram, 1);
-        let toks = assemble_block(&b, 99, 2, 3);
+        let toks = assemble_block(&b, 99, 3);
         assert_eq!(toks, vec![99, 7, 99, 99, 99, 8, 9, 10]);
     }
 }

@@ -76,6 +76,10 @@ COMMANDS:
       pool                    1-engine vs N-engine pool throughput on a
                               mixed greedy+speculative burst workload
                               [--model base] [--engines 4] [--smoke]
+      draft                   draft hot path: incremental suffix index
+                              vs the seed rescan (fails unless the
+                              incremental path keeps a >=2x edge at
+                              context >= 256) [--smoke]
       all                     everything above
       common: [--prompts N] [--max-new N] [--ks 1,5,10] [--ws 2,6,10]
   ci-bench-check              bench-regression gate: compare the
@@ -319,6 +323,9 @@ fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
                 .map_err(|e| anyhow!(e))?;
             bench::pool::run(&load()?, n_prompts, max_new, engines, args.has_flag("smoke"))
         }
+        // draft needs no model artifacts: it measures the drafting layer
+        // itself on synthetic sequences/tables
+        "draft" => bench::draft::run(args.has_flag("smoke")),
         "table1" => {
             let models: Vec<String> = args
                 .get_or("models", "small,base,large")
@@ -330,6 +337,7 @@ fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
         }
         "all" => {
             let ctx = load()?;
+            bench::draft::run(false)?;
             bench::fig1::run(Some(&ctx))?;
             bench::fig2::run(&ctx, n_prompts, max_new)?;
             bench::fig4::run(&ctx, n_prompts, max_new)?;

@@ -218,17 +218,26 @@ pub fn make_strategy_with_cache(
 }
 
 /// The adaptive controller for one request, when the request asked for
-/// adaptive mode.
+/// adaptive mode — warm-started from the fleet's per-strategy acceptance
+/// counters so its bandit arms do not boot uniform (the serving half of
+/// the ROADMAP "cross-request bandit priors"; `strategy_prior_tpc` is the
+/// admission half).
 fn controller_for_request(
     name: StrategyName,
     tables: &Arc<NgramTables>,
     q: usize,
     cfg: &ServeConfig,
     runtime: &ModelRuntime,
+    metrics: &Metrics,
 ) -> Option<SeqController> {
     (name == StrategyName::Adaptive).then(|| {
-        adaptive::controller_for(tables, q, &cfg.session_cache,
-                                 &runtime.artifacts().dims.analog)
+        adaptive::controller_for_seeded(
+            tables,
+            q,
+            &cfg.session_cache,
+            &runtime.artifacts().dims.analog,
+            metrics,
+        )
     })
 }
 
@@ -395,8 +404,8 @@ fn worker_loop(
         let strategy = make_strategy_with_cache(
             job.req.strategy, &tables, job.req.engine.q, &scfg.session_cache);
         let mut dec = SpecDecoder::new(&runtime, strategy, job.req.engine.clone());
-        dec.controller =
-            controller_for_request(job.req.strategy, &tables, job.req.engine.q, scfg, &runtime);
+        dec.controller = controller_for_request(
+            job.req.strategy, &tables, job.req.engine.q, scfg, &runtime, &metrics);
         dec.collect_traces = true; // feeds the step-latency histogram
         let result = dec
             .generate(&job.req.prompt)

@@ -721,8 +721,8 @@ fn admit_pool_job(
         pj.job.req.engine.q,
         &scfg.session_cache,
     );
-    let controller =
-        controller_for_request(pj.job.req.strategy, tables, pj.job.req.engine.q, scfg, runtime);
+    let controller = controller_for_request(
+        pj.job.req.strategy, tables, pj.job.req.engine.q, scfg, runtime, metrics);
     // start the latency clock BEFORE admit: admit runs the prefill, which
     // the per-sequence worker's clock also covers — keep the modes
     // comparable in latency_ms and /metrics

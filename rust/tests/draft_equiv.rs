@@ -1,0 +1,353 @@
+//! Byte-identity of the rewritten draft layer against the SEED
+//! implementations.
+//!
+//! The PR that introduced the incremental suffix index and the
+//! arena-backed `DraftBatch` claims zero behavioral change: every
+//! strategy must propose exactly the rows (tokens, kind, rank,
+//! confidence) the seed code proposed, across arbitrary sequences AND
+//! across append/rollback trajectories of one persistent instance. The
+//! oracles here are the seed algorithms themselves: the library keeps
+//! the seed context rescan as `reference_candidates`, and this file
+//! carries verbatim ports of the seed session-cache and mixed-policy
+//! code.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use ngrammys::draft::context_ngram::reference_candidates;
+use ngrammys::draft::tables::Table;
+use ngrammys::draft::{
+    count_share, ContextNgram, DraftBatch, DraftStrategy, MixedStrategy, NgramTables,
+    SessionNgramCache, StrategyKind,
+};
+use ngrammys::util::prop;
+use ngrammys::util::rng::Rng;
+
+/// Flatten a batch into comparable row records.
+fn rows_of(b: &DraftBatch) -> Vec<(Vec<u32>, StrategyKind, usize, f64)> {
+    (0..b.k())
+        .map(|r| {
+            let d = &b.rows()[r];
+            (b.row_tokens(r).to_vec(), d.kind, d.rank, d.confidence)
+        })
+        .collect()
+}
+
+fn random_tables(rng: &mut Rng, vocab: usize, topk: usize, depth: usize) -> Arc<NgramTables> {
+    let mut mk = |n: usize| -> Vec<u32> { (0..n).map(|_| rng.below(vocab) as u32).collect() };
+    let bigram = mk(vocab * topk);
+    let unigram = mk(topk);
+    let ext = mk(vocab * topk * depth);
+    Arc::new(NgramTables {
+        bigram: Table::from_data(vocab, topk, 1, bigram),
+        unigram: Table::from_data(1, topk, 1, unigram),
+        ext_bigram: Table::from_data(vocab, topk, depth, ext),
+    })
+}
+
+/// What the seed ContextNgram::propose pushed, built from the seed rescan.
+fn seed_context_rows(
+    q: usize,
+    seq: &[u32],
+    k: usize,
+    w: usize,
+) -> Vec<(Vec<u32>, StrategyKind, usize, f64)> {
+    let cands = reference_candidates(q, seq, w);
+    let total: u32 = cands.iter().map(|(_, c)| *c).sum();
+    cands
+        .into_iter()
+        .enumerate()
+        .take(k)
+        .map(|(rank, (tokens, count))| {
+            let conf = count_share(count, total).clamp(f64::MIN_POSITIVE, 1.0);
+            (tokens, StrategyKind::ContextNgram, rank, conf)
+        })
+        .collect()
+}
+
+#[test]
+fn context_ngram_matches_seed_on_random_sequences() {
+    prop::check(400, |rng| {
+        let vocab = rng.range(2, 10) as u32; // small vocab -> many matches
+        let len = rng.range(0, 200);
+        let q = rng.range(1, 3);
+        let w = rng.range(1, 8);
+        let k = rng.range(1, 12);
+        let seq = prop::vec_u32(rng, len, 0..vocab);
+        let mut ctx = ContextNgram::new(q);
+        let mut b = DraftBatch::new(w);
+        ctx.propose(&seq, k, &mut b);
+        rows_of(&b) == seed_context_rows(q, &seq, k, w)
+    });
+}
+
+#[test]
+fn context_ngram_matches_seed_across_rollback_trajectories() {
+    // ONE persistent instance whose sequence grows and rolls back, as
+    // under rejected speculation — every proposal must still equal a
+    // from-scratch seed rescan of the current sequence
+    prop::check(150, |rng| {
+        let vocab = rng.range(2, 8) as u32;
+        let q = rng.range(1, 3);
+        let mut ctx = ContextNgram::new(q);
+        let mut seq: Vec<u32> = Vec::new();
+        for _ in 0..rng.range(4, 25) {
+            match rng.below(4) {
+                // accepted tokens appended (the decode common case)
+                0 | 1 => {
+                    for _ in 0..rng.range(1, 8) {
+                        seq.push(rng.below(vocab as usize) as u32);
+                    }
+                }
+                // rollback (rejected speculation / divergent caller)
+                2 => {
+                    let keep = if seq.is_empty() { 0 } else { rng.below(seq.len() + 1) };
+                    seq.truncate(keep);
+                }
+                // divergence: rollback then different tokens
+                _ => {
+                    let keep = if seq.is_empty() { 0 } else { rng.below(seq.len() + 1) };
+                    seq.truncate(keep);
+                    for _ in 0..rng.range(1, 5) {
+                        seq.push(rng.below(vocab as usize) as u32);
+                    }
+                }
+            }
+            let w = rng.range(1, 6);
+            let k = rng.range(1, 8);
+            let mut b = DraftBatch::new(w);
+            ctx.propose(&seq, k, &mut b);
+            if rows_of(&b) != seed_context_rows(q, &seq, k, w) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Seed SessionNgramCache, ported verbatim (per-position chain clone, full
+// re-sort per ingested position, tail clone per observe).
+
+struct SeedSessionCache {
+    table: HashMap<u32, Vec<(Vec<u32>, u32)>>,
+    per_query: usize,
+    max_chain: usize,
+    stored: usize,
+    cap: usize,
+    tail: Vec<u32>,
+}
+
+impl SeedSessionCache {
+    fn new(per_query: usize, max_chain: usize, cap: usize) -> Self {
+        SeedSessionCache {
+            table: HashMap::new(),
+            per_query,
+            max_chain,
+            stored: 0,
+            cap,
+            tail: Vec::new(),
+        }
+    }
+
+    fn ingest(&mut self, span: &[u32]) {
+        for i in 0..span.len().saturating_sub(1) {
+            let q = span[i];
+            let chain: Vec<u32> = span[i + 1..].iter().copied().take(self.max_chain).collect();
+            if chain.is_empty() {
+                continue;
+            }
+            let entry = self.table.entry(q).or_default();
+            if let Some(e) = entry
+                .iter_mut()
+                .find(|(c, _)| c.starts_with(&chain) || chain.starts_with(c))
+            {
+                if chain.len() > e.0.len() {
+                    e.0 = chain;
+                }
+                e.1 += 1;
+            } else if entry.len() < self.per_query && self.stored < self.cap {
+                entry.push((chain, 1));
+                self.stored += 1;
+            }
+            entry.sort_by(|a, b| b.1.cmp(&a.1));
+        }
+    }
+
+    fn propose(&self, seq: &[u32], k: usize, w: usize) -> Vec<(Vec<u32>, StrategyKind, usize, f64)> {
+        let mut rows = Vec::new();
+        let Some(&cur) = seq.last() else { return rows };
+        if let Some(conts) = self.table.get(&cur) {
+            let total: u32 = conts.iter().map(|(_, c)| *c).sum();
+            for (rank, (chain, count)) in conts.iter().enumerate() {
+                if rows.len() >= k {
+                    break;
+                }
+                let toks: Vec<u32> = chain.iter().copied().take(w).collect();
+                let conf = count_share(*count, total).clamp(f64::MIN_POSITIVE, 1.0);
+                rows.push((toks, StrategyKind::SessionCache, rank, conf));
+            }
+        }
+        rows
+    }
+
+    fn observe(&mut self, accepted: &[u32]) {
+        self.tail.extend_from_slice(accepted);
+        if self.tail.len() > self.max_chain + 1 {
+            let span: Vec<u32> = self.tail.clone();
+            self.ingest(&span);
+            let keep = self.max_chain.min(self.tail.len());
+            self.tail.drain(..self.tail.len() - keep);
+        }
+    }
+}
+
+#[test]
+fn session_cache_matches_seed_across_observe_streams() {
+    prop::check(200, |rng| {
+        let vocab = rng.range(2, 12) as u32;
+        let per_query = rng.range(1, 6);
+        let max_chain = rng.range(1, 6);
+        let cap = rng.range(1, 40);
+        let mut new = SessionNgramCache::new(per_query, max_chain, cap);
+        let mut seed = SeedSessionCache::new(per_query, max_chain, cap);
+        for _ in 0..rng.range(2, 20) {
+            if rng.f64() < 0.7 {
+                let span = prop::vec_u32(rng, rng.range(0, 10), 0..vocab);
+                new.observe(&span, &[]);
+                seed.observe(&span);
+            } else {
+                new.reset();
+                seed.tail.clear();
+            }
+            // propose after every mutation and compare
+            let probe = prop::vec_u32(rng, rng.range(1, 4), 0..vocab);
+            let k = rng.range(1, 8);
+            let w = rng.range(1, 6);
+            let mut b = DraftBatch::new(w);
+            new.propose(&probe, k, &mut b);
+            if rows_of(&b) != seed.propose(&probe, k, w) {
+                return false;
+            }
+            if new.len() != seed.stored {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn session_cache_direct_ingest_matches_seed() {
+    prop::check(200, |rng| {
+        let vocab = rng.range(2, 8) as u32;
+        let per_query = rng.range(1, 5);
+        let max_chain = rng.range(1, 5);
+        let cap = rng.range(1, 30);
+        let mut new = SessionNgramCache::new(per_query, max_chain, cap);
+        let mut seed = SeedSessionCache::new(per_query, max_chain, cap);
+        for _ in 0..rng.range(1, 8) {
+            let span = prop::vec_u32(rng, rng.range(0, 14), 0..vocab);
+            new.ingest(&span);
+            seed.ingest(&span);
+        }
+        let probe = prop::vec_u32(rng, 1, 0..vocab);
+        let mut b = DraftBatch::new(4);
+        new.propose(&probe, 16, &mut b);
+        rows_of(&b) == seed.propose(&probe, 16, 4) && new.len() == seed.stored
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Seed MixedStrategy::propose (ContextFirst), ported verbatim: gather both
+// sources into ranked row lists, then push DISTINCT rows in policy order.
+
+fn seed_mixed_rows(
+    tables: &NgramTables,
+    q: usize,
+    seq: &[u32],
+    k: usize,
+    w: usize,
+) -> Vec<(Vec<u32>, StrategyKind, usize, f64)> {
+    let ctx_cands = reference_candidates(q, seq, w);
+    let ctx_total: u32 = ctx_cands.iter().map(|(_, c)| *c).sum();
+    let ctx_rows: Vec<(Vec<u32>, f64)> = ctx_cands
+        .into_iter()
+        .map(|(g, c)| (g, count_share(c, ctx_total)))
+        .collect();
+    let mut big_rows: Vec<(Vec<u32>, f64)> = Vec::new();
+    if let Some(&cur) = seq.last() {
+        let mut chain = Vec::new();
+        for j in 0..tables.ext_bigram.cols {
+            tables.ext_chain(cur, j, w, &mut chain);
+            big_rows.push((chain.clone(), 1.0 / (1.0 + j as f64)));
+        }
+    }
+    let mut out: Vec<(Vec<u32>, StrategyKind, usize, f64)> = Vec::new();
+    let push = |out: &mut Vec<(Vec<u32>, StrategyKind, usize, f64)>,
+                    rows: &[(Vec<u32>, f64)],
+                    kind: StrategyKind,
+                    quota: usize| {
+        for (rank, (row, conf)) in rows.iter().enumerate() {
+            if out.len() >= quota {
+                break;
+            }
+            let trunc = &row[..row.len().min(w)];
+            let exists = out.iter().any(|(t, _, _, _)| t == trunc);
+            if !exists {
+                let conf = conf.clamp(f64::MIN_POSITIVE, 1.0);
+                out.push((trunc.to_vec(), kind, rank, conf));
+            }
+        }
+    };
+    push(&mut out, &ctx_rows, StrategyKind::ContextNgram, k);
+    push(&mut out, &big_rows, StrategyKind::ExtendedBigram, k);
+    out
+}
+
+#[test]
+fn mixed_matches_seed_on_random_sequences_and_tables() {
+    prop::check(250, |rng| {
+        let vocab = rng.range(4, 24);
+        let topk = rng.range(2, 8);
+        let depth = rng.range(1, 6);
+        let tables = random_tables(rng, vocab, topk, depth);
+        let q = rng.range(1, 2);
+        let w = rng.range(1, 8);
+        let k = rng.range(1, 10);
+        let len = rng.range(0, 80);
+        let seq = prop::vec_u32(rng, len, 0..vocab as u32);
+        let mut m = MixedStrategy::paper(tables.clone(), q);
+        let mut b = DraftBatch::new(w);
+        m.propose(&seq, k, &mut b);
+        rows_of(&b) == seed_mixed_rows(&tables, q, &seq, k, w)
+    });
+}
+
+#[test]
+fn mixed_is_stable_across_repeated_proposals_on_one_instance() {
+    // the persistent suffix index inside the mixed policy must not bleed
+    // state between proposals: proposing twice on the same (or a grown)
+    // sequence matches the stateless seed both times
+    prop::check(120, |rng| {
+        let vocab = rng.range(4, 16);
+        let tables = random_tables(rng, vocab, 4, 3);
+        let mut m = MixedStrategy::paper(tables.clone(), 1);
+        let mut seq = prop::vec_u32(rng, rng.range(1, 40), 0..vocab as u32);
+        for _ in 0..rng.range(2, 10) {
+            let w = rng.range(1, 6);
+            let k = rng.range(1, 8);
+            let mut b = DraftBatch::new(w);
+            m.propose(&seq, k, &mut b);
+            if rows_of(&b) != seed_mixed_rows(&tables, 1, &seq, k, w) {
+                return false;
+            }
+            if rng.f64() < 0.3 && !seq.is_empty() {
+                let keep = rng.below(seq.len() + 1);
+                seq.truncate(keep.max(1));
+            }
+            seq.push(rng.below(vocab) as u32);
+        }
+        true
+    });
+}

@@ -33,7 +33,7 @@ fn prop_context_ngram_candidates_are_real_continuations() {
         let q = rng.range(1, 3);
         let w = rng.range(1, 6);
         let seq = prop::vec_u32(rng, len, 0..vocab as u32);
-        let ctx = ContextNgram::new(q);
+        let mut ctx = ContextNgram::new(q);
         for (cand, count) in ctx.candidates(&seq, w) {
             if seq.len() < q + 1 {
                 return false;
@@ -73,15 +73,15 @@ fn prop_mixed_fills_k_distinct_rows_when_possible() {
             return false;
         }
         // all rows distinct
-        for i in 0..b.rows.len() {
+        for i in 0..b.k() {
             for j in 0..i {
-                if b.rows[i].tokens == b.rows[j].tokens {
+                if b.row_tokens(i) == b.row_tokens(j) {
                     return false;
                 }
             }
         }
         // rows never exceed w
-        b.rows.iter().all(|r| r.tokens.len() <= w)
+        b.rows().iter().all(|r| r.len() <= w)
     });
 }
 
@@ -101,7 +101,7 @@ fn prop_acceptance_never_exceeds_draft_len_and_always_emits() {
         a.row < k
             && a.accepted <= w
             && a.emitted.len() == a.accepted + 1
-            && a.accepted <= b.rows[a.row].tokens.len()
+            && a.accepted <= b.row_tokens(a.row).len()
     });
 }
 
