@@ -20,6 +20,7 @@ pub mod fig2;
 pub mod fig4;
 pub mod grid;
 pub mod pool;
+pub mod prefix;
 pub mod qsweep;
 pub mod table1;
 

@@ -1,0 +1,184 @@
+//! Paged-KV prefix-sharing bench: how many concurrent lanes fit into a
+//! FIXED KV byte budget, contiguous lane pool vs paged pool, on a
+//! shared-system-prompt workload.
+//!
+//! The lane pool charges every admission a full `max_len` lane, so a
+//! budget of N lanes admits exactly N sequences no matter what the
+//! prompts look like. The paged pool charges admissions in DISTINCT
+//! pages: reservations are right-sized to the request's worst-case
+//! position, and full pages of a previously-seen prompt prefix are
+//! attached by refcount instead of being rewritten. On the
+//! shared-system-prompt workload (every request opens with the same
+//! system prompt) that is the difference between N lanes and several
+//! times N — which is the tentpole claim this bench GATES: it fails
+//! unless the paged pool admits strictly more sequences than the lane
+//! pool from the same bytes. A disjoint-prompt control shows how much of
+//! the win is sharing vs reservation right-sizing alone.
+//!
+//! Byte-identity is re-checked here too: the same request set is decoded
+//! to completion through both pools and the output streams must match
+//! token for token.
+
+use anyhow::{ensure, Result};
+
+use crate::config::EngineConfig;
+use crate::engine::{generate_all, BatchedEngine};
+use crate::scheduler::{make_strategy, StrategyName};
+use crate::tokenizer::TokenId;
+use crate::util::json::Json;
+use crate::workload::{disjoint_prompts, shared_prefix_prompts};
+
+/// Lane count whose byte budget both pools get (the fixed KV budget).
+const LANES: usize = 4;
+/// Positions per KV page for the paged side.
+const PAGE_SIZE: usize = 16;
+/// Prompts generated per scenario (an upper bound on admissions).
+const USERS: usize = 32;
+/// Per-user suffix tokens after the shared system prompt.
+const SUFFIX: usize = 8;
+
+/// Run the prefix-sharing admission comparison; fails unless the paged
+/// pool admits strictly more lanes than the lane pool at the same KV
+/// byte budget on the shared-prompt workload.
+pub fn run(ctx: &super::BenchCtx, smoke: bool) -> Result<()> {
+    let d = &ctx.runtime.artifacts().dims;
+    let vocab = ctx.manifest.vocab_size;
+    let (max_new, ident_n) = if smoke { (12, 4) } else { (24, 8) };
+    // system prompt = half the context, rounded to whole pages so the
+    // shared region seals into shareable full pages
+    let prefix_len = (d.max_len / 2 / PAGE_SIZE) * PAGE_SIZE;
+    let cfg = EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: max_new };
+    // the fixed budget: exactly the bytes the lane pool pins for LANES
+    let n_pages = LANES * d.max_len.div_ceil(PAGE_SIZE);
+
+    let shared = shared_prefix_prompts(0x9E37, USERS, prefix_len, SUFFIX, vocab);
+    let disjoint = disjoint_prompts(0x79B9, USERS, prefix_len + SUFFIX, vocab);
+
+    println!(
+        "== paged KV prefix sharing (model '{}', budget = {LANES} lanes = {n_pages} \
+         pages x {PAGE_SIZE}, system prompt {prefix_len} + {SUFFIX} tokens/user) ==\n",
+        ctx.model
+    );
+
+    // ---- admissions until backpressure, per pool/workload
+    let lane_admitted = {
+        let mut eng = BatchedEngine::new(&ctx.runtime, LANES);
+        count_admissions(&mut eng, ctx, &shared, &cfg)?
+    };
+    let (paged_admitted, hits) = {
+        let mut eng = BatchedEngine::new_paged(&ctx.runtime, USERS, PAGE_SIZE, n_pages);
+        let n = count_admissions(&mut eng, ctx, &shared, &cfg)?;
+        (n, eng.page_stats().prefix_hits)
+    };
+    let control_admitted = {
+        let mut eng = BatchedEngine::new_paged(&ctx.runtime, USERS, PAGE_SIZE, n_pages);
+        count_admissions(&mut eng, ctx, &disjoint, &cfg)?
+    };
+
+    println!("{:<28} {:>10} {:>12}", "pool / workload", "admitted", "prefix hits");
+    println!("{:<28} {:>10} {:>12}", "lane / shared-prompt", lane_admitted, "-");
+    println!("{:<28} {:>10} {:>12}", "paged / shared-prompt", paged_admitted, hits);
+    println!("{:<28} {:>10} {:>12}", "paged / disjoint", control_admitted, 0);
+    let hit_rate = hits as f64 / paged_admitted.max(1) as f64;
+    println!(
+        "\npaged admits {:.2}x the lane pool on shared prompts \
+         ({:.0}% of admissions attached shared pages); disjoint control {:.2}x",
+        paged_admitted as f64 / lane_admitted.max(1) as f64,
+        hit_rate * 100.0,
+        control_admitted as f64 / lane_admitted.max(1) as f64,
+    );
+    ensure!(
+        paged_admitted > lane_admitted,
+        "paged pool admitted {paged_admitted} <= lane pool {lane_admitted} at the same \
+         KV budget on the shared-prompt workload — prefix sharing is not paying"
+    );
+
+    // ---- byte-identity: same requests, both pools, identical streams
+    let reqs = &shared[..ident_n.min(shared.len())];
+    let mut lane_eng = BatchedEngine::new(&ctx.runtime, LANES);
+    let lane_out = generate_all(&mut lane_eng, requests(ctx, reqs, &cfg))?;
+    let mut paged_eng = BatchedEngine::new_paged(&ctx.runtime, USERS, PAGE_SIZE, n_pages);
+    paged_eng.collect_traces = true;
+    let paged_out = generate_all(&mut paged_eng, requests(ctx, reqs, &cfg))?;
+    for (i, (l, p)) in lane_out.iter().zip(&paged_out).enumerate() {
+        ensure!(
+            l.tokens == p.tokens,
+            "BYTE-IDENTITY VIOLATION: request {i} differs between lane and paged pools"
+        );
+    }
+    println!("byte-identity: {} streams identical across lane and paged pools", lane_out.len());
+
+    // cost-model throughput of the paged run, for the CI regression gate
+    let cm = ctx.cost_model();
+    let sim_s: f64 = paged_eng
+        .packed_traces
+        .iter()
+        .map(|t| cm.call_time(t.rows, t.w + 1, t.max_ctx))
+        .sum();
+    let tokens: usize = paged_out.iter().map(|r| r.tokens.len().saturating_sub(1)).sum();
+    let calls: usize = paged_out.iter().map(|r| r.calls).sum();
+    let sim_tps = tokens as f64 / sim_s.max(1e-12);
+
+    super::write_json(
+        &format!("prefix_{}", ctx.model),
+        &Json::obj(vec![
+            ("bench", Json::Str("kv-prefix-sharing".into())),
+            ("model", Json::Str(ctx.model.clone())),
+            ("page_size", Json::Num(PAGE_SIZE as f64)),
+            ("budget_pages", Json::Num(n_pages as f64)),
+            ("budget_lanes", Json::Num(LANES as f64)),
+            ("system_prompt_tokens", Json::Num(prefix_len as f64)),
+            ("lane_admitted", Json::Num(lane_admitted as f64)),
+            ("paged_admitted_shared", Json::Num(paged_admitted as f64)),
+            ("paged_admitted_disjoint", Json::Num(control_admitted as f64)),
+            ("prefix_hits", Json::Num(hits as f64)),
+            ("prefix_hit_rate", Json::Num(hit_rate)),
+            ("sim_tokens_per_s", Json::Num(sim_tps)),
+        ]),
+    )?;
+    // the CI bench-regression gate compares this summary against the
+    // committed benches/baseline.json (`ngrammys ci-bench-check`)
+    super::write_bench_summary(
+        "prefix",
+        sim_tps,
+        tokens as f64 / calls.max(1) as f64,
+        super::accept_rate(tokens, calls),
+    )
+}
+
+/// Admit prompts one by one until the pool backpressures (or the prompt
+/// set runs out); returns how many got in. Each admission really runs
+/// its prefill, so the count reflects the live admission path, not just
+/// the accounting.
+fn count_admissions(
+    eng: &mut BatchedEngine,
+    ctx: &super::BenchCtx,
+    prompts: &[Vec<TokenId>],
+    cfg: &EngineConfig,
+) -> Result<usize> {
+    let mut n = 0usize;
+    for p in prompts {
+        if !eng.can_admit_prompt(p, cfg) {
+            break;
+        }
+        let strat = make_strategy(StrategyName::Mixed, &ctx.tables, cfg.q);
+        eng.admit(p, strat, cfg.clone())?;
+        n += 1;
+    }
+    Ok(n)
+}
+
+/// Build the request tuples `generate_all` consumes (same strategy and
+/// engine shape for every request, as the identity check requires).
+fn requests(
+    ctx: &super::BenchCtx,
+    prompts: &[Vec<TokenId>],
+    cfg: &EngineConfig,
+) -> Vec<(Vec<TokenId>, Box<dyn crate::draft::DraftStrategy>, EngineConfig)> {
+    prompts
+        .iter()
+        .map(|p| {
+            (p.clone(), make_strategy(StrategyName::Mixed, &ctx.tables, cfg.q), cfg.clone())
+        })
+        .collect()
+}

@@ -345,6 +345,20 @@ pub struct ServeConfig {
     pub session_cache: SessionCacheConfig,
     /// engine settings for requests that do not override them
     pub default_engine: EngineConfig,
+    /// KV page size in positions (`--kv-page-size N`): 0 (the default)
+    /// keeps the contiguous per-lane KV pool; N > 0 switches every
+    /// batched engine to the paged pool with refcounted copy-on-write
+    /// prefix sharing, where admission is charged in distinct pages so
+    /// shared-prefix requests pack more lanes into the same KV bytes.
+    /// Output streams are byte-identical either way. Ignored when
+    /// `batch <= 1`.
+    pub kv_page_size: usize,
+    /// Paged-pool page budget (`--kv-pages N`, only with
+    /// `kv_page_size > 0`): 0 (the default) derives the lane-equivalent
+    /// budget `batch * ceil(max_len / page_size)` — the same bytes the
+    /// lane pool would pin — so extra admissions come purely from prefix
+    /// sharing and right-sized reservations.
+    pub kv_pages: usize,
 }
 
 impl Default for ServeConfig {
@@ -363,6 +377,8 @@ impl Default for ServeConfig {
             default_strategy: StrategyName::Mixed,
             session_cache: SessionCacheConfig::default(),
             default_engine: EngineConfig::default(),
+            kv_page_size: 0,
+            kv_pages: 0,
         }
     }
 }

@@ -251,6 +251,97 @@ impl CostModel {
         t + self.hw.step_overhead
     }
 
+    /// [`Self::call_time`] when the first `shared_len` context positions
+    /// live in SHARED KV pages (paged pool prefix sharing): the shared
+    /// columns' K/V bytes are read from HBM once per kernel instead of
+    /// once per batched row, so the attention GEMMs' memory rooflines
+    /// split into a weight-like shared part and a per-row private part.
+    /// FLOPs are unchanged — sharing moves bytes, not math — and at
+    /// `shared_len = 0` the GEMM inventory is identical to
+    /// [`Self::call_time`] (bitwise-equal result), which the tests pin.
+    pub fn call_time_prefix(
+        &self,
+        k_rows: usize,
+        w1: usize,
+        ctx_len: usize,
+        shared_len: usize,
+    ) -> f64 {
+        let d = &self.dims;
+        let rows = k_rows * w1;
+        let att_cols = ctx_len + w1;
+        let shared = shared_len.min(ctx_len);
+        let priv_cols = att_cols - shared;
+        let heads = k_rows * d.n_heads;
+        let mut t = 0.0;
+        let mut per_layer: Vec<Gemm> = Vec::with_capacity(8);
+        // fused qkv projection: (rows, 3d) = (rows, d) x (d, 3d)
+        per_layer.push(Gemm {
+            batch: 1, m: rows, n: 3 * d.d_model, k: d.d_model, shared_b: true,
+        });
+        // scores, split on the key columns: shared-prefix keys behave like
+        // weights (read once), private keys are read per row-batch element
+        if shared > 0 {
+            per_layer.push(Gemm {
+                batch: heads, m: w1, n: shared, k: d.head_dim, shared_b: true,
+            });
+        }
+        per_layer.push(Gemm {
+            batch: heads, m: w1, n: priv_cols, k: d.head_dim, shared_b: false,
+        });
+        // attn out, split on the contraction (value rows) the same way
+        if shared > 0 {
+            per_layer.push(Gemm {
+                batch: heads, m: w1, n: d.head_dim, k: shared, shared_b: true,
+            });
+        }
+        per_layer.push(Gemm {
+            batch: heads, m: w1, n: d.head_dim, k: priv_cols, shared_b: false,
+        });
+        // output projection
+        per_layer.push(Gemm {
+            batch: 1, m: rows, n: d.d_model, k: d.d_model, shared_b: true,
+        });
+        // mlp gate+up fused, then down
+        per_layer.push(Gemm {
+            batch: 1, m: rows, n: 2 * d.mlp_hidden, k: d.d_model, shared_b: true,
+        });
+        per_layer.push(Gemm {
+            batch: 1, m: rows, n: d.d_model, k: d.mlp_hidden, shared_b: true,
+        });
+        for g in per_layer {
+            t += self.gemm_time(g);
+        }
+        t *= d.n_layers as f64;
+        // lm head
+        t += self.gemm_time(Gemm {
+            batch: 1, m: rows, n: d.vocab, k: d.d_model, shared_b: true,
+        });
+        t + self.hw.step_overhead
+    }
+
+    /// [`Self::memory_bound_rows`] re-derived in units of DISTINCT pages:
+    /// with the first `shared_len` context positions in shared pages, the
+    /// per-row memory cost is lower, so the phase-transition knee sits at
+    /// more rows. Never below the plain derivation at `shared_len = 0`.
+    pub fn memory_bound_rows_shared(
+        &self,
+        w: usize,
+        ctx_len: usize,
+        shared_len: usize,
+        slack: f64,
+    ) -> usize {
+        let base = self.call_time_prefix(1, w + 1, ctx_len, shared_len);
+        let mut rows = 1;
+        while rows < Self::MAX_BUDGET_ROWS {
+            let t = self.call_time_prefix(rows + 1, w + 1, ctx_len, shared_len);
+            if t > base * slack.max(1.0) {
+                break;
+            }
+            rows += 1;
+        }
+        rows
+    }
+
     /// Fig. 1 quantity: slowdown of a (k, w) call relative to (1, 0).
     pub fn slowdown(&self, k_rows: usize, w: usize, ctx_len: usize) -> f64 {
         self.call_time(k_rows, w + 1, ctx_len) / self.call_time(1, 1, ctx_len)
@@ -388,6 +479,40 @@ mod tests {
         let loose = m.memory_bound_rows(10, 100, 1.5);
         assert!(tight <= loose);
         assert!(tight >= 1);
+    }
+
+    #[test]
+    fn prefix_call_time_equals_plain_at_zero_shared() {
+        let m = cm();
+        // the zero-shared path must run the IDENTICAL GEMM inventory, so
+        // the results are bitwise equal, not merely close
+        for (k, w1, l) in [(1, 1, 50), (5, 5, 100), (32, 11, 1000)] {
+            assert_eq!(m.call_time_prefix(k, w1, l, 0), m.call_time(k, w1, l));
+        }
+        assert_eq!(
+            m.memory_bound_rows_shared(10, 100, 0, 1.15),
+            m.memory_bound_rows(10, 100, 1.15)
+        );
+    }
+
+    #[test]
+    fn shared_prefix_lowers_call_time() {
+        let m = cm();
+        let plain = m.call_time(32, 11, 1000);
+        let shared = m.call_time_prefix(32, 11, 1000, 896);
+        assert!(shared < plain, "shared {shared} !< plain {plain}");
+        // sharing MORE of the context never costs more
+        let half = m.call_time_prefix(32, 11, 1000, 448);
+        assert!(shared <= half, "shared {shared} > half {half}");
+    }
+
+    #[test]
+    fn shared_prefix_raises_the_row_knee() {
+        let m = cm();
+        let plain = m.memory_bound_rows(10, 2000, 1.15);
+        let shared = m.memory_bound_rows_shared(10, 2000, 1900, 1.15);
+        assert!(shared >= plain, "shared knee {shared} < plain knee {plain}");
+        assert!(shared >= 1);
     }
 
     #[test]

@@ -34,7 +34,7 @@ use crate::adaptive::{budget, SeqController, StepFeedback};
 use crate::config::EngineConfig;
 use crate::costmodel::CostModel;
 use crate::draft::{DraftBatch, DraftStrategy};
-use crate::kvcache::{KvPool, LaneId};
+use crate::kvcache::{KvSeq, KvSlot, KvStore, PageStats};
 use crate::runtime::{ModelRuntime, PackedBlock};
 use crate::tokenizer::TokenId;
 
@@ -114,7 +114,7 @@ struct SeqState {
     /// adaptive mode: plans this sequence's (k, w), drafts via its bandit
     /// arm and bids for budget rows; `strategy` is ignored when set
     controller: Option<SeqController>,
-    lane: LaneId,
+    kv: KvSeq,
     res: GenResult,
     /// set when the sequence can no longer step (cache exhausted)
     done: bool,
@@ -178,7 +178,7 @@ pub struct BatchedEngine<'rt> {
     /// (derived or static) — exported as the `ngrammys_derived_budget`
     /// gauge by the elastic scheduler.
     last_budget: Option<usize>,
-    pool: KvPool,
+    pool: KvStore,
     active: Vec<SeqState>,
     next_id: u64,
     /// completed engine steps (stamps `PackedTrace::step`)
@@ -196,6 +196,40 @@ impl<'rt> BatchedEngine<'rt> {
     /// model.
     pub fn new(runtime: &'rt ModelRuntime, max_concurrency: usize) -> Self {
         let d = &runtime.artifacts().dims;
+        let pool = KvStore::lanes(d.n_layers, d.max_len, d.n_heads, d.head_dim,
+                                  max_concurrency.max(1));
+        Self::with_store(runtime, pool)
+    }
+
+    /// An engine on a paged KV pool with prefix sharing: up to
+    /// `max_concurrency` sequences over `n_pages` pages of `page_size`
+    /// positions each. `n_pages = 0` derives the lane-equivalent budget
+    /// (`max_concurrency * pages_for(max_len)`), which pins the same bytes
+    /// as the lane pool — admissions beyond `max_concurrency` lanes then
+    /// come purely from prefix sharing and right-sized reservations.
+    /// Output streams are byte-identical to lane mode (the paged pool
+    /// writes/reads the same dense geometry through page indirection).
+    pub fn new_paged(
+        runtime: &'rt ModelRuntime,
+        max_concurrency: usize,
+        page_size: usize,
+        n_pages: usize,
+    ) -> Self {
+        let d = &runtime.artifacts().dims;
+        let seq_cap = max_concurrency.max(1);
+        let page_size = page_size.max(1).min(d.max_len);
+        let n_pages = if n_pages == 0 {
+            seq_cap * d.max_len.div_ceil(page_size)
+        } else {
+            n_pages
+        };
+        let pool = KvStore::paged(
+            d.n_layers, d.max_len, d.n_heads, d.head_dim, page_size, n_pages, seq_cap,
+        );
+        Self::with_store(runtime, pool)
+    }
+
+    fn with_store(runtime: &'rt ModelRuntime, pool: KvStore) -> Self {
         BatchedEngine {
             runtime,
             collect_traces: false,
@@ -203,8 +237,7 @@ impl<'rt> BatchedEngine<'rt> {
             budget: None,
             auto_budget: None,
             last_budget: None,
-            pool: KvPool::new(d.n_layers, d.max_len, d.n_heads, d.head_dim,
-                              max_concurrency.max(1)),
+            pool,
             active: Vec::new(),
             next_id: 0,
             steps_done: 0,
@@ -229,16 +262,17 @@ impl<'rt> BatchedEngine<'rt> {
         self.pool.capacity()
     }
 
-    /// Grow or shrink the lane pool toward `target` lanes and return the
-    /// achieved capacity — the elastic scheduler's scale knob. Growth is
-    /// immediate; shrinking reclaims only free lanes (see
-    /// [`KvPool::resize`]), so in-flight sequences are never evicted and
-    /// a downscale decision converges over the next few steps as
-    /// sequences retire. Output streams are unaffected either way: scale
-    /// events only change how many sequences may ride future packed
+    /// Grow or shrink the pool toward `target` concurrent sequences and
+    /// return the achieved capacity — the elastic scheduler's scale knob.
+    /// Growth is immediate; lane-mode shrinking reclaims only free lanes
+    /// (see [`crate::kvcache::KvPool::resize`]) and paged-mode shrinking
+    /// just lowers the admission cap, so in-flight sequences are never
+    /// evicted and a downscale decision converges over the next few steps
+    /// as sequences retire. Output streams are unaffected either way:
+    /// scale events only change how many sequences may ride future packed
     /// calls, never what any existing sequence emits.
     pub fn set_capacity(&mut self, target: usize) -> usize {
-        self.pool.resize(target)
+        self.pool.set_capacity(target)
     }
 
     /// Number of currently active (admitted, unfinished) sequences.
@@ -246,9 +280,29 @@ impl<'rt> BatchedEngine<'rt> {
         self.active.len()
     }
 
-    /// Whether another sequence can be admitted right now.
+    /// Whether another sequence can be admitted right now (concurrency
+    /// cap only — the paged pool may still refuse a SPECIFIC prompt on
+    /// page pressure; see [`Self::can_admit_prompt`]).
     pub fn has_capacity(&self) -> bool {
         self.active.len() < self.pool.capacity()
+    }
+
+    /// Whether THIS prompt can be admitted right now. In lane mode this
+    /// is exactly [`Self::has_capacity`]; in paged mode it additionally
+    /// checks the page budget for the prompt's distinct (non-shared)
+    /// pages at its worst-case reservation, so a prompt sharing a
+    /// resident prefix may be admissible when a disjoint one is not.
+    pub fn can_admit_prompt(&self, prompt: &[TokenId], cfg: &EngineConfig) -> bool {
+        self.has_capacity() && self.pool.can_admit(prompt, self.max_pos_for(prompt.len(), cfg))
+    }
+
+    /// Worst-case KV position a sequence can reach: prompt + generation
+    /// limit + one uncommitted block of slack on both sides of the last
+    /// step. Purely an admission-reservation bound — the per-step room
+    /// fed to shape planning stays `max_len - len` in both pool modes.
+    fn max_pos_for(&self, prompt_len: usize, cfg: &EngineConfig) -> usize {
+        let max_len = self.runtime.artifacts().dims.max_len;
+        (prompt_len + cfg.max_new_tokens + 2 * cfg.w + 2).min(max_len)
     }
 
     /// KV lanes currently claimed by active sequences.
@@ -256,11 +310,18 @@ impl<'rt> BatchedEngine<'rt> {
         self.pool.in_use()
     }
 
-    /// Bytes the engine's KV lane pool currently pins (all capacity
-    /// lanes, busy or free) — the memory a lane shrink or an engine
-    /// retire actually returns.
+    /// Bytes the engine's KV pool currently pins (all capacity lanes in
+    /// lane mode, materialized pages in paged mode) — the memory a lane
+    /// shrink or an engine retire actually returns.
     pub fn kv_bytes(&self) -> usize {
         self.pool.memory_bytes()
+    }
+
+    /// Page accounting snapshot: live/free/shared pages + prefix hits.
+    /// Lane mode reports lanes as pages with no sharing, so dashboards
+    /// read one shape either way.
+    pub fn page_stats(&self) -> PageStats {
+        self.pool.page_stats()
     }
 
     /// Mean controller heat (expected accepted tokens per step, see
@@ -314,19 +375,27 @@ impl<'rt> BatchedEngine<'rt> {
         mut controller: Option<SeqController>,
         cfg: EngineConfig,
     ) -> Result<SeqId> {
-        let lane = self
+        let max_pos = self.max_pos_for(prompt.len(), &cfg);
+        let kv = self
             .pool
-            .acquire()
+            .acquire(prompt, max_pos)
             .ok_or_else(|| anyhow!("no free KV lanes ({} in use)", self.pool.in_use()))?;
         strategy.reset();
         if let Some(c) = controller.as_mut() {
             c.reset();
         }
         let t0 = Instant::now();
-        let pf = match self.runtime.prefill(prompt, self.pool.lane_mut(lane)) {
+        // Prefill ALWAYS runs (identical compute in both pool modes); a
+        // paged writer with an attached shared prefix installs only the
+        // positions past it — the sharing saves memory, not this call.
+        let pf = {
+            let mut slot = self.pool.slot_mut(kv);
+            self.runtime.prefill(prompt, slot.as_write())
+        };
+        let pf = match pf {
             Ok(pf) => pf,
             Err(e) => {
-                self.pool.release(lane);
+                self.pool.release(kv);
                 return Err(e);
             }
         };
@@ -344,7 +413,7 @@ impl<'rt> BatchedEngine<'rt> {
             seq,
             strategy,
             controller,
-            lane,
+            kv,
             res,
             done: false,
             t_decode: Instant::now(),
@@ -371,8 +440,8 @@ impl<'rt> BatchedEngine<'rt> {
             let mut caps: Vec<(usize, usize)> = Vec::with_capacity(self.active.len());
             let mut fits: Vec<Option<(usize, usize)>> = Vec::with_capacity(self.active.len());
             for s in self.active.iter_mut() {
-                let room = self.pool.lane(s.lane).remaining();
-                let ctx = self.pool.lane(s.lane).len;
+                let room = self.pool.seq_remaining(s.kv);
+                let ctx = self.pool.ctx_len(s.kv);
                 let (ck, cw) = (s.cfg.k, s.cfg.w);
                 let cap = match s.controller.as_mut() {
                     Some(c) => c.plan(ctx, room, &self.shape_grid, ck, cw),
@@ -399,7 +468,7 @@ impl<'rt> BatchedEngine<'rt> {
                         if w_fit == 0 {
                             return own; // greedy class keeps its anchor-only shape
                         }
-                        let room = self.pool.lane(s.lane).remaining();
+                        let room = self.pool.seq_remaining(s.kv);
                         self.runtime
                             .best_fitting_shape(k_cap, w_common_spec.unwrap(), room)
                             .unwrap_or(own)
@@ -424,7 +493,7 @@ impl<'rt> BatchedEngine<'rt> {
                 let ctx = self
                     .active
                     .iter()
-                    .map(|s| self.pool.lane(s.lane).len)
+                    .map(|s| self.pool.ctx_len(s.kv))
                     .max()
                     .unwrap_or(0);
                 let derived = ab.cm.memory_bound_rows(w_max, ctx, ab.slack);
@@ -455,7 +524,7 @@ impl<'rt> BatchedEngine<'rt> {
                     .iter()
                     .enumerate()
                     .map(|(i, &(k, w))| {
-                        let room = self.pool.lane(self.active[i].lane).remaining();
+                        let room = self.pool.seq_remaining(self.active[i].kv);
                         self.runtime
                             .best_fitting_shape(alloc[i].min(k), w, room)
                             .or_else(|| self.runtime.smallest_row_shape(w, room))
@@ -513,27 +582,35 @@ impl<'rt> BatchedEngine<'rt> {
         }
 
         // --- one packed verification call for the whole group, straight
-        // off the arena-assembled block buffers (no intermediate copies)
+        // off the arena-assembled block buffers (no intermediate copies).
+        // Per-sequence cache views (lane refs or paged page-table views)
+        // are materialized first so the blocks can borrow them uniformly.
+        let views: Vec<KvSlot> = idxs
+            .iter()
+            .map(|&i| self.pool.slot(self.active[i].kv))
+            .collect();
         let blocks: Vec<PackedBlock> = idxs
             .iter()
             .zip(&slots)
-            .map(|(&i, slot)| PackedBlock {
+            .zip(&views)
+            .map(|((_, slot), view)| PackedBlock {
                 k: slot.batch.k(),
                 tokens: &slot.block,
-                cache: self.pool.lane(self.active[i].lane),
+                cache: view.as_read(),
             })
             .collect();
         if self.collect_traces {
             self.packed_traces.push(PackedTrace {
                 w,
                 rows: blocks.iter().map(|b| b.k).sum(),
-                max_ctx: blocks.iter().map(|b| b.cache.len).max().unwrap_or(0),
+                max_ctx: blocks.iter().map(|b| b.cache.ctx_len()).max().unwrap_or(0),
                 seqs: blocks.len(),
                 step: self.steps_done,
             });
         }
         let outs = self.runtime.spec_step_packed(w, &blocks);
         drop(blocks);
+        drop(views);
         let outs = match outs {
             Ok(o) => o,
             Err(e) => {
@@ -549,8 +626,12 @@ impl<'rt> BatchedEngine<'rt> {
         for ((&i, slot), out) in idxs.iter().zip(&slots).zip(&outs) {
             let batch = &slot.batch;
             let k = batch.k();
+            let kv = self.active[i].kv;
+            let (acc, ctx_len) = {
+                let mut wslot = self.pool.slot_mut(kv);
+                judge_and_commit(batch, out, wslot.as_write())?
+            };
             let s = &mut self.active[i];
-            let (acc, ctx_len) = judge_and_commit(batch, out, self.pool.lane_mut(s.lane))?;
             s.res.exec_time += out.exec_time;
             if self.collect_traces {
                 s.res
@@ -578,6 +659,9 @@ impl<'rt> BatchedEngine<'rt> {
                     break;
                 }
             }
+            // keep the pool's token mirror current so newly-full pages
+            // get sealed into the prefix index (no-op in lane mode)
+            self.pool.sync_tokens(kv, &self.active[i].seq);
         }
         self.draft_scratch = slots;
         Ok(())
@@ -590,7 +674,7 @@ impl<'rt> BatchedEngine<'rt> {
             if self.active[i].finished() {
                 let mut s = self.active.remove(i);
                 s.res.decode_time = s.t_decode.elapsed();
-                self.pool.release(s.lane);
+                self.pool.release(s.kv);
                 finished.push((s.id, s.res));
             } else {
                 i += 1;
@@ -618,6 +702,18 @@ pub fn generate_all(
 
     loop {
         while eng.has_capacity() && !pending.is_empty() {
+            // Paged-pool backpressure: when the next prompt's distinct
+            // pages don't fit right now AND something is still running,
+            // wait for retirements instead of erroring. With nothing
+            // running, admit anyway so an oversized request fails loudly
+            // rather than deadlocking the drive loop. (Lane mode never
+            // hits this: has_capacity implies a free lane.)
+            {
+                let (_, (prompt, _, cfg)) = pending.front().unwrap();
+                if !eng.can_admit_prompt(prompt, cfg) && eng.active() > 0 {
+                    break;
+                }
+            }
             let (ridx, (prompt, strategy, cfg)) = pending.pop_front().unwrap();
             let id = eng.admit(&prompt, strategy, cfg)?;
             by_id.insert(id, ridx);

@@ -19,7 +19,7 @@
 pub mod acceptance;
 pub mod batched;
 
-pub use batched::{AutoBudget, BatchedEngine, PackedTrace, SeqId};
+pub use batched::{generate_all, AutoBudget, BatchedEngine, PackedTrace, SeqId};
 
 use std::time::{Duration, Instant};
 
@@ -28,7 +28,7 @@ use anyhow::Result;
 use crate::adaptive::{SeqController, StepFeedback};
 use crate::config::EngineConfig;
 use crate::draft::{DraftBatch, DraftStrategy, StrategyKind};
-use crate::kvcache::SharedKvCache;
+use crate::kvcache::{KvWrite, SharedKvCache};
 use crate::runtime::{ModelRuntime, StepOutput};
 use crate::tokenizer::TokenId;
 
@@ -301,14 +301,16 @@ pub(crate) fn assemble_block(batch: &DraftBatch, anchor: TokenId, w: usize) -> V
 }
 
 /// Judge a verification call and commit the winning row's KV tail.
-/// Returns the acceptance and the context length AT CALL TIME (cache.len
-/// before the commit — what the verifier actually attended over).
+/// Returns the acceptance and the context length AT CALL TIME (the
+/// cache's length before the commit — what the verifier attended over).
+/// Works against any [`KvWrite`] target: a contiguous lane or a paged
+/// page-table writer commit identically.
 pub(crate) fn judge_and_commit(
     batch: &DraftBatch,
     out: &StepOutput,
-    cache: &mut SharedKvCache,
+    cache: &mut dyn KvWrite,
 ) -> Result<(Acceptance, usize)> {
-    let ctx_len = cache.len;
+    let ctx_len = cache.ctx_len();
     let acc = acceptance::judge(batch, &out.next_ids, out.w1);
     let consumed = acc.accepted + 1; // block tokens whose KV is valid
     cache.commit_tail(&out.k_tail, &out.v_tail, out.k, out.w1, acc.row, consumed)?;

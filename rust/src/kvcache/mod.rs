@@ -12,8 +12,109 @@
 //! Layout matches the L2 model: (layers, max_len, heads, head_dim) f32,
 //! row-major. `SharedKvCache` lives in host memory (CPU PJRT device memory
 //! *is* host memory) and is marshalled per call by the runtime.
+//!
+//! Two physical organizations sit behind one facade ([`KvStore`]):
+//!
+//! - **Lanes** ([`KvPool`]): one contiguous `SharedKvCache` per sequence.
+//!   Simple, contiguous, and the differential-testing oracle.
+//! - **Pages** ([`paged::PagedKvPool`]): fixed-size refcounted pages with
+//!   copy-on-write prefix sharing — admissions whose prompt prefix matches
+//!   resident pages attach them instead of duplicating the KV, so a fixed
+//!   byte budget admits more concurrent sequences on shared-system-prompt
+//!   traffic (the paper's verification step is memory-bound, so distinct
+//!   KV bytes are THE capacity currency).
+//!
+//! The runtime reads either organization through [`KvRead`] and writes
+//! through [`KvWrite`]; byte-identity of the two stores is pinned by
+//! `rust/tests/paged_kv.rs`.
 
 use anyhow::{anyhow, Result};
+
+use crate::tokenizer::TokenId;
+
+pub mod paged;
+
+/// Read access to one sequence's committed KV context, independent of the
+/// physical organization (contiguous lane vs page table).
+///
+/// Geometry accessors describe the *install/gather* layout — a dense
+/// `(layers, max_ctx, heads, head_dim)` row-major f32 buffer — which is
+/// what the prefill executables produce and the PJRT step executables
+/// consume, whatever the store does internally.
+pub trait KvRead {
+    /// Transformer layer count.
+    fn layers(&self) -> usize;
+    /// Attention head count.
+    fn heads(&self) -> usize;
+    /// Per-head dimension.
+    fn head_dim(&self) -> usize;
+    /// Capacity in positions of the dense install/gather geometry.
+    fn max_ctx(&self) -> usize;
+    /// Number of committed positions.
+    fn ctx_len(&self) -> usize;
+    /// Positions this sequence may still commit.
+    fn remaining(&self) -> usize {
+        self.max_ctx() - self.ctx_len()
+    }
+    /// Elements per cached position within one layer.
+    fn pos_stride(&self) -> usize {
+        self.heads() * self.head_dim()
+    }
+    /// Elements per layer in the dense geometry.
+    fn layer_stride(&self) -> usize {
+        self.max_ctx() * self.pos_stride()
+    }
+    /// Total elements of each dense K / V buffer.
+    fn numel(&self) -> usize {
+        self.layers() * self.layer_stride()
+    }
+    /// One committed position's key vector in `layer`.
+    fn k_at(&self, layer: usize, pos: usize) -> &[f32];
+    /// One committed position's value vector in `layer`.
+    fn v_at(&self, layer: usize, pos: usize) -> &[f32];
+    /// Whole-buffer K/V access when the store is physically contiguous in
+    /// the dense geometry (lane mode); `None` forces [`KvRead::gather`].
+    fn as_contiguous(&self) -> Option<(&[f32], &[f32])> {
+        None
+    }
+    /// Dense K/V copy in the install geometry; positions `>= ctx_len()`
+    /// are zeroed. The PJRT marshalling path for paged sequences.
+    fn gather(&self) -> (Vec<f32>, Vec<f32>) {
+        let ps = self.pos_stride();
+        let mut k = vec![0.0f32; self.numel()];
+        let mut v = vec![0.0f32; self.numel()];
+        for layer in 0..self.layers() {
+            let base = layer * self.layer_stride();
+            for pos in 0..self.ctx_len() {
+                let dst = base + pos * ps;
+                k[dst..dst + ps].copy_from_slice(self.k_at(layer, pos));
+                v[dst..dst + ps].copy_from_slice(self.v_at(layer, pos));
+            }
+        }
+        (k, v)
+    }
+}
+
+/// Write access to one sequence's KV context: the three mutations the
+/// decode loop performs, with identical semantics across stores.
+pub trait KvWrite: KvRead {
+    /// Install a freshly prefilled dense cache and set the valid length.
+    fn install(&mut self, k_data: Vec<f32>, v_data: Vec<f32>, len: usize) -> Result<()>;
+    /// Commit `count` positions from the accepted row of a step's KV tail
+    /// (tails are shaped `(layers, k_rows, w1, heads, head_dim)`).
+    fn commit_tail(
+        &mut self,
+        k_tail: &[f32],
+        v_tail: &[f32],
+        k_rows: usize,
+        w1: usize,
+        row: usize,
+        count: usize,
+    ) -> Result<()>;
+    /// Rewind to a shorter length (rollback discipline; paged stores drop
+    /// or copy-on-write the affected page tail).
+    fn truncate(&mut self, len: usize) -> Result<()>;
+}
 
 /// Shared-context KV cache for a single sequence.
 #[derive(Debug, Clone)]
@@ -148,82 +249,54 @@ impl SharedKvCache {
     }
 }
 
-/// Block-table paged allocator for multi-request serving (vLLM-style).
-///
-/// The serving layer holds many sequences; each grabs fixed-size blocks of
-/// cache slots on demand. This bounds memory and lets the scheduler admit
-/// requests by block budget rather than worst-case max_len.
-#[derive(Debug)]
-pub struct PagedAllocator {
-    block_size: usize,
-    free: Vec<usize>,
-    total_blocks: usize,
+impl KvRead for SharedKvCache {
+    fn layers(&self) -> usize {
+        self.layers
+    }
+    fn heads(&self) -> usize {
+        self.heads
+    }
+    fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+    fn max_ctx(&self) -> usize {
+        self.max_len
+    }
+    fn ctx_len(&self) -> usize {
+        self.len
+    }
+    fn k_at(&self, layer: usize, pos: usize) -> &[f32] {
+        let ps = self.heads * self.head_dim;
+        let off = layer * self.max_len * ps + pos * ps;
+        &self.k_data[off..off + ps]
+    }
+    fn v_at(&self, layer: usize, pos: usize) -> &[f32] {
+        let ps = self.heads * self.head_dim;
+        let off = layer * self.max_len * ps + pos * ps;
+        &self.v_data[off..off + ps]
+    }
+    fn as_contiguous(&self) -> Option<(&[f32], &[f32])> {
+        Some((&self.k_data, &self.v_data))
+    }
 }
 
-/// One sequence's allocated block list plus its logical length.
-#[derive(Debug, Default, Clone)]
-pub struct BlockTable {
-    /// owned block indexes, in allocation order
-    pub blocks: Vec<usize>,
-    /// positions currently in use
-    pub len: usize,
-}
-
-impl PagedAllocator {
-    /// An allocator of `total_blocks` free blocks, `block_size` positions each.
-    pub fn new(total_blocks: usize, block_size: usize) -> Self {
-        PagedAllocator {
-            block_size,
-            free: (0..total_blocks).rev().collect(),
-            total_blocks,
-        }
+impl KvWrite for SharedKvCache {
+    fn install(&mut self, k_data: Vec<f32>, v_data: Vec<f32>, len: usize) -> Result<()> {
+        SharedKvCache::install(self, k_data, v_data, len)
     }
-
-    /// Positions per block.
-    pub fn block_size(&self) -> usize {
-        self.block_size
+    fn commit_tail(
+        &mut self,
+        k_tail: &[f32],
+        v_tail: &[f32],
+        k_rows: usize,
+        w1: usize,
+        row: usize,
+        count: usize,
+    ) -> Result<()> {
+        SharedKvCache::commit_tail(self, k_tail, v_tail, k_rows, w1, row, count)
     }
-
-    /// Currently free blocks.
-    pub fn free_blocks(&self) -> usize {
-        self.free.len()
-    }
-
-    /// Currently allocated blocks.
-    pub fn used_blocks(&self) -> usize {
-        self.total_blocks - self.free.len()
-    }
-
-    /// Blocks needed to hold `tokens` positions.
-    pub fn blocks_for(&self, tokens: usize) -> usize {
-        tokens.div_ceil(self.block_size)
-    }
-
-    /// Grow `table` so it can hold `new_len` positions. Fails (leaving the
-    /// table untouched) if not enough free blocks — the scheduler treats
-    /// that as backpressure.
-    pub fn grow(&mut self, table: &mut BlockTable, new_len: usize) -> Result<()> {
-        let need = self.blocks_for(new_len);
-        if need > table.blocks.len() {
-            let extra = need - table.blocks.len();
-            if extra > self.free.len() {
-                return Err(anyhow!(
-                    "out of cache blocks: need {extra}, free {}",
-                    self.free.len()
-                ));
-            }
-            for _ in 0..extra {
-                table.blocks.push(self.free.pop().unwrap());
-            }
-        }
-        table.len = new_len;
-        Ok(())
-    }
-
-    /// Release all blocks of a finished sequence.
-    pub fn release(&mut self, table: &mut BlockTable) {
-        self.free.append(&mut table.blocks);
-        table.len = 0;
+    fn truncate(&mut self, len: usize) -> Result<()> {
+        SharedKvCache::truncate(self, len)
     }
 }
 
@@ -363,6 +436,228 @@ impl KvPool {
     }
 }
 
+/// Handle to one sequence's KV context inside a [`KvStore`], whichever
+/// physical organization backs it. Opaque outside this module.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct KvSeq(usize);
+
+/// Borrowed read view of one sequence's KV ([`KvStore::slot`]).
+pub enum KvSlot<'a> {
+    /// contiguous lane
+    Lane(&'a SharedKvCache),
+    /// page-table view
+    Paged(paged::PagedSeqView<'a>),
+}
+
+impl KvSlot<'_> {
+    /// The view as a dyn [`KvRead`] for the runtime.
+    pub fn as_read(&self) -> &dyn KvRead {
+        match self {
+            KvSlot::Lane(c) => *c,
+            KvSlot::Paged(v) => v,
+        }
+    }
+}
+
+/// Borrowed write view of one sequence's KV ([`KvStore::slot_mut`]).
+pub enum KvSlotMut<'a> {
+    /// contiguous lane
+    Lane(&'a mut SharedKvCache),
+    /// page-table writer
+    Paged(paged::PagedSeqWriter<'a>),
+}
+
+impl KvSlotMut<'_> {
+    /// The view as a dyn [`KvWrite`] for the runtime and commit path.
+    pub fn as_write(&mut self) -> &mut dyn KvWrite {
+        match self {
+            KvSlotMut::Lane(c) => *c,
+            KvSlotMut::Paged(w) => w,
+        }
+    }
+}
+
+/// Per-step page accounting snapshot ([`KvStore::page_stats`]), exported
+/// as the `ngrammys_kv_pages{,_free,_shared}` / prefix-hit gauges. The
+/// lane store reports lane-equivalent numbers (one "page" per lane, no
+/// sharing) so dashboards work in either mode.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PageStats {
+    /// distinct pages currently referenced by at least one sequence
+    pub live: u64,
+    /// pages still admittable against the budget (free minus reservations)
+    pub free: u64,
+    /// pages referenced by two or more sequences (prefix sharing at work)
+    pub shared: u64,
+    /// admissions that attached at least one resident shared page
+    pub prefix_hits: u64,
+}
+
+/// The engine-facing KV facade: a pool of per-sequence contexts backed by
+/// either lane-oriented contiguous allocation ([`KvPool`], the oracle) or
+/// fixed-size refcounted pages with copy-on-write prefix sharing
+/// ([`paged::PagedKvPool`]).
+///
+/// Both organizations expose identical semantics through [`KvSeq`]
+/// handles; the engine's decode loop is store-agnostic, and the two
+/// stores are differentially tested against each other.
+#[derive(Debug)]
+pub enum KvStore {
+    /// one contiguous `SharedKvCache` per sequence
+    Lanes(KvPool),
+    /// refcounted fixed-size pages with prefix sharing
+    Paged(paged::PagedKvPool),
+}
+
+impl KvStore {
+    /// Lane-oriented store of `n_lanes` contiguous caches.
+    pub fn lanes(
+        layers: usize,
+        max_len: usize,
+        heads: usize,
+        head_dim: usize,
+        n_lanes: usize,
+    ) -> Self {
+        KvStore::Lanes(KvPool::new(layers, max_len, heads, head_dim, n_lanes))
+    }
+
+    /// Paged store: `n_pages` pages of `page_size` positions each, with
+    /// admission concurrency capped at `seq_cap` sequences.
+    pub fn paged(
+        layers: usize,
+        max_len: usize,
+        heads: usize,
+        head_dim: usize,
+        page_size: usize,
+        n_pages: usize,
+        seq_cap: usize,
+    ) -> Self {
+        KvStore::Paged(paged::PagedKvPool::new(
+            layers, max_len, heads, head_dim, page_size, n_pages, seq_cap,
+        ))
+    }
+
+    /// Concurrency capacity: lane count, or the paged admission cap.
+    pub fn capacity(&self) -> usize {
+        match self {
+            KvStore::Lanes(p) => p.capacity(),
+            KvStore::Paged(p) => p.seq_cap(),
+        }
+    }
+
+    /// Scale the concurrency capacity toward `target` (floored at 1) and
+    /// return the achieved value — the elastic scheduler's knob.
+    pub fn set_capacity(&mut self, target: usize) -> usize {
+        match self {
+            KvStore::Lanes(p) => p.resize(target),
+            KvStore::Paged(p) => p.set_seq_cap(target),
+        }
+    }
+
+    /// Sequences currently resident.
+    pub fn in_use(&self) -> usize {
+        match self {
+            KvStore::Lanes(p) => p.in_use(),
+            KvStore::Paged(p) => p.in_use(),
+        }
+    }
+
+    /// Bytes of KV the store currently pins.
+    pub fn memory_bytes(&self) -> usize {
+        match self {
+            KvStore::Lanes(p) => p.memory_bytes(),
+            KvStore::Paged(p) => p.memory_bytes(),
+        }
+    }
+
+    /// Whether an admission with this prompt and position reservation
+    /// would succeed right now. Lane mode only needs a free lane; paged
+    /// mode also accounts distinct new pages after prefix sharing.
+    pub fn can_admit(&self, prompt: &[TokenId], max_pos: usize) -> bool {
+        match self {
+            KvStore::Lanes(p) => p.available() > 0,
+            KvStore::Paged(p) => p.can_admit(prompt, max_pos),
+        }
+    }
+
+    /// Admit a sequence: claim a context sized for `max_pos` positions.
+    /// Paged stores attach resident pages matching the prompt prefix
+    /// (copy-on-write shared) and reserve page credits for the rest, so a
+    /// successful acquire can never fail allocation mid-decode. `None`
+    /// means backpressure.
+    pub fn acquire(&mut self, prompt: &[TokenId], max_pos: usize) -> Option<KvSeq> {
+        match self {
+            KvStore::Lanes(p) => p.acquire().map(|l| KvSeq(l.0)),
+            KvStore::Paged(p) => p.acquire(prompt, max_pos).map(KvSeq),
+        }
+    }
+
+    /// Return a retired sequence's context to the store. Idempotent.
+    pub fn release(&mut self, seq: KvSeq) {
+        match self {
+            KvStore::Lanes(p) => p.release(LaneId(seq.0)),
+            KvStore::Paged(p) => p.release(seq.0),
+        }
+    }
+
+    /// Committed positions of one sequence.
+    pub fn ctx_len(&self, seq: KvSeq) -> usize {
+        match self {
+            KvStore::Lanes(p) => p.lane(LaneId(seq.0)).len,
+            KvStore::Paged(p) => p.seq_len(seq.0),
+        }
+    }
+
+    /// Positions one sequence may still commit (identical semantics in
+    /// both modes: the model's max context minus the committed length —
+    /// paged reservations are sized so they never bind before this).
+    pub fn seq_remaining(&self, seq: KvSeq) -> usize {
+        match self {
+            KvStore::Lanes(p) => p.lane(LaneId(seq.0)).remaining(),
+            KvStore::Paged(p) => p.seq_remaining(seq.0),
+        }
+    }
+
+    /// Borrow one sequence's read view.
+    pub fn slot(&self, seq: KvSeq) -> KvSlot<'_> {
+        match self {
+            KvStore::Lanes(p) => KvSlot::Lane(p.lane(LaneId(seq.0))),
+            KvStore::Paged(p) => KvSlot::Paged(p.view(seq.0)),
+        }
+    }
+
+    /// Borrow one sequence's write view.
+    pub fn slot_mut(&mut self, seq: KvSeq) -> KvSlotMut<'_> {
+        match self {
+            KvStore::Lanes(p) => KvSlotMut::Lane(p.lane_mut(LaneId(seq.0))),
+            KvStore::Paged(p) => KvSlotMut::Paged(p.writer(seq.0)),
+        }
+    }
+
+    /// Reconcile the store's token mirror for one sequence with the
+    /// engine's authoritative token stream (prompt + committed tokens).
+    /// Paged stores use it to seal full pages into the prefix index; the
+    /// lane store ignores it.
+    pub fn sync_tokens(&mut self, seq: KvSeq, tokens: &[TokenId]) {
+        if let KvStore::Paged(p) = self {
+            p.sync_tokens(seq.0, tokens);
+        }
+    }
+
+    /// Page accounting snapshot for metrics export.
+    pub fn page_stats(&self) -> PageStats {
+        match self {
+            KvStore::Lanes(p) => PageStats {
+                live: p.in_use() as u64,
+                free: p.available() as u64,
+                shared: 0,
+                prefix_hits: 0,
+            },
+            KvStore::Paged(p) => p.page_stats(),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -418,21 +713,6 @@ mod tests {
         c.truncate(2).unwrap();
         assert_eq!(c.len, 2);
         assert!(c.truncate(3).is_err());
-    }
-
-    #[test]
-    fn paged_allocator_backpressure() {
-        let mut a = PagedAllocator::new(4, 16);
-        let mut t1 = BlockTable::default();
-        let mut t2 = BlockTable::default();
-        a.grow(&mut t1, 33).unwrap(); // 3 blocks
-        assert_eq!(a.free_blocks(), 1);
-        assert!(a.grow(&mut t2, 17).is_err()); // needs 2, only 1 free
-        assert_eq!(t2.blocks.len(), 0);
-        a.release(&mut t1);
-        assert_eq!(a.free_blocks(), 4);
-        a.grow(&mut t2, 17).unwrap();
-        assert_eq!(a.used_blocks(), 2);
     }
 
     #[test]
@@ -524,13 +804,19 @@ mod tests {
     }
 
     #[test]
-    fn grow_is_idempotent_within_block() {
-        let mut a = PagedAllocator::new(4, 16);
-        let mut t = BlockTable::default();
-        a.grow(&mut t, 5).unwrap();
-        a.grow(&mut t, 10).unwrap();
-        assert_eq!(t.blocks.len(), 1);
-        a.grow(&mut t, 17).unwrap();
-        assert_eq!(t.blocks.len(), 2);
+    fn kv_store_facade_matches_lane_pool() {
+        let mut s = KvStore::lanes(1, 8, 1, 2, 2);
+        assert_eq!((s.capacity(), s.in_use()), (2, 0));
+        let a = s.acquire(&[1, 2], 8).unwrap();
+        assert!(s.can_admit(&[1, 2], 8));
+        let b = s.acquire(&[3], 8).unwrap();
+        assert!(!s.can_admit(&[4], 8), "full lane store must backpressure");
+        assert_eq!(s.ctx_len(a), 0);
+        assert_eq!(s.seq_remaining(a), 8);
+        let st = s.page_stats();
+        assert_eq!((st.live, st.free, st.shared), (2, 0, 0));
+        s.release(a);
+        s.release(b);
+        assert_eq!(s.in_use(), 0);
     }
 }

@@ -1,0 +1,970 @@
+//! Paged KV pool: fixed-size refcounted pages with copy-on-write prefix
+//! sharing (vLLM-style, adapted to this repo's shared-context caches).
+//!
+//! Physical layout: a page holds `page_size` consecutive positions of ONE
+//! sequence's KV, shaped `(layers, page_size, heads, head_dim)` f32
+//! row-major per buffer. A sequence is a page table (ordered page
+//! indices) plus a committed length; position `p` lives in table entry
+//! `p / page_size` at page-local offset `p % page_size`.
+//!
+//! Sharing: when a page becomes FULL and its tokens are known, it is
+//! *sealed* — registered in a prefix index keyed by the chained hash of
+//! ALL tokens from position 0 through the page's end (KV at a position
+//! depends on the entire prefix, so only whole-prefix matches may share).
+//! A later admission whose prompt walks the same chain attaches those
+//! pages with a refcount bump instead of duplicating their bytes. Lookup
+//! candidates are verified by parent-hash linkage AND a stored-token
+//! compare of the page's own span, so a hash collision cannot splice two
+//! different prefixes together.
+//!
+//! Copy-on-write: pages are only ever written at positions `>= len`, so a
+//! shared page is immutable while any co-owner's committed length covers
+//! it. The engine path is append-only and never triggers COW; rolling
+//! back (`truncate`) into a shared region and then diverging does — the
+//! writer clones the page into a private copy (charged against the
+//! sequence's own reservation) and drops one reference.
+//!
+//! Admission is *reservation-based*: `acquire` charges the sequence for
+//! every page it could ever need (`pages_for(max_pos)` minus attached
+//! shared pages) up front, so a successful admission can never fail page
+//! allocation mid-decode — the invariant `live + reserved <= budget`
+//! holds at all times and `can_admit` is the scheduler's backpressure
+//! signal in units of distinct pages, not worst-case lanes.
+
+use std::collections::{HashMap, VecDeque};
+
+use anyhow::{anyhow, ensure, Result};
+
+use super::{KvRead, KvWrite, PageStats};
+use crate::tokenizer::TokenId;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+#[inline]
+fn hash_push(h: u64, t: TokenId) -> u64 {
+    (h ^ (t as u64).wrapping_add(0x9E37_79B9)).wrapping_mul(FNV_PRIME)
+}
+
+/// Chained hash of a whole token prefix (root = FNV offset basis).
+fn chain_hash(tokens: &[TokenId]) -> u64 {
+    tokens.iter().fold(FNV_OFFSET, |h, &t| hash_push(h, t))
+}
+
+/// One fixed-size page of KV positions.
+#[derive(Debug)]
+struct Page {
+    /// key buffer, (layers, page_size, heads, head_dim) row-major
+    k: Vec<f32>,
+    /// value buffer, same layout
+    v: Vec<f32>,
+    /// sequences referencing this page (0 = free or cached)
+    refs: usize,
+    /// chained boundary hash through this page's end (valid when sealed)
+    key: u64,
+    /// chained boundary hash through the PREVIOUS page's end
+    parent: u64,
+    /// this page's own tokens (valid when sealed)
+    toks: Vec<TokenId>,
+    /// registered in the prefix index
+    sealed: bool,
+    /// sitting in the reclaimable cache (refs == 0, sealed)
+    cached: bool,
+    /// generation stamp; invalidates stale cache-queue entries
+    stamp: u64,
+}
+
+/// One sequence's page table + bookkeeping.
+#[derive(Debug)]
+struct PagedSeq {
+    /// page indices covering positions, in order
+    table: Vec<usize>,
+    /// committed positions
+    len: usize,
+    /// admission-time position reservation (never exceeded by design)
+    max_pos: usize,
+    /// page credits this sequence may still materialize
+    reserve: usize,
+    /// positions covered by shared pages attached at admission
+    shared_len: usize,
+    /// token mirror of committed positions (drives sealing)
+    tokens: Vec<TokenId>,
+    /// leading pages of `table` that are sealed/registered
+    sealed: usize,
+    /// chained hash of tokens[0 .. sealed * page_size]
+    boundary: u64,
+}
+
+/// Paged KV pool with refcounted copy-on-write prefix sharing.
+///
+/// See the module docs for the design; the engine reaches it through
+/// [`super::KvStore::Paged`] and per-sequence [`PagedSeqView`] /
+/// [`PagedSeqWriter`] borrows.
+#[derive(Debug)]
+pub struct PagedKvPool {
+    layers: usize,
+    max_len: usize,
+    heads: usize,
+    head_dim: usize,
+    page_size: usize,
+    /// hard cap on materialized pages
+    budget: usize,
+    pages: Vec<Page>,
+    free: Vec<usize>,
+    /// reclaimable sealed pages (refs == 0), oldest first, with stamps
+    cached: VecDeque<(usize, u64)>,
+    /// chained boundary hash -> sealed page candidates
+    index: HashMap<u64, Vec<usize>>,
+    /// pages with refs > 0
+    live: usize,
+    /// outstanding page credits across all sequences
+    reserved: usize,
+    seqs: Vec<Option<PagedSeq>>,
+    free_sids: Vec<usize>,
+    active: usize,
+    seq_cap: usize,
+    prefix_hits: u64,
+    next_stamp: u64,
+}
+
+impl PagedKvPool {
+    /// A pool of up to `n_pages` pages of `page_size` positions for a
+    /// `(layers, max_len, heads, head_dim)` model, admitting at most
+    /// `seq_cap` concurrent sequences.
+    pub fn new(
+        layers: usize,
+        max_len: usize,
+        heads: usize,
+        head_dim: usize,
+        page_size: usize,
+        n_pages: usize,
+        seq_cap: usize,
+    ) -> Self {
+        assert!(page_size > 0, "page size must be positive");
+        assert!(n_pages > 0, "pool needs at least one page");
+        PagedKvPool {
+            layers,
+            max_len,
+            heads,
+            head_dim,
+            page_size,
+            budget: n_pages,
+            pages: Vec::new(),
+            free: Vec::new(),
+            cached: VecDeque::new(),
+            index: HashMap::new(),
+            live: 0,
+            reserved: 0,
+            seqs: Vec::new(),
+            free_sids: Vec::new(),
+            active: 0,
+            seq_cap: seq_cap.max(1),
+            prefix_hits: 0,
+            next_stamp: 0,
+        }
+    }
+
+    /// Positions per page.
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// Hard cap on materialized pages.
+    pub fn page_budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Pages needed to hold `positions`.
+    pub fn pages_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.page_size)
+    }
+
+    /// Bytes one page pins (key + value buffers).
+    pub fn page_bytes(&self) -> usize {
+        2 * self.layers * self.page_size * self.heads * self.head_dim
+            * std::mem::size_of::<f32>()
+    }
+
+    /// Bytes currently materialized (live + reclaimable cached pages).
+    pub fn memory_bytes(&self) -> usize {
+        self.pages.len() * self.page_bytes()
+    }
+
+    /// Admission concurrency cap.
+    pub fn seq_cap(&self) -> usize {
+        self.seq_cap
+    }
+
+    /// Scale the admission concurrency cap (floored at 1); resident
+    /// sequences are never evicted, so shrinking below `in_use` only
+    /// stops new admissions until sequences retire.
+    pub fn set_seq_cap(&mut self, target: usize) -> usize {
+        self.seq_cap = target.max(1);
+        self.seq_cap
+    }
+
+    /// Sequences currently resident.
+    pub fn in_use(&self) -> usize {
+        self.active
+    }
+
+    fn stamp(&mut self) -> u64 {
+        self.next_stamp += 1;
+        self.next_stamp
+    }
+
+    /// Walk the prompt's full pages down the prefix index: returns the
+    /// longest chain of resident sealed pages matching the prompt prefix
+    /// exactly (parent-linked hashes + stored-token verification).
+    fn probe(&self, prompt: &[TokenId]) -> Vec<usize> {
+        let psz = self.page_size;
+        let mut found = Vec::new();
+        let mut boundary = FNV_OFFSET;
+        let mut j = 0usize;
+        while (j + 1) * psz <= prompt.len() {
+            let span = &prompt[j * psz..(j + 1) * psz];
+            let key = span.iter().fold(boundary, |h, &t| hash_push(h, t));
+            let hit = self.index.get(&key).and_then(|cands| {
+                cands.iter().copied().find(|&i| {
+                    let p = &self.pages[i];
+                    p.sealed && p.parent == boundary && p.toks == span
+                })
+            });
+            match hit {
+                Some(i) => {
+                    found.push(i);
+                    boundary = key;
+                    j += 1;
+                }
+                None => break,
+            }
+        }
+        found
+    }
+
+    /// Whether a sequence with this prompt and `max_pos` reservation can
+    /// be admitted right now: a free sequence slot AND enough page budget
+    /// for its distinct (non-shared) pages.
+    pub fn can_admit(&self, prompt: &[TokenId], max_pos: usize) -> bool {
+        if self.active >= self.seq_cap {
+            return false;
+        }
+        let shared = self.probe(prompt);
+        let revive = shared.iter().filter(|&&i| self.pages[i].refs == 0).count();
+        let need = self.pages_for(max_pos.min(self.max_len)).saturating_sub(shared.len());
+        self.live + self.reserved + need + revive <= self.budget
+    }
+
+    /// Admit a sequence: attach resident pages matching the prompt prefix
+    /// and reserve credits for every page it could still need. `None` is
+    /// backpressure. The returned id is valid until [`Self::release`].
+    pub fn acquire(&mut self, prompt: &[TokenId], max_pos: usize) -> Option<usize> {
+        let max_pos = max_pos.min(self.max_len);
+        if !self.can_admit(prompt, max_pos) {
+            return None;
+        }
+        let shared = self.probe(prompt);
+        let need = self.pages_for(max_pos).saturating_sub(shared.len());
+        let mut boundary = FNV_OFFSET;
+        for &i in &shared {
+            let s = self.stamp();
+            let p = &mut self.pages[i];
+            if p.refs == 0 {
+                self.live += 1;
+                p.cached = false;
+                p.stamp = s;
+            }
+            p.refs += 1;
+            boundary = p.key;
+        }
+        if !shared.is_empty() {
+            self.prefix_hits += 1;
+        }
+        self.reserved += need;
+        // attached pages are already sealed/registered: adopt them as this
+        // sequence's sealed prefix
+        let seq = PagedSeq {
+            shared_len: shared.len() * self.page_size,
+            sealed: shared.len(),
+            table: shared,
+            len: 0,
+            max_pos,
+            reserve: need,
+            tokens: prompt.to_vec(),
+            boundary,
+        };
+        let sid = match self.free_sids.pop() {
+            Some(s) => {
+                self.seqs[s] = Some(seq);
+                s
+            }
+            None => {
+                self.seqs.push(Some(seq));
+                self.seqs.len() - 1
+            }
+        };
+        self.active += 1;
+        Some(sid)
+    }
+
+    /// Retire a sequence: drop one reference from each of its pages
+    /// (sealed pages with no owners left stay materialized in the
+    /// reclaim cache for future prefix hits) and return its unused
+    /// reservation. Idempotent.
+    pub fn release(&mut self, sid: usize) {
+        let Some(seq) = self.seqs.get_mut(sid).and_then(Option::take) else {
+            return;
+        };
+        for &i in &seq.table {
+            self.unref_page(i);
+        }
+        self.reserved -= seq.reserve;
+        self.free_sids.push(sid);
+        self.active -= 1;
+    }
+
+    fn unref_page(&mut self, i: usize) {
+        let s = self.stamp();
+        let p = &mut self.pages[i];
+        debug_assert!(p.refs > 0, "unref of unreferenced page");
+        p.refs -= 1;
+        if p.refs == 0 {
+            self.live -= 1;
+            if p.sealed {
+                p.cached = true;
+                p.stamp = s;
+                self.cached.push_back((i, s));
+            } else {
+                self.free.push(i);
+            }
+        }
+    }
+
+    /// Materialize one blank page: free list first, then fresh
+    /// allocation within budget, then eviction of the oldest reclaimable
+    /// cached page (unregistering it from the prefix index).
+    fn alloc_page(&mut self) -> Result<usize> {
+        if let Some(i) = self.free.pop() {
+            self.reset_page(i);
+            return Ok(i);
+        }
+        if self.pages.len() < self.budget {
+            let n = self.layers * self.page_size * self.heads * self.head_dim;
+            self.pages.push(Page {
+                k: vec![0.0; n],
+                v: vec![0.0; n],
+                refs: 0,
+                key: 0,
+                parent: 0,
+                toks: Vec::new(),
+                sealed: false,
+                cached: false,
+                stamp: 0,
+            });
+            return Ok(self.pages.len() - 1);
+        }
+        while let Some((i, stamp)) = self.cached.pop_front() {
+            let p = &self.pages[i];
+            if p.cached && p.refs == 0 && p.stamp == stamp {
+                self.unregister_page(i);
+                self.reset_page(i);
+                return Ok(i);
+            }
+            // stale entry: the page was revived or already recycled
+        }
+        Err(anyhow!(
+            "out of KV pages: {} live + {} reserved of {}",
+            self.live,
+            self.reserved,
+            self.budget
+        ))
+    }
+
+    fn reset_page(&mut self, i: usize) {
+        let s = self.stamp();
+        let p = &mut self.pages[i];
+        p.k.fill(0.0);
+        p.v.fill(0.0);
+        p.refs = 0;
+        p.sealed = false;
+        p.cached = false;
+        p.toks.clear();
+        p.stamp = s;
+    }
+
+    fn unregister_page(&mut self, i: usize) {
+        let key = self.pages[i].key;
+        if let Some(v) = self.index.get_mut(&key) {
+            v.retain(|&c| c != i);
+            if v.is_empty() {
+                self.index.remove(&key);
+            }
+        }
+        self.pages[i].sealed = false;
+        self.pages[i].cached = false;
+    }
+
+    /// Make position `pos` of `sid` writable: extend the table with a
+    /// fresh page (consuming reservation), copy-on-write a shared page,
+    /// or unseal a registered exclusive page about to change.
+    fn ensure_pos_writable(&mut self, sid: usize, pos: usize) -> Result<()> {
+        let psz = self.page_size;
+        let j = pos / psz;
+        loop {
+            let seq = self.seqs[sid].as_ref().expect("writable: released seq");
+            if seq.table.len() > j {
+                break;
+            }
+            ensure!(
+                self.seqs[sid].as_ref().unwrap().reserve > 0,
+                "KV reservation exhausted (pos {pos} beyond max_pos {})",
+                self.seqs[sid].as_ref().unwrap().max_pos
+            );
+            let i = self.alloc_page()?;
+            self.pages[i].refs = 1;
+            self.live += 1;
+            self.reserved -= 1;
+            let seq = self.seqs[sid].as_mut().unwrap();
+            seq.reserve -= 1;
+            seq.table.push(i);
+        }
+        let i = self.seqs[sid].as_ref().unwrap().table[j];
+        if self.pages[i].refs > 1 {
+            // copy-on-write: diverging from a shared page
+            ensure!(
+                self.seqs[sid].as_ref().unwrap().reserve > 0,
+                "KV reservation exhausted for copy-on-write at pos {pos}"
+            );
+            let n = self.alloc_page()?;
+            let (k, v) = (self.pages[i].k.clone(), self.pages[i].v.clone());
+            self.pages[n].k.copy_from_slice(&k);
+            self.pages[n].v.copy_from_slice(&v);
+            self.pages[n].refs = 1;
+            self.live += 1;
+            self.reserved -= 1;
+            self.pages[i].refs -= 1;
+            let seq = self.seqs[sid].as_mut().unwrap();
+            seq.reserve -= 1;
+            seq.table[j] = n;
+            self.rewind_seal(sid, j);
+        } else if self.pages[i].sealed {
+            // exclusive but registered: its content is about to change
+            self.unregister_page(i);
+            self.rewind_seal(sid, j);
+        }
+        Ok(())
+    }
+
+    /// Shrink a sequence's sealed prefix below page `j` and recompute its
+    /// boundary hash from the token mirror.
+    fn rewind_seal(&mut self, sid: usize, j: usize) {
+        let psz = self.page_size;
+        let seq = self.seqs[sid].as_mut().unwrap();
+        if seq.sealed > j {
+            seq.sealed = j;
+            let upto = (j * psz).min(seq.tokens.len());
+            seq.boundary = chain_hash(&seq.tokens[..upto]);
+        }
+    }
+
+    /// Seal every newly-full page whose tokens are known: register it in
+    /// the prefix index so later admissions can share it.
+    fn try_seal(&mut self, sid: usize) {
+        let psz = self.page_size;
+        loop {
+            let seq = self.seqs[sid].as_ref().expect("seal: released seq");
+            let covered = seq.len.min(seq.tokens.len());
+            let full = (covered / psz).min(seq.table.len());
+            if seq.sealed >= full {
+                break;
+            }
+            let j = seq.sealed;
+            let i = seq.table[j];
+            let boundary = seq.boundary;
+            if self.pages[i].sealed {
+                // attached shared page (or re-adopted after rollback):
+                // already registered, just adopt its key
+                let key = self.pages[i].key;
+                let seq = self.seqs[sid].as_mut().unwrap();
+                seq.boundary = key;
+                seq.sealed += 1;
+                continue;
+            }
+            let span: Vec<TokenId> =
+                self.seqs[sid].as_ref().unwrap().tokens[j * psz..(j + 1) * psz].to_vec();
+            let key = span.iter().fold(boundary, |h, &t| hash_push(h, t));
+            let p = &mut self.pages[i];
+            p.parent = boundary;
+            p.key = key;
+            p.toks = span;
+            p.sealed = true;
+            self.index.entry(key).or_default().push(i);
+            let seq = self.seqs[sid].as_mut().unwrap();
+            seq.boundary = key;
+            seq.sealed += 1;
+        }
+    }
+
+    /// Reconcile the token mirror with the engine's authoritative stream
+    /// (prompt + committed tokens) and seal any newly-full pages.
+    pub fn sync_tokens(&mut self, sid: usize, tokens: &[TokenId]) {
+        let seq = self.seqs[sid].as_mut().expect("sync of released seq");
+        let n = seq.len.min(tokens.len());
+        seq.tokens.clear();
+        seq.tokens.extend_from_slice(&tokens[..n]);
+        self.try_seal(sid);
+    }
+
+    /// Committed positions of one sequence.
+    pub fn seq_len(&self, sid: usize) -> usize {
+        self.seqs[sid].as_ref().expect("len of released seq").len
+    }
+
+    /// Positions one sequence may still commit. Deliberately the MODEL
+    /// bound (`max_len - len`), identical to lane mode, so shape planning
+    /// sees the same room either way; the admission reservation is sized
+    /// to never bind before it.
+    pub fn seq_remaining(&self, sid: usize) -> usize {
+        self.max_len - self.seq_len(sid)
+    }
+
+    /// Borrow one sequence's read view.
+    pub fn view(&self, sid: usize) -> PagedSeqView<'_> {
+        debug_assert!(self.seqs[sid].is_some(), "view of released seq");
+        PagedSeqView { pool: self, sid }
+    }
+
+    /// Borrow one sequence's write view.
+    pub fn writer(&mut self, sid: usize) -> PagedSeqWriter<'_> {
+        debug_assert!(self.seqs[sid].is_some(), "writer of released seq");
+        PagedSeqWriter { pool: self, sid }
+    }
+
+    /// Page accounting snapshot for metrics/admission dashboards.
+    pub fn page_stats(&self) -> PageStats {
+        PageStats {
+            live: self.live as u64,
+            free: (self.budget - self.live - self.reserved) as u64,
+            shared: self.pages.iter().filter(|p| p.refs > 1).count() as u64,
+            prefix_hits: self.prefix_hits,
+        }
+    }
+
+    /// Exhaustive invariant check for tests: refcounts match the union of
+    /// page tables, accounting counters match reality, and the budget
+    /// invariant holds.
+    pub fn audit(&self) -> Result<()> {
+        let mut refs = vec![0usize; self.pages.len()];
+        let mut reserve_sum = 0usize;
+        let mut active = 0usize;
+        for seq in self.seqs.iter().flatten() {
+            active += 1;
+            reserve_sum += seq.reserve;
+            for &i in &seq.table {
+                refs[i] += 1;
+            }
+            ensure!(
+                seq.table.len() >= seq.len.div_ceil(self.page_size),
+                "seq table too short for len {}",
+                seq.len
+            );
+        }
+        ensure!(active == self.active, "active {} != counted {active}", self.active);
+        ensure!(
+            reserve_sum == self.reserved,
+            "reserved {} != sum of seq reserves {reserve_sum}",
+            self.reserved
+        );
+        for (i, p) in self.pages.iter().enumerate() {
+            ensure!(
+                p.refs == refs[i],
+                "page {i}: refs {} but {} table references",
+                p.refs,
+                refs[i]
+            );
+            if p.cached {
+                ensure!(p.refs == 0 && p.sealed, "page {i}: cached but refs/sealed wrong");
+            }
+        }
+        for &i in &self.free {
+            ensure!(refs[i] == 0, "page {i} on free list but referenced");
+            ensure!(!self.pages[i].cached, "page {i} free AND cached");
+        }
+        let live = refs.iter().filter(|&&r| r > 0).count();
+        ensure!(live == self.live, "live {} != counted {live}", self.live);
+        ensure!(
+            self.live + self.reserved <= self.budget,
+            "budget invariant violated: {} live + {} reserved > {}",
+            self.live,
+            self.reserved,
+            self.budget
+        );
+        Ok(())
+    }
+
+    fn k_slice(&self, sid: usize, layer: usize, pos: usize) -> &[f32] {
+        let (i, off, ps) = self.locate(sid, layer, pos);
+        &self.pages[i].k[off..off + ps]
+    }
+
+    fn v_slice(&self, sid: usize, layer: usize, pos: usize) -> &[f32] {
+        let (i, off, ps) = self.locate(sid, layer, pos);
+        &self.pages[i].v[off..off + ps]
+    }
+
+    fn locate(&self, sid: usize, layer: usize, pos: usize) -> (usize, usize, usize) {
+        let psz = self.page_size;
+        let ps = self.heads * self.head_dim;
+        let seq = self.seqs[sid].as_ref().expect("read of released seq");
+        let i = seq.table[pos / psz];
+        let off = layer * psz * ps + (pos % psz) * ps;
+        (i, off, ps)
+    }
+
+    /// Dense-install a prefilled cache into a sequence's pages. Positions
+    /// below the attached shared prefix are NOT rewritten — the shared
+    /// pages already hold exactly those bytes (token-verified at attach).
+    fn seq_install(
+        &mut self,
+        sid: usize,
+        k_data: Vec<f32>,
+        v_data: Vec<f32>,
+        len: usize,
+    ) -> Result<()> {
+        let ps = self.heads * self.head_dim;
+        let numel = self.layers * self.max_len * ps;
+        if k_data.len() != numel || v_data.len() != numel {
+            return Err(anyhow!(
+                "cache install size mismatch: got {} / {}, want {}",
+                k_data.len(),
+                v_data.len(),
+                numel
+            ));
+        }
+        if len > self.max_len {
+            return Err(anyhow!("cache len {len} > max_len {}", self.max_len));
+        }
+        let start = self.seqs[sid].as_ref().expect("install into released seq").shared_len;
+        let psz = self.page_size;
+        for pos in start.min(len)..len {
+            self.ensure_pos_writable(sid, pos)?;
+            let seq = self.seqs[sid].as_ref().unwrap();
+            let i = seq.table[pos / psz];
+            for layer in 0..self.layers {
+                let src = layer * self.max_len * ps + pos * ps;
+                let dst = layer * psz * ps + (pos % psz) * ps;
+                self.pages[i].k[dst..dst + ps].copy_from_slice(&k_data[src..src + ps]);
+                self.pages[i].v[dst..dst + ps].copy_from_slice(&v_data[src..src + ps]);
+            }
+        }
+        self.seqs[sid].as_mut().unwrap().len = len;
+        self.try_seal(sid);
+        Ok(())
+    }
+
+    /// Commit the accepted row of a step tail into a sequence's pages
+    /// (`tail` = (k_tail, v_tail), `shape` = (k_rows, w1, row, count)).
+    fn seq_commit(
+        &mut self,
+        sid: usize,
+        tail: (&[f32], &[f32]),
+        shape: (usize, usize, usize, usize),
+    ) -> Result<()> {
+        let (k_tail, v_tail) = tail;
+        let (k_rows, w1, row, count) = shape;
+        if row >= k_rows || count > w1 {
+            return Err(anyhow!("bad commit row={row}/{k_rows} count={count}/{w1}"));
+        }
+        let len = self.seq_len(sid);
+        if len + count > self.max_len {
+            return Err(anyhow!(
+                "cache overflow: len {len} + commit {count} > max_len {}",
+                self.max_len
+            ));
+        }
+        let ps = self.heads * self.head_dim;
+        let expect = self.layers * k_rows * w1 * ps;
+        if k_tail.len() != expect || v_tail.len() != expect {
+            return Err(anyhow!("tail size mismatch: got {}, want {expect}", k_tail.len()));
+        }
+        let psz = self.page_size;
+        for d in 0..count {
+            let pos = len + d;
+            self.ensure_pos_writable(sid, pos)?;
+            let seq = self.seqs[sid].as_ref().unwrap();
+            let i = seq.table[pos / psz];
+            for layer in 0..self.layers {
+                let src = ((layer * k_rows + row) * w1 + d) * ps;
+                let dst = layer * psz * ps + (pos % psz) * ps;
+                self.pages[i].k[dst..dst + ps].copy_from_slice(&k_tail[src..src + ps]);
+                self.pages[i].v[dst..dst + ps].copy_from_slice(&v_tail[src..src + ps]);
+            }
+        }
+        self.seqs[sid].as_mut().unwrap().len = len + count;
+        Ok(())
+    }
+
+    /// Rollback: drop pages wholly past the new length (refunding
+    /// reservation for exclusively-owned ones) and rewind the sealed
+    /// prefix. A partially-cut sealed page stays registered — its content
+    /// is still valid for sharing until something overwrites it.
+    fn seq_truncate(&mut self, sid: usize, new_len: usize) -> Result<()> {
+        let len = self.seq_len(sid);
+        if new_len > len {
+            return Err(anyhow!("cannot truncate {len} -> {new_len}"));
+        }
+        let psz = self.page_size;
+        let keep = new_len.div_ceil(psz);
+        loop {
+            let seq = self.seqs[sid].as_mut().unwrap();
+            if seq.table.len() <= keep {
+                break;
+            }
+            let i = seq.table.pop().unwrap();
+            let exclusive = self.pages[i].refs == 1;
+            self.unref_page(i);
+            let seq = self.seqs[sid].as_mut().unwrap();
+            if exclusive {
+                // the page was charged to this sequence: credit it back
+                seq.reserve += 1;
+                self.reserved += 1;
+            }
+        }
+        let seq = self.seqs[sid].as_mut().unwrap();
+        seq.len = new_len;
+        seq.tokens.truncate(new_len);
+        let sealed_cap = (new_len / psz).min(seq.table.len());
+        if seq.sealed > sealed_cap {
+            seq.sealed = sealed_cap;
+            let upto = (sealed_cap * psz).min(seq.tokens.len());
+            seq.boundary = chain_hash(&seq.tokens[..upto]);
+        }
+        Ok(())
+    }
+}
+
+/// Immutable per-sequence view of a [`PagedKvPool`] ([`KvRead`]).
+#[derive(Debug, Clone, Copy)]
+pub struct PagedSeqView<'a> {
+    pool: &'a PagedKvPool,
+    sid: usize,
+}
+
+macro_rules! impl_paged_read {
+    ($ty:ty) => {
+        impl KvRead for $ty {
+            fn layers(&self) -> usize {
+                self.pool.layers
+            }
+            fn heads(&self) -> usize {
+                self.pool.heads
+            }
+            fn head_dim(&self) -> usize {
+                self.pool.head_dim
+            }
+            fn max_ctx(&self) -> usize {
+                self.pool.max_len
+            }
+            fn ctx_len(&self) -> usize {
+                self.pool.seq_len(self.sid)
+            }
+            fn k_at(&self, layer: usize, pos: usize) -> &[f32] {
+                self.pool.k_slice(self.sid, layer, pos)
+            }
+            fn v_at(&self, layer: usize, pos: usize) -> &[f32] {
+                self.pool.v_slice(self.sid, layer, pos)
+            }
+        }
+    };
+}
+
+impl_paged_read!(PagedSeqView<'_>);
+impl_paged_read!(PagedSeqWriter<'_>);
+
+/// Mutable per-sequence view of a [`PagedKvPool`] ([`KvWrite`]).
+#[derive(Debug)]
+pub struct PagedSeqWriter<'a> {
+    pool: &'a mut PagedKvPool,
+    sid: usize,
+}
+
+impl KvWrite for PagedSeqWriter<'_> {
+    fn install(&mut self, k_data: Vec<f32>, v_data: Vec<f32>, len: usize) -> Result<()> {
+        self.pool.seq_install(self.sid, k_data, v_data, len)
+    }
+    fn commit_tail(
+        &mut self,
+        k_tail: &[f32],
+        v_tail: &[f32],
+        k_rows: usize,
+        w1: usize,
+        row: usize,
+        count: usize,
+    ) -> Result<()> {
+        self.pool.seq_commit(self.sid, (k_tail, v_tail), (k_rows, w1, row, count))
+    }
+    fn truncate(&mut self, len: usize) -> Result<()> {
+        self.pool.seq_truncate(self.sid, len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::SharedKvCache;
+
+    /// Dense install buffers whose values encode (layer, pos, elem) from
+    /// the token ids, mirroring the reference backend's cache honesty.
+    fn dense(tokens: &[TokenId], layers: usize, max_len: usize, ps: usize) -> (Vec<f32>, Vec<f32>) {
+        let n = layers * max_len * ps;
+        let (mut k, mut v) = (vec![0.0f32; n], vec![0.0f32; n]);
+        for layer in 0..layers {
+            for (pos, &t) in tokens.iter().enumerate() {
+                let base = layer * max_len * ps + pos * ps;
+                for e in 0..ps {
+                    k[base + e] = t as f32 + e as f32;
+                    v[base + e] = -(t as f32) - 1.0 - e as f32;
+                }
+            }
+        }
+        (k, v)
+    }
+
+    fn pool() -> PagedKvPool {
+        // 2 layers, max_len 32, 1 head, dim 2, pages of 4 positions
+        PagedKvPool::new(2, 32, 1, 2, 4, 16, 8)
+    }
+
+    #[test]
+    fn install_then_gather_matches_lane_oracle() {
+        let mut p = pool();
+        let prompt: Vec<TokenId> = (10..23).collect(); // 13 tokens
+        let sid = p.acquire(&prompt, 20).unwrap();
+        let (k, v) = dense(&prompt, 2, 32, 2);
+        let mut oracle = SharedKvCache::new(2, 32, 1, 2);
+        SharedKvCache::install(&mut oracle, k.clone(), v.clone(), prompt.len()).unwrap();
+        p.writer(sid).install(k, v, prompt.len()).unwrap();
+        let (gk, gv) = p.view(sid).gather();
+        let (ok_, ov) = KvRead::gather(&oracle);
+        assert_eq!(gk, ok_);
+        assert_eq!(gv, ov);
+        assert_eq!(p.view(sid).ctx_len(), 13);
+        p.audit().unwrap();
+    }
+
+    #[test]
+    fn second_admission_shares_prompt_prefix_pages() {
+        let mut p = pool();
+        let prompt: Vec<TokenId> = (0..12).collect(); // 3 full pages
+        let (k, v) = dense(&prompt, 2, 32, 2);
+        let a = p.acquire(&prompt, 16).unwrap();
+        p.writer(a).install(k.clone(), v.clone(), prompt.len()).unwrap();
+        let live_before = p.page_stats().live;
+        let b = p.acquire(&prompt, 16).unwrap();
+        assert_eq!(p.page_stats().prefix_hits, 1);
+        p.writer(b).install(k, v, prompt.len()).unwrap();
+        // the 3 full prompt pages are shared and cover the whole prompt:
+        // b's install materializes no new page at all
+        assert_eq!(p.page_stats().shared, 3);
+        assert_eq!(p.page_stats().live, live_before, "prefix hit duplicated pages");
+        let (ga, _) = p.view(a).gather();
+        let (gb, _) = p.view(b).gather();
+        assert_eq!(ga, gb);
+        p.audit().unwrap();
+        p.release(a);
+        p.release(b);
+        p.audit().unwrap();
+        assert_eq!(p.in_use(), 0);
+    }
+
+    #[test]
+    fn cow_on_divergence_after_rollback_preserves_the_other_sequence() {
+        let mut p = pool();
+        let prompt: Vec<TokenId> = (0..8).collect(); // 2 full pages
+        let (k, v) = dense(&prompt, 2, 32, 2);
+        let a = p.acquire(&prompt, 16).unwrap();
+        p.writer(a).install(k.clone(), v.clone(), prompt.len()).unwrap();
+        let b = p.acquire(&prompt, 16).unwrap();
+        p.writer(b).install(k, v, prompt.len()).unwrap();
+        assert_eq!(p.page_stats().shared, 2);
+        let (ka_before, va_before) = p.view(a).gather();
+        // b rolls back INTO the shared region and rewrites: must COW
+        p.writer(b).truncate(6).unwrap();
+        let n = 2 * 2 * 2; // layers * k_rows * w1 * pos_stride
+        let tail: Vec<f32> = vec![99.0; n];
+        p.writer(b).commit_tail(&tail, &tail, 1, 2, 0, 2).unwrap();
+        let (ka_after, va_after) = p.view(a).gather();
+        assert_eq!(ka_before, ka_after, "shared page mutated through b's write");
+        assert_eq!(va_before, va_after);
+        assert_eq!(p.view(b).k_at(0, 6)[0], 99.0);
+        p.audit().unwrap();
+    }
+
+    #[test]
+    fn released_pages_stay_reclaimable_and_evictable() {
+        let mut p = PagedKvPool::new(1, 32, 1, 2, 4, 4, 8);
+        let prompt: Vec<TokenId> = (0..8).collect(); // 2 full pages
+        let (k, v) = dense(&prompt, 1, 32, 2);
+        let a = p.acquire(&prompt, 8).unwrap();
+        p.writer(a).install(k.clone(), v.clone(), 8).unwrap();
+        p.release(a);
+        p.audit().unwrap();
+        // pages survive in the reclaim cache: a re-admission hits them
+        let b = p.acquire(&prompt, 8).unwrap();
+        assert_eq!(p.page_stats().prefix_hits, 1);
+        p.writer(b).install(k.clone(), v.clone(), 8).unwrap();
+        p.release(b);
+        // a disjoint prompt needing all 4 pages evicts the cached ones
+        let other: Vec<TokenId> = (100..116).collect();
+        let (k2, v2) = dense(&other, 1, 32, 2);
+        let c = p.acquire(&other, 16).unwrap();
+        p.writer(c).install(k2, v2, 16).unwrap();
+        p.audit().unwrap();
+        // the old chain is gone from the index now
+        assert!(p.probe(&prompt).is_empty());
+    }
+
+    #[test]
+    fn admission_accounting_backpressures_on_distinct_pages() {
+        let mut p = PagedKvPool::new(1, 32, 1, 2, 4, 6, 8);
+        let shared: Vec<TokenId> = (0..8).collect(); // 2 full pages
+        let (k, v) = dense(&shared, 1, 32, 2);
+        // first admission: reserves 3 pages (max_pos 12)
+        let a = p.acquire(&shared, 12).unwrap();
+        p.writer(a).install(k.clone(), v.clone(), 8).unwrap();
+        // second shared admission only needs 1 distinct page
+        assert!(p.can_admit(&shared, 12));
+        let b = p.acquire(&shared, 12).unwrap();
+        // 3 + 1 charged of 6: a third shared admission still fits
+        assert!(p.can_admit(&shared, 12));
+        let c = p.acquire(&shared, 12).unwrap();
+        // but a DISJOINT prompt needing 3 pages does not (5 charged, 1 free)
+        let other: Vec<TokenId> = (50..58).collect();
+        assert!(!p.can_admit(&other, 12));
+        assert!(p.acquire(&other, 12).is_none());
+        p.audit().unwrap();
+        p.release(b);
+        p.release(c);
+        assert!(p.can_admit(&other, 12));
+        p.audit().unwrap();
+    }
+
+    #[test]
+    fn truncate_refunds_exclusive_pages_only() {
+        let mut p = pool();
+        let prompt: Vec<TokenId> = (0..10).collect();
+        let (k, v) = dense(&prompt, 2, 32, 2);
+        let a = p.acquire(&prompt, 16).unwrap(); // 4 pages reserved
+        p.writer(a).install(k, v, 10).unwrap(); // 3 pages materialized
+        let free0 = p.page_stats().free;
+        p.writer(a).truncate(2).unwrap(); // drops pages 1 and 2
+        assert_eq!(p.page_stats().free, free0, "refund moves credit, not budget");
+        p.audit().unwrap();
+        // the freed room is reusable: commits walk forward again
+        let n = 2 * 3 * 2; // layers * k_rows * w1 * pos_stride
+        let tail: Vec<f32> = vec![7.0; n];
+        p.writer(a).commit_tail(&tail, &tail, 1, 3, 0, 3).unwrap();
+        assert_eq!(p.seq_len(a), 5);
+        p.audit().unwrap();
+    }
+}

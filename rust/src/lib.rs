@@ -8,8 +8,10 @@
 //!   ([`draft`]), guess-and-verify engines ([`engine`]) — the per-sequence
 //!   [`engine::SpecDecoder`] and the continuous-batching
 //!   [`engine::BatchedEngine`] that verifies ALL active sequences in one
-//!   packed call per step over a pooled KV cache
-//!   ([`kvcache::KvPool`]) — KV-cache management ([`kvcache`]), request
+//!   packed call per step over a pooled KV cache — contiguous lanes
+//!   ([`kvcache::KvPool`]) or refcounted pages with copy-on-write prefix
+//!   sharing ([`kvcache::paged::PagedKvPool`]), byte-identical either
+//!   way — KV-cache management ([`kvcache`]), request
 //!   scheduling ([`scheduler`]), HTTP serving ([`server`]), the
 //!   accelerator cost model ([`costmodel`]) and the paper's bench harness
 //!   ([`bench`]).

@@ -58,6 +58,14 @@ COMMANDS:
       [--strategy mixed]      default strategy for requests that name none
       [--cache-per-query 8] [--cache-chain 12] [--cache-cap 100000]
                               session n-gram cache bounds
+      [--kv-page-size 0]      0 = contiguous KV lanes; N > 0 = paged KV
+                              pool (N positions per page) with refcounted
+                              copy-on-write prefix sharing — admission is
+                              charged in distinct pages, so shared-prefix
+                              requests pack more lanes into the same KV
+                              bytes (output streams are byte-identical)
+      [--kv-pages 0]          paged-pool page budget (0 = derive the
+                              lane-equivalent budget from --batch)
   bench <target>              reproduce a paper table/figure:
       fig1                    phase-transition heatmaps (cost model)
       fig2                    tokens/call vs top-k  [--model base]
@@ -80,6 +88,11 @@ COMMANDS:
                               vs the seed rescan (fails unless the
                               incremental path keeps a >=2x edge at
                               context >= 256) [--smoke]
+      prefix                  paged KV prefix sharing: admitted lanes per
+                              fixed KV budget, paged vs lane pool, on a
+                              shared-system-prompt workload (fails unless
+                              paged admits strictly more; also re-checks
+                              byte-identity) [--model base] [--smoke]
       all                     everything above
       common: [--prompts N] [--max-new N] [--ks 1,5,10] [--ws 2,6,10]
   ci-bench-check              bench-regression gate: compare the
@@ -249,6 +262,8 @@ fn serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
             q: args.get_usize("q", 1).map_err(|e| anyhow!(e))?,
             max_new_tokens: args.get_usize("max-tokens", 64).map_err(|e| anyhow!(e))?,
         },
+        kv_page_size: args.get_usize("kv-page-size", 0).map_err(|e| anyhow!(e))?,
+        kv_pages: args.get_usize("kv-pages", 0).map_err(|e| anyhow!(e))?,
     };
     let scheduler = Arc::new(Scheduler::start(&manifest, model, &cfg)?);
     let tokenizer = Arc::new(BpeTokenizer::load(&manifest.tokenizer_path)?);
@@ -326,6 +341,7 @@ fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
         // draft needs no model artifacts: it measures the drafting layer
         // itself on synthetic sequences/tables
         "draft" => bench::draft::run(args.has_flag("smoke")),
+        "prefix" => bench::prefix::run(&load()?, args.has_flag("smoke")),
         "table1" => {
             let models: Vec<String> = args
                 .get_or("models", "small,base,large")
@@ -348,6 +364,7 @@ fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
             bench::adaptive::run(&ctx, n_prompts, max_new, None, false)?;
             bench::elastic::run(&ctx, n_prompts, max_new, &bench::elastic::STATIC_CAPS, false)?;
             bench::pool::run(&ctx, n_prompts, max_new, bench::pool::ENGINE_CAP, false)?;
+            bench::prefix::run(&ctx, false)?;
             drop(ctx);
             for m in ["small", "base", "large"] {
                 let c = BenchCtx::load(manifest.clone(), m)?;

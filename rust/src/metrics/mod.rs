@@ -123,6 +123,17 @@ pub struct Metrics {
     /// requests that reached the engine but failed admission (no free
     /// lane after all, or a prefill error)
     pub admissions_failed: AtomicU64,
+    /// distinct KV pages currently live summed across paged engines
+    /// (stays 0 when engines run the contiguous lane pool)
+    pub kv_pages: AtomicU64,
+    /// unreserved KV pages still available summed across paged engines
+    pub kv_pages_free: AtomicU64,
+    /// KV pages referenced by more than one sequence (prefix sharing)
+    /// summed across paged engines
+    pub kv_pages_shared: AtomicU64,
+    /// admissions that attached at least one shared prefix page instead
+    /// of writing fresh KV for it
+    pub kv_prefix_hits: AtomicU64,
     /// per-`StrategyKind` step wins (indexed by `StrategyKind::index()`):
     /// which draft source actually won each verification call
     pub strategy_wins: [AtomicU64; StrategyKind::COUNT],
@@ -154,6 +165,15 @@ pub struct EngineGauges {
     pub heat: f64,
     /// bytes this engine's KV lane pool currently pins
     pub kv_bytes: u64,
+    /// distinct KV pages live in this engine's paged pool (lane mode
+    /// reports in-use lanes here, so the family reads one shape either way)
+    pub kv_pages: u64,
+    /// unreserved KV pages left in this engine's paged pool
+    pub kv_pages_free: u64,
+    /// KV pages on this engine shared by more than one sequence
+    pub kv_pages_shared: u64,
+    /// admissions on this engine that reused shared prefix pages
+    pub kv_prefix_hits: u64,
 }
 
 /// Default-able newtype around [`LatencyHist`] so [`Metrics`] can derive
@@ -241,10 +261,27 @@ impl Metrics {
             ));
             s.push_str(&format!("ngrammys_engine_heat{{engine=\"{e}\"}} {:.3}\n", g.heat));
             s.push_str(&format!("ngrammys_engine_kv_bytes{{engine=\"{e}\"}} {}\n", g.kv_bytes));
+            s.push_str(&format!("ngrammys_engine_kv_pages{{engine=\"{e}\"}} {}\n", g.kv_pages));
+            s.push_str(&format!(
+                "ngrammys_engine_kv_pages_free{{engine=\"{e}\"}} {}\n",
+                g.kv_pages_free
+            ));
+            s.push_str(&format!(
+                "ngrammys_engine_kv_pages_shared{{engine=\"{e}\"}} {}\n",
+                g.kv_pages_shared
+            ));
+            s.push_str(&format!(
+                "ngrammys_engine_kv_prefix_hits{{engine=\"{e}\"}} {}\n",
+                g.kv_prefix_hits
+            ));
         }
         s.push_str(&format!("ngrammys_derived_budget {}\n", c(&self.derived_budget)));
         s.push_str(&format!("ngrammys_admission_reorders {}\n", c(&self.admission_reorders)));
         s.push_str(&format!("ngrammys_admissions_failed {}\n", c(&self.admissions_failed)));
+        s.push_str(&format!("ngrammys_kv_pages {}\n", c(&self.kv_pages)));
+        s.push_str(&format!("ngrammys_kv_pages_free {}\n", c(&self.kv_pages_free)));
+        s.push_str(&format!("ngrammys_kv_pages_shared {}\n", c(&self.kv_pages_shared)));
+        s.push_str(&format!("ngrammys_kv_prefix_hits {}\n", c(&self.kv_prefix_hits)));
         s.push_str(&format!(
             "ngrammys_request_latency_ms_mean {:.3}\n",
             self.request_latency.mean_us() / 1e3
@@ -313,7 +350,7 @@ mod tests {
     fn render_exports_every_documented_field() {
         let m = Metrics::new();
         let r = m.render();
-        const FIELDS: [&str; 19] = [
+        const FIELDS: [&str; 23] = [
             "ngrammys_requests_total",
             "ngrammys_requests_rejected",
             "ngrammys_requests_completed",
@@ -329,6 +366,10 @@ mod tests {
             "ngrammys_derived_budget",
             "ngrammys_admission_reorders",
             "ngrammys_admissions_failed",
+            "ngrammys_kv_pages",
+            "ngrammys_kv_pages_free",
+            "ngrammys_kv_pages_shared",
+            "ngrammys_kv_prefix_hits",
             "ngrammys_request_latency_ms_mean",
             "ngrammys_request_latency_ms_p50",
             "ngrammys_request_latency_ms_p99",
@@ -384,6 +425,10 @@ mod tests {
                 speculative: 1,
                 heat: 1.5,
                 kv_bytes: 4096,
+                kv_pages: 6,
+                kv_pages_free: 2,
+                kv_pages_shared: 3,
+                kv_prefix_hits: 1,
             },
             EngineGauges {
                 id: 3,
@@ -394,6 +439,10 @@ mod tests {
                 speculative: 0,
                 heat: 0.0,
                 kv_bytes: 8192,
+                kv_pages: 0,
+                kv_pages_free: 0,
+                kv_pages_shared: 0,
+                kv_prefix_hits: 0,
             },
         ]);
         let r = m.render();
@@ -409,7 +458,12 @@ mod tests {
         assert!(r.contains("ngrammys_engine_speculative{engine=\"0\"} 1\n"));
         assert!(r.contains("ngrammys_engine_heat{engine=\"0\"} 1.500\n"));
         assert!(r.contains("ngrammys_engine_kv_bytes{engine=\"0\"} 4096\n"));
+        assert!(r.contains("ngrammys_engine_kv_pages{engine=\"0\"} 6\n"));
+        assert!(r.contains("ngrammys_engine_kv_pages_free{engine=\"0\"} 2\n"));
+        assert!(r.contains("ngrammys_engine_kv_pages_shared{engine=\"0\"} 3\n"));
+        assert!(r.contains("ngrammys_engine_kv_prefix_hits{engine=\"0\"} 1\n"));
         assert!(r.contains("ngrammys_engine_kv_bytes{engine=\"3\"} 8192\n"));
+        assert!(r.contains("ngrammys_engine_kv_pages{engine=\"3\"} 0\n"));
         assert!(r.contains("ngrammys_engine_lanes{engine=\"3\"} 4\n"));
         assert!(r.contains("ngrammys_engine_lanes_target{engine=\"3\"} 3\n"));
         assert!(r.contains("ngrammys_engine_active{engine=\"3\"} 4\n"));

@@ -29,7 +29,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::config::ModelArtifacts;
-use crate::kvcache::SharedKvCache;
+use crate::kvcache::{KvRead, KvWrite};
 use crate::tokenizer::TokenId;
 
 /// Output of one verification step (one sequence's block).
@@ -70,14 +70,19 @@ pub struct PrefillOutput {
 
 /// One sequence's slice of a packed multi-sequence verification call:
 /// `k` draft rows of `w+1` tokens (row-major) against that sequence's own
-/// KV lane. All blocks in one packed call share the same `w`.
+/// KV context. All blocks in one packed call share the same `w`.
+///
+/// The cache is behind the [`KvRead`] trait: a contiguous lane and a paged
+/// page-table view are both valid sources — backends read positions
+/// through `k_at`/`v_at` (or `as_contiguous`/`gather` for bulk transfer)
+/// and never see the storage organization.
 pub struct PackedBlock<'a> {
     /// draft rows in this block
     pub k: usize,
     /// row-major (k, w+1) token block
     pub tokens: &'a [TokenId],
-    /// this sequence's own KV lane
-    pub cache: &'a SharedKvCache,
+    /// this sequence's own KV context
+    pub cache: &'a dyn KvRead,
 }
 
 enum Backend {
@@ -162,7 +167,7 @@ impl ModelRuntime {
 
     /// Run prefill for `prompt`, filling `cache` and returning the first
     /// greedy next-token. The prompt must fit the largest prefill bucket.
-    pub fn prefill(&self, prompt: &[TokenId], cache: &mut SharedKvCache) -> Result<PrefillOutput> {
+    pub fn prefill(&self, prompt: &[TokenId], cache: &mut dyn KvWrite) -> Result<PrefillOutput> {
         if prompt.is_empty() {
             return Err(anyhow!("empty prompt"));
         }
@@ -185,7 +190,7 @@ impl ModelRuntime {
         k: usize,
         w: usize,
         tokens: &[TokenId],
-        cache: &SharedKvCache,
+        cache: &dyn KvRead,
     ) -> Result<StepOutput> {
         validate_block(k, w, tokens.len(), cache)?;
         self.warm_step(k, w)?;
@@ -244,17 +249,17 @@ impl ModelRuntime {
     }
 }
 
-fn validate_block(k: usize, w: usize, tok_len: usize, cache: &SharedKvCache) -> Result<()> {
+fn validate_block(k: usize, w: usize, tok_len: usize, cache: &dyn KvRead) -> Result<()> {
     let w1 = w + 1;
     if tok_len != k * w1 {
         return Err(anyhow!("tokens len {} != k*w1 {}", tok_len, k * w1));
     }
-    if cache.len + w1 > cache.max_len {
+    if cache.ctx_len() + w1 > cache.max_ctx() {
         return Err(anyhow!(
             "cache too full for step: len {} + w1 {} > {}",
-            cache.len,
+            cache.ctx_len(),
             w1,
-            cache.max_len
+            cache.max_ctx()
         ));
     }
     Ok(())
@@ -287,6 +292,7 @@ fn pick_backend(art: &ModelArtifacts) -> Result<Backend> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::SharedKvCache;
 
     #[test]
     fn step_output_row_indexing() {

@@ -25,7 +25,7 @@ use anyhow::{anyhow, Context, Result};
 use xla::{HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable, XlaComputation};
 
 use crate::config::ModelArtifacts;
-use crate::kvcache::SharedKvCache;
+use crate::kvcache::{KvRead, KvWrite};
 use crate::tokenizer::TokenId;
 
 use super::{PrefillOutput, StepOutput};
@@ -89,7 +89,7 @@ impl PjrtBackend {
         art: &ModelArtifacts,
         bucket: usize,
         prompt: &[TokenId],
-        cache: &mut SharedKvCache,
+        cache: &mut dyn KvWrite,
     ) -> Result<PrefillOutput> {
         let pf = self.prefills.borrow();
         let exe = pf
@@ -134,7 +134,7 @@ impl PjrtBackend {
         k: usize,
         w: usize,
         tokens: &[TokenId],
-        cache: &SharedKvCache,
+        cache: &dyn KvRead,
     ) -> Result<StepOutput> {
         let w1 = w + 1;
         let steps = self.steps.borrow();
@@ -145,16 +145,23 @@ impl PjrtBackend {
         let toks: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
         let d = &art.dims;
         let cache_dims = [d.n_layers, d.max_len, d.n_heads, d.head_dim];
+        // A contiguous lane uploads its buffers directly; a paged view is
+        // gathered into the same dense (layers, max_len, heads, head_dim)
+        // geometry the AOT executable was compiled for.
+        let gathered;
+        let (kd, vd): (&[f32], &[f32]) = match cache.as_contiguous() {
+            Some(s) => s,
+            None => {
+                gathered = cache.gather();
+                (&gathered.0, &gathered.1)
+            }
+        };
         let tok_buf = self.client.buffer_from_host_buffer(&toks, &[k, w1], None)?;
-        let kc_buf = self
-            .client
-            .buffer_from_host_buffer(&cache.k_data, &cache_dims, None)?;
-        let vc_buf = self
-            .client
-            .buffer_from_host_buffer(&cache.v_data, &cache_dims, None)?;
+        let kc_buf = self.client.buffer_from_host_buffer(kd, &cache_dims, None)?;
+        let vc_buf = self.client.buffer_from_host_buffer(vd, &cache_dims, None)?;
         let len_buf = self
             .client
-            .buffer_from_host_buffer(&[cache.len as i32], &[], None)?;
+            .buffer_from_host_buffer(&[cache.ctx_len() as i32], &[], None)?;
 
         let mut args: Vec<&PjRtBuffer> = self.params.iter().collect();
         args.push(&tok_buf);

@@ -32,7 +32,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::ModelArtifacts;
-use crate::kvcache::SharedKvCache;
+use crate::kvcache::{KvRead, KvWrite};
 use crate::tokenizer::TokenId;
 
 use super::{PackedBlock, PrefillOutput, StepOutput};
@@ -188,7 +188,7 @@ impl RefBackend {
         &self,
         art: &ModelArtifacts,
         prompt: &[TokenId],
-        cache: &mut SharedKvCache,
+        cache: &mut dyn KvWrite,
     ) -> Result<PrefillOutput> {
         let t0 = Instant::now();
         let n = cache.numel();
@@ -197,7 +197,7 @@ impl RefBackend {
         let ps = cache.pos_stride();
         let ls = cache.layer_stride();
         for (pos, &tok) in prompt.iter().enumerate() {
-            for layer in 0..cache.layers {
+            for layer in 0..cache.layers() {
                 let base = layer * ls + pos * ps;
                 for e in 0..ps {
                     k_data[base + e] = tok as f32;
@@ -218,11 +218,12 @@ impl RefBackend {
     }
 
     /// Recover the committed context tokens from the K half of the cache.
-    fn decode_context(&self, cache: &SharedKvCache) -> Vec<TokenId> {
-        let ps = cache.pos_stride();
-        (0..cache.len)
+    /// Reads go through [`KvRead::k_at`], so a paged page-table walk and a
+    /// contiguous lane are decoded identically.
+    fn decode_context(&self, cache: &dyn KvRead) -> Vec<TokenId> {
+        (0..cache.ctx_len())
             .map(|pos| {
-                let v = cache.k_data[pos * ps];
+                let v = cache.k_at(0, pos)[0];
                 if v.is_finite() && v >= 0.0 {
                     v.round() as TokenId
                 } else {
@@ -242,7 +243,7 @@ impl RefBackend {
         k: usize,
         w1: usize,
         tokens: &[TokenId],
-        cache: &SharedKvCache,
+        cache: &dyn KvRead,
     ) -> (Vec<TokenId>, Vec<f32>, Vec<f32>) {
         let ctx = self.decode_context(cache);
         let mut h_ctx = hash_init(self.seed);
@@ -279,7 +280,7 @@ impl RefBackend {
         k: usize,
         w: usize,
         tokens: &[TokenId],
-        cache: &SharedKvCache,
+        cache: &dyn KvRead,
     ) -> Result<StepOutput> {
         let t0 = Instant::now();
         let w1 = w + 1;

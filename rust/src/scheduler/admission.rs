@@ -67,6 +67,34 @@ pub fn request_score(
     prior_tpc / cm.call_time(engine.k, engine.w + 1, prompt_len)
 }
 
+/// [`request_score`] for a paged KV pool: when the first `shared_len`
+/// positions of the request's prompt are covered by SHARED resident pages
+/// (prefix-index hit at admission probe time), the request's verification
+/// calls are priced with [`CostModel::call_time_prefix`] — its per-call
+/// memory traffic is the DISTINCT pages it adds, not its worst-case lane.
+/// A request riding a hot system prompt therefore outscores an equally
+/// accepting disjoint-prompt request, which is exactly the admission
+/// order that maximizes accepted tokens per unit of KV bandwidth. At
+/// `shared_len = 0` this is bitwise-identical to [`request_score`].
+pub fn request_score_paged(
+    cm: &CostModel,
+    prior_tokens_per_call: f64,
+    strategy: StrategyName,
+    engine: &EngineConfig,
+    prompt_len: usize,
+    shared_len: usize,
+) -> f64 {
+    if prior_tokens_per_call <= 0.0 {
+        return 0.0; // cold start: uniform score = FIFO
+    }
+    let prior_tpc = if strategy == StrategyName::None || engine.w == 0 {
+        1.0
+    } else {
+        prior_tokens_per_call.max(1.0)
+    };
+    prior_tpc / cm.call_time_prefix(engine.k, engine.w + 1, prompt_len, shared_len)
+}
+
 /// Evidence (winning verification calls) at which the per-strategy prior
 /// trusts half of its observed mean — below it the prior shrinks toward
 /// the greedy baseline so a couple of lucky steps cannot dominate
@@ -333,6 +361,23 @@ mod tests {
         // fully cold fleet: prior 0 = FIFO
         let cold = Metrics::new();
         assert_eq!(strategy_prior_tpc(&cold, StrategyName::Context), 0.0);
+    }
+
+    #[test]
+    fn paged_score_rewards_shared_prefixes() {
+        let cm = CostModel::for_analog("mistral");
+        let spec = EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: 64 };
+        let observed = 2.5;
+        // no shared pages: identical to the lane scorer (bitwise)
+        let plain = request_score(&cm, observed, StrategyName::Mixed, &spec, 1000);
+        let zero = request_score_paged(&cm, observed, StrategyName::Mixed, &spec, 1000, 0);
+        assert_eq!(plain, zero);
+        // a request whose long prompt mostly rides resident shared pages
+        // outscores the same request with a fully distinct prompt
+        let hot = request_score_paged(&cm, observed, StrategyName::Mixed, &spec, 1000, 896);
+        assert!(hot > plain, "shared-prefix score {hot} <= distinct score {plain}");
+        // cold fleet stays FIFO in paged mode too
+        assert_eq!(request_score_paged(&cm, 0.0, StrategyName::Mixed, &spec, 1000, 896), 0.0);
     }
 
     #[test]

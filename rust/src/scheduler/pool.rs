@@ -101,6 +101,14 @@ struct EngineStatus {
     heat_milli: AtomicU64,
     /// bytes this engine's KV lane pool currently pins
     kv_bytes: AtomicU64,
+    /// distinct KV pages live in the engine's pool (lanes in lane mode)
+    kv_pages: AtomicU64,
+    /// unreserved KV pages still free in the engine's pool
+    kv_pages_free: AtomicU64,
+    /// KV pages shared by more than one resident sequence (paged mode)
+    kv_pages_shared: AtomicU64,
+    /// admissions that attached shared prefix pages (paged mode)
+    kv_prefix_hits: AtomicU64,
     /// worker is retiring (or failed to boot): route nothing more to it
     draining: AtomicBool,
     /// the worker never served: its `ModelRuntime` failed to load
@@ -118,6 +126,10 @@ impl EngineStatus {
             lanes_target: AtomicUsize::new(0),
             heat_milli: AtomicU64::new(0),
             kv_bytes: AtomicU64::new(0),
+            kv_pages: AtomicU64::new(0),
+            kv_pages_free: AtomicU64::new(0),
+            kv_pages_shared: AtomicU64::new(0),
+            kv_prefix_hits: AtomicU64::new(0),
             draining: AtomicBool::new(false),
             load_failed: AtomicBool::new(false),
         }
@@ -462,6 +474,10 @@ fn publish(metrics: &Metrics, engines: &[EngineSlot]) {
     metrics.engines.store(live_count(engines) as u64, Ordering::Relaxed);
     let mut lanes = 0u64;
     let mut lanes_target = 0u64;
+    let mut kv_pages = 0u64;
+    let mut kv_pages_free = 0u64;
+    let mut kv_pages_shared = 0u64;
+    let mut kv_prefix_hits = 0u64;
     let snaps: Vec<EngineGauges> = engines
         .iter()
         .map(|e| {
@@ -474,14 +490,26 @@ fn publish(metrics: &Metrics, engines: &[EngineSlot]) {
                 speculative: e.status.spec.load(Ordering::Relaxed) as u64,
                 heat: e.status.heat(),
                 kv_bytes: e.status.kv_bytes.load(Ordering::Relaxed),
+                kv_pages: e.status.kv_pages.load(Ordering::Relaxed),
+                kv_pages_free: e.status.kv_pages_free.load(Ordering::Relaxed),
+                kv_pages_shared: e.status.kv_pages_shared.load(Ordering::Relaxed),
+                kv_prefix_hits: e.status.kv_prefix_hits.load(Ordering::Relaxed),
             };
             lanes += g.lanes;
             lanes_target += g.lanes_target;
+            kv_pages += g.kv_pages;
+            kv_pages_free += g.kv_pages_free;
+            kv_pages_shared += g.kv_pages_shared;
+            kv_prefix_hits += g.kv_prefix_hits;
             g
         })
         .collect();
     metrics.lanes.store(lanes, Ordering::Relaxed);
     metrics.lanes_target.store(lanes_target, Ordering::Relaxed);
+    metrics.kv_pages.store(kv_pages, Ordering::Relaxed);
+    metrics.kv_pages_free.store(kv_pages_free, Ordering::Relaxed);
+    metrics.kv_pages_shared.store(kv_pages_shared, Ordering::Relaxed);
+    metrics.kv_prefix_hits.store(kv_prefix_hits, Ordering::Relaxed);
     metrics.set_per_engine(snaps);
 }
 
@@ -537,19 +565,39 @@ fn spawn_engine(
 /// A fresh batched engine for one worker: traces on (they feed the
 /// step-latency histogram) and, in elastic mode, the online-derived row
 /// budget installed with the operator `--budget` demoted to a cap.
+/// `--kv-page-size > 0` swaps the contiguous lane pool for the paged
+/// pool with prefix sharing (same output bytes, more admissions per KV
+/// byte on shared-prefix traffic).
 fn fresh_engine<'rt>(
     runtime: &'rt ModelRuntime,
     lanes: usize,
     scfg: &ServeConfig,
     analog: &str,
 ) -> BatchedEngine<'rt> {
-    let mut eng = BatchedEngine::with_budget(runtime, lanes, scfg.budget);
+    let mut eng = if scfg.kv_page_size > 0 {
+        let mut e = BatchedEngine::new_paged(runtime, lanes, scfg.kv_page_size, scfg.kv_pages);
+        e.budget = scfg.budget;
+        e
+    } else {
+        BatchedEngine::with_budget(runtime, lanes, scfg.budget)
+    };
     eng.collect_traces = true;
     if scfg.elastic {
         eng.auto_budget =
             Some(AutoBudget { cm: CostModel::for_analog(analog), slack: scfg.budget_slack });
     }
     eng
+}
+
+/// Snapshot the engine's KV page accounting into its status gauges
+/// (lane mode reports lanes as pages with no sharing, so the families
+/// stay meaningful either way).
+fn store_page_stats(status: &EngineStatus, eng: &BatchedEngine) {
+    let ps = eng.page_stats();
+    status.kv_pages.store(ps.live, Ordering::Relaxed);
+    status.kv_pages_free.store(ps.free, Ordering::Relaxed);
+    status.kv_pages_shared.store(ps.shared, Ordering::Relaxed);
+    status.kv_prefix_hits.store(ps.prefix_hits, Ordering::Relaxed);
 }
 
 /// An admitted request's reply route plus the bookkeeping needed to give
@@ -586,6 +634,7 @@ fn engine_worker_loop(
     status.lanes.store(eng.capacity(), Ordering::Relaxed);
     status.lanes_target.store(eng.capacity(), Ordering::Relaxed);
     status.kv_bytes.store(eng.kv_bytes() as u64, Ordering::Relaxed);
+    store_page_stats(status, &eng);
     let mut inflight: HashMap<SeqId, Inflight> = HashMap::new();
     let mut open = true;
     loop {
@@ -600,6 +649,7 @@ fn engine_worker_loop(
                 status.lanes_target.store(min, Ordering::Relaxed);
                 status.heat_milli.store(0, Ordering::Relaxed);
                 status.kv_bytes.store(eng.kv_bytes() as u64, Ordering::Relaxed);
+                store_page_stats(status, &eng);
             }
             match rx.recv() {
                 Ok(pj) => {
@@ -689,6 +739,7 @@ fn engine_worker_loop(
             Ordering::Relaxed,
         );
         status.kv_bytes.store(eng.kv_bytes() as u64, Ordering::Relaxed);
+        store_page_stats(status, &eng);
     }
 }
 

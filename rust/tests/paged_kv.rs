@@ -1,0 +1,297 @@
+//! Paged-KV integration: the paged pool with refcounted copy-on-write
+//! prefix sharing must be byte-identical to the contiguous lane pool on
+//! every stream (the lane pool is the differential oracle), its refcount
+//! and budget accounting must balance under arbitrary trajectories, and
+//! shared pages must never let one sequence's writes leak into another.
+
+use ngrammys::bench::BenchCtx;
+use ngrammys::config::EngineConfig;
+use ngrammys::engine::{generate_all, BatchedEngine};
+use ngrammys::kvcache::paged::PagedKvPool;
+use ngrammys::kvcache::{KvRead, KvWrite};
+use ngrammys::scheduler::{make_strategy, StrategyName};
+use ngrammys::tokenizer::TokenId;
+use ngrammys::util::prop;
+use ngrammys::util::rng::Rng;
+use ngrammys::workload::shared_prefix_prompts;
+
+fn ctx(model: &str) -> BenchCtx {
+    BenchCtx::load(ngrammys::testkit::manifest(), model).unwrap()
+}
+
+fn prompts(c: &BenchCtx) -> Vec<Vec<u32>> {
+    [
+        "Question: Tom has 4 apples. Tom buys 2 more.",
+        "def scale(x, y):\n    result",
+        "User: What is the capital of France?",
+        "Answer: Mia has 5 coins.",
+        "def blend(value, count):",
+        "User: Tell me about ancient rivers.",
+        "Question: Sam has 7 cards.",
+        "Assistant: That is a good question.",
+    ]
+    .iter()
+    .map(|p| c.tokenizer.encode(p))
+    .collect()
+}
+
+/// THE tentpole acceptance test: at concurrency 1, 4 and 8, the engine
+/// on the paged pool produces byte-identical token streams to the engine
+/// on the lane pool, for mixed/context/greedy strategies.
+#[test]
+fn paged_streams_match_lane_pool_oracle_at_conc_1_4_8() {
+    let c = ctx("small");
+    let prompts = prompts(&c);
+    for (strat, k, w) in [
+        (StrategyName::Mixed, 10, 10),
+        (StrategyName::Context, 5, 4),
+        (StrategyName::None, 1, 0),
+    ] {
+        let cfg = EngineConfig { k, w, q: 1, max_new_tokens: 20 };
+        for conc in [1usize, 4, 8] {
+            let reqs = |c: &BenchCtx| -> Vec<_> {
+                prompts
+                    .iter()
+                    .map(|p| (p.clone(), make_strategy(strat, &c.tables, 1), cfg.clone()))
+                    .collect()
+            };
+            let mut lane = BatchedEngine::new(&c.runtime, conc);
+            let want = generate_all(&mut lane, reqs(&c)).unwrap();
+            let mut paged = BatchedEngine::new_paged(&c.runtime, conc, 16, 0);
+            let got = generate_all(&mut paged, reqs(&c)).unwrap();
+            for (i, (g, w_)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    g.tokens, w_.tokens,
+                    "strategy {strat:?} conc {conc} prompt {i}: paged stream diverged \
+                     from the lane-pool oracle"
+                );
+            }
+        }
+    }
+}
+
+/// The capacity claim, pinned as a test: with the SAME byte budget the
+/// lane pool would spend on 2 lanes, the paged pool admits strictly more
+/// shared-system-prompt sequences.
+#[test]
+fn paged_pool_admits_more_shared_prompt_lanes() {
+    let c = ctx("small");
+    let d = &c.runtime.artifacts().dims;
+    let page_size = 16usize;
+    let lanes = 2usize;
+    let n_pages = lanes * d.max_len.div_ceil(page_size);
+    let prefix_len = (d.max_len / 2 / page_size) * page_size;
+    let prompts = shared_prefix_prompts(11, 16, prefix_len, 6, c.manifest.vocab_size);
+    let cfg = EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: 12 };
+
+    let mut lane_eng = BatchedEngine::new(&c.runtime, lanes);
+    let mut paged_eng = BatchedEngine::new_paged(&c.runtime, prompts.len(), page_size, n_pages);
+    let admit_all = |eng: &mut BatchedEngine| {
+        let mut n = 0usize;
+        for p in &prompts {
+            if !eng.can_admit_prompt(p, &cfg) {
+                break;
+            }
+            eng.admit(p, make_strategy(StrategyName::Mixed, &c.tables, 1), cfg.clone())
+                .unwrap();
+            n += 1;
+        }
+        n
+    };
+    let lane_n = admit_all(&mut lane_eng);
+    let paged_n = admit_all(&mut paged_eng);
+    assert_eq!(lane_n, lanes, "lane pool admits exactly its lane count");
+    assert!(
+        paged_n > lane_n,
+        "paged pool admitted {paged_n} <= lane pool {lane_n} from the same bytes"
+    );
+    let stats = paged_eng.page_stats();
+    assert_eq!(
+        stats.prefix_hits,
+        (paged_n - 1) as u64,
+        "every admission after the first should attach shared prefix pages"
+    );
+    assert!(stats.shared > 0, "shared-page gauge should be live");
+}
+
+/// Value encoding for the property trajectories: a pure function of
+/// (layer, token, elem) — position-independent, so two sequences with the
+/// same token at the same position legitimately share bytes, and any
+/// cross-sequence leak shows up as a token mismatch on read-back.
+fn enc(l: usize, t: TokenId, e: usize) -> f32 {
+    (l * 100_000) as f32 + (t * 10) as f32 + e as f32
+}
+
+/// Dense (layers, max_len, heads*head_dim) install buffers encoding
+/// `tokens`, mirroring how the reference backend fills a prefill.
+fn dense(tokens: &[TokenId], layers: usize, max_len: usize, ps: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut k = vec![0.0f32; layers * max_len * ps];
+    let mut v = vec![0.0f32; layers * max_len * ps];
+    for l in 0..layers {
+        for (pos, &t) in tokens.iter().enumerate() {
+            for e in 0..ps {
+                k[(l * max_len + pos) * ps + e] = enc(l, t, e);
+                v[(l * max_len + pos) * ps + e] = -enc(l, t, e) - 1.0;
+            }
+        }
+    }
+    (k, v)
+}
+
+/// A (layers, k_rows, w1, heads*head_dim) commit tail carrying `toks` on
+/// `row`; every other row is poison, so a commit that reads the wrong
+/// row contaminates visibly.
+fn tail(
+    toks: &[TokenId],
+    layers: usize,
+    k_rows: usize,
+    w1: usize,
+    row: usize,
+    ps: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let n = layers * k_rows * w1 * ps;
+    let mut k = vec![9e6f32; n];
+    let mut v = vec![-9e6f32; n];
+    for l in 0..layers {
+        for (d, &t) in toks.iter().enumerate() {
+            for e in 0..ps {
+                let idx = ((l * k_rows + row) * w1 + d) * ps + e;
+                k[idx] = enc(l, t, e);
+                v[idx] = -enc(l, t, e) - 1.0;
+            }
+        }
+    }
+    (k, v)
+}
+
+/// One sequence the trajectory tracks: its pool id, the tokens it has
+/// committed (the read-back expectation), and its admission bounds.
+struct Live {
+    sid: usize,
+    toks: Vec<TokenId>,
+    max_pos: usize,
+    prompt_len: usize,
+}
+
+/// Drive a random admit/install/commit/truncate/release trajectory.
+/// After EVERY operation the pool must pass its internal audit (refcount
+/// balance, reserve accounting, budget invariant) and, when
+/// `check_bytes`, every live sequence must read back exactly its own
+/// tokens through the page indirection. Truncation never rewinds below
+/// the prompt — the engine's rollback floor — and a commit is allowed to
+/// fail ONLY with reservation exhaustion (copy-on-write backpressure),
+/// which is a clean error, never corruption.
+fn trajectory(rng: &mut Rng, check_bytes: bool) -> bool {
+    let layers = rng.range(1, 2);
+    let (heads, hd) = (1usize, 2usize);
+    let ps = heads * hd;
+    let psz = rng.range(2, 4);
+    let max_len = psz * rng.range(3, 6);
+    let budget = rng.range(6, 14);
+    let mut pool = PagedKvPool::new(layers, max_len, heads, hd, psz, budget, 4);
+    let system: Vec<TokenId> = (0..max_len).map(|_| rng.below(30) as TokenId).collect();
+    let mut live: Vec<Live> = Vec::new();
+
+    for _ in 0..24 {
+        let op = rng.below(4);
+        if op == 0 {
+            // admit + install (half the admissions share the system prompt
+            // prefix, so refcounted pages really appear)
+            let plen = rng.range(1, max_len - 2);
+            let mut prompt: Vec<TokenId> = if rng.below(2) == 0 {
+                system[..plen].to_vec()
+            } else {
+                (0..plen).map(|_| rng.below(30) as TokenId).collect()
+            };
+            prompt.truncate(plen);
+            let max_pos = rng.range(plen, max_len);
+            if pool.can_admit(&prompt, max_pos) {
+                let sid = pool.acquire(&prompt, max_pos).unwrap();
+                let (k, v) = dense(&prompt, layers, max_len, ps);
+                pool.writer(sid).install(k, v, plen).unwrap();
+                pool.sync_tokens(sid, &prompt);
+                live.push(Live { sid, toks: prompt, max_pos, prompt_len: plen });
+            }
+        } else if op == 1 && !live.is_empty() {
+            // commit 1-2 tokens within the admission reservation
+            let i = rng.below(live.len());
+            let room = live[i].max_pos - live[i].toks.len();
+            if room > 0 {
+                let count = rng.range(1, room.min(2));
+                let toks: Vec<TokenId> = (0..count).map(|_| rng.below(30) as TokenId).collect();
+                let k_rows = rng.range(1, 2);
+                let w1 = count + rng.below(2);
+                let row = rng.below(k_rows);
+                let (kt, vt) = tail(&toks, layers, k_rows, w1, row, ps);
+                let s = &mut live[i];
+                match pool.writer(s.sid).commit_tail(&kt, &vt, k_rows, w1, row, count) {
+                    Ok(()) => {
+                        s.toks.extend(toks);
+                        let mirror = s.toks.clone();
+                        pool.sync_tokens(s.sid, &mirror);
+                    }
+                    Err(e) => {
+                        if !e.to_string().contains("reservation exhausted") {
+                            return false; // only COW backpressure may fail
+                        }
+                    }
+                }
+            }
+        } else if op == 2 && !live.is_empty() {
+            // rollback: truncate somewhere between prompt and current len
+            let i = rng.below(live.len());
+            let s = &mut live[i];
+            let new_len = rng.range(s.prompt_len, s.toks.len());
+            pool.writer(s.sid).truncate(new_len).unwrap();
+            s.toks.truncate(new_len);
+            let mirror = s.toks.clone();
+            pool.sync_tokens(s.sid, &mirror);
+        } else if op == 3 && !live.is_empty() {
+            let s = live.swap_remove(rng.below(live.len()));
+            pool.release(s.sid);
+        }
+
+        if pool.audit().is_err() {
+            return false;
+        }
+        if check_bytes {
+            for s in &live {
+                let view = pool.view(s.sid);
+                if view.ctx_len() != s.toks.len() {
+                    return false;
+                }
+                for l in 0..layers {
+                    for (pos, &t) in s.toks.iter().enumerate() {
+                        let (kk, vv) = (view.k_at(l, pos), view.v_at(l, pos));
+                        for e in 0..ps {
+                            if kk[e] != enc(l, t, e) || vv[e] != -enc(l, t, e) - 1.0 {
+                                return false; // cross-sequence contamination
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    for s in live {
+        pool.release(s.sid);
+    }
+    // fully drained: refcounts balanced back to zero live pages and the
+    // whole budget reclaimable
+    pool.audit().is_ok() && pool.in_use() == 0 && pool.page_stats().live == 0
+}
+
+/// Property: refcount/reserve/budget accounting balances after every
+/// operation of arbitrary trajectories, and drains back to zero.
+#[test]
+fn prop_paged_refcounts_balance_over_random_trajectories() {
+    prop::check(80, |rng: &mut Rng| trajectory(rng, false));
+}
+
+/// Property: through arbitrary interleavings of shared-prefix admissions,
+/// commits, rollbacks and releases, every sequence reads back exactly its
+/// own tokens — shared pages never leak one sequence's writes to another.
+#[test]
+fn prop_shared_pages_never_cross_contaminate() {
+    prop::check(80, |rng: &mut Rng| trajectory(rng, true));
+}
