@@ -18,6 +18,8 @@ use crate::config::{EngineConfig, SessionCacheConfig};
 use crate::costmodel::CostModel;
 use crate::engine::{BatchedEngine, SpecDecoder};
 use crate::scheduler::{make_strategy, StrategyName};
+use crate::trace::report::TraceSummary;
+use crate::trace::{FlightRecorder, TraceEvent, DEFAULT_RING_CAPACITY};
 use crate::util::json::Json;
 use crate::workload::{Prompt, TASKS};
 
@@ -70,6 +72,7 @@ pub fn run(
     let mut best_static = f64::NEG_INFINITY;
     let mut best_static_name = "";
     let mut rows = Vec::new();
+    let mut static_calls = 0usize;
     for name in DEFAULT_ARMS {
         let strat = make_strategy(name, &ctx.tables, 1);
         let mut dec = SpecDecoder::new(
@@ -79,6 +82,7 @@ pub fn run(
         );
         dec.collect_traces = true;
         let (tokens, calls, sim_s) = decode_all(&mut dec, &prompts, &cm)?;
+        static_calls += calls;
         let tpc = tokens as f64 / calls.max(1) as f64;
         let sim_tps = tokens as f64 / sim_s;
         if tpc > best_static {
@@ -103,6 +107,10 @@ pub fn run(
         EngineConfig { k, w: w_cap, q: 1, max_new_tokens: max_new },
     );
     dec.collect_traces = true;
+    // flight recorder on the adaptive run: the CI summary carries its
+    // per-phase wall-clock totals as ungated extra fields
+    let rec = FlightRecorder::standalone(0, DEFAULT_RING_CAPACITY);
+    dec.recorder = Some(rec.clone());
     let mut arm_pulls = vec![0u64; DEFAULT_ARMS.len()];
     let mut arm_emitted = vec![0u64; DEFAULT_ARMS.len()];
     let mut kinds: BTreeMap<&'static str, (u64, u64, f64)> = BTreeMap::new();
@@ -211,9 +219,26 @@ pub fn run(
         ]),
     )?;
     // the CI bench-regression gate compares this summary against the
-    // committed benches/baseline.json (`ngrammys ci-bench-check`)
-    super::write_bench_summary("adaptive", adaptive_tps, adaptive_tpc,
-                               super::accept_rate(tokens, calls))
+    // committed benches/baseline.json (`ngrammys ci-bench-check`);
+    // phases + scenario_steps are ungated extras from the flight recorder
+    let steps: Vec<TraceEvent> =
+        rec.snapshot(DEFAULT_RING_CAPACITY).into_iter().map(TraceEvent::Step).collect();
+    let scenario_steps = vec![
+        ("static-total-calls".to_string(), Json::Num(static_calls as f64)),
+        ("adaptive-steps".to_string(), Json::Num(rec.steps_recorded() as f64)),
+        ("batch-budget-steps".to_string(), Json::Num(budgeted.steps as f64)),
+        ("batch-unbudgeted-steps".to_string(), Json::Num(unbudgeted.steps as f64)),
+    ];
+    super::write_bench_summary_with(
+        "adaptive",
+        adaptive_tps,
+        adaptive_tpc,
+        super::accept_rate(tokens, calls),
+        vec![
+            ("phases", TraceSummary::from_events(&steps).phases_json()),
+            ("scenario_steps", Json::Obj(scenario_steps)),
+        ],
+    )
 }
 
 /// Decode every prompt with one (reused) decoder; returns (decode tokens,
@@ -244,6 +269,7 @@ struct BatchedRun {
     mean_rows: f64,
     max_rows: usize,
     sim_tps: f64,
+    steps: usize,
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -296,5 +322,6 @@ fn run_batched(
         mean_rows: per_step.values().sum::<usize>() as f64 / n_steps as f64,
         max_rows: per_step.values().copied().max().unwrap_or(0),
         sim_tps: tokens as f64 / sim_s.max(1e-12),
+        steps: per_step.len(),
     })
 }

@@ -63,6 +63,24 @@ pub fn verdict(baseline_tps: Option<f64>, current_tps: f64, tolerance: f64) -> V
     }
 }
 
+/// Loud multi-line warning listing every baseline entry that is still
+/// `null`: those benches run green no matter how slow they get, so the
+/// gap should be visible in every CI log until someone commits numbers.
+/// Returns `None` when nothing bootstrapped.
+pub fn bootstrap_warning(names: &[String]) -> Option<String> {
+    if names.is_empty() {
+        return None;
+    }
+    Some(format!(
+        "!!! WARNING: {n} baseline entr{ies} unset (null) — NOT regression-gated: {list}\n\
+         !!! These benches pass no matter how slow they get. Commit real numbers with\n\
+         !!! `ngrammys ci-bench-check --update` once their performance is intentional.",
+        n = names.len(),
+        ies = if names.len() == 1 { "y is" } else { "ies are" },
+        list = names.join(", ")
+    ))
+}
+
 /// Run the gate: read `baseline_path`, find each gated bench's
 /// `BENCH_<name>.json` under `bench_dir`, compare, print a table, and
 /// fail if any bench regressed past `tolerance` (or is missing its
@@ -84,6 +102,7 @@ pub fn run(baseline_path: &Path, bench_dir: &Path, tolerance: f64, update: bool)
 
     let mut updated = Vec::new();
     let mut failures = Vec::new();
+    let mut bootstraps = Vec::new();
     for (name, entry) in entries {
         let summary_path = bench_dir.join(format!("BENCH_{name}.json"));
         let summary = Json::from_file(&summary_path).map_err(|e| {
@@ -108,10 +127,15 @@ pub fn run(baseline_path: &Path, bench_dir: &Path, tolerance: f64, update: bool)
             "{name:<12} {:>14} {current:>14.1} {delta:>9}  {verdict_str}",
             base.map(|b| format!("{b:.1}")).unwrap_or_else(|| "null".into()),
         );
-        if let Verdict::Regressed { .. } = v {
-            failures.push(name.clone());
+        match v {
+            Verdict::Regressed { .. } => failures.push(name.clone()),
+            Verdict::Bootstrap => bootstraps.push(name.clone()),
+            Verdict::Pass => {}
         }
         updated.push((name.clone(), Json::obj(vec![("tokens_per_s", Json::Num(current))])));
+    }
+    if let Some(warning) = bootstrap_warning(&bootstraps) {
+        println!("\n{warning}");
     }
 
     // the gate must be symmetric: a summary the baseline does not know
@@ -195,6 +219,17 @@ mod tests {
     fn verdict_bootstraps_on_missing_baseline() {
         assert_eq!(verdict(None, 123.0, 0.10), Verdict::Bootstrap);
         assert_eq!(verdict(Some(0.0), 123.0, 0.10), Verdict::Bootstrap);
+    }
+
+    #[test]
+    fn bootstrap_warning_lists_every_null_entry() {
+        assert_eq!(bootstrap_warning(&[]), None);
+        let w = bootstrap_warning(&["pool".to_string(), "draft".to_string()]).unwrap();
+        assert!(w.contains("WARNING"), "must be loud: {w}");
+        assert!(w.contains("pool") && w.contains("draft"), "must list every entry: {w}");
+        assert!(w.contains("--update"), "must say how to fix it: {w}");
+        let one = bootstrap_warning(&["pool".to_string()]).unwrap();
+        assert!(one.contains("1 baseline entry is"), "singular form: {one}");
     }
 
     #[test]

@@ -87,6 +87,9 @@ struct Cell {
     q: usize,
     rescan_ns: f64,
     incremental_ns: f64,
+    /// measured incremental iterations (the bench's "steps" for the
+    /// per-scenario step counts in BENCH_draft.json)
+    iters: u64,
 }
 
 impl Cell {
@@ -140,8 +143,8 @@ pub fn run(smoke: bool) -> Result<()> {
                     live.pop();
                 },
             );
-            let incremental_ns = r.mean_ns;
-            cells.push(Cell { ctx: ctx_len, q, rescan_ns, incremental_ns });
+            let (incremental_ns, iters) = (r.mean_ns, r.iters);
+            cells.push(Cell { ctx: ctx_len, q, rescan_ns, incremental_ns, iters });
         }
     }
 
@@ -151,13 +154,12 @@ pub fn run(smoke: bool) -> Result<()> {
     let seq = synthetic_seq(&mut rng, 256, vocab);
     let mut mixed = MixedStrategy::paper(tables, 1);
     let mut batch = DraftBatch::new(W);
-    let mixed_ns = bench
-        .bench("mixed     propose (q=1, ctx=256, arena)", || {
-            batch.reset(W);
-            mixed.propose(black_box(&seq), K, &mut batch);
-            black_box(batch.k());
-        })
-        .mean_ns;
+    let r = bench.bench("mixed     propose (q=1, ctx=256, arena)", || {
+        batch.reset(W);
+        mixed.propose(black_box(&seq), K, &mut batch);
+        black_box(batch.k());
+    });
+    let (mixed_ns, mixed_iters) = (r.mean_ns, r.iters);
 
     // --- report + gate
     println!("\n{:<6} {:>3} {:>14} {:>14} {:>9} {:>16}", "ctx", "q", "rescan", "suffix-ix",
@@ -189,6 +191,12 @@ pub fn run(smoke: bool) -> Result<()> {
         .find(|c| c.q == 1 && c.ctx == 256)
         .expect("ctx=256 q=1 cell always measured");
     let proposals_per_s = 1e9 / headline.incremental_ns.max(1e-9);
+    // per-scenario measured iteration counts (this bench's step counts)
+    let mut scenario_steps: Vec<(String, Json)> = cells
+        .iter()
+        .map(|c| (format!("suffix-ix-q{}-ctx{}", c.q, c.ctx), Json::Num(c.iters as f64)))
+        .collect();
+    scenario_steps.push(("mixed-arena-ctx256".to_string(), Json::Num(mixed_iters as f64)));
     super::write_json(
         "BENCH_draft",
         &Json::obj(vec![
@@ -199,6 +207,7 @@ pub fn run(smoke: bool) -> Result<()> {
             ("speedup", Json::Num(headline.speedup())),
             ("min_gated_speedup", Json::Num(worst_gated.unwrap_or(0.0))),
             ("mixed_arena_ns", Json::Num(mixed_ns)),
+            ("scenario_steps", Json::Obj(scenario_steps)),
         ]),
     )?;
 

@@ -24,6 +24,8 @@ use crate::scheduler::{
     StrategyName,
 };
 use crate::tokenizer::TokenId;
+use crate::trace::report::TraceSummary;
+use crate::trace::{FlightRecorder, TraceEvent, DEFAULT_RING_CAPACITY};
 use crate::util::json::Json;
 use crate::workload::TASKS;
 
@@ -50,6 +52,8 @@ struct RunOut {
     max_lanes_seen: usize,
     scale_events: (u64, u64),
     reorders: u64,
+    /// engine steps driven to serve the whole request set
+    steps: u64,
     /// per-request output streams, in request order
     streams: Vec<Vec<TokenId>>,
 }
@@ -111,8 +115,10 @@ pub fn run(
     let mut best_static = f64::NEG_INFINITY;
     let mut best_static_cap = 0usize;
     let mut static_streams: Vec<Vec<Vec<TokenId>>> = Vec::new();
+    let mut scenario_steps: Vec<(String, Json)> = Vec::new();
     for &n in caps {
-        let out = drive(ctx, &reqs, n, false)?;
+        let out = drive(ctx, &reqs, n, false, None)?;
+        scenario_steps.push((format!("static-{n}"), Json::Num(out.steps as f64)));
         println!(
             "{:<16} {:>9.2} {:>7} {:>10} {:>12.1} {:>9}",
             format!("static --batch {n}"),
@@ -135,7 +141,11 @@ pub fn run(
         static_streams.push(out.streams);
     }
 
-    let elastic = drive(ctx, &reqs, cap, true)?;
+    // the elastic run carries a flight recorder so the CI summary can say
+    // where its steps' wall-clock went (per-phase totals)
+    let rec = FlightRecorder::standalone(0, DEFAULT_RING_CAPACITY);
+    let elastic = drive(ctx, &reqs, cap, true, Some(&rec))?;
+    scenario_steps.push((format!("elastic-cap-{cap}"), Json::Num(elastic.steps as f64)));
     println!(
         "{:<16} {:>9.2} {:>7} {:>10} {:>12.1} {:>9}",
         format!("elastic cap {cap}"),
@@ -196,12 +206,19 @@ pub fn run(
         ]),
     )?;
     // the CI bench-regression gate compares this summary against the
-    // committed benches/baseline.json (`ngrammys ci-bench-check`)
-    super::write_bench_summary(
+    // committed benches/baseline.json (`ngrammys ci-bench-check`); the
+    // phase totals and step counts ride along as ungated extra fields
+    let steps: Vec<TraceEvent> =
+        rec.snapshot(DEFAULT_RING_CAPACITY).into_iter().map(TraceEvent::Step).collect();
+    super::write_bench_summary_with(
         "elastic",
         elastic.sim_tps(),
         elastic.tokens as f64 / elastic.calls.max(1) as f64,
         super::accept_rate(elastic.tokens, elastic.calls),
+        vec![
+            ("phases", TraceSummary::from_events(&steps).phases_json()),
+            ("scenario_steps", Json::Obj(scenario_steps)),
+        ],
     )
 }
 
@@ -210,11 +227,18 @@ pub fn run(
 /// scheduler); elastic mode starts at one lane and lets the autoscaler,
 /// the derived budget and the admission scorer run — the same loop the
 /// serving scheduler uses, minus the channels.
-fn drive(ctx: &super::BenchCtx, reqs: &[Req], lanes: usize, elastic: bool) -> Result<RunOut> {
+fn drive(
+    ctx: &super::BenchCtx,
+    reqs: &[Req],
+    lanes: usize,
+    elastic: bool,
+    recorder: Option<&std::sync::Arc<FlightRecorder>>,
+) -> Result<RunOut> {
     let cm = ctx.cost_model();
 
     let mut eng = BatchedEngine::new(&ctx.runtime, if elastic { 1 } else { lanes });
     eng.collect_traces = true;
+    eng.recorder = recorder.cloned();
     if elastic {
         eng.auto_budget = Some(AutoBudget::new(ctx.cost_model()));
     }
@@ -235,6 +259,7 @@ fn drive(ctx: &super::BenchCtx, reqs: &[Req], lanes: usize, elastic: bool) -> Re
         max_lanes_seen: if elastic { 1 } else { lanes },
         scale_events: (0, 0),
         reorders: 0,
+        steps: 0,
         streams: Vec::new(),
     };
     let mut done = 0usize;
@@ -302,6 +327,7 @@ fn drive(ctx: &super::BenchCtx, reqs: &[Req], lanes: usize, elastic: bool) -> Re
         .sum();
     out.scale_events = scaler.events();
     out.reorders = pending.reorders();
+    out.steps = eng.steps_done();
     out.streams = streams;
     Ok(out)
 }

@@ -23,6 +23,7 @@ pub mod pool;
 pub mod prefix;
 pub mod qsweep;
 pub mod table1;
+pub mod tracecmd;
 
 use std::sync::Arc;
 
@@ -166,16 +167,30 @@ pub fn write_bench_summary(
     tokens_per_call: f64,
     accept_rate: f64,
 ) -> Result<()> {
+    write_bench_summary_with(name, tokens_per_s, tokens_per_call, accept_rate, Vec::new())
+}
+
+/// [`write_bench_summary`] plus bench-specific fields appended after the
+/// three gated ones — the smoke benches attach the flight recorder's
+/// per-phase totals (`"phases"`) and per-scenario step counts
+/// (`"scenario_steps"`) this way. `ci-bench-check` reads only
+/// `tokens_per_s`, so extra fields can never move the regression gate.
+pub fn write_bench_summary_with(
+    name: &str,
+    tokens_per_s: f64,
+    tokens_per_call: f64,
+    accept_rate: f64,
+    extra: Vec<(&str, crate::util::json::Json)>,
+) -> Result<()> {
     use crate::util::json::Json;
-    write_json(
-        &format!("BENCH_{name}"),
-        &Json::obj(vec![
-            ("bench", Json::Str(name.into())),
-            ("tokens_per_s", Json::Num(tokens_per_s)),
-            ("tokens_per_call", Json::Num(tokens_per_call)),
-            ("accept_rate", Json::Num(accept_rate)),
-        ]),
-    )
+    let mut fields = vec![
+        ("bench", Json::Str(name.into())),
+        ("tokens_per_s", Json::Num(tokens_per_s)),
+        ("tokens_per_call", Json::Num(tokens_per_call)),
+        ("accept_rate", Json::Num(accept_rate)),
+    ];
+    fields.extend(extra);
+    write_json(&format!("BENCH_{name}"), &Json::obj(fields))
 }
 
 /// Accept rate over a run: the share of decode tokens that came from

@@ -24,6 +24,8 @@ use crate::scheduler::{
     StrategyName,
 };
 use crate::tokenizer::TokenId;
+use crate::trace::report::TraceSummary;
+use crate::trace::{FlightRecorder, TraceEvent, DEFAULT_RING_CAPACITY};
 use crate::util::json::Json;
 use crate::workload::TASKS;
 
@@ -83,6 +85,8 @@ struct RunOut {
     /// decode tokens / calls over SPECULATIVE requests only
     spec_tpc: f64,
     streams: Vec<Vec<TokenId>>,
+    /// engine steps driven, summed over every engine (incl. retired ones)
+    steps: u64,
 }
 
 impl RunOut {
@@ -148,8 +152,12 @@ pub fn run(
         "config", "tok/call", "spec tok/call", "calls", "sim tok/s", "spawn/retire", "fallbacks"
     );
 
-    let one = drive(ctx, &reqs, 1)?;
-    let many = drive(ctx, &reqs, engine_cap)?;
+    let one = drive(ctx, &reqs, 1, None)?;
+    // the pooled run carries a flight recorder (shared across its
+    // engines); byte-identity vs the untraced 1-engine run below doubles
+    // as a tracing-perturbation check on this workload
+    let rec = FlightRecorder::standalone(0, DEFAULT_RING_CAPACITY);
+    let many = drive(ctx, &reqs, engine_cap, Some(&rec))?;
     let mut rows = Vec::new();
     for (label, out) in [("1 engine", &one), ("pool", &many)] {
         println!(
@@ -203,11 +211,21 @@ pub fn run(
             ("rows", Json::Arr(rows)),
         ]),
     )?;
-    super::write_bench_summary(
+    let steps: Vec<TraceEvent> =
+        rec.snapshot(DEFAULT_RING_CAPACITY).into_iter().map(TraceEvent::Step).collect();
+    let scenario_steps = vec![
+        ("one-engine".to_string(), Json::Num(one.steps as f64)),
+        (format!("pool-{engine_cap}"), Json::Num(many.steps as f64)),
+    ];
+    super::write_bench_summary_with(
         "pool",
         many.sim_tps(),
         many.tokens as f64 / many.calls.max(1) as f64,
         super::accept_rate(many.tokens, many.calls),
+        vec![
+            ("phases", TraceSummary::from_events(&steps).phases_json()),
+            ("scenario_steps", Json::Obj(scenario_steps)),
+        ],
     )
 }
 
@@ -215,11 +233,17 @@ pub fn run(
 /// spawn/retire decided by the real [`EngineScaler`] and placement by the
 /// pool's depth-aware routing policy (compatible engine first, any
 /// engine after [`STARVATION_DEFERRALS`] deferred rounds).
-fn drive(ctx: &super::BenchCtx, reqs: &[Req], engine_cap: usize) -> Result<RunOut> {
+fn drive(
+    ctx: &super::BenchCtx,
+    reqs: &[Req],
+    engine_cap: usize,
+    recorder: Option<&std::sync::Arc<FlightRecorder>>,
+) -> Result<RunOut> {
     let cm = ctx.cost_model();
     let mk_engine = || {
         let mut eng = BatchedEngine::new(&ctx.runtime, 1);
         eng.collect_traces = true;
+        eng.recorder = recorder.cloned();
         eng.auto_budget = Some(AutoBudget::new(ctx.cost_model()));
         SimEngine { eng, busy_s: 0.0, trace_mark: 0, resident: Vec::new(), greedy: 0, spec: 0 }
     };
@@ -244,6 +268,7 @@ fn drive(ctx: &super::BenchCtx, reqs: &[Req], engine_cap: usize) -> Result<RunOu
         fallbacks: 0,
         spec_tpc: 0.0,
         streams: Vec::new(),
+        steps: 0,
     };
     let mut spec_tokens = 0usize;
     let mut spec_calls = 0usize;
@@ -290,7 +315,9 @@ fn drive(ctx: &super::BenchCtx, reqs: &[Req], engine_cap: usize) -> Result<RunOu
             out.peak_engines = out.peak_engines.max(engines.len());
         } else if target < engines.len() {
             if let Some(idx) = engines.iter().position(|e| e.resident.is_empty()) {
-                freed_clocks.push(engines.remove(idx).busy_s);
+                let se = engines.remove(idx);
+                freed_clocks.push(se.busy_s);
+                out.steps += se.eng.steps_done();
                 out.retires += 1;
             }
         }
@@ -379,5 +406,6 @@ fn drive(ctx: &super::BenchCtx, reqs: &[Req], engine_cap: usize) -> Result<RunOu
     out.wall_s = engines.iter().map(|e| e.busy_s).fold(freed_max, f64::max);
     out.spec_tpc = spec_tokens as f64 / spec_calls.max(1) as f64;
     out.streams = streams;
+    out.steps += engines.iter().map(|e| e.eng.steps_done()).sum::<u64>();
     Ok(out)
 }

@@ -25,6 +25,8 @@ use crate::config::EngineConfig;
 use crate::engine::{generate_all, BatchedEngine};
 use crate::scheduler::{make_strategy, StrategyName};
 use crate::tokenizer::TokenId;
+use crate::trace::report::TraceSummary;
+use crate::trace::{FlightRecorder, TraceEvent, DEFAULT_RING_CAPACITY};
 use crate::util::json::Json;
 use crate::workload::{disjoint_prompts, shared_prefix_prompts};
 
@@ -99,6 +101,10 @@ pub fn run(ctx: &super::BenchCtx, smoke: bool) -> Result<()> {
     let lane_out = generate_all(&mut lane_eng, requests(ctx, reqs, &cfg))?;
     let mut paged_eng = BatchedEngine::new_paged(&ctx.runtime, USERS, PAGE_SIZE, n_pages);
     paged_eng.collect_traces = true;
+    // recorder on the paged side only: identity vs the untraced lane run
+    // doubles as a tracing-perturbation check
+    let rec = FlightRecorder::standalone(0, DEFAULT_RING_CAPACITY);
+    paged_eng.recorder = Some(rec.clone());
     let paged_out = generate_all(&mut paged_eng, requests(ctx, reqs, &cfg))?;
     for (i, (l, p)) in lane_out.iter().zip(&paged_out).enumerate() {
         ensure!(
@@ -137,12 +143,23 @@ pub fn run(ctx: &super::BenchCtx, smoke: bool) -> Result<()> {
         ]),
     )?;
     // the CI bench-regression gate compares this summary against the
-    // committed benches/baseline.json (`ngrammys ci-bench-check`)
-    super::write_bench_summary(
+    // committed benches/baseline.json (`ngrammys ci-bench-check`);
+    // phases + scenario_steps are ungated extras from the flight recorder
+    let steps: Vec<TraceEvent> =
+        rec.snapshot(DEFAULT_RING_CAPACITY).into_iter().map(TraceEvent::Step).collect();
+    let scenario_steps = vec![
+        ("lane-identity".to_string(), Json::Num(lane_eng.steps_done() as f64)),
+        ("paged-identity".to_string(), Json::Num(paged_eng.steps_done() as f64)),
+    ];
+    super::write_bench_summary_with(
         "prefix",
         sim_tps,
         tokens as f64 / calls.max(1) as f64,
         super::accept_rate(tokens, calls),
+        vec![
+            ("phases", TraceSummary::from_events(&steps).phases_json()),
+            ("scenario_steps", Json::Obj(scenario_steps)),
+        ],
     )
 }
 

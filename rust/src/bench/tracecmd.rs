@@ -1,0 +1,172 @@
+//! `ngrammys trace` — flight-recorder tooling.
+//!
+//! Two modes:
+//! - **replay** (`--input FILE.jsonl`): parse a captured trace (from
+//!   `GET /trace` or a previous live run) and render the per-phase /
+//!   per-strategy breakdown table, optionally exporting Chrome tracing
+//!   format (`--chrome OUT.json`).
+//! - **live** (no `--input`): decode a small mixed-task workload through
+//!   one [`BatchedEngine`] with a recorder attached, then summarize what
+//!   the ring captured and write the JSONL under `bench_out/`.
+//!
+//! With `--smoke`, live mode doubles as the CI trace-overhead gate: the
+//! same workload runs twice — recorder attached vs detached — and the run
+//! FAILS unless the output streams are byte-identical and the cost-model
+//! throughput (priced from the packed call traces, which are
+//! deterministic) is unchanged. Wall-clock overhead is printed for
+//! information but not gated on: CI machines are too noisy to pin a
+//! sub-percent timing delta, while byte identity + identical packed
+//! traces pin everything tracing could have perturbed.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::config::EngineConfig;
+use crate::engine::{BatchedEngine, SeqId};
+use crate::scheduler::{make_strategy, StrategyName};
+use crate::tokenizer::TokenId;
+use crate::trace::report::{chrome_trace, TraceSummary};
+use crate::trace::{to_jsonl, FlightRecorder, TraceEvent, TraceHub, DEFAULT_RING_CAPACITY};
+use crate::workload::{Prompt, TASKS};
+
+/// Concurrency (pooled KV lanes) of the live capture workload.
+const CONC: usize = 4;
+
+/// Replay a captured JSONL trace: print the breakdown table and export
+/// Chrome format when asked.
+pub fn replay(input: &Path, chrome: Option<&Path>) -> Result<()> {
+    let text = std::fs::read_to_string(input)?;
+    let summary = TraceSummary::from_jsonl(&text)?;
+    ensure!(summary.steps + summary.requests > 0, "no trace events in {}", input.display());
+    println!("== trace replay: {} ==\n", input.display());
+    print!("{}", summary.render_table());
+    if let Some(out) = chrome {
+        let events = crate::trace::report::parse_jsonl(&text)?;
+        write_chrome(&events, out)?;
+    }
+    Ok(())
+}
+
+/// One pass of the live workload through a batched engine.
+struct LiveRun {
+    /// emitted token streams, in request order
+    outputs: Vec<Vec<TokenId>>,
+    /// cost-model seconds of every packed call (deterministic)
+    sim_s: f64,
+    /// wall-clock time of the decode loop on this host
+    wall: Duration,
+    /// engine steps driven
+    steps: u64,
+}
+
+/// Decode `prompts` through one batched engine, optionally with a flight
+/// recorder attached. Admission order, strategy and shapes are identical
+/// across calls, so two passes differing only in `recorder` must produce
+/// identical outputs and packed traces.
+fn drive(
+    ctx: &super::BenchCtx,
+    prompts: &[Prompt],
+    max_new: usize,
+    recorder: Option<&std::sync::Arc<FlightRecorder>>,
+) -> Result<LiveRun> {
+    let cm = ctx.cost_model();
+    let cfg = EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: max_new };
+    let mut eng = BatchedEngine::with_budget(&ctx.runtime, CONC, None);
+    eng.collect_traces = true;
+    eng.recorder = recorder.cloned();
+    let mut pending: Vec<(usize, &Prompt)> = prompts.iter().enumerate().collect();
+    pending.reverse();
+    let mut outputs: Vec<Vec<TokenId>> = vec![Vec::new(); prompts.len()];
+    let mut idmap: HashMap<SeqId, usize> = HashMap::new();
+    let t0 = Instant::now();
+    loop {
+        while eng.has_capacity() {
+            let Some((i, p)) = pending.pop() else { break };
+            let strat = make_strategy(StrategyName::Mixed, &ctx.tables, 1);
+            let id = eng.admit_with(&p.tokens, strat, None, cfg.clone())?;
+            idmap.insert(id, i);
+        }
+        if eng.active() == 0 && pending.is_empty() {
+            break;
+        }
+        for (id, r) in eng.step()? {
+            outputs[idmap[&id]] = r.tokens;
+        }
+    }
+    let wall = t0.elapsed();
+    let sim_s: f64 =
+        eng.packed_traces.iter().map(|t| cm.call_time(t.rows, t.w + 1, t.max_ctx)).sum();
+    Ok(LiveRun { outputs, sim_s, wall, steps: eng.steps_done() })
+}
+
+/// Live capture (and, with `smoke`, the traced-vs-untraced overhead
+/// gate). Writes the captured events to `bench_out/trace_smoke.jsonl`
+/// (smoke) or `bench_out/trace_live.jsonl`.
+pub fn live(
+    ctx: &super::BenchCtx,
+    n_prompts: usize,
+    max_new: usize,
+    smoke: bool,
+    chrome: Option<&Path>,
+) -> Result<()> {
+    let (n_prompts, max_new) = if smoke { (2, 16) } else { (n_prompts, max_new) };
+    let mut prompts = Vec::new();
+    for task in TASKS {
+        prompts.extend(ctx.prompts(task, n_prompts.div_ceil(TASKS.len()).max(2), 96)?);
+    }
+    println!(
+        "== live trace capture (model '{}', {} prompts x {} tokens, conc {CONC}) ==\n",
+        ctx.model,
+        prompts.len(),
+        max_new
+    );
+
+    let hub = TraceHub::new(DEFAULT_RING_CAPACITY);
+    let rec = hub.recorder_for_engine(0);
+    let traced = drive(ctx, &prompts, max_new, Some(&rec))?;
+    ensure!(rec.steps_recorded() > 0, "traced run recorded no step events");
+    let events = hub.recent(DEFAULT_RING_CAPACITY);
+    print!("{}", TraceSummary::from_events(&events).render_table());
+
+    if smoke {
+        let untraced = drive(ctx, &prompts, max_new, None)?;
+        ensure!(
+            traced.outputs == untraced.outputs,
+            "INVARIANT VIOLATION: tracing perturbed the output streams"
+        );
+        let (a, b) = (traced.sim_s, untraced.sim_s);
+        ensure!(
+            (a - b).abs() <= 1e-9 * b.abs().max(1.0),
+            "tracing changed the packed call schedule: {a} sim-s traced vs {b} untraced"
+        );
+        let overhead = traced.wall.as_secs_f64() / untraced.wall.as_secs_f64().max(1e-9) - 1.0;
+        println!(
+            "\noverhead gate: outputs byte-identical over {} streams, packed schedule \
+             unchanged ({} steps); wall overhead {:+.1}% (informational)",
+            traced.outputs.len(),
+            traced.steps,
+            overhead * 1e2
+        );
+    }
+
+    let name = if smoke { "trace_smoke" } else { "trace_live" };
+    std::fs::create_dir_all("bench_out")?;
+    let path = format!("bench_out/{name}.jsonl");
+    std::fs::write(&path, to_jsonl(&events))?;
+    eprintln!("  -> wrote {path}");
+    if let Some(out) = chrome {
+        write_chrome(&events, out)?;
+    }
+    Ok(())
+}
+
+/// Write events in Chrome tracing format (load via `chrome://tracing` or
+/// Perfetto).
+fn write_chrome(events: &[TraceEvent], out: &Path) -> Result<()> {
+    std::fs::write(out, chrome_trace(events).to_string_pretty())?;
+    eprintln!("  -> wrote {} (chrome://tracing / Perfetto)", out.display());
+    Ok(())
+}

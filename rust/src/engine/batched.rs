@@ -33,10 +33,11 @@ use anyhow::{anyhow, Result};
 use crate::adaptive::{budget, SeqController, StepFeedback};
 use crate::config::EngineConfig;
 use crate::costmodel::CostModel;
-use crate::draft::{DraftBatch, DraftStrategy};
+use crate::draft::{DraftBatch, DraftStrategy, StrategyKind};
 use crate::kvcache::{KvSeq, KvSlot, KvStore, PageStats};
 use crate::runtime::{ModelRuntime, PackedBlock};
 use crate::tokenizer::TokenId;
+use crate::trace::{FlightRecorder, Phase, PhaseTimer, StepEvent};
 
 use super::{assemble_block_into, judge_and_commit, make_trace, pad_batch, GenResult};
 
@@ -178,6 +179,11 @@ pub struct BatchedEngine<'rt> {
     /// (derived or static) — exported as the `ngrammys_derived_budget`
     /// gauge by the elastic scheduler.
     last_budget: Option<usize>,
+    /// Flight recorder for per-step phase timings + strategy provenance
+    /// (one [`StepEvent`] per packed group). `None` (the default) skips
+    /// all timing; a disabled recorder costs one branch per group. Never
+    /// affects emitted tokens — pinned by `rust/tests/trace.rs`.
+    pub recorder: Option<std::sync::Arc<FlightRecorder>>,
     pool: KvStore,
     active: Vec<SeqState>,
     next_id: u64,
@@ -237,6 +243,7 @@ impl<'rt> BatchedEngine<'rt> {
             budget: None,
             auto_budget: None,
             last_budget: None,
+            recorder: None,
             pool,
             active: Vec::new(),
             next_id: 0,
@@ -560,6 +567,10 @@ impl<'rt> BatchedEngine<'rt> {
 
     /// Draft, pack, verify and commit one same-depth group of sequences.
     fn run_group(&mut self, w: usize, idxs: &[usize], shapes: &[(usize, usize)]) -> Result<()> {
+        // phase stopwatch: inert (never reads the clock) unless a live
+        // recorder is attached — the zero-cost-when-idle contract
+        let mut timer = PhaseTimer::new(self.recorder.as_ref().is_some_and(|r| r.enabled()));
+
         // --- draft every sequence's (k_i, w) block into the pooled
         // scratch slots (taken out of self for the duration so the
         // borrow checker sees the disjoint accesses; put back at the end)
@@ -578,7 +589,9 @@ impl<'rt> BatchedEngine<'rt> {
                 }
             }
             pad_batch(&mut slot.batch, k);
+            timer.lap(Phase::Draft);
             assemble_block_into(&slot.batch, *s.seq.last().unwrap(), w, &mut slot.block);
+            timer.lap(Phase::Pack);
         }
 
         // --- one packed verification call for the whole group, straight
@@ -599,16 +612,19 @@ impl<'rt> BatchedEngine<'rt> {
                 cache: view.as_read(),
             })
             .collect();
+        let packed_rows: usize = blocks.iter().map(|b| b.k).sum();
         if self.collect_traces {
             self.packed_traces.push(PackedTrace {
                 w,
-                rows: blocks.iter().map(|b| b.k).sum(),
+                rows: packed_rows,
                 max_ctx: blocks.iter().map(|b| b.cache.ctx_len()).max().unwrap_or(0),
                 seqs: blocks.len(),
                 step: self.steps_done,
             });
         }
+        timer.lap(Phase::Pack);
         let outs = self.runtime.spec_step_packed(w, &blocks);
+        timer.lap(Phase::Verify);
         drop(blocks);
         drop(views);
         let outs = match outs {
@@ -623,14 +639,31 @@ impl<'rt> BatchedEngine<'rt> {
         // return here drops the scratch instead of restoring it — a
         // failed step ends the engine's life anyway, the pool replaces
         // it wholesale.)
+        let mut wins = [0u32; StrategyKind::COUNT];
+        let mut accepted_by = [0u32; StrategyKind::COUNT];
+        let mut accepted_total = 0u32;
+        let mut emitted_total = 0u32;
         for ((&i, slot), out) in idxs.iter().zip(&slots).zip(&outs) {
             let batch = &slot.batch;
             let k = batch.k();
             let kv = self.active[i].kv;
             let (acc, ctx_len) = {
                 let mut wslot = self.pool.slot_mut(kv);
-                judge_and_commit(batch, out, wslot.as_write())?
+                judge_and_commit(batch, out, wslot.as_write(), &mut timer)?
             };
+            if timer.enabled() {
+                // same Empty demotion the serving counters apply: a win
+                // with zero accepted tokens is provenance-free
+                let kind = if acc.accepted == 0 {
+                    StrategyKind::Empty
+                } else {
+                    batch.rows()[acc.row].kind
+                };
+                wins[kind.index()] += 1;
+                accepted_by[kind.index()] += acc.accepted as u32;
+                accepted_total += acc.accepted as u32;
+                emitted_total += acc.emitted.len() as u32;
+            }
             let s = &mut self.active[i];
             s.res.exec_time += out.exec_time;
             if self.collect_traces {
@@ -662,6 +695,22 @@ impl<'rt> BatchedEngine<'rt> {
             // keep the pool's token mirror current so newly-full pages
             // get sealed into the prefix index (no-op in lane mode)
             self.pool.sync_tokens(kv, &self.active[i].seq);
+        }
+        if timer.enabled() {
+            if let Some(rec) = &self.recorder {
+                rec.record_step(StepEvent {
+                    step: self.steps_done,
+                    w: w as u32,
+                    rows: packed_rows as u32,
+                    seqs: idxs.len() as u32,
+                    phase_us: timer.us,
+                    accepted: accepted_total,
+                    emitted: emitted_total,
+                    wins,
+                    accepted_by,
+                    ..StepEvent::default()
+                });
+            }
         }
         self.draft_scratch = slots;
         Ok(())

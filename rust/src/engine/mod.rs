@@ -31,6 +31,7 @@ use crate::draft::{DraftBatch, DraftStrategy, StrategyKind};
 use crate::kvcache::{KvWrite, SharedKvCache};
 use crate::runtime::{ModelRuntime, StepOutput};
 use crate::tokenizer::TokenId;
+use crate::trace::{FlightRecorder, Phase, PhaseTimer, StepEvent};
 
 use acceptance::Acceptance;
 
@@ -127,13 +128,24 @@ pub struct SpecDecoder<'rt> {
     /// under rather than the fixed shape. Output is unchanged either way —
     /// the acceptance invariant does not depend on what was proposed.
     pub controller: Option<SeqController>,
+    /// Flight recorder for per-step phase timings + provenance. `None`
+    /// (the default) skips all timing; a disabled recorder costs one
+    /// branch per step. Never affects emitted tokens.
+    pub recorder: Option<std::sync::Arc<FlightRecorder>>,
 }
 
 impl<'rt> SpecDecoder<'rt> {
     /// A decoder for `runtime` drafting with `strategy` under `cfg`.
     pub fn new(runtime: &'rt ModelRuntime, strategy: Box<dyn DraftStrategy>,
                cfg: EngineConfig) -> Self {
-        SpecDecoder { runtime, strategy, cfg, collect_traces: false, controller: None }
+        SpecDecoder {
+            runtime,
+            strategy,
+            cfg,
+            collect_traces: false,
+            controller: None,
+            recorder: None,
+        }
     }
 
     /// An adaptive decoder: `controller` picks each step's (k, w) and
@@ -146,6 +158,7 @@ impl<'rt> SpecDecoder<'rt> {
             cfg,
             collect_traces: false,
             controller: Some(controller),
+            recorder: None,
         }
     }
 
@@ -196,6 +209,10 @@ impl<'rt> SpecDecoder<'rt> {
                 break; // cache exhausted
             };
 
+            // phase stopwatch: inert (never reads the clock) unless a
+            // live recorder is attached
+            let mut timer = PhaseTimer::new(self.recorder.as_ref().is_some_and(|r| r.enabled()));
+
             // --- draft
             batch.reset(w);
             if w > 0 {
@@ -205,16 +222,41 @@ impl<'rt> SpecDecoder<'rt> {
                 }
             }
             pad_batch(&mut batch, k);
+            timer.lap(Phase::Draft);
             assemble_block_into(&batch, *seq.last().unwrap(), w, &mut block);
+            timer.lap(Phase::Pack);
 
             // --- verify
             let out = self.runtime.spec_step(k, w, &block, &cache)?;
             res.exec_time += out.exec_time;
+            timer.lap(Phase::Verify);
 
             // --- judge + commit
-            let (acc, ctx_len) = judge_and_commit(&batch, &out, &mut cache)?;
+            let (acc, ctx_len) = judge_and_commit(&batch, &out, &mut cache, &mut timer)?;
             if self.collect_traces {
                 res.traces.push(make_trace(&batch, &acc, k, w, ctx_len, out.exec_time));
+            }
+            if timer.enabled() {
+                if let Some(rec) = &self.recorder {
+                    let mut ev = StepEvent {
+                        step: res.calls as u64,
+                        w: w as u32,
+                        rows: k as u32,
+                        seqs: 1,
+                        phase_us: timer.us,
+                        accepted: acc.accepted as u32,
+                        emitted: acc.emitted.len() as u32,
+                        ..StepEvent::default()
+                    };
+                    let kind = if acc.accepted == 0 {
+                        StrategyKind::Empty
+                    } else {
+                        batch.rows()[acc.row].kind
+                    };
+                    ev.wins[kind.index()] = 1;
+                    ev.accepted_by[kind.index()] = acc.accepted as u32;
+                    rec.record_step(ev);
+                }
             }
             match self.controller.as_mut() {
                 Some(c) => c.observe(&StepFeedback {
@@ -304,16 +346,21 @@ pub(crate) fn assemble_block(batch: &DraftBatch, anchor: TokenId, w: usize) -> V
 /// Returns the acceptance and the context length AT CALL TIME (the
 /// cache's length before the commit — what the verifier attended over).
 /// Works against any [`KvWrite`] target: a contiguous lane or a paged
-/// page-table writer commit identically.
+/// page-table writer commit identically. `timer` (inert unless tracing)
+/// attributes the judge and commit spans separately.
 pub(crate) fn judge_and_commit(
     batch: &DraftBatch,
     out: &StepOutput,
     cache: &mut dyn KvWrite,
+    timer: &mut PhaseTimer,
 ) -> Result<(Acceptance, usize)> {
     let ctx_len = cache.ctx_len();
+    timer.skip(); // bookkeeping between laps is nobody's phase
     let acc = acceptance::judge(batch, &out.next_ids, out.w1);
+    timer.lap(Phase::Judge);
     let consumed = acc.accepted + 1; // block tokens whose KV is valid
     cache.commit_tail(&out.k_tail, &out.v_tail, out.k, out.w1, acc.row, consumed)?;
+    timer.lap(Phase::Commit);
     Ok((acc, ctx_len))
 }
 

@@ -48,5 +48,6 @@ pub mod scheduler;
 pub mod server;
 pub mod testkit;
 pub mod tokenizer;
+pub mod trace;
 pub mod util;
 pub mod workload;

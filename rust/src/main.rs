@@ -4,6 +4,8 @@
 //!   serve      start the HTTP serving front-end
 //!   generate   one-shot generation from a prompt
 //!   bench      reproduce the paper's tables/figures
+//!   trace      flight-recorder tooling: replay captured JSONL or run a
+//!              live traced workload (with a `--smoke` overhead gate)
 //!   info       print manifest / artifact summary
 
 use std::path::PathBuf;
@@ -95,6 +97,20 @@ COMMANDS:
                               byte-identity) [--model base] [--smoke]
       all                     everything above
       common: [--prompts N] [--max-new N] [--ks 1,5,10] [--ws 2,6,10]
+  trace                       flight-recorder tooling:
+      --input FILE.jsonl      replay a captured trace (saved from
+                              GET /trace or a previous live run):
+                              per-phase + per-strategy breakdown table
+      [--chrome OUT.json]     also export Chrome tracing format
+                              (chrome://tracing / Perfetto)
+      (without --input)       decode a live workload through one traced
+                              batched engine, summarize, and write the
+                              JSONL under bench_out/
+      [--model base] [--prompts N] [--max-new N]
+      [--smoke]               CI overhead gate: run the workload traced
+                              AND untraced; fail unless outputs are
+                              byte-identical and the packed call schedule
+                              (cost-model throughput) is unchanged
   ci-bench-check              bench-regression gate: compare the
                               bench_out/BENCH_*.json summaries emitted by
                               the smoke benches against a committed
@@ -127,6 +143,7 @@ fn run() -> Result<()> {
         "generate" => generate(&artifacts, &args),
         "serve" => serve(&artifacts, &args),
         "bench" => bench_cmd(&artifacts, &args),
+        "trace" => trace_cmd(&artifacts, &args),
         "ci-bench-check" => check_cmd(&args),
         other => Err(anyhow!("unknown command '{other}'\n{USAGE}")),
     }
@@ -276,6 +293,23 @@ fn parse_budget(args: &Args) -> Result<Option<usize>> {
         0 => None,
         b => Some(b),
     })
+}
+
+/// `ngrammys trace`: replay a captured JSONL trace (`--input`), or run a
+/// live traced workload through one batched engine — `--smoke` makes the
+/// live run the CI trace-overhead gate (byte-identity + unchanged packed
+/// schedule between traced and untraced passes).
+fn trace_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
+    let chrome = args.get("chrome").map(PathBuf::from);
+    if let Some(input) = args.get("input") {
+        return bench::tracecmd::replay(std::path::Path::new(input), chrome.as_deref());
+    }
+    let manifest = Manifest::load(artifacts)?;
+    let model = args.get_or("model", "base");
+    let n_prompts = args.get_usize("prompts", 6).map_err(|e| anyhow!(e))?;
+    let max_new = args.get_usize("max-new", 32).map_err(|e| anyhow!(e))?;
+    let ctx = BenchCtx::load(manifest, model)?;
+    bench::tracecmd::live(&ctx, n_prompts, max_new, args.has_flag("smoke"), chrome.as_deref())
 }
 
 /// The CI bench-regression gate (`ngrammys ci-bench-check`): compares

@@ -6,6 +6,8 @@ use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::draft::StrategyKind;
+use crate::trace::Phase;
+use crate::util::json::Json;
 
 /// Exponential-bucket latency histogram (microseconds).
 #[derive(Debug)]
@@ -50,19 +52,28 @@ impl LatencyHist {
         }
     }
 
-    /// Approximate quantile from the exponential buckets (upper bound).
+    /// Approximate quantile from the exponential buckets, linearly
+    /// interpolated within the winning bucket. Returns 0 on an empty
+    /// histogram; `q` is clamped into [0, 1].
     pub fn quantile_us(&self, q: f64) -> f64 {
         let total = self.count();
         if total == 0 {
             return 0.0;
         }
-        let target = (q * total as f64).ceil() as u64;
-        let mut acc = 0;
+        let q = if q.is_nan() { 0.0 } else { q.clamp(0.0, 1.0) };
+        let target = ((q * total as f64).ceil() as u64).max(1);
+        let mut acc = 0u64;
         for (i, b) in self.buckets.iter().enumerate() {
-            acc += b.load(Ordering::Relaxed);
-            if acc >= target {
-                return (1u64 << i) as f64;
+            let n = b.load(Ordering::Relaxed);
+            if n > 0 && acc + n >= target {
+                // interpolate between the bucket's bounds by the target's
+                // rank within the bucket
+                let lo = if i == 0 { 0u64 } else { 1u64 << (i - 1) };
+                let hi = 1u64 << i;
+                let frac = (target - acc) as f64 / n as f64;
+                return lo as f64 + (hi - lo) as f64 * frac;
             }
+            acc += n;
         }
         (1u64 << (self.buckets.len() - 1)) as f64
     }
@@ -93,6 +104,16 @@ pub struct Metrics {
     pub request_latency: LatencyHistDefault,
     /// per-verification-call latency histogram
     pub step_latency: LatencyHistDefault,
+    /// submit → first emitted token latency histogram (fed by the trace
+    /// hub when tracing is enabled — the serving default)
+    pub ttft: LatencyHistDefault,
+    /// per-request mean inter-token latency histogram ((total - ttft) /
+    /// (tokens - 1)), fed by the trace hub
+    pub inter_token: LatencyHistDefault,
+    /// per-phase wall-clock histograms (µs), indexed by
+    /// [`Phase::index`]; step phases are fed by engine flight recorders,
+    /// queue-wait/prefill by the trace hub on request completion
+    pub phase_latency: [LatencyHistDefault; Phase::COUNT],
     /// requests admitted to the queue but not yet on a worker/lane
     pub queue_depth: AtomicU64,
     /// pooled-lane capacity summed across all live engines (elastic mode
@@ -311,8 +332,67 @@ impl Metrics {
                 c(&self.strategy_accepted[i])
             ));
         }
+        const QUANTILES: [(f64, &str); 3] = [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")];
+        for (q, label) in QUANTILES {
+            s.push_str(&format!(
+                "ngrammys_ttft_us{{quantile=\"{label}\"}} {:.1}\n",
+                self.ttft.quantile_us(q)
+            ));
+        }
+        for (q, label) in QUANTILES {
+            s.push_str(&format!(
+                "ngrammys_inter_token_us{{quantile=\"{label}\"}} {:.1}\n",
+                self.inter_token.quantile_us(q)
+            ));
+        }
+        for p in Phase::ALL {
+            for (q, label) in QUANTILES {
+                s.push_str(&format!(
+                    "ngrammys_phase_us{{phase=\"{}\",quantile=\"{label}\"}} {:.1}\n",
+                    p.label(),
+                    self.phase_latency[p.index()].quantile_us(q)
+                ));
+            }
+        }
         s
     }
+
+    /// JSON latency summary served at `GET /stats`: request counters plus
+    /// ttft / inter-token / per-phase histogram digests.
+    pub fn stats_json(&self) -> Json {
+        let c = |n: &AtomicU64| Json::Num(n.load(Ordering::Relaxed) as f64);
+        Json::obj(vec![
+            ("requests_completed", c(&self.requests_completed)),
+            ("tokens_generated", c(&self.tokens_generated)),
+            ("verify_calls", c(&self.verify_calls)),
+            ("tokens_per_call", Json::Num(self.tokens_per_call())),
+            ("ttft_us", hist_json(&self.ttft)),
+            ("inter_token_us", hist_json(&self.inter_token)),
+            ("request_latency_us", hist_json(&self.request_latency)),
+            (
+                "phases",
+                Json::Obj(
+                    Phase::ALL
+                        .iter()
+                        .map(|p| {
+                            (p.label().to_string(), hist_json(&self.phase_latency[p.index()]))
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// One histogram's JSON digest (count, mean, p50/p90/p99 in µs).
+fn hist_json(h: &LatencyHist) -> Json {
+    Json::obj(vec![
+        ("count", Json::Num(h.count() as f64)),
+        ("mean_us", Json::Num(h.mean_us())),
+        ("p50_us", Json::Num(h.quantile_us(0.5))),
+        ("p90_us", Json::Num(h.quantile_us(0.9))),
+        ("p99_us", Json::Num(h.quantile_us(0.99))),
+    ])
 }
 
 #[cfg(test)]
@@ -329,6 +409,50 @@ mod tests {
         assert!(h.quantile_us(0.5) <= 2048.0);
         assert!(h.quantile_us(0.99) >= 65536.0);
         assert!((h.mean_us() - (9.0 * 1000.0 + 100_000.0) / 10.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn quantile_empty_histogram_returns_zero() {
+        let h = LatencyHist::new();
+        assert_eq!(h.quantile_us(0.5), 0.0);
+        assert_eq!(h.quantile_us(0.99), 0.0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn quantile_clamps_q_outside_unit_interval() {
+        let h = LatencyHist::new();
+        h.observe(Duration::from_micros(100));
+        let lo = h.quantile_us(-3.0);
+        let hi = h.quantile_us(7.5);
+        assert!(lo.is_finite() && hi.is_finite());
+        assert_eq!(lo, h.quantile_us(0.0));
+        assert_eq!(hi, h.quantile_us(1.0));
+        assert_eq!(h.quantile_us(f64::NAN), h.quantile_us(0.0));
+    }
+
+    #[test]
+    fn quantile_single_sample_lands_in_its_bucket() {
+        let h = LatencyHist::new();
+        h.observe(Duration::from_micros(100)); // bucket (64, 128]
+        for q in [0.0, 0.5, 1.0] {
+            let v = h.quantile_us(q);
+            assert!(v > 64.0 && v <= 128.0, "q={q} gave {v}");
+        }
+    }
+
+    #[test]
+    fn quantile_interpolates_within_bucket() {
+        let h = LatencyHist::new();
+        // nine observations in the (512, 1024] bucket
+        for _ in 0..9 {
+            h.observe(Duration::from_micros(1000));
+        }
+        let p50 = h.quantile_us(0.5);
+        // rank 5 of 9 → lo + (hi-lo) * 5/9
+        let expect = 512.0 + 512.0 * 5.0 / 9.0;
+        assert!((p50 - expect).abs() < 1e-9, "p50={p50} expect={expect}");
+        assert_eq!(h.quantile_us(1.0), 1024.0);
     }
 
     #[test]
@@ -388,6 +512,45 @@ mod tests {
                 assert!(r.contains(&field), "missing {field}");
             }
         }
+        // latency-quantile families added with the flight recorder: every
+        // documented quantile label must render for ttft / inter-token and
+        // for every phase
+        for q in ["0.5", "0.9", "0.99"] {
+            for family in ["ngrammys_ttft_us", "ngrammys_inter_token_us"] {
+                let field = format!("{family}{{quantile=\"{q}\"}} ");
+                assert!(r.contains(&field), "missing {field}");
+            }
+            for p in Phase::ALL {
+                let field =
+                    format!("ngrammys_phase_us{{phase=\"{}\",quantile=\"{q}\"}} ", p.label());
+                assert!(r.contains(&field), "missing {field}");
+            }
+        }
+    }
+
+    #[test]
+    fn stats_json_digests_latency_histograms() {
+        let m = Metrics::new();
+        m.record_request(Duration::from_millis(5), 30, 10, 20);
+        m.ttft.observe(Duration::from_micros(800));
+        m.inter_token.observe(Duration::from_micros(90));
+        m.phase_latency[Phase::Verify.index()].observe(Duration::from_micros(400));
+        let j = m.stats_json();
+        assert_eq!(j.get("requests_completed").and_then(|v| v.as_f64()), Some(1.0));
+        let ttft = j.get("ttft_us").expect("ttft digest");
+        assert_eq!(ttft.get("count").and_then(|v| v.as_f64()), Some(1.0));
+        assert!(ttft.get("p50_us").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert!(ttft.get("p99_us").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        let phases = j.get("phases").expect("phase digests");
+        let verify = phases.get("verify").expect("verify digest");
+        assert!(verify.get("mean_us").and_then(|v| v.as_f64()).unwrap() > 0.0);
+        assert_eq!(
+            phases.get("draft").and_then(|p| p.get("count")).and_then(|v| v.as_f64()),
+            Some(0.0)
+        );
+        // the summary must parse back through the in-tree JSON parser
+        let text = j.to_string();
+        assert!(crate::util::json::Json::parse(&text).is_ok());
     }
 
     #[test]

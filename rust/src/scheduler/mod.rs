@@ -39,7 +39,7 @@ use std::sync::atomic::Ordering;
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -53,6 +53,7 @@ use crate::engine::{GenResult, NoDraft, SpecDecoder};
 use crate::metrics::Metrics;
 use crate::runtime::ModelRuntime;
 use crate::tokenizer::TokenId;
+use crate::trace::{RequestEvent, TraceHub, DEFAULT_RING_CAPACITY};
 
 /// Strategy selector exposed through the API / CLI.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -268,6 +269,9 @@ pub struct GenResponse {
 struct Job {
     req: GenRequest,
     reply: Sender<Result<GenResponse>>,
+    /// stamped in [`Scheduler::submit`]; queue-wait and TTFT spans are
+    /// measured from here
+    t_submit: Instant,
 }
 
 /// The scheduler handle: cheap to clone, submits jobs to the pool.
@@ -275,6 +279,9 @@ pub struct Scheduler {
     tx: SyncSender<Job>,
     /// shared serving metrics (rendered at GET /metrics)
     pub metrics: Arc<Metrics>,
+    /// flight-recorder hub: per-engine step rings + request spans
+    /// (served at GET /trace and summarized at GET /stats)
+    pub trace: Arc<TraceHub>,
     workers: Vec<JoinHandle<()>>,
 }
 
@@ -290,6 +297,7 @@ impl Scheduler {
         let art = manifest.model(model)?.clone();
         let tables = Arc::new(NgramTables::load(&art)?);
         let metrics = Arc::new(Metrics::new());
+        let trace = Arc::new(TraceHub::with_metrics(DEFAULT_RING_CAPACITY, metrics.clone()));
         let (tx, rx) = sync_channel::<Job>(cfg.queue_cap);
         let rx = Arc::new(Mutex::new(rx));
 
@@ -298,10 +306,11 @@ impl Scheduler {
             let rx = rx.clone();
             let tables = tables.clone();
             let metrics = metrics.clone();
+            let trace = trace.clone();
             let scfg = cfg.clone();
             let handle = std::thread::Builder::new()
                 .name("ngrammys-engine-pool".to_string())
-                .spawn(move || pool::run_pool(art, tables, metrics, rx, scfg))
+                .spawn(move || pool::run_pool(art, tables, metrics, trace, rx, scfg))
                 .expect("spawning engine pool");
             workers.push(handle);
         } else {
@@ -310,6 +319,7 @@ impl Scheduler {
                 let art = art.clone();
                 let tables = tables.clone();
                 let metrics = metrics.clone();
+                let trace = trace.clone();
                 let scfg = cfg.clone();
                 let handle = std::thread::Builder::new()
                     .name(format!("ngrammys-worker-{wid}"))
@@ -321,13 +331,13 @@ impl Scheduler {
                                 return;
                             }
                         };
-                        worker_loop(wid, runtime, tables, metrics, rx, &scfg);
+                        worker_loop(wid, runtime, tables, metrics, trace, rx, &scfg);
                     })
                     .expect("spawning worker");
                 workers.push(handle);
             }
         }
-        Ok(Scheduler { tx, metrics, workers })
+        Ok(Scheduler { tx, metrics, trace, workers })
     }
 
     /// Non-blocking admission; `Err` = queue full (backpressure). A
@@ -337,7 +347,7 @@ impl Scheduler {
     pub fn submit(&self, req: GenRequest) -> Result<Receiver<Result<GenResponse>>> {
         self.metrics.requests_total.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-        match self.tx.try_send(Job { req, reply: reply_tx }) {
+        match self.tx.try_send(Job { req, reply: reply_tx, t_submit: Instant::now() }) {
             Ok(()) => {
                 self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
                 Ok(reply_rx)
@@ -366,9 +376,22 @@ impl Scheduler {
     }
 }
 
-fn finish_response(metrics: &Metrics, t_submit: Instant, r: GenResult) -> GenResponse {
+/// Fold a finished [`GenResult`] into the serving metrics + trace hub and
+/// build the reply. `queue_wait` is the submit → dequeue/admit dwell;
+/// TTFT is that dwell plus the prefill call (the first token IS the
+/// prefill's output), inter-token latency is the remaining decode spread
+/// over the remaining tokens — both observed into their histograms and
+/// logged as a [`RequestEvent`] by the hub.
+fn finish_response(
+    metrics: &Metrics,
+    trace: &TraceHub,
+    t_submit: Instant,
+    queue_wait: Duration,
+    r: GenResult,
+) -> GenResponse {
     let accepted = r.tokens.len().saturating_sub(r.calls);
-    metrics.record_request(t_submit.elapsed(), r.tokens.len(), r.calls, accepted);
+    let total = t_submit.elapsed();
+    metrics.record_request(total, r.tokens.len(), r.calls, accepted);
     for tr in &r.traces {
         metrics.step_latency.observe(tr.exec_time);
         // a call where no draft token matched has no winning strategy —
@@ -377,22 +400,34 @@ fn finish_response(metrics: &Metrics, t_submit: Instant, r: GenResult) -> GenRes
         let kind = if tr.accepted > 0 { tr.kind } else { StrategyKind::Empty };
         metrics.record_strategy_step(kind, tr.accepted);
     }
+    let ttft = queue_wait + r.prefill_time;
+    trace.record_request(RequestEvent {
+        t_us: 0, // stamped by the hub
+        queue_us: queue_wait.as_micros() as u64,
+        prefill_us: r.prefill_time.as_micros() as u64,
+        ttft_us: ttft.as_micros() as u64,
+        total_us: total.as_micros() as u64,
+        tokens: r.tokens.len() as u32,
+        calls: r.calls as u32,
+    });
     GenResponse {
         tokens_per_call: r.tokens_per_call(),
         calls: r.calls,
-        latency_ms: t_submit.elapsed().as_secs_f64() * 1e3,
+        latency_ms: total.as_secs_f64() * 1e3,
         tokens: r.tokens,
     }
 }
 
 fn worker_loop(
-    _wid: usize,
+    wid: usize,
     runtime: ModelRuntime,
     tables: Arc<NgramTables>,
     metrics: Arc<Metrics>,
+    trace: Arc<TraceHub>,
     rx: Arc<Mutex<Receiver<Job>>>,
     scfg: &ServeConfig,
 ) {
+    let recorder = trace.recorder_for_engine(wid as u64);
     loop {
         // hold the lock only while dequeuing
         let job = match rx.lock().unwrap().recv() {
@@ -400,16 +435,17 @@ fn worker_loop(
             Err(_) => return, // scheduler dropped
         };
         metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
-        let t = Instant::now();
+        let queue_wait = job.t_submit.elapsed();
         let strategy = make_strategy_with_cache(
             job.req.strategy, &tables, job.req.engine.q, &scfg.session_cache);
         let mut dec = SpecDecoder::new(&runtime, strategy, job.req.engine.clone());
         dec.controller = controller_for_request(
             job.req.strategy, &tables, job.req.engine.q, scfg, &runtime, &metrics);
         dec.collect_traces = true; // feeds the step-latency histogram
+        dec.recorder = Some(recorder.clone());
         let result = dec
             .generate(&job.req.prompt)
-            .map(|r| finish_response(&metrics, t, r));
+            .map(|r| finish_response(&metrics, &trace, job.t_submit, queue_wait, r));
         let _ = job.reply.send(result);
     }
 }

@@ -51,6 +51,7 @@ use crate::draft::NgramTables;
 use crate::engine::{AutoBudget, BatchedEngine, SeqId};
 use crate::metrics::{EngineGauges, Metrics};
 use crate::runtime::ModelRuntime;
+use crate::trace::TraceHub;
 
 use super::admission::{request_score, strategy_prior_tpc, AdmissionQueue};
 use super::autoscale::{Autoscaler, Demand, EngineScaler};
@@ -194,6 +195,7 @@ pub(super) fn run_pool(
     art: ModelArtifacts,
     tables: Arc<NgramTables>,
     metrics: Arc<Metrics>,
+    trace: Arc<TraceHub>,
     rx: Arc<Mutex<Receiver<Job>>>,
     scfg: ServeConfig,
 ) {
@@ -208,7 +210,7 @@ pub(super) fn run_pool(
     let mut next_id = 0u64;
     let mut engines: Vec<EngineSlot> = Vec::new();
     for _ in 0..boot {
-        engines.push(spawn_engine(&mut next_id, &art, &tables, &metrics, &scfg, lane_cap));
+        engines.push(spawn_engine(&mut next_id, &art, &tables, &metrics, &trace, &scfg, lane_cap));
     }
 
     let mut adq: AdmissionQueue<PoolJob> = AdmissionQueue::new();
@@ -265,7 +267,15 @@ pub(super) fn run_pool(
             let target = scaler.target_engines(lane_demand(&engines, &adq), lane_cap, live);
             metrics.engines_target.store(target as u64, Ordering::Relaxed);
             if target > live && spawn_failures <= MAX_SPAWN_FAILURES {
-                engines.push(spawn_engine(&mut next_id, &art, &tables, &metrics, &scfg, lane_cap));
+                engines.push(spawn_engine(
+                    &mut next_id,
+                    &art,
+                    &tables,
+                    &metrics,
+                    &trace,
+                    &scfg,
+                    lane_cap,
+                ));
             } else if target < live {
                 // only an IDLE engine retires; if none is idle the
                 // scaler simply re-decides on a later iteration
@@ -277,7 +287,15 @@ pub(super) fn run_pool(
             // failure cap so a broken artifact set cannot spawn forever)
             while live_count(&engines) < es_cfg.max_engines && spawn_failures <= MAX_SPAWN_FAILURES
             {
-                engines.push(spawn_engine(&mut next_id, &art, &tables, &metrics, &scfg, lane_cap));
+                engines.push(spawn_engine(
+                    &mut next_id,
+                    &art,
+                    &tables,
+                    &metrics,
+                    &trace,
+                    &scfg,
+                    lane_cap,
+                ));
             }
         }
 
@@ -520,6 +538,7 @@ fn spawn_engine(
     art: &ModelArtifacts,
     tables: &Arc<NgramTables>,
     metrics: &Arc<Metrics>,
+    trace: &Arc<TraceHub>,
     scfg: &ServeConfig,
     lane_cap: usize,
 ) -> EngineSlot {
@@ -530,6 +549,7 @@ fn spawn_engine(
     let art = art.clone();
     let tables = tables.clone();
     let metrics = metrics.clone();
+    let trace = trace.clone();
     let scfg = scfg.clone();
     let st = status.clone();
     let handle = std::thread::Builder::new()
@@ -556,7 +576,7 @@ fn spawn_engine(
                     return;
                 }
             };
-            engine_worker_loop(&runtime, &tables, &metrics, rx, &scfg, &st, lane_cap);
+            engine_worker_loop(id, &runtime, &tables, &metrics, &trace, rx, &scfg, &st, lane_cap);
         })
         .expect("spawning engine worker");
     EngineSlot { id, tx: Some(tx), status, handle }
@@ -604,7 +624,10 @@ fn store_page_stats(status: &EngineStatus, eng: &BatchedEngine) {
 /// its lane's class slot back on retirement.
 struct Inflight {
     reply: Sender<Result<GenResponse>>,
-    t: Instant,
+    /// when the request entered the scheduler (total-latency clock)
+    t_submit: Instant,
+    /// dwell between submit and lane admission (TTFT's queue component)
+    queue_wait: Duration,
     class: DepthClass,
 }
 
@@ -614,16 +637,20 @@ struct Inflight {
 /// steps so routed requests join the running batch without waiting for
 /// it to finish. Exits when the dispatcher closes the channel (retire or
 /// shutdown) and the last resident sequence completes.
+#[allow(clippy::too_many_arguments)]
 fn engine_worker_loop(
+    id: u64,
     runtime: &ModelRuntime,
     tables: &Arc<NgramTables>,
     metrics: &Arc<Metrics>,
+    trace: &Arc<TraceHub>,
     rx: Receiver<PoolJob>,
     scfg: &ServeConfig,
     status: &EngineStatus,
     lane_cap: usize,
 ) {
     let analog = runtime.artifacts().dims.analog.clone();
+    let recorder = trace.recorder_for_engine(id);
     let mut au_cfg = scfg.autoscale.clone();
     au_cfg.max_lanes = lane_cap;
     au_cfg.min_lanes = au_cfg.min_lanes.clamp(1, lane_cap);
@@ -631,6 +658,7 @@ fn engine_worker_loop(
     let mut scaler = Autoscaler::new(au_cfg);
 
     let mut eng = fresh_engine(runtime, boot_lanes, scfg, &analog);
+    eng.recorder = Some(recorder.clone());
     status.lanes.store(eng.capacity(), Ordering::Relaxed);
     status.lanes_target.store(eng.capacity(), Ordering::Relaxed);
     status.kv_bytes.store(eng.kv_bytes() as u64, Ordering::Relaxed);
@@ -712,11 +740,13 @@ fn engine_worker_loop(
                 if let Some(b) = eng.last_step_budget() {
                     metrics.derived_budget.store(b as u64, Ordering::Relaxed);
                 }
-                for (id, r) in done {
-                    if let Some(inf) = inflight.remove(&id) {
+                for (sid, r) in done {
+                    if let Some(inf) = inflight.remove(&sid) {
                         status.active.fetch_sub(1, Ordering::Relaxed);
                         status.class_counter(inf.class).fetch_sub(1, Ordering::Relaxed);
-                        let _ = inf.reply.send(Ok(finish_response(metrics, inf.t, r)));
+                        let resp =
+                            finish_response(metrics, trace, inf.t_submit, inf.queue_wait, r);
+                        let _ = inf.reply.send(Ok(resp));
                     }
                 }
             }
@@ -732,6 +762,7 @@ fn engine_worker_loop(
                 }
                 let lanes = eng.capacity();
                 eng = fresh_engine(runtime, lanes, scfg, &analog);
+                eng.recorder = Some(recorder.clone());
             }
         }
         status.heat_milli.store(
@@ -774,10 +805,11 @@ fn admit_pool_job(
     );
     let controller = controller_for_request(
         pj.job.req.strategy, tables, pj.job.req.engine.q, scfg, runtime, metrics);
-    // start the latency clock BEFORE admit: admit runs the prefill, which
-    // the per-sequence worker's clock also covers — keep the modes
-    // comparable in latency_ms and /metrics
-    let t = Instant::now();
+    // the queue dwell ends HERE, before admit: admit runs the prefill,
+    // which the flight recorder attributes separately from queue wait, and
+    // the total-latency clock keeps running from t_submit so both serving
+    // modes stay comparable in latency_ms and /metrics
+    let queue_wait = pj.job.t_submit.elapsed();
     let admitted =
         eng.admit_with(&pj.job.req.prompt, strategy, controller, pj.job.req.engine.clone());
     // account active BEFORE giving the backlog slot back: held() must
@@ -787,7 +819,13 @@ fn admit_pool_job(
         Ok(id) => {
             status.active.fetch_add(1, Ordering::Relaxed);
             status.backlog.fetch_sub(1, Ordering::Relaxed);
-            inflight.insert(id, Inflight { reply: pj.job.reply, t, class: pj.class });
+            let inf = Inflight {
+                reply: pj.job.reply,
+                t_submit: pj.job.t_submit,
+                queue_wait,
+                class: pj.class,
+            };
+            inflight.insert(id, inf);
         }
         Err(e) => {
             status.class_counter(pj.class).fetch_sub(1, Ordering::Relaxed);

@@ -7,7 +7,14 @@
 //!                     "calls": int, "latency_ms": f}
 //!   GET  /metrics    prometheus-style text, including the per-strategy
 //!                    win/accepted-token counters (which draft source is
-//!                    actually paying for its rows)
+//!                    actually paying for its rows) and the ttft /
+//!                    inter-token / per-phase latency quantiles
+//!   GET  /stats      JSON latency summary: request counts plus
+//!                    ttft/inter-token/request-latency digests and
+//!                    per-phase quantiles from the same histograms
+//!   GET  /trace?n=K  the last K flight-recorder events (decode steps +
+//!                    request spans, merged across engines) as JSONL —
+//!                    replayable by `ngrammys trace --input`
 //!   GET  /healthz    "ok"
 //!
 //! Requests that don't name a strategy get `ServeConfig::default_strategy`
@@ -21,7 +28,9 @@
 //! Request hardening: the parser enforces a body-size cap (1 MiB), header
 //! count/size caps, and a valid Content-Length on POST. Violations get a
 //! proper 4xx JSON error response ({"error": ...}) instead of a dropped
-//! connection.
+//! connection. Routing errors are JSON too: an unknown path is a 404 and
+//! a known path hit with the wrong method is a 405 naming the method it
+//! supports.
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -32,7 +41,12 @@ use anyhow::{anyhow, Result};
 use crate::config::{EngineConfig, ServeConfig};
 use crate::scheduler::{GenRequest, Scheduler, StrategyName};
 use crate::tokenizer::BpeTokenizer;
+use crate::trace::to_jsonl;
 use crate::util::json::Json;
+
+/// How many flight-recorder events `GET /trace` returns when the request
+/// doesn't pass `?n=K`.
+pub const DEFAULT_TRACE_EVENTS: usize = 256;
 
 /// HTTP front-end: the scheduler handle, tokenizer and settings one
 /// accept loop serves.
@@ -99,20 +113,44 @@ impl Server {
     }
 
     fn route(&self, req: &HttpRequest) -> (&'static str, String, &'static str) {
-        match (req.method.as_str(), req.path.as_str()) {
-            ("GET", "/healthz") => ("200 OK", "ok\n".into(), "text/plain"),
-            ("GET", "/metrics") => {
-                ("200 OK", self.scheduler.metrics.render(), "text/plain")
+        // the request target may carry a query string; route on the bare
+        // path so `/trace?n=64` still hits `/trace`
+        let (path, query) = match req.path.split_once('?') {
+            Some((p, q)) => (p, q),
+            None => (req.path.as_str(), ""),
+        };
+        let err = |msg: String| Json::obj(vec![("error", Json::Str(msg))]).to_string();
+        // every known path serves exactly one method: anything else on it
+        // is a 405 naming the method it supports, an unknown path is a 404
+        let allowed = match path {
+            "/healthz" | "/metrics" | "/stats" | "/trace" => "GET",
+            "/generate" => "POST",
+            _ => {
+                return ("404 Not Found", err(format!("no such path: {path}")), "application/json")
             }
-            ("POST", "/generate") => match self.generate(&req.body) {
+        };
+        if req.method != allowed {
+            let msg = format!("{path} only supports {allowed}, got {}", req.method);
+            return ("405 Method Not Allowed", err(msg), "application/json");
+        }
+        match path {
+            "/healthz" => ("200 OK", "ok\n".into(), "text/plain"),
+            "/metrics" => ("200 OK", self.scheduler.metrics.render(), "text/plain"),
+            "/stats" => {
+                ("200 OK", self.scheduler.metrics.stats_json().to_string(), "application/json")
+            }
+            "/trace" => {
+                let n = query_param(query, "n")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(DEFAULT_TRACE_EVENTS);
+                let events = self.scheduler.trace.recent(n);
+                ("200 OK", to_jsonl(&events), "application/x-ndjson")
+            }
+            "/generate" => match self.generate(&req.body) {
                 Ok(j) => ("200 OK", j.to_string(), "application/json"),
-                Err(e) => (
-                    "400 Bad Request",
-                    Json::obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string(),
-                    "application/json",
-                ),
+                Err(e) => ("400 Bad Request", err(format!("{e:#}")), "application/json"),
             },
-            _ => ("404 Not Found", "not found\n".into(), "text/plain"),
+            _ => unreachable!("every path in the allow table is matched above"),
         }
     }
 
@@ -149,6 +187,16 @@ impl Server {
             ("latency_ms", Json::Num(resp.latency_ms)),
         ]))
     }
+}
+
+/// First value of `key` in a URL query string (`"a=1&b=2"`), `None` when
+/// absent. Values are taken verbatim — no percent-decoding, which is fine
+/// for the numeric parameters the server defines.
+fn query_param<'a>(query: &'a str, key: &str) -> Option<&'a str> {
+    query.split('&').find_map(|kv| {
+        let (k, v) = kv.split_once('=')?;
+        (k == key).then_some(v)
+    })
 }
 
 /// One parsed HTTP request.

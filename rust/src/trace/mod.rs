@@ -1,0 +1,722 @@
+//! Decode-path flight recorder: per-engine seqlock ring buffers of step
+//! events plus a process-wide hub that merges them into an exportable
+//! trace.
+//!
+//! The paper's argument is a cost-accounting one — learning-free drafts
+//! win because drafting is negligible next to verification — so the
+//! recorder's job is to say where each decode step's wall-clock actually
+//! goes. Every packed step logs a [`StepEvent`] carrying per-phase
+//! durations ([`Phase`]: draft propose, batch pack, model verify,
+//! acceptance judge, KV commit) plus per-row provenance (which
+//! [`StrategyKind`] won, how many tokens it got accepted); every request
+//! logs admission → first-token → completion spans as a
+//! [`RequestEvent`].
+//!
+//! Tracing is zero-cost when idle: a disabled recorder is one relaxed
+//! atomic load and a branch (`Instant::now` is never called), an enabled
+//! one is a handful of clock reads and a seqlock ring write — no locks,
+//! no allocation, no syscalls on the step path. `rust/tests/trace.rs`
+//! pins both properties: traced output is byte-identical to untraced and
+//! cost-model throughput is unchanged.
+
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{fence, AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::draft::StrategyKind;
+use crate::metrics::Metrics;
+use crate::util::json::Json;
+
+pub mod report;
+
+/// Default per-engine ring capacity (events); old events are overwritten.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// Decode-path phase taxonomy. `QueueWait` and `Prefill` are request-level
+/// spans (admission queue dwell, prompt prefill); the rest are the packed
+/// step lifecycle in [`crate::engine::BatchedEngine`] order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// submit → dequeue dwell in the admission queue
+    QueueWait,
+    /// prompt prefill on admission (one full-context model call)
+    Prefill,
+    /// draft proposal: strategy reset/propose + row padding
+    Draft,
+    /// batch pack: arena assembly + KV views + packed-block build
+    Pack,
+    /// the packed model verification call
+    Verify,
+    /// acceptance judging (longest agreeing row vs greedy column)
+    Judge,
+    /// KV tail commit (including copy-on-write page work)
+    Commit,
+}
+
+impl Phase {
+    /// Number of phases (sizes array-backed per-phase statistics).
+    pub const COUNT: usize = 7;
+
+    /// Every phase, in `index()` order.
+    pub const ALL: [Phase; Self::COUNT] = [
+        Phase::QueueWait,
+        Phase::Prefill,
+        Phase::Draft,
+        Phase::Pack,
+        Phase::Verify,
+        Phase::Judge,
+        Phase::Commit,
+    ];
+
+    /// Dense index into `ALL` (declaration order == discriminant).
+    pub fn index(&self) -> usize {
+        *self as usize
+    }
+
+    /// Stable label used in metrics, JSONL and report tables.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::QueueWait => "queue-wait",
+            Phase::Prefill => "prefill",
+            Phase::Draft => "draft",
+            Phase::Pack => "pack",
+            Phase::Verify => "verify",
+            Phase::Judge => "judge",
+            Phase::Commit => "commit",
+        }
+    }
+}
+
+/// One packed decode step's record: fixed-size and `Copy` so the seqlock
+/// ring can publish it with plain stores and readers can detect torn
+/// copies by sequence number alone.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepEvent {
+    /// microseconds since the owning [`TraceHub`]'s epoch, stamped when
+    /// the step's group finished
+    pub t_us: u64,
+    /// owning engine's stable spawn ordinal
+    pub engine: u64,
+    /// engine-local step counter
+    pub step: u64,
+    /// draft depth (tokens per row) of this packed group
+    pub w: u32,
+    /// total draft rows packed across the group's sequences
+    pub rows: u32,
+    /// sequences in the packed group
+    pub seqs: u32,
+    /// per-phase wall-clock microseconds, indexed by [`Phase::index`]
+    /// (`QueueWait`/`Prefill` stay 0 — those are request-level spans)
+    pub phase_us: [u64; Phase::COUNT],
+    /// draft tokens accepted across the group this step
+    pub accepted: u32,
+    /// tokens emitted across the group this step (accepted + greedy)
+    pub emitted: u32,
+    /// per-strategy step wins this group, indexed by
+    /// [`StrategyKind::index`]
+    pub wins: [u32; StrategyKind::COUNT],
+    /// per-strategy accepted draft tokens this group, same indexing
+    pub accepted_by: [u32; StrategyKind::COUNT],
+}
+
+/// One request's latency record: admission → first token → completion.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RequestEvent {
+    /// microseconds since the hub epoch, stamped at completion
+    pub t_us: u64,
+    /// submit → dequeue dwell in the scheduler queue (µs)
+    pub queue_us: u64,
+    /// prompt prefill span (µs)
+    pub prefill_us: u64,
+    /// submit → first emitted token (µs)
+    pub ttft_us: u64,
+    /// submit → reply (µs)
+    pub total_us: u64,
+    /// tokens generated
+    pub tokens: u32,
+    /// verification calls spent
+    pub calls: u32,
+}
+
+/// A merged trace entry: either a packed step or a completed request.
+#[derive(Debug, Clone, Copy)]
+pub enum TraceEvent {
+    /// one packed decode step
+    Step(StepEvent),
+    /// one completed request
+    Request(RequestEvent),
+}
+
+impl TraceEvent {
+    /// Event timestamp (µs since the hub epoch) for merge ordering.
+    pub fn t_us(&self) -> u64 {
+        match self {
+            TraceEvent::Step(e) => e.t_us,
+            TraceEvent::Request(e) => e.t_us,
+        }
+    }
+}
+
+/// One seqlock slot: version counter + the event payload. The counter is
+/// `2*h + 1` while version `h` is being written and `2*(h + 1)` once it
+/// is published, so a reader knows both "torn" and "which version".
+struct Slot {
+    seq: AtomicU64,
+    data: UnsafeCell<StepEvent>,
+}
+
+/// Fixed-capacity single-writer seqlock ring of [`StepEvent`]s.
+///
+/// The owning engine thread is the only writer; any thread may snapshot.
+/// Writers never block or allocate; readers copy optimistically and
+/// retry (or skip) slots whose sequence number moved underneath them.
+pub struct StepRing {
+    slots: Box<[Slot]>,
+    head: AtomicU64,
+}
+
+// SAFETY: `data` is only written by the single writer thread between the
+// odd/even seq stores; readers access it exclusively through
+// `read_volatile` and discard any copy whose seq check fails, so a torn
+// read is detected, never interpreted.
+unsafe impl Sync for StepRing {}
+
+impl std::fmt::Debug for StepRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StepRing")
+            .field("capacity", &self.slots.len())
+            .field("head", &self.head.load(Ordering::Relaxed))
+            .finish()
+    }
+}
+
+impl StepRing {
+    /// A ring holding the last `capacity` events (capacity is clamped to
+    /// at least 1).
+    pub fn new(capacity: usize) -> Self {
+        let slots = (0..capacity.max(1))
+            .map(|_| Slot { seq: AtomicU64::new(0), data: UnsafeCell::new(StepEvent::default()) })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        StepRing { slots, head: AtomicU64::new(0) }
+    }
+
+    /// Events ever pushed (not capped at capacity).
+    pub fn pushed(&self) -> u64 {
+        self.head.load(Ordering::Acquire)
+    }
+
+    /// Publish one event. Single-writer: only the owning engine thread
+    /// may call this.
+    pub fn push(&self, ev: StepEvent) {
+        let h = self.head.load(Ordering::Relaxed);
+        let slot = &self.slots[h as usize % self.slots.len()];
+        slot.seq.store(2 * h + 1, Ordering::Relaxed);
+        fence(Ordering::Release);
+        // SAFETY: single writer (see struct docs); readers detect this
+        // in-flight write via the odd seq and discard their copy.
+        unsafe { *slot.data.get() = ev };
+        slot.seq.store(2 * (h + 1), Ordering::Release);
+        self.head.store(h + 1, Ordering::Release);
+    }
+
+    /// Copy out up to the last `n` events, oldest first. Slots the writer
+    /// overtakes mid-copy are skipped rather than returned torn.
+    pub fn snapshot(&self, n: usize) -> Vec<StepEvent> {
+        let head = self.head.load(Ordering::Acquire);
+        let stored = head.min(self.slots.len() as u64);
+        let take = (n as u64).min(stored);
+        let mut out = Vec::with_capacity(take as usize);
+        for h in (head - take)..head {
+            let slot = &self.slots[h as usize % self.slots.len()];
+            let want = 2 * (h + 1);
+            for _attempt in 0..4 {
+                let s1 = slot.seq.load(Ordering::Acquire);
+                if s1 > want {
+                    break; // writer lapped this slot: version h is gone
+                }
+                // SAFETY: volatile copy of Copy data; validity is
+                // established by the seq re-check below, a torn copy is
+                // discarded.
+                let ev = unsafe { std::ptr::read_volatile(slot.data.get()) };
+                fence(Ordering::Acquire);
+                let s2 = slot.seq.load(Ordering::Relaxed);
+                if s1 == s2 && s1 == want {
+                    out.push(ev);
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One engine's flight recorder: an enabled flag shared with the hub, the
+/// hub's epoch for aligned timestamps, and this engine's private
+/// [`StepRing`]. Cloned `Arc`s hand the reader side to the hub while the
+/// engine thread keeps the (single) writer side.
+#[derive(Debug)]
+pub struct FlightRecorder {
+    engine: u64,
+    enabled: Arc<AtomicBool>,
+    epoch: Instant,
+    ring: StepRing,
+    metrics: Option<Arc<Metrics>>,
+}
+
+impl FlightRecorder {
+    /// A standalone recorder (not attached to a hub) — handy for benches
+    /// and tests that trace one engine directly.
+    pub fn standalone(engine: u64, capacity: usize) -> Arc<FlightRecorder> {
+        Arc::new(FlightRecorder {
+            engine,
+            enabled: Arc::new(AtomicBool::new(true)),
+            epoch: Instant::now(),
+            ring: StepRing::new(capacity),
+            metrics: None,
+        })
+    }
+
+    /// Whether recording is on. This is the whole cost of a disabled
+    /// recorder: one relaxed load.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Owning engine's id (stamped into every event).
+    pub fn engine_id(&self) -> u64 {
+        self.engine
+    }
+
+    /// Microseconds since the hub epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record one step: stamps engine id + timestamp, publishes to the
+    /// ring, and feeds the per-phase latency histograms when the recorder
+    /// is wired to [`Metrics`]. No-op when disabled.
+    pub fn record_step(&self, mut ev: StepEvent) {
+        if !self.enabled() {
+            return;
+        }
+        ev.engine = self.engine;
+        ev.t_us = self.now_us();
+        self.ring.push(ev);
+        if let Some(m) = &self.metrics {
+            for p in Phase::ALL {
+                let us = ev.phase_us[p.index()];
+                if us > 0 {
+                    m.phase_latency[p.index()].observe(std::time::Duration::from_micros(us));
+                }
+            }
+        }
+    }
+
+    /// Copy out up to the last `n` step events, oldest first.
+    pub fn snapshot(&self, n: usize) -> Vec<StepEvent> {
+        self.ring.snapshot(n)
+    }
+
+    /// Steps ever recorded by this engine.
+    pub fn steps_recorded(&self) -> u64 {
+        self.ring.pushed()
+    }
+}
+
+/// Process-wide trace hub: owns the epoch, the enabled flag, the bounded
+/// request-event log, and the reader side of every engine's recorder.
+/// The scheduler creates one per serving stack; `GET /trace` and
+/// `GET /stats` read through it.
+#[derive(Debug)]
+pub struct TraceHub {
+    enabled: Arc<AtomicBool>,
+    capacity: usize,
+    epoch: Instant,
+    engines: Mutex<Vec<Arc<FlightRecorder>>>,
+    requests: Mutex<VecDeque<RequestEvent>>,
+    metrics: Option<Arc<Metrics>>,
+}
+
+impl TraceHub {
+    /// An enabled hub whose engine rings hold `capacity` events each.
+    pub fn new(capacity: usize) -> Self {
+        TraceHub {
+            enabled: Arc::new(AtomicBool::new(true)),
+            capacity: capacity.max(1),
+            epoch: Instant::now(),
+            engines: Mutex::new(Vec::new()),
+            requests: Mutex::new(VecDeque::new()),
+            metrics: None,
+        }
+    }
+
+    /// An enabled hub that also feeds the ttft / inter-token / per-phase
+    /// latency histograms on `metrics`.
+    pub fn with_metrics(capacity: usize, metrics: Arc<Metrics>) -> Self {
+        let mut hub = Self::new(capacity);
+        hub.metrics = Some(metrics);
+        hub
+    }
+
+    /// A disabled hub: recorders handed out record nothing until
+    /// [`TraceHub::set_enabled`] flips it on.
+    pub fn disabled(capacity: usize) -> Self {
+        let hub = Self::new(capacity);
+        hub.enabled.store(false, Ordering::Relaxed);
+        hub
+    }
+
+    /// Flip recording on/off for every recorder minted by this hub.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether recording is currently on.
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Microseconds since the hub epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Mint (and register) engine `id`'s recorder. The engine thread
+    /// keeps the returned `Arc` as the ring's single writer; the hub
+    /// keeps a clone for snapshots. Re-registering an id (engine replaced
+    /// after a step error) supersedes the old recorder.
+    pub fn recorder_for_engine(&self, id: u64) -> Arc<FlightRecorder> {
+        let rec = Arc::new(FlightRecorder {
+            engine: id,
+            enabled: Arc::clone(&self.enabled),
+            epoch: self.epoch,
+            ring: StepRing::new(self.capacity),
+            metrics: self.metrics.clone(),
+        });
+        let mut engines = self.engines.lock().unwrap();
+        engines.retain(|r| r.engine != id);
+        engines.push(Arc::clone(&rec));
+        rec
+    }
+
+    /// Record one completed request's spans: appends a [`RequestEvent`]
+    /// (bounded by the ring capacity) and feeds the ttft / inter-token /
+    /// queue-wait / prefill histograms when wired to metrics. No-op when
+    /// the hub is disabled.
+    pub fn record_request(&self, mut ev: RequestEvent) {
+        if !self.enabled() {
+            return;
+        }
+        ev.t_us = self.now_us();
+        if let Some(m) = &self.metrics {
+            let us = std::time::Duration::from_micros;
+            m.ttft.observe(us(ev.ttft_us));
+            if ev.tokens > 1 {
+                let inter = (ev.total_us.saturating_sub(ev.ttft_us)) / (ev.tokens as u64 - 1);
+                m.inter_token.observe(us(inter));
+            }
+            if ev.queue_us > 0 {
+                m.phase_latency[Phase::QueueWait.index()].observe(us(ev.queue_us));
+            }
+            if ev.prefill_us > 0 {
+                m.phase_latency[Phase::Prefill.index()].observe(us(ev.prefill_us));
+            }
+        }
+        let mut reqs = self.requests.lock().unwrap();
+        if reqs.len() >= self.capacity {
+            reqs.pop_front();
+        }
+        reqs.push_back(ev);
+    }
+
+    /// Merge the last `n` events across every engine ring and the request
+    /// log, ordered by timestamp (oldest first).
+    pub fn recent(&self, n: usize) -> Vec<TraceEvent> {
+        let mut out: Vec<TraceEvent> = Vec::new();
+        for rec in self.engines.lock().unwrap().iter() {
+            out.extend(rec.snapshot(n).into_iter().map(TraceEvent::Step));
+        }
+        out.extend(self.requests.lock().unwrap().iter().copied().map(TraceEvent::Request));
+        out.sort_by_key(|e| e.t_us());
+        if out.len() > n {
+            out.drain(..out.len() - n);
+        }
+        out
+    }
+
+    /// Total steps recorded across every registered engine.
+    pub fn steps_recorded(&self) -> u64 {
+        self.engines.lock().unwrap().iter().map(|r| r.steps_recorded()).sum()
+    }
+}
+
+/// A step event's JSONL object (`"type":"step"`). Strategy provenance
+/// only lists kinds that actually won a sequence this step, keeping lines
+/// compact.
+pub fn step_to_json(ev: &StepEvent) -> Json {
+    let phases = Phase::ALL
+        .iter()
+        .filter(|p| !matches!(p, Phase::QueueWait | Phase::Prefill))
+        .map(|p| (p.label().to_string(), Json::Num(ev.phase_us[p.index()] as f64)))
+        .collect();
+    let strategies = StrategyKind::ALL
+        .iter()
+        .filter(|k| ev.wins[k.index()] > 0)
+        .map(|k| {
+            (
+                k.label().to_string(),
+                Json::obj(vec![
+                    ("wins", Json::Num(ev.wins[k.index()] as f64)),
+                    ("accepted", Json::Num(ev.accepted_by[k.index()] as f64)),
+                ]),
+            )
+        })
+        .collect();
+    Json::obj(vec![
+        ("type", Json::Str("step".into())),
+        ("t_us", Json::Num(ev.t_us as f64)),
+        ("engine", Json::Num(ev.engine as f64)),
+        ("step", Json::Num(ev.step as f64)),
+        ("w", Json::Num(ev.w as f64)),
+        ("rows", Json::Num(ev.rows as f64)),
+        ("seqs", Json::Num(ev.seqs as f64)),
+        ("accepted", Json::Num(ev.accepted as f64)),
+        ("emitted", Json::Num(ev.emitted as f64)),
+        ("phases", Json::Obj(phases)),
+        ("strategies", Json::Obj(strategies)),
+    ])
+}
+
+/// A request event's JSONL object (`"type":"request"`).
+pub fn request_to_json(ev: &RequestEvent) -> Json {
+    Json::obj(vec![
+        ("type", Json::Str("request".into())),
+        ("t_us", Json::Num(ev.t_us as f64)),
+        ("queue_us", Json::Num(ev.queue_us as f64)),
+        ("prefill_us", Json::Num(ev.prefill_us as f64)),
+        ("ttft_us", Json::Num(ev.ttft_us as f64)),
+        ("total_us", Json::Num(ev.total_us as f64)),
+        ("tokens", Json::Num(ev.tokens as f64)),
+        ("calls", Json::Num(ev.calls as f64)),
+    ])
+}
+
+/// Serialize events as JSONL (one compact JSON object per line).
+pub fn to_jsonl(events: &[TraceEvent]) -> String {
+    let mut s = String::new();
+    for ev in events {
+        let j = match ev {
+            TraceEvent::Step(e) => step_to_json(e),
+            TraceEvent::Request(e) => request_to_json(e),
+        };
+        s.push_str(&j.to_string());
+        s.push('\n');
+    }
+    s
+}
+
+/// Per-step phase stopwatch. Built disabled (`enabled = false`) it never
+/// reads the clock — `lap` is a branch on a `None` — which is what makes
+/// tracing zero-cost when the recorder is off.
+#[derive(Debug)]
+pub struct PhaseTimer {
+    last: Option<Instant>,
+    /// accumulated per-phase microseconds, indexed by [`Phase::index`]
+    pub us: [u64; Phase::COUNT],
+}
+
+impl PhaseTimer {
+    /// A stopwatch; `enabled = false` makes every call a no-op.
+    pub fn new(enabled: bool) -> Self {
+        PhaseTimer { last: enabled.then(Instant::now), us: [0; Phase::COUNT] }
+    }
+
+    /// Whether this timer is live.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.last.is_some()
+    }
+
+    /// Attribute the time since the previous lap to `phase` and restart
+    /// the lap clock. Laps may interleave; per-phase time accumulates.
+    #[inline]
+    pub fn lap(&mut self, phase: Phase) {
+        if let Some(prev) = self.last {
+            let now = Instant::now();
+            self.us[phase.index()] += now.duration_since(prev).as_micros() as u64;
+            self.last = Some(now);
+        }
+    }
+
+    /// Restart the lap clock without attributing the elapsed gap to any
+    /// phase (for untimed sections between phases).
+    #[inline]
+    pub fn skip(&mut self) {
+        if self.last.is_some() {
+            self.last = Some(Instant::now());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(step: u64) -> StepEvent {
+        StepEvent { step, w: 4, rows: 3, seqs: 2, ..StepEvent::default() }
+    }
+
+    #[test]
+    fn ring_snapshot_returns_last_n_in_order() {
+        let ring = StepRing::new(8);
+        for i in 0..5 {
+            ring.push(ev(i));
+        }
+        let got = ring.snapshot(3);
+        assert_eq!(got.iter().map(|e| e.step).collect::<Vec<_>>(), vec![2, 3, 4]);
+        assert_eq!(ring.pushed(), 5);
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_newest() {
+        let ring = StepRing::new(4);
+        for i in 0..10 {
+            ring.push(ev(i));
+        }
+        let got = ring.snapshot(100);
+        assert_eq!(got.iter().map(|e| e.step).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let hub = TraceHub::disabled(16);
+        let rec = hub.recorder_for_engine(0);
+        rec.record_step(ev(1));
+        hub.record_request(RequestEvent::default());
+        assert_eq!(rec.steps_recorded(), 0);
+        assert!(hub.recent(10).is_empty());
+        hub.set_enabled(true);
+        rec.record_step(ev(2));
+        assert_eq!(rec.steps_recorded(), 1);
+    }
+
+    #[test]
+    fn hub_merges_steps_and_requests_by_time() {
+        let hub = TraceHub::new(16);
+        let r0 = hub.recorder_for_engine(0);
+        let r1 = hub.recorder_for_engine(1);
+        r0.record_step(ev(1));
+        hub.record_request(RequestEvent {
+            ttft_us: 100,
+            total_us: 300,
+            tokens: 5,
+            calls: 2,
+            ..RequestEvent::default()
+        });
+        r1.record_step(ev(2));
+        let events = hub.recent(10);
+        assert_eq!(events.len(), 3);
+        let ts: Vec<u64> = events.iter().map(|e| e.t_us()).collect();
+        let mut sorted = ts.clone();
+        sorted.sort();
+        assert_eq!(ts, sorted);
+        assert_eq!(events.iter().filter(|e| matches!(e, TraceEvent::Request(_))).count(), 1);
+    }
+
+    #[test]
+    fn jsonl_round_trips_through_parser() {
+        let hub = TraceHub::new(16);
+        let rec = hub.recorder_for_engine(3);
+        let mut e = ev(7);
+        e.phase_us[Phase::Verify.index()] = 120;
+        e.wins[StrategyKind::ContextNgram.index()] = 2;
+        e.accepted_by[StrategyKind::ContextNgram.index()] = 5;
+        e.accepted = 5;
+        e.emitted = 7;
+        rec.record_step(e);
+        hub.record_request(RequestEvent {
+            queue_us: 10,
+            prefill_us: 20,
+            ttft_us: 30,
+            total_us: 90,
+            tokens: 4,
+            calls: 2,
+            ..RequestEvent::default()
+        });
+        let text = to_jsonl(&hub.recent(10));
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            let j = Json::parse(line).expect("valid json line");
+            assert!(j.get("type").and_then(|t| t.as_str()).is_some());
+        }
+        let parsed = report::parse_jsonl(&text).unwrap();
+        assert_eq!(parsed.len(), 2);
+        match &parsed[0] {
+            TraceEvent::Step(s) => {
+                assert_eq!(s.engine, 3);
+                assert_eq!(s.phase_us[Phase::Verify.index()], 120);
+                assert_eq!(s.wins[StrategyKind::ContextNgram.index()], 2);
+                assert_eq!(s.accepted, 5);
+            }
+            other => panic!("expected step first, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn phase_timer_disabled_is_inert() {
+        let mut t = PhaseTimer::new(false);
+        t.lap(Phase::Draft);
+        t.skip();
+        assert!(!t.enabled());
+        assert_eq!(t.us, [0; Phase::COUNT]);
+    }
+
+    #[test]
+    fn phase_timer_accumulates_laps() {
+        let mut t = PhaseTimer::new(true);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.lap(Phase::Draft);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.lap(Phase::Verify);
+        assert!(t.us[Phase::Draft.index()] >= 1_000);
+        assert!(t.us[Phase::Verify.index()] >= 1_000);
+        assert_eq!(t.us[Phase::Commit.index()], 0);
+    }
+
+    #[test]
+    fn concurrent_reader_never_sees_torn_events() {
+        use std::sync::atomic::AtomicBool;
+        let ring = Arc::new(StepRing::new(32));
+        let stop = Arc::new(AtomicBool::new(false));
+        let writer = {
+            let ring = Arc::clone(&ring);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    // every field of version i is i, so a mixed copy is
+                    // detectable
+                    let mut e = StepEvent { step: i, t_us: i, engine: i, ..Default::default() };
+                    e.w = i as u32;
+                    e.rows = i as u32;
+                    ring.push(e);
+                    i += 1;
+                }
+            })
+        };
+        for _ in 0..2_000 {
+            for e in ring.snapshot(32) {
+                assert_eq!(e.step, e.t_us);
+                assert_eq!(e.step, e.engine);
+                assert_eq!(e.w, e.rows);
+                assert_eq!(e.step as u32, e.w);
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        writer.join().unwrap();
+    }
+}

@@ -1,0 +1,370 @@
+//! Trace analysis: parse captured JSONL back into events, fold them into
+//! a per-phase / per-strategy summary table, and export Chrome
+//! `chrome://tracing` (about://tracing / Perfetto) format.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::draft::StrategyKind;
+use crate::trace::{Phase, RequestEvent, StepEvent, TraceEvent};
+use crate::util::json::Json;
+
+fn num(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64
+}
+
+/// Parse one JSONL trace line (as emitted by [`crate::trace::to_jsonl`]).
+pub fn parse_line(line: &str) -> Result<TraceEvent> {
+    let j = Json::parse(line).map_err(|e| anyhow!("bad trace line: {e}"))?;
+    let ty = j.get("type").and_then(|t| t.as_str()).unwrap_or("");
+    match ty {
+        "step" => {
+            let mut ev = StepEvent {
+                t_us: num(&j, "t_us"),
+                engine: num(&j, "engine"),
+                step: num(&j, "step"),
+                w: num(&j, "w") as u32,
+                rows: num(&j, "rows") as u32,
+                seqs: num(&j, "seqs") as u32,
+                accepted: num(&j, "accepted") as u32,
+                emitted: num(&j, "emitted") as u32,
+                ..StepEvent::default()
+            };
+            if let Some(phases) = j.get("phases") {
+                for p in Phase::ALL {
+                    ev.phase_us[p.index()] = num(phases, p.label());
+                }
+            }
+            if let Some(strategies) = j.get("strategies").and_then(|s| s.as_obj()) {
+                for (label, stats) in strategies {
+                    if let Some(kind) = StrategyKind::ALL.iter().find(|k| k.label() == label) {
+                        ev.wins[kind.index()] = num(stats, "wins") as u32;
+                        ev.accepted_by[kind.index()] = num(stats, "accepted") as u32;
+                    }
+                }
+            }
+            Ok(TraceEvent::Step(ev))
+        }
+        "request" => Ok(TraceEvent::Request(RequestEvent {
+            t_us: num(&j, "t_us"),
+            queue_us: num(&j, "queue_us"),
+            prefill_us: num(&j, "prefill_us"),
+            ttft_us: num(&j, "ttft_us"),
+            total_us: num(&j, "total_us"),
+            tokens: num(&j, "tokens") as u32,
+            calls: num(&j, "calls") as u32,
+        })),
+        other => Err(anyhow!("unknown trace event type '{other}'")),
+    }
+}
+
+/// Parse a whole JSONL trace (blank lines are skipped).
+pub fn parse_jsonl(text: &str) -> Result<Vec<TraceEvent>> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty())
+        .enumerate()
+        .map(|(i, l)| parse_line(l).with_context(|| format!("trace line {}", i + 1)))
+        .collect()
+}
+
+/// Folded trace: per-phase totals, per-strategy provenance, and request
+/// latency distributions.
+#[derive(Debug, Default)]
+pub struct TraceSummary {
+    /// step events folded in
+    pub steps: u64,
+    /// request events folded in
+    pub requests: u64,
+    /// per-phase total microseconds, indexed by [`Phase::index`]
+    pub phase_total_us: [u64; Phase::COUNT],
+    /// events that contributed a non-zero span to each phase
+    pub phase_hits: [u64; Phase::COUNT],
+    /// per-strategy step wins, indexed by [`StrategyKind::index`]
+    pub wins: [u64; StrategyKind::COUNT],
+    /// per-strategy accepted draft tokens
+    pub accepted_by: [u64; StrategyKind::COUNT],
+    /// draft tokens accepted across all steps
+    pub accepted: u64,
+    /// tokens emitted across all steps
+    pub emitted: u64,
+    /// sorted submit→first-token latencies (µs), one per request
+    pub ttft_us: Vec<u64>,
+    /// sorted per-request mean inter-token latencies (µs)
+    pub inter_token_us: Vec<u64>,
+}
+
+fn pct(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+impl TraceSummary {
+    /// Fold a batch of events into a summary.
+    pub fn from_events(events: &[TraceEvent]) -> Self {
+        let mut s = TraceSummary::default();
+        for ev in events {
+            match ev {
+                TraceEvent::Step(e) => {
+                    s.steps += 1;
+                    for p in Phase::ALL {
+                        let us = e.phase_us[p.index()];
+                        s.phase_total_us[p.index()] += us;
+                        if us > 0 {
+                            s.phase_hits[p.index()] += 1;
+                        }
+                    }
+                    for k in StrategyKind::ALL {
+                        s.wins[k.index()] += e.wins[k.index()] as u64;
+                        s.accepted_by[k.index()] += e.accepted_by[k.index()] as u64;
+                    }
+                    s.accepted += e.accepted as u64;
+                    s.emitted += e.emitted as u64;
+                }
+                TraceEvent::Request(e) => {
+                    s.requests += 1;
+                    s.phase_total_us[Phase::QueueWait.index()] += e.queue_us;
+                    s.phase_total_us[Phase::Prefill.index()] += e.prefill_us;
+                    if e.queue_us > 0 {
+                        s.phase_hits[Phase::QueueWait.index()] += 1;
+                    }
+                    if e.prefill_us > 0 {
+                        s.phase_hits[Phase::Prefill.index()] += 1;
+                    }
+                    s.ttft_us.push(e.ttft_us);
+                    if e.tokens > 1 {
+                        s.inter_token_us
+                            .push(e.total_us.saturating_sub(e.ttft_us) / (e.tokens as u64 - 1));
+                    }
+                }
+            }
+        }
+        s.ttft_us.sort_unstable();
+        s.inter_token_us.sort_unstable();
+        s
+    }
+
+    /// Parse + fold a captured JSONL trace.
+    pub fn from_jsonl(text: &str) -> Result<Self> {
+        Ok(Self::from_events(&parse_jsonl(text)?))
+    }
+
+    /// Per-phase totals as JSON (µs), for bench summaries: phase label →
+    /// total microseconds (request-level phases included when present).
+    pub fn phases_json(&self) -> Json {
+        Json::Obj(
+            Phase::ALL
+                .iter()
+                .map(|p| (p.label().to_string(), Json::Num(self.phase_total_us[p.index()] as f64)))
+                .collect(),
+        )
+    }
+
+    /// Render the human-readable breakdown: a per-phase table (total,
+    /// share, mean per event) and a per-strategy provenance table.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        let step_total: u64 = Phase::ALL
+            .iter()
+            .filter(|p| !matches!(p, Phase::QueueWait | Phase::Prefill))
+            .map(|p| self.phase_total_us[p.index()])
+            .sum();
+        out.push_str(&format!(
+            "trace summary: {} steps, {} requests, {} tokens emitted ({} accepted drafts)\n\n",
+            self.steps, self.requests, self.emitted, self.accepted
+        ));
+        out.push_str(&format!(
+            "{:<12} {:>12} {:>8} {:>12} {:>8}\n",
+            "phase", "total_us", "share", "mean_us", "events"
+        ));
+        for p in Phase::ALL {
+            let total = self.phase_total_us[p.index()];
+            let hits = self.phase_hits[p.index()];
+            let share = if step_total > 0 && !matches!(p, Phase::QueueWait | Phase::Prefill) {
+                format!("{:.1}%", 100.0 * total as f64 / step_total as f64)
+            } else {
+                "-".to_string()
+            };
+            let mean = if hits > 0 { total as f64 / hits as f64 } else { 0.0 };
+            out.push_str(&format!(
+                "{:<12} {:>12} {:>8} {:>12.1} {:>8}\n",
+                p.label(),
+                total,
+                share,
+                mean,
+                hits
+            ));
+        }
+        out.push_str(&format!(
+            "\n{:<14} {:>8} {:>10} {:>12}\n",
+            "strategy", "wins", "accepted", "acc/win"
+        ));
+        for k in StrategyKind::ALL {
+            let wins = self.wins[k.index()];
+            if wins == 0 && self.accepted_by[k.index()] == 0 {
+                continue;
+            }
+            let per = if wins > 0 { self.accepted_by[k.index()] as f64 / wins as f64 } else { 0.0 };
+            out.push_str(&format!(
+                "{:<14} {:>8} {:>10} {:>12.2}\n",
+                k.label(),
+                wins,
+                self.accepted_by[k.index()],
+                per
+            ));
+        }
+        if !self.ttft_us.is_empty() {
+            out.push_str(&format!(
+                "\nttft_us        p50 {:>8}  p99 {:>8}  ({} requests)\n",
+                pct(&self.ttft_us, 0.5),
+                pct(&self.ttft_us, 0.99),
+                self.ttft_us.len()
+            ));
+        }
+        if !self.inter_token_us.is_empty() {
+            out.push_str(&format!(
+                "inter_token_us p50 {:>8}  p99 {:>8}\n",
+                pct(&self.inter_token_us, 0.5),
+                pct(&self.inter_token_us, 0.99)
+            ));
+        }
+        out
+    }
+}
+
+/// Export events in Chrome trace format (a JSON array of complete `"X"`
+/// events loadable in `chrome://tracing` or Perfetto). Each step's phases
+/// are laid back-to-back ending at the step's timestamp; each request
+/// becomes one span on the synthetic `requests` track (pid 9999).
+pub fn chrome_trace(events: &[TraceEvent]) -> Json {
+    let mut arr = Vec::new();
+    let complete = |name: &str, cat: &str, ts: u64, dur: u64, pid: u64, tid: u64| {
+        Json::obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("cat", Json::Str(cat.to_string())),
+            ("ph", Json::Str("X".into())),
+            ("ts", Json::Num(ts as f64)),
+            ("dur", Json::Num(dur as f64)),
+            ("pid", Json::Num(pid as f64)),
+            ("tid", Json::Num(tid as f64)),
+        ])
+    };
+    for ev in events {
+        match ev {
+            TraceEvent::Step(e) => {
+                let total: u64 = Phase::ALL
+                    .iter()
+                    .filter(|p| !matches!(p, Phase::QueueWait | Phase::Prefill))
+                    .map(|p| e.phase_us[p.index()])
+                    .sum();
+                let mut cursor = e.t_us.saturating_sub(total);
+                for p in Phase::ALL {
+                    if matches!(p, Phase::QueueWait | Phase::Prefill) {
+                        continue;
+                    }
+                    let dur = e.phase_us[p.index()];
+                    if dur == 0 {
+                        continue;
+                    }
+                    arr.push(complete(p.label(), "step", cursor, dur, e.engine, e.w as u64));
+                    cursor += dur;
+                }
+            }
+            TraceEvent::Request(e) => {
+                arr.push(complete(
+                    "request",
+                    "request",
+                    e.t_us.saturating_sub(e.total_us),
+                    e.total_us,
+                    9999,
+                    0,
+                ));
+            }
+        }
+    }
+    Json::Arr(arr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{to_jsonl, RequestEvent, StepEvent};
+
+    fn step(t_us: u64) -> StepEvent {
+        let mut e = StepEvent { t_us, step: 1, w: 4, rows: 3, seqs: 2, ..StepEvent::default() };
+        e.phase_us[Phase::Draft.index()] = 10;
+        e.phase_us[Phase::Verify.index()] = 80;
+        e.phase_us[Phase::Commit.index()] = 10;
+        e.wins[StrategyKind::ContextNgram.index()] = 2;
+        e.accepted_by[StrategyKind::ContextNgram.index()] = 6;
+        e.accepted = 6;
+        e.emitted = 8;
+        e
+    }
+
+    #[test]
+    fn summary_folds_phases_and_strategies() {
+        let events = vec![
+            TraceEvent::Step(step(100)),
+            TraceEvent::Step(step(200)),
+            TraceEvent::Request(RequestEvent {
+                t_us: 300,
+                queue_us: 5,
+                prefill_us: 50,
+                ttft_us: 60,
+                total_us: 260,
+                tokens: 11,
+                calls: 4,
+            }),
+        ];
+        let s = TraceSummary::from_events(&events);
+        assert_eq!(s.steps, 2);
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.phase_total_us[Phase::Verify.index()], 160);
+        assert_eq!(s.phase_total_us[Phase::QueueWait.index()], 5);
+        assert_eq!(s.wins[StrategyKind::ContextNgram.index()], 4);
+        assert_eq!(s.accepted, 12);
+        assert_eq!(s.ttft_us, vec![60]);
+        assert_eq!(s.inter_token_us, vec![20]);
+        let table = s.render_table();
+        assert!(table.contains("verify"));
+        assert!(table.contains("context-ngram"));
+        assert!(table.contains("ttft_us"));
+    }
+
+    #[test]
+    fn summary_round_trips_through_jsonl() {
+        let events =
+            vec![TraceEvent::Step(step(100)), TraceEvent::Request(RequestEvent::default())];
+        let text = to_jsonl(&events);
+        let s = TraceSummary::from_jsonl(&text).unwrap();
+        assert_eq!(s.steps, 1);
+        assert_eq!(s.requests, 1);
+        assert_eq!(s.phase_total_us[Phase::Verify.index()], 80);
+    }
+
+    #[test]
+    fn chrome_export_lays_phases_back_to_back() {
+        let j = chrome_trace(&[TraceEvent::Step(step(1000))]);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 3); // draft, verify, commit (judge/pack are 0)
+        let ts: Vec<u64> =
+            arr.iter().map(|e| e.get("ts").and_then(|t| t.as_f64()).unwrap() as u64).collect();
+        let durs: Vec<u64> =
+            arr.iter().map(|e| e.get("dur").and_then(|t| t.as_f64()).unwrap() as u64).collect();
+        assert_eq!(ts[0], 1000 - 100);
+        assert_eq!(ts[1], ts[0] + durs[0]);
+        assert_eq!(ts[2], ts[1] + durs[1]);
+        assert_eq!(ts[2] + durs[2], 1000);
+        let bad = chrome_trace(&[]);
+        assert_eq!(bad.as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn parse_rejects_unknown_event_type() {
+        assert!(parse_line("{\"type\":\"mystery\"}").is_err());
+        assert!(parse_jsonl("{\"type\":\"step\"}\n\n{\"type\":\"request\"}").is_ok());
+    }
+}

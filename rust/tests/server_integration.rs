@@ -141,6 +141,72 @@ fn http_generate_metrics_and_errors() {
     assert_eq!(code, 404);
 }
 
+#[test]
+fn stats_trace_and_route_hardening() {
+    let m = manifest();
+    let cfg = serve_cfg();
+    let sched = Arc::new(Scheduler::start(&m, "small", &cfg).unwrap());
+    let tok = Arc::new(BpeTokenizer::load(&m.tokenizer_path).unwrap());
+    let (addr, _h) = Server { scheduler: sched, tokenizer: tok, cfg }.spawn().unwrap();
+    let addr = addr.to_string();
+
+    // serve a small workload so the latency digests have data
+    for _ in 0..3 {
+        let (code, body) = client::post(
+            &addr,
+            "/generate",
+            r#"{"prompt": "def scale(x):", "max_tokens": 8, "k": 5, "w": 4}"#,
+        )
+        .unwrap();
+        assert_eq!(code, 200, "{body}");
+    }
+
+    // /stats: non-zero p50/p99 TTFT and inter-token latency after a
+    // served workload (the PR's acceptance bar)
+    let (code, body) = client::get(&addr, "/stats").unwrap();
+    assert_eq!(code, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("requests_completed").and_then(|v| v.as_f64()), Some(3.0));
+    for digest in ["ttft_us", "inter_token_us"] {
+        let d = j.get(digest).unwrap_or_else(|| panic!("missing {digest}: {body}"));
+        assert_eq!(d.get("count").and_then(|v| v.as_f64()), Some(3.0), "{digest}: {body}");
+        for q in ["p50_us", "p99_us"] {
+            let v = d.get(q).and_then(|v| v.as_f64()).unwrap();
+            assert!(v > 0.0, "{digest}.{q} must be non-zero after a workload: {body}");
+        }
+    }
+    let verify = j.get("phases").and_then(|p| p.get("verify")).expect("verify phase digest");
+    assert!(verify.get("count").and_then(|v| v.as_f64()).unwrap() > 0.0, "{body}");
+
+    // /trace: parseable JSONL carrying both step and request events
+    let (code, body) = client::get(&addr, "/trace?n=64").unwrap();
+    assert_eq!(code, 200);
+    let mut kinds = std::collections::BTreeSet::new();
+    for line in body.lines() {
+        let ev = Json::parse(line).unwrap_or_else(|e| panic!("bad JSONL line {line:?}: {e:#}"));
+        kinds.insert(ev.get("type").and_then(|t| t.as_str()).unwrap().to_string());
+    }
+    assert!(kinds.contains("step") && kinds.contains("request"), "event kinds: {kinds:?}");
+
+    // n=K caps the export
+    let (_, body) = client::get(&addr, "/trace?n=1").unwrap();
+    assert_eq!(body.lines().count(), 1, "{body}");
+
+    // unknown path -> JSON 404 naming the path
+    let (code, body) = client::get(&addr, "/no-such").unwrap();
+    assert_eq!(code, 404);
+    let err = Json::parse(&body).unwrap();
+    assert!(err.get("error").and_then(|e| e.as_str()).unwrap().contains("/no-such"), "{body}");
+
+    // method mismatch -> JSON 405, both directions
+    let (code, body) = client::post(&addr, "/stats", "{}").unwrap();
+    assert_eq!(code, 405, "{body}");
+    assert!(Json::parse(&body).unwrap().get("error").is_some(), "{body}");
+    let (code, body) = client::get(&addr, "/generate").unwrap();
+    assert_eq!(code, 405, "{body}");
+    assert!(Json::parse(&body).unwrap().get("error").is_some(), "{body}");
+}
+
 /// Send raw bytes and return (status, body) — for requests the well-formed
 /// in-repo client cannot produce.
 fn raw_request(addr: &str, payload: &str) -> (u16, String) {

@@ -1,0 +1,127 @@
+//! Flight-recorder integration: tracing a live engine captures per-phase
+//! step events with strategy provenance, a disabled hub records nothing,
+//! and — THE invariant — attaching a recorder never perturbs the token
+//! streams or the packed call schedule.
+
+use ngrammys::bench::BenchCtx;
+use ngrammys::config::EngineConfig;
+use ngrammys::engine::{generate_all, BatchedEngine};
+use ngrammys::scheduler::{make_strategy, StrategyName};
+use ngrammys::trace::report::TraceSummary;
+use ngrammys::trace::{
+    to_jsonl, FlightRecorder, Phase, TraceEvent, TraceHub, DEFAULT_RING_CAPACITY,
+};
+
+fn ctx(model: &str) -> BenchCtx {
+    BenchCtx::load(ngrammys::testkit::manifest(), model).unwrap()
+}
+
+fn prompts(c: &BenchCtx) -> Vec<Vec<u32>> {
+    [
+        "Question: Tom has 4 apples. Tom buys 2 more.",
+        "def scale(x, y):\n    result",
+        "User: What is the capital of France?",
+        "Answer: Mia has 5 coins.",
+    ]
+    .iter()
+    .map(|p| c.tokenizer.encode(p))
+    .collect()
+}
+
+#[test]
+fn recorder_captures_phase_events_from_a_live_engine() {
+    let c = ctx("small");
+    let cfg = EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: 16 };
+    let hub = TraceHub::new(DEFAULT_RING_CAPACITY);
+    let rec = hub.recorder_for_engine(7);
+    let mut eng = BatchedEngine::new(&c.runtime, 4);
+    eng.recorder = Some(rec.clone());
+    for p in prompts(&c) {
+        let strat = make_strategy(StrategyName::Mixed, &c.tables, 1);
+        eng.admit(&p, strat, cfg.clone()).unwrap();
+    }
+    while eng.active() > 0 {
+        eng.step().unwrap();
+    }
+    assert!(rec.steps_recorded() > 0, "no step events recorded");
+
+    let events = hub.recent(DEFAULT_RING_CAPACITY);
+    let steps: Vec<_> = events
+        .iter()
+        .filter_map(|e| match e {
+            TraceEvent::Step(s) => Some(*s),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(steps.len() as u64, rec.steps_recorded());
+
+    // every step carries the engine id and packed rows; the verify phase
+    // (the model forward pass) must accumulate real time over the run,
+    // and every step with committed sequences names a winning strategy
+    let mut verify_us = 0u64;
+    let mut wins = 0u64;
+    for s in &steps {
+        assert_eq!(s.engine, 7);
+        assert!(s.rows > 0, "step event with no packed rows");
+        verify_us += s.phase_us[Phase::Verify.index()];
+        wins += s.wins.iter().map(|&w| w as u64).sum::<u64>();
+    }
+    assert!(verify_us > 0, "verify phase never accumulated time");
+    assert!(wins > 0, "no strategy provenance recorded");
+
+    // the summary sees the same totals, and the JSONL export round-trips
+    let summary = TraceSummary::from_events(&events);
+    assert_eq!(summary.steps, steps.len() as u64);
+    assert_eq!(summary.phase_total_us[Phase::Verify.index()], verify_us);
+    let reparsed = TraceSummary::from_jsonl(&to_jsonl(&events)).unwrap();
+    assert_eq!(reparsed.steps, summary.steps);
+    assert_eq!(reparsed.phase_total_us, summary.phase_total_us);
+}
+
+#[test]
+fn disabled_hub_records_nothing() {
+    let c = ctx("small");
+    let hub = TraceHub::new(DEFAULT_RING_CAPACITY);
+    hub.set_enabled(false);
+    let rec = hub.recorder_for_engine(0);
+    assert!(!rec.enabled());
+    let cfg = EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: 12 };
+    let mut eng = BatchedEngine::new(&c.runtime, 2);
+    eng.recorder = Some(rec.clone());
+    let strat = make_strategy(StrategyName::Mixed, &c.tables, 1);
+    eng.admit(&prompts(&c)[0], strat, cfg).unwrap();
+    while eng.active() > 0 {
+        eng.step().unwrap();
+    }
+    assert_eq!(rec.steps_recorded(), 0, "disabled recorder must be a no-op");
+    assert!(hub.recent(16).is_empty());
+}
+
+/// The overhead invariant the CI smoke gate also pins: the same requests
+/// decoded with and without a recorder produce byte-identical streams
+/// and an identical packed call schedule.
+#[test]
+fn tracing_never_perturbs_token_streams() {
+    let c = ctx("small");
+    let cfg = EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: 20 };
+    let run = |recorder: Option<std::sync::Arc<FlightRecorder>>| {
+        let mut eng = BatchedEngine::new(&c.runtime, 4);
+        eng.collect_traces = true;
+        eng.recorder = recorder;
+        let reqs: Vec<_> = prompts(&c)
+            .iter()
+            .map(|p| (p.clone(), make_strategy(StrategyName::Mixed, &c.tables, 1), cfg.clone()))
+            .collect();
+        let out = generate_all(&mut eng, reqs).unwrap();
+        let streams: Vec<Vec<u32>> = out.into_iter().map(|r| r.tokens).collect();
+        let packed: Vec<(usize, usize, usize)> =
+            eng.packed_traces.iter().map(|t| (t.rows, t.w, t.max_ctx)).collect();
+        (streams, packed)
+    };
+    let rec = FlightRecorder::standalone(0, DEFAULT_RING_CAPACITY);
+    let (traced, traced_packed) = run(Some(rec.clone()));
+    let (untraced, untraced_packed) = run(None);
+    assert_eq!(traced, untraced, "tracing perturbed the output streams");
+    assert_eq!(traced_packed, untraced_packed, "tracing changed the packed call schedule");
+    assert!(rec.steps_recorded() > 0, "traced run recorded nothing");
+}
