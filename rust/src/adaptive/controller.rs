@@ -302,6 +302,20 @@ impl SeqController {
         self.steps += 1;
     }
 
+    /// Tree-mode width planning: how many candidate rows to PROPOSE for a
+    /// `k`-row tree block. The trie's prefix sharing frees node budget
+    /// (`k*(w+1)` minus the shared nodes), and this decides how hard to
+    /// fill that slack with extra sibling candidates. Deterministic, in
+    /// `[k, 3k]`: a stream whose TOP-ranked row keeps winning needs no
+    /// breadth (depth is where its budget pays), while frequent misses or
+    /// rank-deep wins say the true token hides below the cut — widen.
+    pub fn tree_overdraft(&self, k: usize) -> usize {
+        let miss = 1.0 - self.ewma_hit;
+        let rank_spread = (self.ewma_depth - 1.0).max(0.0) / k.max(1) as f64;
+        let breadth = (miss + rank_spread).clamp(0.0, 1.0);
+        k + (k as f64 * 2.0 * breadth).round() as usize
+    }
+
     /// This sequence's "heat": expected accepted tokens per verification
     /// step, from the arm-agnostic acceptance EWMAs (hit rate times one
     /// plus the mean accepted-prefix length). Cold or cold-started
@@ -502,6 +516,27 @@ mod tests {
         let cold = ctl(1);
         assert!(hot.marginal_gain(0) > cold.marginal_gain(0));
         assert!(hot.marginal_gain(0) >= hot.marginal_gain(5));
+    }
+
+    #[test]
+    fn tree_overdraft_widens_on_misses_and_stays_bounded() {
+        // cold start: full miss rate -> maximum breadth
+        let cold = ctl(1);
+        assert_eq!(cold.tree_overdraft(5), 15);
+        // a stream whose top row always wins deep needs no extra width
+        let mut hot = ctl(1);
+        for _ in 0..12 {
+            hot.plan(10, 100, &SHAPES, 10, 10);
+            feed(&mut hot, 8, 10, 10); // row 0 wins every step
+        }
+        let od = hot.tree_overdraft(5);
+        assert!((5..15).contains(&od), "hot overdraft {od} should shed breadth");
+        assert!(od < cold.tree_overdraft(5));
+        // bounds hold for any k
+        for k in [1usize, 2, 5, 25] {
+            let o = cold.tree_overdraft(k);
+            assert!((k..=3 * k).contains(&o));
+        }
     }
 
     #[test]

@@ -22,6 +22,13 @@
 //! (the cost-model throughput is deterministic, so CI reproduces the
 //! committed values exactly and the 10% tolerance only absorbs real
 //! regressions, not noise).
+//!
+//! An entry may additionally carry `"wall_clock": true`, marking its
+//! number as measured wall time (machine-dependent, so a committed value
+//! would be wrong on every other machine). `--strict-baseline` turns the
+//! bootstrap warning into a FAILURE for every still-null entry EXCEPT
+//! wall-clock ones — the knob that keeps deterministic benches from
+//! riding the bootstrap path forever. `--update` preserves the marker.
 
 use std::path::Path;
 
@@ -85,8 +92,16 @@ pub fn bootstrap_warning(names: &[String]) -> Option<String> {
 /// `BENCH_<name>.json` under `bench_dir`, compare, print a table, and
 /// fail if any bench regressed past `tolerance` (or is missing its
 /// summary entirely). With `update`, rewrite the baseline file with the
-/// observed values instead of failing — the refresh procedure.
-pub fn run(baseline_path: &Path, bench_dir: &Path, tolerance: f64, update: bool) -> Result<()> {
+/// observed values instead of failing — the refresh procedure. With
+/// `strict`, additionally fail when any entry NOT marked
+/// `"wall_clock": true` is still null (never regression-gated).
+pub fn run(
+    baseline_path: &Path,
+    bench_dir: &Path,
+    tolerance: f64,
+    update: bool,
+    strict: bool,
+) -> Result<()> {
     let baseline = Json::from_file(baseline_path)?;
     let entries = baseline
         .as_obj()
@@ -103,7 +118,10 @@ pub fn run(baseline_path: &Path, bench_dir: &Path, tolerance: f64, update: bool)
     let mut updated = Vec::new();
     let mut failures = Vec::new();
     let mut bootstraps = Vec::new();
+    let mut strict_nulls = Vec::new();
     for (name, entry) in entries {
+        let wall_clock =
+            entry.get("wall_clock").and_then(|v| v.as_bool()).unwrap_or(false);
         let summary_path = bench_dir.join(format!("BENCH_{name}.json"));
         let summary = Json::from_file(&summary_path).map_err(|e| {
             anyhow!("{e:#} — did the `bench {name} --smoke` step run before the gate?")
@@ -129,10 +147,21 @@ pub fn run(baseline_path: &Path, bench_dir: &Path, tolerance: f64, update: bool)
         );
         match v {
             Verdict::Regressed { .. } => failures.push(name.clone()),
-            Verdict::Bootstrap => bootstraps.push(name.clone()),
+            Verdict::Bootstrap => {
+                bootstraps.push(name.clone());
+                if !wall_clock {
+                    strict_nulls.push(name.clone());
+                }
+            }
             Verdict::Pass => {}
         }
-        updated.push((name.clone(), Json::obj(vec![("tokens_per_s", Json::Num(current))])));
+        // --update must round-trip the wall_clock marker, or one refresh
+        // would silently promote a machine-dependent number into the gate
+        let mut fields = vec![("tokens_per_s", Json::Num(current))];
+        if wall_clock {
+            fields.push(("wall_clock", Json::Bool(true)));
+        }
+        updated.push((name.clone(), Json::obj(fields)));
     }
     if let Some(warning) = bootstrap_warning(&bootstraps) {
         println!("\n{warning}");
@@ -181,6 +210,14 @@ pub fn run(baseline_path: &Path, bench_dir: &Path, tolerance: f64, update: bool)
         println!("\nwrote observed values to {baseline_path:?}");
         return Ok(());
     }
+    ensure!(
+        !strict || strict_nulls.is_empty(),
+        "--strict-baseline: {} non-wall-clock baseline entr{} still null (never \
+         regression-gated): {} — commit real numbers via `ngrammys ci-bench-check --update`",
+        strict_nulls.len(),
+        if strict_nulls.len() == 1 { "y is" } else { "ies are" },
+        strict_nulls.join(", ")
+    );
     ensure!(
         failures.is_empty(),
         "cost-model throughput regressed >{:.0}% on: {} (refresh {baseline_path:?} with \
@@ -253,18 +290,18 @@ mod tests {
         )
         .unwrap();
         // alpha within tolerance, beta bootstraps: the gate passes
-        run(&baseline, &dir, 0.10, false).unwrap();
+        run(&baseline, &dir, 0.10, false, false).unwrap();
         // a regression on alpha fails the gate and names the bench
         std::fs::write(
             dir.join("BENCH_alpha.json"),
             r#"{"bench": "alpha", "tokens_per_s": 50.0, "tokens_per_call": 2.0, "accept_rate": 0.5}"#,
         )
         .unwrap();
-        let err = run(&baseline, &dir, 0.10, false).unwrap_err().to_string();
+        let err = run(&baseline, &dir, 0.10, false, false).unwrap_err().to_string();
         assert!(err.contains("alpha"), "error must name the regressed bench: {err}");
         // --update rewrites the baseline with the observed values and a
         // re-check against the refreshed numbers passes
-        run(&baseline, &dir, 0.10, true).unwrap();
+        run(&baseline, &dir, 0.10, true, false).unwrap();
         let refreshed = Json::from_file(&baseline).unwrap();
         assert_eq!(
             refreshed.get("alpha").unwrap().get("tokens_per_s").unwrap().as_f64(),
@@ -274,7 +311,7 @@ mod tests {
             refreshed.get("beta").unwrap().get("tokens_per_s").unwrap().as_f64(),
             Some(50.0)
         );
-        run(&baseline, &dir, 0.10, false).unwrap();
+        run(&baseline, &dir, 0.10, false, false).unwrap();
         // a summary with NO baseline entry fails the gate (no silent
         // exclusion of new benches) and --update adopts it
         std::fs::write(
@@ -282,18 +319,64 @@ mod tests {
             r#"{"bench": "gamma", "tokens_per_s": 7.5, "tokens_per_call": 1.1, "accept_rate": 0.1}"#,
         )
         .unwrap();
-        let err = run(&baseline, &dir, 0.10, false).unwrap_err().to_string();
+        let err = run(&baseline, &dir, 0.10, false, false).unwrap_err().to_string();
         assert!(err.contains("gamma"), "error must name the stray summary: {err}");
-        run(&baseline, &dir, 0.10, true).unwrap();
+        run(&baseline, &dir, 0.10, true, false).unwrap();
         let adopted = Json::from_file(&baseline).unwrap();
         assert_eq!(
             adopted.get("gamma").unwrap().get("tokens_per_s").unwrap().as_f64(),
             Some(7.5)
         );
-        run(&baseline, &dir, 0.10, false).unwrap();
+        run(&baseline, &dir, 0.10, false, false).unwrap();
         // a missing summary is an error, not a silent pass
         std::fs::remove_file(dir.join("BENCH_beta.json")).unwrap();
-        assert!(run(&baseline, &dir, 0.10, false).is_err());
+        assert!(run(&baseline, &dir, 0.10, false, false).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn strict_baseline_fails_on_null_non_wall_clock_entries() {
+        let dir =
+            std::env::temp_dir().join(format!("ngrammys-strict-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let baseline = dir.join("baseline.json");
+        // alpha: gated; beta: null and NOT wall-clock; gamma: null but
+        // wall-clock-exempt
+        std::fs::write(
+            &baseline,
+            r#"{"alpha": {"tokens_per_s": 100.0},
+                "beta": {"tokens_per_s": null},
+                "gamma": {"tokens_per_s": null, "wall_clock": true}}"#,
+        )
+        .unwrap();
+        for name in ["alpha", "beta", "gamma"] {
+            std::fs::write(
+                dir.join(format!("BENCH_{name}.json")),
+                r#"{"tokens_per_s": 100.0, "tokens_per_call": 2.0, "accept_rate": 0.5}"#,
+            )
+            .unwrap();
+        }
+        // non-strict: beta + gamma bootstrap, gate passes
+        run(&baseline, &dir, 0.10, false, false).unwrap();
+        // strict: beta (null, not wall-clock) fails the gate by name;
+        // gamma's wall_clock marker exempts it
+        let err = run(&baseline, &dir, 0.10, false, true).unwrap_err().to_string();
+        assert!(err.contains("strict-baseline"), "must name the flag: {err}");
+        assert!(err.contains("beta"), "must name the null entry: {err}");
+        assert!(!err.contains("gamma"), "wall-clock entries are exempt: {err}");
+        // --update records beta's number AND keeps gamma's wall_clock
+        // marker; strict then passes
+        run(&baseline, &dir, 0.10, true, false).unwrap();
+        let refreshed = Json::from_file(&baseline).unwrap();
+        assert_eq!(
+            refreshed.get("beta").unwrap().get("tokens_per_s").unwrap().as_f64(),
+            Some(100.0)
+        );
+        assert_eq!(
+            refreshed.get("gamma").unwrap().get("wall_clock").and_then(|v| v.as_bool()),
+            Some(true)
+        );
+        run(&baseline, &dir, 0.10, false, true).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

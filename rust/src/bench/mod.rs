@@ -24,6 +24,7 @@ pub mod prefix;
 pub mod qsweep;
 pub mod table1;
 pub mod tracecmd;
+pub mod tree;
 
 use std::sync::Arc;
 

@@ -1,0 +1,246 @@
+//! Tree-speculation bench: accepted tokens per verify call, flat rows vs
+//! shared-prefix token tree at the SAME row budget, on a branchy
+//! high-repetition workload — the tentpole claim this bench GATES.
+//!
+//! The workload is adversarially branchy in exactly the way the paper's
+//! §4.2 context source is vulnerable to: a short greedy warmup run finds
+//! the model's recurring tokens (its bigram-attractor cycle), and every
+//! request prompt then plants `K` equally-frequent decoy continuations
+//! after each such anchor. When decoding revisits an anchor, the
+//! context-first mixed policy ranks those high-count decoys above the
+//! (initially unseen) true continuation, so flat mode's k rows are
+//! entirely decoys and accept nothing. Tree mode proposes with the same
+//! strategy at the overdraft quota and trie-packs the rows into the same
+//! k*(w+1)-node budget — the k decoy rows cost k*w nodes, and the
+//! leftover slack holds the true attractor chain, which keeps accepting.
+//! Same verify-call positions, strictly more accepted tokens: the gate
+//! fails unless tree mode's aggregate tokens/call strictly beats linear.
+//!
+//! Byte-identity is re-checked in-bench: every request is decoded through
+//! linear rows, the token tree, and plain greedy, and all three streams
+//! must match token for token.
+
+use anyhow::{ensure, Result};
+
+use crate::config::EngineConfig;
+use crate::draft::DraftStrategy;
+use crate::engine::{generate_all, greedy_config, BatchedEngine, SpecDecoder};
+use crate::scheduler::{make_strategy, StrategyName};
+use crate::tokenizer::TokenId;
+use crate::trace::report::TraceSummary;
+use crate::trace::{FlightRecorder, TraceEvent, DEFAULT_RING_CAPACITY};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Verify rows per call (the shared row budget for both modes).
+const K: usize = 5;
+/// Draft depth per row.
+const W: usize = 4;
+/// Concurrent decode lanes (exercises grouped packed tree calls).
+const LANES: usize = 4;
+/// Decoy continuations planted after each ambush anchor — exactly K, so
+/// they fill flat mode's context-first quota and nothing else gets in.
+const DECOYS: usize = K;
+/// Copies of each decoy pattern. The decoys outrank the true continuation
+/// until the anchor has been revisited about this many times, so every
+/// request gets several ambushed calls per anchor.
+const REPS: usize = 4;
+/// Recurring tokens ambushed per prompt.
+const ANCHORS: usize = 4;
+/// Greedy warmup length used to discover the recurring anchors.
+const WARMUP_NEW: usize = 96;
+
+/// Run the tree-vs-linear acceptance comparison; fails unless tree mode
+/// achieves strictly more accepted tokens per verify call than linear
+/// rows at the same row budget, or if any stream diverges from greedy.
+pub fn run(ctx: &super::BenchCtx, smoke: bool) -> Result<()> {
+    let d = &ctx.runtime.artifacts().dims;
+    let vocab = ctx.manifest.vocab_size;
+    let n_req = if smoke { 6 } else { 16 };
+    let prompt_len = ANCHORS * DECOYS * REPS * 2 + 1;
+    let max_new = (d.max_len - prompt_len - (W + 1)).min(104);
+    ensure!(max_new >= 32, "model context too short for the tree bench");
+    let cfg = EngineConfig { k: K, w: W, q: 1, max_new_tokens: max_new };
+
+    println!(
+        "== tree speculation (model '{}', k={K} w={W}, {ANCHORS} anchors x {DECOYS} decoys, \
+         {n_req} requests x {max_new} new tokens) ==\n",
+        ctx.model
+    );
+
+    // ---- warmup: find the model's recurring tokens (the ambush anchors)
+    let mut rng = Rng::new(0xB1A5_ED);
+    let seed_prompt: Vec<TokenId> = (0..8).map(|_| rng.below(vocab) as TokenId).collect();
+    let mut dec = SpecDecoder::new(
+        &ctx.runtime,
+        make_strategy(StrategyName::None, &ctx.tables, 1),
+        greedy_config(WARMUP_NEW),
+    );
+    let warm = dec.generate(&seed_prompt)?;
+    let mut freq = vec![0u32; vocab];
+    for &t in &warm.tokens {
+        freq[t as usize] += 1;
+    }
+    let mut order: Vec<usize> = (0..vocab).collect();
+    order.sort_by_key(|&t| std::cmp::Reverse(freq[t]));
+    let anchors: Vec<TokenId> = order[..ANCHORS].iter().map(|&t| t as TokenId).collect();
+    println!(
+        "anchors (token: warmup count): {}",
+        anchors.iter().map(|&a| format!("{a}: {}", freq[a as usize])).collect::<Vec<_>>().join(", ")
+    );
+
+    let prompts: Vec<Vec<TokenId>> = (0..n_req)
+        .map(|i| ambush_prompt(&anchors, vocab, &mut Rng::new(0x7EE5 ^ i as u64)))
+        .collect();
+
+    // ---- the comparison: same requests, same (k, w), flat rows vs tree
+    let mut lin_eng = BatchedEngine::new(&ctx.runtime, LANES);
+    let lin = generate_all(&mut lin_eng, requests(ctx, &prompts, &cfg))?;
+
+    let mut tree_eng = BatchedEngine::new(&ctx.runtime, LANES);
+    tree_eng.tree = true;
+    tree_eng.collect_traces = true;
+    let rec = FlightRecorder::standalone(0, DEFAULT_RING_CAPACITY);
+    tree_eng.recorder = Some(rec.clone());
+    let tree = generate_all(&mut tree_eng, requests(ctx, &prompts, &cfg))?;
+
+    // ---- byte-identity: linear == tree == plain greedy, per request
+    for (i, (l, t)) in lin.iter().zip(&tree).enumerate() {
+        ensure!(
+            l.tokens == t.tokens,
+            "BYTE-IDENTITY VIOLATION: request {i} differs between linear and tree modes"
+        );
+        let mut g = SpecDecoder::new(
+            &ctx.runtime,
+            make_strategy(StrategyName::None, &ctx.tables, 1),
+            greedy_config(max_new),
+        );
+        let greedy = g.generate(&prompts[i])?;
+        ensure!(
+            t.tokens == greedy.tokens,
+            "BYTE-IDENTITY VIOLATION: request {i} tree stream differs from plain greedy"
+        );
+    }
+    println!("byte-identity: {} streams identical across linear, tree and greedy", lin.len());
+
+    // decode tokens exclude the prefill-emitted first token, as everywhere
+    let tokens: usize = tree.iter().map(|r| r.tokens.len().saturating_sub(1)).sum();
+    let lin_calls: usize = lin.iter().map(|r| r.calls).sum();
+    let tree_calls: usize = tree.iter().map(|r| r.calls).sum();
+    let lin_tpc = tokens as f64 / lin_calls.max(1) as f64;
+    let tree_tpc = tokens as f64 / tree_calls.max(1) as f64;
+    let mean_nodes = tree_eng.packed_traces.iter().map(|t| t.rows).sum::<usize>() as f64
+        / tree_eng.packed_traces.len().max(1) as f64;
+
+    println!("\n{:<10} {:>8} {:>14} {:>10}", "mode", "calls", "tokens/call", "accept");
+    println!("{:<10} {:>8} {:>14.3} {:>10.3}", "greedy", tokens, 1.0, 0.0);
+    println!(
+        "{:<10} {:>8} {:>14.3} {:>10.3}",
+        "linear", lin_calls, lin_tpc,
+        super::accept_rate(tokens, lin_calls)
+    );
+    println!(
+        "{:<10} {:>8} {:>14.3} {:>10.3}",
+        "tree", tree_calls, tree_tpc,
+        super::accept_rate(tokens, tree_calls)
+    );
+    println!(
+        "\ntree packs a mean {mean_nodes:.1} nodes/call into the {}-position budget; \
+         tokens/call {tree_tpc:.3} vs linear {lin_tpc:.3} ({:+.1}%)",
+        K * (W + 1),
+        (tree_tpc / lin_tpc.max(1e-12) - 1.0) * 100.0,
+    );
+    ensure!(
+        tree_tpc > lin_tpc,
+        "tree mode accepted {tree_tpc:.3} tokens/call <= linear {lin_tpc:.3} at the same \
+         row budget on the branchy workload — tree packing is not paying"
+    );
+
+    // tree shape/acceptance provenance must have reached the recorder
+    let steps = rec.snapshot(DEFAULT_RING_CAPACITY);
+    ensure!(
+        steps.iter().any(|e| e.tree_nodes > 0),
+        "no StepEvent carried tree provenance (tree_nodes == 0 everywhere)"
+    );
+
+    // cost-model throughput of the tree run, for the CI regression gate
+    let cm = ctx.cost_model();
+    let sim_s: f64 = tree_eng
+        .packed_traces
+        .iter()
+        .map(|t| cm.call_time(t.rows, t.w + 1, t.max_ctx))
+        .sum();
+    let sim_tps = tokens as f64 / sim_s.max(1e-12);
+
+    super::write_json(
+        &format!("tree_{}", ctx.model),
+        &Json::obj(vec![
+            ("bench", Json::Str("tree-speculation".into())),
+            ("model", Json::Str(ctx.model.clone())),
+            ("k", Json::Num(K as f64)),
+            ("w", Json::Num(W as f64)),
+            ("requests", Json::Num(n_req as f64)),
+            ("max_new", Json::Num(max_new as f64)),
+            ("anchors", Json::Arr(anchors.iter().map(|&a| Json::Num(a as f64)).collect())),
+            ("decode_tokens", Json::Num(tokens as f64)),
+            ("linear_calls", Json::Num(lin_calls as f64)),
+            ("tree_calls", Json::Num(tree_calls as f64)),
+            ("linear_tokens_per_call", Json::Num(lin_tpc)),
+            ("tree_tokens_per_call", Json::Num(tree_tpc)),
+            ("mean_nodes_per_call", Json::Num(mean_nodes)),
+            ("sim_tokens_per_s", Json::Num(sim_tps)),
+        ]),
+    )?;
+    let events: Vec<TraceEvent> = steps.into_iter().map(TraceEvent::Step).collect();
+    super::write_bench_summary_with(
+        "tree",
+        sim_tps,
+        tree_tpc,
+        super::accept_rate(tokens, tree_calls),
+        vec![
+            ("linear_tokens_per_call", Json::Num(lin_tpc)),
+            ("mean_nodes_per_call", Json::Num(mean_nodes)),
+            ("phases", TraceSummary::from_events(&events).phases_json()),
+        ],
+    )
+}
+
+/// One request prompt: for each anchor, `DECOYS` distinct decoy
+/// continuations repeated `REPS` times (`a j1 a j2 ... | a j1 ...`), so
+/// every decoy q=1 continuation group carries count ~REPS. Ends on an
+/// anchor so decoding opens ambushed.
+fn ambush_prompt(anchors: &[TokenId], vocab: usize, rng: &mut Rng) -> Vec<TokenId> {
+    let mut p = Vec::with_capacity(anchors.len() * DECOYS * REPS * 2 + 1);
+    for &a in anchors {
+        let mut decoys: Vec<TokenId> = Vec::with_capacity(DECOYS);
+        while decoys.len() < DECOYS {
+            let t = rng.below(vocab) as TokenId;
+            // decoys must not collide with any anchor: an anchor-valued
+            // decoy would plant foreign continuations under that anchor
+            if !decoys.contains(&t) && !anchors.contains(&t) {
+                decoys.push(t);
+            }
+        }
+        for _ in 0..REPS {
+            for &j in &decoys {
+                p.push(a);
+                p.push(j);
+            }
+        }
+    }
+    p.push(anchors[0]);
+    p
+}
+
+/// Build the request tuples `generate_all` consumes (same mixed strategy
+/// and engine shape for every request, as the identity check requires).
+fn requests(
+    ctx: &super::BenchCtx,
+    prompts: &[Vec<TokenId>],
+    cfg: &EngineConfig,
+) -> Vec<(Vec<TokenId>, Box<dyn DraftStrategy>, EngineConfig)> {
+    prompts
+        .iter()
+        .map(|p| (p.clone(), make_strategy(StrategyName::Mixed, &ctx.tables, cfg.q), cfg.clone()))
+        .collect()
+}

@@ -359,6 +359,12 @@ pub struct ServeConfig {
     /// lane pool would pin — so extra admissions come purely from prefix
     /// sharing and right-sized reservations.
     pub kv_pages: usize,
+    /// Tree speculation (`--tree`): engines trie-pack each sequence's
+    /// draft rows so sibling continuations share their common-prefix
+    /// tokens, overdraft extra candidate rows into the freed node budget,
+    /// and verify the whole tree in one masked call. Output streams are
+    /// byte-identical to flat-row mode either way.
+    pub tree: bool,
 }
 
 impl Default for ServeConfig {
@@ -379,6 +385,7 @@ impl Default for ServeConfig {
             default_engine: EngineConfig::default(),
             kv_page_size: 0,
             kv_pages: 0,
+            tree: false,
         }
     }
 }

@@ -18,6 +18,7 @@ pub mod mixed;
 pub mod model_ngram;
 pub mod session_cache;
 pub mod tables;
+pub mod tree;
 
 pub use context_ngram::ContextNgram;
 pub use index::SuffixIndex;
@@ -26,6 +27,7 @@ pub use mixed::MixedStrategy;
 pub use model_ngram::{ExtendedBigram, ModelBigram, ModelUnigram};
 pub use session_cache::SessionNgramCache;
 pub use tables::NgramTables;
+pub use tree::DraftTree;
 
 use crate::tokenizer::TokenId;
 

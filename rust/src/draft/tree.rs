@@ -1,0 +1,359 @@
+//! Arena-backed draft **tree**: the generalization of [`DraftBatch`]'s
+//! flat rows to a token trie, so sibling continuations share their common
+//! prefix instead of re-verifying it row by row (ROADMAP open item 1,
+//! Medusa-style tree verification).
+//!
+//! Layout is struct-of-arrays over node index, all buffers reused across
+//! steps via [`DraftTree::reset`] (zero steady-state heap allocations once
+//! warm, pinned by `rust/tests/draft_alloc.rs`):
+//!
+//! - `tokens[i]`  — the token this node speculates,
+//! - `parents[i]` — parent node index ([`NO_PARENT`] for the root),
+//! - `depths[i]`  — root = 0,
+//! - `rows/kinds/ranks[i]` — provenance of the batch row that first
+//!   created the node (trace + adaptive feedback),
+//! - `masks[i*words..]` — the node's **ancestor bitmask** over node
+//!   indices, self-inclusive: bit `j` is set iff node `j` lies on the
+//!   root-to-`i` path. This is the per-node attention mask the packed
+//!   verifier consumes.
+//!
+//! Two structural invariants make the masks and the judge O(path):
+//! `parents[i] < i` for every non-root node (ascending index order IS
+//! root-to-leaf order), and siblings carry distinct tokens (trie insertion
+//! never duplicates a child). Node 0 is always the anchor — the last
+//! accepted token, whose KV is not yet cached — so a tree built from `k`
+//! rows of `w` tokens holds at most `1 + k*w <= k*(w+1)` nodes and always
+//! fits the source block's node budget; the slack is what overdraft rows
+//! (extra width beyond `k`) spend.
+
+use crate::tokenizer::TokenId;
+
+use super::{DraftBatch, StrategyKind};
+
+/// `parents[]` sentinel for the root node.
+pub const NO_PARENT: u32 = u32::MAX;
+
+/// A speculation trie built from draft rows, verified in one packed call.
+///
+/// Linear chains are the degenerate width-1 case: inserting one row yields
+/// a path, and the judge's root-to-leaf walk reduces to the flat-row
+/// longest-prefix rule.
+#[derive(Debug, Clone, Default)]
+pub struct DraftTree {
+    tokens: Vec<TokenId>,
+    parents: Vec<u32>,
+    depths: Vec<u32>,
+    rows: Vec<u32>,
+    kinds: Vec<StrategyKind>,
+    ranks: Vec<u32>,
+    masks: Vec<u64>,
+    words: usize,
+    budget: usize,
+    k: usize,
+    w: usize,
+}
+
+impl DraftTree {
+    /// An empty tree (call [`Self::reset`] before inserting).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Clear the tree and re-root it at `anchor`, KEEPING all buffer
+    /// allocations. `(k, w)` is the source block shape: it fixes the node
+    /// budget at `k * (w + 1)` (the packed verifier's position count) and
+    /// is the artifact shape the runtime warms for this tree.
+    pub fn reset(&mut self, anchor: TokenId, k: usize, w: usize) {
+        self.k = k;
+        self.w = w;
+        self.budget = k * (w + 1);
+        self.words = self.budget.div_ceil(64).max(1);
+        self.tokens.clear();
+        self.parents.clear();
+        self.depths.clear();
+        self.rows.clear();
+        self.kinds.clear();
+        self.ranks.clear();
+        self.masks.clear();
+        self.push_node(anchor, NO_PARENT, 0, StrategyKind::Empty, 0);
+    }
+
+    fn push_node(
+        &mut self,
+        token: TokenId,
+        parent: u32,
+        row: u32,
+        kind: StrategyKind,
+        rank: u32,
+    ) -> u32 {
+        let i = self.tokens.len();
+        debug_assert!(i < self.budget, "push beyond node budget");
+        self.tokens.push(token);
+        self.parents.push(parent);
+        self.rows.push(row);
+        self.kinds.push(kind);
+        self.ranks.push(rank);
+        let depth =
+            if parent == NO_PARENT { 0 } else { self.depths[parent as usize] + 1 };
+        self.depths.push(depth);
+        // mask = parent's mask | own bit (root: just own bit)
+        let off = i * self.words;
+        self.masks.resize(off + self.words, 0);
+        if parent != NO_PARENT {
+            let poff = parent as usize * self.words;
+            for wd in 0..self.words {
+                self.masks[off + wd] = self.masks[poff + wd];
+            }
+        }
+        self.masks[off + i / 64] |= 1u64 << (i % 64);
+        i as u32
+    }
+
+    /// The child of `parent` speculating `token`, if present. Linear scan:
+    /// node counts are small (<= `k * (w + 1)`), and parents always have
+    /// lower indices so the scan starts past `parent`.
+    pub fn child_matching(&self, parent: u32, token: TokenId) -> Option<u32> {
+        (parent as usize + 1..self.tokens.len())
+            .find(|&i| self.parents[i] == parent && self.tokens[i] == token)
+            .map(|i| i as u32)
+    }
+
+    /// Insert one draft row as a root-to-leaf path, sharing every prefix
+    /// token already present. Tokens beyond the tree depth `w` are
+    /// truncated (same contract as [`DraftBatch::push_conf`]); insertion
+    /// stops early — keeping the partial prefix — once the node budget is
+    /// exhausted. Returns the number of NEW nodes created (0 means the row
+    /// was a duplicate or the budget is spent).
+    pub fn insert_row(
+        &mut self,
+        tokens: &[TokenId],
+        kind: StrategyKind,
+        rank: usize,
+        row: usize,
+    ) -> usize {
+        let mut cur = 0u32;
+        let mut created = 0usize;
+        for &t in tokens.iter().take(self.w) {
+            if let Some(c) = self.child_matching(cur, t) {
+                cur = c;
+                continue;
+            }
+            if self.tokens.len() >= self.budget {
+                break;
+            }
+            cur = self.push_node(t, cur, row as u32, kind, rank as u32);
+            created += 1;
+        }
+        created
+    }
+
+    /// Insert every committed row of `batch` (in policy order — earlier
+    /// rows claim shared-prefix provenance first, matching the flat
+    /// judge's lowest-row tie-break).
+    pub fn insert_batch(&mut self, batch: &DraftBatch) {
+        for (r, d) in batch.rows().iter().enumerate() {
+            self.insert_row(batch.row_tokens(r), d.kind, d.rank, r);
+        }
+    }
+
+    /// Drop every node with index `>= n` (rollback hook). Because parents
+    /// always precede children, any prefix of the node arrays is itself a
+    /// well-formed tree; `n` is clamped to at least the root.
+    pub fn truncate(&mut self, n: usize) {
+        let n = n.clamp(1, self.tokens.len());
+        self.tokens.truncate(n);
+        self.parents.truncate(n);
+        self.depths.truncate(n);
+        self.rows.truncate(n);
+        self.kinds.truncate(n);
+        self.ranks.truncate(n);
+        self.masks.truncate(n * self.words);
+    }
+
+    /// Node count (root included); 0 only before the first `reset`.
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Whether the tree holds no nodes (only before the first `reset`).
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Whether the node budget is spent.
+    pub fn is_full(&self) -> bool {
+        self.tokens.len() >= self.budget
+    }
+
+    /// The node budget `k * (w + 1)` fixed by the last `reset`.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// The source block shape `(k, w)` — the artifact the verifier warms.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.k, self.w)
+    }
+
+    /// `u64` words per ancestor mask.
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// All node tokens, by node index (node 0 = anchor).
+    pub fn tokens(&self) -> &[TokenId] {
+        &self.tokens
+    }
+
+    /// All parent pointers, by node index ([`NO_PARENT`] at the root).
+    pub fn parents(&self) -> &[u32] {
+        &self.parents
+    }
+
+    /// Concatenated self-inclusive ancestor masks, `words()` u64s per node.
+    pub fn masks(&self) -> &[u64] {
+        &self.masks
+    }
+
+    /// Node `i`'s self-inclusive ancestor mask.
+    pub fn mask(&self, i: usize) -> &[u64] {
+        &self.masks[i * self.words..(i + 1) * self.words]
+    }
+
+    /// Node `i`'s token.
+    pub fn token(&self, i: usize) -> TokenId {
+        self.tokens[i]
+    }
+
+    /// Node `i`'s depth (root = 0).
+    pub fn depth(&self, i: usize) -> usize {
+        self.depths[i] as usize
+    }
+
+    /// Deepest node's depth (0 for a root-only tree).
+    pub fn max_depth(&self) -> usize {
+        self.depths.iter().copied().max().unwrap_or(0) as usize
+    }
+
+    /// Batch row that first created node `i` (0 for the root).
+    pub fn node_row(&self, i: usize) -> usize {
+        self.rows[i] as usize
+    }
+
+    /// Strategy that first created node `i` (`Empty` for the root).
+    pub fn node_kind(&self, i: usize) -> StrategyKind {
+        self.kinds[i]
+    }
+
+    /// Strategy-local rank of the row that first created node `i`.
+    pub fn node_rank(&self, i: usize) -> usize {
+        self.ranks[i] as usize
+    }
+
+    /// Number of leaves (nodes with no children); 1 for a root-only tree.
+    /// Allocation-free (children always have higher indices, so a node is
+    /// a leaf iff no later node points back at it).
+    pub fn leaf_count(&self) -> usize {
+        let n = self.tokens.len();
+        (0..n)
+            .filter(|&i| !(i + 1..n).any(|j| self.parents[j] == i as u32))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mask_bits(tree: &DraftTree, i: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (wd, &m) in tree.mask(i).iter().enumerate() {
+            for b in 0..64 {
+                if m & (1u64 << b) != 0 {
+                    out.push(wd * 64 + b);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn linear_chain_is_degenerate_width_one() {
+        let mut t = DraftTree::new();
+        t.reset(7, 1, 3);
+        assert_eq!(t.insert_row(&[1, 2, 3], StrategyKind::ContextNgram, 0, 0), 3);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.max_depth(), 3);
+        assert_eq!(t.leaf_count(), 1);
+        assert_eq!(t.parents(), &[NO_PARENT, 0, 1, 2]);
+        assert_eq!(mask_bits(&t, 3), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn siblings_share_their_common_prefix() {
+        let mut t = DraftTree::new();
+        t.reset(9, 3, 3);
+        t.insert_row(&[1, 2, 3], StrategyKind::ContextNgram, 0, 0);
+        // shares [1, 2], branches at the last token
+        assert_eq!(t.insert_row(&[1, 2, 4], StrategyKind::ModelBigram, 0, 1), 1);
+        // duplicate row adds nothing
+        assert_eq!(t.insert_row(&[1, 2, 3], StrategyKind::ModelBigram, 1, 2), 0);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.leaf_count(), 2);
+        // branch node's mask covers root + shared prefix + itself only
+        let j = t.child_matching(2, 4).unwrap() as usize;
+        assert_eq!(mask_bits(&t, j), vec![0, 1, 2, j]);
+        // provenance of the shared prefix belongs to the FIRST row
+        assert_eq!(t.node_kind(1), StrategyKind::ContextNgram);
+        assert_eq!(t.node_kind(j), StrategyKind::ModelBigram);
+    }
+
+    #[test]
+    fn budget_caps_insertion_keeping_partial_prefix() {
+        let mut t = DraftTree::new();
+        t.reset(0, 1, 2); // budget = 3 nodes
+        t.insert_row(&[1, 2], StrategyKind::ContextNgram, 0, 0);
+        assert!(t.is_full());
+        // disjoint row: no room, partial prefix shares nothing
+        assert_eq!(t.insert_row(&[5, 6], StrategyKind::Jacobi, 0, 1), 0);
+        assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn rows_truncate_to_w() {
+        let mut t = DraftTree::new();
+        t.reset(0, 2, 2);
+        assert_eq!(t.insert_row(&[1, 2, 3, 4], StrategyKind::ContextNgram, 0, 0), 2);
+        assert_eq!(t.max_depth(), 2);
+    }
+
+    #[test]
+    fn truncate_drops_suffix_nodes_and_masks() {
+        let mut t = DraftTree::new();
+        t.reset(9, 2, 2);
+        t.insert_row(&[1, 2], StrategyKind::ContextNgram, 0, 0);
+        t.insert_row(&[3, 4], StrategyKind::ModelBigram, 0, 1);
+        let n = t.len();
+        t.truncate(3);
+        assert_eq!(t.len(), 3);
+        assert!(n > 3);
+        assert_eq!(t.masks().len(), 3 * t.words());
+        // re-inserting reuses the surviving prefix, no stale children
+        assert_eq!(t.child_matching(0, 3), None);
+        t.insert_row(&[3, 4], StrategyKind::ModelBigram, 0, 1);
+        assert_eq!(t.len(), 5);
+    }
+
+    #[test]
+    fn reset_keeps_capacity_and_reroots() {
+        let mut t = DraftTree::new();
+        t.reset(1, 2, 4);
+        t.insert_row(&[1, 2, 3, 4], StrategyKind::ContextNgram, 0, 0);
+        t.reset(5, 2, 2);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.token(0), 5);
+        assert_eq!(t.budget(), 6);
+        assert_eq!(t.max_depth(), 0);
+        assert_eq!(t.leaf_count(), 1);
+    }
+}

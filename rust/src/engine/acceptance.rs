@@ -11,7 +11,7 @@
 //! emits >= 1 token and the output stream is EXACTLY the base model's
 //! greedy stream (the correctness invariant tested in prop tests).
 
-use crate::draft::DraftBatch;
+use crate::draft::{DraftBatch, DraftTree};
 use crate::tokenizer::TokenId;
 
 /// Result of judging one verification call.
@@ -58,6 +58,45 @@ pub fn judge(batch: &DraftBatch, next_ids: &[TokenId], w1: usize) -> Acceptance 
     emitted.extend_from_slice(&batch.row_tokens(best_row)[..best_a]);
     emitted.push(out[best_a]); // bonus token
     Acceptance { row: best_row, accepted: best_a, emitted }
+}
+
+/// Result of judging one TREE verification call.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TreeAcceptance {
+    /// accepted node indices in root-to-leaf order (root excluded)
+    pub path: Vec<u32>,
+    /// deepest accepted node (the root, node 0, when nothing accepted)
+    pub node: usize,
+    /// number of accepted draft tokens (= `path.len()`)
+    pub accepted: usize,
+    /// tokens to emit: accepted path tokens + bonus (len = accepted + 1)
+    pub emitted: Vec<TokenId>,
+}
+
+/// Judge a tree verification call: walk from the root, at each node
+/// following the child whose token equals the model's prediction AT that
+/// node. Siblings carry distinct tokens (trie construction), so at most
+/// one child can match — the walk accepts the UNIQUE root-to-leaf path the
+/// model's argmax traces, and the bonus token is the prediction at the
+/// deepest accepted node. By induction each emitted token is exactly the
+/// greedy prediction given everything emitted before it, so the output
+/// stream stays byte-identical to plain greedy decoding (and to flat-row
+/// judging of the same drafts — the flat judge is the width-1 case).
+///
+/// `next_ids[j]` is the model's prediction after consuming node `j`'s
+/// root-to-node path (a (n, 1) [`crate::runtime::StepOutput`]).
+pub fn judge_tree(tree: &DraftTree, next_ids: &[TokenId]) -> TreeAcceptance {
+    debug_assert_eq!(next_ids.len(), tree.len());
+    let mut cur = 0u32;
+    let mut path = Vec::new();
+    let mut emitted = Vec::new();
+    while let Some(c) = tree.child_matching(cur, next_ids[cur as usize]) {
+        path.push(c);
+        emitted.push(tree.token(c as usize));
+        cur = c;
+    }
+    emitted.push(next_ids[cur as usize]); // bonus token
+    TreeAcceptance { accepted: path.len(), node: cur as usize, path, emitted }
 }
 
 #[cfg(test)]
@@ -180,6 +219,68 @@ mod tests {
                 p.push(e);
             }
             acc.emitted.len() == acc.accepted + 1
+        });
+    }
+
+    #[test]
+    fn tree_judge_follows_the_argmax_branch() {
+        // root=9 with two children: 1 (row 0) and 2 (row 1); 2 extends to 5
+        let mut t = DraftTree::new();
+        t.reset(9, 2, 2);
+        t.insert_row(&[1, 7], StrategyKind::ContextNgram, 0, 0);
+        t.insert_row(&[2, 5], StrategyKind::ModelBigram, 0, 1);
+        // nodes: 0=root(9), 1=1, 2=7, 3=2, 4=5
+        // model: after root predict 2 -> node 3; after [2] predict 5 ->
+        // node 4; after [2,5] predict 8 (bonus)
+        let out = vec![2, 0, 0, 5, 8];
+        let a = judge_tree(&t, &out);
+        assert_eq!(a.path, vec![3, 4]);
+        assert_eq!(a.node, 4);
+        assert_eq!(a.accepted, 2);
+        assert_eq!(a.emitted, vec![2, 5, 8]);
+    }
+
+    #[test]
+    fn tree_zero_accept_emits_root_bonus() {
+        let mut t = DraftTree::new();
+        t.reset(9, 1, 2);
+        t.insert_row(&[1, 2], StrategyKind::ContextNgram, 0, 0);
+        let out = vec![4, 4, 4];
+        let a = judge_tree(&t, &out);
+        assert_eq!(a.accepted, 0);
+        assert_eq!(a.node, 0);
+        assert_eq!(a.emitted, vec![4]);
+    }
+
+    #[test]
+    fn tree_judge_equals_flat_judge_on_a_single_row() {
+        // width-1 degenerate case: one row, tree walk == longest prefix
+        use crate::util::{prop, rng::Rng};
+        prop::check(200, |rng: &mut Rng| {
+            let w = rng.range(1, 6);
+            let row: Vec<TokenId> = prop::vec_u32(rng, w, 0..8);
+            let mut b = DraftBatch::new(w);
+            b.push(row.clone(), StrategyKind::ContextNgram, 0);
+            let mut t = DraftTree::new();
+            t.reset(99, 1, w);
+            t.insert_row(&row, StrategyKind::ContextNgram, 0, 0);
+            // random model outputs, often matching the drafts
+            let w1 = w + 1;
+            let flat_out: Vec<TokenId> = (0..w1)
+                .map(|i| {
+                    if i < w && rng.f64() < 0.7 {
+                        row[i]
+                    } else {
+                        rng.below(8) as TokenId
+                    }
+                })
+                .collect();
+            // tree outputs: node j (depth d = j) predicts flat_out[d]
+            // (node 0 = root = depth 0, node j = row[j-1])
+            let tree_out: Vec<TokenId> = (0..t.len()).map(|j| flat_out[j]).collect();
+            let fa = judge(&b, &flat_out, w1);
+            let ta = judge_tree(&t, &tree_out);
+            ta.accepted == fa.accepted && ta.emitted == fa.emitted
         });
     }
 }

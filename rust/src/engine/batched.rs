@@ -33,13 +33,16 @@ use anyhow::{anyhow, Result};
 use crate::adaptive::{budget, SeqController, StepFeedback};
 use crate::config::EngineConfig;
 use crate::costmodel::CostModel;
-use crate::draft::{DraftBatch, DraftStrategy, StrategyKind};
+use crate::draft::{DraftBatch, DraftStrategy, DraftTree, StrategyKind};
 use crate::kvcache::{KvSeq, KvSlot, KvStore, PageStats};
-use crate::runtime::{ModelRuntime, PackedBlock};
+use crate::runtime::{ModelRuntime, PackedBlock, PackedTreeBlock};
 use crate::tokenizer::TokenId;
 use crate::trace::{FlightRecorder, Phase, PhaseTimer, StepEvent};
 
-use super::{assemble_block_into, judge_and_commit, make_trace, pad_batch, GenResult};
+use super::{
+    assemble_block_into, judge_and_commit, judge_and_commit_tree, make_trace, make_tree_trace,
+    pad_batch, GenResult,
+};
 
 /// Identifier of one admitted sequence, unique within an engine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -78,12 +81,16 @@ impl AutoBudget {
 }
 
 /// One packed verification call, as the engine saw it (feeds the batched
-/// bench's cost-model throughput accounting).
+/// bench's cost-model throughput accounting). Consumers price a call at
+/// `rows * (w + 1)` positions; a TREE-mode group therefore reports
+/// `rows = total nodes, w = 0` — one position per node, exactly what the
+/// masked call runs.
 #[derive(Debug, Clone)]
 pub struct PackedTrace {
-    /// common speculation depth of the call
+    /// common speculation depth of the call (0 for tree-mode groups)
     pub w: usize,
-    /// total rows across all sequences (the packed batch size, sum of k_i)
+    /// total rows across all sequences (the packed batch size, sum of k_i;
+    /// total NODES for a tree-mode group)
     pub rows: usize,
     /// largest context length among participating lanes
     pub max_ctx: usize,
@@ -104,6 +111,7 @@ pub struct PackedTrace {
 struct DraftSlot {
     batch: DraftBatch,
     block: Vec<TokenId>,
+    tree: DraftTree,
 }
 
 struct SeqState {
@@ -184,6 +192,12 @@ pub struct BatchedEngine<'rt> {
     /// all timing; a disabled recorder costs one branch per group. Never
     /// affects emitted tokens — pinned by `rust/tests/trace.rs`.
     pub recorder: Option<std::sync::Arc<FlightRecorder>>,
+    /// Tree speculation (`--tree`): every same-depth group trie-packs its
+    /// sequences' overdrafted rows and verifies all nodes in one masked
+    /// call ([`PackedTreeBlock`]). Output streams stay byte-identical to
+    /// flat-row mode and to plain greedy — pinned by
+    /// `rust/tests/tree_equiv.rs`.
+    pub tree: bool,
     pool: KvStore,
     active: Vec<SeqState>,
     next_id: u64,
@@ -244,6 +258,7 @@ impl<'rt> BatchedEngine<'rt> {
             auto_budget: None,
             last_budget: None,
             recorder: None,
+            tree: false,
             pool,
             active: Vec::new(),
             next_id: 0,
@@ -552,7 +567,11 @@ impl<'rt> BatchedEngine<'rt> {
             }
         }
         for (w, idxs) in groups {
-            self.run_group(w, &idxs, &shapes)?;
+            if self.tree {
+                self.run_group_tree(w, &idxs, &shapes)?;
+            } else {
+                self.run_group(w, &idxs, &shapes)?;
+            }
         }
         self.steps_done += 1;
 
@@ -708,6 +727,160 @@ impl<'rt> BatchedEngine<'rt> {
                     emitted: emitted_total,
                     wins,
                     accepted_by,
+                    ..StepEvent::default()
+                });
+            }
+        }
+        self.draft_scratch = slots;
+        Ok(())
+    }
+
+    /// Tree-mode twin of [`Self::run_group`]: each sequence overdrafts
+    /// extra candidate rows, trie-packs them into its slot's
+    /// [`DraftTree`] (shared prefixes collapse, so the node count stays
+    /// within the same `k * (w + 1)` budget the flat block would spend),
+    /// and the whole group is verified in one packed masked call.
+    fn run_group_tree(&mut self, w: usize, idxs: &[usize], shapes: &[(usize, usize)]) -> Result<()> {
+        // phase stopwatch: inert (never reads the clock) unless a live
+        // recorder is attached — the zero-cost-when-idle contract
+        let mut timer = PhaseTimer::new(self.recorder.as_ref().is_some_and(|r| r.enabled()));
+
+        // --- draft + trie-pack every sequence into its pooled slot
+        let mut slots = std::mem::take(&mut self.draft_scratch);
+        while slots.len() < idxs.len() {
+            slots.push(DraftSlot::default());
+        }
+        for (slot, &i) in slots.iter_mut().zip(idxs) {
+            let k = shapes[i].0;
+            let s = &mut self.active[i];
+            let k_extra = match s.controller.as_ref() {
+                Some(c) => c.tree_overdraft(k),
+                None => k * 2,
+            };
+            slot.batch.reset(w);
+            if w > 0 {
+                match s.controller.as_mut() {
+                    Some(c) => c.propose(&s.seq, k_extra, &mut slot.batch),
+                    None => s.strategy.propose(&s.seq, k_extra, &mut slot.batch),
+                }
+            }
+            timer.lap(Phase::Draft);
+            // trie insertion dedups shared prefixes and enforces the node
+            // budget; no pad/assemble — the tree IS the packed block
+            slot.tree.reset(*s.seq.last().unwrap(), k, w);
+            slot.tree.insert_batch(&slot.batch);
+            timer.lap(Phase::Pack);
+        }
+
+        // --- one packed tree call for the whole group
+        let views: Vec<KvSlot> = idxs
+            .iter()
+            .map(|&i| self.pool.slot(self.active[i].kv))
+            .collect();
+        let blocks: Vec<PackedTreeBlock> = slots
+            .iter()
+            .zip(&views)
+            .map(|(slot, view)| PackedTreeBlock { tree: &slot.tree, cache: view.as_read() })
+            .collect();
+        let packed_nodes: usize = blocks.iter().map(|b| b.tree.len()).sum();
+        if self.collect_traces {
+            self.packed_traces.push(PackedTrace {
+                w: 0, // one position per node (see PackedTrace docs)
+                rows: packed_nodes,
+                max_ctx: blocks.iter().map(|b| b.cache.ctx_len()).max().unwrap_or(0),
+                seqs: blocks.len(),
+                step: self.steps_done,
+            });
+        }
+        timer.lap(Phase::Pack);
+        let outs = self.runtime.spec_step_tree_packed(&blocks);
+        timer.lap(Phase::Verify);
+        drop(blocks);
+        drop(views);
+        let outs = match outs {
+            Ok(o) => o,
+            Err(e) => {
+                self.draft_scratch = slots;
+                return Err(e);
+            }
+        };
+
+        // --- judge + commit each sequence independently (see run_group
+        // on the early-`?` scratch-drop tradeoff)
+        let mut wins = [0u32; StrategyKind::COUNT];
+        let mut accepted_by = [0u32; StrategyKind::COUNT];
+        let mut accepted_total = 0u32;
+        let mut emitted_total = 0u32;
+        for ((&i, slot), out) in idxs.iter().zip(&slots).zip(&outs) {
+            let tree = &slot.tree;
+            let k = shapes[i].0;
+            let kv = self.active[i].kv;
+            let (acc, ctx_len) = {
+                let mut wslot = self.pool.slot_mut(kv);
+                judge_and_commit_tree(tree, out, wslot.as_write(), &mut timer)?
+            };
+            if timer.enabled() {
+                // same Empty demotion as flat mode: a win with zero
+                // accepted tokens is provenance-free (the root is Empty)
+                let kind = if acc.accepted == 0 {
+                    StrategyKind::Empty
+                } else {
+                    tree.node_kind(acc.node)
+                };
+                wins[kind.index()] += 1;
+                accepted_by[kind.index()] += acc.accepted as u32;
+                accepted_total += acc.accepted as u32;
+                emitted_total += acc.emitted.len() as u32;
+            }
+            let s = &mut self.active[i];
+            s.res.exec_time += out.exec_time;
+            if self.collect_traces {
+                s.res
+                    .traces
+                    .push(make_tree_trace(&slot.batch, tree, &acc, k, w, ctx_len, out.exec_time));
+            }
+            // outputs along the accepted path ARE the emitted tokens
+            match s.controller.as_mut() {
+                Some(c) => c.observe(&StepFeedback {
+                    batch: &slot.batch,
+                    row: tree.node_row(acc.node),
+                    accepted: acc.accepted,
+                    emitted: &acc.emitted,
+                    model_out: &acc.emitted,
+                    k,
+                    w,
+                    ctx_len,
+                }),
+                None => s.strategy.observe(&acc.emitted, &acc.emitted),
+            }
+            s.res.calls += 1;
+            for &t in &acc.emitted {
+                s.seq.push(t);
+                s.res.tokens.push(t);
+                if s.res.tokens.len() >= s.cfg.max_new_tokens {
+                    break;
+                }
+            }
+            // keep the pool's token mirror current so newly-full pages
+            // get sealed into the prefix index (no-op in lane mode)
+            self.pool.sync_tokens(kv, &self.active[i].seq);
+        }
+        if timer.enabled() {
+            if let Some(rec) = &self.recorder {
+                let live = &slots[..idxs.len()];
+                rec.record_step(StepEvent {
+                    step: self.steps_done,
+                    w: w as u32,
+                    rows: packed_nodes as u32,
+                    seqs: idxs.len() as u32,
+                    phase_us: timer.us,
+                    accepted: accepted_total,
+                    emitted: emitted_total,
+                    wins,
+                    accepted_by,
+                    tree_nodes: packed_nodes as u32,
+                    tree_leaves: live.iter().map(|s| s.tree.leaf_count() as u32).sum(),
+                    tree_depth: live.iter().map(|s| s.tree.max_depth() as u32).max().unwrap_or(0),
                     ..StepEvent::default()
                 });
             }

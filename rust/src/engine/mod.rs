@@ -27,13 +27,13 @@ use anyhow::Result;
 
 use crate::adaptive::{SeqController, StepFeedback};
 use crate::config::EngineConfig;
-use crate::draft::{DraftBatch, DraftStrategy, StrategyKind};
+use crate::draft::{DraftBatch, DraftStrategy, DraftTree, StrategyKind};
 use crate::kvcache::{KvWrite, SharedKvCache};
-use crate::runtime::{ModelRuntime, StepOutput};
+use crate::runtime::{ModelRuntime, PackedTreeBlock, StepOutput};
 use crate::tokenizer::TokenId;
 use crate::trace::{FlightRecorder, Phase, PhaseTimer, StepEvent};
 
-use acceptance::Acceptance;
+use acceptance::{Acceptance, TreeAcceptance};
 
 /// Per-verification-call trace (feeds the Fig. 4 ablations and the
 /// cost-model-simulated wall-times).
@@ -132,6 +132,13 @@ pub struct SpecDecoder<'rt> {
     /// (the default) skips all timing; a disabled recorder costs one
     /// branch per step. Never affects emitted tokens.
     pub recorder: Option<std::sync::Arc<FlightRecorder>>,
+    /// Tree speculation (`--tree`): trie-share the drafted rows' common
+    /// prefixes, spend the freed node budget on extra candidate rows, and
+    /// verify every node in one call with per-node ancestor masks. The
+    /// acceptance invariant is unchanged — the judge follows the unique
+    /// root-to-leaf path the model's argmax traces, so the output stream
+    /// stays byte-identical to greedy (and to flat-row mode).
+    pub tree: bool,
 }
 
 impl<'rt> SpecDecoder<'rt> {
@@ -145,6 +152,7 @@ impl<'rt> SpecDecoder<'rt> {
             collect_traces: false,
             controller: None,
             recorder: None,
+            tree: false,
         }
     }
 
@@ -159,6 +167,7 @@ impl<'rt> SpecDecoder<'rt> {
             collect_traces: false,
             controller: Some(controller),
             recorder: None,
+            tree: false,
         }
     }
 
@@ -189,10 +198,12 @@ impl<'rt> SpecDecoder<'rt> {
         res.tokens.push(pf.next_id);
 
         // per-step scratch, reused across the whole decode: the draft
-        // batch arena and the assembled block buffer keep their
-        // capacity, so a steady-state step allocates nothing draft-side
+        // batch arena, the assembled block buffer and the speculation
+        // trie keep their capacity, so a steady-state step allocates
+        // nothing draft-side
         let mut batch = DraftBatch::new(0);
         let mut block: Vec<TokenId> = Vec::new();
+        let mut tree = DraftTree::new();
 
         let tdec = Instant::now();
         while res.tokens.len() < self.cfg.max_new_tokens {
@@ -213,67 +224,150 @@ impl<'rt> SpecDecoder<'rt> {
             // live recorder is attached
             let mut timer = PhaseTimer::new(self.recorder.as_ref().is_some_and(|r| r.enabled()));
 
-            // --- draft
-            batch.reset(w);
-            if w > 0 {
+            let emitted: Vec<TokenId> = if self.tree {
+                // --- draft (trie): overdraft extra candidate rows — the
+                // trie's prefix sharing means k rows rarely spend the full
+                // k*(w+1) node budget, and the slack buys breadth
+                let k_extra = match self.controller.as_ref() {
+                    Some(c) => c.tree_overdraft(k),
+                    None => k * 2,
+                };
+                batch.reset(w);
+                if w > 0 {
+                    match self.controller.as_mut() {
+                        Some(c) => c.propose(&seq, k_extra, &mut batch),
+                        None => self.strategy.propose(&seq, k_extra, &mut batch),
+                    }
+                }
+                timer.lap(Phase::Draft);
+                // trie insertion dedups shared prefixes and enforces the
+                // node budget; no pad/assemble — the tree IS the block
+                tree.reset(*seq.last().unwrap(), k, w);
+                tree.insert_batch(&batch);
+                timer.lap(Phase::Pack);
+
+                // --- verify (every node in one masked call)
+                let blocks = [PackedTreeBlock { tree: &tree, cache: &cache }];
+                let out = self
+                    .runtime
+                    .spec_step_tree_packed(&blocks)?
+                    .pop()
+                    .expect("one tree block in, one output out");
+                res.exec_time += out.exec_time;
+                timer.lap(Phase::Verify);
+
+                // --- judge + commit
+                let (acc, ctx_len) = judge_and_commit_tree(&tree, &out, &mut cache, &mut timer)?;
+                if self.collect_traces {
+                    res.traces
+                        .push(make_tree_trace(&batch, &tree, &acc, k, w, ctx_len, out.exec_time));
+                }
+                if timer.enabled() {
+                    if let Some(rec) = &self.recorder {
+                        let mut ev = StepEvent {
+                            step: res.calls as u64,
+                            w: w as u32,
+                            rows: tree.len() as u32,
+                            seqs: 1,
+                            phase_us: timer.us,
+                            accepted: acc.accepted as u32,
+                            emitted: acc.emitted.len() as u32,
+                            tree_nodes: tree.len() as u32,
+                            tree_leaves: tree.leaf_count() as u32,
+                            tree_depth: tree.max_depth() as u32,
+                            ..StepEvent::default()
+                        };
+                        let kind = if acc.accepted == 0 {
+                            StrategyKind::Empty
+                        } else {
+                            tree.node_kind(acc.node)
+                        };
+                        ev.wins[kind.index()] = 1;
+                        ev.accepted_by[kind.index()] = acc.accepted as u32;
+                        rec.record_step(ev);
+                    }
+                }
+                // the model outputs along the accepted path ARE the emitted
+                // tokens (each accepted node's prediction is the next path
+                // token; the deepest node's prediction is the bonus)
                 match self.controller.as_mut() {
-                    Some(c) => c.propose(&seq, k, &mut batch),
-                    None => self.strategy.propose(&seq, k, &mut batch),
+                    Some(c) => c.observe(&StepFeedback {
+                        batch: &batch,
+                        row: tree.node_row(acc.node),
+                        accepted: acc.accepted,
+                        emitted: &acc.emitted,
+                        model_out: &acc.emitted,
+                        k,
+                        w,
+                        ctx_len,
+                    }),
+                    None => self.strategy.observe(&acc.emitted, &acc.emitted),
                 }
-            }
-            pad_batch(&mut batch, k);
-            timer.lap(Phase::Draft);
-            assemble_block_into(&batch, *seq.last().unwrap(), w, &mut block);
-            timer.lap(Phase::Pack);
-
-            // --- verify
-            let out = self.runtime.spec_step(k, w, &block, &cache)?;
-            res.exec_time += out.exec_time;
-            timer.lap(Phase::Verify);
-
-            // --- judge + commit
-            let (acc, ctx_len) = judge_and_commit(&batch, &out, &mut cache, &mut timer)?;
-            if self.collect_traces {
-                res.traces.push(make_trace(&batch, &acc, k, w, ctx_len, out.exec_time));
-            }
-            if timer.enabled() {
-                if let Some(rec) = &self.recorder {
-                    let mut ev = StepEvent {
-                        step: res.calls as u64,
-                        w: w as u32,
-                        rows: k as u32,
-                        seqs: 1,
-                        phase_us: timer.us,
-                        accepted: acc.accepted as u32,
-                        emitted: acc.emitted.len() as u32,
-                        ..StepEvent::default()
-                    };
-                    let kind = if acc.accepted == 0 {
-                        StrategyKind::Empty
-                    } else {
-                        batch.rows()[acc.row].kind
-                    };
-                    ev.wins[kind.index()] = 1;
-                    ev.accepted_by[kind.index()] = acc.accepted as u32;
-                    rec.record_step(ev);
+                acc.emitted
+            } else {
+                // --- draft
+                batch.reset(w);
+                if w > 0 {
+                    match self.controller.as_mut() {
+                        Some(c) => c.propose(&seq, k, &mut batch),
+                        None => self.strategy.propose(&seq, k, &mut batch),
+                    }
                 }
-            }
-            match self.controller.as_mut() {
-                Some(c) => c.observe(&StepFeedback {
-                    batch: &batch,
-                    row: acc.row,
-                    accepted: acc.accepted,
-                    emitted: &acc.emitted,
-                    model_out: out.row(acc.row),
-                    k,
-                    w,
-                    ctx_len,
-                }),
-                None => self.strategy.observe(&acc.emitted, out.row(acc.row)),
-            }
+                pad_batch(&mut batch, k);
+                timer.lap(Phase::Draft);
+                assemble_block_into(&batch, *seq.last().unwrap(), w, &mut block);
+                timer.lap(Phase::Pack);
+
+                // --- verify
+                let out = self.runtime.spec_step(k, w, &block, &cache)?;
+                res.exec_time += out.exec_time;
+                timer.lap(Phase::Verify);
+
+                // --- judge + commit
+                let (acc, ctx_len) = judge_and_commit(&batch, &out, &mut cache, &mut timer)?;
+                if self.collect_traces {
+                    res.traces.push(make_trace(&batch, &acc, k, w, ctx_len, out.exec_time));
+                }
+                if timer.enabled() {
+                    if let Some(rec) = &self.recorder {
+                        let mut ev = StepEvent {
+                            step: res.calls as u64,
+                            w: w as u32,
+                            rows: k as u32,
+                            seqs: 1,
+                            phase_us: timer.us,
+                            accepted: acc.accepted as u32,
+                            emitted: acc.emitted.len() as u32,
+                            ..StepEvent::default()
+                        };
+                        let kind = if acc.accepted == 0 {
+                            StrategyKind::Empty
+                        } else {
+                            batch.rows()[acc.row].kind
+                        };
+                        ev.wins[kind.index()] = 1;
+                        ev.accepted_by[kind.index()] = acc.accepted as u32;
+                        rec.record_step(ev);
+                    }
+                }
+                match self.controller.as_mut() {
+                    Some(c) => c.observe(&StepFeedback {
+                        batch: &batch,
+                        row: acc.row,
+                        accepted: acc.accepted,
+                        emitted: &acc.emitted,
+                        model_out: out.row(acc.row),
+                        k,
+                        w,
+                        ctx_len,
+                    }),
+                    None => self.strategy.observe(&acc.emitted, out.row(acc.row)),
+                }
+                acc.emitted
+            };
 
             res.calls += 1;
-            for &t in &acc.emitted {
+            for &t in &emitted {
                 seq.push(t);
                 res.tokens.push(t);
                 if res.tokens.len() >= self.cfg.max_new_tokens {
@@ -364,6 +458,30 @@ pub(crate) fn judge_and_commit(
     Ok((acc, ctx_len))
 }
 
+/// Tree-mode twin of [`judge_and_commit`]: walk the argmax path, then
+/// commit the accepted chain's KV node by node. The tree [`StepOutput`] is
+/// `(n, 1)`-shaped — each node owns exactly one tail position — so
+/// committing the root and then each accepted node appends the same
+/// `accepted + 1` positions (anchor + accepted drafts, in order) that flat
+/// mode commits with a single call.
+pub(crate) fn judge_and_commit_tree(
+    tree: &DraftTree,
+    out: &StepOutput,
+    cache: &mut dyn KvWrite,
+    timer: &mut PhaseTimer,
+) -> Result<(TreeAcceptance, usize)> {
+    let ctx_len = cache.ctx_len();
+    timer.skip(); // bookkeeping between laps is nobody's phase
+    let acc = acceptance::judge_tree(tree, &out.next_ids);
+    timer.lap(Phase::Judge);
+    cache.commit_tail(&out.k_tail, &out.v_tail, out.k, out.w1, 0, 1)?;
+    for &node in &acc.path {
+        cache.commit_tail(&out.k_tail, &out.v_tail, out.k, out.w1, node as usize, 1)?;
+    }
+    timer.lap(Phase::Commit);
+    Ok((acc, ctx_len))
+}
+
 /// Build the per-call trace record shared by both engines.
 pub(crate) fn make_trace(
     batch: &DraftBatch,
@@ -387,6 +505,38 @@ pub(crate) fn make_trace(
         alloc_context: n_ctx,
         alloc_bigram: n_big,
         alloc_other: batch.k() - n_ctx - n_big,
+        exec_time,
+    }
+}
+
+/// Tree-mode twin of [`make_trace`]: `(k, w)` is the planned source block
+/// shape, winner provenance comes from the deepest accepted NODE (root =
+/// `Empty`, the zero-accept demotion flat mode applies at the event
+/// layer), and the `alloc_*` split still counts the PROPOSED rows — the
+/// overdrafted batch the trie was built from — so Fig. 4 keeps reflecting
+/// what each strategy was given, not what survived prefix sharing.
+pub(crate) fn make_tree_trace(
+    batch: &DraftBatch,
+    tree: &DraftTree,
+    acc: &TreeAcceptance,
+    k: usize,
+    w: usize,
+    ctx_len: usize,
+    exec_time: Duration,
+) -> StepTrace {
+    let n_ctx = count_kind(batch, StrategyKind::ContextNgram);
+    let n_big = count_kind(batch, StrategyKind::ExtendedBigram)
+        + count_kind(batch, StrategyKind::ModelBigram);
+    StepTrace {
+        ctx_len,
+        k,
+        w,
+        kind: tree.node_kind(acc.node),
+        rank: tree.node_rank(acc.node),
+        accepted: acc.accepted,
+        alloc_context: n_ctx,
+        alloc_bigram: n_big,
+        alloc_other: batch.k().saturating_sub(n_ctx + n_big),
         exec_time,
     }
 }

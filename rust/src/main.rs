@@ -32,8 +32,11 @@ COMMANDS:
   info                        artifact & model summary
   generate --prompt TEXT      one-shot generation
       [--model base] [--k 10] [--w 10] [--q 1] [--strategy mixed]
-      [--max-tokens 64] [--compare]
+      [--max-tokens 64] [--compare] [--tree]
       strategy 'adaptive' = online (k, w) + strategy selection (k/w as caps)
+      --tree verifies drafts as a shared-prefix trie (one masked call per
+      step, extra candidate rows in the freed node budget); output bytes
+      are identical to flat-row mode
   serve                       HTTP server (POST /generate, GET /metrics)
       [--model base] [--addr 127.0.0.1:8077] [--workers 1]
       [--batch N]             continuous batching (N >= 2). Elastic by
@@ -68,6 +71,9 @@ COMMANDS:
                               bytes (output streams are byte-identical)
       [--kv-pages 0]          paged-pool page budget (0 = derive the
                               lane-equivalent budget from --batch)
+      [--tree]                tree speculation in every batched engine
+                              (trie-packed drafts, masked verification;
+                              byte-identical output streams)
   bench <target>              reproduce a paper table/figure:
       fig1                    phase-transition heatmaps (cost model)
       fig2                    tokens/call vs top-k  [--model base]
@@ -95,6 +101,11 @@ COMMANDS:
                               shared-system-prompt workload (fails unless
                               paged admits strictly more; also re-checks
                               byte-identity) [--model base] [--smoke]
+      tree                    tree vs flat-row speculation at the same row
+                              budget on a high-repetition workload (fails
+                              unless tree accepts strictly more tokens per
+                              verify call; also re-checks tree/linear/
+                              greedy byte-identity) [--model base] [--smoke]
       all                     everything above
       common: [--prompts N] [--max-new N] [--ks 1,5,10] [--ws 2,6,10]
   trace                       flight-recorder tooling:
@@ -119,6 +130,9 @@ COMMANDS:
       [--baseline benches/baseline.json] [--bench-dir bench_out]
       [--tolerance 0.10] [--update]  (--update rewrites the baseline
                               with the observed values)
+      [--strict-baseline]     also fail when any non-wall-clock baseline
+                              entry is still null (i.e. a bench gate has
+                              never seeded its baseline value)
 ";
 
 fn main() {
@@ -129,8 +143,17 @@ fn main() {
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["compare", "help", "traces", "smoke", "no-elastic", "update"])
-        .map_err(|e| anyhow!(e))?;
+    let args = Args::from_env(&[
+        "compare",
+        "help",
+        "traces",
+        "smoke",
+        "no-elastic",
+        "update",
+        "tree",
+        "strict-baseline",
+    ])
+    .map_err(|e| anyhow!(e))?;
     if args.has_flag("help") || args.positional.is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -193,9 +216,10 @@ fn generate(artifacts: &PathBuf, args: &Args) -> Result<()> {
 
     let ctx = BenchCtx::load(manifest, model)?;
     let prompt = ctx.tokenizer.encode(prompt_text);
-    let run = |strat: StrategyName, eng: EngineConfig| -> Result<_> {
+    let run = |strat: StrategyName, eng: EngineConfig, tree: bool| -> Result<_> {
         let s = ngrammys::scheduler::make_strategy(strat, &ctx.tables, eng.q);
         let mut dec = ngrammys::engine::SpecDecoder::new(&ctx.runtime, s, eng);
+        dec.tree = tree;
         if strat == StrategyName::Adaptive {
             dec.controller = Some(ngrammys::adaptive::controller_for(
                 &ctx.tables,
@@ -209,7 +233,7 @@ fn generate(artifacts: &PathBuf, args: &Args) -> Result<()> {
         Ok((r, t.elapsed()))
     };
 
-    let (r, dt) = run(strategy, engine.clone())?;
+    let (r, dt) = run(strategy, engine.clone(), args.has_flag("tree"))?;
     println!("{}", ctx.tokenizer.decode(&r.tokens));
     eprintln!(
         "\n[{} tokens, {} calls, {:.2} tok/call, {:.0} ms total ({:.1} tok/s)]",
@@ -221,7 +245,7 @@ fn generate(artifacts: &PathBuf, args: &Args) -> Result<()> {
     );
     if args.has_flag("compare") {
         let (g, gdt) = run(StrategyName::None, ngrammys::engine::greedy_config(
-            engine.max_new_tokens))?;
+            engine.max_new_tokens), false)?;
         assert_eq!(g.tokens, r.tokens,
                    "INVARIANT VIOLATION: speculative != greedy stream");
         eprintln!(
@@ -281,6 +305,7 @@ fn serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
         },
         kv_page_size: args.get_usize("kv-page-size", 0).map_err(|e| anyhow!(e))?,
         kv_pages: args.get_usize("kv-pages", 0).map_err(|e| anyhow!(e))?,
+        tree: args.has_flag("tree"),
     };
     let scheduler = Arc::new(Scheduler::start(&manifest, model, &cfg)?);
     let tokenizer = Arc::new(BpeTokenizer::load(&manifest.tokenizer_path)?);
@@ -321,7 +346,13 @@ fn check_cmd(args: &Args) -> Result<()> {
     let tolerance = args
         .get_f64("tolerance", ngrammys::bench::check::DEFAULT_TOLERANCE)
         .map_err(|e| anyhow!(e))?;
-    ngrammys::bench::check::run(&baseline, &dir, tolerance, args.has_flag("update"))
+    ngrammys::bench::check::run(
+        &baseline,
+        &dir,
+        tolerance,
+        args.has_flag("update"),
+        args.has_flag("strict-baseline"),
+    )
 }
 
 fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
@@ -376,6 +407,7 @@ fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
         // itself on synthetic sequences/tables
         "draft" => bench::draft::run(args.has_flag("smoke")),
         "prefix" => bench::prefix::run(&load()?, args.has_flag("smoke")),
+        "tree" => bench::tree::run(&load()?, args.has_flag("smoke")),
         "table1" => {
             let models: Vec<String> = args
                 .get_or("models", "small,base,large")
@@ -399,6 +431,7 @@ fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
             bench::elastic::run(&ctx, n_prompts, max_new, &bench::elastic::STATIC_CAPS, false)?;
             bench::pool::run(&ctx, n_prompts, max_new, bench::pool::ENGINE_CAP, false)?;
             bench::prefix::run(&ctx, false)?;
+            bench::tree::run(&ctx, false)?;
             drop(ctx);
             for m in ["small", "base", "large"] {
                 let c = BenchCtx::load(manifest.clone(), m)?;

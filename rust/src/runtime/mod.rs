@@ -29,6 +29,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::config::ModelArtifacts;
+use crate::draft::DraftTree;
 use crate::kvcache::{KvRead, KvWrite};
 use crate::tokenizer::TokenId;
 
@@ -81,6 +82,20 @@ pub struct PackedBlock<'a> {
     pub k: usize,
     /// row-major (k, w+1) token block
     pub tokens: &'a [TokenId],
+    /// this sequence's own KV context
+    pub cache: &'a dyn KvRead,
+}
+
+/// One sequence's slice of a packed TREE verification call: a speculation
+/// trie whose per-node ancestor masks replace the row structure of
+/// [`PackedBlock`]. The tree's source `(k, w)` shape names the artifact the
+/// call warms; its node budget `k * (w + 1)` bounds the position count, so
+/// a tree call never attends over more positions than the flat block it
+/// replaces. Outputs come back as a [`StepOutput`] with `k = node count`
+/// and `w1 = 1` — one prediction and one KV tail position per node.
+pub struct PackedTreeBlock<'a> {
+    /// the speculation trie (node 0 = anchor)
+    pub tree: &'a DraftTree,
     /// this sequence's own KV context
     pub cache: &'a dyn KvRead,
 }
@@ -223,6 +238,31 @@ impl ModelRuntime {
         }
     }
 
+    /// One PACKED verification call over speculation TREES from many
+    /// sequences. Each tree's nodes are verified in one call using its
+    /// per-node ancestor masks; the returned [`StepOutput`]s carry one
+    /// prediction + one KV tail position per node (`k = nodes, w1 = 1`).
+    /// The reference backend consumes the masks natively; the PJRT backend
+    /// lowers each tree to root-to-leaf linear paths over the tree's
+    /// source `(k, w)` artifact and scatters the outputs back to nodes
+    /// (shared-prefix nodes are recomputed per path — the documented gap,
+    /// mirroring the per-sequence lowering of [`Self::spec_step_packed`]).
+    pub fn spec_step_tree_packed(&self, blocks: &[PackedTreeBlock]) -> Result<Vec<StepOutput>> {
+        if blocks.is_empty() {
+            return Ok(Vec::new());
+        }
+        for b in blocks {
+            let (k, w) = b.tree.shape();
+            validate_tree_block(b.tree, b.cache)?;
+            self.warm_step(k, w)?;
+        }
+        match &self.backend {
+            Backend::Reference(r) => r.spec_step_tree_packed(&self.art, blocks),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => blocks.iter().map(|b| pjrt_tree_step(p, &self.art, b)).collect(),
+        }
+    }
+
     /// Largest available (k', w') shape with k' <= k, w' <= w and w'+1 <=
     /// room (used when the cache is nearly full and the block must shrink).
     pub fn best_fitting_shape(&self, k: usize, w: usize, room: usize) -> Option<(usize, usize)> {
@@ -263,6 +303,94 @@ fn validate_block(k: usize, w: usize, tok_len: usize, cache: &dyn KvRead) -> Res
         ));
     }
     Ok(())
+}
+
+fn validate_tree_block(tree: &DraftTree, cache: &dyn KvRead) -> Result<()> {
+    let (k, w) = tree.shape();
+    let w1 = w + 1;
+    if tree.is_empty() {
+        return Err(anyhow!("tree block has no nodes (reset not called)"));
+    }
+    if tree.len() > k * w1 {
+        return Err(anyhow!("tree of {} nodes exceeds its budget {}", tree.len(), k * w1));
+    }
+    // same room rule as the flat block of the source shape: the deepest
+    // path is at most w1 positions, and the engine's shape fitting
+    // already guarantees w1 <= remaining room
+    if cache.ctx_len() + w1 > cache.max_ctx() {
+        return Err(anyhow!(
+            "cache too full for tree step: len {} + w1 {} > {}",
+            cache.ctx_len(),
+            w1,
+            cache.max_ctx()
+        ));
+    }
+    Ok(())
+}
+
+/// PJRT lowering of one tree block: chunk the tree's root-to-leaf paths
+/// into (k, w+1) linear blocks of the source artifact shape, execute them
+/// as flat `spec_step` calls, and scatter per-path outputs back onto
+/// nodes. A node shared by several paths is recomputed identically each
+/// time (its context is the same root-to-node prefix), so the scatter is
+/// write-idempotent.
+#[cfg(feature = "pjrt")]
+fn pjrt_tree_step(
+    p: &pjrt::PjrtBackend,
+    art: &ModelArtifacts,
+    b: &PackedTreeBlock,
+) -> Result<StepOutput> {
+    let tree = b.tree;
+    let (k, w) = tree.shape();
+    let w1 = w + 1;
+    let n = tree.len();
+    let parents = tree.parents();
+    // enumerate root-to-leaf node chains
+    let mut paths: Vec<Vec<usize>> = Vec::new();
+    for leaf in 0..n {
+        if (leaf + 1..n).any(|j| parents[j] as usize == leaf) {
+            continue; // not a leaf
+        }
+        let mut path = vec![leaf];
+        let mut cur = leaf;
+        while parents[cur] != crate::draft::tree::NO_PARENT {
+            cur = parents[cur] as usize;
+            path.push(cur);
+        }
+        path.reverse();
+        paths.push(path);
+    }
+    let d = &art.dims;
+    let ps = d.n_heads * d.head_dim;
+    let mut next_ids = vec![0 as TokenId; n];
+    let mut k_tail = vec![0.0f32; d.n_layers * n * ps];
+    let mut v_tail = vec![0.0f32; d.n_layers * n * ps];
+    let mut exec_time = Duration::ZERO;
+    for chunk in paths.chunks(k) {
+        let mut tokens = Vec::with_capacity(k * w1);
+        for r in 0..k {
+            // missing rows in the last chunk repeat the first path
+            let path = chunk.get(r).unwrap_or(&chunk[0]);
+            for i in 0..w1 {
+                let node = path.get(i).copied().unwrap_or(*path.last().unwrap());
+                tokens.push(tree.token(node));
+            }
+        }
+        let out = p.spec_step(art, k, w, &tokens, b.cache)?;
+        exec_time += out.exec_time;
+        for (r, path) in chunk.iter().enumerate() {
+            for (i, &node) in path.iter().enumerate() {
+                next_ids[node] = out.next_ids[r * w1 + i];
+                for layer in 0..d.n_layers {
+                    let src = ((layer * k + r) * w1 + i) * ps;
+                    let dst = (layer * n + node) * ps;
+                    k_tail[dst..dst + ps].copy_from_slice(&out.k_tail[src..src + ps]);
+                    v_tail[dst..dst + ps].copy_from_slice(&out.v_tail[src..src + ps]);
+                }
+            }
+        }
+    }
+    Ok(StepOutput { next_ids, k: n, w1: 1, k_tail, v_tail, exec_time })
 }
 
 #[cfg(not(feature = "pjrt"))]

@@ -35,7 +35,7 @@ use crate::config::ModelArtifacts;
 use crate::kvcache::{KvRead, KvWrite};
 use crate::tokenizer::TokenId;
 
-use super::{PackedBlock, PrefillOutput, StepOutput};
+use super::{PackedBlock, PackedTreeBlock, PrefillOutput, StepOutput};
 
 /// First token of a valid reference step artifact file.
 pub const STEP_MAGIC: &str = "REFSTEP";
@@ -271,6 +271,85 @@ impl RefBackend {
             }
         }
         (next_ids, k_tail, v_tail)
+    }
+
+    /// Model outputs + KV tails for one speculation TREE against one
+    /// cache. Each node's context is the committed cache context plus the
+    /// mask-selected root-to-node token path: masks are self-inclusive and
+    /// parents precede children, so folding the masked tokens in ascending
+    /// node-index order replays exactly that node's path. Outputs are
+    /// shaped (n, 1): one prediction and one KV tail position per node.
+    fn tree_outputs(
+        &self,
+        layers: usize,
+        ps: usize,
+        tree: &crate::draft::DraftTree,
+        cache: &dyn KvRead,
+    ) -> (Vec<TokenId>, Vec<f32>, Vec<f32>) {
+        let ctx = self.decode_context(cache);
+        let mut h_ctx = hash_init(self.seed);
+        for &t in &ctx {
+            h_ctx = hash_push(h_ctx, t);
+        }
+
+        let n = tree.len();
+        let toks = tree.tokens();
+        let words = tree.words();
+        let masks = tree.masks();
+        let mut next_ids = vec![0 as TokenId; n];
+        let mut k_tail = vec![0.0f32; layers * n * ps];
+        let mut v_tail = vec![0.0f32; layers * n * ps];
+        for j in 0..n {
+            let mask = &masks[j * words..(j + 1) * words];
+            let mut h = h_ctx;
+            for (i, &t) in toks.iter().enumerate().take(j + 1) {
+                if mask[i / 64] & (1u64 << (i % 64)) != 0 {
+                    h = hash_push(h, t);
+                }
+            }
+            let t = toks[j];
+            next_ids[j] = next_token(self.seed, h, t, self.vocab);
+            for layer in 0..layers {
+                let base = (layer * n + j) * ps;
+                for e in 0..ps {
+                    k_tail[base + e] = t as f32;
+                    v_tail[base + e] = -(t as f32) - 1.0;
+                }
+            }
+        }
+        (next_ids, k_tail, v_tail)
+    }
+
+    /// One PACKED verification call over speculation trees (the tree-mode
+    /// hot path). As with [`Self::spec_step_packed`], every returned
+    /// output carries the whole packed call's latency.
+    pub fn spec_step_tree_packed(
+        &self,
+        art: &ModelArtifacts,
+        blocks: &[PackedTreeBlock],
+    ) -> Result<Vec<StepOutput>> {
+        let t0 = Instant::now();
+        let d = &art.dims;
+        let ps = d.n_heads * d.head_dim;
+        let raw: Vec<(Vec<TokenId>, Vec<f32>, Vec<f32>, usize)> = blocks
+            .iter()
+            .map(|b| {
+                let (ids, kt, vt) = self.tree_outputs(d.n_layers, ps, b.tree, b.cache);
+                (ids, kt, vt, b.tree.len())
+            })
+            .collect();
+        let exec_time = t0.elapsed();
+        Ok(raw
+            .into_iter()
+            .map(|(next_ids, k_tail, v_tail, n)| StepOutput {
+                next_ids,
+                k: n,
+                w1: 1,
+                k_tail,
+                v_tail,
+                exec_time,
+            })
+            .collect())
     }
 
     /// Reference verification call on one (k, w) block against `cache`.

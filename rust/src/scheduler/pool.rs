@@ -602,6 +602,7 @@ fn fresh_engine<'rt>(
         BatchedEngine::with_budget(runtime, lanes, scfg.budget)
     };
     eng.collect_traces = true;
+    eng.tree = scfg.tree;
     if scfg.elastic {
         eng.auto_budget =
             Some(AutoBudget { cm: CostModel::for_analog(analog), slack: scfg.budget_slack });

@@ -119,6 +119,13 @@ pub struct StepEvent {
     pub wins: [u32; StrategyKind::COUNT],
     /// per-strategy accepted draft tokens this group, same indexing
     pub accepted_by: [u32; StrategyKind::COUNT],
+    /// tree mode: total trie nodes verified across the group (0 = the
+    /// group ran flat rows; `rows` then carries the row count)
+    pub tree_nodes: u32,
+    /// tree mode: total leaves (distinct root-to-leaf candidate paths)
+    pub tree_leaves: u32,
+    /// tree mode: deepest node depth across the group's trees
+    pub tree_depth: u32,
 }
 
 /// One request's latency record: admission → first token → completion.
@@ -476,7 +483,7 @@ pub fn step_to_json(ev: &StepEvent) -> Json {
             )
         })
         .collect();
-    Json::obj(vec![
+    let mut fields = vec![
         ("type", Json::Str("step".into())),
         ("t_us", Json::Num(ev.t_us as f64)),
         ("engine", Json::Num(ev.engine as f64)),
@@ -488,7 +495,20 @@ pub fn step_to_json(ev: &StepEvent) -> Json {
         ("emitted", Json::Num(ev.emitted as f64)),
         ("phases", Json::Obj(phases)),
         ("strategies", Json::Obj(strategies)),
-    ])
+    ];
+    // tree-shape provenance only on tree-mode steps, keeping flat-mode
+    // lines unchanged
+    if ev.tree_nodes > 0 {
+        fields.push((
+            "tree",
+            Json::obj(vec![
+                ("nodes", Json::Num(ev.tree_nodes as f64)),
+                ("leaves", Json::Num(ev.tree_leaves as f64)),
+                ("depth", Json::Num(ev.tree_depth as f64)),
+            ]),
+        ));
+    }
+    Json::obj(fields)
 }
 
 /// A request event's JSONL object (`"type":"request"`).
@@ -663,6 +683,28 @@ mod tests {
                 assert_eq!(s.accepted, 5);
             }
             other => panic!("expected step first, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tree_fields_round_trip_and_stay_off_flat_lines() {
+        // flat-mode events carry no "tree" object
+        let flat = step_to_json(&ev(1)).to_string();
+        assert!(!flat.contains("\"tree\""));
+        // tree-mode events round-trip their shape provenance
+        let mut e = ev(2);
+        e.tree_nodes = 17;
+        e.tree_leaves = 5;
+        e.tree_depth = 4;
+        let line = step_to_json(&e).to_string();
+        assert!(line.contains("\"tree\""));
+        match report::parse_line(&line).unwrap() {
+            TraceEvent::Step(s) => {
+                assert_eq!(s.tree_nodes, 17);
+                assert_eq!(s.tree_leaves, 5);
+                assert_eq!(s.tree_depth, 4);
+            }
+            other => panic!("expected step, got {other:?}"),
         }
     }
 

@@ -42,6 +42,13 @@ pub fn parse_line(line: &str) -> Result<TraceEvent> {
                     }
                 }
             }
+            // tree provenance is optional: flat-mode lines omit it and the
+            // fields default to 0
+            if let Some(tree) = j.get("tree") {
+                ev.tree_nodes = num(tree, "nodes") as u32;
+                ev.tree_leaves = num(tree, "leaves") as u32;
+                ev.tree_depth = num(tree, "depth") as u32;
+            }
             Ok(TraceEvent::Step(ev))
         }
         "request" => Ok(TraceEvent::Request(RequestEvent {

@@ -14,6 +14,9 @@
 //!   own storage (posting lists and its sequence copy double as they
 //!   grow), bounded well under one allocation per step — the seed did
 //!   dozens PER step. Table strategies must stay at exactly 0.
+//! - **Tree packing** (branching enabled): overdraft proposal plus trie
+//!   insertion into the `DraftTree` arena — node descriptors, parent
+//!   pointers and ancestor masks — must also be EXACTLY 0 once warm.
 //!
 //! Kept as its own test binary with a single #[test] so no concurrent
 //! test pollutes the counter.
@@ -24,8 +27,8 @@ use std::sync::Arc;
 
 use ngrammys::draft::tables::Table;
 use ngrammys::draft::{
-    ContextNgram, DraftBatch, DraftStrategy, ExtendedBigram, JacobiDraft, MixedStrategy,
-    ModelBigram, ModelUnigram, NgramTables, SessionNgramCache,
+    ContextNgram, DraftBatch, DraftStrategy, DraftTree, ExtendedBigram, JacobiDraft,
+    MixedStrategy, ModelBigram, ModelUnigram, NgramTables, SessionNgramCache,
 };
 
 struct CountingAlloc;
@@ -214,5 +217,37 @@ fn steady_state_draft_step_does_not_allocate() {
                  growing index and must stay allocation-free"
             );
         }
+    }
+
+    // --- phase 3: tree packing — overdraft proposal plus trie insertion
+    // into the DraftTree arena must be EXACTLY zero allocations per step
+    // once warm, with branching enabled (the mixed strategy's context and
+    // ext-bigram rows share prefixes, so siblings really branch)
+    let mut tree = DraftTree::new();
+    {
+        let (_, s, _) = &mut strategies[1]; // mixed: the engine's tree-mode strategy
+        // warm: the tree's node/mask vectors grow to the overdraft shape
+        for end in (PERIOD * 2..warm_len).step_by(2) {
+            batch.reset(W);
+            s.propose(&seq[..end], 2 * K, &mut batch);
+            tree.reset(seq[end - 1], K, W);
+            tree.insert_batch(&batch);
+        }
+        let mut sink = 0usize;
+        let n = count_allocs(|| {
+            for _ in 0..measure_steps {
+                batch.reset(W);
+                s.propose(&seq, 2 * K, &mut batch);
+                tree.reset(*seq.last().unwrap(), K, W);
+                tree.insert_batch(&batch);
+                sink += tree.leaf_count() + tree.max_depth();
+            }
+        });
+        assert!(sink > 0, "tree packing produced no nodes — workload broken");
+        assert_eq!(
+            n, 0,
+            "tree packing: steady state must be allocation-free with branching \
+             enabled ({n} allocations over {measure_steps} steps)"
+        );
     }
 }

@@ -1,0 +1,237 @@
+//! Differential oracle for tree speculation: the token-tree verifier must
+//! be byte-identical to flat-row speculation AND to plain greedy decoding
+//! — per sequence, across the request-batch axis at concurrency 1/4/8,
+//! over randomized trajectories, and under an adversarial strategy whose
+//! drafts are wrong on purpose so every step exercises the zero-accept
+//! rollback path (KV truncation back to the committed prefix).
+//!
+//! The linear SpecDecoder is itself pinned byte-identical to greedy by the
+//! engine tests, so any divergence here isolates to the tree path: trie
+//! packing, ancestor-masked verification, the root-to-leaf judge, or the
+//! tree commit/rollback.
+
+use ngrammys::bench::BenchCtx;
+use ngrammys::config::EngineConfig;
+use ngrammys::draft::{DraftBatch, DraftStrategy, StrategyKind};
+use ngrammys::engine::batched::generate_all;
+use ngrammys::engine::{greedy_config, BatchedEngine, SpecDecoder};
+use ngrammys::scheduler::{make_strategy, StrategyName};
+use ngrammys::tokenizer::TokenId;
+use ngrammys::util::prop;
+use ngrammys::util::rng::Rng;
+
+fn ctx(model: &str) -> BenchCtx {
+    BenchCtx::load(ngrammys::testkit::manifest(), model).unwrap()
+}
+
+fn prompts(c: &BenchCtx) -> Vec<Vec<u32>> {
+    [
+        "Question: Tom has 4 apples. Tom buys 2 more.",
+        "def scale(x, y):\n    result",
+        "User: What is the capital of France?",
+        "Answer: Mia has 5 coins.",
+        "def blend(value, count):",
+        "User: Tell me about ancient rivers.",
+        "Question: Sam has 7 cards.",
+        "Assistant: That is a good question.",
+    ]
+    .iter()
+    .map(|p| c.tokenizer.encode(p))
+    .collect()
+}
+
+/// THE acceptance test: for the same prompts, tree-mode decoding — both
+/// the single-sequence SpecDecoder and the batched engine at concurrency
+/// 1, 4 and 8 — produces byte-identical token streams to flat-row
+/// speculation, for mixed/context strategies across block shapes.
+#[test]
+fn tree_streams_equal_linear_and_per_sequence_streams() {
+    let c = ctx("small");
+    let prompts = prompts(&c);
+    for (strat, k, w) in [
+        (StrategyName::Mixed, 10, 10),
+        (StrategyName::Mixed, 2, 2),
+        (StrategyName::Context, 5, 4),
+    ] {
+        let cfg = EngineConfig { k, w, q: 1, max_new_tokens: 20 };
+        // oracle: the linear (flat-row) per-sequence decoder
+        let want: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| {
+                let s = make_strategy(strat, &c.tables, 1);
+                let mut dec = SpecDecoder::new(&c.runtime, s, cfg.clone());
+                dec.generate(p).unwrap().tokens
+            })
+            .collect();
+        // tree-mode per-sequence decoder
+        for (i, p) in prompts.iter().enumerate() {
+            let s = make_strategy(strat, &c.tables, 1);
+            let mut dec = SpecDecoder::new(&c.runtime, s, cfg.clone());
+            dec.tree = true;
+            assert_eq!(
+                dec.generate(p).unwrap().tokens,
+                want[i],
+                "strategy {strat:?} k={k} w={w} prompt {i}: tree SpecDecoder diverged"
+            );
+        }
+        // tree-mode batched engine, across the concurrency axis
+        for conc in [1usize, 4, 8] {
+            let reqs: Vec<_> = prompts
+                .iter()
+                .map(|p| (p.clone(), make_strategy(strat, &c.tables, 1), cfg.clone()))
+                .collect();
+            let mut eng = BatchedEngine::new(&c.runtime, conc);
+            eng.tree = true;
+            let got = generate_all(&mut eng, reqs).unwrap();
+            for (i, (g, w_)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    &g.tokens, w_,
+                    "strategy {strat:?} conc {conc} prompt {i}: batched tree stream diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Drafts that are wrong on purpose: every proposal is `k` rows of tokens
+/// derived from the anchor by fixed offsets, so verification rejects
+/// (almost) everything and every step takes the zero-accept rollback path
+/// mid-stream — the tree commits only the bonus token and truncates the
+/// speculated KV tail.
+struct JunkDraft {
+    vocab: usize,
+}
+
+impl DraftStrategy for JunkDraft {
+    fn name(&self) -> &'static str {
+        "junk"
+    }
+
+    fn propose(&mut self, seq: &[TokenId], k: usize, batch: &mut DraftBatch) {
+        let last = *seq.last().unwrap() as usize;
+        for r in 0..k {
+            // 12 tokens: longer than any test w, the batch truncates
+            let row: Vec<TokenId> = (0..12)
+                .map(|j| ((last + 1 + 7 * r + 3 * j) % self.vocab) as TokenId)
+                .collect();
+            batch.push(row, StrategyKind::Jacobi, r);
+        }
+    }
+}
+
+/// Adversarial rollback coverage: with junk drafts the tree stream must
+/// STILL be byte-identical to greedy (all-junk lanes, and junk lanes
+/// packed next to productive mixed lanes in the same grouped calls), and
+/// the junk run's acceptance must be near zero — proving the rollback
+/// path actually ran on essentially every step.
+#[test]
+fn junk_drafts_roll_back_and_stay_greedy_identical() {
+    let c = ctx("small");
+    let prompts = prompts(&c);
+    let vocab = c.manifest.vocab_size;
+    let max_new = 24usize;
+    let cfg = EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: max_new };
+    let want: Vec<Vec<u32>> = prompts
+        .iter()
+        .map(|p| {
+            let s = make_strategy(StrategyName::None, &c.tables, 1);
+            let mut dec = SpecDecoder::new(&c.runtime, s, greedy_config(max_new));
+            dec.generate(p).unwrap().tokens
+        })
+        .collect();
+
+    // every lane junk: zero-accept rollback on (almost) every call
+    let reqs: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            let junk: Box<dyn DraftStrategy> = Box::new(JunkDraft { vocab });
+            (p.clone(), junk, cfg.clone())
+        })
+        .collect();
+    let mut eng = BatchedEngine::new(&c.runtime, 4);
+    eng.tree = true;
+    let got = generate_all(&mut eng, reqs).unwrap();
+    let mut decode_tokens = 0usize;
+    let mut calls = 0usize;
+    for (i, (g, w_)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(&g.tokens, w_, "junk lane {i}: tree stream diverged from greedy");
+        decode_tokens += g.tokens.len() - 1;
+        calls += g.calls;
+    }
+    // junk never helps: each call emits ~1 bonus token, so tokens/call
+    // stays near 1 (a loose 1.25 bound tolerates lucky collisions)
+    assert!(
+        (decode_tokens as f64) < 1.25 * calls as f64,
+        "junk drafts were accepted too often ({decode_tokens} tokens / {calls} calls) — \
+         the rollback path was not exercised"
+    );
+
+    // junk and mixed lanes packed into the SAME grouped tree calls:
+    // rolling lanes must not disturb accepting ones (and vice versa)
+    let reqs: Vec<_> = prompts
+        .iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let s: Box<dyn DraftStrategy> = if i % 2 == 0 {
+                Box::new(JunkDraft { vocab })
+            } else {
+                make_strategy(StrategyName::Mixed, &c.tables, 1)
+            };
+            (p.clone(), s, cfg.clone())
+        })
+        .collect();
+    let mut eng = BatchedEngine::new(&c.runtime, 4);
+    eng.tree = true;
+    let got = generate_all(&mut eng, reqs).unwrap();
+    for (i, (g, w_)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(&g.tokens, w_, "mixed/junk lane {i}: tree stream diverged from greedy");
+    }
+}
+
+/// Property: over randomized trajectories — repetition-heavy prompts,
+/// arbitrary block shapes (k, w), concurrency and generation lengths —
+/// the batched tree engine's streams equal plain greedy decoding.
+#[test]
+fn prop_random_trajectories_stay_greedy_identical() {
+    let c = ctx("small");
+    let vocab = c.manifest.vocab_size;
+    prop::check(12, |rng: &mut Rng| {
+        let k = rng.range(1, 6);
+        let w = rng.range(1, 6);
+        let conc = rng.range(1, 4);
+        let max_new = rng.range(8, 20);
+        let n_prompts = rng.range(2, 4);
+        let prompts: Vec<Vec<u32>> = (0..n_prompts)
+            .map(|_| {
+                // a short random motif repeated with occasional noise, so
+                // the context source finds matches and the tree branches
+                let motif = prop::vec_u32(rng, rng.range(3, 8), 0..vocab as u32);
+                let mut p = Vec::new();
+                for _ in 0..rng.range(2, 6) {
+                    p.extend_from_slice(&motif);
+                    if rng.f64() < 0.5 {
+                        p.push(rng.below(vocab) as u32);
+                    }
+                }
+                p
+            })
+            .collect();
+        let cfg = EngineConfig { k, w, q: 1, max_new_tokens: max_new };
+        let want: Vec<Vec<u32>> = prompts
+            .iter()
+            .map(|p| {
+                let s = make_strategy(StrategyName::None, &c.tables, 1);
+                let mut dec = SpecDecoder::new(&c.runtime, s, greedy_config(max_new));
+                dec.generate(p).unwrap().tokens
+            })
+            .collect();
+        let reqs: Vec<_> = prompts
+            .iter()
+            .map(|p| (p.clone(), make_strategy(StrategyName::Mixed, &c.tables, 1), cfg.clone()))
+            .collect();
+        let mut eng = BatchedEngine::new(&c.runtime, conc);
+        eng.tree = true;
+        let got = generate_all(&mut eng, reqs).unwrap();
+        got.iter().zip(&want).all(|(g, w_)| &g.tokens == w_)
+    });
+}
