@@ -22,6 +22,7 @@ pub mod grid;
 pub mod pool;
 pub mod prefix;
 pub mod qsweep;
+pub mod serve;
 pub mod table1;
 pub mod tracecmd;
 pub mod tree;

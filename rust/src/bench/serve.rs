@@ -1,0 +1,351 @@
+//! `bench serve` — serving front-end shootout over real sockets.
+//!
+//! Drives every front-end × dispatch combination ({reactor, threaded} ×
+//! {steal, central}) through a full server: bind, POST `/generate` from
+//! N concurrent client threads at each concurrency level, read the
+//! latency digests back from `/stats`, and shut down gracefully.
+//!
+//! Two invariants are enforced (and fail the bench, `--smoke` or not):
+//!
+//! 1. **Byte-identity** — every request's decoded `text` is identical
+//!    across all four combinations at every concurrency level. The
+//!    front-end and the dispatch arrangement may only move bytes, never
+//!    change them.
+//! 2. **No reactor regression** — the reactor's p50/p99 TTFT and
+//!    inter-token latency must stay within [`SMOKE_TOLERANCE`]× of the
+//!    threaded baseline (plus [`SMOKE_SLACK_US`] absolute slack for CI
+//!    scheduler hiccups a tiny smoke workload cannot average away),
+//!    compared under the same dispatch mode at the same total load.
+//!
+//! The headline `tokens_per_s` written to `BENCH_serve.json` is measured
+//! wall time (machine-dependent), so the baseline entry carries
+//! `"wall_clock": true` and is advisory in the regression gate.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::config::{Dispatch, EngineConfig, FrontEnd, Manifest, ServeConfig};
+use crate::scheduler::Scheduler;
+use crate::server::{client, Server};
+use crate::tokenizer::BpeTokenizer;
+use crate::util::json::Json;
+
+/// Concurrency levels every front-end/dispatch combination is driven at.
+pub const CONCURRENCIES: [usize; 3] = [1, 4, 8];
+
+/// The reactor may not be worse than threaded by more than this factor on
+/// any gated latency quantile...
+const SMOKE_TOLERANCE: f64 = 3.0;
+/// ...plus this absolute slack (µs). Synthetic-model latencies are small
+/// enough that a single preemption would otherwise blow past any ratio.
+const SMOKE_SLACK_US: f64 = 25_000.0;
+
+/// Client-side latency digest for one concurrency level.
+struct ConcStats {
+    conc: usize,
+    requests: usize,
+    p50_us: u64,
+    p99_us: u64,
+}
+
+/// Everything measured for one front-end × dispatch combination.
+struct RunStats {
+    front_end: FrontEnd,
+    dispatch: Dispatch,
+    /// server-side digests from `/stats`, cumulative over all levels
+    ttft_p50_us: f64,
+    ttft_p99_us: f64,
+    inter_p50_us: f64,
+    inter_p99_us: f64,
+    per_conc: Vec<ConcStats>,
+    /// request key → decoded text, for cross-config byte-identity
+    texts: BTreeMap<String, String>,
+    total_tokens: u64,
+    total_calls: u64,
+    wall_s: f64,
+}
+
+fn pct(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+/// Pull one `/stats` digest's (p50_us, p99_us) out of the response JSON.
+fn digest(j: &Json, name: &str) -> Result<(f64, f64)> {
+    let d = j.get(name).ok_or_else(|| anyhow!("/stats is missing the {name} digest"))?;
+    let q = |key: &str| d.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    Ok((q("p50_us"), q("p99_us")))
+}
+
+/// One (key, text, tokens, calls, latency_us) row per completed request.
+type ClientRows = Vec<(String, String, u64, u64, u64)>;
+
+fn run_config(
+    manifest: &Manifest,
+    model: &str,
+    tok: &Arc<BpeTokenizer>,
+    front_end: FrontEnd,
+    dispatch: Dispatch,
+    per_level: usize,
+    max_new: usize,
+) -> Result<RunStats> {
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        front_end,
+        dispatch,
+        // batch >= 2 so the dispatch arrangement actually runs
+        batch: 4,
+        queue_cap: 64,
+        default_engine: EngineConfig { k: 5, w: 4, q: 1, max_new_tokens: max_new },
+        ..ServeConfig::default()
+    };
+    let sched = Arc::new(Scheduler::start(manifest, model, &cfg)?);
+    let handle =
+        Server { scheduler: sched.clone(), tokenizer: tok.clone(), cfg }.spawn_handle()?;
+    let addr = handle.addr.to_string();
+    let fe_label = front_end.label();
+
+    let t0 = Instant::now();
+    let mut texts = BTreeMap::new();
+    let mut per_conc = Vec::new();
+    let (mut total_tokens, mut total_calls) = (0u64, 0u64);
+    for &conc in &CONCURRENCIES {
+        let per_thread = per_level.div_ceil(conc);
+        let mut joins = Vec::new();
+        for t in 0..conc {
+            let addr = addr.clone();
+            joins.push(std::thread::spawn(move || -> Result<ClientRows> {
+                let mut rows = Vec::new();
+                for r in 0..per_thread {
+                    // unique deterministic prompt per request key, so the
+                    // same key must decode to the same text in every
+                    // front-end/dispatch combination
+                    let key = format!("c{conc}-t{t}-r{r}");
+                    let body = format!(
+                        "{{\"prompt\": \"Question: Tom has {t} apples and {r} pens at level {conc}.\"}}",
+                    );
+                    let t_req = Instant::now();
+                    let (code, resp) = client::post(&addr, "/generate", &body)?;
+                    let lat_us = t_req.elapsed().as_micros() as u64;
+                    ensure!(code == 200, "{fe_label} request {key}: HTTP {code}: {resp}");
+                    let j = Json::parse(&resp)
+                        .map_err(|e| anyhow!("bad /generate response for {key}: {e}"))?;
+                    let text = j
+                        .req("text")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("'text' is not a string"))?
+                        .to_string();
+                    let tokens = j.req("tokens")?.as_f64().unwrap_or(0.0) as u64;
+                    let calls = j.req("calls")?.as_f64().unwrap_or(0.0) as u64;
+                    rows.push((key, text, tokens, calls, lat_us));
+                }
+                Ok(rows)
+            }));
+        }
+        let mut lats = Vec::new();
+        for join in joins {
+            let rows = join.join().map_err(|_| anyhow!("client thread panicked"))??;
+            for (key, text, tokens, calls, lat_us) in rows {
+                texts.insert(key, text);
+                total_tokens += tokens;
+                total_calls += calls;
+                lats.push(lat_us);
+            }
+        }
+        lats.sort_unstable();
+        per_conc.push(ConcStats {
+            conc,
+            requests: lats.len(),
+            p50_us: pct(&lats, 0.5),
+            p99_us: pct(&lats, 0.99),
+        });
+    }
+
+    let (code, stats) = client::get(&addr, "/stats")?;
+    ensure!(code == 200, "/stats failed: HTTP {code}");
+    let j = Json::parse(&stats).map_err(|e| anyhow!("bad /stats response: {e}"))?;
+    let (ttft_p50_us, ttft_p99_us) = digest(&j, "ttft_us")?;
+    let (inter_p50_us, inter_p99_us) = digest(&j, "inter_token_us")?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // graceful shutdown: stop accepting, drain in-flight connections,
+    // then close the scheduler queue and join its workers
+    handle.shutdown();
+    if let Ok(s) = Arc::try_unwrap(sched) {
+        s.shutdown();
+    }
+    Ok(RunStats {
+        front_end,
+        dispatch,
+        ttft_p50_us,
+        ttft_p99_us,
+        inter_p50_us,
+        inter_p99_us,
+        per_conc,
+        texts,
+        total_tokens,
+        total_calls,
+        wall_s,
+    })
+}
+
+/// Run the shootout. `--smoke` shrinks the workload for CI; both modes
+/// enforce byte-identity and the reactor-vs-threaded latency gate.
+pub fn run(manifest: &Manifest, model: &str, smoke: bool) -> Result<()> {
+    let (per_level, max_new) = if smoke { (8, 8) } else { (24, 16) };
+    let tok = Arc::new(BpeTokenizer::load(&manifest.tokenizer_path)?);
+    let combos = [
+        (FrontEnd::Threaded, Dispatch::Central),
+        (FrontEnd::Threaded, Dispatch::Steal),
+        (FrontEnd::Reactor, Dispatch::Central),
+        (FrontEnd::Reactor, Dispatch::Steal),
+    ];
+    println!(
+        "== bench serve: {{reactor,threaded}} x {{steal,central}}, \
+         {per_level} requests at each concurrency {CONCURRENCIES:?} =="
+    );
+    let mut runs = Vec::new();
+    for (fe, disp) in combos {
+        eprintln!("  running {}/{} ...", fe.label(), disp.label());
+        runs.push(run_config(manifest, model, &tok, fe, disp, per_level, max_new)?);
+    }
+
+    println!(
+        "\n{:<10} {:<8} {:>10} {:>10} {:>10} {:>10}  client p99 by concurrency",
+        "front-end", "dispatch", "ttft_p50", "ttft_p99", "inter_p50", "inter_p99"
+    );
+    for r in &runs {
+        let by_conc: Vec<String> =
+            r.per_conc.iter().map(|c| format!("c{}:{}us", c.conc, c.p99_us)).collect();
+        println!(
+            "{:<10} {:<8} {:>10.0} {:>10.0} {:>10.0} {:>10.0}  {}",
+            r.front_end.label(),
+            r.dispatch.label(),
+            r.ttft_p50_us,
+            r.ttft_p99_us,
+            r.inter_p50_us,
+            r.inter_p99_us,
+            by_conc.join(" ")
+        );
+    }
+
+    // invariant 1: byte-identity across every combination
+    let reference = &runs[0];
+    for r in &runs[1..] {
+        ensure!(
+            r.texts.len() == reference.texts.len(),
+            "{}/{} answered {} requests, {}/{} answered {}",
+            r.front_end.label(),
+            r.dispatch.label(),
+            r.texts.len(),
+            reference.front_end.label(),
+            reference.dispatch.label(),
+            reference.texts.len()
+        );
+        for (key, want) in &reference.texts {
+            let got = r.texts.get(key).ok_or_else(|| anyhow!("missing request {key}"))?;
+            ensure!(
+                got == want,
+                "BYTE-IDENTITY VIOLATION: request {key} decoded differently under {}/{} \
+                 than {}/{}",
+                r.front_end.label(),
+                r.dispatch.label(),
+                reference.front_end.label(),
+                reference.dispatch.label()
+            );
+        }
+    }
+    println!(
+        "\nbyte-identity: OK ({} requests identical across {} front-end/dispatch combos)",
+        reference.texts.len(),
+        runs.len()
+    );
+
+    // invariant 2: the reactor holds the latency quantiles vs threaded
+    // under the same dispatch mode at the same total load
+    let find = |fe: FrontEnd, d: Dispatch| {
+        runs.iter()
+            .find(|r| r.front_end == fe && r.dispatch == d)
+            .expect("every combo was run above")
+    };
+    for d in [Dispatch::Central, Dispatch::Steal] {
+        let th = find(FrontEnd::Threaded, d);
+        let re = find(FrontEnd::Reactor, d);
+        for (name, t, r) in [
+            ("ttft p50", th.ttft_p50_us, re.ttft_p50_us),
+            ("ttft p99", th.ttft_p99_us, re.ttft_p99_us),
+            ("inter-token p50", th.inter_p50_us, re.inter_p50_us),
+            ("inter-token p99", th.inter_p99_us, re.inter_p99_us),
+        ] {
+            ensure!(
+                r <= t * SMOKE_TOLERANCE + SMOKE_SLACK_US,
+                "reactor {name} ({r:.0}us) regressed past threaded ({t:.0}us) \
+                 x{SMOKE_TOLERANCE} + {SMOKE_SLACK_US:.0}us slack under {} dispatch",
+                d.label()
+            );
+        }
+    }
+    println!(
+        "latency gate: OK (reactor within x{SMOKE_TOLERANCE} + {SMOKE_SLACK_US:.0}us of \
+         threaded on every gated quantile)"
+    );
+
+    let detail = Json::Arr(
+        runs.iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("front_end", Json::Str(r.front_end.label().into())),
+                    ("dispatch", Json::Str(r.dispatch.label().into())),
+                    ("ttft_p50_us", Json::Num(r.ttft_p50_us)),
+                    ("ttft_p99_us", Json::Num(r.ttft_p99_us)),
+                    ("inter_token_p50_us", Json::Num(r.inter_p50_us)),
+                    ("inter_token_p99_us", Json::Num(r.inter_p99_us)),
+                    ("tokens", Json::Num(r.total_tokens as f64)),
+                    ("calls", Json::Num(r.total_calls as f64)),
+                    ("wall_s", Json::Num(r.wall_s)),
+                    (
+                        "client_latency",
+                        Json::Arr(
+                            r.per_conc
+                                .iter()
+                                .map(|c| {
+                                    Json::obj(vec![
+                                        ("concurrency", Json::Num(c.conc as f64)),
+                                        ("requests", Json::Num(c.requests as f64)),
+                                        ("p50_us", Json::Num(c.p50_us as f64)),
+                                        ("p99_us", Json::Num(c.p99_us as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    );
+    super::write_json("serve", &detail)?;
+
+    // the headline is the default serving configuration (reactor + steal);
+    // wall-clock, so its baseline entry is marked "wall_clock": true
+    let headline = find(FrontEnd::Reactor, Dispatch::Steal);
+    let tokens_per_s = headline.total_tokens as f64 / headline.wall_s.max(1e-9);
+    let tokens_per_call = if headline.total_calls == 0 {
+        0.0
+    } else {
+        headline.total_tokens as f64 / headline.total_calls as f64
+    };
+    let ar = super::accept_rate(headline.total_tokens as usize, headline.total_calls as usize);
+    super::write_bench_summary_with(
+        "serve",
+        tokens_per_s,
+        tokens_per_call,
+        ar,
+        vec![("front_ends", detail)],
+    )
+}

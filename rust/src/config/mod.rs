@@ -287,11 +287,87 @@ impl Default for SessionCacheConfig {
     }
 }
 
+/// Which connection front-end `serve` runs (`--front-end`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrontEnd {
+    /// One blocking thread per connection — the pre-reactor behavior,
+    /// kept as the comparison baseline (`bench serve` pins the reactor
+    /// against it) and as the fallback on non-Linux targets.
+    Threaded,
+    /// Readiness-based event loop ([`crate::server::reactor`]): epoll
+    /// today behind an io_uring-shaped trait, non-blocking accept/read/
+    /// write state machines, one thread for all connections. The default
+    /// on Linux; elsewhere `serve` warns and falls back to `Threaded`.
+    Reactor,
+}
+
+impl FrontEnd {
+    /// Parse a `--front-end` value.
+    pub fn parse(s: &str) -> Result<FrontEnd> {
+        match s {
+            "threaded" => Ok(FrontEnd::Threaded),
+            "reactor" => Ok(FrontEnd::Reactor),
+            _ => Err(anyhow!("unknown front-end '{s}' (have: reactor, threaded)")),
+        }
+    }
+
+    /// The CLI name (`reactor` / `threaded`).
+    pub fn label(self) -> &'static str {
+        match self {
+            FrontEnd::Threaded => "threaded",
+            FrontEnd::Reactor => "reactor",
+        }
+    }
+}
+
+/// How submitted requests reach the engine workers (`--dispatch`),
+/// `batch >= 2` only.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dispatch {
+    /// One dispatcher thread owns the scored queue and routes to engine
+    /// channels ([`crate::scheduler::pool`]); the only mode with
+    /// engine-COUNT autoscaling (spawn/retire needs a single owner).
+    Central,
+    /// Per-engine scored work queues with idle-engine stealing
+    /// ([`crate::scheduler::steal`]): no dispatcher thread between
+    /// submit and admit, the full `--engines` fleet runs fixed. The
+    /// default.
+    Steal,
+}
+
+impl Dispatch {
+    /// Parse a `--dispatch` value.
+    pub fn parse(s: &str) -> Result<Dispatch> {
+        match s {
+            "central" => Ok(Dispatch::Central),
+            "steal" => Ok(Dispatch::Steal),
+            _ => Err(anyhow!("unknown dispatch '{s}' (have: steal, central)")),
+        }
+    }
+
+    /// The CLI name (`steal` / `central`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Dispatch::Central => "central",
+            Dispatch::Steal => "steal",
+        }
+    }
+}
+
 /// Serving-layer settings.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
     /// listen address (host:port; port 0 = ephemeral)
     pub addr: String,
+    /// connection front-end (`--front-end reactor|threaded`)
+    pub front_end: FrontEnd,
+    /// request dispatch arrangement (`--dispatch steal|central`)
+    pub dispatch: Dispatch,
+    /// Max connections the reactor holds open at once (`--conn-cap N`);
+    /// accepts past the cap are answered with the pinned 503 JSON error
+    /// and closed instead of queueing unboundedly. The threaded front-end
+    /// ignores it (its bound is thread count).
+    pub conn_cap: usize,
     /// per-sequence decode workers (the `batch <= 1` mode)
     pub workers: usize,
     /// bounded admission-queue length (backpressure limit)
@@ -371,6 +447,9 @@ impl Default for ServeConfig {
     fn default() -> Self {
         ServeConfig {
             addr: "127.0.0.1:8077".to_string(),
+            front_end: FrontEnd::Reactor,
+            dispatch: Dispatch::Steal,
+            conn_cap: 1024,
             workers: 1,
             queue_cap: 256,
             batch: 0,

@@ -889,6 +889,22 @@ impl<'rt> BatchedEngine<'rt> {
         Ok(())
     }
 
+    /// Abort one active sequence: drop its state and reclaim its lane (or
+    /// pages) immediately, without emitting a result. Returns whether `id`
+    /// was active. Packed verification batches rows independently, so
+    /// removing one sequence never changes what any co-resident sequence
+    /// emits — the scheduler uses this to cancel requests whose client
+    /// disconnected mid-stream.
+    pub fn abort(&mut self, id: SeqId) -> bool {
+        if let Some(i) = self.active.iter().position(|s| s.id == id) {
+            let s = self.active.remove(i);
+            self.pool.release(s.kv);
+            true
+        } else {
+            false
+        }
+    }
+
     /// Retire finished sequences: reclaim lanes, stamp decode time.
     fn sweep_finished(&mut self, finished: &mut Vec<(SeqId, GenResult)>) {
         let mut i = 0;

@@ -15,7 +15,8 @@ use anyhow::{anyhow, Result};
 
 use ngrammys::bench::{self, BenchCtx};
 use ngrammys::config::{
-    default_artifacts_dir, EngineConfig, Manifest, ServeConfig, SessionCacheConfig,
+    default_artifacts_dir, Dispatch, EngineConfig, FrontEnd, Manifest, ServeConfig,
+    SessionCacheConfig,
 };
 use ngrammys::scheduler::{Scheduler, StrategyName};
 use ngrammys::server::Server;
@@ -39,6 +40,24 @@ COMMANDS:
       are identical to flat-row mode
   serve                       HTTP server (POST /generate, GET /metrics)
       [--model base] [--addr 127.0.0.1:8077] [--workers 1]
+      [--front-end reactor|threaded]
+                              connection front-end: 'reactor' (default,
+                              Linux) = one epoll event-loop thread with
+                              non-blocking accept/read/write state
+                              machines and async scheduler dispatch;
+                              'threaded' = one blocking thread per
+                              connection (the non-Linux fallback).
+                              Responses are byte-identical either way
+      [--dispatch steal|central]
+                              batched-mode dispatch (batch >= 2):
+                              'steal' (default) = per-engine scored work
+                              queues with idle-engine stealing;
+                              'central' = one dispatcher thread owns the
+                              scored queue (the only mode that
+                              autoscales the ENGINE count)
+      [--conn-cap 1024]       max connections the reactor holds open at
+                              once; accepts past the cap are answered
+                              with a 503 JSON error and closed
       [--batch N]             continuous batching (N >= 2). Elastic by
                               default: N is the PER-ENGINE CAP of a
                               demand-driven lane range, the per-step row
@@ -106,6 +125,14 @@ COMMANDS:
                               unless tree accepts strictly more tokens per
                               verify call; also re-checks tree/linear/
                               greedy byte-identity) [--model base] [--smoke]
+      serve                   serving front-end shootout over real
+                              sockets: {reactor,threaded} x {steal,
+                              central} at concurrency 1/4/8 — fails
+                              unless all four combos return
+                              byte-identical responses and the reactor
+                              holds p50/p99 TTFT + inter-token latency
+                              within tolerance of the threaded baseline
+                              [--model base] [--smoke]
       all                     everything above
       common: [--prompts N] [--max-new N] [--ks 1,5,10] [--ws 2,6,10]
   trace                       flight-recorder tooling:
@@ -266,6 +293,9 @@ fn serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
     let defaults = ServeConfig::default();
     let cfg = ServeConfig {
         addr: args.get_or("addr", "127.0.0.1:8077").to_string(),
+        front_end: FrontEnd::parse(args.get_or("front-end", defaults.front_end.label()))?,
+        dispatch: Dispatch::parse(args.get_or("dispatch", defaults.dispatch.label()))?,
+        conn_cap: args.get_usize("conn-cap", defaults.conn_cap).map_err(|e| anyhow!(e))?,
         workers: args.get_usize("workers", 1).map_err(|e| anyhow!(e))?,
         queue_cap: args.get_usize("queue-cap", 256).map_err(|e| anyhow!(e))?,
         batch: args.get_usize("batch", 0).map_err(|e| anyhow!(e))?,
@@ -408,6 +438,9 @@ fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
         "draft" => bench::draft::run(args.has_flag("smoke")),
         "prefix" => bench::prefix::run(&load()?, args.has_flag("smoke")),
         "tree" => bench::tree::run(&load()?, args.has_flag("smoke")),
+        // serve spins up its own schedulers (one per front-end/dispatch
+        // combo), so it takes the manifest directly instead of a BenchCtx
+        "serve" => bench::serve::run(&manifest, model, args.has_flag("smoke")),
         "table1" => {
             let models: Vec<String> = args
                 .get_or("models", "small,base,large")
@@ -433,6 +466,7 @@ fn bench_cmd(artifacts: &PathBuf, args: &Args) -> Result<()> {
             bench::prefix::run(&ctx, false)?;
             bench::tree::run(&ctx, false)?;
             drop(ctx);
+            bench::serve::run(&manifest, model, false)?;
             for m in ["small", "base", "large"] {
                 let c = BenchCtx::load(manifest.clone(), m)?;
                 bench::grid::run(&c, n_prompts, max_new, &ks, &ws)?;

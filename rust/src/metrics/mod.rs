@@ -92,6 +92,9 @@ pub struct Metrics {
     pub requests_total: AtomicU64,
     /// requests rejected at the bounded queue (backpressure)
     pub requests_rejected: AtomicU64,
+    /// requests aborted because their client disconnected before the
+    /// stream completed (the lane/pages were reclaimed early)
+    pub requests_cancelled: AtomicU64,
     /// requests fully decoded and replied
     pub requests_completed: AtomicU64,
     /// total tokens emitted across completed requests
@@ -132,6 +135,14 @@ pub struct Metrics {
     /// depth-aware routing decisions that fell back to a
     /// depth-incompatible engine after the starvation threshold
     pub routing_fallbacks: AtomicU64,
+    /// work-stealing pickups: an idle engine took a request from another
+    /// engine's queue (`--dispatch steal` only; stays 0 under central)
+    pub steals: AtomicU64,
+    /// connections the front-end ever accepted
+    pub connections_total: AtomicU64,
+    /// connections that ended before their response finished (client
+    /// closed or errored mid-stream)
+    pub disconnects: AtomicU64,
     /// per-engine gauge snapshots (labelled `engine="<id>"` in render),
     /// overwritten wholesale by the pool dispatcher each iteration
     pub per_engine: Mutex<Vec<EngineGauges>>,
@@ -257,6 +268,7 @@ impl Metrics {
         let c = |n: &AtomicU64| n.load(Ordering::Relaxed);
         s.push_str(&format!("ngrammys_requests_total {}\n", c(&self.requests_total)));
         s.push_str(&format!("ngrammys_requests_rejected {}\n", c(&self.requests_rejected)));
+        s.push_str(&format!("ngrammys_requests_cancelled {}\n", c(&self.requests_cancelled)));
         s.push_str(&format!("ngrammys_requests_completed {}\n", c(&self.requests_completed)));
         s.push_str(&format!("ngrammys_tokens_generated {}\n", c(&self.tokens_generated)));
         s.push_str(&format!("ngrammys_verify_calls {}\n", c(&self.verify_calls)));
@@ -267,6 +279,9 @@ impl Metrics {
         s.push_str(&format!("ngrammys_engines {}\n", c(&self.engines)));
         s.push_str(&format!("ngrammys_engines_target {}\n", c(&self.engines_target)));
         s.push_str(&format!("ngrammys_routing_fallbacks {}\n", c(&self.routing_fallbacks)));
+        s.push_str(&format!("ngrammys_steals {}\n", c(&self.steals)));
+        s.push_str(&format!("ngrammys_connections_total {}\n", c(&self.connections_total)));
+        s.push_str(&format!("ngrammys_disconnects {}\n", c(&self.disconnects)));
         for g in self.per_engine.lock().unwrap().iter() {
             let e = g.id;
             s.push_str(&format!("ngrammys_engine_lanes{{engine=\"{e}\"}} {}\n", g.lanes));
@@ -474,9 +489,10 @@ mod tests {
     fn render_exports_every_documented_field() {
         let m = Metrics::new();
         let r = m.render();
-        const FIELDS: [&str; 23] = [
+        const FIELDS: [&str; 27] = [
             "ngrammys_requests_total",
             "ngrammys_requests_rejected",
+            "ngrammys_requests_cancelled",
             "ngrammys_requests_completed",
             "ngrammys_tokens_generated",
             "ngrammys_verify_calls",
@@ -487,6 +503,9 @@ mod tests {
             "ngrammys_engines",
             "ngrammys_engines_target",
             "ngrammys_routing_fallbacks",
+            "ngrammys_steals",
+            "ngrammys_connections_total",
+            "ngrammys_disconnects",
             "ngrammys_derived_budget",
             "ngrammys_admission_reorders",
             "ngrammys_admissions_failed",

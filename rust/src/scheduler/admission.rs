@@ -12,17 +12,30 @@
 //!
 //! [`AdmissionQueue`] holds decoded-but-unadmitted requests and releases
 //! them highest [`request_score`] first (ties FIFO by arrival, so equal
-//! requests keep their order). Ordering never becomes starvation: the
-//! oldest waiting request can be overtaken at most
-//! [`AdmissionQueue::MAX_OVERTAKES`] times before it is admitted
-//! regardless of score, so every request's delay is bounded even under
-//! sustained higher-scoring load. Every pop that overtakes an older
+//! requests keep their order). The ordering is a property of the QUEUE,
+//! not of whoever drains it: every pop path — [`AdmissionQueue::pop_best`],
+//! the router's [`AdmissionQueue::pop_best_entry`], and the predicated
+//! [`AdmissionQueue::pop_best_where`] that work-stealing workers use to
+//! skip depth-class-incompatible entries — applies the same scored,
+//! bounded policy. The central dispatcher (`scheduler::pool`) drains one
+//! shared queue in a loop; the work-stealing dispatcher
+//! (`scheduler::steal`) gives each engine its own queue and lets idle
+//! engines pop from the most-loaded peer — in both arrangements a pop
+//! yields the best-scored eligible entry, so dispatch topology never
+//! changes admission order among the entries a worker can actually take.
+//!
+//! Ordering never becomes starvation: the oldest waiting request can be
+//! overtaken at most [`AdmissionQueue::MAX_OVERTAKES`] times before it is
+//! admitted regardless of score, so every request's delay is bounded even
+//! under sustained higher-scoring load. Every pop that overtakes an older
 //! request increments a reorder counter, exported as
 //! `ngrammys_admission_reorders` so operators can see the policy
 //! actually doing something.
 //!
-//! Bounded-queue backpressure is unchanged: the scheduler's sync channel
-//! still rejects when full; this queue only re-orders what was accepted.
+//! Bounded-queue backpressure is unchanged: the submit path (the
+//! scheduler's sync channel in central mode, the shared queued-entry cap
+//! in stealing mode) still rejects when full; this queue only re-orders
+//! what was accepted.
 
 use std::sync::atomic::Ordering;
 
@@ -205,10 +218,26 @@ impl<T> AdmissionQueue<T> {
     /// round (the engine pool's depth-aware router) can hand both back to
     /// [`Self::reinsert`] without forging a fresh arrival.
     pub fn pop_best_entry(&mut self) -> Option<(T, f64, u64)> {
+        self.pop_best_where(|_| true)
+    }
+
+    /// [`Self::pop_best_entry`] restricted to entries `eligible` accepts —
+    /// the pop the work-stealing workers use, where eligibility is the
+    /// engine's current depth-class compatibility (plus the deferral-count
+    /// starvation override carried in the item itself). Ineligible entries
+    /// are left untouched: they are neither returned nor charged an
+    /// overtake, so the anti-starvation bound applies among the entries
+    /// this caller could actually have taken. With an always-true
+    /// predicate this is exactly [`Self::pop_best_entry`].
+    pub fn pop_best_where(
+        &mut self,
+        mut eligible: impl FnMut(&T) -> bool,
+    ) -> Option<(T, f64, u64)> {
         let oldest = self
             .entries
             .iter()
             .enumerate()
+            .filter(|(_, e)| eligible(&e.item))
             .min_by_key(|&(_, e)| e.seq)
             .map(|(i, _)| i)?;
         if self.entries[oldest].overtaken >= Self::MAX_OVERTAKES {
@@ -219,6 +248,7 @@ impl<T> AdmissionQueue<T> {
             .entries
             .iter()
             .enumerate()
+            .filter(|(_, e)| eligible(&e.item))
             .max_by(|(_, a), (_, b)| {
                 a.score
                     .partial_cmp(&b.score)
@@ -232,6 +262,16 @@ impl<T> AdmissionQueue<T> {
         }
         let e = self.entries.swap_remove(best);
         Some((e.item, e.score, e.seq))
+    }
+
+    /// Visit every waiting item mutably (visit order is unspecified). The
+    /// work-stealing dispatcher uses this to age entries a worker had to
+    /// skip this round (depth-class incompatibility), driving the same
+    /// deferral-count starvation fallback the central dispatcher applies.
+    pub fn for_each_mut(&mut self, mut f: impl FnMut(&mut T)) {
+        for e in &mut self.entries {
+            f(&mut e.item);
+        }
     }
 
     /// Re-insert an entry popped this round but not placeable yet,
@@ -302,6 +342,61 @@ mod tests {
             );
         }
         assert_eq!(pops, AdmissionQueue::<i64>::MAX_OVERTAKES + 1);
+    }
+
+    #[test]
+    fn predicated_pop_skips_ineligible_without_charging_them() {
+        let mut q = AdmissionQueue::new();
+        q.push(("greedy", 1), 5.0);
+        q.push(("spec", 2), 9.0);
+        q.push(("greedy", 3), 2.0);
+        // a worker that can only take greedy entries: best eligible wins,
+        // the ineligible higher-scoring spec entry is left in place
+        let (item, _, _) = q.pop_best_where(|(class, _)| *class == "greedy").unwrap();
+        assert_eq!(item, ("greedy", 1));
+        assert_eq!(q.len(), 2);
+        // no eligible entry at all: None, queue untouched
+        assert!(q.pop_best_where(|(class, _)| *class == "adaptive").is_none());
+        assert_eq!(q.len(), 2);
+        // the always-true predicate is exactly pop_best_entry
+        let (item, _, _) = q.pop_best_where(|_| true).unwrap();
+        assert_eq!(item, ("spec", 2));
+    }
+
+    #[test]
+    fn oldest_eligible_entry_cannot_starve_under_predicated_pops() {
+        let mut q = AdmissionQueue::new();
+        q.push(("greedy", -1i64), 0.1); // low score, oldest eligible
+        let mut pops = 0u64;
+        loop {
+            q.push(("greedy", pops as i64), 10.0);
+            q.push(("spec", pops as i64), 99.0); // never eligible here
+            let (got, _, _) = q.pop_best_where(|(class, _)| *class == "greedy").unwrap();
+            pops += 1;
+            if got.1 == -1 {
+                break;
+            }
+            assert!(
+                pops <= AdmissionQueue::<(&str, i64)>::MAX_OVERTAKES + 1,
+                "victim still waiting after {pops} predicated pops"
+            );
+        }
+        assert_eq!(pops, AdmissionQueue::<(&str, i64)>::MAX_OVERTAKES + 1);
+    }
+
+    #[test]
+    fn for_each_mut_visits_every_waiter() {
+        let mut q = AdmissionQueue::new();
+        q.push(0u64, 1.0);
+        q.push(10, 2.0);
+        q.push(20, 3.0);
+        q.for_each_mut(|v| *v += 1);
+        let mut got = Vec::new();
+        while let Some(v) = q.pop_best() {
+            got.push(v);
+        }
+        got.sort_unstable();
+        assert_eq!(got, vec![1, 11, 21]);
     }
 
     #[test]

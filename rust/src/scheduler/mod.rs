@@ -6,36 +6,48 @@
 //!   worker owns a private `ModelRuntime` and decodes one request at a time
 //!   with `SpecDecoder` — the model-call batch dimension is spent entirely
 //!   on that request's speculation rows.
-//! - **Engine pool** (`batch >= 2`): a [`pool`] of up to
-//!   `ServeConfig::engines` continuous-batching worker threads, each
-//!   driving its own [`crate::engine::BatchedEngine`] over its own
-//!   `ModelRuntime` and resizable KV lane pool, behind ONE scored
-//!   [`admission::AdmissionQueue`]. Requests are routed depth-aware —
+//! - **Engine pool** (`batch >= 2`): up to `ServeConfig::engines`
+//!   continuous-batching worker threads, each driving its own
+//!   [`crate::engine::BatchedEngine`] over its own `ModelRuntime` and
+//!   resizable KV lane pool, fed through scored
+//!   [`admission::AdmissionQueue`]s. Requests are routed depth-aware —
 //!   greedy (w = 0) and speculative traffic land on different engines
 //!   while capacity allows — admitted as lanes free up, and every engine
 //!   verifies its active sequences' draft rows in packed calls per step;
-//!   responses complete out of order. By default the pool is **elastic**
-//!   (`ServeConfig::elastic`), autoscaled at TWO levels: each engine's
-//!   lane pool scales between `autoscale.min_lanes` and the `batch`
-//!   per-engine cap ([`autoscale::Autoscaler`]), and whole engines are
-//!   spawned/retired between 1 and the `engines` cap on sustained
-//!   pressure/quiet ([`autoscale::EngineScaler`]); the per-step row
-//!   budget is derived online from the cost model (`--budget` caps it)
-//!   and admissions are ordered by expected accepted-tokens-per-cost with
-//!   per-strategy priors ([`admission::strategy_prior_tpc`]) rather than
-//!   FIFO.
+//!   responses complete out of order. Two dispatch arrangements
+//!   (`ServeConfig::dispatch`) drain the queues:
+//!   [work-stealing](steal) (the default): each engine owns a queue,
+//!   submissions route to the least-loaded compatible engine, and an idle
+//!   engine steals from its most-loaded peer — no dispatcher thread on
+//!   the submit→admit path; or [central](pool): one dispatcher thread
+//!   owns a single shared queue and routes pops to engine channels, and
+//!   additionally spawns/retires whole engines between 1 and the
+//!   `engines` cap on sustained pressure/quiet
+//!   ([`autoscale::EngineScaler`] — engine-count scaling is a
+//!   central-mode feature; stealing mode runs the full fixed fleet).
+//!   In both arrangements the pool is **elastic** by default
+//!   (`ServeConfig::elastic`): each engine's lane pool scales between
+//!   `autoscale.min_lanes` and the `batch` per-engine cap
+//!   ([`autoscale::Autoscaler`]), the per-step row budget is derived
+//!   online from the cost model (`--budget` caps it), and admissions are
+//!   ordered by expected accepted-tokens-per-cost with per-strategy
+//!   priors ([`admission::strategy_prior_tpc`]) rather than FIFO — the
+//!   ordering is a property of the queue itself (see [`admission`]), so
+//!   both dispatch modes inherit it unchanged.
 //!
-//! Both modes share the same bounded-queue backpressure: `submit` fails
+//! All modes share the same bounded-queue backpressure: `submit` fails
 //! fast — counting and logging the rejection — when the queue is full.
 
 pub mod admission;
 pub mod autoscale;
 pub mod pool;
+pub mod steal;
 
 pub use admission::{request_score, strategy_prior_tpc, AdmissionQueue};
 pub use autoscale::{AutoscaleConfig, Autoscaler, Demand, EngineScaleConfig, EngineScaler};
+pub use steal::WorkQueues;
 
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -44,7 +56,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::adaptive::{self, SeqController};
-use crate::config::{EngineConfig, Manifest, ServeConfig, SessionCacheConfig};
+use crate::config::{Dispatch, EngineConfig, Manifest, ServeConfig, SessionCacheConfig};
 use crate::draft::{
     ContextNgram, DraftStrategy, ExtendedBigram, JacobiDraft, MixedStrategy, ModelBigram,
     ModelUnigram, NgramTables, SessionNgramCache, StrategyKind,
@@ -266,17 +278,91 @@ pub struct GenResponse {
     pub latency_ms: f64,
 }
 
+/// Where a finished request's [`GenResponse`] is delivered. Blocking
+/// callers ([`Scheduler::submit`]) use a channel and park on its
+/// receiver; the event-driven reactor front-end
+/// ([`crate::server::reactor`]) registers a callback that enqueues the
+/// completion and wakes its event loop, so no thread blocks per request.
+pub enum ReplySink {
+    /// deliver by sending on an mpsc channel (a dropped receiver is fine
+    /// — the caller went away and the result is discarded)
+    Channel(Sender<Result<GenResponse>>),
+    /// deliver by invoking a one-shot callback on the worker thread; the
+    /// callback must be cheap and non-blocking (the reactor's pushes a
+    /// completion record and writes one eventfd wakeup)
+    Callback(Box<dyn FnOnce(Result<GenResponse>) + Send>),
+}
+
+impl ReplySink {
+    /// Deliver the result, consuming the sink.
+    pub fn send(self, r: Result<GenResponse>) {
+        match self {
+            ReplySink::Channel(tx) => {
+                let _ = tx.send(r);
+            }
+            ReplySink::Callback(f) => f(r),
+        }
+    }
+}
+
+impl std::fmt::Debug for ReplySink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ReplySink::Channel(_) => f.write_str("ReplySink::Channel"),
+            ReplySink::Callback(_) => f.write_str("ReplySink::Callback"),
+        }
+    }
+}
+
+/// Cooperative cancellation flag for one in-flight request. The serving
+/// front-end cancels it when the client disconnects; workers check it at
+/// dequeue (per-sequence mode), at admission, and between engine steps
+/// (pool modes), so a cancelled request frees its lane/pages within a
+/// step instead of decoding to completion for nobody. Cancellation is
+/// advisory — a request that wins the race and completes anyway is
+/// delivered to its sink, which discards it.
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    /// A fresh, un-cancelled token.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Flag the request as cancelled (idempotent, thread-safe).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether the request has been cancelled.
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 struct Job {
     req: GenRequest,
-    reply: Sender<Result<GenResponse>>,
+    reply: ReplySink,
+    cancel: CancelToken,
     /// stamped in [`Scheduler::submit`]; queue-wait and TTFT spans are
     /// measured from here
     t_submit: Instant,
 }
 
+/// How submitted jobs reach the decode workers.
+enum SubmitPath {
+    /// bounded sync channel: per-sequence workers or the central
+    /// dispatcher drain it
+    Channel(SyncSender<Job>),
+    /// per-engine work queues with idle-engine stealing (no dispatcher
+    /// thread between submit and admit)
+    Steal(Arc<steal::StealDispatch>),
+}
+
 /// The scheduler handle: cheap to clone, submits jobs to the pool.
 pub struct Scheduler {
-    tx: SyncSender<Job>,
+    path: SubmitPath,
     /// shared serving metrics (rendered at GET /metrics)
     pub metrics: Arc<Metrics>,
     /// flight-recorder hub: per-engine step rings + request spans
@@ -298,46 +384,53 @@ impl Scheduler {
         let tables = Arc::new(NgramTables::load(&art)?);
         let metrics = Arc::new(Metrics::new());
         let trace = Arc::new(TraceHub::with_metrics(DEFAULT_RING_CAPACITY, metrics.clone()));
-        let (tx, rx) = sync_channel::<Job>(cfg.queue_cap);
-        let rx = Arc::new(Mutex::new(rx));
 
         let mut workers = Vec::new();
-        if cfg.batch >= 2 {
-            let rx = rx.clone();
-            let tables = tables.clone();
-            let metrics = metrics.clone();
-            let trace = trace.clone();
-            let scfg = cfg.clone();
-            let handle = std::thread::Builder::new()
-                .name("ngrammys-engine-pool".to_string())
-                .spawn(move || pool::run_pool(art, tables, metrics, trace, rx, scfg))
-                .expect("spawning engine pool");
-            workers.push(handle);
+        let path = if cfg.batch >= 2 && cfg.dispatch == Dispatch::Steal {
+            let (dispatch, mut handles) =
+                steal::start(art, tables, metrics.clone(), trace.clone(), cfg.clone());
+            workers.append(&mut handles);
+            SubmitPath::Steal(dispatch)
         } else {
-            for wid in 0..cfg.workers.max(1) {
-                let rx = rx.clone();
-                let art = art.clone();
+            let (tx, rx) = sync_channel::<Job>(cfg.queue_cap);
+            let rx = Arc::new(Mutex::new(rx));
+            if cfg.batch >= 2 {
                 let tables = tables.clone();
                 let metrics = metrics.clone();
                 let trace = trace.clone();
                 let scfg = cfg.clone();
                 let handle = std::thread::Builder::new()
-                    .name(format!("ngrammys-worker-{wid}"))
-                    .spawn(move || {
-                        let runtime = match ModelRuntime::load(&art) {
-                            Ok(rt) => rt,
-                            Err(e) => {
-                                eprintln!("worker {wid}: runtime load failed: {e:#}");
-                                return;
-                            }
-                        };
-                        worker_loop(wid, runtime, tables, metrics, trace, rx, &scfg);
-                    })
-                    .expect("spawning worker");
+                    .name("ngrammys-engine-pool".to_string())
+                    .spawn(move || pool::run_pool(art, tables, metrics, trace, rx, scfg))
+                    .expect("spawning engine pool");
                 workers.push(handle);
+            } else {
+                for wid in 0..cfg.workers.max(1) {
+                    let rx = rx.clone();
+                    let art = art.clone();
+                    let tables = tables.clone();
+                    let metrics = metrics.clone();
+                    let trace = trace.clone();
+                    let scfg = cfg.clone();
+                    let handle = std::thread::Builder::new()
+                        .name(format!("ngrammys-worker-{wid}"))
+                        .spawn(move || {
+                            let runtime = match ModelRuntime::load(&art) {
+                                Ok(rt) => rt,
+                                Err(e) => {
+                                    eprintln!("worker {wid}: runtime load failed: {e:#}");
+                                    return;
+                                }
+                            };
+                            worker_loop(wid, runtime, tables, metrics, trace, rx, &scfg);
+                        })
+                        .expect("spawning worker");
+                    workers.push(handle);
+                }
             }
-        }
-        Ok(Scheduler { tx, metrics, trace, workers })
+            SubmitPath::Channel(tx)
+        };
+        Ok(Scheduler { path, metrics, trace, workers })
     }
 
     /// Non-blocking admission; `Err` = queue full (backpressure). A
@@ -345,19 +438,38 @@ impl Scheduler {
     /// at `/metrics`) and logs the drop with the queue size so overload
     /// is visible on both the dashboard and the console.
     pub fn submit(&self, req: GenRequest) -> Result<Receiver<Result<GenResponse>>> {
-        self.metrics.requests_total.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-        match self.tx.try_send(Job { req, reply: reply_tx, t_submit: Instant::now() }) {
-            Ok(()) => {
-                self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
-                Ok(reply_rx)
-            }
-            Err(TrySendError::Full(_)) => {
-                let n = self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed) + 1;
-                eprintln!("scheduler: queue full, rejecting request ({n} rejected total)");
-                Err(anyhow!("queue full"))
-            }
-            Err(TrySendError::Disconnected(_)) => Err(anyhow!("scheduler stopped")),
+        self.submit_with(req, ReplySink::Channel(reply_tx), CancelToken::new())?;
+        Ok(reply_rx)
+    }
+
+    /// [`Self::submit`] with an explicit delivery sink and cancellation
+    /// token — the entry point for front-ends that neither park a thread
+    /// per request (reactor callbacks) nor outlive their client (a
+    /// disconnect cancels the token). Same backpressure contract as
+    /// `submit`.
+    pub fn submit_with(
+        &self,
+        req: GenRequest,
+        reply: ReplySink,
+        cancel: CancelToken,
+    ) -> Result<()> {
+        self.metrics.requests_total.fetch_add(1, Ordering::Relaxed);
+        let job = Job { req, reply, cancel, t_submit: Instant::now() };
+        match &self.path {
+            SubmitPath::Channel(tx) => match tx.try_send(job) {
+                Ok(()) => {
+                    self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+                    Ok(())
+                }
+                Err(TrySendError::Full(_)) => {
+                    let n = self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed) + 1;
+                    eprintln!("scheduler: queue full, rejecting request ({n} rejected total)");
+                    Err(anyhow!("queue full"))
+                }
+                Err(TrySendError::Disconnected(_)) => Err(anyhow!("scheduler stopped")),
+            },
+            SubmitPath::Steal(d) => d.submit(job),
         }
     }
 
@@ -367,9 +479,13 @@ impl Scheduler {
         rx.recv().map_err(|_| anyhow!("worker dropped"))?
     }
 
-    /// Graceful shutdown: close the queue and join workers.
+    /// Graceful shutdown: close the queue and join workers. Requests
+    /// already queued or in flight drain to completion in every mode.
     pub fn shutdown(self) {
-        drop(self.tx);
+        match self.path {
+            SubmitPath::Channel(tx) => drop(tx),
+            SubmitPath::Steal(d) => d.close(),
+        }
         for w in self.workers {
             let _ = w.join();
         }
@@ -435,6 +551,11 @@ fn worker_loop(
             Err(_) => return, // scheduler dropped
         };
         metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        if job.cancel.is_cancelled() {
+            metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+            job.reply.send(Err(anyhow!("request cancelled: client disconnected")));
+            continue;
+        }
         let queue_wait = job.t_submit.elapsed();
         let strategy = make_strategy_with_cache(
             job.req.strategy, &tables, job.req.engine.q, &scfg.session_cache);
@@ -446,7 +567,7 @@ fn worker_loop(
         let result = dec
             .generate(&job.req.prompt)
             .map(|r| finish_response(&metrics, &trace, job.t_submit, queue_wait, r));
-        let _ = job.reply.send(result);
+        job.reply.send(result);
     }
 }
 

@@ -33,17 +33,24 @@
 //! still exactly the base model's greedy continuation of its prompt
 //! (byte-identity across engine caps 1/2/4 and adversarial spawn/retire
 //! trajectories is pinned in `rust/tests/pool.rs`).
+//!
+//! This module is the `--dispatch central` mode: one dispatcher thread
+//! owns the scored queue and routes. The default `--dispatch steal` mode
+//! ([`super::steal`]) replaces the dispatcher with per-engine work queues
+//! plus idle-engine stealing and shares this module's engine worker
+//! building blocks; engine-COUNT autoscaling (level 2) runs only here,
+//! because only the central dispatcher owns spawn/retire.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{
-    sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TryRecvError, TrySendError,
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
 };
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::anyhow;
 
 use crate::config::{ModelArtifacts, ServeConfig};
 use crate::costmodel::CostModel;
@@ -56,8 +63,7 @@ use crate::trace::TraceHub;
 use super::admission::{request_score, strategy_prior_tpc, AdmissionQueue};
 use super::autoscale::{Autoscaler, Demand, EngineScaler};
 use super::{
-    controller_for_request, finish_response, make_strategy_with_cache, DepthClass, GenResponse,
-    Job,
+    controller_for_request, finish_response, make_strategy_with_cache, DepthClass, Job, ReplySink,
 };
 
 /// Dispatcher pacing: how long one routing iteration waits on the arrival
@@ -76,48 +82,51 @@ pub const STARVATION_DEFERRALS: u32 = 4;
 const MAX_SPAWN_FAILURES: u32 = 3;
 
 /// A routed request: the scheduler job plus its depth bucket and how
-/// often depth-aware placement has already passed it over.
-struct PoolJob {
-    job: Job,
-    class: DepthClass,
-    deferrals: u32,
+/// often depth-aware placement has already passed it over. Shared with
+/// [`super::steal`], whose per-engine queues hold the same item type so
+/// scored ordering and the deferral fallback stay one mechanism.
+pub(crate) struct PoolJob {
+    pub(crate) job: Job,
+    pub(crate) class: DepthClass,
+    pub(crate) deferrals: u32,
 }
 
-/// Gauges one engine worker exports to the dispatcher (lock-free; the
-/// dispatcher snapshots them into [`Metrics`] every iteration).
-struct EngineStatus {
+/// Gauges one engine worker exports to whoever places work on it —
+/// the central dispatcher or the work-stealing peers (lock-free; they
+/// are snapshotted into [`Metrics`] every publish iteration).
+pub(crate) struct EngineStatus {
     /// jobs routed to this worker but not yet admitted to a lane
-    backlog: AtomicUsize,
+    pub(crate) backlog: AtomicUsize,
     /// sequences currently decoding
-    active: AtomicUsize,
+    pub(crate) active: AtomicUsize,
     /// resident + routed greedy requests (depth bucket population)
-    greedy: AtomicUsize,
+    pub(crate) greedy: AtomicUsize,
     /// resident + routed speculative requests
-    spec: AtomicUsize,
+    pub(crate) spec: AtomicUsize,
     /// current lane-pool capacity
-    lanes: AtomicUsize,
+    pub(crate) lanes: AtomicUsize,
     /// the lane target the worker's autoscaler last decided
-    lanes_target: AtomicUsize,
+    pub(crate) lanes_target: AtomicUsize,
     /// mean controller heat across the worker's lanes, milli-units
-    heat_milli: AtomicU64,
+    pub(crate) heat_milli: AtomicU64,
     /// bytes this engine's KV lane pool currently pins
-    kv_bytes: AtomicU64,
+    pub(crate) kv_bytes: AtomicU64,
     /// distinct KV pages live in the engine's pool (lanes in lane mode)
-    kv_pages: AtomicU64,
+    pub(crate) kv_pages: AtomicU64,
     /// unreserved KV pages still free in the engine's pool
-    kv_pages_free: AtomicU64,
+    pub(crate) kv_pages_free: AtomicU64,
     /// KV pages shared by more than one resident sequence (paged mode)
-    kv_pages_shared: AtomicU64,
+    pub(crate) kv_pages_shared: AtomicU64,
     /// admissions that attached shared prefix pages (paged mode)
-    kv_prefix_hits: AtomicU64,
+    pub(crate) kv_prefix_hits: AtomicU64,
     /// worker is retiring (or failed to boot): route nothing more to it
-    draining: AtomicBool,
+    pub(crate) draining: AtomicBool,
     /// the worker never served: its `ModelRuntime` failed to load
-    load_failed: AtomicBool,
+    pub(crate) load_failed: AtomicBool,
 }
 
 impl EngineStatus {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         EngineStatus {
             backlog: AtomicUsize::new(0),
             active: AtomicUsize::new(0),
@@ -137,31 +146,31 @@ impl EngineStatus {
     }
 
     /// Requests this engine currently owns (decoding + routed backlog).
-    fn held(&self) -> usize {
+    pub(crate) fn held(&self) -> usize {
         self.active.load(Ordering::Relaxed) + self.backlog.load(Ordering::Relaxed)
     }
 
-    fn idle(&self) -> bool {
+    pub(crate) fn idle(&self) -> bool {
         self.held() == 0
     }
 
     /// Whether a `class` request can join this engine without mixing
     /// depth buckets (an empty engine is compatible with everything).
-    fn compatible(&self, class: DepthClass) -> bool {
+    pub(crate) fn compatible(&self, class: DepthClass) -> bool {
         match class {
             DepthClass::Greedy => self.spec.load(Ordering::Relaxed) == 0,
             DepthClass::Speculative => self.greedy.load(Ordering::Relaxed) == 0,
         }
     }
 
-    fn class_counter(&self, class: DepthClass) -> &AtomicUsize {
+    pub(crate) fn class_counter(&self, class: DepthClass) -> &AtomicUsize {
         match class {
             DepthClass::Greedy => &self.greedy,
             DepthClass::Speculative => &self.spec,
         }
     }
 
-    fn heat(&self) -> f64 {
+    pub(crate) fn heat(&self) -> f64 {
         self.heat_milli.load(Ordering::Relaxed) as f64 / 1e3
     }
 }
@@ -305,8 +314,7 @@ pub(super) fn run_pool(
             while let Some((pj, _, _)) = adq.pop_best_entry() {
                 metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
                 metrics.admissions_failed.fetch_add(1, Ordering::Relaxed);
-                let _ = pj
-                    .job
+                pj.job
                     .reply
                     .send(Err(anyhow!("engine pool: no engine available (runtime load failed)")));
             }
@@ -489,29 +497,44 @@ fn route(
 /// single-engine `lanes`/`lanes_target` gauges become pool aggregates so
 /// existing dashboards keep a meaningful total.
 fn publish(metrics: &Metrics, engines: &[EngineSlot]) {
-    metrics.engines.store(live_count(engines) as u64, Ordering::Relaxed);
+    publish_statuses(
+        metrics,
+        live_count(engines),
+        engines.iter().map(|e| (e.id, e.status.as_ref())),
+    );
+}
+
+/// The gauge snapshot behind [`publish`], shared with the work-stealing
+/// dispatcher (which has statuses but no [`EngineSlot`]s): aggregates
+/// per-engine gauges into the pool-level families and exports the
+/// per-engine rows for `/metrics`.
+pub(crate) fn publish_statuses<'a>(
+    metrics: &Metrics,
+    live: usize,
+    statuses: impl Iterator<Item = (u64, &'a EngineStatus)>,
+) {
+    metrics.engines.store(live as u64, Ordering::Relaxed);
     let mut lanes = 0u64;
     let mut lanes_target = 0u64;
     let mut kv_pages = 0u64;
     let mut kv_pages_free = 0u64;
     let mut kv_pages_shared = 0u64;
     let mut kv_prefix_hits = 0u64;
-    let snaps: Vec<EngineGauges> = engines
-        .iter()
-        .map(|e| {
+    let snaps: Vec<EngineGauges> = statuses
+        .map(|(id, st)| {
             let g = EngineGauges {
-                id: e.id,
-                lanes: e.status.lanes.load(Ordering::Relaxed) as u64,
-                lanes_target: e.status.lanes_target.load(Ordering::Relaxed) as u64,
-                active: e.status.active.load(Ordering::Relaxed) as u64,
-                greedy: e.status.greedy.load(Ordering::Relaxed) as u64,
-                speculative: e.status.spec.load(Ordering::Relaxed) as u64,
-                heat: e.status.heat(),
-                kv_bytes: e.status.kv_bytes.load(Ordering::Relaxed),
-                kv_pages: e.status.kv_pages.load(Ordering::Relaxed),
-                kv_pages_free: e.status.kv_pages_free.load(Ordering::Relaxed),
-                kv_pages_shared: e.status.kv_pages_shared.load(Ordering::Relaxed),
-                kv_prefix_hits: e.status.kv_prefix_hits.load(Ordering::Relaxed),
+                id,
+                lanes: st.lanes.load(Ordering::Relaxed) as u64,
+                lanes_target: st.lanes_target.load(Ordering::Relaxed) as u64,
+                active: st.active.load(Ordering::Relaxed) as u64,
+                greedy: st.greedy.load(Ordering::Relaxed) as u64,
+                speculative: st.spec.load(Ordering::Relaxed) as u64,
+                heat: st.heat(),
+                kv_bytes: st.kv_bytes.load(Ordering::Relaxed),
+                kv_pages: st.kv_pages.load(Ordering::Relaxed),
+                kv_pages_free: st.kv_pages_free.load(Ordering::Relaxed),
+                kv_pages_shared: st.kv_pages_shared.load(Ordering::Relaxed),
+                kv_prefix_hits: st.kv_prefix_hits.load(Ordering::Relaxed),
             };
             lanes += g.lanes;
             lanes_target += g.lanes_target;
@@ -568,8 +591,7 @@ fn spawn_engine(
                         st.backlog.fetch_sub(1, Ordering::Relaxed);
                         st.class_counter(pj.class).fetch_sub(1, Ordering::Relaxed);
                         metrics.admissions_failed.fetch_add(1, Ordering::Relaxed);
-                        let _ = pj
-                            .job
+                        pj.job
                             .reply
                             .send(Err(anyhow!("engine {id}: runtime load failed: {e:#}")));
                     }
@@ -588,7 +610,7 @@ fn spawn_engine(
 /// `--kv-page-size > 0` swaps the contiguous lane pool for the paged
 /// pool with prefix sharing (same output bytes, more admissions per KV
 /// byte on shared-prefix traffic).
-fn fresh_engine<'rt>(
+pub(crate) fn fresh_engine<'rt>(
     runtime: &'rt ModelRuntime,
     lanes: usize,
     scfg: &ServeConfig,
@@ -613,7 +635,7 @@ fn fresh_engine<'rt>(
 /// Snapshot the engine's KV page accounting into its status gauges
 /// (lane mode reports lanes as pages with no sharing, so the families
 /// stay meaningful either way).
-fn store_page_stats(status: &EngineStatus, eng: &BatchedEngine) {
+pub(crate) fn store_page_stats(status: &EngineStatus, eng: &BatchedEngine) {
     let ps = eng.page_stats();
     status.kv_pages.store(ps.live, Ordering::Relaxed);
     status.kv_pages_free.store(ps.free, Ordering::Relaxed);
@@ -623,13 +645,39 @@ fn store_page_stats(status: &EngineStatus, eng: &BatchedEngine) {
 
 /// An admitted request's reply route plus the bookkeeping needed to give
 /// its lane's class slot back on retirement.
-struct Inflight {
-    reply: Sender<Result<GenResponse>>,
+pub(crate) struct Inflight {
+    pub(crate) reply: ReplySink,
+    /// aborts the sequence early when the client disconnects mid-stream
+    pub(crate) cancel: super::CancelToken,
     /// when the request entered the scheduler (total-latency clock)
-    t_submit: Instant,
+    pub(crate) t_submit: Instant,
     /// dwell between submit and lane admission (TTFT's queue component)
-    queue_wait: Duration,
-    class: DepthClass,
+    pub(crate) queue_wait: Duration,
+    pub(crate) class: DepthClass,
+}
+
+/// Abort every in-flight sequence whose client has gone away: the lane
+/// (or its pages) is reclaimed immediately instead of decoding to EOS for
+/// nobody. Packed verification batches rows independently, so an abort
+/// never changes what any co-resident sequence emits. Counted in
+/// `ngrammys_requests_cancelled`.
+pub(crate) fn sweep_cancelled(
+    eng: &mut BatchedEngine,
+    inflight: &mut HashMap<SeqId, Inflight>,
+    metrics: &Metrics,
+    status: &EngineStatus,
+) {
+    let dead: Vec<SeqId> =
+        inflight.iter().filter(|(_, inf)| inf.cancel.is_cancelled()).map(|(&sid, _)| sid).collect();
+    for sid in dead {
+        if let Some(inf) = inflight.remove(&sid) {
+            eng.abort(sid);
+            status.active.fetch_sub(1, Ordering::Relaxed);
+            status.class_counter(inf.class).fetch_sub(1, Ordering::Relaxed);
+            metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+            inf.reply.send(Err(anyhow!("request cancelled: client disconnected")));
+        }
+    }
 }
 
 /// One engine worker: the continuous-batching loop over the requests the
@@ -714,6 +762,9 @@ fn engine_worker_loop(
                 }
             }
         }
+        // reclaim lanes whose client disconnected before stepping: the
+        // freed lane is visible to the dispatcher this iteration
+        sweep_cancelled(&mut eng, &mut inflight, metrics, status);
         if eng.active() == 0 {
             if !open {
                 return; // retired: channel closed and fully drained
@@ -747,7 +798,7 @@ fn engine_worker_loop(
                         status.class_counter(inf.class).fetch_sub(1, Ordering::Relaxed);
                         let resp =
                             finish_response(metrics, trace, inf.t_submit, inf.queue_wait, r);
-                        let _ = inf.reply.send(Ok(resp));
+                        inf.reply.send(Ok(resp));
                     }
                 }
             }
@@ -759,7 +810,7 @@ fn engine_worker_loop(
                 for (_, inf) in inflight.drain() {
                     status.active.fetch_sub(1, Ordering::Relaxed);
                     status.class_counter(inf.class).fetch_sub(1, Ordering::Relaxed);
-                    let _ = inf.reply.send(Err(anyhow!("batched engine step failed: {e:#}")));
+                    inf.reply.send(Err(anyhow!("batched engine step failed: {e:#}")));
                 }
                 let lanes = eng.capacity();
                 eng = fresh_engine(runtime, lanes, scfg, &analog);
@@ -780,7 +831,7 @@ fn engine_worker_loop(
 /// route. Admission failures are counted, logged and answered — never
 /// silent.
 #[allow(clippy::too_many_arguments)]
-fn admit_pool_job(
+pub(crate) fn admit_pool_job(
     eng: &mut BatchedEngine,
     pj: PoolJob,
     tables: &Arc<NgramTables>,
@@ -792,6 +843,15 @@ fn admit_pool_job(
     lane_cap: usize,
 ) {
     metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+    if pj.job.cancel.is_cancelled() {
+        // the client went away while the request sat in the queue: skip
+        // the prefill entirely and give the slot accounting back
+        status.class_counter(pj.class).fetch_sub(1, Ordering::Relaxed);
+        status.backlog.fetch_sub(1, Ordering::Relaxed);
+        metrics.requests_cancelled.fetch_add(1, Ordering::Relaxed);
+        pj.job.reply.send(Err(anyhow!("request cancelled: client disconnected")));
+        return;
+    }
     if !eng.has_capacity() && eng.capacity() < lane_cap {
         // the dispatcher routes ahead of the lane autoscaler: grow on
         // demand so a routed request never bounces off a stale capacity
@@ -822,6 +882,7 @@ fn admit_pool_job(
             status.backlog.fetch_sub(1, Ordering::Relaxed);
             let inf = Inflight {
                 reply: pj.job.reply,
+                cancel: pj.job.cancel,
                 t_submit: pj.job.t_submit,
                 queue_wait,
                 class: pj.class,
@@ -833,7 +894,7 @@ fn admit_pool_job(
             status.backlog.fetch_sub(1, Ordering::Relaxed);
             metrics.admissions_failed.fetch_add(1, Ordering::Relaxed);
             eprintln!("engine pool: admission failed: {e:#}");
-            let _ = pj.job.reply.send(Err(e));
+            pj.job.reply.send(Err(e));
         }
     }
 }

@@ -1,0 +1,651 @@
+//! Work-stealing dispatch: per-engine scored work queues drained by the
+//! engine workers themselves, with idle-engine stealing — no dispatcher
+//! thread between submit and admit.
+//!
+//! The central pool ([`super::pool`]) routes every request through one
+//! dispatcher thread that owns a single [`AdmissionQueue`]. That thread
+//! is a serialization point: at high connection counts every admission
+//! waits for the dispatcher's next routing pass. This module keeps the
+//! SAME ordering policy — scored admission with FIFO tie-break and the
+//! [`STARVATION_DEFERRALS`] anti-starvation fallback — but makes it a
+//! property of the shared queue structure ([`WorkQueues`]) rather than of
+//! a dispatcher loop:
+//!
+//! - **Submit** scores the request ([`request_score`]; with a paged KV
+//!   pool the same ordering contract extends to
+//!   [`super::admission::request_score_paged`], which is bitwise-identical
+//!   at zero shared prefix) and pushes it onto the queue of the
+//!   least-loaded depth-compatible engine.
+//! - **Pickup** is by the engine workers: each pops the best eligible
+//!   entry from its OWN queue first; an engine with free lanes and no
+//!   eligible local work steals the best eligible entry from its most
+//!   loaded peer (counted in `ngrammys_steals`).
+//! - **Depth classes** ([`super::DepthClass`]) stay segregated exactly as
+//!   under central routing: a worker only takes a request whose class
+//!   matches its resident population, until the request has been passed
+//!   over [`STARVATION_DEFERRALS`] times — then any engine with room
+//!   takes it (counted in `ngrammys_routing_fallbacks`).
+//!
+//! CORRECTNESS: like central routing, stealing only decides WHERE and
+//! alongside WHOM a sequence decodes. Every stream is still exactly the
+//! base model's greedy continuation of its prompt; byte-identity between
+//! `--dispatch steal` and `--dispatch central` at concurrency 1/4/8 is
+//! pinned by `bench serve --smoke` and `rust/tests/server_integration.rs`.
+//! Engine-COUNT autoscaling is a central-mode feature: this mode boots
+//! the full fixed fleet (`--engines`) so there is no spawn/retire owner
+//! to serialize behind; per-engine LANE autoscaling still runs.
+//!
+//! The queue structure is usable on its own:
+//!
+//! ```
+//! use ngrammys::scheduler::WorkQueues;
+//!
+//! let q: WorkQueues<&str> = WorkQueues::new(2, 8);
+//! q.push(0, "greedy", 1.0).unwrap();
+//! q.push(1, "spec", 2.0).unwrap();
+//! // an owner pops the best eligible entry from its own queue...
+//! let (item, _score, _seq) = q.pop_where(0, |_| true).unwrap();
+//! assert_eq!(item, "greedy");
+//! // ...and an idle peer steals from the most loaded other queue
+//! let (from, item, _score, _seq) = q.steal_where(0, |_| true).unwrap();
+//! assert_eq!((from, item), (1, "spec"));
+//! assert!(q.is_empty());
+//! ```
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{ModelArtifacts, ServeConfig};
+use crate::costmodel::CostModel;
+use crate::draft::NgramTables;
+use crate::engine::SeqId;
+use crate::metrics::Metrics;
+use crate::runtime::ModelRuntime;
+use crate::trace::TraceHub;
+
+use super::admission::{request_score, strategy_prior_tpc, AdmissionQueue};
+use super::autoscale::{Autoscaler, Demand};
+use super::pool::{
+    admit_pool_job, fresh_engine, publish_statuses, store_page_stats, sweep_cancelled,
+    EngineStatus, Inflight, PoolJob, STARVATION_DEFERRALS,
+};
+use super::{finish_response, DepthClass, Job};
+
+/// Pause between gauge-publisher iterations, and the bound on how long a
+/// worker waits for a wakeup that raced its queue check. Correctness
+/// never depends on it.
+const STEAL_TICK: Duration = Duration::from_millis(1);
+
+/// How long a fully idle worker (empty queues everywhere) parks before
+/// re-checking; pushes wake it immediately via the condvar.
+const IDLE_PARK: Duration = Duration::from_millis(25);
+
+/// Why [`WorkQueues::push`] refused an item (handed back to the caller).
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The shared queued-entry cap is reached — backpressure: reject the
+    /// request rather than queueing unboundedly.
+    Full(T),
+    /// [`WorkQueues::close`] was called: the serving loop is shutting
+    /// down and accepts no new work.
+    Closed(T),
+}
+
+/// N scored admission queues — one per engine — sharing one queued-entry
+/// cap, one closed flag, and one wakeup condvar.
+///
+/// Each inner queue is an [`AdmissionQueue`], so every pop (local or
+/// steal) is the scored pop with FIFO tie-break and the per-entry
+/// anti-starvation overtake bound. Ordering is therefore a property of
+/// the queue an entry sits in, not of any dispatcher loop: whichever
+/// worker gets to a queue first takes its best eligible entry.
+///
+/// All methods take `&self`; internal locking is per-queue, so pushes and
+/// pops on different queues never contend.
+pub struct WorkQueues<T> {
+    queues: Vec<Mutex<AdmissionQueue<T>>>,
+    /// entries currently queued across all queues (the backpressure cap
+    /// compares against this, so the bound is shared like the central
+    /// mode's bounded channel)
+    queued: AtomicUsize,
+    cap: usize,
+    closed: AtomicBool,
+    park: Mutex<()>,
+    wake: Condvar,
+}
+
+impl<T> WorkQueues<T> {
+    /// `n` queues (floored at 1) sharing a total queued-entry cap of
+    /// `cap` entries.
+    pub fn new(n: usize, cap: usize) -> Self {
+        let n = n.max(1);
+        WorkQueues {
+            queues: (0..n).map(|_| Mutex::new(AdmissionQueue::new())).collect(),
+            queued: AtomicUsize::new(0),
+            cap: cap.max(1),
+            closed: AtomicBool::new(false),
+            park: Mutex::new(()),
+            wake: Condvar::new(),
+        }
+    }
+
+    /// How many queues there are.
+    pub fn queues(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// Entries currently queued across all queues.
+    pub fn len(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    /// Whether no entry is queued anywhere.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Entries currently queued on queue `queue` (panics if out of
+    /// range).
+    pub fn queue_len(&self, queue: usize) -> usize {
+        self.queues[queue].lock().unwrap().len()
+    }
+
+    /// Enqueue `item` with `score` onto queue `queue` (panics if out of
+    /// range) and wake waiting workers. Fails with the item handed back
+    /// when the shared cap is reached or the structure is closed.
+    pub fn push(&self, queue: usize, item: T, score: f64) -> Result<(), PushError<T>> {
+        if self.closed.load(Ordering::Relaxed) {
+            return Err(PushError::Closed(item));
+        }
+        if self.queued.load(Ordering::Relaxed) >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        // count BEFORE the entry becomes poppable so a racing pop's
+        // decrement can never precede this increment
+        self.queued.fetch_add(1, Ordering::Relaxed);
+        self.queues[queue].lock().unwrap().push(item, score);
+        let _guard = self.park.lock().unwrap();
+        self.wake.notify_all();
+        Ok(())
+    }
+
+    /// Pop the best eligible entry from queue `queue` (panics if out of
+    /// range): highest score wins, ties go to the earliest arrival, and
+    /// the oldest eligible waiter is force-popped once it has been
+    /// overtaken [`AdmissionQueue`]'s anti-starvation bound times.
+    /// Returns the entry with its score and arrival stamp.
+    pub fn pop_where(
+        &self,
+        queue: usize,
+        eligible: impl FnMut(&T) -> bool,
+    ) -> Option<(T, f64, u64)> {
+        let hit = self.queues[queue].lock().unwrap().pop_best_where(eligible);
+        if hit.is_some() {
+            self.queued.fetch_sub(1, Ordering::Relaxed);
+        }
+        hit
+    }
+
+    /// Steal the best eligible entry from another queue, scanning the
+    /// most loaded queue first. Returns the source queue index alongside
+    /// the entry.
+    pub fn steal_where(
+        &self,
+        thief: usize,
+        mut eligible: impl FnMut(&T) -> bool,
+    ) -> Option<(usize, T, f64, u64)> {
+        let mut order: Vec<usize> = (0..self.queues.len()).filter(|&j| j != thief).collect();
+        order.sort_by_key(|&j| std::cmp::Reverse(self.queue_len(j)));
+        for j in order {
+            if let Some((item, score, seq)) = self.pop_where(j, &mut eligible) {
+                return Some((j, item, score, seq));
+            }
+        }
+        None
+    }
+
+    /// Visit every entry of queue `queue` mutably (panics if out of
+    /// range) — the workers use this to age passed-over entries toward
+    /// the anti-starvation fallback.
+    pub fn for_each_mut(&self, queue: usize, f: impl FnMut(&mut T)) {
+        self.queues[queue].lock().unwrap().for_each_mut(f);
+    }
+
+    /// Total score-over-FIFO reorders across all queues (the
+    /// `ngrammys_admission_reorders` gauge).
+    pub fn reorders(&self) -> u64 {
+        self.queues.iter().map(|q| q.lock().unwrap().reorders()).sum()
+    }
+
+    /// Remove and return every queued entry, best-first per queue.
+    pub fn drain_all(&self) -> Vec<T> {
+        let mut out = Vec::new();
+        for q in &self.queues {
+            let mut q = q.lock().unwrap();
+            while let Some((item, _, _)) = q.pop_best_entry() {
+                self.queued.fetch_sub(1, Ordering::Relaxed);
+                out.push(item);
+            }
+        }
+        out
+    }
+
+    /// Refuse further pushes and wake every parked worker. Entries
+    /// already queued stay poppable so shutdown can drain them.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Relaxed);
+        let _guard = self.park.lock().unwrap();
+        self.wake.notify_all();
+    }
+
+    /// Whether [`Self::close`] was called.
+    pub fn is_closed(&self) -> bool {
+        self.closed.load(Ordering::Relaxed)
+    }
+
+    /// Park until a push or [`Self::close`] wakes the caller, at most
+    /// `timeout`. Returns immediately if entries are queued or the
+    /// structure is already closed, so a wakeup that raced the caller's
+    /// own queue check is never lost for longer than `timeout`.
+    pub fn wait_for_work(&self, timeout: Duration) {
+        let guard = self.park.lock().unwrap();
+        if !self.is_empty() || self.is_closed() {
+            return;
+        }
+        let _ = self.wake.wait_timeout(guard, timeout).unwrap();
+    }
+}
+
+/// The submit-side handle for `--dispatch steal`: scores a request,
+/// places it on the least-loaded depth-compatible engine's queue, and
+/// applies the shared backpressure cap. Shared by the scheduler handle
+/// and every worker thread.
+pub(crate) struct StealDispatch {
+    queues: WorkQueues<PoolJob>,
+    /// `(engine id, gauges)` for the fixed fleet, in spawn order
+    statuses: Vec<(u64, Arc<EngineStatus>)>,
+    /// workers still running (drives publisher shutdown)
+    live: AtomicUsize,
+    metrics: Arc<Metrics>,
+    cm: CostModel,
+    elastic: bool,
+}
+
+impl StealDispatch {
+    /// Score and enqueue one job. Error strings match the central path
+    /// exactly: `"queue full"` under backpressure, `"scheduler stopped"`
+    /// after close, and a no-engine error when every runtime failed to
+    /// load.
+    pub(crate) fn submit(&self, job: Job) -> Result<()> {
+        let class = DepthClass::of(job.req.strategy, &job.req.engine);
+        let score = if self.elastic {
+            request_score(
+                &self.cm,
+                strategy_prior_tpc(&self.metrics, job.req.strategy),
+                job.req.strategy,
+                &job.req.engine,
+                job.req.prompt.len(),
+            )
+        } else {
+            0.0
+        };
+        let live: Vec<usize> = (0..self.statuses.len())
+            .filter(|&i| {
+                let st = &self.statuses[i].1;
+                !st.draining.load(Ordering::Relaxed) && !st.load_failed.load(Ordering::Relaxed)
+            })
+            .collect();
+        if live.is_empty() {
+            return Err(anyhow!("no engine available (runtime load failed)"));
+        }
+        let load = |i: usize| self.statuses[i].1.held() + self.queues.queue_len(i);
+        let target = live
+            .iter()
+            .copied()
+            .filter(|&i| self.statuses[i].1.compatible(class))
+            .min_by_key(|&i| load(i))
+            .or_else(|| live.iter().copied().min_by_key(|&i| load(i)))
+            .expect("live is non-empty");
+        match self.queues.push(target, PoolJob { job, class, deferrals: 0 }, score) {
+            Ok(()) => {
+                self.metrics.queue_depth.fetch_add(1, Ordering::Relaxed);
+                Ok(())
+            }
+            Err(PushError::Full(_)) => {
+                let n = self.metrics.requests_rejected.fetch_add(1, Ordering::Relaxed) + 1;
+                eprintln!("scheduler: queue full, rejecting request ({n} rejected total)");
+                Err(anyhow!("queue full"))
+            }
+            Err(PushError::Closed(_)) => Err(anyhow!("scheduler stopped")),
+        }
+    }
+
+    /// Graceful shutdown: refuse new work and wake the workers; each
+    /// drains the queues and its in-flight sequences before exiting.
+    pub(crate) fn close(&self) {
+        self.queues.close();
+    }
+}
+
+/// Boot the work-stealing fleet: `engines` worker threads (each loading
+/// its own `ModelRuntime`, like the central pool's spawn) plus one gauge
+/// publisher. Returns the submit handle and every thread to join on
+/// shutdown.
+pub(crate) fn start(
+    art: ModelArtifacts,
+    tables: Arc<NgramTables>,
+    metrics: Arc<Metrics>,
+    trace: Arc<TraceHub>,
+    scfg: ServeConfig,
+) -> (Arc<StealDispatch>, Vec<JoinHandle<()>>) {
+    let fleet = scfg.engines.max(1);
+    let lane_cap = scfg.batch.max(2);
+    let cm = CostModel::for_analog(&art.dims.analog);
+    let statuses: Vec<(u64, Arc<EngineStatus>)> =
+        (0..fleet as u64).map(|id| (id, Arc::new(EngineStatus::new()))).collect();
+    let dispatch = Arc::new(StealDispatch {
+        queues: WorkQueues::new(fleet, scfg.queue_cap.max(1)),
+        statuses,
+        live: AtomicUsize::new(fleet),
+        metrics: metrics.clone(),
+        cm,
+        elastic: scfg.elastic,
+    });
+    let mut handles = Vec::new();
+    for i in 0..fleet {
+        let d = dispatch.clone();
+        let art = art.clone();
+        let tables = tables.clone();
+        let metrics = metrics.clone();
+        let trace = trace.clone();
+        let scfg = scfg.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("ngrammys-steal-{i}"))
+            .spawn(move || {
+                let (id, status) = (d.statuses[i].0, d.statuses[i].1.clone());
+                match ModelRuntime::load(&art) {
+                    Ok(runtime) => {
+                        steal_worker_loop(
+                            i, id, &runtime, &d, &tables, &metrics, &trace, &scfg, &status,
+                            lane_cap,
+                        );
+                    }
+                    Err(e) => {
+                        eprintln!("engine {id}: runtime load failed: {e:#}");
+                        status.load_failed.store(true, Ordering::Relaxed);
+                    }
+                }
+                status.draining.store(true, Ordering::Relaxed);
+                d.live.fetch_sub(1, Ordering::Relaxed);
+            })
+            .expect("spawning steal worker");
+        handles.push(handle);
+    }
+    let d = dispatch.clone();
+    let handle = std::thread::Builder::new()
+        .name("ngrammys-steal-publish".to_string())
+        .spawn(move || publisher(&d, fleet))
+        .expect("spawning steal publisher");
+    handles.push(handle);
+    (dispatch, handles)
+}
+
+/// Gauge publisher: the central dispatcher snapshots gauges every routing
+/// pass; here no such thread exists, so a dedicated (cheap) one exports
+/// the per-engine statuses, keeps `engines_target` at the fixed fleet
+/// size, and fails queued work fast once every runtime load has failed.
+fn publisher(d: &StealDispatch, fleet: usize) {
+    loop {
+        let live =
+            d.statuses.iter().filter(|(_, st)| !st.draining.load(Ordering::Relaxed)).count();
+        d.metrics.engines_target.store(fleet as u64, Ordering::Relaxed);
+        d.metrics.admission_reorders.store(d.queues.reorders(), Ordering::Relaxed);
+        publish_statuses(&d.metrics, live, d.statuses.iter().map(|(id, st)| (*id, st.as_ref())));
+        if d.statuses.iter().all(|(_, st)| st.load_failed.load(Ordering::Relaxed)) {
+            for pj in d.queues.drain_all() {
+                d.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                d.metrics.admissions_failed.fetch_add(1, Ordering::Relaxed);
+                pj.job
+                    .reply
+                    .send(Err(anyhow!("engine pool: no engine available (runtime load failed)")));
+            }
+        }
+        if d.queues.is_closed() && d.live.load(Ordering::Relaxed) == 0 {
+            let live = d
+                .statuses
+                .iter()
+                .filter(|(_, st)| !st.draining.load(Ordering::Relaxed))
+                .count();
+            publish_statuses(
+                &d.metrics,
+                live,
+                d.statuses.iter().map(|(id, st)| (*id, st.as_ref())),
+            );
+            return;
+        }
+        std::thread::sleep(STEAL_TICK);
+    }
+}
+
+/// One work-stealing engine worker: the continuous-batching loop of
+/// `pool::engine_worker_loop`, but pulling straight from the shared
+/// queues (own queue first, then the most loaded peer) instead of a
+/// routed channel. Exits when the dispatch is closed and every queue and
+/// lane has drained — graceful shutdown completes in-flight requests.
+#[allow(clippy::too_many_arguments)]
+fn steal_worker_loop(
+    i: usize,
+    id: u64,
+    runtime: &ModelRuntime,
+    d: &StealDispatch,
+    tables: &Arc<NgramTables>,
+    metrics: &Arc<Metrics>,
+    trace: &Arc<TraceHub>,
+    scfg: &ServeConfig,
+    status: &EngineStatus,
+    lane_cap: usize,
+) {
+    let analog = runtime.artifacts().dims.analog.clone();
+    let recorder = trace.recorder_for_engine(id);
+    let mut au_cfg = scfg.autoscale.clone();
+    au_cfg.max_lanes = lane_cap;
+    au_cfg.min_lanes = au_cfg.min_lanes.clamp(1, lane_cap);
+    let boot_lanes = if scfg.elastic { au_cfg.min_lanes } else { lane_cap };
+    let mut scaler = Autoscaler::new(au_cfg);
+
+    let mut eng = fresh_engine(runtime, boot_lanes, scfg, &analog);
+    eng.recorder = Some(recorder.clone());
+    status.lanes.store(eng.capacity(), Ordering::Relaxed);
+    status.lanes_target.store(eng.capacity(), Ordering::Relaxed);
+    status.kv_bytes.store(eng.kv_bytes() as u64, Ordering::Relaxed);
+    store_page_stats(status, &eng);
+    let mut inflight: HashMap<SeqId, Inflight> = HashMap::new();
+    loop {
+        // ---- fill free lanes: own queue first, then steal from peers
+        let mut starved = false;
+        loop {
+            if !eng.has_capacity() {
+                let want = (eng.active() + d.queues.queue_len(i)).min(lane_cap);
+                if scfg.elastic && eng.capacity() < want {
+                    let lanes = eng.set_capacity(want);
+                    status.lanes.store(lanes, Ordering::Relaxed);
+                }
+                if !eng.has_capacity() {
+                    break;
+                }
+            }
+            let mut pred = |pj: &PoolJob| {
+                status.compatible(pj.class) || pj.deferrals >= STARVATION_DEFERRALS
+            };
+            let popped = match d.queues.pop_where(i, &mut pred) {
+                Some(hit) => Some(hit),
+                None => match d.queues.steal_where(i, &mut pred) {
+                    Some((_, pj, score, seq)) => {
+                        metrics.steals.fetch_add(1, Ordering::Relaxed);
+                        Some((pj, score, seq))
+                    }
+                    None => None,
+                },
+            };
+            let Some((pj, _, _)) = popped else {
+                starved = true;
+                break;
+            };
+            if !status.compatible(pj.class) {
+                metrics.routing_fallbacks.fetch_add(1, Ordering::Relaxed);
+            }
+            // pre-charge backlog + class so admit_pool_job's accounting
+            // (shared with the central dispatcher, which charges these at
+            // route time) balances, and so held() never dips mid-admit
+            status.backlog.fetch_add(1, Ordering::Relaxed);
+            status.class_counter(pj.class).fetch_add(1, Ordering::Relaxed);
+            admit_pool_job(
+                &mut eng, pj, tables, metrics, &mut inflight, scfg, runtime, status, lane_cap,
+            );
+        }
+        // reclaim lanes whose client disconnected before stepping
+        sweep_cancelled(&mut eng, &mut inflight, metrics, status);
+        if starved && !d.queues.is_empty() {
+            // every waiter this worker could see was depth-incompatible:
+            // age the local queue so the anti-starvation fallback
+            // eventually lets any engine take its entries (the mirror of
+            // the central route() pass's deferral bump)
+            d.queues.for_each_mut(i, |pj| pj.deferrals += 1);
+        }
+        if eng.active() == 0 {
+            if d.queues.is_closed() && d.queues.is_empty() {
+                return; // graceful drain complete
+            }
+            if scfg.elastic {
+                // idle: give the lane memory back NOW, like the central
+                // worker does before parking in recv()
+                let min = scaler.config().min_lanes;
+                let lanes = eng.set_capacity(min);
+                status.lanes.store(lanes, Ordering::Relaxed);
+                status.lanes_target.store(min, Ordering::Relaxed);
+                status.heat_milli.store(0, Ordering::Relaxed);
+                status.kv_bytes.store(eng.kv_bytes() as u64, Ordering::Relaxed);
+                store_page_stats(status, &eng);
+            }
+            let timeout = if d.queues.is_empty() { IDLE_PARK } else { STEAL_TICK };
+            d.queues.wait_for_work(timeout);
+            continue;
+        }
+        // lane-level autoscale (level 1): own queue depth is the local
+        // pressure signal
+        if scfg.elastic {
+            let target = scaler.target_lanes(&Demand {
+                queue_depth: d.queues.queue_len(i),
+                active: eng.active(),
+                lanes: eng.capacity(),
+                mean_heat: eng.mean_heat(),
+            });
+            let achieved = eng.set_capacity(target);
+            status.lanes_target.store(target, Ordering::Relaxed);
+            status.lanes.store(achieved, Ordering::Relaxed);
+        } else {
+            status.lanes_target.store(lane_cap, Ordering::Relaxed);
+            status.lanes.store(eng.capacity(), Ordering::Relaxed);
+        }
+        match eng.step() {
+            Ok(done) => {
+                if let Some(b) = eng.last_step_budget() {
+                    metrics.derived_budget.store(b as u64, Ordering::Relaxed);
+                }
+                for (sid, r) in done {
+                    if let Some(inf) = inflight.remove(&sid) {
+                        status.active.fetch_sub(1, Ordering::Relaxed);
+                        status.class_counter(inf.class).fetch_sub(1, Ordering::Relaxed);
+                        let resp =
+                            finish_response(metrics, trace, inf.t_submit, inf.queue_wait, r);
+                        inf.reply.send(Ok(resp));
+                    }
+                }
+            }
+            Err(e) => {
+                // a step error poisons the whole batch (shared call):
+                // fail every in-flight request and restart fresh at the
+                // capacity the autoscaler had reached
+                eprintln!("engine pool: step failed: {e:#}");
+                for (_, inf) in inflight.drain() {
+                    status.active.fetch_sub(1, Ordering::Relaxed);
+                    status.class_counter(inf.class).fetch_sub(1, Ordering::Relaxed);
+                    inf.reply.send(Err(anyhow!("batched engine step failed: {e:#}")));
+                }
+                let lanes = eng.capacity();
+                eng = fresh_engine(runtime, lanes, scfg, &analog);
+                eng.recorder = Some(recorder.clone());
+            }
+        }
+        status.heat_milli.store(
+            (eng.mean_heat().unwrap_or(0.0).max(0.0) * 1e3) as u64,
+            Ordering::Relaxed,
+        );
+        status.kv_bytes.store(eng.kv_bytes() as u64, Ordering::Relaxed);
+        store_page_stats(status, &eng);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn best_scored_entry_pops_first_within_a_queue() {
+        let q: WorkQueues<&str> = WorkQueues::new(1, 8);
+        q.push(0, "low", 1.0).unwrap();
+        q.push(0, "high", 2.0).unwrap();
+        let (item, score, _) = q.pop_where(0, |_| true).unwrap();
+        assert_eq!((item, score), ("high", 2.0));
+        let (item, _, _) = q.pop_where(0, |_| true).unwrap();
+        assert_eq!(item, "low");
+        assert!(q.pop_where(0, |_| true).is_none());
+    }
+
+    #[test]
+    fn steal_scans_most_loaded_peer_first() {
+        let q: WorkQueues<u32> = WorkQueues::new(3, 16);
+        q.push(1, 10, 0.0).unwrap();
+        q.push(2, 20, 0.0).unwrap();
+        q.push(2, 21, 5.0).unwrap();
+        // queue 2 holds two entries, so the thief visits it first and
+        // takes its best-scored entry
+        let (from, item, _, _) = q.steal_where(0, |_| true).unwrap();
+        assert_eq!((from, item), (2, 21));
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn steal_respects_eligibility_like_depth_routing() {
+        let q: WorkQueues<&str> = WorkQueues::new(2, 8);
+        q.push(1, "spec", 9.0).unwrap();
+        q.push(1, "greedy", 1.0).unwrap();
+        // a "greedy-resident" thief skips the higher-scored spec entry
+        let (from, item, _, _) = q.steal_where(0, |it| *it == "greedy").unwrap();
+        assert_eq!((from, item), (1, "greedy"));
+        // the spec entry is still there for a compatible taker
+        let (item, _, _) = q.pop_where(1, |_| true).unwrap();
+        assert_eq!(item, "spec");
+    }
+
+    #[test]
+    fn shared_cap_applies_across_queues_and_close_refuses_pushes() {
+        let q: WorkQueues<u32> = WorkQueues::new(2, 2);
+        q.push(0, 1, 0.0).unwrap();
+        q.push(1, 2, 0.0).unwrap();
+        assert!(matches!(q.push(0, 3, 0.0), Err(PushError::Full(3))));
+        // popping frees shared capacity no matter which queue it came from
+        q.pop_where(1, |_| true).unwrap();
+        q.push(0, 3, 0.0).unwrap();
+        q.close();
+        assert!(matches!(q.push(0, 4, 0.0), Err(PushError::Closed(4))));
+        // queued entries stay drainable after close (shutdown drain)
+        assert_eq!(q.drain_all().len(), 2);
+        assert!(q.is_empty());
+    }
+}

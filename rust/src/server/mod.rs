@@ -21,9 +21,24 @@
 //! (`ngrammys serve --strategy adaptive` makes online (k, w) + strategy
 //! selection the server default; per-request `"strategy"` still wins).
 //!
-//! One thread per connection (bounded by the scheduler's queue for actual
-//! work); keep-alive is not supported — every response closes the socket,
-//! which keeps the parser tiny and is plenty for the benchmark driver.
+//! Two front-ends serve the same routes with byte-identical responses
+//! (`ngrammys serve --front-end {reactor,threaded}`):
+//!
+//! * **reactor** (default on Linux) — a single event-loop thread drives
+//!   every connection through non-blocking accept/read/write state
+//!   machines over epoll (see [`reactor`]). `/generate` is submitted to
+//!   the scheduler asynchronously, so a slow or vanished client never
+//!   pins an OS thread; client disconnects cancel the in-flight request
+//!   and release its lane and KV pages.
+//! * **threaded** — one blocking thread per connection, the original
+//!   front-end. Kept as the fallback for non-Linux builds and as the
+//!   comparison baseline for `ngrammys bench serve`.
+//!
+//! Keep-alive is not supported in either front-end — every response
+//! closes the socket, which keeps the parser tiny and is plenty for the
+//! benchmark driver. [`Server::spawn_handle`] returns a [`ServerHandle`]
+//! whose `shutdown()` stops accepting and drains in-flight connections
+//! before returning.
 //!
 //! Request hardening: the parser enforces a body-size cap (1 MiB), header
 //! count/size caps, and a valid Content-Length on POST. Violations get a
@@ -34,15 +49,20 @@
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
-use crate::config::{EngineConfig, ServeConfig};
-use crate::scheduler::{GenRequest, Scheduler, StrategyName};
+use crate::config::{EngineConfig, FrontEnd, ServeConfig};
+use crate::scheduler::{GenRequest, GenResponse, Scheduler, StrategyName};
 use crate::tokenizer::BpeTokenizer;
 use crate::trace::to_jsonl;
 use crate::util::json::Json;
+
+#[cfg(target_os = "linux")]
+pub mod reactor;
 
 /// How many flight-recorder events `GET /trace` returns when the request
 /// doesn't pass `?n=K`.
@@ -59,102 +79,131 @@ pub struct Server {
     pub cfg: ServeConfig,
 }
 
+/// A running server: its bound address plus the stop flag and thread
+/// handle needed for a graceful shutdown.
+pub struct ServerHandle {
+    /// the address the listener actually bound (resolves port 0)
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: std::thread::JoinHandle<()>,
+}
+
+impl ServerHandle {
+    /// Stop accepting new connections, drain the ones in flight, and
+    /// join the serving thread. In-flight `/generate` requests finish
+    /// and their responses are delivered before this returns.
+    pub fn shutdown(self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = self.handle.join();
+    }
+}
+
 impl Server {
-    /// Blocking accept loop. Binds `cfg.addr`; call from main.
+    /// Blocking accept loop. Binds `cfg.addr`; call from main. Runs the
+    /// front-end `cfg.front_end` selects (reactor by default on Linux).
     pub fn run(self) -> Result<()> {
         let listener = TcpListener::bind(&self.cfg.addr)?;
-        eprintln!("ngrammys serving on http://{}", self.cfg.addr);
-        let me = Arc::new(self);
-        for stream in listener.incoming() {
-            let Ok(stream) = stream else { continue };
-            let me = me.clone();
-            std::thread::spawn(move || {
-                if let Err(e) = me.handle(stream) {
-                    eprintln!("connection error: {e:#}");
-                }
-            });
-        }
-        Ok(())
+        let fe = effective_front_end(&self.cfg);
+        eprintln!("ngrammys serving on http://{} ({} front-end)", self.cfg.addr, fe.label());
+        serve_on(Arc::new(self), listener, Arc::new(AtomicBool::new(false)), fe)
     }
 
     /// Bind and serve in a background thread; returns the bound address
-    /// (useful with port 0 in tests).
+    /// (useful with port 0 in tests). The server runs until the process
+    /// exits — use [`Server::spawn_handle`] when you need to stop it.
     pub fn spawn(self) -> Result<(std::net::SocketAddr, std::thread::JoinHandle<()>)> {
+        let h = self.spawn_handle()?;
+        Ok((h.addr, h.handle))
+    }
+
+    /// Bind and serve in a background thread, returning a handle whose
+    /// `shutdown()` stops the accept loop and drains in-flight
+    /// connections before returning.
+    pub fn spawn_handle(self) -> Result<ServerHandle> {
         let listener = TcpListener::bind(&self.cfg.addr)?;
         let addr = listener.local_addr()?;
+        let fe = effective_front_end(&self.cfg);
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
         let me = Arc::new(self);
         let handle = std::thread::spawn(move || {
-            for stream in listener.incoming() {
-                let Ok(stream) = stream else { continue };
-                let me = me.clone();
-                std::thread::spawn(move || {
-                    let _ = me.handle(stream);
-                });
+            if let Err(e) = serve_on(me, listener, stop2, fe) {
+                eprintln!("server: front-end failed: {e:#}");
             }
         });
-        Ok((addr, handle))
+        Ok(ServerHandle { addr, stop, handle })
     }
 
     fn handle(&self, mut stream: TcpStream) -> Result<()> {
         let (status, body, ctype) = match parse_request(&mut stream) {
             Ok(req) => self.route(&req),
-            Err(e) => (
-                e.status,
-                Json::obj(vec![("error", Json::Str(e.msg))]).to_string(),
-                "application/json",
-            ),
+            Err(e) => (e.status, error_body(e.msg), "application/json"),
         };
-        let resp = format!(
-            "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-            body.len()
-        );
-        stream.write_all(resp.as_bytes())?;
+        if stream.write_all(http_response(status, ctype, &body).as_bytes()).is_err() {
+            self.scheduler.metrics.disconnects.fetch_add(1, Ordering::Relaxed);
+        }
         Ok(())
     }
 
     fn route(&self, req: &HttpRequest) -> (&'static str, String, &'static str) {
+        match self.route_pre(req) {
+            Routed::Ready(status, body, ctype) => (status, body, ctype),
+            Routed::Generate(body) => match self.generate(&body) {
+                Ok(j) => ("200 OK", j.to_string(), "application/json"),
+                Err(e) => ("400 Bad Request", error_body(format!("{e:#}")), "application/json"),
+            },
+        }
+    }
+
+    /// Route everything except the actual generation work: synchronous
+    /// routes come back [`Routed::Ready`], a well-formed `POST /generate`
+    /// comes back [`Routed::Generate`] so the caller can run it blocking
+    /// (threaded front-end) or submit it asynchronously (reactor).
+    pub(crate) fn route_pre(&self, req: &HttpRequest) -> Routed {
         // the request target may carry a query string; route on the bare
         // path so `/trace?n=64` still hits `/trace`
         let (path, query) = match req.path.split_once('?') {
             Some((p, q)) => (p, q),
             None => (req.path.as_str(), ""),
         };
-        let err = |msg: String| Json::obj(vec![("error", Json::Str(msg))]).to_string();
+        let fail = |status: &'static str, msg: String| {
+            Routed::Ready(status, error_body(msg), "application/json")
+        };
         // every known path serves exactly one method: anything else on it
         // is a 405 naming the method it supports, an unknown path is a 404
         let allowed = match path {
             "/healthz" | "/metrics" | "/stats" | "/trace" => "GET",
             "/generate" => "POST",
-            _ => {
-                return ("404 Not Found", err(format!("no such path: {path}")), "application/json")
-            }
+            _ => return fail("404 Not Found", format!("no such path: {path}")),
         };
         if req.method != allowed {
             let msg = format!("{path} only supports {allowed}, got {}", req.method);
-            return ("405 Method Not Allowed", err(msg), "application/json");
+            return fail("405 Method Not Allowed", msg);
         }
         match path {
-            "/healthz" => ("200 OK", "ok\n".into(), "text/plain"),
-            "/metrics" => ("200 OK", self.scheduler.metrics.render(), "text/plain"),
-            "/stats" => {
-                ("200 OK", self.scheduler.metrics.stats_json().to_string(), "application/json")
-            }
+            "/healthz" => Routed::Ready("200 OK", "ok\n".into(), "text/plain"),
+            "/metrics" => Routed::Ready("200 OK", self.scheduler.metrics.render(), "text/plain"),
+            "/stats" => Routed::Ready(
+                "200 OK",
+                self.scheduler.metrics.stats_json().to_string(),
+                "application/json",
+            ),
             "/trace" => {
                 let n = query_param(query, "n")
                     .and_then(|v| v.parse().ok())
                     .unwrap_or(DEFAULT_TRACE_EVENTS);
                 let events = self.scheduler.trace.recent(n);
-                ("200 OK", to_jsonl(&events), "application/x-ndjson")
+                Routed::Ready("200 OK", to_jsonl(&events), "application/x-ndjson")
             }
-            "/generate" => match self.generate(&req.body) {
-                Ok(j) => ("200 OK", j.to_string(), "application/json"),
-                Err(e) => ("400 Bad Request", err(format!("{e:#}")), "application/json"),
-            },
+            "/generate" => Routed::Generate(req.body.clone()),
             _ => unreachable!("every path in the allow table is matched above"),
         }
     }
 
-    fn generate(&self, body: &str) -> Result<Json> {
+    /// Parse a `/generate` request body into the scheduler request it
+    /// describes. Error strings here are pinned by the integration tests
+    /// — both front-ends report them byte-identically.
+    pub(crate) fn parse_generate(&self, body: &str) -> Result<GenRequest> {
         let j = Json::parse(body).map_err(|e| anyhow!("bad json: {e}"))?;
         let prompt_text = j
             .req("prompt")?
@@ -178,15 +227,99 @@ impl Server {
         if prompt.is_empty() {
             return Err(anyhow!("empty prompt"));
         }
-        let resp = self.scheduler.generate(GenRequest { prompt, engine, strategy })?;
-        Ok(Json::obj(vec![
+        Ok(GenRequest { prompt, engine, strategy })
+    }
+
+    /// Render a finished generation as the `/generate` response JSON.
+    pub(crate) fn render_generate(&self, resp: &GenResponse) -> Json {
+        Json::obj(vec![
             ("text", Json::Str(self.tokenizer.decode(&resp.tokens))),
             ("tokens", Json::Num(resp.tokens.len() as f64)),
             ("calls", Json::Num(resp.calls as f64)),
             ("tokens_per_call", Json::Num(resp.tokens_per_call)),
             ("latency_ms", Json::Num(resp.latency_ms)),
-        ]))
+        ])
     }
+
+    fn generate(&self, body: &str) -> Result<Json> {
+        let req = self.parse_generate(body)?;
+        let resp = self.scheduler.generate(req)?;
+        Ok(self.render_generate(&resp))
+    }
+}
+
+/// What [`Server::route_pre`] decided about a request.
+pub(crate) enum Routed {
+    /// a complete response: (status line, body, content type)
+    Ready(&'static str, String, &'static str),
+    /// a well-formed `POST /generate` whose body still needs running
+    Generate(String),
+}
+
+/// The front-end actually used: the configured one, except that the
+/// epoll reactor only exists on Linux — elsewhere it falls back to the
+/// threaded front-end with a warning.
+fn effective_front_end(cfg: &ServeConfig) -> FrontEnd {
+    if cfg.front_end == FrontEnd::Reactor && !cfg!(target_os = "linux") {
+        eprintln!("server: reactor front-end requires Linux epoll; falling back to threaded");
+        return FrontEnd::Threaded;
+    }
+    cfg.front_end
+}
+
+/// Run the selected front-end on `listener` until `stop` is set, then
+/// drain in-flight connections and return.
+fn serve_on(
+    me: Arc<Server>,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    fe: FrontEnd,
+) -> Result<()> {
+    match fe {
+        #[cfg(target_os = "linux")]
+        FrontEnd::Reactor => reactor::serve(me, listener, stop),
+        #[cfg(not(target_os = "linux"))]
+        FrontEnd::Reactor => serve_threaded(me, listener, stop),
+        FrontEnd::Threaded => serve_threaded(me, listener, stop),
+    }
+}
+
+/// The original front-end: one blocking thread per connection. The
+/// accept loop polls so the stop flag is honoured; on stop it joins the
+/// per-connection threads, draining whatever is in flight.
+fn serve_threaded(me: Arc<Server>, listener: TcpListener, stop: Arc<AtomicBool>) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // accepted sockets do not inherit the listener's
+                // non-blocking flag on every platform — force blocking
+                let _ = stream.set_nonblocking(false);
+                me.scheduler.metrics.connections_total.fetch_add(1, Ordering::Relaxed);
+                let me = me.clone();
+                conns.push(std::thread::spawn(move || {
+                    if let Err(e) = me.handle(stream) {
+                        eprintln!("connection error: {e:#}");
+                    }
+                }));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            Err(e) => {
+                eprintln!("server: accept failed: {e}");
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
+        if conns.len() >= 32 {
+            conns.retain(|h| !h.is_finished());
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+    Ok(())
 }
 
 /// First value of `key` in a URL query string (`"a=1&b=2"`), `None` when
@@ -252,12 +385,37 @@ fn read_line_capped<R: BufRead>(
     Ok(String::from_utf8_lossy(&buf).into_owned())
 }
 
+/// Format one complete HTTP/1.1 response. Both front-ends emit their
+/// bytes through this single formatter, which is what makes the
+/// byte-identity guarantee between them checkable.
+pub(crate) fn http_response(status: &str, ctype: &str, body: &str) -> String {
+    format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+}
+
+/// Render an error message as the JSON error body both front-ends use.
+pub(crate) fn error_body(msg: impl Into<String>) -> String {
+    Json::obj(vec![("error", Json::Str(msg.into()))]).to_string()
+}
+
 /// Parse one HTTP/1.1 request from `stream`, enforcing the header and
 /// body caps; violations carry the 4xx status they should produce.
 pub fn parse_request(stream: &mut TcpStream) -> std::result::Result<HttpRequest, HttpError> {
+    parse_request_from(&mut BufReader::new(stream))
+}
+
+/// [`parse_request`] over any buffered byte source — the reactor runs it
+/// on a `Cursor` over a connection's already-buffered bytes once its
+/// completeness pre-check says the request (or its framing violation) is
+/// fully present, so both front-ends produce identical parses and
+/// identical pinned 4xx errors.
+pub(crate) fn parse_request_from<R: BufRead>(
+    reader: &mut R,
+) -> std::result::Result<HttpRequest, HttpError> {
     let bad = |msg: String| HttpError::new("400 Bad Request", msg);
-    let mut reader = BufReader::new(stream);
-    let line = read_line_capped(&mut reader, MAX_HEADER_LINE_BYTES)?;
+    let line = read_line_capped(reader, MAX_HEADER_LINE_BYTES)?;
     let mut parts = line.split_whitespace();
     let method = parts.next().unwrap_or("").to_string();
     let path = parts.next().unwrap_or("").to_string();
@@ -268,7 +426,7 @@ pub fn parse_request(stream: &mut TcpStream) -> std::result::Result<HttpRequest,
     let mut content_length: Option<usize> = None;
     let mut n_headers = 0usize;
     loop {
-        let h = read_line_capped(&mut reader, MAX_HEADER_LINE_BYTES)?;
+        let h = read_line_capped(reader, MAX_HEADER_LINE_BYTES)?;
         if h.is_empty() {
             // EOF before the blank line terminating the header block
             return Err(bad("truncated request: headers not terminated".to_string()));

@@ -1,0 +1,918 @@
+//! Event-driven serving front-end: one reactor thread drives every
+//! connection through non-blocking accept/read/write state machines.
+//!
+//! # Why a reactor
+//!
+//! The threaded front-end parks one OS thread per connection for the
+//! whole request lifetime — including the decode, which can take
+//! hundreds of milliseconds. A slow reader additionally pins its thread
+//! inside `write_all`. The reactor inverts this: the only per-request
+//! thread cost is the engine lane the scheduler already owns. The
+//! reactor thread itself blocks in `epoll_wait` and wakes for exactly
+//! three reasons: the listener is readable (accept), a connection is
+//! readable/writable (advance its state machine), or an engine finished
+//! a generation (eventfd wakeup from the completion callback).
+//!
+//! # The `Reactor` trait
+//!
+//! The event loop is generic over [`Reactor`], a minimal
+//! registration + readiness interface shaped so a completion-based
+//! backend (io_uring: registrations become SQEs, readiness becomes
+//! CQEs) can slot in later without touching the connection state
+//! machines. The only implementation today is [`EpollReactor`]
+//! (level-triggered epoll via raw syscalls — the crate stays
+//! dependency-free).
+//!
+//! ```
+//! use std::net::{TcpListener, TcpStream};
+//! use std::os::fd::AsRawFd;
+//! use std::time::Duration;
+//! use ngrammys::server::reactor::{EpollReactor, Event, Interest, Reactor};
+//!
+//! let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+//! let stream = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+//! let mut r = EpollReactor::new().unwrap();
+//! r.register(stream.as_raw_fd(), 7, Interest::WRITABLE).unwrap();
+//! let mut events: Vec<Event> = Vec::new();
+//! r.wait(&mut events, Some(Duration::from_secs(1))).unwrap();
+//! assert!(events.iter().any(|e| e.token == 7 && e.writable));
+//! ```
+//!
+//! # Connection state machine
+//!
+//! ```text
+//! accept ── over conn-cap? ──► best-effort 503, close
+//!    │
+//!    ▼
+//! Reading ──[request complete or EOF]──► parse (shared parser, byte-
+//!    │                                   identical 4xx) ──► route
+//!    │                                        │
+//!    │                     sync route (metrics/stats/...) or error
+//!    │                                        │            │
+//!    ▼                                        │            ▼
+//! Dispatched ◄──[POST /generate submitted]────┘         Writing
+//!    │   (scheduler runs it; reactor holds only a CancelToken)
+//!    ▼
+//! completion callback → eventfd → Writing ──[flushed]──► close
+//! ```
+//!
+//! Request bytes are buffered per connection and handed to the *same*
+//! [`super::parse_request_from`] the threaded front-end uses, over a
+//! `Cursor`, once a completeness pre-check ([`request_ready`]) says the
+//! request — or its framing violation — is fully present. The pre-check
+//! mirrors the parser's caps, which also bounds the buffer: a
+//! connection can never buffer more than the body cap plus the header
+//! caps before the parser is invoked and settles the request.
+//!
+//! # Disconnects and cancellation
+//!
+//! EOF (or hangup) while **Reading** is not an error: the buffered
+//! bytes are parsed as-is, so half-closing clients that send a request
+//! and `shutdown(Write)` still get their response. EOF while
+//! **Dispatched** means the client is gone: the request's
+//! [`CancelToken`] is cancelled — the engine aborts the sequence and
+//! frees its lane and KV pages within a step — and `disconnects` is
+//! bumped. A write failure while **Writing** counts the same way.
+//!
+//! # Graceful shutdown
+//!
+//! When the stop flag is set the listener is deregistered, idle
+//! (Reading) connections are dropped, and the loop keeps running until
+//! every Dispatched/Writing connection has received and flushed its
+//! response — in-flight requests always drain.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{self, Cursor, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::fd::{AsRawFd, FromRawFd, OwnedFd, RawFd};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::{
+    error_body, http_response, parse_request_from, Routed, Server, MAX_BODY_BYTES,
+    MAX_HEADERS, MAX_HEADER_LINE_BYTES,
+};
+use crate::scheduler::{CancelToken, GenResponse, ReplySink};
+use crate::trace::ConnEvent;
+
+/// I/O readiness a file descriptor is registered for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Interest {
+    /// wake when the fd is readable
+    pub readable: bool,
+    /// wake when the fd is writable
+    pub writable: bool,
+}
+
+impl Interest {
+    /// readable only
+    pub const READABLE: Interest = Interest { readable: true, writable: false };
+    /// writable only
+    pub const WRITABLE: Interest = Interest { readable: false, writable: true };
+    /// no readiness at all — keep the registration but stay quiet
+    /// (fatal conditions are still delivered)
+    pub const NONE: Interest = Interest { readable: false, writable: false };
+}
+
+/// One readiness event delivered by [`Reactor::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// the token the fd was registered with
+    pub token: u64,
+    /// fd is readable
+    pub readable: bool,
+    /// fd is writable
+    pub writable: bool,
+    /// peer hung up (full close or write-half shutdown)
+    pub hangup: bool,
+    /// fd is in an error state
+    pub error: bool,
+}
+
+/// Minimal readiness-notification interface the serving event loop runs
+/// on. Registrations carry a caller-chosen `token` echoed back in each
+/// [`Event`]. The shape — register/modify/deregister plus a blocking
+/// wait that fills a completion batch — is deliberately io_uring-like
+/// so a submission/completion-ring backend can implement it without the
+/// event loop changing.
+pub trait Reactor {
+    /// Start watching `fd` with `interest`, tagging its events `token`.
+    fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()>;
+    /// Change the interest set (and token) of an already-watched fd.
+    fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()>;
+    /// Stop watching `fd`.
+    fn deregister(&mut self, fd: RawFd) -> io::Result<()>;
+    /// Block until at least one event or the timeout elapses (`None` =
+    /// forever); `out` is cleared and refilled. Returns the event count.
+    fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<usize>;
+}
+
+// ---------------------------------------------------------------------
+// epoll backend (raw syscalls; the crate has no libc dependency)
+// ---------------------------------------------------------------------
+
+const EPOLL_CLOEXEC: i32 = 0x80000;
+const EPOLL_CTL_ADD: i32 = 1;
+const EPOLL_CTL_DEL: i32 = 2;
+const EPOLL_CTL_MOD: i32 = 3;
+const EPOLLIN: u32 = 0x1;
+const EPOLLOUT: u32 = 0x4;
+const EPOLLERR: u32 = 0x8;
+const EPOLLHUP: u32 = 0x10;
+const EPOLLRDHUP: u32 = 0x2000;
+const EFD_NONBLOCK: i32 = 0x800;
+const EFD_CLOEXEC: i32 = 0x80000;
+
+/// Matches the kernel's `struct epoll_event`, which is packed on x86-64.
+#[repr(C)]
+#[cfg_attr(target_arch = "x86_64", repr(packed))]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: i32) -> i32;
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+    fn eventfd(initval: u32, flags: i32) -> i32;
+}
+
+fn events_bits(i: Interest) -> u32 {
+    let mut bits = 0;
+    if i.readable {
+        bits |= EPOLLIN | EPOLLRDHUP;
+    }
+    if i.writable {
+        bits |= EPOLLOUT;
+    }
+    bits
+}
+
+/// Level-triggered epoll [`Reactor`] — the production backend.
+pub struct EpollReactor {
+    epfd: OwnedFd,
+}
+
+impl EpollReactor {
+    /// A fresh epoll instance (close-on-exec).
+    pub fn new() -> io::Result<Self> {
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(EpollReactor { epfd: unsafe { OwnedFd::from_raw_fd(fd) } })
+    }
+
+    fn ctl(&self, op: i32, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        let mut ev = EpollEvent { events: events_bits(interest), data: token };
+        if unsafe { epoll_ctl(self.epfd.as_raw_fd(), op, fd, &mut ev) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+}
+
+impl Reactor for EpollReactor {
+    fn register(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, token, interest)
+    }
+
+    fn modify(&mut self, fd: RawFd, token: u64, interest: Interest) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, token, interest)
+    }
+
+    fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_DEL, fd, 0, Interest::NONE)
+    }
+
+    fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<usize> {
+        out.clear();
+        let mut buf = [EpollEvent { events: 0, data: 0 }; 64];
+        let tmo = timeout.map_or(-1, |d| d.as_millis().min(i32::MAX as u128) as i32);
+        let n = loop {
+            let n = unsafe { epoll_wait(self.epfd.as_raw_fd(), buf.as_mut_ptr(), 64, tmo) };
+            if n >= 0 {
+                break n as usize;
+            }
+            let e = io::Error::last_os_error();
+            if e.kind() != io::ErrorKind::Interrupted {
+                return Err(e);
+            }
+        };
+        for ev in buf.iter().take(n) {
+            let bits = ev.events;
+            out.push(Event {
+                token: ev.data,
+                readable: bits & EPOLLIN != 0,
+                writable: bits & EPOLLOUT != 0,
+                hangup: bits & (EPOLLHUP | EPOLLRDHUP) != 0,
+                error: bits & EPOLLERR != 0,
+            });
+        }
+        Ok(out.len())
+    }
+}
+
+// ---------------------------------------------------------------------
+// completion plumbing: engine worker -> reactor thread
+// ---------------------------------------------------------------------
+
+type Completion = (u64, Result<GenResponse>);
+
+/// Finished generations en route from engine workers to the reactor.
+/// `push` runs on the worker thread: it appends the completion record
+/// and writes one eventfd wakeup (both non-blocking), which is the
+/// entire cross-thread cost per request.
+struct Completions {
+    q: Mutex<Vec<Completion>>,
+    wake_fd: File,
+}
+
+impl Completions {
+    fn new() -> io::Result<Self> {
+        let fd = unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Completions { q: Mutex::new(Vec::new()), wake_fd: unsafe { File::from_raw_fd(fd) } })
+    }
+
+    fn push(&self, token: u64, r: Result<GenResponse>) {
+        self.q.lock().unwrap().push((token, r));
+        let _ = (&self.wake_fd).write_all(&1u64.to_ne_bytes());
+    }
+
+    fn drain(&self) -> Vec<Completion> {
+        std::mem::take(&mut *self.q.lock().unwrap())
+    }
+
+    /// Reset the eventfd counter (reading it zeroes it).
+    fn drain_wake(&self) {
+        let mut b = [0u8; 8];
+        let _ = (&self.wake_fd).read(&mut b);
+    }
+}
+
+// ---------------------------------------------------------------------
+// request completeness pre-check
+// ---------------------------------------------------------------------
+
+/// Byte offset just past the header-terminating blank line, if present.
+/// Accepts `\r\n\r\n`, `\n\n`, and the mixed `\n\r\n` the line parser
+/// also treats as a terminator.
+fn header_end(buf: &[u8]) -> Option<usize> {
+    for i in 0..buf.len() {
+        if buf[i] == b'\n' {
+            match buf.get(i + 1) {
+                Some(b'\n') => return Some(i + 2),
+                Some(b'\r') if buf.get(i + 2) == Some(&b'\n') => return Some(i + 3),
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+/// True when some line already exceeds the header-line cap — terminated
+/// or not, the parser is guaranteed to settle it with a 431.
+fn line_overflow(buf: &[u8]) -> bool {
+    let mut start = 0;
+    for (i, &b) in buf.iter().enumerate() {
+        if b == b'\n' {
+            if i + 1 - start > MAX_HEADER_LINE_BYTES {
+                return true;
+            }
+            start = i + 1;
+        }
+    }
+    buf.len() - start > MAX_HEADER_LINE_BYTES
+}
+
+/// What the Content-Length prescan concluded about a complete header
+/// block.
+enum Prescan {
+    /// a valid Content-Length: the body is `n` bytes
+    Body(usize),
+    /// no Content-Length header present
+    Absent,
+    /// the parser will reject the framing (invalid or over-cap value) —
+    /// no point waiting for a body that cannot be accepted
+    Settles,
+}
+
+/// Scan the raw header block for Content-Length the same way the parser
+/// does: every occurrence is validated in order (the first invalid one
+/// is where the parser errors), the last valid one wins.
+fn content_length_prescan(head: &[u8]) -> Prescan {
+    let text = String::from_utf8_lossy(head);
+    let mut found = Prescan::Absent;
+    // skip the request line; stop at the blank terminator
+    for line in text.split('\n').skip(1) {
+        let line = line.trim_end_matches('\r');
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                match v.trim().parse::<usize>() {
+                    Ok(n) if n <= MAX_BODY_BYTES => found = Prescan::Body(n),
+                    _ => return Prescan::Settles,
+                }
+            }
+        }
+    }
+    found
+}
+
+/// Whether the buffered bytes are ready to hand to the parser: either
+/// the request is fully present, or the parser is guaranteed to settle
+/// it conclusively (framing violation, EOF). Until this returns true
+/// the connection just keeps reading — and the same caps the parser
+/// enforces bound how much it can ever buffer.
+fn request_ready(buf: &[u8], eof: bool) -> bool {
+    if eof {
+        return true;
+    }
+    match header_end(buf) {
+        Some(end) => match content_length_prescan(&buf[..end]) {
+            Prescan::Body(n) => buf.len() >= end + n,
+            // parser answers immediately: 411 for bodied methods, or an
+            // empty body — either way no more bytes are needed
+            Prescan::Absent => true,
+            Prescan::Settles => true,
+        },
+        None => {
+            // headers still streaming in; parse early only when a cap
+            // is already blown (the parser will 431 without the rest)
+            line_overflow(buf)
+                || buf.iter().filter(|&&b| b == b'\n').count() > MAX_HEADERS + 1
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// the event loop
+// ---------------------------------------------------------------------
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Stop-flag poll cadence; everything else wakes the loop immediately.
+const TICK: Duration = Duration::from_millis(25);
+
+enum ConnState {
+    /// buffering request bytes until [`request_ready`]
+    Reading,
+    /// a `/generate` is running in the scheduler; on disconnect the
+    /// token is cancelled so the engine frees the lane within a step
+    Dispatched { cancel: CancelToken },
+    /// flushing the response; `off` tracks partial writes
+    Writing { resp: Vec<u8>, off: usize, t_write: Instant },
+}
+
+struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    state: ConnState,
+    t_accept: Instant,
+    /// when the request was fully read and parsed (ConnRead phase end)
+    read_done: Option<Instant>,
+    bytes_in: u64,
+    /// the client half-closed; suppress readiness so level-triggered
+    /// EOF does not busy-loop while the response is produced
+    saw_eof: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Self {
+        Conn {
+            stream,
+            buf: Vec::new(),
+            state: ConnState::Reading,
+            t_accept: Instant::now(),
+            read_done: None,
+            bytes_in: 0,
+            saw_eof: false,
+        }
+    }
+}
+
+/// What parsing a complete request decided (split out so the borrow of
+/// the connection's buffer ends before the state transition).
+enum Parsed {
+    Respond(&'static str, String, &'static str),
+    InFlight(CancelToken),
+}
+
+struct EventLoop<R: Reactor> {
+    r: R,
+    me: Arc<Server>,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    completions: Arc<Completions>,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    accepting: bool,
+}
+
+/// Run the reactor front-end on `listener` until `stop` is set and the
+/// in-flight connections have drained.
+pub(crate) fn serve(me: Arc<Server>, listener: TcpListener, stop: Arc<AtomicBool>) -> Result<()> {
+    let el = EventLoop {
+        r: EpollReactor::new()?,
+        me,
+        listener,
+        stop,
+        completions: Arc::new(Completions::new()?),
+        conns: HashMap::new(),
+        next_token: FIRST_CONN_TOKEN,
+        accepting: true,
+    };
+    el.run()
+}
+
+impl<R: Reactor> EventLoop<R> {
+    fn run(mut self) -> Result<()> {
+        self.listener.set_nonblocking(true)?;
+        self.r.register(self.listener.as_raw_fd(), TOKEN_LISTENER, Interest::READABLE)?;
+        self.r
+            .register(self.completions.wake_fd.as_raw_fd(), TOKEN_WAKER, Interest::READABLE)?;
+        let mut events = Vec::new();
+        loop {
+            if self.stop.load(Ordering::SeqCst) {
+                if self.accepting {
+                    self.begin_drain();
+                }
+                if self.conns.is_empty() {
+                    return Ok(());
+                }
+            }
+            self.r.wait(&mut events, Some(TICK))?;
+            for ev in events.drain(..) {
+                match ev.token {
+                    TOKEN_LISTENER => {
+                        if self.accepting {
+                            self.on_accept();
+                        }
+                    }
+                    TOKEN_WAKER => self.on_wake(),
+                    _ => self.on_conn_event(ev),
+                }
+            }
+        }
+    }
+
+    /// Stop accepting and drop idle connections; Dispatched/Writing
+    /// ones keep running until their responses are flushed.
+    fn begin_drain(&mut self) {
+        let _ = self.r.deregister(self.listener.as_raw_fd());
+        self.accepting = false;
+        let r = &mut self.r;
+        self.conns.retain(|_, c| {
+            if matches!(c.state, ConnState::Reading) {
+                let _ = r.deregister(c.stream.as_raw_fd());
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    fn on_accept(&mut self) {
+        loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let metrics = &self.me.scheduler.metrics;
+                    metrics.connections_total.fetch_add(1, Ordering::Relaxed);
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    if self.conns.len() >= self.me.cfg.conn_cap.max(1) {
+                        // over capacity: answer 503 best-effort and close
+                        // (the body almost always fits the socket buffer)
+                        let body = error_body(format!(
+                            "server at connection capacity ({} open connections)",
+                            self.conns.len()
+                        ));
+                        let resp = http_response("503 Service Unavailable", "application/json", &body);
+                        let _ = (&stream).write_all(resp.as_bytes());
+                        continue;
+                    }
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self.r.register(stream.as_raw_fd(), token, Interest::READABLE).is_err() {
+                        continue;
+                    }
+                    self.conns.insert(token, Conn::new(stream));
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+    }
+
+    /// Deliver finished generations: look the connection up by token
+    /// (it may be gone — the client disconnected and the engine's abort
+    /// raced its last step) and start writing the response the threaded
+    /// front-end would have written byte-for-byte.
+    fn on_wake(&mut self) {
+        self.completions.drain_wake();
+        for (token, result) in self.completions.drain() {
+            let Some(mut conn) = self.conns.remove(&token) else { continue };
+            let (status, body, ctype) = match result {
+                Ok(resp) => {
+                    ("200 OK", self.me.render_generate(&resp).to_string(), "application/json")
+                }
+                Err(e) => ("400 Bad Request", error_body(format!("{e:#}")), "application/json"),
+            };
+            if self.respond(token, &mut conn, status, ctype, &body) {
+                self.conns.insert(token, conn);
+            }
+        }
+    }
+
+    fn on_conn_event(&mut self, ev: Event) {
+        let Some(mut conn) = self.conns.remove(&ev.token) else { return };
+        let alive = if matches!(conn.state, ConnState::Reading) {
+            self.conn_read(ev, &mut conn)
+        } else if matches!(conn.state, ConnState::Dispatched { .. }) {
+            self.conn_dispatched(ev, &mut conn)
+        } else if ev.error {
+            self.drop_conn(&mut conn, true);
+            false
+        } else {
+            self.flush(ev.token, &mut conn)
+        };
+        if alive {
+            self.conns.insert(ev.token, conn);
+        }
+    }
+
+    /// Reading state: pull bytes until the socket would block (or EOF),
+    /// then hand off to the parser once the request is ready.
+    fn conn_read(&mut self, ev: Event, conn: &mut Conn) -> bool {
+        let mut eof = false;
+        if ev.readable || ev.hangup || ev.error {
+            let mut tmp = [0u8; 16 * 1024];
+            loop {
+                match conn.stream.read(&mut tmp) {
+                    Ok(0) => {
+                        eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        conn.bytes_in += n as u64;
+                        conn.buf.extend_from_slice(&tmp[..n]);
+                    }
+                    Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        eof = true;
+                        break;
+                    }
+                }
+            }
+        }
+        conn.saw_eof |= eof;
+        if !request_ready(&conn.buf, eof) {
+            return true;
+        }
+        if conn.buf.is_empty() && eof {
+            // opened and closed without sending a byte
+            self.drop_conn(conn, true);
+            return false;
+        }
+        self.try_dispatch(ev.token, conn)
+    }
+
+    /// Parse the buffered request with the shared parser and act on the
+    /// routing decision.
+    fn try_dispatch(&mut self, token: u64, conn: &mut Conn) -> bool {
+        conn.read_done = Some(Instant::now());
+        let parsed = {
+            let mut cur = Cursor::new(conn.buf.as_slice());
+            match parse_request_from(&mut cur) {
+                Err(e) => Parsed::Respond(e.status, error_body(e.msg), "application/json"),
+                Ok(req) => match self.me.route_pre(&req) {
+                    Routed::Ready(s, b, c) => Parsed::Respond(s, b, c),
+                    Routed::Generate(body) => match self.dispatch_generate(token, &body) {
+                        Ok(cancel) => Parsed::InFlight(cancel),
+                        Err(e) => Parsed::Respond(
+                            "400 Bad Request",
+                            error_body(format!("{e:#}")),
+                            "application/json",
+                        ),
+                    },
+                },
+            }
+        };
+        match parsed {
+            Parsed::Respond(status, body, ctype) => self.respond(token, conn, status, ctype, &body),
+            Parsed::InFlight(cancel) => {
+                conn.state = ConnState::Dispatched { cancel };
+                // a half-closed client can't disconnect any further:
+                // watch nothing, or level-triggered EOF would spin
+                let interest =
+                    if conn.saw_eof { Interest::NONE } else { Interest::READABLE };
+                let _ = self.r.modify(conn.stream.as_raw_fd(), token, interest);
+                true
+            }
+        }
+    }
+
+    /// Parse the generate body and submit it with a callback sink; the
+    /// error strings (bad json / empty prompt / queue full / ...) reach
+    /// the client exactly as the threaded front-end reports them.
+    fn dispatch_generate(&self, token: u64, body: &str) -> Result<CancelToken> {
+        let req = self.me.parse_generate(body)?;
+        let cancel = CancelToken::new();
+        let comp = self.completions.clone();
+        let sink = ReplySink::Callback(Box::new(move |r| comp.push(token, r)));
+        self.me.scheduler.submit_with(req, sink, cancel.clone())?;
+        Ok(cancel)
+    }
+
+    /// Dispatched state: the only readiness we expect is the client
+    /// vanishing — drain (discarding stray bytes) and cancel on EOF.
+    fn conn_dispatched(&mut self, ev: Event, conn: &mut Conn) -> bool {
+        let mut gone = ev.error;
+        if ev.readable || ev.hangup {
+            let mut tmp = [0u8; 4096];
+            loop {
+                match conn.stream.read(&mut tmp) {
+                    Ok(0) => {
+                        gone = true;
+                        break;
+                    }
+                    Ok(_) => continue,
+                    Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        gone = true;
+                        break;
+                    }
+                }
+            }
+        }
+        if gone {
+            if let ConnState::Dispatched { cancel } = &conn.state {
+                cancel.cancel();
+            }
+            self.drop_conn(conn, true);
+            return false;
+        }
+        true
+    }
+
+    /// Transition to Writing and flush as much as the socket takes.
+    fn respond(
+        &mut self,
+        token: u64,
+        conn: &mut Conn,
+        status: &'static str,
+        ctype: &'static str,
+        body: &str,
+    ) -> bool {
+        conn.state = ConnState::Writing {
+            resp: http_response(status, ctype, body).into_bytes(),
+            off: 0,
+            t_write: Instant::now(),
+        };
+        self.flush(token, conn)
+    }
+
+    /// Writing state: write until done (close), the socket would block
+    /// (wait for EPOLLOUT), or the client is gone.
+    fn flush(&mut self, token: u64, conn: &mut Conn) -> bool {
+        let ConnState::Writing { resp, off, t_write } = &mut conn.state else {
+            return true;
+        };
+        loop {
+            if *off >= resp.len() {
+                // response fully flushed: record the connection span and
+                // close (every response is Connection: close)
+                let read_us = conn
+                    .read_done
+                    .map_or(0, |t| t.duration_since(conn.t_accept).as_micros() as u64);
+                let ev = ConnEvent {
+                    t_us: 0, // stamped by the hub
+                    read_us,
+                    write_us: t_write.elapsed().as_micros() as u64,
+                    bytes_in: conn.bytes_in,
+                    bytes_out: resp.len() as u64,
+                };
+                self.me.scheduler.trace.record_conn(ev);
+                let _ = self.r.deregister(conn.stream.as_raw_fd());
+                return false;
+            }
+            match conn.stream.write(&resp[*off..]) {
+                Ok(0) => {
+                    self.me.scheduler.metrics.disconnects.fetch_add(1, Ordering::Relaxed);
+                    let _ = self.r.deregister(conn.stream.as_raw_fd());
+                    return false;
+                }
+                Ok(n) => *off += n,
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    let _ = self.r.modify(conn.stream.as_raw_fd(), token, Interest::WRITABLE);
+                    return true;
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.me.scheduler.metrics.disconnects.fetch_add(1, Ordering::Relaxed);
+                    let _ = self.r.deregister(conn.stream.as_raw_fd());
+                    return false;
+                }
+            }
+        }
+    }
+
+    /// Deregister and count the drop; the socket closes when the
+    /// connection is not re-inserted into the map.
+    fn drop_conn(&mut self, conn: &mut Conn, disconnected: bool) {
+        if disconnected {
+            self.me.scheduler.metrics.disconnects.fetch_add(1, Ordering::Relaxed);
+        }
+        let _ = self.r.deregister(conn.stream.as_raw_fd());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_end_accepts_every_terminator_spelling() {
+        assert_eq!(header_end(b"GET / HTTP/1.1\r\nHost: x\r\n\r\nbody"), Some(27));
+        assert_eq!(header_end(b"GET / HTTP/1.1\nHost: x\n\nbody"), Some(24));
+        assert_eq!(header_end(b"GET / HTTP/1.1\nHost: x\n\r\n"), Some(25));
+        assert_eq!(header_end(b"\r\n\r\n"), Some(4));
+        assert_eq!(header_end(b"GET / HTTP/1.1\r\nHost: x\r\n"), None);
+        assert_eq!(header_end(b""), None);
+    }
+
+    #[test]
+    fn request_ready_tracks_the_parser_caps() {
+        // incomplete headers: wait
+        assert!(!request_ready(b"POST /generate HTTP/1.1\r\n", false));
+        // complete headers + full body: ready
+        let full = b"POST /g HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd";
+        assert!(request_ready(full, false));
+        // declared body still streaming: wait
+        let partial = b"POST /g HTTP/1.1\r\nContent-Length: 9\r\n\r\nabcd";
+        assert!(!request_ready(partial, false));
+        // EOF settles anything
+        assert!(request_ready(partial, true));
+        assert!(request_ready(b"", true));
+        // no Content-Length: the parser answers (411 or empty body)
+        assert!(request_ready(b"POST /g HTTP/1.1\r\nHost: x\r\n\r\n", false));
+        assert!(request_ready(b"GET /healthz HTTP/1.1\r\n\r\n", false));
+        // invalid / over-cap Content-Length: no point waiting for a body
+        assert!(request_ready(b"POST /g HTTP/1.1\r\nContent-Length: banana\r\n\r\n", false));
+        let huge = format!("POST /g HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(request_ready(huge.as_bytes(), false));
+        // a header line over the cap settles as 431 without its newline
+        let mut long = b"GET / HTTP/1.1\r\nX-Big: ".to_vec();
+        long.extend(std::iter::repeat(b'a').take(MAX_HEADER_LINE_BYTES + 1));
+        assert!(request_ready(&long, false));
+        assert!(line_overflow(&long));
+    }
+
+    #[test]
+    fn prescan_matches_parser_semantics_on_repeated_content_length() {
+        // last valid value wins, like the parser's overwrite loop
+        let head = b"POST /g HTTP/1.1\r\nContent-Length: 3\r\nContent-Length: 5\r\n\r\n";
+        match content_length_prescan(head) {
+            Prescan::Body(5) => {}
+            _ => panic!("expected Body(5)"),
+        }
+        // an invalid occurrence settles immediately, like the parser's error
+        let head = b"POST /g HTTP/1.1\r\nContent-Length: x\r\nContent-Length: 5\r\n\r\n";
+        assert!(matches!(content_length_prescan(head), Prescan::Settles));
+    }
+
+    /// The reactor's parse path (shared parser over a Cursor on the
+    /// buffered bytes) must produce the same pinned statuses the
+    /// threaded front-end produces on the hardened-request corpus.
+    #[test]
+    fn buffered_parse_reproduces_pinned_hardening_statuses() {
+        let parse = |raw: &str| {
+            let mut cur = Cursor::new(raw.as_bytes());
+            parse_request_from(&mut cur)
+        };
+        let status = |raw: &str| parse(raw).unwrap_err().status;
+        assert_eq!(
+            status("POST /generate HTTP/1.1\r\nHost: x\r\n\r\n{\"prompt\": \"hi\"}"),
+            "411 Length Required"
+        );
+        assert_eq!(
+            status("POST /generate HTTP/1.1\r\nContent-Length: 999999999999\r\n\r\n"),
+            "413 Payload Too Large"
+        );
+        assert_eq!(
+            status("POST /generate HTTP/1.1\r\nContent-Length: banana\r\n\r\n"),
+            "400 Bad Request"
+        );
+        assert_eq!(
+            status("POST /generate HTTP/1.1\r\nContent-Length: 50\r\n\r\n{\"a\":1}"),
+            "400 Bad Request"
+        );
+        assert_eq!(status("\r\n\r\n"), "400 Bad Request");
+        let ok = parse("POST /generate HTTP/1.1\r\nContent-Length: 2\r\n\r\nhi").unwrap();
+        assert_eq!((ok.method.as_str(), ok.path.as_str(), ok.body.as_str()), ("POST", "/generate", "hi"));
+    }
+
+    #[test]
+    fn epoll_reactor_delivers_readiness_and_modify_works() {
+        use std::net::{TcpListener, TcpStream};
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let client = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (served, _) = listener.accept().unwrap();
+
+        let mut r = EpollReactor::new().unwrap();
+        let mut events = Vec::new();
+        // a fresh socket is writable but not readable
+        r.register(client.as_raw_fd(), 9, Interest::WRITABLE).unwrap();
+        r.wait(&mut events, Some(Duration::from_secs(2))).unwrap();
+        assert!(events.iter().any(|e| e.token == 9 && e.writable));
+
+        // switch interest to readable; it fires once the peer writes
+        r.modify(client.as_raw_fd(), 9, Interest::READABLE).unwrap();
+        r.wait(&mut events, Some(Duration::from_millis(50))).unwrap();
+        assert!(!events.iter().any(|e| e.readable), "nothing to read yet");
+        (&served).write_all(b"ping").unwrap();
+        r.wait(&mut events, Some(Duration::from_secs(2))).unwrap();
+        assert!(events.iter().any(|e| e.token == 9 && e.readable));
+
+        // deregister silences the fd entirely
+        r.deregister(client.as_raw_fd()).unwrap();
+        r.wait(&mut events, Some(Duration::from_millis(50))).unwrap();
+        assert!(events.is_empty(), "{events:?}");
+    }
+
+    #[test]
+    fn eventfd_completions_wake_and_drain() {
+        let comp = Completions::new().unwrap();
+        let mut r = EpollReactor::new().unwrap();
+        r.register(comp.wake_fd.as_raw_fd(), TOKEN_WAKER, Interest::READABLE).unwrap();
+        let mut events = Vec::new();
+        r.wait(&mut events, Some(Duration::from_millis(50))).unwrap();
+        assert!(events.is_empty(), "no completion pushed yet");
+        comp.push(42, Err(anyhow::anyhow!("x")));
+        r.wait(&mut events, Some(Duration::from_secs(2))).unwrap();
+        assert!(events.iter().any(|e| e.token == TOKEN_WAKER && e.readable));
+        comp.drain_wake();
+        let drained = comp.drain();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].0, 42);
+        // counter reset: no stale wakeups
+        r.wait(&mut events, Some(Duration::from_millis(50))).unwrap();
+        assert!(events.is_empty(), "{events:?}");
+    }
+}

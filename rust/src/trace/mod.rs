@@ -35,8 +35,11 @@ pub mod report;
 pub const DEFAULT_RING_CAPACITY: usize = 4096;
 
 /// Decode-path phase taxonomy. `QueueWait` and `Prefill` are request-level
-/// spans (admission queue dwell, prompt prefill); the rest are the packed
-/// step lifecycle in [`crate::engine::BatchedEngine`] order.
+/// spans (admission queue dwell, prompt prefill); `ConnRead` and
+/// `ConnWrite` are connection-level spans stamped by the reactor
+/// front-end (accept → request parsed, response start → flushed); the
+/// rest are the packed step lifecycle in
+/// [`crate::engine::BatchedEngine`] order.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
     /// submit → dequeue dwell in the admission queue
@@ -53,11 +56,15 @@ pub enum Phase {
     Judge,
     /// KV tail commit (including copy-on-write page work)
     Commit,
+    /// reactor: connection accept → request fully read and parsed
+    ConnRead,
+    /// reactor: response write start → fully flushed
+    ConnWrite,
 }
 
 impl Phase {
     /// Number of phases (sizes array-backed per-phase statistics).
-    pub const COUNT: usize = 7;
+    pub const COUNT: usize = 9;
 
     /// Every phase, in `index()` order.
     pub const ALL: [Phase; Self::COUNT] = [
@@ -68,11 +75,21 @@ impl Phase {
         Phase::Verify,
         Phase::Judge,
         Phase::Commit,
+        Phase::ConnRead,
+        Phase::ConnWrite,
     ];
 
     /// Dense index into `ALL` (declaration order == discriminant).
     pub fn index(&self) -> usize {
         *self as usize
+    }
+
+    /// Whether this phase is part of the packed step lifecycle (the
+    /// phases a [`StepEvent`] carries), as opposed to the request-level
+    /// (`QueueWait`/`Prefill`) and connection-level
+    /// (`ConnRead`/`ConnWrite`) spans.
+    pub fn is_step(&self) -> bool {
+        matches!(self, Phase::Draft | Phase::Pack | Phase::Verify | Phase::Judge | Phase::Commit)
     }
 
     /// Stable label used in metrics, JSONL and report tables.
@@ -85,6 +102,8 @@ impl Phase {
             Phase::Verify => "verify",
             Phase::Judge => "judge",
             Phase::Commit => "commit",
+            Phase::ConnRead => "conn-read",
+            Phase::ConnWrite => "conn-write",
         }
     }
 }
@@ -147,13 +166,32 @@ pub struct RequestEvent {
     pub calls: u32,
 }
 
-/// A merged trace entry: either a packed step or a completed request.
+/// One served connection's span record, stamped by the reactor
+/// front-end when a response finishes flushing.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ConnEvent {
+    /// microseconds since the hub epoch, stamped at close
+    pub t_us: u64,
+    /// accept → request fully read and parsed (µs; the ConnRead phase)
+    pub read_us: u64,
+    /// response write start → fully flushed (µs; the ConnWrite phase)
+    pub write_us: u64,
+    /// request bytes received
+    pub bytes_in: u64,
+    /// response bytes sent
+    pub bytes_out: u64,
+}
+
+/// A merged trace entry: a packed step, a completed request, or a served
+/// connection.
 #[derive(Debug, Clone, Copy)]
 pub enum TraceEvent {
     /// one packed decode step
     Step(StepEvent),
     /// one completed request
     Request(RequestEvent),
+    /// one served connection (reactor front-end)
+    Conn(ConnEvent),
 }
 
 impl TraceEvent {
@@ -162,6 +200,7 @@ impl TraceEvent {
         match self {
             TraceEvent::Step(e) => e.t_us,
             TraceEvent::Request(e) => e.t_us,
+            TraceEvent::Conn(e) => e.t_us,
         }
     }
 }
@@ -345,6 +384,7 @@ pub struct TraceHub {
     epoch: Instant,
     engines: Mutex<Vec<Arc<FlightRecorder>>>,
     requests: Mutex<VecDeque<RequestEvent>>,
+    conns: Mutex<VecDeque<ConnEvent>>,
     metrics: Option<Arc<Metrics>>,
 }
 
@@ -357,6 +397,7 @@ impl TraceHub {
             epoch: Instant::now(),
             engines: Mutex::new(Vec::new()),
             requests: Mutex::new(VecDeque::new()),
+            conns: Mutex::new(VecDeque::new()),
             metrics: None,
         }
     }
@@ -440,14 +481,40 @@ impl TraceHub {
         reqs.push_back(ev);
     }
 
-    /// Merge the last `n` events across every engine ring and the request
-    /// log, ordered by timestamp (oldest first).
+    /// Record one served connection's spans (reactor front-end): appends
+    /// a [`ConnEvent`] (bounded by the ring capacity) and feeds the
+    /// conn-read / conn-write phase histograms when wired to metrics.
+    /// No-op when the hub is disabled.
+    pub fn record_conn(&self, mut ev: ConnEvent) {
+        if !self.enabled() {
+            return;
+        }
+        ev.t_us = self.now_us();
+        if let Some(m) = &self.metrics {
+            let us = std::time::Duration::from_micros;
+            if ev.read_us > 0 {
+                m.phase_latency[Phase::ConnRead.index()].observe(us(ev.read_us));
+            }
+            if ev.write_us > 0 {
+                m.phase_latency[Phase::ConnWrite.index()].observe(us(ev.write_us));
+            }
+        }
+        let mut conns = self.conns.lock().unwrap();
+        if conns.len() >= self.capacity {
+            conns.pop_front();
+        }
+        conns.push_back(ev);
+    }
+
+    /// Merge the last `n` events across every engine ring, the request
+    /// log, and the connection log, ordered by timestamp (oldest first).
     pub fn recent(&self, n: usize) -> Vec<TraceEvent> {
         let mut out: Vec<TraceEvent> = Vec::new();
         for rec in self.engines.lock().unwrap().iter() {
             out.extend(rec.snapshot(n).into_iter().map(TraceEvent::Step));
         }
         out.extend(self.requests.lock().unwrap().iter().copied().map(TraceEvent::Request));
+        out.extend(self.conns.lock().unwrap().iter().copied().map(TraceEvent::Conn));
         out.sort_by_key(|e| e.t_us());
         if out.len() > n {
             out.drain(..out.len() - n);
@@ -467,7 +534,7 @@ impl TraceHub {
 pub fn step_to_json(ev: &StepEvent) -> Json {
     let phases = Phase::ALL
         .iter()
-        .filter(|p| !matches!(p, Phase::QueueWait | Phase::Prefill))
+        .filter(|p| p.is_step())
         .map(|p| (p.label().to_string(), Json::Num(ev.phase_us[p.index()] as f64)))
         .collect();
     let strategies = StrategyKind::ALL
@@ -525,6 +592,18 @@ pub fn request_to_json(ev: &RequestEvent) -> Json {
     ])
 }
 
+/// A connection event's JSONL object (`"type":"conn"`).
+pub fn conn_to_json(ev: &ConnEvent) -> Json {
+    Json::obj(vec![
+        ("type", Json::Str("conn".into())),
+        ("t_us", Json::Num(ev.t_us as f64)),
+        ("read_us", Json::Num(ev.read_us as f64)),
+        ("write_us", Json::Num(ev.write_us as f64)),
+        ("bytes_in", Json::Num(ev.bytes_in as f64)),
+        ("bytes_out", Json::Num(ev.bytes_out as f64)),
+    ])
+}
+
 /// Serialize events as JSONL (one compact JSON object per line).
 pub fn to_jsonl(events: &[TraceEvent]) -> String {
     let mut s = String::new();
@@ -532,6 +611,7 @@ pub fn to_jsonl(events: &[TraceEvent]) -> String {
         let j = match ev {
             TraceEvent::Step(e) => step_to_json(e),
             TraceEvent::Request(e) => request_to_json(e),
+            TraceEvent::Conn(e) => conn_to_json(e),
         };
         s.push_str(&j.to_string());
         s.push('\n');

@@ -5,7 +5,7 @@
 use anyhow::{anyhow, Context, Result};
 
 use crate::draft::StrategyKind;
-use crate::trace::{Phase, RequestEvent, StepEvent, TraceEvent};
+use crate::trace::{ConnEvent, Phase, RequestEvent, StepEvent, TraceEvent};
 use crate::util::json::Json;
 
 fn num(j: &Json, key: &str) -> u64 {
@@ -60,6 +60,13 @@ pub fn parse_line(line: &str) -> Result<TraceEvent> {
             tokens: num(&j, "tokens") as u32,
             calls: num(&j, "calls") as u32,
         })),
+        "conn" => Ok(TraceEvent::Conn(ConnEvent {
+            t_us: num(&j, "t_us"),
+            read_us: num(&j, "read_us"),
+            write_us: num(&j, "write_us"),
+            bytes_in: num(&j, "bytes_in"),
+            bytes_out: num(&j, "bytes_out"),
+        })),
         other => Err(anyhow!("unknown trace event type '{other}'")),
     }
 }
@@ -82,6 +89,8 @@ pub struct TraceSummary {
     pub steps: u64,
     /// request events folded in
     pub requests: u64,
+    /// connection events folded in
+    pub conns: u64,
     /// per-phase total microseconds, indexed by [`Phase::index`]
     pub phase_total_us: [u64; Phase::COUNT],
     /// events that contributed a non-zero span to each phase
@@ -146,6 +155,17 @@ impl TraceSummary {
                             .push(e.total_us.saturating_sub(e.ttft_us) / (e.tokens as u64 - 1));
                     }
                 }
+                TraceEvent::Conn(e) => {
+                    s.conns += 1;
+                    s.phase_total_us[Phase::ConnRead.index()] += e.read_us;
+                    s.phase_total_us[Phase::ConnWrite.index()] += e.write_us;
+                    if e.read_us > 0 {
+                        s.phase_hits[Phase::ConnRead.index()] += 1;
+                    }
+                    if e.write_us > 0 {
+                        s.phase_hits[Phase::ConnWrite.index()] += 1;
+                    }
+                }
             }
         }
         s.ttft_us.sort_unstable();
@@ -175,7 +195,7 @@ impl TraceSummary {
         let mut out = String::new();
         let step_total: u64 = Phase::ALL
             .iter()
-            .filter(|p| !matches!(p, Phase::QueueWait | Phase::Prefill))
+            .filter(|p| p.is_step())
             .map(|p| self.phase_total_us[p.index()])
             .sum();
         out.push_str(&format!(
@@ -189,7 +209,7 @@ impl TraceSummary {
         for p in Phase::ALL {
             let total = self.phase_total_us[p.index()];
             let hits = self.phase_hits[p.index()];
-            let share = if step_total > 0 && !matches!(p, Phase::QueueWait | Phase::Prefill) {
+            let share = if step_total > 0 && p.is_step() {
                 format!("{:.1}%", 100.0 * total as f64 / step_total as f64)
             } else {
                 "-".to_string()
@@ -261,14 +281,11 @@ pub fn chrome_trace(events: &[TraceEvent]) -> Json {
     for ev in events {
         match ev {
             TraceEvent::Step(e) => {
-                let total: u64 = Phase::ALL
-                    .iter()
-                    .filter(|p| !matches!(p, Phase::QueueWait | Phase::Prefill))
-                    .map(|p| e.phase_us[p.index()])
-                    .sum();
+                let total: u64 =
+                    Phase::ALL.iter().filter(|p| p.is_step()).map(|p| e.phase_us[p.index()]).sum();
                 let mut cursor = e.t_us.saturating_sub(total);
                 for p in Phase::ALL {
-                    if matches!(p, Phase::QueueWait | Phase::Prefill) {
+                    if !p.is_step() {
                         continue;
                     }
                     let dur = e.phase_us[p.index()];
@@ -288,6 +305,24 @@ pub fn chrome_trace(events: &[TraceEvent]) -> Json {
                     9999,
                     0,
                 ));
+            }
+            TraceEvent::Conn(e) => {
+                // read ends when the write begins; both land on the
+                // synthetic `connections` track (pid 9998)
+                let write_start = e.t_us.saturating_sub(e.write_us);
+                if e.read_us > 0 {
+                    arr.push(complete(
+                        "conn-read",
+                        "conn",
+                        write_start.saturating_sub(e.read_us),
+                        e.read_us,
+                        9998,
+                        0,
+                    ));
+                }
+                if e.write_us > 0 {
+                    arr.push(complete("conn-write", "conn", write_start, e.write_us, 9998, 0));
+                }
             }
         }
     }
@@ -367,6 +402,28 @@ mod tests {
         assert_eq!(ts[2] + durs[2], 1000);
         let bad = chrome_trace(&[]);
         assert_eq!(bad.as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn conn_events_fold_and_round_trip() {
+        let events = vec![TraceEvent::Conn(ConnEvent {
+            t_us: 500,
+            read_us: 40,
+            write_us: 60,
+            bytes_in: 120,
+            bytes_out: 333,
+        })];
+        let s = TraceSummary::from_jsonl(&to_jsonl(&events)).unwrap();
+        assert_eq!(s.conns, 1);
+        assert_eq!(s.phase_total_us[Phase::ConnRead.index()], 40);
+        assert_eq!(s.phase_total_us[Phase::ConnWrite.index()], 60);
+        // conn phases never dilute the step share column
+        assert!(s.render_table().contains("conn-read"));
+        let j = chrome_trace(&events);
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("ts").and_then(|t| t.as_f64()).unwrap() as u64, 400);
+        assert_eq!(arr[1].get("ts").and_then(|t| t.as_f64()).unwrap() as u64, 440);
     }
 
     #[test]

@@ -5,8 +5,9 @@
 use std::io::{BufReader, Read, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use ngrammys::config::{EngineConfig, Manifest, ServeConfig};
+use ngrammys::config::{EngineConfig, FrontEnd, Manifest, ServeConfig};
 use ngrammys::scheduler::{GenRequest, Scheduler, StrategyName};
 use ngrammys::server::{client, Server};
 use ngrammys::tokenizer::BpeTokenizer;
@@ -271,6 +272,219 @@ fn hardened_request_parsing_returns_4xx_json() {
     )
     .unwrap();
     assert_eq!(code, 200, "{body}");
+}
+
+/// Like [`raw_request`] but returning the FULL response — status line,
+/// headers and body — for byte-level front-end comparisons.
+fn raw_response(addr: &str, payload: &str) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.write_all(payload.as_bytes()).unwrap();
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let mut buf = String::new();
+    BufReader::new(stream).read_to_string(&mut buf).unwrap();
+    buf
+}
+
+/// Read one `<name> N` counter line out of a `/metrics` render.
+fn counter(metrics: &str, name: &str) -> u64 {
+    metrics
+        .lines()
+        .find_map(|l| l.strip_prefix(&format!("{name} ")))
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or(0)
+}
+
+/// Poll `/metrics` until `pred` passes or a 10s deadline expires;
+/// returns the render that satisfied it.
+fn wait_for_metrics(addr: &str, what: &str, pred: impl Fn(&str) -> bool) -> String {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let (_, m) = client::get(addr, "/metrics").unwrap();
+        if pred(&m) {
+            return m;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {what}; metrics:\n{m}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+#[test]
+fn reactor_and_threaded_front_ends_are_byte_identical() {
+    let m = manifest();
+    let tok = Arc::new(BpeTokenizer::load(&m.tokenizer_path).unwrap());
+    let run_against = |fe: FrontEnd| -> (Vec<String>, Vec<String>) {
+        let mut cfg = serve_cfg();
+        cfg.front_end = fe;
+        let sched = Arc::new(Scheduler::start(&m, "small", &cfg).unwrap());
+        let handle =
+            Server { scheduler: sched, tokenizer: tok.clone(), cfg }.spawn_handle().unwrap();
+        let addr = handle.addr.to_string();
+        // deterministic /generate fields (latency_ms varies per run)
+        let mut texts = Vec::new();
+        for p in ["Question: Tom has 3 apples.", "def scale(x, y):"] {
+            let (code, body) = client::post(
+                &addr,
+                "/generate",
+                &format!(r#"{{"prompt": "{p}", "max_tokens": 8}}"#),
+            )
+            .unwrap();
+            assert_eq!(code, 200, "{body}");
+            let j = Json::parse(&body).unwrap();
+            texts.push(j.req("text").unwrap().as_str().unwrap().to_string());
+            texts.push(j.req("tokens").unwrap().to_string());
+        }
+        // the raw hardening corpus: the FULL response — headers included —
+        // must come back byte-identical from both front-ends
+        let corpus = [
+            "POST /generate HTTP/1.1\r\nHost: x\r\n\r\n{\"prompt\": \"hi\"}",
+            "POST /generate HTTP/1.1\r\nContent-Length: 999999999999\r\n\r\n",
+            "POST /generate HTTP/1.1\r\nContent-Length: banana\r\n\r\n",
+            "POST /generate HTTP/1.1\r\nContent-Length: 50\r\n\r\n{\"a\":1}",
+            "\r\n\r\n",
+            "GET /nope HTTP/1.1\r\n\r\n",
+            "PUT /stats HTTP/1.1\r\nContent-Length: 0\r\n\r\n",
+            "GET /healthz HTTP/1.1\r\n\r\n",
+        ];
+        let raw: Vec<String> = corpus.iter().map(|p| raw_response(&addr, p)).collect();
+        handle.shutdown();
+        (texts, raw)
+    };
+    let (texts_r, raw_r) = run_against(FrontEnd::Reactor);
+    let (texts_t, raw_t) = run_against(FrontEnd::Threaded);
+    assert_eq!(texts_r, texts_t, "/generate output differs between front-ends");
+    assert_eq!(raw_r, raw_t, "raw responses differ between front-ends");
+}
+
+#[test]
+fn disconnect_mid_flight_cancels_and_is_visible_in_metrics() {
+    let m = manifest();
+    let cfg = serve_cfg(); // single worker, reactor front-end (default)
+    let sched = Arc::new(Scheduler::start(&m, "small", &cfg).unwrap());
+    let tok = Arc::new(BpeTokenizer::load(&m.tokenizer_path).unwrap());
+    let (addr, _h) =
+        Server { scheduler: sched, tokenizer: tok, cfg }.spawn().unwrap();
+    let addr = addr.to_string();
+
+    // occupy the single worker: four long generations serialize on it,
+    // which holds the queue busy while the victim below is cancelled
+    let blockers: Vec<_> = (0..4)
+        .map(|i| {
+            let a = addr.clone();
+            std::thread::spawn(move || {
+                client::post(
+                    &a,
+                    "/generate",
+                    &format!(
+                        r#"{{"prompt": "Question: Tom has {i} apples and 4 pens.", "max_tokens": 64}}"#
+                    ),
+                )
+                .unwrap()
+            })
+        })
+        .collect();
+    std::thread::sleep(Duration::from_millis(30));
+
+    // the victim: a valid request queued behind the blockers, whose
+    // client then vanishes without half-close (a real disconnect)
+    let body = r#"{"prompt": "def scale(x, y):", "max_tokens": 32}"#;
+    let mut victim = TcpStream::connect(&addr).unwrap();
+    victim
+        .write_all(
+            format!("POST /generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}", body.len())
+                .as_bytes(),
+        )
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(30)); // reactor dispatches it
+    drop(victim); // full close -> EOF on a Dispatched connection
+
+    // the reactor counts the disconnect and cancels the in-flight token;
+    // the worker then skips the dead request without decoding a step
+    wait_for_metrics(&addr, "disconnect + cancellation", |m| {
+        counter(m, "ngrammys_disconnects") >= 1 && counter(m, "ngrammys_requests_cancelled") >= 1
+    });
+
+    // co-resident requests are untouched by the cancellation
+    for b in blockers {
+        let (code, body) = b.join().unwrap();
+        assert_eq!(code, 200, "blocker failed after a disconnect: {body}");
+    }
+    let m = wait_for_metrics(&addr, "blockers to complete", |m| {
+        counter(m, "ngrammys_requests_completed") >= 4
+    });
+    assert!(counter(&m, "ngrammys_connections_total") >= 5, "{m}");
+}
+
+#[test]
+fn slow_and_idle_connections_do_not_stall_other_streams() {
+    let m = manifest();
+    let cfg = serve_cfg(); // reactor front-end (default)
+    let sched = Arc::new(Scheduler::start(&m, "small", &cfg).unwrap());
+    let tok = Arc::new(BpeTokenizer::load(&m.tokenizer_path).unwrap());
+    let (addr, _h) =
+        Server { scheduler: sched, tokenizer: tok, cfg }.spawn().unwrap();
+    let addr = addr.to_string();
+
+    // park connections in every lazy state the event loop must tolerate:
+    // connected-but-silent, half a request line, and a full request whose
+    // client never reads the response
+    let idle = TcpStream::connect(&addr).unwrap();
+    let mut dribble = TcpStream::connect(&addr).unwrap();
+    dribble.write_all(b"POST /gen").unwrap();
+    let deaf_body = r#"{"prompt": "User: hi", "max_tokens": 4}"#;
+    let mut deaf = TcpStream::connect(&addr).unwrap();
+    deaf.write_all(
+        format!("POST /generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{deaf_body}", deaf_body.len())
+            .as_bytes(),
+    )
+    .unwrap();
+
+    // co-resident streams complete promptly while all three sit there
+    for _ in 0..3 {
+        let (code, body) = client::post(
+            &addr,
+            "/generate",
+            r#"{"prompt": "Question: Tom has 3 apples.", "max_tokens": 8}"#,
+        )
+        .unwrap();
+        assert_eq!(code, 200, "a parked connection stalled a live stream: {body}");
+    }
+    let (code, _) = client::get(&addr, "/healthz").unwrap();
+    assert_eq!(code, 200);
+    drop((idle, dribble, deaf));
+}
+
+#[test]
+fn graceful_shutdown_drains_in_flight_requests() {
+    let m = manifest();
+    let cfg = serve_cfg();
+    let sched = Arc::new(Scheduler::start(&m, "small", &cfg).unwrap());
+    let tok = Arc::new(BpeTokenizer::load(&m.tokenizer_path).unwrap());
+    let handle =
+        Server { scheduler: sched.clone(), tokenizer: tok, cfg }.spawn_handle().unwrap();
+    let addr = handle.addr.to_string();
+
+    let c_addr = addr.clone();
+    let in_flight = std::thread::spawn(move || {
+        client::post(
+            &c_addr,
+            "/generate",
+            r#"{"prompt": "Question: Tom has 3 apples.", "max_tokens": 32}"#,
+        )
+        .unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(30)); // request reaches the engine
+    handle.shutdown(); // stop accepting, drain, join
+
+    // the in-flight response was delivered, not severed
+    let (code, body) = in_flight.join().unwrap();
+    assert_eq!(code, 200, "in-flight request dropped during shutdown: {body}");
+    // the listener is gone...
+    assert!(TcpStream::connect(&addr).is_err(), "listener still accepting after shutdown");
+    // ...and the server released its scheduler handle, proving the drain
+    // actually completed (otherwise the Arc still has two owners)
+    let sched = Arc::try_unwrap(sched)
+        .unwrap_or_else(|_| panic!("server still holds the scheduler after shutdown"));
+    sched.shutdown();
 }
 
 #[test]
