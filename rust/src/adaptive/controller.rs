@@ -11,7 +11,7 @@ use crate::draft::{DraftBatch, DraftStrategy, StrategyKind};
 use crate::scheduler::StrategyName;
 use crate::tokenizer::TokenId;
 
-use super::estimator::{ewma, AcceptanceEstimator, KindStats};
+use super::estimator::{ewma, AcceptanceEstimator, KindStats, WindowedAcceptance};
 use super::{AdaptiveConfig, StepFeedback};
 
 /// One bandit arm: a strategy plus its running value estimate.
@@ -94,6 +94,10 @@ pub struct SeqController {
     /// fresh request still boots from fleet-wide knowledge (empty =
     /// unseeded, the seed behavior)
     seeds: Vec<ArmPrior>,
+    /// change-point detector over per-step acceptance rates: a hard
+    /// regime shift (EWMAs too slow to notice) restarts the bandit's pull
+    /// counts so exploration re-opens (see [`Self::observe`])
+    window: WindowedAcceptance,
 }
 
 impl SeqController {
@@ -131,8 +135,14 @@ impl SeqController {
             ewma_depth: 1.0,
             last_conf: Vec::new(),
             seeds: Vec::new(),
+            window: WindowedAcceptance::new(Self::REGIME_SHIFT_THRESHOLD),
         }
     }
+
+    /// Acceptance-rate swing (over [`WindowedAcceptance`]'s half-window
+    /// means) that counts as a regime shift: half the speculation value
+    /// appearing or vanishing.
+    pub const REGIME_SHIFT_THRESHOLD: f64 = 0.5;
 
     /// Reference call shape the seeded arm values are priced at: every
     /// prior divides the same simulated verify cost, so seeding fixes the
@@ -300,6 +310,25 @@ impl SeqController {
             self.ewma_depth = ewma(self.ewma_depth, (fb.row + 1) as f64, a, self.steps);
         }
         self.steps += 1;
+
+        // Regime shift: the windowed detector saw the per-step acceptance
+        // rate flip hard (the EWMAs above only drift there). Restart the
+        // bandit — zero every arm's pull count so the UCB bonus is
+        // infinite again and each arm gets re-pulled under the NEW regime
+        // (its first fresh sample re-initializes the value EWMAs, see
+        // `estimator::ewma`). Lossless: re-exploring only costs speed.
+        let rate = (fb.accepted as f64 / fb.w.max(1) as f64).min(1.0);
+        if self.window.observe(rate) {
+            for arm in &mut self.arms {
+                arm.pulls = 0;
+            }
+        }
+    }
+
+    /// Acceptance-regime change-points detected so far (operator-facing;
+    /// each one restarted the bandit's exploration).
+    pub fn regime_shifts(&self) -> u64 {
+        self.window.regime_shifts()
     }
 
     /// Tree-mode width planning: how many candidate rows to PROPOSE for a
@@ -390,6 +419,7 @@ impl SeqController {
         self.ewma_hit = 0.0;
         self.ewma_depth = 1.0;
         self.last_conf.clear();
+        self.window.reset();
         self.apply_seeds();
     }
 }
@@ -606,6 +636,40 @@ mod tests {
         }
         c.plan(10, 100, &SHAPES, 10, 10);
         assert_eq!(c.cur, 0, "live feedback must overturn a stale prior");
+    }
+
+    #[test]
+    fn hard_regime_flip_reopens_the_bandit_within_the_window() {
+        let mut c = ctl(2);
+        // arm 0 pays richly: the bandit converges on it and stops
+        // exploring arm 1 (its UCB bonus alone cannot catch up)
+        for _ in 0..30 {
+            c.plan(10, 100, &SHAPES, 10, 10);
+            let acc = if c.cur == 0 { 8 } else { 0 };
+            feed(&mut c, acc, 10, 10);
+        }
+        c.plan(10, 100, &SHAPES, 10, 10);
+        assert_eq!(c.cur, 0, "bandit must have converged before the flip");
+        assert_eq!(c.regime_shifts(), 0, "steady regime must not false-fire");
+        // hard flip: acceptance collapses to zero for everything
+        for _ in 0..WindowedAcceptance::WINDOW {
+            c.plan(10, 100, &SHAPES, 10, 10);
+            feed(&mut c, 0, 10, 10);
+        }
+        assert_eq!(
+            c.regime_shifts(),
+            1,
+            "a hard acceptance flip must be detected within one window"
+        );
+        // and the bandit actually re-opened: the abandoned arm is
+        // re-pulled within a couple of steps (infinite UCB bonus again)
+        let mut repulled = false;
+        for _ in 0..4 {
+            c.plan(10, 100, &SHAPES, 10, 10);
+            repulled |= c.cur == 1;
+            feed(&mut c, 0, 10, 10);
+        }
+        assert!(repulled, "regime shift must re-open the abandoned arm");
     }
 
     #[test]

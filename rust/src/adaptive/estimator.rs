@@ -102,6 +102,76 @@ impl AcceptanceEstimator {
     }
 }
 
+/// Windowed, change-point-aware acceptance tracker — the regime-shift
+/// companion to the EWMAs above. An EWMA with small `alpha` converges but
+/// then takes dozens of steps to notice that a stream's character flipped
+/// (a chat request that switches to pasting code mid-session); this keeps
+/// the last [`Self::WINDOW`] per-step acceptance rates verbatim and flags
+/// a change-point when the window's two halves disagree by at least the
+/// threshold. The controller reacts by re-opening exploration
+/// ([`super::SeqController`] caps every arm's pull count so the UCB
+/// bonuses dominate again), which is lossless — re-exploring can only
+/// cost speed, never correctness.
+#[derive(Debug, Clone)]
+pub struct WindowedAcceptance {
+    window: Vec<f64>,
+    threshold: f64,
+    shifts: u64,
+}
+
+impl WindowedAcceptance {
+    /// Samples held (and compared, half against half) per change-point
+    /// test. Small enough to re-trigger exploration within ~one warmup's
+    /// worth of steps after a hard flip.
+    pub const WINDOW: usize = 16;
+
+    /// A tracker that flags when the mean acceptance rate of the newer
+    /// half of the window departs from the older half by at least
+    /// `threshold` (clamped to [0.05, 1]; acceptance rates live in
+    /// [0, 1], so 0.5 means "half the speculation value appeared or
+    /// vanished").
+    pub fn new(threshold: f64) -> Self {
+        WindowedAcceptance {
+            window: Vec::with_capacity(Self::WINDOW),
+            threshold: threshold.clamp(0.05, 1.0),
+            shifts: 0,
+        }
+    }
+
+    /// Record one step's acceptance rate (accepted / planned depth, any
+    /// [0, 1] signal). Returns true when a change-point is detected; the
+    /// window is cleared so one regime shift fires exactly once.
+    pub fn observe(&mut self, rate: f64) -> bool {
+        if self.window.len() == Self::WINDOW {
+            self.window.remove(0);
+        }
+        self.window.push(rate.clamp(0.0, 1.0));
+        if self.window.len() < Self::WINDOW {
+            return false;
+        }
+        let half = Self::WINDOW / 2;
+        let old: f64 = self.window[..half].iter().sum::<f64>() / half as f64;
+        let new: f64 = self.window[half..].iter().sum::<f64>() / half as f64;
+        if (new - old).abs() >= self.threshold {
+            self.window.clear();
+            self.shifts += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Change-points detected over this tracker's lifetime.
+    pub fn regime_shifts(&self) -> u64 {
+        self.shifts
+    }
+
+    /// Clear the window (between requests); the lifetime shift count is
+    /// kept for reporting.
+    pub fn reset(&mut self) {
+        self.window.clear();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,5 +242,62 @@ mod tests {
         e.observe(&batch(&[StrategyKind::ContextNgram]), 0, 3);
         e.reset();
         assert!(e.active_kinds().is_empty());
+    }
+
+    #[test]
+    fn steady_acceptance_never_flags_a_change_point() {
+        let mut w = WindowedAcceptance::new(0.4);
+        for i in 0..100 {
+            // mild noise around 0.7 — well under the threshold
+            let rate = 0.7 + if i % 2 == 0 { 0.05 } else { -0.05 };
+            assert!(!w.observe(rate), "steady regime flagged at step {i}");
+        }
+        assert_eq!(w.regime_shifts(), 0);
+    }
+
+    #[test]
+    fn hard_flip_flags_within_one_window() {
+        let mut w = WindowedAcceptance::new(0.4);
+        for _ in 0..WindowedAcceptance::WINDOW {
+            assert!(!w.observe(0.9));
+        }
+        // regime flips hard: 0.9 -> 0.0 acceptance
+        let mut fired_at = None;
+        for i in 0..WindowedAcceptance::WINDOW {
+            if w.observe(0.0) {
+                fired_at = Some(i);
+                break;
+            }
+        }
+        let at = fired_at.expect("hard flip must be detected");
+        assert!(
+            at < WindowedAcceptance::WINDOW,
+            "detection must land within one window, got {at}"
+        );
+        assert_eq!(w.regime_shifts(), 1);
+        // the window was cleared: the new regime is now the baseline and
+        // does not re-fire
+        for _ in 0..WindowedAcceptance::WINDOW * 2 {
+            assert!(!w.observe(0.0));
+        }
+        assert_eq!(w.regime_shifts(), 1);
+    }
+
+    #[test]
+    fn windowed_reset_keeps_lifetime_shift_count() {
+        let mut w = WindowedAcceptance::new(0.4);
+        for _ in 0..WindowedAcceptance::WINDOW {
+            w.observe(1.0);
+        }
+        for _ in 0..WindowedAcceptance::WINDOW {
+            if w.observe(0.0) {
+                break;
+            }
+        }
+        assert_eq!(w.regime_shifts(), 1);
+        w.reset();
+        assert_eq!(w.regime_shifts(), 1);
+        // a fresh window must fill completely before testing again
+        assert!(!w.observe(0.9));
     }
 }

@@ -31,14 +31,14 @@ pub mod controller;
 pub mod estimator;
 
 pub use controller::{ArmPrior, ArmReport, SeqController};
-pub use estimator::AcceptanceEstimator;
+pub use estimator::{AcceptanceEstimator, WindowedAcceptance};
 
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use crate::config::SessionCacheConfig;
 use crate::costmodel::CostModel;
-use crate::draft::{DraftBatch, NgramTables};
+use crate::draft::{DraftBatch, NgramTables, SharedDraftStore};
 use crate::metrics::Metrics;
 use crate::scheduler::{make_strategy_with_cache, strategy_prior_tpc, StrategyName};
 use crate::tokenizer::TokenId;
@@ -161,6 +161,66 @@ pub fn controller_for_seeded(
     c
 }
 
+/// Task-class arm priors from the shared store's fingerprint record: like
+/// [`fleet_arm_priors`] but scoped to one prompt fingerprint, so a
+/// chat-shaped request seeds from chat history instead of whatever the
+/// rest of the fleet is serving. Same shrink discipline as the admission
+/// prior ([`crate::scheduler::strategy_prior_tpc`]): thin evidence is
+/// pulled toward the greedy baseline of 1.0. Empty when the store has no
+/// record for this fingerprint.
+pub fn fingerprint_arm_priors(store: &SharedDraftStore, fp: u64) -> Vec<ArmPrior> {
+    let Some(stats) = store.fingerprint_stats(fp) else {
+        return Vec::new();
+    };
+    DEFAULT_ARMS
+        .iter()
+        .filter_map(|&name| {
+            let mut wins = 0u64;
+            let mut accepted = 0u64;
+            for k in name.kinds() {
+                let (w, a) = stats[k.index()];
+                wins += w;
+                accepted += a;
+            }
+            if wins == 0 {
+                return None;
+            }
+            let mean = accepted as f64 / wins as f64;
+            let shrink = wins as f64
+                / (wins as f64 + crate::scheduler::admission::PRIOR_SHRINK_CALLS);
+            Some(ArmPrior {
+                name,
+                tokens_per_call: 1.0 + mean * shrink,
+                pulls: wins.min(MAX_SEED_PULLS),
+            })
+        })
+        .collect()
+}
+
+/// [`controller_for`] seeded from the most specific history available:
+/// the prompt's task-class record in the shared store when it has one,
+/// else the fleet-wide counters ([`controller_for_seeded`]'s behavior).
+/// With no store attached this IS `controller_for_seeded`.
+pub fn controller_for_fingerprint(
+    tables: &Arc<NgramTables>,
+    q: usize,
+    cache: &SessionCacheConfig,
+    analog: &str,
+    metrics: &Metrics,
+    store: Option<&SharedDraftStore>,
+    prompt: &[TokenId],
+) -> SeqController {
+    if let Some(store) = store {
+        let priors = fingerprint_arm_priors(store, crate::draft::fingerprint(prompt));
+        if !priors.is_empty() {
+            let mut c = controller_for(tables, q, cache, analog);
+            c.seed_arms(&priors);
+            return c;
+        }
+    }
+    controller_for_seeded(tables, q, cache, analog, metrics)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,5 +255,34 @@ mod tests {
         assert!(priors.iter().all(|p| p.name != StrategyName::ExtBigram));
         // Mixed spans context-ngram kinds, so it inherits that evidence
         assert!(priors.iter().any(|p| p.name == StrategyName::Mixed));
+    }
+
+    #[test]
+    fn fingerprint_priors_scope_to_task_class() {
+        let store = SharedDraftStore::new(1);
+        let chat = crate::draft::fingerprint(&[1, 2, 3, 4]);
+        let code = crate::draft::fingerprint(&[9, 9, 9, 9]);
+        // chat traffic accepts deep session-cache chains; code traffic
+        // wins shallow context-ngram rows
+        for _ in 0..10 {
+            store.record_step(chat, StrategyKind::SessionCache, 5);
+            store.record_step(code, StrategyKind::ContextNgram, 1);
+        }
+        let chat_priors = fingerprint_arm_priors(&store, chat);
+        let session = chat_priors
+            .iter()
+            .find(|p| p.name == StrategyName::Session)
+            .expect("chat class seeds the session arm");
+        assert_eq!(session.pulls, MAX_SEED_PULLS);
+        assert!(session.tokens_per_call > 4.0);
+        assert!(
+            chat_priors.iter().all(|p| p.name != StrategyName::Context),
+            "chat class must not inherit code-class evidence"
+        );
+        let code_priors = fingerprint_arm_priors(&store, code);
+        assert!(code_priors.iter().any(|p| p.name == StrategyName::Context));
+        assert!(code_priors.iter().all(|p| p.name != StrategyName::Session));
+        // unknown class: no priors at all (caller falls back to fleet)
+        assert!(fingerprint_arm_priors(&store, 0xDEAD).is_empty());
     }
 }

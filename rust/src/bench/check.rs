@@ -28,9 +28,9 @@
 //! would be wrong on every other machine). Wall-clock entries are
 //! ADVISORY: a recorded number that regresses prints a warning but never
 //! fails the gate — runner-to-runner variance would make it flaky.
-//! `--strict-baseline` turns the bootstrap warning into a FAILURE for
-//! every still-null entry EXCEPT wall-clock ones — the knob that keeps
-//! deterministic benches from riding the bootstrap path forever.
+//! `--strict-baseline` fails the gate for every still-null entry EXCEPT
+//! wall-clock ones — the knob that keeps deterministic benches from
+//! riding the bootstrap path forever (the rolling CI gate passes it).
 //! `--update` preserves the marker.
 
 use std::path::Path;
@@ -73,24 +73,6 @@ pub fn verdict(baseline_tps: Option<f64>, current_tps: f64, tolerance: f64) -> V
     }
 }
 
-/// Loud multi-line warning listing every baseline entry that is still
-/// `null`: those benches run green no matter how slow they get, so the
-/// gap should be visible in every CI log until someone commits numbers.
-/// Returns `None` when nothing bootstrapped.
-pub fn bootstrap_warning(names: &[String]) -> Option<String> {
-    if names.is_empty() {
-        return None;
-    }
-    Some(format!(
-        "!!! WARNING: {n} baseline entr{ies} unset (null) — NOT regression-gated: {list}\n\
-         !!! These benches pass no matter how slow they get. Commit real numbers with\n\
-         !!! `ngrammys ci-bench-check --update` once their performance is intentional.",
-        n = names.len(),
-        ies = if names.len() == 1 { "y is" } else { "ies are" },
-        list = names.join(", ")
-    ))
-}
-
 /// Run the gate: read `baseline_path`, find each gated bench's
 /// `BENCH_<name>.json` under `bench_dir`, compare, print a table, and
 /// fail if any bench regressed past `tolerance` (or is missing its
@@ -120,7 +102,6 @@ pub fn run(
 
     let mut updated = Vec::new();
     let mut failures = Vec::new();
-    let mut bootstraps = Vec::new();
     let mut strict_nulls = Vec::new();
     for (name, entry) in entries {
         let wall_clock =
@@ -156,13 +137,11 @@ pub fn run(
             // worth a line in the log, never a red build
             Verdict::Regressed { .. } if wall_clock => {}
             Verdict::Regressed { .. } => failures.push(name.clone()),
-            Verdict::Bootstrap => {
-                bootstraps.push(name.clone());
-                if !wall_clock {
-                    strict_nulls.push(name.clone());
-                }
-            }
-            Verdict::Pass => {}
+            // still-null entries print as "bootstrap" in the table above;
+            // `--strict-baseline` (the rolling CI gate) is what keeps
+            // non-wall-clock ones from riding that path forever
+            Verdict::Bootstrap if !wall_clock => strict_nulls.push(name.clone()),
+            Verdict::Bootstrap | Verdict::Pass => {}
         }
         // --update must round-trip the wall_clock marker, or one refresh
         // would silently promote a machine-dependent number into the gate
@@ -171,9 +150,6 @@ pub fn run(
             fields.push(("wall_clock", Json::Bool(true)));
         }
         updated.push((name.clone(), Json::obj(fields)));
-    }
-    if let Some(warning) = bootstrap_warning(&bootstraps) {
-        println!("\n{warning}");
     }
 
     // the gate must be symmetric: a summary the baseline does not know
@@ -265,17 +241,6 @@ mod tests {
     fn verdict_bootstraps_on_missing_baseline() {
         assert_eq!(verdict(None, 123.0, 0.10), Verdict::Bootstrap);
         assert_eq!(verdict(Some(0.0), 123.0, 0.10), Verdict::Bootstrap);
-    }
-
-    #[test]
-    fn bootstrap_warning_lists_every_null_entry() {
-        assert_eq!(bootstrap_warning(&[]), None);
-        let w = bootstrap_warning(&["pool".to_string(), "draft".to_string()]).unwrap();
-        assert!(w.contains("WARNING"), "must be loud: {w}");
-        assert!(w.contains("pool") && w.contains("draft"), "must list every entry: {w}");
-        assert!(w.contains("--update"), "must say how to fix it: {w}");
-        let one = bootstrap_warning(&["pool".to_string()]).unwrap();
-        assert!(one.contains("1 baseline entry is"), "singular form: {one}");
     }
 
     #[test]

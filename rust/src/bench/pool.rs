@@ -10,18 +10,26 @@
 //! unless the N-engine configuration at least matches 1-engine on the
 //! bursty workload — the PR's acceptance bar — and byte-identity across
 //! the two configurations is asserted on every stream.
+//!
+//! A second section compares private per-request draft caches against the
+//! fleet-shared draft store (`--shared-draft fleet`) on SAME-task traffic
+//! split across two engines, and FAILS unless shared mode strictly beats
+//! private on speculative tokens/call at byte-identical streams.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, SessionCacheConfig};
 use crate::costmodel::CostModel;
-use crate::engine::{AutoBudget, BatchedEngine, SeqId};
+use crate::draft::{DraftStrategy, SharedDraftStore, SharedDraftStrategy};
+use crate::engine::{AutoBudget, BatchedEngine, SeqId, SpecDecoder};
 use crate::scheduler::pool::STARVATION_DEFERRALS;
 use crate::scheduler::{
-    make_strategy, request_score, AdmissionQueue, DepthClass, EngineScaleConfig, EngineScaler,
-    StrategyName,
+    make_strategy, make_strategy_with_cache, request_score, AdmissionQueue, DepthClass,
+    EngineScaleConfig, EngineScaler, StrategyName,
 };
 use crate::tokenizer::TokenId;
 use crate::trace::report::TraceSummary;
@@ -200,6 +208,9 @@ pub fn run(
         one.sim_tps()
     );
 
+    // ---- cross-engine fleet sharing (`--shared-draft fleet`)
+    let shared_json = shared_draft_section(ctx, max_new)?;
+
     super::write_json(
         &format!("pool_{}", ctx.model),
         &Json::obj(vec![
@@ -209,6 +220,7 @@ pub fn run(
             ("n_requests", Json::Num(reqs.len() as f64)),
             ("engine_cap", Json::Num(engine_cap as f64)),
             ("rows", Json::Arr(rows)),
+            ("shared_draft", shared_json),
         ]),
     )?;
     let steps: Vec<TraceEvent> =
@@ -408,4 +420,121 @@ fn drive(
     out.streams = streams;
     out.steps += engines.iter().map(|e| e.eng.steps_done()).sum::<u64>();
     Ok(out)
+}
+
+/// Engines in the cross-engine sharing comparison. Requests alternate
+/// between them, so a fleet-store hit on one engine almost always reads a
+/// chain the OTHER engine's traffic published.
+const SHARED_ENGINES: usize = 2;
+
+/// How many times the same-task prompt set is replayed. Repetition is the
+/// regime the store exists for: the first pass seeds the chains, later
+/// passes harvest them.
+const SHARED_REPS: usize = 3;
+
+/// Serve `reqs` sequentially, round-robined across [`SHARED_ENGINES`]
+/// per-engine hit sinks. Every request drafts with a FRESH session cache
+/// (no private cross-request memory); with a store attached the strategy
+/// is additionally wrapped over the fleet store, which is then the ONLY
+/// cross-request channel. Returns (streams, decode tokens, verify calls).
+fn shared_draft_run(
+    ctx: &super::BenchCtx,
+    reqs: &[(Vec<TokenId>, EngineConfig)],
+    store: Option<&Arc<SharedDraftStore>>,
+    sinks: &[Arc<AtomicU64>],
+) -> Result<(Vec<Vec<TokenId>>, usize, usize)> {
+    let cache = SessionCacheConfig::default();
+    let mut streams = Vec::new();
+    let (mut tokens, mut calls) = (0usize, 0usize);
+    for (i, (prompt, engine)) in reqs.iter().enumerate() {
+        let inner =
+            make_strategy_with_cache(StrategyName::Session, &ctx.tables, engine.q, &cache);
+        let strategy: Box<dyn DraftStrategy> = match store {
+            Some(store) => Box::new(SharedDraftStrategy::new(
+                inner,
+                store.clone(),
+                Some(sinks[i % sinks.len()].clone()),
+            )),
+            None => inner,
+        };
+        let mut dec = SpecDecoder::new(&ctx.runtime, strategy, engine.clone());
+        let r = dec.generate(prompt)?;
+        tokens += r.tokens.len().saturating_sub(1);
+        calls += r.calls;
+        streams.push(r.tokens);
+        // dec drops here: the shared wrapper's Drop publishes its tail,
+        // so the NEXT request sees this one's accepted tokens
+    }
+    Ok((streams, tokens, calls))
+}
+
+/// The cross-engine acceptance gate for `--shared-draft fleet`: same-task
+/// traffic split across [`SHARED_ENGINES`] engines, served once with
+/// private per-request caches and once over one fleet
+/// [`SharedDraftStore`]. FAILS unless fleet mode strictly beats private
+/// on tokens/call, every engine proposed shared rows, and the streams are
+/// byte-identical (shared chains may only change which candidates are
+/// proposed, never the accepted greedy stream).
+fn shared_draft_section(ctx: &super::BenchCtx, max_new: usize) -> Result<Json> {
+    let task = TASKS[0];
+    let base = ctx.prompts(task, 3, 96)?;
+    let mut reqs: Vec<(Vec<TokenId>, EngineConfig)> = Vec::new();
+    for _ in 0..SHARED_REPS {
+        for p in &base {
+            reqs.push((
+                p.tokens.clone(),
+                EngineConfig { k: 10, w: 10, q: 1, max_new_tokens: max_new },
+            ));
+        }
+    }
+    println!(
+        "\n== cross-engine shared draft: private vs fleet (task '{task}', {} prompts x \
+         {SHARED_REPS} reps over {SHARED_ENGINES} engines) ==",
+        base.len(),
+    );
+    let sinks: Vec<Arc<AtomicU64>> =
+        (0..SHARED_ENGINES).map(|_| Arc::new(AtomicU64::new(0))).collect();
+    let (priv_streams, priv_tokens, priv_calls) = shared_draft_run(ctx, &reqs, None, &sinks)?;
+    let store = Arc::new(SharedDraftStore::new(SHARED_ENGINES));
+    let (fleet_streams, fleet_tokens, fleet_calls) =
+        shared_draft_run(ctx, &reqs, Some(&store), &sinks)?;
+    ensure!(
+        priv_streams == fleet_streams,
+        "fleet-shared draft store changed an output stream — shared chains may only change \
+         which candidates are proposed, never the accepted greedy stream"
+    );
+    let priv_tpc = priv_tokens as f64 / priv_calls.max(1) as f64;
+    let fleet_tpc = fleet_tokens as f64 / fleet_calls.max(1) as f64;
+    let hits: Vec<u64> = sinks.iter().map(|s| s.load(Ordering::Relaxed)).collect();
+    println!("{:<10} {:>7} {:>13}", "config", "calls", "spec tok/call");
+    println!("{:<10} {:>7} {:>13.2}", "private", priv_calls, priv_tpc);
+    println!("{:<10} {:>7} {:>13.2}", "fleet", fleet_calls, fleet_tpc);
+    println!(
+        "fleet store: hits {} (per-engine {}), misses {}, publishes {}",
+        store.hits(),
+        hits.iter().map(|h| h.to_string()).collect::<Vec<_>>().join("/"),
+        store.misses(),
+        store.publishes(),
+    );
+    ensure!(
+        fleet_tpc > priv_tpc,
+        "fleet-shared draft store must STRICTLY beat private caches on same-task multi-engine \
+         traffic: fleet {fleet_tpc:.3} tokens/call vs private {priv_tpc:.3}"
+    );
+    ensure!(
+        hits.iter().all(|&h| h > 0),
+        "every engine must propose rows from the fleet store (per-engine hit-through {hits:?})"
+    );
+    ensure!(store.publishes() > 0, "fleet store saw no delta publishes");
+    Ok(Json::obj(vec![
+        ("task", Json::Str(task.to_string())),
+        ("private_tokens_per_call", Json::Num(priv_tpc)),
+        ("fleet_tokens_per_call", Json::Num(fleet_tpc)),
+        ("private_calls", Json::Num(priv_calls as f64)),
+        ("fleet_calls", Json::Num(fleet_calls as f64)),
+        ("store_hits", Json::Num(store.hits() as f64)),
+        ("store_misses", Json::Num(store.misses() as f64)),
+        ("store_publishes", Json::Num(store.publishes() as f64)),
+        ("engine_hits", Json::Arr(hits.iter().map(|&h| Json::Num(h as f64)).collect())),
+    ]))
 }

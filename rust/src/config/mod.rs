@@ -354,6 +354,40 @@ impl Dispatch {
     }
 }
 
+/// Whether pool engines share one fleet draft store (`--shared-draft`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SharedDraft {
+    /// Every engine keeps private draft state only — the pre-fleet
+    /// behavior and the default.
+    Off,
+    /// All pool engines attach to one sharded
+    /// [`crate::draft::SharedDraftStore`]: accepted tokens publish batched
+    /// deltas fleet-wide, propose paths fill spare rows from shared
+    /// chains, and adaptive requests seed their bandit from
+    /// prompt-fingerprint priors. Output streams are byte-identical to
+    /// `Off` (shared chains only change which candidates are proposed).
+    Fleet,
+}
+
+impl SharedDraft {
+    /// Parse a `--shared-draft` value.
+    pub fn parse(s: &str) -> Result<SharedDraft> {
+        match s {
+            "off" => Ok(SharedDraft::Off),
+            "fleet" => Ok(SharedDraft::Fleet),
+            _ => Err(anyhow!("unknown shared-draft mode '{s}' (have: off, fleet)")),
+        }
+    }
+
+    /// The CLI name (`off` / `fleet`).
+    pub fn label(self) -> &'static str {
+        match self {
+            SharedDraft::Off => "off",
+            SharedDraft::Fleet => "fleet",
+        }
+    }
+}
+
 /// Serving-layer settings.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -441,6 +475,14 @@ pub struct ServeConfig {
     /// and verify the whole tree in one masked call. Output streams are
     /// byte-identical to flat-row mode either way.
     pub tree: bool,
+    /// Fleet-shared draft store (`--shared-draft off|fleet`): whether all
+    /// pool engines share one seqlock-snapshotted n-gram chain store plus
+    /// prompt-fingerprint adaptive priors ([`crate::draft::shared`]).
+    pub shared_draft: SharedDraft,
+    /// Shard count for the fleet store (`--shared-draft-shards N`,
+    /// floored at 1): more shards = less writer serialization; readers
+    /// are lock-free at any count.
+    pub shared_draft_shards: usize,
 }
 
 impl Default for ServeConfig {
@@ -465,6 +507,8 @@ impl Default for ServeConfig {
             kv_page_size: 0,
             kv_pages: 0,
             tree: false,
+            shared_draft: SharedDraft::Off,
+            shared_draft_shards: 8,
         }
     }
 }

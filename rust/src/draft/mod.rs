@@ -17,6 +17,7 @@ pub mod jacobi;
 pub mod mixed;
 pub mod model_ngram;
 pub mod session_cache;
+pub mod shared;
 pub mod tables;
 pub mod tree;
 
@@ -26,6 +27,7 @@ pub use jacobi::JacobiDraft;
 pub use mixed::MixedStrategy;
 pub use model_ngram::{ExtendedBigram, ModelBigram, ModelUnigram};
 pub use session_cache::SessionNgramCache;
+pub use shared::{fingerprint, SharedDraftStore, SharedDraftStrategy};
 pub use tables::NgramTables;
 pub use tree::DraftTree;
 
@@ -48,6 +50,8 @@ pub enum StrategyKind {
     Jacobi,
     /// online session n-gram cache rows (extension beyond the paper)
     SessionCache,
+    /// fleet-shared draft store rows ([`shared::SharedDraftStore`])
+    SharedFleet,
     /// row k=0 baseline: greedy continuation column only (no draft)
     Empty,
 }
@@ -62,10 +66,11 @@ impl StrategyKind {
         StrategyKind::ExtendedBigram,
         StrategyKind::Jacobi,
         StrategyKind::SessionCache,
+        StrategyKind::SharedFleet,
         StrategyKind::Empty,
     ];
     /// Number of variants (sizes the array-backed statistics).
-    pub const COUNT: usize = 7;
+    pub const COUNT: usize = 8;
 
     /// Dense index into `ALL` (used for array-backed per-kind statistics).
     /// `ALL` lists the variants in declaration order, so the discriminant
@@ -83,6 +88,7 @@ impl StrategyKind {
             StrategyKind::ExtendedBigram => "ext-bigram",
             StrategyKind::Jacobi => "jacobi",
             StrategyKind::SessionCache => "session-cache",
+            StrategyKind::SharedFleet => "shared-fleet",
             StrategyKind::Empty => "empty",
         }
     }

@@ -1,0 +1,751 @@
+//! Fleet-shared draft store: one sharded, read-mostly n-gram chain store
+//! shared by every engine in the serving pool, so hot continuations are
+//! learned ONCE fleet-wide instead of once per engine (ANPD-style shared
+//! online draft state; ROADMAP "fleet-shared draft state + per-task
+//! priors").
+//!
+//! Layout: `shards` independent shards, each a fixed-capacity
+//! open-addressed table of [`Entry`] slots. Every slot is a single-writer
+//! **seqlock** (the `trace/` ring discipline): the slot's version counter
+//! is odd while a writer is mutating the entry and even once published, so
+//! a reader copies optimistically, re-checks the counter, and discards any
+//! torn copy. Engine read paths ([`SharedDraftStore::find`], called from
+//! [`SharedDraftStrategy::propose`]) therefore take **no lock and perform
+//! no heap allocation** — an entry is a fixed-size `Copy` value read onto
+//! the stack. Writers are serialized per shard by a mutex that readers
+//! never touch, and arrive only in **batched deltas**: the wrapper
+//! strategy buffers accepted tokens and publishes a span at a time
+//! ([`SharedDraftStore::publish`]), off the per-step propose path.
+//!
+//! Two key spaces share the table, mirroring the private strategies they
+//! generalize: a **unigram chain layer** (last token → ranked
+//! continuation chains, the fleet analog of
+//! [`super::SessionNgramCache`]) and a **bigram posting layer** (last two
+//! tokens → chains, the suffix-index-flavored higher-precision probe,
+//! tried first on lookup). Bigram keys set the top key bit so the two
+//! spaces can never collide.
+//!
+//! The store also keys **adaptive priors by prompt fingerprint**
+//! ([`fingerprint`]): per-(fingerprint, [`StrategyKind`]) win/accepted
+//! counters recorded at request completion, so a chat-shaped request's
+//! bandit seeds from chat history instead of fleet-wide traffic
+//! (`crate::adaptive::controller_for_fingerprint` builds `ArmPrior`s from
+//! these).
+//!
+//! CORRECTNESS: shared chains only change *which* candidate rows are
+//! proposed, never what the verifier accepts — every emitted token is
+//! still the base model's greedy continuation, so output streams are
+//! byte-identical with the store on or off (pinned by
+//! `rust/tests/shared_draft.rs` and the `bench pool` cross-engine gate).
+
+use std::cell::UnsafeCell;
+use std::collections::HashMap;
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::{count_share, DraftBatch, DraftStrategy, StrategyKind};
+use crate::tokenizer::TokenId;
+
+/// Tokens stored per continuation chain.
+pub const CHAIN_LEN: usize = 8;
+
+/// Ranked continuation chains kept per key (per entry).
+const CHAINS_PER_ENTRY: usize = 4;
+
+/// Linear-probe window: how many consecutive slots a key may land in.
+const PROBE: usize = 8;
+
+/// Seqlock slots per shard (fixed at construction; eviction replaces the
+/// coldest entry in a full probe window instead of growing).
+const SLOTS_PER_SHARD: usize = 2048;
+
+/// Accepted tokens the wrapper buffers before publishing one batched
+/// delta to the store (plus a final flush when the strategy is dropped).
+const FLUSH_THRESHOLD: usize = 24;
+
+/// Prompt tokens hashed into the task-class fingerprint. Task corpora
+/// share their leading format tokens ("Question:", "def ", chat role
+/// markers), so a short prefix hash separates task classes while mapping
+/// identical prompts to identical fingerprints deterministically.
+pub const FP_WINDOW: usize = 4;
+
+/// Distinct fingerprints the prior map retains (bounds memory; a fleet
+/// serves few task classes, so collisions with this cap are theoretical).
+const FP_CAP: usize = 1024;
+
+/// Task-class fingerprint of a prompt: FNV-1a over the first
+/// [`FP_WINDOW`] tokens. Deterministic, so identical prompts always land
+/// in the same prior bucket.
+pub fn fingerprint(prompt: &[TokenId]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in prompt.iter().take(FP_WINDOW) {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// One key's ranked continuation chains — the fixed-size `Copy` payload a
+/// seqlock slot protects. `key == 0` marks an empty slot; unigram keys
+/// are `token + 1` (never 0) and bigram keys set the top bit.
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    key: u64,
+    /// chain lengths (0 = free chain slot)
+    lens: [u8; CHAINS_PER_ENTRY],
+    /// observation counts (the within-entry ranking signal)
+    counts: [u32; CHAINS_PER_ENTRY],
+    chains: [[TokenId; CHAIN_LEN]; CHAINS_PER_ENTRY],
+}
+
+impl Entry {
+    const EMPTY: Entry = Entry {
+        key: 0,
+        lens: [0; CHAINS_PER_ENTRY],
+        counts: [0; CHAINS_PER_ENTRY],
+        chains: [[0; CHAIN_LEN]; CHAINS_PER_ENTRY],
+    };
+
+    /// Total observations across the entry's chains (the eviction
+    /// coldness signal).
+    fn total(&self) -> u32 {
+        self.counts.iter().sum()
+    }
+
+    /// Fold one observed continuation in: a prefix-compatible stored
+    /// chain is bumped (and extended to the longer spelling, like the
+    /// session cache); otherwise the chain takes a free slot or replaces
+    /// the coldest one.
+    fn ingest(&mut self, chain: &[TokenId]) {
+        let len = chain.len().min(CHAIN_LEN);
+        if len == 0 {
+            return;
+        }
+        let chain = &chain[..len];
+        for j in 0..CHAINS_PER_ENTRY {
+            let stored_len = self.lens[j] as usize;
+            if stored_len == 0 {
+                continue;
+            }
+            let n = stored_len.min(len);
+            if self.chains[j][..n] == chain[..n] {
+                if len > stored_len {
+                    self.chains[j][..len].copy_from_slice(chain);
+                    self.lens[j] = len as u8;
+                }
+                self.counts[j] = self.counts[j].saturating_add(1);
+                return;
+            }
+        }
+        let j = (0..CHAINS_PER_ENTRY)
+            .find(|&j| self.lens[j] == 0)
+            .unwrap_or_else(|| {
+                (0..CHAINS_PER_ENTRY).min_by_key(|&j| self.counts[j]).unwrap_or(0)
+            });
+        self.chains[j] = [0; CHAIN_LEN];
+        self.chains[j][..len].copy_from_slice(chain);
+        self.lens[j] = len as u8;
+        self.counts[j] = 1;
+    }
+}
+
+/// One seqlock slot: even version = published, odd = write in flight.
+struct Slot {
+    seq: AtomicU64,
+    data: UnsafeCell<Entry>,
+}
+
+/// One shard: a fixed slot table plus the writer-side mutex. Readers
+/// never take the mutex — the seqlock protocol makes torn copies
+/// detectable instead of preventable.
+struct Shard {
+    slots: Box<[Slot]>,
+    /// serializes WRITERS only (publish batches); the single-writer
+    /// precondition of each slot's seqlock
+    write: Mutex<()>,
+}
+
+// SAFETY: each slot's `data` is only mutated while the shard's `write`
+// mutex is held AND between the odd/even stores of that slot's `seq`;
+// readers access it exclusively through `read_volatile` and discard any
+// copy whose seq re-check fails, so a torn read is detected, never
+// interpreted. This is the `trace::StepRing` discipline applied per slot.
+unsafe impl Sync for Shard {}
+
+impl Shard {
+    fn new(slots: usize) -> Self {
+        Shard {
+            slots: (0..slots.max(PROBE))
+                .map(|_| Slot { seq: AtomicU64::new(0), data: UnsafeCell::new(Entry::EMPTY) })
+                .collect::<Vec<_>>()
+                .into_boxed_slice(),
+            write: Mutex::new(()),
+        }
+    }
+
+    /// Lock-free snapshot of slot `idx` into `out`. Returns false if the
+    /// writer kept tearing the copy (bounded retries; callers treat that
+    /// as "slot unknown" and keep probing).
+    fn read(&self, idx: usize, out: &mut Entry) -> bool {
+        let slot = &self.slots[idx];
+        for _attempt in 0..4 {
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 & 1 == 1 {
+                continue; // write in flight: retry
+            }
+            // SAFETY: volatile copy of Copy data; validity is established
+            // by the seq re-check below, a torn copy is discarded.
+            let e = unsafe { std::ptr::read_volatile(slot.data.get()) };
+            fence(Ordering::Acquire);
+            let s2 = slot.seq.load(Ordering::Relaxed);
+            if s1 == s2 {
+                *out = e;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Mutate slot `idx` under the seqlock protocol. The caller must hold
+    /// this shard's `write` mutex (single-writer precondition).
+    fn update(&self, idx: usize, f: impl FnOnce(&mut Entry)) {
+        let slot = &self.slots[idx];
+        let s = slot.seq.load(Ordering::Relaxed);
+        slot.seq.store(s + 1, Ordering::Relaxed); // odd: write in flight
+        fence(Ordering::Release);
+        // SAFETY: single writer (the shard mutex is held); readers detect
+        // this in-flight write via the odd seq and discard their copy.
+        unsafe { f(&mut *slot.data.get()) };
+        slot.seq.store(s + 2, Ordering::Release); // even: published
+    }
+}
+
+/// Per-(fingerprint, kind) acceptance record: (step wins, accepted draft
+/// tokens across winning steps) — the raw signal behind fingerprint-keyed
+/// `ArmPrior`s.
+pub type FpStats = [(u64, u64); StrategyKind::COUNT];
+
+/// The fleet-shared draft store. Cheap to share (`Arc`); see the module
+/// docs for the shard/seqlock layout.
+pub struct SharedDraftStore {
+    shards: Vec<Shard>,
+    /// propose-side consults that yielded at least one shared chain
+    hits: AtomicU64,
+    /// propose-side consults that found nothing for the current context
+    misses: AtomicU64,
+    /// batched deltas writers have published
+    publishes: AtomicU64,
+    /// prompt fingerprint → per-kind acceptance record (NOT on the
+    /// propose hot path: written once per completed request, read once
+    /// per adaptive admission)
+    priors: Mutex<HashMap<u64, FpStats>>,
+}
+
+impl std::fmt::Debug for SharedDraftStore {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SharedDraftStore")
+            .field("shards", &self.shards.len())
+            .field("hits", &self.hits())
+            .field("misses", &self.misses())
+            .field("publishes", &self.publishes())
+            .finish()
+    }
+}
+
+/// Splitmix-style key scrambler: the high half picks the shard, the low
+/// half the slot, so the two choices stay independent.
+fn mix(key: u64) -> u64 {
+    let mut h = key.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    h ^= h >> 32;
+    h.wrapping_mul(0xbf58_476d_1ce4_e5b9)
+}
+
+/// Unigram-layer key for `t` (offset by 1 so key 0 stays "empty").
+fn uni_key(t: TokenId) -> u64 {
+    t as u64 + 1
+}
+
+/// Bigram-posting-layer key for the context `(a, b)`: FNV-1a over both
+/// tokens with the top bit forced, so bigram keys never collide with
+/// unigram keys (whose realistic values never reach bit 63) and never
+/// equal 0.
+fn bi_key(a: TokenId, b: TokenId) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for t in [a, b] {
+        h ^= t as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h | (1 << 63)
+}
+
+impl SharedDraftStore {
+    /// A store with `shards` shards (floored at 1) of the default slot
+    /// capacity.
+    pub fn new(shards: usize) -> Self {
+        Self::with_capacity(shards, SLOTS_PER_SHARD)
+    }
+
+    /// [`Self::new`] with an explicit per-shard slot count (tests use
+    /// tiny tables to exercise eviction).
+    pub fn with_capacity(shards: usize, slots_per_shard: usize) -> Self {
+        SharedDraftStore {
+            shards: (0..shards.max(1)).map(|_| Shard::new(slots_per_shard)).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            publishes: AtomicU64::new(0),
+            priors: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Shard count (the `--shared-draft-shards` knob, echoed in docs).
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Propose-side consults that yielded at least one shared chain.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Propose-side consults that found nothing.
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Batched deltas published by writers.
+    pub fn publishes(&self) -> u64 {
+        self.publishes.load(Ordering::Relaxed)
+    }
+
+    fn shard_and_base(&self, key: u64) -> (&Shard, usize) {
+        let h = mix(key);
+        let shard = &self.shards[(h >> 32) as usize % self.shards.len()];
+        let base = h as usize % shard.slots.len();
+        (shard, base)
+    }
+
+    /// Lock-free, allocation-free lookup: copy `key`'s entry into `out`
+    /// if present. Probes at most [`PROBE`] slots; an empty slot ends the
+    /// probe (eviction replaces entries in place, never re-empties a
+    /// slot, so probe chains stay intact).
+    fn find(&self, key: u64, out: &mut Entry) -> bool {
+        let (shard, base) = self.shard_and_base(key);
+        let n = shard.slots.len();
+        for p in 0..PROBE {
+            let idx = (base + p) % n;
+            if shard.read(idx, out) {
+                if out.key == key {
+                    return true;
+                }
+                if out.key == 0 {
+                    return false;
+                }
+            }
+            // torn after retries: treat the slot as occupied-by-other and
+            // keep probing
+        }
+        false
+    }
+
+    /// Writer-side upsert of one observed continuation under `key`
+    /// (serialized per shard; readers stay lock-free throughout).
+    fn upsert(&self, key: u64, chain: &[TokenId]) {
+        if chain.is_empty() {
+            return;
+        }
+        let (shard, base) = self.shard_and_base(key);
+        let guard = shard.write.lock().unwrap();
+        let n = shard.slots.len();
+        let mut victim = base;
+        let mut victim_total = u32::MAX;
+        let mut target = None;
+        for p in 0..PROBE {
+            let idx = (base + p) % n;
+            // SAFETY: the shard write mutex is held, so no concurrent
+            // writer exists; concurrent readers only read, so a plain
+            // shared reference is sound here.
+            let e = unsafe { &*shard.slots[idx].data.get() };
+            if e.key == key || e.key == 0 {
+                target = Some(idx);
+                break;
+            }
+            let t = e.total();
+            if t < victim_total {
+                victim_total = t;
+                victim = idx;
+            }
+        }
+        // full window with no match: evict the coldest entry in place
+        let idx = target.unwrap_or(victim);
+        shard.update(idx, |e| {
+            if e.key != key {
+                *e = Entry::EMPTY;
+                e.key = key;
+            }
+            e.ingest(chain);
+        });
+        drop(guard);
+    }
+
+    /// Publish one batched delta of accepted text: every position's
+    /// following tokens feed the unigram layer, every adjacent pair's the
+    /// bigram posting layer. Called off the propose path (the wrapper
+    /// buffers [`FLUSH_THRESHOLD`] tokens per flush).
+    pub fn publish(&self, span: &[TokenId]) {
+        if span.len() < 2 {
+            return;
+        }
+        for i in 0..span.len() - 1 {
+            let end = span.len().min(i + 1 + CHAIN_LEN);
+            self.upsert(uni_key(span[i]), &span[i + 1..end]);
+            if i + 2 < span.len() {
+                let bend = span.len().min(i + 2 + CHAIN_LEN);
+                self.upsert(bi_key(span[i], span[i + 1]), &span[i + 2..bend]);
+            }
+        }
+        self.publishes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one judged verification step for `fp`'s task class (the
+    /// caller demotes no-acceptance steps to [`StrategyKind::Empty`],
+    /// matching the fleet-wide counters).
+    pub fn record_step(&self, fp: u64, kind: StrategyKind, accepted: usize) {
+        let mut map = self.priors.lock().unwrap();
+        if map.len() >= FP_CAP && !map.contains_key(&fp) {
+            return; // bounded: new classes past the cap are dropped
+        }
+        let stats = map.entry(fp).or_insert([(0, 0); StrategyKind::COUNT]);
+        let s = &mut stats[kind.index()];
+        s.0 += 1;
+        s.1 += accepted as u64;
+    }
+
+    /// The per-kind acceptance record for `fp`, if its task class has
+    /// history.
+    pub fn fingerprint_stats(&self, fp: u64) -> Option<FpStats> {
+        self.priors.lock().unwrap().get(&fp).copied()
+    }
+}
+
+/// Decorator that gives any private strategy a fleet memory: proposes the
+/// inner strategy's rows first, then fills remaining row budget from the
+/// shared store (bigram posting layer first, then unigram chains),
+/// deduplicated against rows already in the batch. Observed accepted
+/// tokens are forwarded to the inner strategy AND buffered into batched
+/// deltas for the store.
+pub struct SharedDraftStrategy {
+    inner: Box<dyn DraftStrategy>,
+    store: Arc<SharedDraftStore>,
+    /// per-engine hit-through sink (`ngrammys_engine_shared_draft_hits`):
+    /// counts shared rows this engine actually proposed
+    engine_hits: Option<Arc<AtomicU64>>,
+    /// accepted tokens awaiting publication
+    tail: Vec<TokenId>,
+}
+
+impl SharedDraftStrategy {
+    /// Wrap `inner` over `store`; `engine_hits` receives this engine's
+    /// proposed-shared-row count when attached.
+    pub fn new(
+        inner: Box<dyn DraftStrategy>,
+        store: Arc<SharedDraftStore>,
+        engine_hits: Option<Arc<AtomicU64>>,
+    ) -> Self {
+        SharedDraftStrategy { inner, store, engine_hits, tail: Vec::new() }
+    }
+
+    /// Publish everything buffered (keeping a [`CHAIN_LEN`]-token overlap
+    /// so chains spanning flush boundaries are still observed, like the
+    /// session cache's rolling tail).
+    fn flush(&mut self) {
+        if self.tail.len() < 2 {
+            return;
+        }
+        self.store.publish(&self.tail);
+        let keep = (CHAIN_LEN + 1).min(self.tail.len());
+        let cut = self.tail.len() - keep;
+        self.tail.drain(..cut);
+    }
+}
+
+impl Drop for SharedDraftStrategy {
+    /// A retiring sequence publishes its remaining buffered tokens, so
+    /// short requests still contribute deltas.
+    fn drop(&mut self) {
+        if self.tail.len() >= 2 {
+            self.store.publish(&self.tail);
+        }
+    }
+}
+
+impl DraftStrategy for SharedDraftStrategy {
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+
+    fn propose(&mut self, seq: &[TokenId], k: usize, batch: &mut DraftBatch) {
+        self.inner.propose(seq, k, batch);
+        if batch.w == 0 || batch.is_full(k) {
+            return; // greedy shape or no spare rows: nothing to add
+        }
+        let Some(&cur) = seq.last() else { return };
+        let prev = seq.len().checked_sub(2).map(|i| seq[i]);
+        let mut added = 0u64;
+        let mut entry = Entry::EMPTY;
+        // bigram posting layer first (higher precision), then unigram
+        let keys = [prev.map(|p| bi_key(p, cur)), Some(uni_key(cur))];
+        for key in keys.into_iter().flatten() {
+            if batch.is_full(k) {
+                break;
+            }
+            if !self.store.find(key, &mut entry) {
+                continue;
+            }
+            let total = entry.total();
+            // rank the (at most 4) chains by count, descending — a fixed
+            // index array, no allocation
+            let mut order = [0usize, 1, 2, 3];
+            order.sort_unstable_by_key(|&j| std::cmp::Reverse(entry.counts[j]));
+            for (rank, &j) in order.iter().enumerate() {
+                if batch.is_full(k) {
+                    break;
+                }
+                let len = (entry.lens[j] as usize).min(batch.w);
+                if len == 0 || entry.counts[j] == 0 {
+                    continue;
+                }
+                let chain = &entry.chains[j][..len];
+                // dedup: a row opening with the same token verifies the
+                // same first position — skip the redundant candidate
+                let dup = (0..batch.k())
+                    .any(|r| batch.row_tokens(r).first() == chain.first());
+                if dup {
+                    continue;
+                }
+                batch.push_conf(
+                    chain,
+                    StrategyKind::SharedFleet,
+                    rank,
+                    count_share(entry.counts[j], total),
+                );
+                added += 1;
+            }
+        }
+        if added > 0 {
+            self.store.hits.fetch_add(1, Ordering::Relaxed);
+            if let Some(h) = &self.engine_hits {
+                h.fetch_add(added, Ordering::Relaxed);
+            }
+        } else {
+            self.store.misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn observe(&mut self, accepted: &[TokenId], model_out: &[TokenId]) {
+        self.inner.observe(accepted, model_out);
+        self.tail.extend_from_slice(accepted);
+        if self.tail.len() >= FLUSH_THRESHOLD {
+            self.flush();
+        }
+    }
+
+    fn reset(&mut self) {
+        // publish what this sequence learned, then clear per-sequence
+        // state; the STORE persists — that is the point
+        self.flush();
+        self.tail.clear();
+        self.inner.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::NoDraft;
+
+    fn wrapped(store: &Arc<SharedDraftStore>) -> SharedDraftStrategy {
+        SharedDraftStrategy::new(Box::new(NoDraft), store.clone(), None)
+    }
+
+    #[test]
+    fn published_chains_are_proposed_with_shared_kind() {
+        let store = Arc::new(SharedDraftStore::new(2));
+        store.publish(&[5, 6, 7, 8, 9]);
+        let mut s = wrapped(&store);
+        let mut b = DraftBatch::new(4);
+        s.propose(&[1, 5], 4, &mut b);
+        assert!(b.k() >= 1, "store-backed rows expected");
+        assert_eq!(b.rows()[0].kind, StrategyKind::SharedFleet);
+        assert_eq!(&b.row_tokens(0)[..3], &[6, 7, 8]);
+        assert_eq!(store.hits(), 1);
+    }
+
+    #[test]
+    fn bigram_layer_outranks_unigram_on_two_token_context() {
+        let store = Arc::new(SharedDraftStore::new(1));
+        // unigram layer for 6 learns "...7 8"; the bigram (5, 6) context
+        // learns the more specific "...9 9"
+        store.publish(&[6, 7, 8, 6, 7, 8]);
+        store.publish(&[5, 6, 9, 9, 5, 6, 9, 9]);
+        let mut s = wrapped(&store);
+        let mut b = DraftBatch::new(4);
+        s.propose(&[5, 6], 8, &mut b);
+        assert!(b.k() >= 1);
+        assert_eq!(b.row_tokens(0)[0], 9, "bigram posting layer is consulted first");
+    }
+
+    #[test]
+    fn counts_rank_chains_and_misses_are_counted() {
+        let store = Arc::new(SharedDraftStore::new(1));
+        store.publish(&[5, 7]);
+        store.publish(&[5, 7]);
+        store.publish(&[5, 8]);
+        let mut s = wrapped(&store);
+        let mut b = DraftBatch::new(2);
+        s.propose(&[5], 8, &mut b);
+        assert_eq!(b.row_tokens(0)[0], 7, "seen-twice chain ranks first");
+        let mut b2 = DraftBatch::new(2);
+        s.propose(&[4242], 8, &mut b2);
+        assert_eq!(b2.k(), 0);
+        assert_eq!(store.misses(), 1);
+    }
+
+    #[test]
+    fn greedy_shape_and_full_batch_add_nothing() {
+        let store = Arc::new(SharedDraftStore::new(1));
+        store.publish(&[5, 7, 8, 9]);
+        let mut s = wrapped(&store);
+        let mut b = DraftBatch::new(0); // w = 0: greedy
+        s.propose(&[5], 4, &mut b);
+        assert_eq!(b.k(), 0);
+        let mut b = DraftBatch::new(4);
+        b.push(vec![7, 1], StrategyKind::ContextNgram, 0);
+        s.propose(&[5], 1, &mut b); // k already reached
+        assert_eq!(b.k(), 1);
+    }
+
+    #[test]
+    fn duplicate_first_tokens_are_deduped_against_inner_rows() {
+        let store = Arc::new(SharedDraftStore::new(1));
+        store.publish(&[5, 7, 8, 9, 5, 7, 8, 9]);
+        let mut s = wrapped(&store);
+        let mut b = DraftBatch::new(4);
+        b.push(vec![7, 0], StrategyKind::ContextNgram, 0); // inner row opens with 7
+        s.propose(&[5], 8, &mut b);
+        for r in 1..b.k() {
+            assert_ne!(b.row_tokens(r).first(), Some(&7), "row {r} duplicates the inner row");
+        }
+    }
+
+    #[test]
+    fn observe_buffers_and_drop_flushes_short_sequences() {
+        let store = Arc::new(SharedDraftStore::new(2));
+        {
+            let mut s = wrapped(&store);
+            s.observe(&[3, 4, 5], &[]);
+            assert_eq!(store.publishes(), 0, "below the flush threshold: buffered");
+        }
+        assert!(store.publishes() >= 1, "drop publishes the remaining tail");
+        let mut s2 = wrapped(&store);
+        let mut b = DraftBatch::new(2);
+        s2.propose(&[9, 3], 4, &mut b);
+        assert!(b.k() >= 1);
+        assert_eq!(b.row_tokens(0)[0], 4);
+    }
+
+    #[test]
+    fn reset_flushes_but_the_store_persists() {
+        let store = Arc::new(SharedDraftStore::new(1));
+        let mut s = wrapped(&store);
+        s.observe(&[1, 2, 3], &[]);
+        s.reset();
+        assert!(store.publishes() >= 1);
+        let mut b = DraftBatch::new(2);
+        s.propose(&[0, 1], 4, &mut b);
+        assert!(b.k() >= 1, "chains survive reset — fleet memory");
+    }
+
+    #[test]
+    fn eviction_keeps_tiny_tables_functional() {
+        let store = SharedDraftStore::with_capacity(1, PROBE); // one probe window total
+        for t in 0..200u32 {
+            store.publish(&[t, t + 1, t + 2]);
+        }
+        // re-heat one key with single-upsert publishes (a 2-token span
+        // touches only uni_key(500)), so nothing can evict it after
+        for _ in 0..5 {
+            store.publish(&[500, 501]);
+        }
+        let mut e = Entry::EMPTY;
+        assert!(store.find(uni_key(500), &mut e));
+        assert_eq!(e.chains[0][0], 501);
+    }
+
+    #[test]
+    fn fingerprint_separates_leading_tokens_and_is_deterministic() {
+        assert_eq!(fingerprint(&[1, 2, 3, 4, 99]), fingerprint(&[1, 2, 3, 4, 7]));
+        assert_ne!(fingerprint(&[1, 2, 3, 4]), fingerprint(&[2, 2, 3, 4]));
+        assert_eq!(fingerprint(&[]), fingerprint(&[]));
+    }
+
+    #[test]
+    fn fingerprint_stats_accumulate_per_kind() {
+        let store = SharedDraftStore::new(1);
+        let fp = fingerprint(&[10, 11, 12, 13]);
+        store.record_step(fp, StrategyKind::SessionCache, 4);
+        store.record_step(fp, StrategyKind::SessionCache, 2);
+        store.record_step(fp, StrategyKind::Empty, 0);
+        let stats = store.fingerprint_stats(fp).expect("recorded class");
+        assert_eq!(stats[StrategyKind::SessionCache.index()], (2, 6));
+        assert_eq!(stats[StrategyKind::Empty.index()], (1, 0));
+        assert!(store.fingerprint_stats(fp ^ 1).is_none());
+    }
+
+    /// The seqlock contract under real contention: a writer hammers
+    /// publishes whose chains are all-same-token by construction, so ANY
+    /// chain a concurrent reader extracts must be internally uniform — a
+    /// torn (half-old, half-new) chain would mix token values.
+    #[test]
+    fn concurrent_readers_never_see_torn_chains() {
+        let store = Arc::new(SharedDraftStore::with_capacity(1, PROBE));
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let writer = {
+            let store = store.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut v = 1u32;
+                while !stop.load(Ordering::Relaxed) {
+                    // span = key token 7 followed by an all-v tail: every
+                    // chain written under ANY key is all-equal tokens
+                    let span = [7, v, v, v, v, v, v, v, v, v];
+                    store.publish(&span);
+                    v = v % 97 + 1;
+                }
+            })
+        };
+        let mut checked = 0u64;
+        let mut e = Entry::EMPTY;
+        for i in 0..20_000u32 {
+            let key = if i % 2 == 0 { uni_key(7) } else { uni_key(i % 97 + 1) };
+            if !store.find(key, &mut e) {
+                continue;
+            }
+            for j in 0..CHAINS_PER_ENTRY {
+                let len = e.lens[j] as usize;
+                if len == 0 {
+                    continue;
+                }
+                let first = e.chains[j][0];
+                assert!(
+                    e.chains[j][..len].iter().all(|&t| t == first),
+                    "torn chain under key {key}: {:?}",
+                    &e.chains[j][..len]
+                );
+                checked += 1;
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        writer.join().unwrap();
+        assert!(checked > 0, "reader never observed a published entry");
+    }
+}

@@ -16,7 +16,7 @@ use anyhow::{anyhow, Result};
 use ngrammys::bench::{self, BenchCtx};
 use ngrammys::config::{
     default_artifacts_dir, Dispatch, EngineConfig, FrontEnd, Manifest, ServeConfig,
-    SessionCacheConfig,
+    SessionCacheConfig, SharedDraft,
 };
 use ngrammys::scheduler::{Scheduler, StrategyName};
 use ngrammys::server::Server;
@@ -93,6 +93,18 @@ COMMANDS:
       [--tree]                tree speculation in every batched engine
                               (trie-packed drafts, masked verification;
                               byte-identical output streams)
+      [--shared-draft off|fleet]
+                              'fleet' = all pool engines share one
+                              sharded, seqlock-snapshotted n-gram chain
+                              store: accepted tokens publish fleet-wide,
+                              propose paths fill spare rows from shared
+                              chains, and adaptive requests seed from
+                              prompt-fingerprint (task-class) priors.
+                              Output streams are byte-identical to 'off'
+      [--shared-draft-shards 8]
+                              shard count for the fleet store (writer
+                              serialization granularity; reads are
+                              lock-free at any count)
   bench <target>              reproduce a paper table/figure:
       fig1                    phase-transition heatmaps (cost model)
       fig2                    tokens/call vs top-k  [--model base]
@@ -109,8 +121,13 @@ COMMANDS:
       elastic                 elastic autoscaling vs every static --batch
                               [--model base] [--caps 2,4,8] [--smoke]
       pool                    1-engine vs N-engine pool throughput on a
-                              mixed greedy+speculative burst workload
-                              [--model base] [--engines 4] [--smoke]
+                              mixed greedy+speculative burst workload,
+                              plus a cross-engine shared-draft section
+                              (fails unless the fleet store strictly
+                              beats private caches on same-task traffic
+                              split across 2 engines, at byte-identical
+                              outputs) [--model base] [--engines 4]
+                              [--smoke]
       draft                   draft hot path: incremental suffix index
                               vs the seed rescan (fails unless the
                               incremental path keeps a >=2x edge at
@@ -336,6 +353,11 @@ fn serve(artifacts: &PathBuf, args: &Args) -> Result<()> {
         kv_page_size: args.get_usize("kv-page-size", 0).map_err(|e| anyhow!(e))?,
         kv_pages: args.get_usize("kv-pages", 0).map_err(|e| anyhow!(e))?,
         tree: args.has_flag("tree"),
+        shared_draft: SharedDraft::parse(
+            args.get_or("shared-draft", defaults.shared_draft.label()))?,
+        shared_draft_shards: args
+            .get_usize("shared-draft-shards", defaults.shared_draft_shards)
+            .map_err(|e| anyhow!(e))?,
     };
     let scheduler = Arc::new(Scheduler::start(&manifest, model, &cfg)?);
     let tokenizer = Arc::new(BpeTokenizer::load(&manifest.tokenizer_path)?);

@@ -166,6 +166,15 @@ pub struct Metrics {
     /// admissions that attached at least one shared prefix page instead
     /// of writing fresh KV for it
     pub kv_prefix_hits: AtomicU64,
+    /// draft rows filled from the fleet-shared draft store across all
+    /// engines (`--shared-draft fleet`; mirrored from the store each
+    /// gauge publish, 0 when the store is off)
+    pub shared_draft_hits: AtomicU64,
+    /// propose calls that consulted the shared store but found no chain
+    /// for their context
+    pub shared_draft_misses: AtomicU64,
+    /// batched accepted-token deltas writers published into the store
+    pub shared_draft_publishes: AtomicU64,
     /// per-`StrategyKind` step wins (indexed by `StrategyKind::index()`):
     /// which draft source actually won each verification call
     pub strategy_wins: [AtomicU64; StrategyKind::COUNT],
@@ -206,6 +215,9 @@ pub struct EngineGauges {
     pub kv_pages_shared: u64,
     /// admissions on this engine that reused shared prefix pages
     pub kv_prefix_hits: u64,
+    /// draft rows this engine filled from the fleet-shared draft store
+    /// (per-engine hit-through; 0 with `--shared-draft off`)
+    pub shared_draft_hits: u64,
 }
 
 /// Default-able newtype around [`LatencyHist`] so [`Metrics`] can derive
@@ -310,6 +322,10 @@ impl Metrics {
                 "ngrammys_engine_kv_prefix_hits{{engine=\"{e}\"}} {}\n",
                 g.kv_prefix_hits
             ));
+            s.push_str(&format!(
+                "ngrammys_engine_shared_draft_hits{{engine=\"{e}\"}} {}\n",
+                g.shared_draft_hits
+            ));
         }
         s.push_str(&format!("ngrammys_derived_budget {}\n", c(&self.derived_budget)));
         s.push_str(&format!("ngrammys_admission_reorders {}\n", c(&self.admission_reorders)));
@@ -318,6 +334,12 @@ impl Metrics {
         s.push_str(&format!("ngrammys_kv_pages_free {}\n", c(&self.kv_pages_free)));
         s.push_str(&format!("ngrammys_kv_pages_shared {}\n", c(&self.kv_pages_shared)));
         s.push_str(&format!("ngrammys_kv_prefix_hits {}\n", c(&self.kv_prefix_hits)));
+        s.push_str(&format!("ngrammys_shared_draft_hits {}\n", c(&self.shared_draft_hits)));
+        s.push_str(&format!("ngrammys_shared_draft_misses {}\n", c(&self.shared_draft_misses)));
+        s.push_str(&format!(
+            "ngrammys_shared_draft_publishes {}\n",
+            c(&self.shared_draft_publishes)
+        ));
         s.push_str(&format!(
             "ngrammys_request_latency_ms_mean {:.3}\n",
             self.request_latency.mean_us() / 1e3
@@ -489,7 +511,7 @@ mod tests {
     fn render_exports_every_documented_field() {
         let m = Metrics::new();
         let r = m.render();
-        const FIELDS: [&str; 27] = [
+        const FIELDS: [&str; 30] = [
             "ngrammys_requests_total",
             "ngrammys_requests_rejected",
             "ngrammys_requests_cancelled",
@@ -513,6 +535,9 @@ mod tests {
             "ngrammys_kv_pages_free",
             "ngrammys_kv_pages_shared",
             "ngrammys_kv_prefix_hits",
+            "ngrammys_shared_draft_hits",
+            "ngrammys_shared_draft_misses",
+            "ngrammys_shared_draft_publishes",
             "ngrammys_request_latency_ms_mean",
             "ngrammys_request_latency_ms_p50",
             "ngrammys_request_latency_ms_p99",
@@ -611,6 +636,7 @@ mod tests {
                 kv_pages_free: 2,
                 kv_pages_shared: 3,
                 kv_prefix_hits: 1,
+                shared_draft_hits: 9,
             },
             EngineGauges {
                 id: 3,
@@ -625,6 +651,7 @@ mod tests {
                 kv_pages_free: 0,
                 kv_pages_shared: 0,
                 kv_prefix_hits: 0,
+                shared_draft_hits: 0,
             },
         ]);
         let r = m.render();
@@ -644,6 +671,8 @@ mod tests {
         assert!(r.contains("ngrammys_engine_kv_pages_free{engine=\"0\"} 2\n"));
         assert!(r.contains("ngrammys_engine_kv_pages_shared{engine=\"0\"} 3\n"));
         assert!(r.contains("ngrammys_engine_kv_prefix_hits{engine=\"0\"} 1\n"));
+        assert!(r.contains("ngrammys_engine_shared_draft_hits{engine=\"0\"} 9\n"));
+        assert!(r.contains("ngrammys_engine_shared_draft_hits{engine=\"3\"} 0\n"));
         assert!(r.contains("ngrammys_engine_kv_bytes{engine=\"3\"} 8192\n"));
         assert!(r.contains("ngrammys_engine_kv_pages{engine=\"3\"} 0\n"));
         assert!(r.contains("ngrammys_engine_lanes{engine=\"3\"} 4\n"));

@@ -47,7 +47,7 @@ pub use admission::{request_score, strategy_prior_tpc, AdmissionQueue};
 pub use autoscale::{AutoscaleConfig, Autoscaler, Demand, EngineScaleConfig, EngineScaler};
 pub use steal::WorkQueues;
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -56,10 +56,13 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::adaptive::{self, SeqController};
-use crate::config::{Dispatch, EngineConfig, Manifest, ServeConfig, SessionCacheConfig};
+use crate::config::{
+    Dispatch, EngineConfig, Manifest, ServeConfig, SessionCacheConfig, SharedDraft,
+};
 use crate::draft::{
-    ContextNgram, DraftStrategy, ExtendedBigram, JacobiDraft, MixedStrategy, ModelBigram,
-    ModelUnigram, NgramTables, SessionNgramCache, StrategyKind,
+    fingerprint, ContextNgram, DraftStrategy, ExtendedBigram, JacobiDraft, MixedStrategy,
+    ModelBigram, ModelUnigram, NgramTables, SessionNgramCache, SharedDraftStore,
+    SharedDraftStrategy, StrategyKind,
 };
 use crate::engine::{GenResult, NoDraft, SpecDecoder};
 use crate::metrics::Metrics;
@@ -231,10 +234,12 @@ pub fn make_strategy_with_cache(
 }
 
 /// The adaptive controller for one request, when the request asked for
-/// adaptive mode — warm-started from the fleet's per-strategy acceptance
-/// counters so its bandit arms do not boot uniform (the serving half of
-/// the ROADMAP "cross-request bandit priors"; `strategy_prior_tpc` is the
-/// admission half).
+/// adaptive mode — warm-started from the most specific acceptance record
+/// available: the prompt's task-class priors in the fleet draft store
+/// (`--shared-draft fleet`, [`adaptive::fingerprint_arm_priors`]) when
+/// that class has history, else the fleet-wide per-strategy counters (the
+/// serving half of the ROADMAP "cross-request bandit priors";
+/// `strategy_prior_tpc` is the admission half).
 fn controller_for_request(
     name: StrategyName,
     tables: &Arc<NgramTables>,
@@ -242,16 +247,81 @@ fn controller_for_request(
     cfg: &ServeConfig,
     runtime: &ModelRuntime,
     metrics: &Metrics,
+    shared: Option<&SharedDraftStore>,
+    prompt: &[TokenId],
 ) -> Option<SeqController> {
     (name == StrategyName::Adaptive).then(|| {
-        adaptive::controller_for_seeded(
+        adaptive::controller_for_fingerprint(
             tables,
             q,
             &cfg.session_cache,
             &runtime.artifacts().dims.analog,
             metrics,
+            shared,
+            prompt,
         )
     })
+}
+
+/// The fleet draft store for this serving process, when
+/// `--shared-draft fleet` asked for one (shared by every engine in every
+/// dispatch mode; see [`crate::draft::shared`]).
+pub(crate) fn shared_store_for(cfg: &ServeConfig) -> Option<Arc<SharedDraftStore>> {
+    (cfg.shared_draft == SharedDraft::Fleet)
+        .then(|| Arc::new(SharedDraftStore::new(cfg.shared_draft_shards)))
+}
+
+/// Give `strategy` a fleet memory when a shared store is attached: reads
+/// fill spare draft rows from shared chains, accepted tokens publish
+/// batched deltas, and `engine_hits` (when present) receives the engine's
+/// proposed-shared-row count for the per-engine hit-through gauge. A
+/// `None` store returns the strategy unchanged — the private behavior.
+pub(crate) fn wrap_shared(
+    strategy: Box<dyn DraftStrategy>,
+    shared: Option<&Arc<SharedDraftStore>>,
+    engine_hits: Option<Arc<AtomicU64>>,
+) -> Box<dyn DraftStrategy> {
+    match shared {
+        Some(store) => Box::new(SharedDraftStrategy::new(strategy, store.clone(), engine_hits)),
+        None => strategy,
+    }
+}
+
+/// Record a finished request's per-step outcomes under its prompt
+/// fingerprint (task class), so later same-class requests seed their
+/// bandit from this history. Same no-winner demotion as the fleet-wide
+/// counters in [`finish_response`]. No-op without a store or without
+/// collected traces.
+pub(crate) fn record_fingerprint(
+    shared: Option<&SharedDraftStore>,
+    prompt: &[TokenId],
+    r: &crate::engine::GenResult,
+) {
+    record_fingerprint_fp(shared, fingerprint(prompt), r);
+}
+
+/// [`record_fingerprint`] with the fingerprint precomputed — the pool
+/// paths hash at admission and carry the `u64` through the in-flight map
+/// rather than keeping a prompt copy alive until retirement.
+pub(crate) fn record_fingerprint_fp(
+    shared: Option<&SharedDraftStore>,
+    fp: u64,
+    r: &crate::engine::GenResult,
+) {
+    let Some(store) = shared else { return };
+    for tr in &r.traces {
+        let kind = if tr.accepted > 0 { tr.kind } else { StrategyKind::Empty };
+        store.record_step(fp, kind, tr.accepted);
+    }
+}
+
+/// Copy the store's counters into the serving metrics gauges (the store
+/// is the source of truth; `/metrics` mirrors it so the draft layer needs
+/// no metrics dependency). Called from each mode's publish point.
+pub(crate) fn mirror_shared_metrics(metrics: &Metrics, store: &SharedDraftStore) {
+    metrics.shared_draft_hits.store(store.hits(), Ordering::Relaxed);
+    metrics.shared_draft_misses.store(store.misses(), Ordering::Relaxed);
+    metrics.shared_draft_publishes.store(store.publishes(), Ordering::Relaxed);
 }
 
 /// One generation request.
@@ -384,11 +454,12 @@ impl Scheduler {
         let tables = Arc::new(NgramTables::load(&art)?);
         let metrics = Arc::new(Metrics::new());
         let trace = Arc::new(TraceHub::with_metrics(DEFAULT_RING_CAPACITY, metrics.clone()));
+        let shared = shared_store_for(cfg);
 
         let mut workers = Vec::new();
         let path = if cfg.batch >= 2 && cfg.dispatch == Dispatch::Steal {
-            let (dispatch, mut handles) =
-                steal::start(art, tables, metrics.clone(), trace.clone(), cfg.clone());
+            let (dispatch, mut handles) = steal::start(
+                art, tables, metrics.clone(), trace.clone(), cfg.clone(), shared);
             workers.append(&mut handles);
             SubmitPath::Steal(dispatch)
         } else {
@@ -401,7 +472,7 @@ impl Scheduler {
                 let scfg = cfg.clone();
                 let handle = std::thread::Builder::new()
                     .name("ngrammys-engine-pool".to_string())
-                    .spawn(move || pool::run_pool(art, tables, metrics, trace, rx, scfg))
+                    .spawn(move || pool::run_pool(art, tables, metrics, trace, rx, scfg, shared))
                     .expect("spawning engine pool");
                 workers.push(handle);
             } else {
@@ -412,6 +483,7 @@ impl Scheduler {
                     let metrics = metrics.clone();
                     let trace = trace.clone();
                     let scfg = cfg.clone();
+                    let shared = shared.clone();
                     let handle = std::thread::Builder::new()
                         .name(format!("ngrammys-worker-{wid}"))
                         .spawn(move || {
@@ -422,7 +494,7 @@ impl Scheduler {
                                     return;
                                 }
                             };
-                            worker_loop(wid, runtime, tables, metrics, trace, rx, &scfg);
+                            worker_loop(wid, runtime, tables, metrics, trace, rx, &scfg, shared);
                         })
                         .expect("spawning worker");
                     workers.push(handle);
@@ -534,6 +606,7 @@ fn finish_response(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     wid: usize,
     runtime: ModelRuntime,
@@ -542,6 +615,7 @@ fn worker_loop(
     trace: Arc<TraceHub>,
     rx: Arc<Mutex<Receiver<Job>>>,
     scfg: &ServeConfig,
+    shared: Option<Arc<SharedDraftStore>>,
 ) {
     let recorder = trace.recorder_for_engine(wid as u64);
     loop {
@@ -557,16 +631,26 @@ fn worker_loop(
             continue;
         }
         let queue_wait = job.t_submit.elapsed();
-        let strategy = make_strategy_with_cache(
-            job.req.strategy, &tables, job.req.engine.q, &scfg.session_cache);
+        let strategy = wrap_shared(
+            make_strategy_with_cache(
+                job.req.strategy, &tables, job.req.engine.q, &scfg.session_cache),
+            shared.as_ref(),
+            None, // per-sequence workers have no per-engine gauge row
+        );
         let mut dec = SpecDecoder::new(&runtime, strategy, job.req.engine.clone());
         dec.controller = controller_for_request(
-            job.req.strategy, &tables, job.req.engine.q, scfg, &runtime, &metrics);
+            job.req.strategy, &tables, job.req.engine.q, scfg, &runtime, &metrics,
+            shared.as_deref(), &job.req.prompt);
         dec.collect_traces = true; // feeds the step-latency histogram
         dec.recorder = Some(recorder.clone());
-        let result = dec
-            .generate(&job.req.prompt)
-            .map(|r| finish_response(&metrics, &trace, job.t_submit, queue_wait, r));
+        let result = dec.generate(&job.req.prompt).map(|r| {
+            record_fingerprint(shared.as_deref(), &job.req.prompt, &r);
+            finish_response(&metrics, &trace, job.t_submit, queue_wait, r)
+        });
+        drop(dec); // the shared wrapper's Drop publishes its buffered tail
+        if let Some(store) = shared.as_deref() {
+            mirror_shared_metrics(&metrics, store);
+        }
         job.reply.send(result);
     }
 }

@@ -54,7 +54,7 @@ use anyhow::anyhow;
 
 use crate::config::{ModelArtifacts, ServeConfig};
 use crate::costmodel::CostModel;
-use crate::draft::NgramTables;
+use crate::draft::{fingerprint, NgramTables, SharedDraftStore};
 use crate::engine::{AutoBudget, BatchedEngine, SeqId};
 use crate::metrics::{EngineGauges, Metrics};
 use crate::runtime::ModelRuntime;
@@ -63,7 +63,8 @@ use crate::trace::TraceHub;
 use super::admission::{request_score, strategy_prior_tpc, AdmissionQueue};
 use super::autoscale::{Autoscaler, Demand, EngineScaler};
 use super::{
-    controller_for_request, finish_response, make_strategy_with_cache, DepthClass, Job, ReplySink,
+    controller_for_request, finish_response, make_strategy_with_cache, mirror_shared_metrics,
+    record_fingerprint_fp, wrap_shared, DepthClass, Job, ReplySink,
 };
 
 /// Dispatcher pacing: how long one routing iteration waits on the arrival
@@ -119,6 +120,10 @@ pub(crate) struct EngineStatus {
     pub(crate) kv_pages_shared: AtomicU64,
     /// admissions that attached shared prefix pages (paged mode)
     pub(crate) kv_prefix_hits: AtomicU64,
+    /// draft rows this engine filled from the fleet store
+    /// (`--shared-draft fleet`); `Arc` so the strategy wrapper living
+    /// inside the engine can bump it without holding the whole status
+    pub(crate) shared_hits: Arc<AtomicU64>,
     /// worker is retiring (or failed to boot): route nothing more to it
     pub(crate) draining: AtomicBool,
     /// the worker never served: its `ModelRuntime` failed to load
@@ -140,6 +145,7 @@ impl EngineStatus {
             kv_pages_free: AtomicU64::new(0),
             kv_pages_shared: AtomicU64::new(0),
             kv_prefix_hits: AtomicU64::new(0),
+            shared_hits: Arc::new(AtomicU64::new(0)),
             draining: AtomicBool::new(false),
             load_failed: AtomicBool::new(false),
         }
@@ -207,6 +213,7 @@ pub(super) fn run_pool(
     trace: Arc<TraceHub>,
     rx: Arc<Mutex<Receiver<Job>>>,
     scfg: ServeConfig,
+    shared: Option<Arc<SharedDraftStore>>,
 ) {
     let cm = CostModel::for_analog(&art.dims.analog);
     let lane_cap = scfg.batch.max(2);
@@ -219,7 +226,9 @@ pub(super) fn run_pool(
     let mut next_id = 0u64;
     let mut engines: Vec<EngineSlot> = Vec::new();
     for _ in 0..boot {
-        engines.push(spawn_engine(&mut next_id, &art, &tables, &metrics, &trace, &scfg, lane_cap));
+        engines.push(spawn_engine(
+            &mut next_id, &art, &tables, &metrics, &trace, &scfg, lane_cap, shared.clone(),
+        ));
     }
 
     let mut adq: AdmissionQueue<PoolJob> = AdmissionQueue::new();
@@ -243,6 +252,9 @@ pub(super) fn run_pool(
                 while live_count(&engines) > es_cfg.min_engines && retire_one(&mut engines) {}
             }
             publish(&metrics, &engines);
+            if let Some(store) = shared.as_deref() {
+                mirror_shared_metrics(&metrics, store);
+            }
             match rx.lock().unwrap().recv() {
                 Ok(job) => enqueue(&mut adq, job, &cm, &metrics, scfg.elastic),
                 Err(_) => open = false,
@@ -284,6 +296,7 @@ pub(super) fn run_pool(
                     &trace,
                     &scfg,
                     lane_cap,
+                    shared.clone(),
                 ));
             } else if target < live {
                 // only an IDLE engine retires; if none is idle the
@@ -304,6 +317,7 @@ pub(super) fn run_pool(
                     &trace,
                     &scfg,
                     lane_cap,
+                    shared.clone(),
                 ));
             }
         }
@@ -326,6 +340,9 @@ pub(super) fn run_pool(
 
         // ---- gauges
         publish(&metrics, &engines);
+        if let Some(store) = shared.as_deref() {
+            mirror_shared_metrics(&metrics, store);
+        }
     }
     // shutdown: close every channel, then join the workers
     for e in &mut engines {
@@ -334,6 +351,11 @@ pub(super) fn run_pool(
     publish(&metrics, &engines);
     for e in engines {
         let _ = e.handle.join();
+    }
+    // the workers' exit drops flushed their buffered tails: mirror the
+    // final store counters so post-shutdown scrapes see every publish
+    if let Some(store) = shared.as_deref() {
+        mirror_shared_metrics(&metrics, store);
     }
 }
 
@@ -535,6 +557,7 @@ pub(crate) fn publish_statuses<'a>(
                 kv_pages_free: st.kv_pages_free.load(Ordering::Relaxed),
                 kv_pages_shared: st.kv_pages_shared.load(Ordering::Relaxed),
                 kv_prefix_hits: st.kv_prefix_hits.load(Ordering::Relaxed),
+                shared_draft_hits: st.shared_hits.load(Ordering::Relaxed),
             };
             lanes += g.lanes;
             lanes_target += g.lanes_target;
@@ -556,6 +579,7 @@ pub(crate) fn publish_statuses<'a>(
 
 /// Spawn one engine worker thread (its `ModelRuntime` loads on the new
 /// thread, so the dispatcher never blocks on artifact IO).
+#[allow(clippy::too_many_arguments)]
 fn spawn_engine(
     next_id: &mut u64,
     art: &ModelArtifacts,
@@ -564,6 +588,7 @@ fn spawn_engine(
     trace: &Arc<TraceHub>,
     scfg: &ServeConfig,
     lane_cap: usize,
+    shared: Option<Arc<SharedDraftStore>>,
 ) -> EngineSlot {
     let id = *next_id;
     *next_id += 1;
@@ -598,7 +623,9 @@ fn spawn_engine(
                     return;
                 }
             };
-            engine_worker_loop(id, &runtime, &tables, &metrics, &trace, rx, &scfg, &st, lane_cap);
+            engine_worker_loop(
+                id, &runtime, &tables, &metrics, &trace, rx, &scfg, &st, lane_cap, shared,
+            );
         })
         .expect("spawning engine worker");
     EngineSlot { id, tx: Some(tx), status, handle }
@@ -654,6 +681,9 @@ pub(crate) struct Inflight {
     /// dwell between submit and lane admission (TTFT's queue component)
     pub(crate) queue_wait: Duration,
     pub(crate) class: DepthClass,
+    /// prompt fingerprint (task class) for the shared store's priors;
+    /// computed at admit so retirement needs no prompt copy
+    pub(crate) fp: u64,
 }
 
 /// Abort every in-flight sequence whose client has gone away: the lane
@@ -697,6 +727,7 @@ fn engine_worker_loop(
     scfg: &ServeConfig,
     status: &EngineStatus,
     lane_cap: usize,
+    shared: Option<Arc<SharedDraftStore>>,
 ) {
     let analog = runtime.artifacts().dims.analog.clone();
     let recorder = trace.recorder_for_engine(id);
@@ -731,7 +762,7 @@ fn engine_worker_loop(
             match rx.recv() {
                 Ok(pj) => {
                     admit_pool_job(&mut eng, pj, tables, metrics, &mut inflight, scfg, runtime,
-                                   status, lane_cap);
+                                   status, lane_cap, shared.as_ref());
                 }
                 Err(_) => open = false,
             }
@@ -753,7 +784,7 @@ fn engine_worker_loop(
             match rx.try_recv() {
                 Ok(pj) => {
                     admit_pool_job(&mut eng, pj, tables, metrics, &mut inflight, scfg, runtime,
-                                   status, lane_cap);
+                                   status, lane_cap, shared.as_ref());
                 }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
@@ -796,6 +827,7 @@ fn engine_worker_loop(
                     if let Some(inf) = inflight.remove(&sid) {
                         status.active.fetch_sub(1, Ordering::Relaxed);
                         status.class_counter(inf.class).fetch_sub(1, Ordering::Relaxed);
+                        record_fingerprint_fp(shared.as_deref(), inf.fp, &r);
                         let resp =
                             finish_response(metrics, trace, inf.t_submit, inf.queue_wait, r);
                         inf.reply.send(Ok(resp));
@@ -841,6 +873,7 @@ pub(crate) fn admit_pool_job(
     runtime: &ModelRuntime,
     status: &EngineStatus,
     lane_cap: usize,
+    shared: Option<&Arc<SharedDraftStore>>,
 ) {
     metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
     if pj.job.cancel.is_cancelled() {
@@ -858,14 +891,20 @@ pub(crate) fn admit_pool_job(
         let lanes = eng.set_capacity(eng.capacity() + 1);
         status.lanes.store(lanes, Ordering::Relaxed);
     }
-    let strategy = make_strategy_with_cache(
-        pj.job.req.strategy,
-        tables,
-        pj.job.req.engine.q,
-        &scfg.session_cache,
+    let strategy = wrap_shared(
+        make_strategy_with_cache(
+            pj.job.req.strategy,
+            tables,
+            pj.job.req.engine.q,
+            &scfg.session_cache,
+        ),
+        shared,
+        Some(status.shared_hits.clone()),
     );
     let controller = controller_for_request(
-        pj.job.req.strategy, tables, pj.job.req.engine.q, scfg, runtime, metrics);
+        pj.job.req.strategy, tables, pj.job.req.engine.q, scfg, runtime, metrics,
+        shared.map(|s| s.as_ref()), &pj.job.req.prompt);
+    let fp = fingerprint(&pj.job.req.prompt);
     // the queue dwell ends HERE, before admit: admit runs the prefill,
     // which the flight recorder attributes separately from queue wait, and
     // the total-latency clock keeps running from t_submit so both serving
@@ -886,6 +925,7 @@ pub(crate) fn admit_pool_job(
                 t_submit: pj.job.t_submit,
                 queue_wait,
                 class: pj.class,
+                fp,
             };
             inflight.insert(id, inf);
         }

@@ -62,7 +62,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::{ModelArtifacts, ServeConfig};
 use crate::costmodel::CostModel;
-use crate::draft::NgramTables;
+use crate::draft::{NgramTables, SharedDraftStore};
 use crate::engine::SeqId;
 use crate::metrics::Metrics;
 use crate::runtime::ModelRuntime;
@@ -74,7 +74,7 @@ use super::pool::{
     admit_pool_job, fresh_engine, publish_statuses, store_page_stats, sweep_cancelled,
     EngineStatus, Inflight, PoolJob, STARVATION_DEFERRALS,
 };
-use super::{finish_response, DepthClass, Job};
+use super::{finish_response, mirror_shared_metrics, record_fingerprint_fp, DepthClass, Job};
 
 /// Pause between gauge-publisher iterations, and the bound on how long a
 /// worker waits for a wakeup that raced its queue check. Correctness
@@ -274,6 +274,10 @@ pub(crate) struct StealDispatch {
     metrics: Arc<Metrics>,
     cm: CostModel,
     elastic: bool,
+    /// the fleet draft store (`--shared-draft fleet`), shared by every
+    /// worker's strategy wrapper and mirrored to `/metrics` by the
+    /// publisher
+    shared: Option<Arc<SharedDraftStore>>,
 }
 
 impl StealDispatch {
@@ -342,6 +346,7 @@ pub(crate) fn start(
     metrics: Arc<Metrics>,
     trace: Arc<TraceHub>,
     scfg: ServeConfig,
+    shared: Option<Arc<SharedDraftStore>>,
 ) -> (Arc<StealDispatch>, Vec<JoinHandle<()>>) {
     let fleet = scfg.engines.max(1);
     let lane_cap = scfg.batch.max(2);
@@ -355,6 +360,7 @@ pub(crate) fn start(
         metrics: metrics.clone(),
         cm,
         elastic: scfg.elastic,
+        shared,
     });
     let mut handles = Vec::new();
     for i in 0..fleet {
@@ -406,6 +412,9 @@ fn publisher(d: &StealDispatch, fleet: usize) {
         d.metrics.engines_target.store(fleet as u64, Ordering::Relaxed);
         d.metrics.admission_reorders.store(d.queues.reorders(), Ordering::Relaxed);
         publish_statuses(&d.metrics, live, d.statuses.iter().map(|(id, st)| (*id, st.as_ref())));
+        if let Some(store) = d.shared.as_deref() {
+            mirror_shared_metrics(&d.metrics, store);
+        }
         if d.statuses.iter().all(|(_, st)| st.load_failed.load(Ordering::Relaxed)) {
             for pj in d.queues.drain_all() {
                 d.metrics.queue_depth.fetch_sub(1, Ordering::Relaxed);
@@ -426,6 +435,11 @@ fn publisher(d: &StealDispatch, fleet: usize) {
                 live,
                 d.statuses.iter().map(|(id, st)| (*id, st.as_ref())),
             );
+            // the workers have exited (their engine drops flushed any
+            // buffered tails): mirror the final store counters
+            if let Some(store) = d.shared.as_deref() {
+                mirror_shared_metrics(&d.metrics, store);
+            }
             return;
         }
         std::thread::sleep(STEAL_TICK);
@@ -506,6 +520,7 @@ fn steal_worker_loop(
             status.class_counter(pj.class).fetch_add(1, Ordering::Relaxed);
             admit_pool_job(
                 &mut eng, pj, tables, metrics, &mut inflight, scfg, runtime, status, lane_cap,
+                d.shared.as_ref(),
             );
         }
         // reclaim lanes whose client disconnected before stepping
@@ -561,6 +576,7 @@ fn steal_worker_loop(
                     if let Some(inf) = inflight.remove(&sid) {
                         status.active.fetch_sub(1, Ordering::Relaxed);
                         status.class_counter(inf.class).fetch_sub(1, Ordering::Relaxed);
+                        record_fingerprint_fp(d.shared.as_deref(), inf.fp, &r);
                         let resp =
                             finish_response(metrics, trace, inf.t_submit, inf.queue_wait, r);
                         inf.reply.send(Ok(resp));

@@ -1,0 +1,131 @@
+//! Fleet-shared draft store invariants (`--shared-draft fleet`): sharing
+//! accepted-token chains across engines and requests may only change
+//! WHICH candidates are proposed, never the accepted greedy stream.
+//! Byte-identity between `off` and `fleet` modes is pinned at
+//! concurrency 1/4/8 over two waves of the same mixed traffic (wave 1
+//! seeds the store, wave 2 harvests it — the regime the store exists
+//! for), every stream is checked against per-sequence greedy decoding,
+//! and the store counters must show real publishes and — on the
+//! sequential path, where ordering is deterministic — real hits.
+
+use std::sync::atomic::Ordering;
+
+use ngrammys::bench::BenchCtx;
+use ngrammys::config::{EngineConfig, ServeConfig, SharedDraft};
+use ngrammys::engine::{greedy_config, NoDraft, SpecDecoder};
+use ngrammys::scheduler::{GenRequest, Scheduler, StrategyName};
+
+fn ctx(model: &str) -> BenchCtx {
+    BenchCtx::load(ngrammys::testkit::manifest(), model).unwrap()
+}
+
+fn greedy_stream(c: &BenchCtx, prompt: &[u32], max_new: usize) -> Vec<u32> {
+    let mut dec = SpecDecoder::new(&c.runtime, Box::new(NoDraft), greedy_config(max_new));
+    dec.generate(prompt).unwrap().tokens
+}
+
+const TEXTS: [&str; 6] = [
+    "Question: Tom has 4 apples. Tom buys 2 more.",
+    "def scale(x, y):\n    result",
+    "User: What is the capital of France?",
+    "Question: Tom has 4 apples. Tom buys 2 more.",
+    "def blend(value, count):",
+    "User: Tell me about ancient rivers.",
+];
+
+/// Mixed traffic that exercises every shared-store path: session-cache
+/// requests (the wrapped-strategy row-injection path), adaptive requests
+/// (the fingerprint-prior seeding path) and greedy w = 0 requests (which
+/// must stay untouched padding-wise).
+fn req(c: &BenchCtx, text: &str, i: usize, max_new: usize) -> GenRequest {
+    let strategy = match i % 3 {
+        0 => StrategyName::Session,
+        1 => StrategyName::Adaptive,
+        _ => StrategyName::None,
+    };
+    let greedy = strategy == StrategyName::None;
+    GenRequest {
+        prompt: c.tokenizer.encode(text),
+        engine: EngineConfig {
+            k: if greedy { 1 } else { 10 },
+            w: if greedy { 0 } else { 10 },
+            q: 1,
+            max_new_tokens: max_new,
+        },
+        strategy,
+    }
+}
+
+/// Serve TWO waves of the same requests and return every stream in submit
+/// order plus the final (hits, publishes) counters after shutdown — the
+/// post-join mirror must account every Drop-flushed tail.
+fn serve_waves(c: &BenchCtx, cfg: &ServeConfig, max_new: usize) -> (Vec<Vec<u32>>, u64, u64) {
+    let sched = Scheduler::start(&ngrammys::testkit::manifest(), "small", cfg).unwrap();
+    let mut streams = Vec::new();
+    for _wave in 0..2 {
+        let rxs: Vec<_> = TEXTS
+            .iter()
+            .enumerate()
+            .map(|(i, t)| sched.submit(req(c, t, i, max_new)).unwrap())
+            .collect();
+        for rx in rxs {
+            streams.push(rx.recv().unwrap().unwrap().tokens);
+        }
+    }
+    let metrics = sched.metrics.clone();
+    sched.shutdown();
+    (
+        streams,
+        metrics.shared_draft_hits.load(Ordering::Relaxed),
+        metrics.shared_draft_publishes.load(Ordering::Relaxed),
+    )
+}
+
+/// The differential pin: `--shared-draft off` vs `fleet` at concurrency
+/// 1 (per-sequence workers), 4 and 8 (work-stealing multi-engine pool)
+/// produce byte-identical streams, all equal to per-sequence greedy
+/// decoding.
+#[test]
+fn fleet_sharing_is_byte_identical_across_concurrency() {
+    let c = ctx("small");
+    let max_new = 12;
+    let want: Vec<Vec<u32>> = TEXTS
+        .iter()
+        .enumerate()
+        .map(|(i, t)| greedy_stream(&c, &req(&c, t, i, max_new).prompt, max_new))
+        .collect();
+
+    for conc in [1usize, 4, 8] {
+        let mk = |mode: SharedDraft| ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            queue_cap: 64,
+            batch: conc,
+            engines: 2,
+            shared_draft: mode,
+            ..ServeConfig::default()
+        };
+        let (off, _, off_pub) = serve_waves(&c, &mk(SharedDraft::Off), max_new);
+        let (fleet, fleet_hits, fleet_pub) = serve_waves(&c, &mk(SharedDraft::Fleet), max_new);
+        assert_eq!(
+            off, fleet,
+            "concurrency {conc}: fleet sharing changed an output stream"
+        );
+        for (i, got) in fleet.iter().enumerate() {
+            assert_eq!(
+                got,
+                &want[i % TEXTS.len()],
+                "concurrency {conc} stream {i} diverged from per-sequence greedy"
+            );
+        }
+        assert_eq!(off_pub, 0, "concurrency {conc}: off mode must never touch a store");
+        assert!(
+            fleet_pub > 0,
+            "concurrency {conc}: fleet mode published no accepted-token deltas"
+        );
+        if conc == 1 {
+            // sequential workers publish each request's tail before the
+            // next request proposes, so wave 2 must hit wave 1's chains
+            assert!(fleet_hits > 0, "sequential fleet run never hit the store");
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Multi-thread stress for the work-stealing dispatch queues
+//! (`scheduler::steal::WorkQueues`): submit/steal/retire churn across
+//! racing producers and consumers must lose no job and execute none
+//! twice, and every queue must keep the documented scored admission
+//! policy — best score first, ties FIFO by arrival, with the
+//! anti-starvation override for the oldest waiter.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use ngrammys::scheduler::steal::PushError;
+use ngrammys::scheduler::WorkQueues;
+
+const QUEUES: usize = 4;
+const PRODUCERS: usize = 4;
+const PER_PRODUCER: usize = 400;
+const TOTAL: usize = PRODUCERS * PER_PRODUCER;
+
+/// Full-churn run: 4 producers spin-push 1600 unique jobs through a
+/// 64-entry shared cap (so backpressure fires constantly) while 4
+/// consumers race own-queue pops against cross-queue steals. Every job
+/// must come out exactly once, and a closed structure must hand new
+/// work back untouched.
+#[test]
+fn churn_loses_and_duplicates_no_job() {
+    let q = Arc::new(WorkQueues::<u64>::new(QUEUES, 64));
+    let done = Arc::new(AtomicUsize::new(0));
+
+    let mut producers = Vec::new();
+    for p in 0..PRODUCERS {
+        let q = q.clone();
+        producers.push(thread::spawn(move || {
+            for n in 0..PER_PRODUCER {
+                let id = (p * PER_PRODUCER + n) as u64;
+                let mut item = id;
+                loop {
+                    // cap rejections hand the item back: retry until a
+                    // consumer frees shared capacity
+                    match q.push((id as usize) % QUEUES, item, (id % 5) as f64) {
+                        Ok(()) => break,
+                        Err(PushError::Full(back)) => {
+                            item = back;
+                            thread::yield_now();
+                        }
+                        Err(PushError::Closed(_)) => panic!("queues closed mid-run"),
+                    }
+                }
+            }
+        }));
+    }
+
+    let mut consumers = Vec::new();
+    for w in 0..QUEUES {
+        let q = q.clone();
+        let done = done.clone();
+        consumers.push(thread::spawn(move || {
+            let mut seen = Vec::new();
+            while done.load(Ordering::SeqCst) < TOTAL {
+                let got = q
+                    .pop_where(w, |_| true)
+                    .map(|(id, _, _)| id)
+                    .or_else(|| q.steal_where(w, |_| true).map(|(_, id, _, _)| id));
+                match got {
+                    Some(id) => {
+                        seen.push(id);
+                        done.fetch_add(1, Ordering::SeqCst);
+                    }
+                    None => q.wait_for_work(Duration::from_millis(1)),
+                }
+            }
+            seen
+        }));
+    }
+
+    for h in producers {
+        h.join().unwrap();
+    }
+    let mut all = Vec::new();
+    for h in consumers {
+        all.extend(h.join().unwrap());
+    }
+
+    assert_eq!(all.len(), TOTAL, "a job was lost or double-executed");
+    let unique: HashSet<u64> = all.iter().copied().collect();
+    assert_eq!(unique.len(), TOTAL, "a job was executed twice");
+    assert!(unique.iter().all(|&id| (id as usize) < TOTAL));
+    assert!(q.is_empty(), "entries left behind after full drain");
+
+    // retire: a closed structure rejects new work (item handed back) and
+    // has nothing left to drain
+    q.close();
+    match q.push(0, 7, 1.0) {
+        Err(PushError::Closed(7)) => {}
+        other => panic!("push after close returned {other:?}"),
+    }
+    assert!(q.drain_all().is_empty());
+}
+
+/// Scored-ordering pin: after racing producers finish, one drainer per
+/// queue pops ONLY its own queue, so its log order IS that queue's pop
+/// order. Replaying the log against the documented policy, every pop
+/// must take either the best-scored remaining entry (ties FIFO by
+/// arrival stamp) or — under the anti-starvation bound — the oldest
+/// remaining entry.
+#[test]
+fn own_queue_drain_follows_scored_policy_per_queue() {
+    const Q: usize = 3;
+    const PER_QUEUE: usize = 64;
+    let q = Arc::new(WorkQueues::<u64>::new(Q, Q * PER_QUEUE));
+
+    // one producer per queue: producers race each other, but each
+    // queue's arrival order stays deterministic
+    let mut producers = Vec::new();
+    for i in 0..Q {
+        let q = q.clone();
+        producers.push(thread::spawn(move || {
+            for n in 0..PER_QUEUE {
+                let id = (i * PER_QUEUE + n) as u64;
+                q.push(i, id, (id % 5) as f64).unwrap();
+            }
+        }));
+    }
+    for h in producers {
+        h.join().unwrap();
+    }
+
+    let mut drainers = Vec::new();
+    for i in 0..Q {
+        let q = q.clone();
+        drainers.push(thread::spawn(move || {
+            let mut log = Vec::new();
+            while let Some(hit) = q.pop_where(i, |_| true) {
+                log.push(hit);
+            }
+            log
+        }));
+    }
+    for (i, h) in drainers.into_iter().enumerate() {
+        let log: Vec<(u64, f64, u64)> = h.join().unwrap();
+        assert_eq!(log.len(), PER_QUEUE, "queue {i} lost an entry");
+        let mut remaining = log.clone();
+        remaining.sort_by_key(|e| e.2); // by arrival stamp: [0] is oldest
+        for (_, score, seq) in &log {
+            let best = remaining
+                .iter()
+                .cloned()
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(b.2.cmp(&a.2)))
+                .unwrap();
+            let oldest = remaining[0];
+            assert!(
+                *seq == best.2 || *seq == oldest.2,
+                "queue {i}: popped seq {seq} (score {score}) is neither the best \
+                 remaining (seq {}) nor the starving oldest (seq {})",
+                best.2,
+                oldest.2
+            );
+            let at = remaining.iter().position(|e| e.2 == *seq).unwrap();
+            remaining.remove(at);
+        }
+    }
+    // cycling scores force younger high-score entries past older ones,
+    // so the reorder accounting must have registered some
+    assert!(q.reorders() > 0, "mixed scores produced no reorders");
+}
+
+/// The shared cap is global across queues: a push bounced with `Full`
+/// gets its item back, and a pop on ANY queue frees capacity.
+#[test]
+fn shared_cap_backpressure_hands_items_back() {
+    let q = WorkQueues::<u64>::new(2, 2);
+    q.push(0, 1, 0.0).unwrap();
+    q.push(1, 2, 0.0).unwrap();
+    match q.push(0, 3, 0.0) {
+        Err(PushError::Full(3)) => {}
+        other => panic!("expected Full(3), got {other:?}"),
+    }
+    assert_eq!(q.pop_where(1, |_| true).map(|(id, _, _)| id), Some(2));
+    q.push(0, 3, 0.0).unwrap();
+    assert_eq!(q.len(), 2);
+}
